@@ -1,0 +1,109 @@
+//! seqio deterministic-pipeline demo (E2, E5-E8): Figure 2 + the four §3.2
+//! properties, demonstrated live with the actual artifacts on disk.
+//!
+//! ```bash
+//! cargo run --release --example data_pipeline
+//! ```
+
+use t5x::seqio::cache::{cache_task, CacheConfig};
+use t5x::seqio::deterministic::DeterministicPipeline;
+use t5x::seqio::feature_converters::{
+    lengths, EncDecConverter, FeatureConverter, LmConverter,
+};
+use t5x::trainer::recipes;
+use t5x::util::stats::lag1_autocorrelation;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join("t5x_data_pipeline_demo");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // ---- Figure 2: Task = source -> preprocessors -> features ----------
+    println!("== Figure 2: the Task pipeline ==");
+    let task = recipes::span_corruption_task("demo_span", 300, 96, 7);
+    let sample = task.dataset(1, 0, 1).take(1).collect_vec().remove(0);
+    println!(
+        "task features: inputs[{}] targets[{}] (span corruption, sentinels at vocab top)",
+        sample["inputs"].len(),
+        sample["targets"].len()
+    );
+    // one task, two architectures (feature converters)
+    let tl = lengths(&[("inputs", 96), ("targets", 48)]);
+    let ed = EncDecConverter.convert_example(&sample, &tl);
+    let lm = LmConverter.convert_example(&sample, &tl);
+    println!(
+        "enc-dec features: {:?}",
+        ed.keys().collect::<Vec<_>>()
+    );
+    println!("decoder-only features: {:?}", lm.keys().collect::<Vec<_>>());
+
+    // ---- §3.2: the deterministic cache ---------------------------------
+    println!("\n== §3.2 deterministic pipeline ==");
+    let t0 = std::time::Instant::now();
+    let meta = cache_task(&task, &dir, &CacheConfig { num_shards: 8, seed: 0, workers: 4 })?;
+    println!(
+        "cache job: {} examples -> {} index-modulo shards in {:.2}s",
+        meta.num_examples,
+        meta.num_shards,
+        t0.elapsed().as_secs_f64()
+    );
+    let p = DeterministicPipeline::open(&dir)?;
+
+    // E5 reproducibility
+    let a: Vec<i32> = first_indices(&p, 0, 1, 0, 10);
+    let b: Vec<i32> = first_indices(&p, 0, 1, 0, 10);
+    println!("reproducibility: two reads of the stream head agree: {}", a == b);
+    assert_eq!(a, b);
+
+    // E6 recoverability
+    let full = first_indices(&p, 0, 2, 0, 20);
+    let resumed = first_indices(&p, 0, 2, 7, 13);
+    println!(
+        "recoverability: resume@7 == continuous[7..]: {}",
+        resumed.as_slice() == &full[7..]
+    );
+    assert_eq!(resumed.as_slice(), &full[7..]);
+
+    // E7 sharding
+    println!("sharding: 4 hosts read exclusive file sets:");
+    for h in 0..4 {
+        println!("  host {h}: files {:?}", p.host_files(h, 4));
+    }
+
+    // E8 global shuffle
+    let doc_ids: Vec<f64> = p
+        .global_stream()
+        .collect_vec()
+        .iter()
+        .map(|e| e["doc_id"].as_ints().unwrap()[0] as f64)
+        .collect();
+    let raw_ids: Vec<f64> = task
+        .dataset(0, 0, 1)
+        .collect_vec()
+        .iter()
+        .map(|e| e["doc_id"].as_ints().unwrap()[0] as f64)
+        .collect();
+    println!(
+        "global shuffle: doc-id lag-1 autocorrelation {:.3} (raw) -> {:.3} (cached)",
+        lag1_autocorrelation(&raw_ids),
+        lag1_autocorrelation(&doc_ids)
+    );
+
+    println!("\ndata_pipeline demo OK");
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+fn first_indices(
+    p: &DeterministicPipeline,
+    host: usize,
+    hosts: usize,
+    start: usize,
+    n: usize,
+) -> Vec<i32> {
+    p.host_stream(host, hosts, start, false)
+        .take(n)
+        .collect_vec()
+        .iter()
+        .map(|e| e["_index"].as_ints().unwrap()[0])
+        .collect()
+}

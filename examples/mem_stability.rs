@@ -1,0 +1,55 @@
+//! Memory-stability diagnostic: RSS must stay flat across hundreds of
+//! train-step executions. This guards against the input-buffer leak we
+//! found (and fixed) in the PJRT execute path — see
+//! rust/src/runtime/service.rs and EXPERIMENTS.md §Perf.
+//!
+//! ```bash
+//! cargo run --release --example mem_stability
+//! ```
+
+fn rss_kb() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .unwrap()
+        .lines()
+        .find(|l| l.starts_with("VmRSS"))
+        .unwrap()
+        .split_whitespace()
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let arts = t5x::runtime::Artifacts::load_default()?;
+    let m = arts.model("t5-nano-dec")?;
+    let dev = t5x::runtime::DeviceHandle::spawn()?;
+    let (exe, _) = dev.compile(&m.entrypoint("train_step")?.hlo)?;
+    let params = t5x::model::pattern_params(m, 0);
+    let mut inputs = t5x::model::params_in_order(m, &params);
+    inputs.extend(t5x::model::golden::golden_batch(m));
+
+    // warmup: allocator pools fill on the first batch of runs
+    for _ in 0..100 {
+        std::hint::black_box(exe.run(inputs.clone())?);
+    }
+    let baseline = rss_kb();
+    println!("baseline after warmup: {baseline} kB");
+    for round in 0..5 {
+        for _ in 0..100 {
+            std::hint::black_box(exe.run(inputs.clone())?);
+        }
+        let now = rss_kb();
+        println!("after {} more runs: {now} kB (delta {})", (round + 1) * 100,
+            now as i64 - baseline as i64);
+    }
+    let final_rss = rss_kb();
+    assert!(
+        final_rss < baseline + 20_000,
+        "memory grew {} kB over 500 steps — leak regression!",
+        final_rss - baseline
+    );
+    println!("mem_stability OK");
+    dev.shutdown();
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Pretraining driver (E14, the headline end-to-end run).
+//!
+//! ```bash
+//! # loss-curve run (~4M-param model, few hundred steps):
+//! cargo run --release --example pretrain -- --model t5-micro-dec --steps 300 \
+//!     --hosts 2 --strategy 2d --log train_log.jsonl
+//! # 100M-param smoke (memory + step time through the full path):
+//! cargo run --release --example pretrain -- --model t5-100m-dec --steps 3 --docs 64
+//! ```
+//! Full pipeline: synthetic corpus -> seqio deterministic cache -> sharded
+//! infeed -> data-parallel trainer (1D or ZeRO-3) -> checkpoints -> eval.
+//! Results are recorded in EXPERIMENTS.md §E14.
+
+use t5x::optim::{OptimizerKind, Schedule};
+use t5x::partitioning::ParamStrategy;
+use t5x::runtime::{Artifacts, DeviceHandle};
+use t5x::trainer::recipes;
+use t5x::trainer::{BatchSource, Trainer, TrainerConfig};
+use t5x::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "t5-micro-dec");
+    let steps = args.get_usize("steps", 300)? as u64;
+    let hosts = args.get_usize("hosts", 2)?;
+    let docs = args.get_usize("docs", 2000)?;
+    let strategy = match args.get_or("strategy", "2d").as_str() {
+        "1d" => ParamStrategy::OneD,
+        _ => ParamStrategy::TwoD,
+    };
+    let log_path = args.get_or("log", "train_log.jsonl");
+
+    let arts = Artifacts::load_default()?;
+    let device = DeviceHandle::spawn()?;
+    let m = arts.model(&model)?;
+    println!(
+        "== pretrain {model}: {:.1}M params, {} hosts, {:?}, {} steps ==",
+        m.total_params() as f64 / 1e6,
+        hosts,
+        strategy,
+        steps
+    );
+
+    // seqio deterministic cache (shards must be divisible by hosts)
+    let cache_dir = std::env::temp_dir().join(format!("t5x_pretrain_{model}_{docs}"));
+    let task = recipes::lm_task("pretrain_lm", docs, m.seq_len(), 42);
+    let t_cache = std::time::Instant::now();
+    let meta = recipes::ensure_cached(&task, &cache_dir, 8 * hosts.max(1), 0)?;
+    println!(
+        "cache: {} examples, {} shards ({:.1}s)",
+        meta.num_examples,
+        meta.num_shards,
+        t_cache.elapsed().as_secs_f64()
+    );
+
+    let ckpt_dir = std::env::temp_dir().join(format!("t5x_pretrain_ckpt_{model}"));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let cfg = TrainerConfig {
+        model: model.clone(),
+        num_hosts: hosts,
+        strategy,
+        optimizer: OptimizerKind::adam(),
+        schedule: Schedule::RsqrtWithWarmup { peak: 2e-3, warmup: 40 },
+        steps,
+        seed: 0,
+        log_every: 10,
+        checkpoint_every: Some(steps.max(2) / 2),
+        checkpoint_dir: Some(ckpt_dir.clone()),
+        grad_clip_norm: None,
+        weight_decay: None,
+    };
+    let trainer = Trainer::new(&arts, &device, cfg)?.with_logger(
+        t5x::metrics::MetricsLogger::new()
+            .with_terminal()
+            .with_jsonl(&log_path),
+    );
+    let infeed = recipes::cached_infeed(m, &cache_dir, hosts, 0);
+    let summary = trainer.train(&BatchSource::Infeed(infeed))?;
+
+    let tokens_per_step = m.tokens_per_step() * hosts;
+    let tps = tokens_per_step as f64 * summary.history.len() as f64 / summary.wall_seconds;
+    println!("\n== summary ==");
+    println!("loss: {:.4} -> {:.4}", summary.first_loss(), summary.final_loss());
+    println!(
+        "wall: {:.1}s  ({:.0} tokens/s global, {:.3}s/step median-ish)",
+        summary.wall_seconds,
+        tps,
+        summary.wall_seconds / summary.history.len().max(1) as f64
+    );
+    println!("comm: {:.1} MiB total", summary.comm_bytes as f64 / (1 << 20) as f64);
+    println!("checkpoints at {:?}: {:?}", ckpt_dir,
+        t5x::checkpoint::CheckpointManager::new(&ckpt_dir).steps());
+
+    // held-out eval
+    let eval_task = recipes::lm_task("pretrain_eval", 100, m.seq_len(), 777);
+    let runner = t5x::trainer::eval::EvalRunner::new(&arts, &device, &model)?;
+    let metrics = runner.evaluate(
+        &trainer.params(),
+        recipes::eval_batches(m, &eval_task, 3, 4).into_iter(),
+    )?;
+    println!(
+        "heldout eval: loss {:.4}, token accuracy {:.2}%",
+        metrics.loss,
+        metrics.accuracy * 100.0
+    );
+    println!("train log: {log_path}");
+    device.shutdown();
+    Ok(())
+}

@@ -1,0 +1,265 @@
+"""AOT exporter: lower the L2/L1 computations to HLO text + manifest.json.
+
+This is the only place Python touches the artifact directory; the Rust L3
+binary is self-contained afterwards. Interchange is HLO *text* (NOT
+``.serialize()``): jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/load_hlo and its README.
+
+Exports, per model config in ``model.CONFIGS``:
+  <model>/train_step.hlo.txt   (params.., batch..) -> (loss_sum, weight_sum,
+                                correct_sum, grads..)
+  <model>/eval_step.hlo.txt    (params.., batch..) -> (loss_sum, weight_sum,
+                                correct_sum)
+  <model>/decode_logits.hlo.txt (params.., tokens..) -> (logits,)
+plus:
+  bench/{scan,unroll}_L{2,4,8}.hlo.txt   — Scalable T5 compile-time claim (E12)
+  partdemo/ffn_{full,shard2,shard4}.hlo.txt — Megatron MLP sharding demo (E3)
+  golden.json                   — loss/grad goldens for pattern-init params,
+                                  cross-checked by Rust integration tests
+  manifest.json                 — the artifact contract consumed by Rust
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic golden batch (formula mirrored by rust/src/model/golden.rs)
+# ---------------------------------------------------------------------------
+
+
+def golden_batch(cfg: M.ModelConfig):
+    b, l, v = cfg.batch, cfg.seq_len, cfg.vocab
+    tgt = np.fromfunction(
+        lambda i, j: (i * 7919 + j * 104729 + 13) % (v - 2) + 2, (b, l), dtype=np.int64
+    ).astype(np.int32)
+    dec_in = np.zeros_like(tgt)
+    dec_in[:, 1:] = tgt[:, :-1]
+    weights = np.ones((b, l), np.float32)
+    weights[0, -4:] = 0.0
+    batch = {
+        "decoder_input_tokens": dec_in,
+        "decoder_target_tokens": tgt,
+        "decoder_loss_weights": weights,
+    }
+    if cfg.arch == "encdec":
+        batch["encoder_input_tokens"] = np.fromfunction(
+            lambda i, j: (i * 6101 + j * 3571 + 29) % (v - 2) + 2, (b, l), dtype=np.int64
+        ).astype(np.int32)
+    return batch
+
+
+def export_model(cfg: M.ModelConfig, out_dir: str, entry: dict):
+    specs = M.param_specs(cfg)
+    param_shapes = [jax.ShapeDtypeStruct(s[1], jnp.float32) for s in specs]
+    bshapes = M.batch_shapes(cfg)
+    bfeat = M.batch_feature_names(cfg)
+
+    train_fn, _ = M.train_step_fn(cfg)
+    eval_fn, _ = M.eval_step_fn(cfg)
+    dec_fn, _ = M.decode_logits_fn(cfg)
+
+    t0 = time.time()
+    train_args = param_shapes + [bshapes[f] for f in bfeat]
+    _write(
+        f"{out_dir}/{cfg.name}/train_step.hlo.txt",
+        to_hlo_text(jax.jit(train_fn).lower(*train_args)),
+    )
+    _write(
+        f"{out_dir}/{cfg.name}/eval_step.hlo.txt",
+        to_hlo_text(jax.jit(eval_fn).lower(*train_args)),
+    )
+    tok_shapes = [bshapes[f] for f in bfeat if f.endswith("input_tokens")]
+    _write(
+        f"{out_dir}/{cfg.name}/decode_logits.hlo.txt",
+        to_hlo_text(jax.jit(dec_fn).lower(*(param_shapes + tok_shapes))),
+    )
+    print(f"  {cfg.name}: exported in {time.time() - t0:.1f}s")
+
+    entry[cfg.name] = {
+        "arch": cfg.arch,
+        "config": {
+            k: v
+            for k, v in dataclasses.asdict(cfg).items()
+            if isinstance(v, (int, float, str, bool))
+        },
+        "params": [
+            {
+                "name": n,
+                "shape": list(shape),
+                "dtype": "f32",
+                "logical_axes": list(axes),
+                "init": init,
+            }
+            for (n, shape, axes, init) in specs
+        ],
+        "batch_features": [
+            {
+                "name": f,
+                "shape": list(bshapes[f].shape),
+                "dtype": "i32" if bshapes[f].dtype == jnp.int32 else "f32",
+            }
+            for f in bfeat
+        ],
+        "entrypoints": {
+            "train_step": {
+                "hlo": f"{cfg.name}/train_step.hlo.txt",
+                "outputs": ["loss_sum", "weight_sum", "correct_sum"]
+                + [f"grad:{s[0]}" for s in specs],
+            },
+            "eval_step": {
+                "hlo": f"{cfg.name}/eval_step.hlo.txt",
+                "outputs": ["loss_sum", "weight_sum", "correct_sum"],
+            },
+            "decode_logits": {
+                "hlo": f"{cfg.name}/decode_logits.hlo.txt",
+                "inputs": [f for f in bfeat if f.endswith("input_tokens")],
+                "outputs": ["logits"],
+            },
+        },
+    }
+
+
+def export_golden(cfg: M.ModelConfig, goldens: dict):
+    """Loss + grad-norm goldens for pattern-init params on the golden batch."""
+    params = M.pattern_params(cfg)
+    batch = golden_batch(cfg)
+    train_fn, names = M.train_step_fn(cfg)
+    args = [params[n] for n in names] + [
+        jnp.asarray(batch[f]) for f in M.batch_feature_names(cfg)
+    ]
+    outs = jax.jit(train_fn)(*args)
+    loss_sum, weight_sum, correct_sum = (float(x) for x in outs[:3])
+    grad_norms = {
+        n: float(jnp.linalg.norm(g.astype(jnp.float32)))
+        for n, g in zip(names, outs[3:])
+    }
+    goldens[cfg.name] = {
+        "init": "pattern:seed=0:scale=0.05",
+        "loss_sum": loss_sum,
+        "weight_sum": weight_sum,
+        "correct_sum": correct_sum,
+        "grad_norms": grad_norms,
+    }
+    print(
+        f"  golden {cfg.name}: loss_sum={loss_sum:.4f} weight_sum={weight_sum}"
+        f" correct_sum={correct_sum}"
+    )
+
+
+def export_bench(out_dir: str, manifest: dict):
+    """Scan vs unrolled lowering at several depths (Scalable T5, E12)."""
+    bench = {}
+    for depth in (2, 4, 8):
+        cfg = dataclasses.replace(
+            M.CONFIGS["t5-micro-dec"], num_layers=depth, use_pallas=False
+        )
+        d, jkv, ff = cfg.d_model, cfg.joined_kv, cfg.d_ff
+        stacked = [
+            jax.ShapeDtypeStruct((cfg.vocab, d), jnp.float32),  # embed
+            jax.ShapeDtypeStruct((cfg.relpos_buckets, cfg.num_heads), jnp.float32),
+            jax.ShapeDtypeStruct((depth, d), jnp.float32),  # norm1
+            jax.ShapeDtypeStruct((depth, d, jkv), jnp.float32),  # wq
+            jax.ShapeDtypeStruct((depth, d, jkv), jnp.float32),  # wk
+            jax.ShapeDtypeStruct((depth, d, jkv), jnp.float32),  # wv
+            jax.ShapeDtypeStruct((depth, jkv, d), jnp.float32),  # wo
+            jax.ShapeDtypeStruct((depth, d), jnp.float32),  # norm2
+            jax.ShapeDtypeStruct((depth, d, ff), jnp.float32),  # wi0
+            jax.ShapeDtypeStruct((depth, d, ff), jnp.float32),  # wi1
+            jax.ShapeDtypeStruct((depth, ff, d), jnp.float32),  # wo2
+            jax.ShapeDtypeStruct((d,), jnp.float32),  # final norm
+            jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32),
+            jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32),
+            jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.float32),
+        ]
+        for kind, fn in (
+            ("scan", M.scan_decoder_loss_fn(cfg)),
+            ("unroll", M.unrolled_decoder_loss_fn(cfg)),
+        ):
+            grad_fn = jax.value_and_grad(fn, argnums=tuple(range(12)))
+            path = f"bench/{kind}_L{depth}.hlo.txt"
+            _write(f"{out_dir}/{path}", to_hlo_text(jax.jit(grad_fn).lower(*stacked)))
+            bench[f"{kind}_L{depth}"] = path
+        print(f"  bench depth {depth}: scan + unroll exported")
+    manifest["bench"] = bench
+
+
+def export_partdemo(out_dir: str, manifest: dict):
+    """Megatron-style MLP sharding demo HLOs (E3): column-parallel w1,
+    row-parallel w2; rust all-reduces the partial outputs."""
+    mdim, k, f = 64, 256, 1024
+
+    def ffn(x, w1, w2):
+        return (jax.nn.gelu(x @ w1, approximate=True) @ w2,)
+
+    demo = {"m": mdim, "k": k, "f": f, "hlos": {}}
+    for n in (1, 2, 4):
+        fs = f // n
+        args = [
+            jax.ShapeDtypeStruct((mdim, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, fs), jnp.float32),
+            jax.ShapeDtypeStruct((fs, k), jnp.float32),
+        ]
+        name = "ffn_full" if n == 1 else f"ffn_shard{n}"
+        path = f"partdemo/{name}.hlo.txt"
+        _write(f"{out_dir}/{path}", to_hlo_text(jax.jit(ffn).lower(*args)))
+        demo["hlos"][name] = path
+    manifest["partdemo"] = demo
+    print("  partdemo exported")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="t5-nano-dec,t5-nano-encdec,t5-micro-dec,t5-micro-encdec,"
+        "t5-small-dec,t5-100m-dec",
+    )
+    args = ap.parse_args()
+    out = args.out
+    manifest = {"format_version": 1, "models": {}}
+
+    t0 = time.time()
+    for name in args.models.split(","):
+        export_model(M.CONFIGS[name], out, manifest["models"])
+    export_bench(out, manifest)
+    export_partdemo(out, manifest)
+
+    goldens = {}
+    for name in ("t5-nano-dec", "t5-nano-encdec"):
+        if name in manifest["models"]:
+            export_golden(M.CONFIGS[name], goldens)
+    _write(f"{out}/golden.json", json.dumps(goldens, indent=1))
+    _write(f"{out}/manifest.json", json.dumps(manifest, indent=1))
+    print(f"artifacts written to {out} in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: fused gated-GeLU feed-forward block (T5.1.1 MLP).
+
+Computes ``y = (gelu(x @ wi_0) * (x @ wi_1)) @ wo`` in one kernel so the
+[M, d_ff] hidden activation never round-trips to HBM.
+
+TPU-oriented design (DESIGN.md §Hardware-Adaptation):
+  * grid = (M / block_m, d_ff / block_f): the hidden dimension is tiled and
+    partial products are accumulated into the output tile, so VMEM holds
+    only [block_m, d_ff_block] of the gate/linear activations at a time.
+  * the inner matmuls are shaped for the 128x128 MXU when the problem is
+    large enough (_pick_block clamps for small test shapes).
+  * executed with ``interpret=True`` for CPU-PJRT (see attention.py).
+
+Backward uses jax.custom_vjp with the ``ref.gated_ffn_ref`` VJP: exact,
+and keeps the exported train-step HLO identical to the reference formula.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pick_block(n, preferred):
+    b = min(n, preferred)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _ffn_kernel(x_ref, wi0_ref, wi1_ref, wo_ref, o_ref):
+    """One (m-tile, f-tile) program; accumulate partial product over f tiles."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # [bm, K]
+    gate = jax.nn.gelu(x @ wi0_ref[...].astype(jnp.float32), approximate=True)
+    lin = x @ wi1_ref[...].astype(jnp.float32)
+    h = gate * lin  # [bm, bf]
+    o_ref[...] += (h @ wo_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _ffn_pallas(x, wi_0, wi_1, wo, block_m, block_f):
+    m, k = x.shape
+    f = wi_0.shape[1]
+    bm = _pick_block(m, block_m)
+    bf = _pick_block(f, block_f)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=(m // bm, f // bf),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((k, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), x.dtype),
+        interpret=True,
+    )(x, wi_0, wi_1, wo)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def fused_ffn(x, wi_0, wi_1, wo, block_m=128, block_f=128):
+    """Fused gated-GeLU MLP: ``(gelu(x@wi_0) * (x@wi_1)) @ wo``.
+
+    Args:
+      x: [M, d_model] activations.
+      wi_0 / wi_1: [d_model, d_ff] gate / linear projections.
+      wo: [d_ff, d_model] output projection.
+      block_m / block_f: tile sizes over rows / hidden dim.
+    """
+    return _ffn_pallas(x, wi_0, wi_1, wo, block_m, block_f)
+
+
+def _ffn_fwd(x, wi_0, wi_1, wo, block_m, block_f):
+    y = _ffn_pallas(x, wi_0, wi_1, wo, block_m, block_f)
+    return y, (x, wi_0, wi_1, wo)
+
+
+def _ffn_bwd(block_m, block_f, res, dy):
+    x, wi_0, wi_1, wo = res
+    _, vjp = jax.vjp(ref.gated_ffn_ref, x, wi_0, wi_1, wo)
+    return vjp(dy)
+
+
+fused_ffn.defvjp(_ffn_fwd, _ffn_bwd)

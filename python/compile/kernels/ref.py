@@ -1,0 +1,56 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness gates).
+
+These are the ground-truth implementations: simple, obviously-correct jnp.
+`pytest python/tests` asserts the Pallas kernels (attention.py, fused_ffn.py)
+match these within tolerance over a hypothesis-swept space of shapes/dtypes.
+The L2 model can be built against either implementation (``use_pallas`` flag),
+which is itself a test: lowered HLO numerics must agree.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e10
+
+
+def attention_ref(q, k, v, bias=None, causal=False):
+    """Multi-head attention reference.
+
+    Args:
+      q: [B, H, Lq, D] queries.
+      k: [B, H, Lk, D] keys.
+      v: [B, H, Lk, D] values.
+      bias: optional [H, Lq, Lk] additive logit bias (T5 relative position
+        bias), broadcast over batch.
+      causal: if True, apply a causal mask (position i attends to j <= i).
+
+    Returns:
+      [B, H, Lq, D] attention output.
+    """
+    depth = q.shape[-1]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(depth, q.dtype)
+    )
+    if bias is not None:
+        logits = logits + bias[None, :, :, :].astype(logits.dtype)
+    if causal:
+        lq, lk = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    weights = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", weights, v)
+
+
+def gated_ffn_ref(x, wi_0, wi_1, wo):
+    """T5.1.1 gated-GeLU feed-forward reference.
+
+    y = (gelu(x @ wi_0) * (x @ wi_1)) @ wo
+
+    Args:
+      x: [M, d_model] activations (batch*seq flattened).
+      wi_0: [d_model, d_ff] gate projection.
+      wi_1: [d_model, d_ff] linear projection.
+      wo: [d_ff, d_model] output projection.
+    """
+    gate = jax.nn.gelu(x @ wi_0, approximate=True)
+    return (gate * (x @ wi_1)) @ wo

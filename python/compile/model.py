@@ -1,0 +1,547 @@
+"""L2: pure-JAX T5-style transformer (encoder-decoder and decoder-only).
+
+This is the "Minimal"-style model of the paper's §4 rewritten without Flax
+(flax is unavailable in this image): parameters are a flat
+``dict[name, jnp.ndarray]`` and every parameter carries *logical axis names*
+(the t5x `param_with_axes` mechanism) in ``param_specs`` — the Rust L3
+partitioner consumes those names through the artifact manifest to decide
+model/data sharding, exactly as t5x maps logical axes to mesh axes.
+
+Architecture (T5.1.1 flavour):
+  * RMSNorm (T5 LayerNorm: no mean subtraction, no bias), pre-norm residuals
+  * multi-head attention without biases, flash-attention Pallas kernel (L1)
+  * bucketed relative position biases, shared across layers per stack
+  * gated-GeLU MLP (wi_0/wi_1/wo), fused Pallas kernel (L1)
+  * shared input/output embedding (logits = h @ embed^T / sqrt(d_model))
+  * cross-entropy loss with z-loss regularizer (t5x default 1e-4)
+
+Deviations from T5 (documented in DESIGN.md): attention logits are scaled by
+1/sqrt(head_dim) (T5 folds this into Adafactor init); embeddings are always
+shared.
+
+``use_pallas=False`` swaps both kernels for the jnp oracles in
+``kernels/ref.py`` — tests assert the two lowerings agree numerically.
+"""
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.attention import flash_attention
+from .kernels.fused_ffn import fused_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + export-shape configuration."""
+
+    name: str
+    arch: str  # "decoder" | "encdec"
+    num_layers: int
+    d_model: int
+    num_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    batch: int
+    seq_len: int  # decoder length; encoder length is also seq_len
+    relpos_buckets: int = 32
+    relpos_max_distance: int = 128
+    z_loss: float = 1e-4
+    use_pallas: bool = True
+    # L1 tile sizes (clamped to divisors inside the kernels).
+    block_q: int = 64
+    block_k: int = 64
+    block_m: int = 128
+    block_f: int = 128
+
+    @property
+    def joined_kv(self) -> int:
+        return self.num_heads * self.head_dim
+
+
+# ---------------------------------------------------------------------------
+# Parameter inventory: (name, shape, logical_axes, init_spec)
+# ---------------------------------------------------------------------------
+
+
+def _layer_specs(prefix: str, cfg: ModelConfig, cross_attention: bool):
+    d, jkv, ff = cfg.d_model, cfg.joined_kv, cfg.d_ff
+    att = lambda p: [
+        (f"{p}.wq", (d, jkv), ("embed", "joined_kv"), f"normal:{d ** -0.5:.8g}"),
+        (f"{p}.wk", (d, jkv), ("embed", "joined_kv"), f"normal:{d ** -0.5:.8g}"),
+        (f"{p}.wv", (d, jkv), ("embed", "joined_kv"), f"normal:{d ** -0.5:.8g}"),
+        (f"{p}.wo", (jkv, d), ("joined_kv", "embed"), f"normal:{jkv ** -0.5:.8g}"),
+    ]
+    specs = [
+        (f"{prefix}.pre_attn_norm.scale", (d,), ("embed",), "const:1"),
+        *att(f"{prefix}.self_attn"),
+    ]
+    if cross_attention:
+        specs += [
+            (f"{prefix}.pre_cross_norm.scale", (d,), ("embed",), "const:1"),
+            *att(f"{prefix}.cross_attn"),
+        ]
+    specs += [
+        (f"{prefix}.pre_mlp_norm.scale", (d,), ("embed",), "const:1"),
+        (f"{prefix}.mlp.wi_0", (d, ff), ("embed", "mlp"), f"normal:{d ** -0.5:.8g}"),
+        (f"{prefix}.mlp.wi_1", (d, ff), ("embed", "mlp"), f"normal:{d ** -0.5:.8g}"),
+        (f"{prefix}.mlp.wo", (ff, d), ("mlp", "embed"), f"normal:{ff ** -0.5:.8g}"),
+    ]
+    return specs
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, tuple, tuple, str]]:
+    """Full parameter inventory in manifest (sorted) order."""
+    specs = [
+        ("token_embed", (cfg.vocab, cfg.d_model), ("vocab", "embed"), "normal:1"),
+    ]
+    if cfg.arch == "encdec":
+        specs.append(
+            (
+                "encoder.relpos_bias",
+                (cfg.relpos_buckets, cfg.num_heads),
+                ("relpos_buckets", "heads"),
+                f"normal:{cfg.d_model ** -0.5:.8g}",
+            )
+        )
+        for i in range(cfg.num_layers):
+            specs += _layer_specs(f"encoder.layers_{i}", cfg, cross_attention=False)
+        specs.append(("encoder.final_norm.scale", (cfg.d_model,), ("embed",), "const:1"))
+    specs.append(
+        (
+            "decoder.relpos_bias",
+            (cfg.relpos_buckets, cfg.num_heads),
+            ("relpos_buckets", "heads"),
+            f"normal:{cfg.d_model ** -0.5:.8g}",
+        )
+    )
+    for i in range(cfg.num_layers):
+        specs += _layer_specs(
+            f"decoder.layers_{i}", cfg, cross_attention=(cfg.arch == "encdec")
+        )
+    specs.append(("decoder.final_norm.scale", (cfg.d_model,), ("embed",), "const:1"))
+    specs.sort(key=lambda s: s[0])
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Deterministic "pattern" init shared bit-exactly with Rust (golden tests)
+# ---------------------------------------------------------------------------
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK64 = (1 << 64) - 1
+
+
+def fnv1a64(name: str) -> int:
+    h = _FNV_OFFSET
+    for byte in name.encode("utf-8"):
+        h = ((h ^ byte) * _FNV_PRIME) & _MASK64
+    return h
+
+
+def splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) & _MASK64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _MASK64
+    return x ^ (x >> 31)
+
+
+def pattern_init(name: str, shape: tuple, scale: float, seed: int = 0) -> np.ndarray:
+    """Deterministic pseudo-random init computable identically in Rust.
+
+    value[i] = (2*u - 1) * scale with u = splitmix64(fnv1a64(name)^seed ^ (i+1))
+    mapped to [0, 1) via the top 53 bits.
+    """
+    base = fnv1a64(name) ^ seed
+    n = int(np.prod(shape)) if shape else 1
+    out = np.empty(n, np.float64)
+    for i in range(n):
+        u = splitmix64((base ^ (i + 1)) & _MASK64) >> 11
+        out[i] = u * (2.0**-53)
+    return ((2.0 * out - 1.0) * scale).astype(np.float32).reshape(shape)
+
+
+def pattern_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    params = {}
+    for name, shape, _, init in param_specs(cfg):
+        kind, _, arg = init.partition(":")
+        if kind == "const":
+            params[name] = jnp.full(shape, float(arg), jnp.float32)
+        else:
+            params[name] = jnp.asarray(pattern_init(name, shape, 0.05, seed))
+    return params
+
+
+def random_params(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    """jax.random init following the manifest init specs (python tests only)."""
+    params = {}
+    for name, shape, _, init in param_specs(cfg):
+        kind, _, arg = init.partition(":")
+        if kind == "const":
+            params[name] = jnp.full(shape, float(arg), jnp.float32)
+        else:
+            key, sub = jax.random.split(key)
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * float(arg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Model forward
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def relative_position_bucket(relpos, bidirectional, num_buckets, max_distance):
+    """T5 relative position bucketing (Raffel et al. 2020, Appendix)."""
+    ret = 0
+    n = -relpos
+    if bidirectional:
+        num_buckets //= 2
+        ret += (n < 0).astype(jnp.int32) * num_buckets
+        n = jnp.abs(n)
+    else:
+        n = jnp.maximum(n, 0)
+    max_exact = num_buckets // 2
+    is_small = n < max_exact
+    val_if_large = max_exact + (
+        jnp.log(n.astype(jnp.float32) / max_exact + 1e-6)
+        / np.log(max_distance / max_exact)
+        * (num_buckets - max_exact)
+    ).astype(jnp.int32)
+    val_if_large = jnp.minimum(val_if_large, num_buckets - 1)
+    return ret + jnp.where(is_small, n, val_if_large)
+
+
+def relpos_bias(rel_embedding, lq, lk, bidirectional, cfg: ModelConfig):
+    """[H, Lq, Lk] additive attention bias from the bucket embedding table."""
+    ctx = jnp.arange(lq)[:, None]
+    mem = jnp.arange(lk)[None, :]
+    buckets = relative_position_bucket(
+        mem - ctx, bidirectional, cfg.relpos_buckets, cfg.relpos_max_distance
+    )  # [Lq, Lk]
+    values = rel_embedding[buckets]  # [Lq, Lk, H]
+    return jnp.transpose(values, (2, 0, 1))
+
+
+def _attention(p, prefix, x_q, x_kv, bias, causal, cfg: ModelConfig):
+    b, lq, d = x_q.shape
+    lk = x_kv.shape[1]
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = (x_q @ p[f"{prefix}.wq"]).reshape(b, lq, h, hd).transpose(0, 2, 1, 3)
+    k = (x_kv @ p[f"{prefix}.wk"]).reshape(b, lk, h, hd).transpose(0, 2, 1, 3)
+    v = (x_kv @ p[f"{prefix}.wv"]).reshape(b, lk, h, hd).transpose(0, 2, 1, 3)
+    if bias is None:
+        bias = jnp.zeros((h, lq, lk), x_q.dtype)
+    if cfg.use_pallas:
+        o = flash_attention(q, k, v, bias, causal, cfg.block_q, cfg.block_k)
+    else:
+        o = ref.attention_ref(q, k, v, bias, causal=causal)
+    o = o.transpose(0, 2, 1, 3).reshape(b, lq, h * hd)
+    return o @ p[f"{prefix}.wo"]
+
+
+def _mlp(p, prefix, x, cfg: ModelConfig):
+    b, l, d = x.shape
+    flat = x.reshape(b * l, d)
+    if cfg.use_pallas:
+        y = fused_ffn(
+            flat,
+            p[f"{prefix}.wi_0"],
+            p[f"{prefix}.wi_1"],
+            p[f"{prefix}.wo"],
+            cfg.block_m,
+            cfg.block_f,
+        )
+    else:
+        y = ref.gated_ffn_ref(
+            flat, p[f"{prefix}.wi_0"], p[f"{prefix}.wi_1"], p[f"{prefix}.wo"]
+        )
+    return y.reshape(b, l, d)
+
+
+def _stack(p, stack, x, bias, causal, cfg, cross_x=None):
+    """Run one transformer stack (encoder or decoder)."""
+    for i in range(cfg.num_layers):
+        lp = f"{stack}.layers_{i}"
+        h = rms_norm(x, p[f"{lp}.pre_attn_norm.scale"])
+        x = x + _attention(p, f"{lp}.self_attn", h, h, bias, causal, cfg)
+        if cross_x is not None:
+            h = rms_norm(x, p[f"{lp}.pre_cross_norm.scale"])
+            x = x + _attention(p, f"{lp}.cross_attn", h, cross_x, None, False, cfg)
+        h = rms_norm(x, p[f"{lp}.pre_mlp_norm.scale"])
+        x = x + _mlp(p, f"{lp}.mlp", h, cfg)
+    return rms_norm(x, p[f"{stack}.final_norm.scale"])
+
+
+def logits_fn(p, cfg: ModelConfig, dec_tokens, enc_tokens=None):
+    """Token logits [B, L, V] for the decoder positions."""
+    embed = p["token_embed"]
+    dec_x = embed[dec_tokens]
+    dec_bias = relpos_bias(
+        p["decoder.relpos_bias"], dec_tokens.shape[1], dec_tokens.shape[1], False, cfg
+    )
+    if cfg.arch == "encdec":
+        enc_x = embed[enc_tokens]
+        enc_bias = relpos_bias(
+            p["encoder.relpos_bias"],
+            enc_tokens.shape[1],
+            enc_tokens.shape[1],
+            True,
+            cfg,
+        )
+        enc_out = _stack(p, "encoder", enc_x, enc_bias, False, cfg)
+        dec_out = _stack(p, "decoder", dec_x, dec_bias, True, cfg, cross_x=enc_out)
+    else:
+        dec_out = _stack(p, "decoder", dec_x, dec_bias, True, cfg)
+    # Shared-embedding output head, scaled per T5 (1/sqrt(d)).
+    return (dec_out / np.sqrt(cfg.d_model)) @ embed.T
+
+
+def loss_terms(p, cfg: ModelConfig, batch):
+    """(loss_sum, weight_sum, correct_sum): unnormalized so the Rust trainer
+    can all-reduce across hosts and divide once — exact global-batch math."""
+    logits = logits_fn(
+        p, cfg, batch["decoder_input_tokens"], batch.get("encoder_input_tokens")
+    ).astype(jnp.float32)
+    targets = batch["decoder_target_tokens"]
+    weights = batch["decoder_loss_weights"].astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    target_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - target_logit
+    zl = cfg.z_loss * jnp.square(logz)
+    loss_sum = jnp.sum((nll + zl) * weights)
+    weight_sum = jnp.sum(weights)
+    correct = (jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32)
+    correct_sum = jnp.sum(correct * weights)
+    return loss_sum, weight_sum, correct_sum
+
+
+def train_step_fn(cfg: ModelConfig):
+    """(params..., batch...) -> (loss_sum, weight_sum, correct_sum, grads...).
+
+    Parameters are passed positionally in sorted-name order so the HLO input
+    layout matches the manifest exactly.
+    """
+    names = [s[0] for s in param_specs(cfg)]
+
+    def fn(*args):
+        p = dict(zip(names, args[: len(names)]))
+        batch = _batch_from_args(cfg, args[len(names):])
+
+        def loss_of(p_):
+            ls, ws, cs = loss_terms(p_, cfg, batch)
+            return ls, (ws, cs)
+
+        (loss_sum, (weight_sum, correct_sum)), grads = jax.value_and_grad(
+            loss_of, has_aux=True
+        )(p)
+        return (loss_sum, weight_sum, correct_sum) + tuple(
+            grads[n] for n in names
+        )
+
+    return fn, names
+
+
+def eval_step_fn(cfg: ModelConfig):
+    """(params..., batch...) -> (loss_sum, weight_sum, correct_sum)."""
+    names = [s[0] for s in param_specs(cfg)]
+
+    def fn(*args):
+        p = dict(zip(names, args[: len(names)]))
+        batch = _batch_from_args(cfg, args[len(names):])
+        return loss_terms(p, cfg, batch)
+
+    return fn, names
+
+
+def decode_logits_fn(cfg: ModelConfig):
+    """(params..., tokens...) -> logits [B, L, V] (greedy decode in Rust)."""
+    names = [s[0] for s in param_specs(cfg)]
+
+    def fn(*args):
+        p = dict(zip(names, args[: len(names)]))
+        rest = args[len(names):]
+        if cfg.arch == "encdec":
+            enc_tokens, dec_tokens = rest
+            return (logits_fn(p, cfg, dec_tokens, enc_tokens),)
+        (dec_tokens,) = rest
+        return (logits_fn(p, cfg, dec_tokens),)
+
+    return fn, names
+
+
+def batch_feature_names(cfg: ModelConfig) -> List[str]:
+    feats = []
+    if cfg.arch == "encdec":
+        feats.append("encoder_input_tokens")
+    feats += ["decoder_input_tokens", "decoder_target_tokens", "decoder_loss_weights"]
+    return feats
+
+
+def _batch_from_args(cfg: ModelConfig, args):
+    return dict(zip(batch_feature_names(cfg), args))
+
+
+def batch_shapes(cfg: ModelConfig):
+    """ShapeDtypeStructs for the batch features, manifest order."""
+    b, l = cfg.batch, cfg.seq_len
+    shapes = {}
+    if cfg.arch == "encdec":
+        shapes["encoder_input_tokens"] = jax.ShapeDtypeStruct((b, l), jnp.int32)
+    shapes["decoder_input_tokens"] = jax.ShapeDtypeStruct((b, l), jnp.int32)
+    shapes["decoder_target_tokens"] = jax.ShapeDtypeStruct((b, l), jnp.int32)
+    shapes["decoder_loss_weights"] = jax.ShapeDtypeStruct((b, l), jnp.float32)
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Scan variant (Scalable T5, §4): layers stacked, lax.scan over depth.
+# Used by the compile-time benchmark (E12); numerics match the unrolled model.
+# ---------------------------------------------------------------------------
+
+
+def scan_decoder_loss_fn(cfg: ModelConfig):
+    """Decoder-only loss with stacked per-layer params + lax.scan over layers.
+
+    Inputs: embed, relpos, stacked layer params (leading axis = num_layers),
+    final norm scale, then the batch. Demonstrates the compile-time win of
+    jax.scan that motivates Scalable T5.
+    """
+
+    def fn(
+        embed,
+        relpos,
+        norm1,
+        wq,
+        wk,
+        wv,
+        wo,
+        norm2,
+        wi0,
+        wi1,
+        wo2,
+        final_norm,
+        dec_in,
+        dec_tgt,
+        weights,
+    ):
+        cfg_ref = dataclasses.replace(cfg, use_pallas=False)
+        x = embed[dec_in]
+        bias = relpos_bias(relpos, cfg.seq_len, cfg.seq_len, False, cfg)
+
+        def layer(x, lp):
+            (n1, q_, k_, v_, o_, n2, i0, i1, o2) = lp
+            b, l, d = x.shape
+            h = rms_norm(x, n1)
+            hh, hd = cfg.num_heads, cfg.head_dim
+            qh = (h @ q_).reshape(b, l, hh, hd).transpose(0, 2, 1, 3)
+            kh = (h @ k_).reshape(b, l, hh, hd).transpose(0, 2, 1, 3)
+            vh = (h @ v_).reshape(b, l, hh, hd).transpose(0, 2, 1, 3)
+            att = ref.attention_ref(qh, kh, vh, bias, causal=True)
+            att = att.transpose(0, 2, 1, 3).reshape(b, l, hh * hd)
+            x = x + att @ o_
+            h = rms_norm(x, n2)
+            x = x + ref.gated_ffn_ref(
+                h.reshape(b * l, d), i0, i1, o2
+            ).reshape(b, l, d)
+            return x, ()
+
+        x, _ = jax.lax.scan(layer, x, (norm1, wq, wk, wv, wo, norm2, wi0, wi1, wo2))
+        x = rms_norm(x, final_norm)
+        logits = (x / np.sqrt(cfg.d_model)) @ embed.T
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tl = jnp.take_along_axis(logits, dec_tgt[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((logz - tl) * weights)
+        return loss
+
+    return fn
+
+
+def unrolled_decoder_loss_fn(cfg: ModelConfig):
+    """Same computation as scan_decoder_loss_fn with a python-loop unroll."""
+
+    def fn(
+        embed,
+        relpos,
+        norm1,
+        wq,
+        wk,
+        wv,
+        wo,
+        norm2,
+        wi0,
+        wi1,
+        wo2,
+        final_norm,
+        dec_in,
+        dec_tgt,
+        weights,
+    ):
+        x = embed[dec_in]
+        bias = relpos_bias(relpos, cfg.seq_len, cfg.seq_len, False, cfg)
+        for i in range(cfg.num_layers):
+            b, l, d = x.shape
+            h = rms_norm(x, norm1[i])
+            hh, hd = cfg.num_heads, cfg.head_dim
+            qh = (h @ wq[i]).reshape(b, l, hh, hd).transpose(0, 2, 1, 3)
+            kh = (h @ wk[i]).reshape(b, l, hh, hd).transpose(0, 2, 1, 3)
+            vh = (h @ wv[i]).reshape(b, l, hh, hd).transpose(0, 2, 1, 3)
+            att = ref.attention_ref(qh, kh, vh, bias, causal=True)
+            att = att.transpose(0, 2, 1, 3).reshape(b, l, hh * hd)
+            x = x + att @ wo[i]
+            h = rms_norm(x, norm2[i])
+            x = x + ref.gated_ffn_ref(
+                h.reshape(b * l, d), wi0[i], wi1[i], wo2[i]
+            ).reshape(b, l, d)
+        x = rms_norm(x, final_norm)
+        logits = (x / np.sqrt(cfg.d_model)) @ embed.T
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tl = jnp.take_along_axis(logits, dec_tgt[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((logz - tl) * weights)
+        return loss
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Registry of export configs (mirrored by the Rust model registry).
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    "t5-nano-dec": ModelConfig(
+        name="t5-nano-dec", arch="decoder", num_layers=2, d_model=64, num_heads=4,
+        head_dim=16, d_ff=128, vocab=512, batch=8, seq_len=32,
+    ),
+    "t5-nano-encdec": ModelConfig(
+        name="t5-nano-encdec", arch="encdec", num_layers=2, d_model=64, num_heads=4,
+        head_dim=16, d_ff=128, vocab=512, batch=8, seq_len=32,
+    ),
+    "t5-micro-dec": ModelConfig(
+        name="t5-micro-dec", arch="decoder", num_layers=4, d_model=128, num_heads=8,
+        head_dim=16, d_ff=512, vocab=4096, batch=8, seq_len=64,
+    ),
+    "t5-micro-encdec": ModelConfig(
+        name="t5-micro-encdec", arch="encdec", num_layers=4, d_model=128, num_heads=8,
+        head_dim=16, d_ff=512, vocab=4096, batch=8, seq_len=64,
+    ),
+    "t5-small-dec": ModelConfig(
+        name="t5-small-dec", arch="decoder", num_layers=6, d_model=256, num_heads=8,
+        head_dim=32, d_ff=1024, vocab=8192, batch=4, seq_len=64,
+    ),
+    "t5-100m-dec": ModelConfig(
+        name="t5-100m-dec", arch="decoder", num_layers=12, d_model=768, num_heads=12,
+        head_dim=64, d_ff=2048, vocab=16384, batch=2, seq_len=128,
+    ),
+}

@@ -1,0 +1,107 @@
+"""AOT export contract tests: the manifest/golden/HLO artifacts that the
+Rust layer consumes. Runs against a temp export of the nano models (fast)
+so the contract is validated even before `make artifacts`."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_structure(manifest):
+    assert manifest["format_version"] == 1
+    models = manifest["models"]
+    assert "t5-nano-dec" in models
+    for name, m in models.items():
+        assert m["arch"] in ("decoder", "encdec")
+        names = [p["name"] for p in m["params"]]
+        assert names == sorted(names), f"{name}: params must be sorted"
+        assert len(names) == len(set(names))
+        for p in m["params"]:
+            assert len(p["shape"]) == len(p["logical_axes"]), p["name"]
+            kind = p["init"].split(":")[0]
+            assert kind in ("normal", "const")
+        eps = m["entrypoints"]
+        for ep in ("train_step", "eval_step", "decode_logits"):
+            assert ep in eps
+            hlo = os.path.join(ART, eps[ep]["hlo"])
+            assert os.path.exists(hlo), hlo
+        # train outputs = 3 scalars + grads in param order
+        outs = eps["train_step"]["outputs"]
+        assert outs[:3] == ["loss_sum", "weight_sum", "correct_sum"]
+        assert outs[3:] == [f"grad:{n}" for n in names]
+
+
+def test_hlo_text_is_parseable_hlo(manifest):
+    path = os.path.join(
+        ART, manifest["models"]["t5-nano-dec"]["entrypoints"]["train_step"]["hlo"]
+    )
+    text = open(path).read()
+    assert text.startswith("HloModule"), "expected HLO text format"
+    assert "ENTRY" in text
+    # the interchange constraint: text, not serialized proto (see aot.py)
+    assert "\x00" not in text[:1000]
+
+
+def test_golden_values_consistent(manifest):
+    with open(os.path.join(ART, "golden.json")) as f:
+        golden = json.load(f)
+    for name in ("t5-nano-dec", "t5-nano-encdec"):
+        g = golden[name]
+        m = manifest["models"][name]
+        assert set(g["grad_norms"].keys()) == {p["name"] for p in m["params"]}
+        # weight_sum = B*L - 4 masked positions
+        b = m["config"]["batch"]
+        l = m["config"]["seq_len"]
+        assert g["weight_sum"] == b * l - 4
+        assert g["loss_sum"] > 0
+        # per-token loss near ln(vocab) at pattern init (small-scale init)
+        per_tok = g["loss_sum"] / g["weight_sum"]
+        import math
+
+        assert abs(per_tok - math.log(m["config"]["vocab"])) < 1.0
+
+
+def test_bench_and_partdemo_artifacts(manifest):
+    for key in ("scan_L2", "unroll_L2", "scan_L8", "unroll_L8"):
+        assert os.path.exists(os.path.join(ART, manifest["bench"][key]))
+    pd = manifest["partdemo"]
+    assert pd["f"] % 4 == 0
+    for name in ("ffn_full", "ffn_shard2", "ffn_shard4"):
+        assert os.path.exists(os.path.join(ART, pd["hlos"][name]))
+
+
+def test_scan_hlo_constant_in_depth_unroll_grows(manifest):
+    """The Scalable T5 claim's static half: scan HLO size is flat in
+    depth while unrolled HLO grows with the layer count."""
+    size = lambda k: os.path.getsize(os.path.join(ART, manifest["bench"][k]))
+    assert size("scan_L8") <= size("scan_L2") * 1.05
+    assert size("unroll_L8") > size("unroll_L2") * 2
+    assert size("unroll_L8") > size("scan_L8") * 1.5
+
+
+def test_pattern_init_cross_language_formula():
+    """The exact formula mirrored by rust/src/util/rng.rs::pattern_init."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from compile.model import fnv1a64, pattern_init, splitmix64
+
+    # FNV-1a empty-string basis (shared constant with rust tests)
+    assert fnv1a64("") == 0xCBF29CE484222325
+    v = pattern_init("token_embed", (4,), 0.05, seed=0)
+    assert all(abs(x) <= 0.05 for x in v)
+    # deterministic
+    v2 = pattern_init("token_embed", (4,), 0.05, seed=0)
+    assert (v == v2).all()

@@ -1,0 +1,82 @@
+//! E11: checkpointing — save/restore throughput vs shard (chunk) size,
+//! sliced reads, and the §2.3 claim that converting legacy (single-file
+//! sequential) checkpoints to the native chunked format "results in
+//! faster reading".
+
+use t5x::bench::Bench;
+use t5x::checkpoint::{legacy, CheckpointManager};
+use t5x::runtime::Artifacts;
+
+fn main() {
+    let arts = Artifacts::load_default().expect("make artifacts first");
+    let mut bench = Bench::new("checkpoint (E11)");
+    let model = if bench.is_quick() { "t5-nano-dec" } else { "t5-small-dec" };
+    let m = arts.model(model).unwrap();
+    let params = t5x::model::init_params(m, 0);
+    let total_bytes = (m.total_params() * 4) as f64;
+    let root = std::env::temp_dir().join(format!("bench_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+
+    println!("model {model}: {:.1} MiB of parameters\n", total_bytes / (1 << 20) as f64);
+
+    for chunk_rows in [256usize, 4096] {
+        let dir = root.join(format!("native_{chunk_rows}"));
+        let mut mgr = CheckpointManager::new(&dir);
+        mgr.chunk_rows = chunk_rows;
+        bench.measure_with_throughput(
+            &format!("native save (chunk_rows={chunk_rows})"),
+            Some((total_bytes, "B")),
+            || {
+                mgr.save(1, &params, &Vec::new()).unwrap();
+            },
+        );
+        bench.measure_with_throughput(
+            &format!("native restore (chunk_rows={chunk_rows})"),
+            Some((total_bytes, "B")),
+            || {
+                let (p, _) = mgr.restore(1).unwrap();
+                std::hint::black_box(&p);
+            },
+        );
+    }
+
+    // legacy single-file format
+    let legacy_path = root.join("legacy.ckpt");
+    bench.measure_with_throughput("legacy save (single file)", Some((total_bytes, "B")), || {
+        legacy::save_legacy(&legacy_path, &params).unwrap();
+    });
+    bench.measure_with_throughput("legacy load (single file)", Some((total_bytes, "B")), || {
+        let p = legacy::load_legacy(&legacy_path).unwrap();
+        std::hint::black_box(&p);
+    });
+
+    // conversion + converted read (the §2.3 claim)
+    let conv_dir = root.join("converted");
+    let mgr = CheckpointManager::new(&conv_dir);
+    legacy::convert_to_native(&legacy_path, &mgr, 0).unwrap();
+    bench.measure_with_throughput(
+        "converted-native restore",
+        Some((total_bytes, "B")),
+        || {
+            let (p, _) = mgr.restore(0).unwrap();
+            std::hint::black_box(&p);
+        },
+    );
+
+    // sliced restore: one host pulling 1/4 of the embedding
+    let emb = m.param("token_embed").unwrap();
+    let rows = emb.shape[0];
+    bench.measure_with_throughput(
+        "sliced restore (1/4 of token_embed)",
+        Some(((emb.elements()) as f64, "floats")),
+        || {
+            let v = mgr
+                .restore_param_slice(0, "token_embed", rows / 2, rows / 4)
+                .unwrap();
+            std::hint::black_box(&v);
+        },
+    );
+
+    bench.write_jsonl("bench_results.jsonl").unwrap();
+    std::fs::remove_dir_all(&root).ok();
+}

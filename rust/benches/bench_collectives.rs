@@ -1,0 +1,64 @@
+//! E13: collective primitives — ring all-reduce / reduce-scatter /
+//! all-gather time vs host count and payload size. These are the
+//! communication terms behind every §2.2 strategy; the measured byte
+//! counts are checked against the analytic ring model.
+
+use t5x::bench::Bench;
+use t5x::collectives::{run_ranks, CollectiveGroup};
+use t5x::partitioning::cost::ring_all_reduce_bytes;
+
+fn main() {
+    let mut bench = Bench::new("collectives (E13)");
+    let sizes: &[usize] = if bench.is_quick() {
+        &[1 << 16]
+    } else {
+        &[1 << 16, 1 << 20, 1 << 23]
+    };
+    let host_counts: &[usize] = if bench.is_quick() { &[4] } else { &[2, 4, 8] };
+
+    for &n in host_counts {
+        for &len in sizes {
+            let group = CollectiveGroup::new(n);
+            let mib = (len * 4) as f64 / (1 << 20) as f64;
+            bench.measure_with_throughput(
+                &format!("all_reduce n={n} {mib:.0}MiB"),
+                Some(((len * 4) as f64, "B")),
+                || {
+                    run_ranks(n, |r| {
+                        std::hint::black_box(group.all_reduce(r, vec![r as f32; len]))
+                    });
+                },
+            );
+            // verify measured bytes track the ring model
+            group.reset_stats();
+            run_ranks(n, |r| group.all_reduce(r, vec![0.0; len]));
+            let expect = n as u64 * ring_all_reduce_bytes(len as u64 * 4, n as u64);
+            let got = group.bytes_sent();
+            assert!(
+                (got as f64 - expect as f64).abs() / (expect.max(1) as f64) < 0.05,
+                "byte model mismatch: got {got}, ring model {expect}"
+            );
+
+            bench.measure_with_throughput(
+                &format!("reduce_scatter n={n} {mib:.0}MiB"),
+                Some(((len * 4) as f64, "B")),
+                || {
+                    run_ranks(n, |r| {
+                        std::hint::black_box(group.reduce_scatter(r, vec![1.0; len]))
+                    });
+                },
+            );
+            let chunk = len / n;
+            bench.measure_with_throughput(
+                &format!("all_gather n={n} {mib:.0}MiB"),
+                Some(((len * 4) as f64, "B")),
+                || {
+                    run_ranks(n, |r| {
+                        std::hint::black_box(group.all_gather(r, vec![1.0; chunk], chunk * n))
+                    });
+                },
+            );
+        }
+    }
+    bench.write_jsonl("bench_results.jsonl").unwrap();
+}

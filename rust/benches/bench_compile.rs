@@ -1,0 +1,46 @@
+//! E12: the Scalable T5 claim (§4) — "an implementation of T5.1.1 using
+//! jax.scan to significantly reduce compilation time". Measures PJRT
+//! compile time and HLO text size for scan-based vs unrolled lowerings of
+//! the same decoder at depths 2/4/8.
+
+use t5x::bench::Bench;
+use t5x::runtime::{Artifacts, DeviceHandle};
+
+fn main() {
+    let arts = Artifacts::load_default().expect("make artifacts first");
+    let device = DeviceHandle::spawn().unwrap();
+    let mut bench = Bench::new("compile time: scan vs unroll (E12)");
+    let depths: &[usize] = if bench.is_quick() { &[2] } else { &[2, 4, 8] };
+
+    println!(
+        "{:<12} {:>14} {:>14} {:>12} {:>12}",
+        "depth", "scan compile", "unroll compile", "scan KiB", "unroll KiB"
+    );
+    for &depth in depths {
+        let mut times = [0.0f64; 2];
+        let mut sizes = [0usize; 2];
+        for (i, kind) in ["scan", "unroll"].iter().enumerate() {
+            let name = format!("{kind}_L{depth}");
+            let path = &arts.bench[&name];
+            sizes[i] = std::fs::metadata(path).unwrap().len() as usize;
+            // measure via the bench harness (compile is the workload)
+            let mes = bench.measure(&format!("compile {name}"), || {
+                let (exe, _) = device.compile(path).unwrap();
+                exe.release();
+            });
+            times[i] = mes.median_s;
+        }
+        println!(
+            "{:<12} {:>14} {:>14} {:>12} {:>12}",
+            depth,
+            t5x::bench::human_time(times[0]),
+            t5x::bench::human_time(times[1]),
+            sizes[0] / 1024,
+            sizes[1] / 1024
+        );
+    }
+    println!("\n(scan compiles a single layer body; unroll recompiles every layer —");
+    println!(" the gap widens with depth, which is the Scalable T5 motivation)");
+    bench.write_jsonl("bench_results.jsonl").unwrap();
+    device.shutdown();
+}

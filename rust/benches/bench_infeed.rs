@@ -1,0 +1,84 @@
+//! E9: data-pipeline / infeed throughput — the §3.2 claim that
+//! index-modulo file sharding + exclusive sequential reads + prefetch
+//! "increase throughput and greatly reduce the chance of an input
+//! bottleneck".
+//!
+//! Rows: (a) naive single shared reader fanning examples to hosts,
+//! (b) per-host exclusive sharded readers, (c) sharded + threaded
+//! prefetch + batch assembly (the production path).
+
+use t5x::bench::Bench;
+use t5x::runtime::Artifacts;
+use t5x::seqio::dataset::Dataset;
+use t5x::seqio::deterministic::{strip_index, DeterministicPipeline};
+use t5x::seqio::feature_converters::{lengths, FeatureConverter, LmConverter};
+use t5x::trainer::recipes;
+
+fn main() {
+    let arts = Artifacts::load_default().expect("make artifacts first");
+    let m = arts.model("t5-nano-dec").unwrap();
+    let mut bench = Bench::new("infeed (E9)");
+    let docs = if bench.is_quick() { 200 } else { 2000 };
+    let hosts = 4;
+
+    let dir = std::env::temp_dir().join(format!("bench_infeed_{docs}"));
+    let task = recipes::lm_task("bench_infeed_lm", docs, m.seq_len(), 42);
+    let meta = recipes::ensure_cached(&task, &dir, 16, 0).unwrap();
+    let n = meta.num_examples;
+    let per_host = n / hosts;
+
+    // (a) naive: one global reader, examples dealt round-robin to hosts
+    bench.measure_with_throughput(
+        "naive shared reader -> 4 hosts",
+        Some((n as f64, "ex")),
+        || {
+            let p = DeterministicPipeline::open(&dir).unwrap();
+            let mut buckets: Vec<Vec<_>> = (0..hosts).map(|_| Vec::new()).collect();
+            for (i, ex) in p.global_stream().enumerate() {
+                buckets[i % hosts].push(ex);
+            }
+            std::hint::black_box(&buckets);
+        },
+    );
+
+    // (b) sharded: per-host exclusive file sets, sequential reads
+    bench.measure_with_throughput(
+        "sharded exclusive readers (4 threads)",
+        Some((n as f64, "ex")),
+        || {
+            let outs = t5x::collectives::run_ranks(hosts, |h| {
+                let p = DeterministicPipeline::open(&dir).unwrap();
+                p.host_stream(h, hosts, 0, false).collect_vec().len()
+            });
+            assert_eq!(outs.iter().sum::<usize>(), n);
+        },
+    );
+
+    // (c) production: sharded + prefetch + converter + batch assembly
+    let batch = m.batch();
+    let batches_per_host = per_host / batch;
+    bench.measure_with_throughput(
+        "sharded + prefetch + convert + assemble",
+        Some(((batches_per_host * batch * hosts) as f64, "ex")),
+        || {
+            let infeed = t5x::trainer::infeed::Infeed::spawn(m, hosts, 8, |host| {
+                let p = DeterministicPipeline::open(&dir).unwrap();
+                let tl = lengths(&[("targets", m.seq_len())]);
+                let ds: Dataset =
+                    p.host_stream(host, hosts, 0, false).map(strip_index);
+                LmConverter.convert(ds, &tl)
+            });
+            let counts = t5x::collectives::run_ranks(hosts, |h| {
+                let mut c = 0;
+                while let Some(b) = infeed.next(h) {
+                    std::hint::black_box(&b);
+                    c += 1;
+                }
+                c
+            });
+            assert!(counts.iter().sum::<usize>() >= batches_per_host * hosts - hosts);
+        },
+    );
+
+    bench.write_jsonl("bench_results.jsonl").unwrap();
+}

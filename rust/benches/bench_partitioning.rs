@@ -1,0 +1,89 @@
+//! E3: the §2.2 strategy matrix, measured — per-host optimizer-state
+//! memory, per-step communication bytes, and step time for 1D vs 2D
+//! parameter partitioning across data-parallel host counts, plus the
+//! analytic GSPMD cost table for the same points.
+
+use t5x::bench::Bench;
+use t5x::optim::{OptimizerKind, Schedule};
+use t5x::partitioning::cost::{estimate, LinkModel};
+use t5x::partitioning::{ActivationStrategy, Mesh, ParamStrategy};
+use t5x::runtime::{Artifacts, DeviceHandle};
+use t5x::trainer::{BatchSource, Trainer, TrainerConfig};
+
+fn main() {
+    let arts = Artifacts::load_default().expect("make artifacts first");
+    let device = DeviceHandle::spawn().unwrap();
+    let mut bench = Bench::new("partitioning strategies (E3)");
+    let model = "t5-nano-dec";
+    let m = arts.model(model).unwrap();
+    let steps: u64 = if bench.is_quick() { 2 } else { 5 };
+    let host_counts: &[usize] = if bench.is_quick() { &[2] } else { &[1, 2, 4] };
+
+    println!(
+        "model {model}: {} params | optimizer adam (2 floats/param)\n",
+        m.total_params()
+    );
+    println!(
+        "{:<10} {:<6} {:>16} {:>16} {:>14}",
+        "strategy", "hosts", "opt floats/host", "comm MiB/step", "tokens/s"
+    );
+    for &hosts in host_counts {
+        for strategy in [ParamStrategy::OneD, ParamStrategy::TwoD] {
+            let cfg = TrainerConfig {
+                model: model.into(),
+                num_hosts: hosts,
+                strategy,
+                optimizer: OptimizerKind::adam(),
+                schedule: Schedule::Constant(1e-3),
+                steps,
+                seed: 0,
+                log_every: 1000,
+                checkpoint_every: None,
+                checkpoint_dir: None,
+        grad_clip_norm: None,
+        weight_decay: None,
+            };
+            let trainer = Trainer::new(&arts, &device, cfg).unwrap();
+            let opt_floats = trainer.optimizer_state_floats(0);
+            let label = format!("{strategy:?} hosts={hosts}");
+            let tokens = (m.tokens_per_step() * hosts * steps as usize) as f64;
+            let mes = bench.measure_with_throughput(&label, Some((tokens, "tok")), || {
+                let s = trainer.train(&BatchSource::Synthetic { seed: 1 }).unwrap();
+                assert!(s.final_loss().is_finite());
+            });
+            let med = mes.median_s;
+            // one fresh run for comm accounting
+            let summary = trainer.train(&BatchSource::Synthetic { seed: 1 }).unwrap();
+            let comm_mib =
+                summary.comm_bytes as f64 / steps as f64 / (1 << 20) as f64;
+            println!(
+                "{:<10} {:<6} {:>16} {:>16.2} {:>14.0}",
+                format!("{strategy:?}"),
+                hosts,
+                opt_floats,
+                comm_mib,
+                tokens / med
+            );
+        }
+    }
+
+    // analytic table for the same model (extends to meshes we can't run)
+    println!("\nanalytic GSPMD cost model (same model):");
+    let meshes = [Mesh::new(1, 1), Mesh::new(2, 1), Mesh::new(4, 1), Mesh::new(16, 1)];
+    for mesh in meshes {
+        for strategy in [ParamStrategy::OneD, ParamStrategy::TwoD] {
+            let e = estimate(m, mesh, strategy, ActivationStrategy::OneD, LinkModel::default());
+            println!(
+                "  mesh {}x{} {:?}: params {:.2} MiB/host, optim {:.2} MiB/host, comm {:.2} MiB/step",
+                mesh.data,
+                mesh.model,
+                strategy,
+                e.param_bytes_per_host as f64 / (1 << 20) as f64,
+                e.optim_bytes_per_host as f64 / (1 << 20) as f64,
+                e.comm_bytes_per_host as f64 / (1 << 20) as f64
+            );
+        }
+    }
+    bench.write_jsonl("bench_results.jsonl").unwrap();
+    device.shutdown();
+}

@@ -1,0 +1,95 @@
+//! E16: end-to-end train-step throughput — tokens/sec across model sizes
+//! and host counts, 1D vs 2D, on the full Rust-coordinated path
+//! (infeed-synthetic -> PJRT fwd/bwd -> ring collectives -> optimizer).
+
+use t5x::bench::Bench;
+use t5x::optim::{OptimizerKind, Schedule};
+use t5x::partitioning::ParamStrategy;
+use t5x::runtime::{Artifacts, DeviceHandle};
+use t5x::trainer::{BatchSource, Trainer, TrainerConfig};
+
+fn main() {
+    let arts = Artifacts::load_default().expect("make artifacts first");
+    let device = DeviceHandle::spawn().unwrap();
+    let mut bench = Bench::new("train step (E16)");
+    let models: &[&str] = if bench.is_quick() {
+        &["t5-nano-dec"]
+    } else {
+        &["t5-nano-dec", "t5-micro-dec", "t5-small-dec"]
+    };
+    let steps: u64 = if bench.is_quick() { 2 } else { 4 };
+
+    for model in models {
+        let m = arts.model(model).unwrap();
+        for (hosts, strategy) in [
+            (1, ParamStrategy::OneD),
+            (2, ParamStrategy::OneD),
+            (2, ParamStrategy::TwoD),
+        ] {
+            let cfg = TrainerConfig {
+                model: model.to_string(),
+                num_hosts: hosts,
+                strategy,
+                optimizer: OptimizerKind::adam(),
+                schedule: Schedule::Constant(1e-4),
+                steps,
+                seed: 0,
+                log_every: 1000,
+                checkpoint_every: None,
+                checkpoint_dir: None,
+        grad_clip_norm: None,
+        weight_decay: None,
+            };
+            let trainer = Trainer::new(&arts, &device, cfg).unwrap();
+            let tokens = (m.tokens_per_step() * hosts * steps as usize) as f64;
+            bench.measure_with_throughput(
+                &format!("{model} hosts={hosts} {strategy:?} ({steps} steps)"),
+                Some((tokens, "tok")),
+                || {
+                    let s = trainer.train(&BatchSource::Synthetic { seed: 1 }).unwrap();
+                    assert!(s.final_loss().is_finite());
+                },
+            );
+            // §Perf: phase breakdown of the last run
+            let rows = trainer.timing.rows();
+            let total: f64 = rows.iter().map(|(_, s)| s).sum();
+            let pct: Vec<String> = rows
+                .iter()
+                .map(|(n, s)| format!("{n} {:.0}%", 100.0 * s / total.max(1e-9)))
+                .collect();
+            println!("      breakdown: {}", pct.join(", "));
+        }
+    }
+
+    // the 100M config: a few steps to prove the path + measure step time
+    if !bench.is_quick() {
+        let model = "t5-100m-dec";
+        let m = arts.model(model).unwrap();
+        let cfg = TrainerConfig {
+            model: model.into(),
+            num_hosts: 1,
+            strategy: ParamStrategy::OneD,
+            optimizer: OptimizerKind::adam(),
+            schedule: Schedule::Constant(1e-4),
+            steps: 1,
+            seed: 0,
+            log_every: 1000,
+            checkpoint_every: None,
+            checkpoint_dir: None,
+        grad_clip_norm: None,
+        weight_decay: None,
+        };
+        let trainer = Trainer::new(&arts, &device, cfg).unwrap();
+        let tokens = m.tokens_per_step() as f64;
+        bench.measure_with_throughput(
+            &format!("{model} hosts=1 OneD (1 step)"),
+            Some((tokens, "tok")),
+            || {
+                let s = trainer.train(&BatchSource::Synthetic { seed: 1 }).unwrap();
+                assert!(s.final_loss().is_finite());
+            },
+        );
+    }
+    bench.write_jsonl("bench_results.jsonl").unwrap();
+    device.shutdown();
+}

@@ -1,0 +1,228 @@
+//! Benchmark harness (criterion substitute — criterion is unavailable in
+//! the offline registry).
+//!
+//! Provides warmup, timed iterations, robust statistics (median/p95), and
+//! throughput units, printing both human tables and machine-readable JSONL
+//! so EXPERIMENTS.md can be regenerated. Used by every `rust/benches/*`
+//! target (`cargo bench`, harness = false).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Samples;
+
+/// Configuration for one measurement.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 200,
+            target_time: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    /// Optional throughput: (units-per-iteration, unit name).
+    pub throughput: Option<(f64, String)>,
+}
+
+impl Measurement {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.throughput.as_ref().map(|(n, _)| n / self.median_s)
+    }
+}
+
+/// A group of related measurements printed as one table.
+pub struct Bench {
+    pub group: String,
+    pub config: BenchConfig,
+    results: Vec<Measurement>,
+    quick: bool,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        // T5X_BENCH_QUICK=1 shrinks iteration counts (used by `cargo test`
+        // smoke-running the bench binaries).
+        let quick = std::env::var("T5X_BENCH_QUICK").is_ok();
+        let config = if quick {
+            BenchConfig {
+                warmup_iters: 1,
+                min_iters: 2,
+                max_iters: 5,
+                target_time: Duration::from_millis(100),
+            }
+        } else {
+            BenchConfig::default()
+        };
+        println!("\n== bench group: {group} ==");
+        Bench { group: group.to_string(), config, results: Vec::new(), quick }
+    }
+
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Time `f`, which performs ONE iteration of the workload.
+    pub fn measure<F: FnMut()>(&mut self, name: &str, f: F) -> &Measurement {
+        self.measure_with_throughput(name, None, f)
+    }
+
+    /// Time `f` and report `units` of work per iteration as throughput.
+    pub fn measure_with_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        throughput: Option<(f64, &str)>,
+        mut f: F,
+    ) -> &Measurement {
+        for _ in 0..self.config.warmup_iters {
+            f();
+        }
+        let mut samples = Samples::default();
+        let start = Instant::now();
+        let mut iters = 0;
+        while iters < self.config.min_iters
+            || (start.elapsed() < self.config.target_time
+                && iters < self.config.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean_s: samples.mean(),
+            median_s: samples.median(),
+            p95_s: samples.percentile(0.95),
+            min_s: samples.min(),
+            throughput: throughput.map(|(n, u)| (n, u.to_string())),
+        };
+        self.print_row(&m);
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    fn print_row(&self, m: &Measurement) {
+        let tput = match m.throughput_per_sec() {
+            Some(t) => format!(
+                "  {:>12}/s",
+                human_count(t, &m.throughput.as_ref().unwrap().1)
+            ),
+            None => String::new(),
+        };
+        println!(
+            "  {:<44} {:>12} med {:>12} p95 ({} iters){}",
+            m.name,
+            human_time(m.median_s),
+            human_time(m.p95_s),
+            m.iters,
+            tput
+        );
+    }
+
+    /// Emit JSONL (one line per measurement) for EXPERIMENTS.md tooling.
+    pub fn write_jsonl(&self, path: &str) -> anyhow::Result<()> {
+        use crate::util::json::Json;
+        let mut out = String::new();
+        for m in &self.results {
+            let mut obj = vec![
+                ("group", Json::str(self.group.clone())),
+                ("name", Json::str(m.name.clone())),
+                ("iters", Json::num(m.iters as f64)),
+                ("mean_s", Json::num(m.mean_s)),
+                ("median_s", Json::num(m.median_s)),
+                ("p95_s", Json::num(m.p95_s)),
+                ("min_s", Json::num(m.min_s)),
+            ];
+            if let Some(t) = m.throughput_per_sec() {
+                obj.push(("throughput_per_s", Json::num(t)));
+                obj.push((
+                    "throughput_unit",
+                    Json::str(m.throughput.as_ref().unwrap().1.clone()),
+                ));
+            }
+            out.push_str(&Json::obj(obj).to_string());
+            out.push('\n');
+        }
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        // Append so successive bench targets accumulate one log.
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        f.write_all(out.as_bytes())?;
+        Ok(())
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+pub fn human_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+pub fn human_count(n: f64, unit: &str) -> String {
+    if n >= 1e9 {
+        format!("{:.2} G{unit}", n / 1e9)
+    } else if n >= 1e6 {
+        format!("{:.2} M{unit}", n / 1e6)
+    } else if n >= 1e3 {
+        format!("{:.2} k{unit}", n / 1e3)
+    } else {
+        format!("{n:.1} {unit}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("T5X_BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest");
+        let m = b.measure("noop-ish", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.median_s >= 0.0);
+        assert!(m.iters >= 2);
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human_time(2e-9).contains("ns"));
+        assert!(human_time(2e-5).contains("µs"));
+        assert!(human_time(2e-2).contains("ms"));
+        assert!(human_time(2.0).contains(" s"));
+        assert!(human_count(5e6, "tok").contains("Mtok"));
+    }
+}

@@ -1,0 +1,284 @@
+//! `tstore`: the TensorStore substitute (S4) — a chunked on-disk array
+//! format supporting *sliced* reads and writes, so multiple hosts can
+//! write disjoint parameter shards concurrently and restore with a
+//! different topology (read-with-resharding), exactly the capability the
+//! paper's checkpointing library gets from TensorStore.
+//!
+//! Layout per array:
+//! ```text
+//! <root>/<name>/meta.json       {"shape": [...], "chunk_rows": R, "dtype": "f32"}
+//! <root>/<name>/chunk-<k>       rows [k*R, (k+1)*R): u32 crc | f32 LE data
+//! ```
+//! Chunking is along axis 0; sliced IO is row-aligned to chunks.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::runtime::HostTensor;
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+pub enum TStoreError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("array {0} not found")]
+    NotFound(String),
+    #[error("corrupt chunk {0}")]
+    Corrupt(PathBuf),
+    #[error("unaligned slice: start row {0} not a multiple of chunk rows {1}")]
+    Unaligned(usize, usize),
+    #[error("{0}")]
+    Other(String),
+}
+
+/// Array metadata.
+#[derive(Debug, Clone)]
+pub struct ArrayMeta {
+    pub shape: Vec<usize>,
+    pub chunk_rows: usize,
+}
+
+impl ArrayMeta {
+    pub fn rows(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape[0]
+        }
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.shape.iter().skip(1).product()
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.rows().div_ceil(self.chunk_rows)
+    }
+}
+
+fn meta_path(dir: &Path) -> PathBuf {
+    dir.join("meta.json")
+}
+
+fn chunk_path(dir: &Path, k: usize) -> PathBuf {
+    dir.join(format!("chunk-{k:05}"))
+}
+
+/// Create an array (writes metadata only; chunks may be written by any
+/// number of hosts afterwards).
+pub fn create_array(
+    root: &Path,
+    name: &str,
+    shape: &[usize],
+    chunk_rows: usize,
+) -> Result<ArrayMeta, TStoreError> {
+    let dir = root.join(name);
+    std::fs::create_dir_all(&dir)?;
+    let meta = ArrayMeta { shape: shape.to_vec(), chunk_rows: chunk_rows.max(1) };
+    let j = Json::obj(vec![
+        ("shape", Json::arr_usize(shape)),
+        ("chunk_rows", Json::num(meta.chunk_rows as f64)),
+        ("dtype", Json::str("f32")),
+    ]);
+    std::fs::write(meta_path(&dir), j.to_string())?;
+    Ok(meta)
+}
+
+pub fn open_array(root: &Path, name: &str) -> Result<ArrayMeta, TStoreError> {
+    let dir = root.join(name);
+    let j = Json::parse_file(meta_path(&dir))
+        .map_err(|_| TStoreError::NotFound(name.to_string()))?;
+    Ok(ArrayMeta {
+        shape: j
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default(),
+        chunk_rows: j.get("chunk_rows").and_then(|v| v.as_usize()).unwrap_or(1),
+    })
+}
+
+/// Write rows [start_row, start_row + data_rows) — start must be
+/// chunk-aligned; the last chunk may be partial. Safe to call from
+/// different hosts for disjoint chunk-aligned ranges concurrently.
+pub fn write_slice(
+    root: &Path,
+    name: &str,
+    meta: &ArrayMeta,
+    start_row: usize,
+    data: &[f32],
+) -> Result<(), TStoreError> {
+    if start_row % meta.chunk_rows != 0 {
+        return Err(TStoreError::Unaligned(start_row, meta.chunk_rows));
+    }
+    let dir = root.join(name);
+    let row_elems = meta.row_elems().max(1);
+    let data_rows = data.len() / row_elems;
+    let mut row = 0usize;
+    while row < data_rows {
+        let k = (start_row + row) / meta.chunk_rows;
+        let rows_here = meta.chunk_rows.min(data_rows - row);
+        let slice = &data[row * row_elems..(row + rows_here) * row_elems];
+        let bytes: Vec<u8> = slice.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let crc = crc32fast::hash(&bytes);
+        let mut f = std::fs::File::create(chunk_path(&dir, k))?;
+        f.write_all(&crc.to_le_bytes())?;
+        f.write_all(&bytes)?;
+        row += rows_here;
+    }
+    Ok(())
+}
+
+/// Convenience: write a full tensor with the given chunking.
+pub fn write_full(
+    root: &Path,
+    name: &str,
+    tensor: &HostTensor,
+    chunk_rows: usize,
+) -> Result<ArrayMeta, TStoreError> {
+    let meta = create_array(root, name, &tensor.shape, chunk_rows)?;
+    write_slice(root, name, &meta, 0, tensor.as_f32())?;
+    Ok(meta)
+}
+
+fn read_chunk(dir: &Path, k: usize) -> Result<Vec<f32>, TStoreError> {
+    let path = chunk_path(dir, k);
+    let mut f = std::fs::File::open(&path)
+        .map_err(|_| TStoreError::Corrupt(path.clone()))?;
+    let mut crc_buf = [0u8; 4];
+    f.read_exact(&mut crc_buf)?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    if crc32fast::hash(&bytes) != u32::from_le_bytes(crc_buf) {
+        return Err(TStoreError::Corrupt(path));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Read rows [start_row, start_row + count) — arbitrary alignment.
+pub fn read_slice(
+    root: &Path,
+    name: &str,
+    meta: &ArrayMeta,
+    start_row: usize,
+    count: usize,
+) -> Result<Vec<f32>, TStoreError> {
+    let dir = root.join(name);
+    let row_elems = meta.row_elems().max(1);
+    let mut out = Vec::with_capacity(count * row_elems);
+    let mut row = start_row;
+    let end = start_row + count;
+    while row < end {
+        let k = row / meta.chunk_rows;
+        let chunk = read_chunk(&dir, k)?;
+        let chunk_start = k * meta.chunk_rows;
+        let lo = (row - chunk_start) * row_elems;
+        let rows_here = (meta.chunk_rows - (row - chunk_start)).min(end - row);
+        let hi = lo + rows_here * row_elems;
+        out.extend_from_slice(&chunk[lo..hi]);
+        row += rows_here;
+    }
+    Ok(out)
+}
+
+/// Read the whole array (chunks in parallel).
+pub fn read_full(root: &Path, name: &str) -> Result<HostTensor, TStoreError> {
+    let meta = open_array(root, name)?;
+    let dir = root.join(name);
+    let chunks = crate::util::threads::parallel_map(meta.num_chunks(), 8, |k| {
+        read_chunk(&dir, k)
+    });
+    let mut data = Vec::with_capacity(meta.rows() * meta.row_elems().max(1));
+    for c in chunks {
+        data.extend_from_slice(&c?);
+    }
+    Ok(HostTensor::f32(meta.shape.clone(), data))
+}
+
+/// List array names under a root.
+pub fn list_arrays(root: &Path) -> Result<Vec<String>, TStoreError> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(root)? {
+        let p = entry?.path();
+        if p.is_dir() && meta_path(&p).exists() {
+            out.push(p.file_name().unwrap().to_string_lossy().into_owned());
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tstore_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let root = tmp("full");
+        let t = HostTensor::f32(vec![10, 4], (0..40).map(|i| i as f32).collect());
+        write_full(&root, "param/a", &t, 3).unwrap();
+        let back = read_full(&root, "param/a").unwrap();
+        assert_eq!(back, t);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn sliced_multi_writer_roundtrip() {
+        // two "hosts" write disjoint chunk-aligned row ranges
+        let root = tmp("sliced");
+        let meta = create_array(&root, "w", &[8, 3], 2).unwrap();
+        let full: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        write_slice(&root, "w", &meta, 0, &full[0..12]).unwrap(); // rows 0..4
+        write_slice(&root, "w", &meta, 4, &full[12..24]).unwrap(); // rows 4..8
+        let back = read_full(&root, "w").unwrap();
+        assert_eq!(back.as_f32(), full.as_slice());
+        // arbitrary slice read (resharding)
+        let rows_3_6 = read_slice(&root, "w", &meta, 3, 3).unwrap();
+        assert_eq!(rows_3_6, full[9..18].to_vec());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn unaligned_write_rejected() {
+        let root = tmp("unaligned");
+        let meta = create_array(&root, "w", &[8, 1], 4).unwrap();
+        assert!(matches!(
+            write_slice(&root, "w", &meta, 2, &[0.0; 2]),
+            Err(TStoreError::Unaligned(2, 4))
+        ));
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let root = tmp("corrupt");
+        let t = HostTensor::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        write_full(&root, "x", &t, 4).unwrap();
+        let cp = root.join("x").join("chunk-00000");
+        let mut bytes = std::fs::read(&cp).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x55;
+        std::fs::write(&cp, bytes).unwrap();
+        assert!(matches!(read_full(&root, "x"), Err(TStoreError::Corrupt(_))));
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn scalar_and_vector_arrays() {
+        let root = tmp("scalar");
+        let t = HostTensor::f32(vec![5], vec![1., 2., 3., 4., 5.]);
+        write_full(&root, "v", &t, 2).unwrap();
+        assert_eq!(read_full(&root, "v").unwrap(), t);
+        assert_eq!(list_arrays(&root).unwrap(), vec!["v"]);
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

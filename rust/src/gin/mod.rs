@@ -1,0 +1,457 @@
+//! Gin-style configuration / dependency-injection system (§2.1 of the
+//! paper: "we use Gin for this dependency injection").
+//!
+//! Supported syntax (a faithful subset of gin-config):
+//!
+//! ```text
+//! # comment
+//! include 'configs/base.gin'
+//! BATCH = 32                      # macro definition
+//! trainer.steps = 1000
+//! trainer.model = 't5-micro-dec'
+//! trainer.batch = %BATCH          # macro reference
+//! trainer.schedule = @rsqrt       # configurable reference
+//! rsqrt.warmup_steps = 100
+//! eval/trainer.steps = 5          # scoped binding overrides
+//! mixture.rates = [0.7, 0.3]
+//! task.opts = {'key': 1, 'other': true}
+//! ```
+//!
+//! Bindings are `function.argument = value`; the trainer, seqio pipeline
+//! and checkpointing code query their arguments through [`Config::get`],
+//! so users can retarget nearly everything without touching library code —
+//! the paper's configurability claim. CLI `--gin.x.y=v` overrides map to
+//! [`Config::apply_override`]. [`Config::operative`] dumps the
+//! operative config exactly like t5x logs it.
+
+mod parser;
+
+pub use parser::{parse_value, ParseError};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A gin value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    List(Vec<Value>),
+    Dict(Vec<(String, Value)>),
+    /// `@configurable` or `@scope/configurable` reference.
+    Reference(String),
+    /// `%MACRO` (unresolved only transiently during parsing).
+    Macro(String),
+    None,
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            Value::Reference(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    fn render(&self) -> String {
+        match self {
+            Value::Int(i) => i.to_string(),
+            Value::Float(f) => format!("{f:?}"),
+            Value::Bool(b) => (if *b { "True" } else { "False" }).into(),
+            Value::Str(s) => format!("'{s}'"),
+            Value::List(v) => format!(
+                "[{}]",
+                v.iter().map(|x| x.render()).collect::<Vec<_>>().join(", ")
+            ),
+            Value::Dict(kv) => format!(
+                "{{{}}}",
+                kv.iter()
+                    .map(|(k, v)| format!("'{k}': {}", v.render()))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+            Value::Reference(r) => format!("@{r}"),
+            Value::Macro(m) => format!("%{m}"),
+            Value::None => "None".into(),
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum GinError {
+    #[error("gin: {0}")]
+    Parse(String),
+    #[error("gin: unknown macro %{0}")]
+    UnknownMacro(String),
+    #[error("gin: missing required binding {0}.{1}")]
+    Missing(String, String),
+    #[error("gin: binding {0}.{1} has wrong type (expected {2})")]
+    WrongType(String, String, &'static str),
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Binding key: optional scope, configurable (function) name, argument name.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct Key {
+    scope: String, // empty = unscoped
+    func: String,
+    arg: String,
+}
+
+/// The parsed configuration: a set of (possibly scoped) bindings + macros.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    bindings: BTreeMap<Key, Value>,
+    macros: BTreeMap<String, Value>,
+    /// Keys that were actually queried — the "operative" subset.
+    #[allow(clippy::type_complexity)]
+    queried: std::sync::Arc<std::sync::Mutex<std::collections::BTreeSet<(String, String, String)>>>,
+}
+
+impl Config {
+    pub fn new() -> Config {
+        Config::default()
+    }
+
+    /// Parse a config string (no includes).
+    pub fn parse(text: &str) -> Result<Config, GinError> {
+        let mut cfg = Config::new();
+        cfg.ingest(text, None)?;
+        cfg.resolve_macros()?;
+        Ok(cfg)
+    }
+
+    /// Parse a file, resolving `include 'path'` relative to its directory.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config, GinError> {
+        let mut cfg = Config::new();
+        cfg.ingest_file(path.as_ref())?;
+        cfg.resolve_macros()?;
+        Ok(cfg)
+    }
+
+    fn ingest_file(&mut self, path: &Path) -> Result<(), GinError> {
+        let text = std::fs::read_to_string(path)?;
+        self.ingest(&text, path.parent())
+    }
+
+    fn ingest(&mut self, text: &str, dir: Option<&Path>) -> Result<(), GinError> {
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("include") {
+                let inc = rest.trim().trim_matches(|c| c == '\'' || c == '"');
+                let p: PathBuf = match dir {
+                    Some(d) => d.join(inc),
+                    None => PathBuf::from(inc),
+                };
+                self.ingest_file(&p)?;
+                continue;
+            }
+            let (lhs, rhs) = line.split_once('=').ok_or_else(|| {
+                GinError::Parse(format!("line {}: expected '='", lineno + 1))
+            })?;
+            let value = parse_value(rhs.trim())
+                .map_err(|e| GinError::Parse(format!("line {}: {e}", lineno + 1)))?;
+            self.bind(lhs.trim(), value)?;
+        }
+        Ok(())
+    }
+
+    /// Bind `scope/func.arg` (or `func.arg`, or `MACRO`) to a value.
+    pub fn bind(&mut self, lhs: &str, value: Value) -> Result<(), GinError> {
+        if !lhs.contains('.') {
+            // Macro definition: NAME = value
+            self.macros.insert(lhs.to_string(), value);
+            return Ok(());
+        }
+        let (scope, rest) = match lhs.rsplit_once('/') {
+            Some((s, r)) => (s.to_string(), r),
+            None => (String::new(), lhs),
+        };
+        let (func, arg) = rest
+            .rsplit_once('.')
+            .ok_or_else(|| GinError::Parse(format!("bad binding '{lhs}'")))?;
+        self.bindings.insert(
+            Key { scope, func: func.to_string(), arg: arg.to_string() },
+            value,
+        );
+        Ok(())
+    }
+
+    /// Apply a CLI override of the form `func.arg=value`.
+    pub fn apply_override(&mut self, binding: &str) -> Result<(), GinError> {
+        let (lhs, rhs) = binding
+            .split_once('=')
+            .ok_or_else(|| GinError::Parse(format!("bad override '{binding}'")))?;
+        let value =
+            parse_value(rhs.trim()).map_err(|e| GinError::Parse(e.to_string()))?;
+        self.bind(lhs.trim(), value)?;
+        self.resolve_macros()
+    }
+
+    fn resolve_macros(&mut self) -> Result<(), GinError> {
+        let macros = self.macros.clone();
+        for v in self.bindings.values_mut() {
+            resolve(v, &macros)?;
+        }
+        Ok(())
+    }
+
+    // ---- queries ---------------------------------------------------------
+
+    /// Scoped lookup: `scope/func.arg` falls back to `func.arg`.
+    pub fn get_scoped(&self, scope: &str, func: &str, arg: &str) -> Option<&Value> {
+        let hit = self
+            .bindings
+            .get(&Key { scope: scope.into(), func: func.into(), arg: arg.into() })
+            .or_else(|| {
+                self.bindings.get(&Key {
+                    scope: String::new(),
+                    func: func.into(),
+                    arg: arg.into(),
+                })
+            });
+        if hit.is_some() {
+            self.queried.lock().unwrap().insert((
+                scope.to_string(),
+                func.to_string(),
+                arg.to_string(),
+            ));
+        }
+        hit
+    }
+
+    pub fn get(&self, func: &str, arg: &str) -> Option<&Value> {
+        self.get_scoped("", func, arg)
+    }
+
+    pub fn usize_or(&self, func: &str, arg: &str, default: usize) -> usize {
+        self.get(func, arg).and_then(|v| v.as_i64()).map(|i| i as usize).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, func: &str, arg: &str, default: f64) -> f64 {
+        self.get(func, arg).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, func: &str, arg: &str, default: bool) -> bool {
+        self.get(func, arg).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, func: &str, arg: &str, default: &str) -> String {
+        self.get(func, arg)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn require_str(&self, func: &str, arg: &str) -> Result<String, GinError> {
+        self.get(func, arg)
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .ok_or_else(|| GinError::Missing(func.into(), arg.into()))
+    }
+
+    /// Full dump of all bindings in gin syntax (sorted, deterministic).
+    pub fn full_config(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.macros {
+            out.push_str(&format!("{name} = {}\n", v.render()));
+        }
+        for (k, v) in &self.bindings {
+            let scope = if k.scope.is_empty() {
+                String::new()
+            } else {
+                format!("{}/", k.scope)
+            };
+            out.push_str(&format!("{scope}{}.{} = {}\n", k.func, k.arg, v.render()));
+        }
+        out
+    }
+
+    /// The operative config: only bindings that were actually consumed —
+    /// t5x logs this at startup for reproducibility.
+    pub fn operative(&self) -> String {
+        let queried = self.queried.lock().unwrap();
+        let mut out = String::new();
+        for (scope, func, arg) in queried.iter() {
+            if let Some(v) = self
+                .bindings
+                .get(&Key { scope: scope.clone(), func: func.clone(), arg: arg.clone() })
+                .or_else(|| {
+                    self.bindings.get(&Key {
+                        scope: String::new(),
+                        func: func.clone(),
+                        arg: arg.clone(),
+                    })
+                })
+            {
+                let sc = if scope.is_empty() { String::new() } else { format!("{scope}/") };
+                out.push_str(&format!("{sc}{func}.{arg} = {}\n", v.render()));
+            }
+        }
+        out
+    }
+}
+
+fn resolve(v: &mut Value, macros: &BTreeMap<String, Value>) -> Result<(), GinError> {
+    match v {
+        Value::Macro(name) => {
+            let m = macros
+                .get(name)
+                .ok_or_else(|| GinError::UnknownMacro(name.clone()))?;
+            *v = m.clone();
+            Ok(())
+        }
+        Value::List(items) => {
+            for i in items {
+                resolve(i, macros)?;
+            }
+            Ok(())
+        }
+        Value::Dict(kv) => {
+            for (_, i) in kv {
+                resolve(i, macros)?;
+            }
+            Ok(())
+        }
+        _ => Ok(()),
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str: Option<char> = None;
+    for (i, c) in line.char_indices() {
+        match (c, in_str) {
+            ('#', None) => return &line[..i],
+            ('\'', None) | ('"', None) => in_str = Some(c),
+            (c2, Some(q)) if c2 == q => in_str = None,
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_query() {
+        let cfg = Config::parse(
+            "
+# top comment
+BATCH = 32
+trainer.steps = 1000   # trailing comment
+trainer.lr = 1e-3
+trainer.batch = %BATCH
+trainer.model = 't5-micro-dec'
+trainer.sched = @rsqrt
+trainer.use_pallas = True
+mixture.rates = [0.7, 0.3]
+eval/trainer.steps = 5
+",
+        )
+        .unwrap();
+        assert_eq!(cfg.usize_or("trainer", "steps", 0), 1000);
+        assert_eq!(cfg.usize_or("trainer", "batch", 0), 32);
+        assert!((cfg.f64_or("trainer", "lr", 0.0) - 1e-3).abs() < 1e-12);
+        assert_eq!(cfg.str_or("trainer", "model", ""), "t5-micro-dec");
+        assert_eq!(cfg.str_or("trainer", "sched", ""), "rsqrt");
+        assert!(cfg.bool_or("trainer", "use_pallas", false));
+        let rates = cfg.get("mixture", "rates").unwrap().as_list().unwrap();
+        assert_eq!(rates.len(), 2);
+        // Scoped lookup overrides; fallback to unscoped.
+        assert_eq!(
+            cfg.get_scoped("eval", "trainer", "steps").unwrap().as_i64(),
+            Some(5)
+        );
+        assert_eq!(
+            cfg.get_scoped("eval", "trainer", "lr").unwrap().as_f64(),
+            Some(1e-3)
+        );
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut cfg = Config::parse("trainer.steps = 10").unwrap();
+        cfg.apply_override("trainer.steps=99").unwrap();
+        assert_eq!(cfg.usize_or("trainer", "steps", 0), 99);
+    }
+
+    #[test]
+    fn unknown_macro_errors() {
+        assert!(matches!(
+            Config::parse("a.b = %NOPE"),
+            Err(GinError::UnknownMacro(_))
+        ));
+    }
+
+    #[test]
+    fn operative_only_contains_queried() {
+        let cfg = Config::parse("a.x = 1\na.y = 2").unwrap();
+        let _ = cfg.get("a", "x");
+        let op = cfg.operative();
+        assert!(op.contains("a.x = 1"));
+        assert!(!op.contains("a.y"));
+        let full = cfg.full_config();
+        assert!(full.contains("a.y = 2"));
+    }
+
+    #[test]
+    fn includes_resolve_relative() {
+        let dir = std::env::temp_dir().join(format!("gin_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("base.gin"), "t.a = 1\nt.b = 2\n").unwrap();
+        std::fs::write(dir.join("main.gin"), "include 'base.gin'\nt.b = 3\n").unwrap();
+        let cfg = Config::from_file(dir.join("main.gin")).unwrap();
+        assert_eq!(cfg.usize_or("t", "a", 0), 1);
+        assert_eq!(cfg.usize_or("t", "b", 0), 3); // later binding wins
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dicts_and_none() {
+        let cfg = Config::parse("t.d = {'k': 1, 'b': False}\nt.n = None").unwrap();
+        match cfg.get("t", "d").unwrap() {
+            Value::Dict(kv) => assert_eq!(kv.len(), 2),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(cfg.get("t", "n"), Some(&Value::None));
+    }
+}

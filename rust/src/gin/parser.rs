@@ -1,0 +1,247 @@
+//! Recursive-descent parser for gin values (python-literal flavored).
+
+use super::Value;
+
+#[derive(Debug, thiserror::Error)]
+#[error("value parse error at byte {pos}: {msg}")]
+pub struct ParseError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+pub fn parse_value(text: &str) -> Result<Value, ParseError> {
+    let mut p = P { b: text.as_bytes(), pos: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.pos != p.b.len() {
+        return Err(p.err("trailing characters"));
+    }
+    Ok(v)
+}
+
+struct P<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> P<'a> {
+    fn err(&self, msg: &str) -> ParseError {
+        ParseError { pos: self.pos, msg: msg.into() }
+    }
+
+    fn ws(&mut self) {
+        while self.pos < self.b.len() && self.b[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn value(&mut self) -> Result<Value, ParseError> {
+        match self.peek() {
+            Some(b'\'') | Some(b'"') => self.string(),
+            Some(b'[') => self.list(),
+            Some(b'(') => self.list(), // tuples parse as lists
+            Some(b'{') => self.dict(),
+            Some(b'@') => {
+                self.pos += 1;
+                Ok(Value::Reference(self.ident_path()?))
+            }
+            Some(b'%') => {
+                self.pos += 1;
+                Ok(Value::Macro(self.ident_path()?))
+            }
+            Some(c) if c == b'-' || c == b'+' || c.is_ascii_digit() => self.number(),
+            Some(_) => self.keyword(),
+            None => Err(self.err("empty value")),
+        }
+    }
+
+    fn keyword(&mut self) -> Result<Value, ParseError> {
+        let id = self.ident_path()?;
+        match id.as_str() {
+            "True" | "true" => Ok(Value::Bool(true)),
+            "False" | "false" => Ok(Value::Bool(false)),
+            "None" | "none" => Ok(Value::None),
+            // Bare identifiers are treated as strings (t5x config convenience).
+            _ => Ok(Value::Str(id)),
+        }
+    }
+
+    fn ident_path(&mut self) -> Result<String, ParseError> {
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_alphanumeric() || matches!(c, b'_' | b'.' | b'/' | b'-'))
+        {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(self.err("expected identifier"));
+        }
+        Ok(std::str::from_utf8(&self.b[start..self.pos]).unwrap().to_string())
+    }
+
+    fn number(&mut self) -> Result<Value, ParseError> {
+        let start = self.pos;
+        if matches!(self.peek(), Some(b'-') | Some(b'+')) {
+            self.pos += 1;
+        }
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' | b'_' => self.pos += 1,
+                b'.' | b'e' | b'E' => {
+                    is_float = true;
+                    self.pos += 1;
+                    if matches!(self.peek(), Some(b'-') | Some(b'+')) {
+                        self.pos += 1;
+                    }
+                }
+                _ => break,
+            }
+        }
+        let s: String = std::str::from_utf8(&self.b[start..self.pos])
+            .unwrap()
+            .replace('_', "");
+        if is_float {
+            s.parse::<f64>().map(Value::Float).map_err(|_| self.err("bad float"))
+        } else {
+            s.parse::<i64>().map(Value::Int).map_err(|_| self.err("bad int"))
+        }
+    }
+
+    fn string(&mut self) -> Result<Value, ParseError> {
+        let quote = self.b[self.pos];
+        self.pos += 1;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(c) if c == quote => {
+                    self.pos += 1;
+                    return Ok(Value::Str(out));
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(c) => out.push(c as char),
+                        None => return Err(self.err("bad escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    let rest = std::str::from_utf8(&self.b[self.pos..])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn list(&mut self) -> Result<Value, ParseError> {
+        let close = if self.b[self.pos] == b'[' { b']' } else { b')' };
+        self.pos += 1;
+        let mut items = Vec::new();
+        loop {
+            self.ws();
+            if self.peek() == Some(close) {
+                self.pos += 1;
+                return Ok(Value::List(items));
+            }
+            items.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(c) if c == close => {}
+                _ => return Err(self.err("expected ',' or close bracket")),
+            }
+        }
+    }
+
+    fn dict(&mut self) -> Result<Value, ParseError> {
+        self.pos += 1;
+        let mut kv = Vec::new();
+        loop {
+            self.ws();
+            if self.peek() == Some(b'}') {
+                self.pos += 1;
+                return Ok(Value::Dict(kv));
+            }
+            let key = match self.value()? {
+                Value::Str(s) => s,
+                other => format!("{other:?}"),
+            };
+            self.ws();
+            if self.peek() != Some(b':') {
+                return Err(self.err("expected ':'"));
+            }
+            self.pos += 1;
+            self.ws();
+            let val = self.value()?;
+            kv.push((key, val));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {}
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numbers() {
+        assert_eq!(parse_value("42").unwrap(), Value::Int(42));
+        assert_eq!(parse_value("-3").unwrap(), Value::Int(-3));
+        assert_eq!(parse_value("1e-3").unwrap(), Value::Float(1e-3));
+        assert_eq!(parse_value("2.5").unwrap(), Value::Float(2.5));
+        assert_eq!(parse_value("1_000").unwrap(), Value::Int(1000));
+    }
+
+    #[test]
+    fn strings_refs_macros() {
+        assert_eq!(parse_value("'abc'").unwrap(), Value::Str("abc".into()));
+        assert_eq!(
+            parse_value("@scope/fn").unwrap(),
+            Value::Reference("scope/fn".into())
+        );
+        assert_eq!(parse_value("%BATCH").unwrap(), Value::Macro("BATCH".into()));
+    }
+
+    #[test]
+    fn nested_structures() {
+        let v = parse_value("[1, [2, 3], {'a': True}, None]").unwrap();
+        match v {
+            Value::List(items) => {
+                assert_eq!(items.len(), 4);
+                assert_eq!(items[3], Value::None);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn tuples_as_lists() {
+        assert_eq!(
+            parse_value("(1, 2)").unwrap(),
+            Value::List(vec![Value::Int(1), Value::Int(2)])
+        );
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_value("[1,").is_err());
+        assert!(parse_value("'unterminated").is_err());
+        assert!(parse_value("1 2").is_err());
+    }
+}

@@ -1,0 +1,347 @@
+//! t5x launcher: the CLI entrypoint (the t5x `train.py` / `eval.py` /
+//! `infer.py` scripts, unified). Fully configurable via gin files +
+//! `--gin.binding=value` overrides (paper §2.1).
+//!
+//! ```bash
+//! t5x cache  --task lm --docs 1000 --out /tmp/cache --shards 16
+//! t5x train  --model t5-micro-dec --steps 100 --hosts 2 --strategy 2d \
+//!            [--cache /tmp/cache] [--config run.gin] [--gin.trainer.lr=1e-3]
+//! t5x eval   --model t5-micro-dec [--ckpt DIR]
+//! t5x infer  --model t5-nano-dec --prompt "5 9 11" --len 8
+//! t5x inspect-ckpt --dir DIR
+//! t5x cost-table --model t5-100m-dec
+//! ```
+
+use std::path::PathBuf;
+
+use t5x::gin::Config;
+use t5x::optim::{OptimizerKind, Schedule};
+use t5x::partitioning::{cost, Mesh, ParamStrategy};
+use t5x::runtime::{Artifacts, DeviceHandle};
+use t5x::trainer::recipes;
+use t5x::trainer::{BatchSource, Trainer, TrainerConfig};
+use t5x::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::new(),
+    };
+    for ov in &args.gin_overrides {
+        cfg.apply_override(ov)?;
+    }
+    Ok(cfg)
+}
+
+/// Resolve trainer settings: CLI flag > gin binding > default.
+fn trainer_config(args: &Args, gin: &Config) -> anyhow::Result<TrainerConfig> {
+    let model = args
+        .get("model")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| gin.str_or("trainer", "model", "t5-nano-dec"));
+    let steps = match args.get("steps") {
+        Some(_) => args.get_usize("steps", 0)? as u64,
+        None => gin.usize_or("trainer", "steps", 50) as u64,
+    };
+    let hosts = match args.get("hosts") {
+        Some(_) => args.get_usize("hosts", 1)?,
+        None => gin.usize_or("trainer", "num_hosts", 1),
+    };
+    let strategy = match args
+        .get("strategy")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| gin.str_or("trainer", "strategy", "1d"))
+        .as_str()
+    {
+        "2d" | "zero3" | "fsdp" => ParamStrategy::TwoD,
+        _ => ParamStrategy::OneD,
+    };
+    let optimizer = OptimizerKind::from_name(
+        &args
+            .get("optimizer")
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| gin.str_or("trainer", "optimizer", "adam")),
+    )?;
+    let peak = match args.get("lr") {
+        Some(_) => args.get_f64("lr", 2e-3)?,
+        None => gin.f64_or("trainer", "lr", 2e-3),
+    };
+    let warmup = gin.usize_or("trainer", "warmup_steps", 20) as u64;
+    Ok(TrainerConfig {
+        model,
+        num_hosts: hosts,
+        strategy,
+        optimizer,
+        schedule: Schedule::RsqrtWithWarmup { peak, warmup },
+        steps,
+        seed: gin.usize_or("trainer", "seed", 0) as u64,
+        log_every: gin.usize_or("trainer", "log_every", 10) as u64,
+        checkpoint_every: args
+            .get("ckpt-every")
+            .and_then(|v| v.parse().ok())
+            .or_else(|| {
+                gin.get("trainer", "checkpoint_every")
+                    .and_then(|v| v.as_i64())
+                    .map(|v| v as u64)
+            }),
+        checkpoint_dir: args.get("ckpt").map(PathBuf::from),
+        grad_clip_norm: args
+            .get("clip")
+            .and_then(|v| v.parse().ok())
+            .or_else(|| gin.get("trainer", "grad_clip_norm").and_then(|v| v.as_f64())),
+        weight_decay: args
+            .get("weight-decay")
+            .and_then(|v| v.parse().ok())
+            .or_else(|| gin.get("trainer", "weight_decay").and_then(|v| v.as_f64())),
+    })
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let gin = load_config(&args)?;
+    match args.subcommand.as_deref() {
+        Some("cache") => cmd_cache(&args),
+        Some("train") => cmd_train(&args, &gin),
+        Some("eval") => cmd_eval(&args, &gin),
+        Some("infer") => cmd_infer(&args),
+        Some("inspect-ckpt") => cmd_inspect(&args),
+        Some("cost-table") => cmd_cost_table(&args),
+        Some("bench-report") => cmd_bench_report(&args),
+        Some("list-models") => cmd_list_models(),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand '{o}'\n");
+            }
+            println!(
+                "usage: t5x <cache|train|eval|infer|inspect-ckpt|cost-table|bench-report|list-models> [flags]"
+            );
+            println!("  see rust/src/main.rs docs for per-command flags");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_list_models() -> anyhow::Result<()> {
+    let arts = Artifacts::load_default()?;
+    println!("{:<18} {:>10} {:>8} {:>8} arch", "model", "params", "batch", "seq");
+    for (name, m) in &arts.models {
+        println!(
+            "{name:<18} {:>10} {:>8} {:>8} {}",
+            m.total_params(),
+            m.batch(),
+            m.seq_len(),
+            m.arch
+        );
+    }
+    Ok(())
+}
+
+fn cmd_cache(args: &Args) -> anyhow::Result<()> {
+    let docs = args.get_usize("docs", 1000)?;
+    let shards = args.get_usize("shards", 16)?;
+    let seq = args.get_usize("seq", 64)?;
+    let out = PathBuf::from(args.get_or("out", "/tmp/t5x_cache"));
+    let kind = args.get_or("task", "lm");
+    let task = match kind.as_str() {
+        "span" => recipes::span_corruption_task("cli_span", docs, seq, 42),
+        _ => recipes::lm_task("cli_lm", docs, seq, 42),
+    };
+    let meta = recipes::ensure_cached(&task, &out, shards, 0)?;
+    println!(
+        "cached task '{}': {} examples in {} shards at {}",
+        meta.task,
+        meta.num_examples,
+        meta.num_shards,
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args, gin: &Config) -> anyhow::Result<()> {
+    let cfg = trainer_config(args, gin)?;
+    let arts = Artifacts::load_default()?;
+    let device = DeviceHandle::spawn()?;
+    let m = arts.model(&cfg.model)?;
+    println!(
+        "training {} ({:.2}M params) for {} steps on {} hosts ({:?})",
+        cfg.model,
+        m.total_params() as f64 / 1e6,
+        cfg.steps,
+        cfg.num_hosts,
+        cfg.strategy
+    );
+    let logger = t5x::metrics::MetricsLogger::new()
+        .with_terminal()
+        .with_jsonl(args.get_or("log", "train_log.jsonl"));
+    let mut trainer = Trainer::new(&arts, &device, cfg.clone())?.with_logger(logger);
+    if args.has_flag("resume") {
+        if let Some(dir) = &cfg.checkpoint_dir {
+            let step = trainer.restore_latest(dir)?;
+            println!("resumed from checkpoint at step {step}");
+        }
+    }
+    let source = match args.get("cache") {
+        Some(dir) => BatchSource::Infeed(recipes::cached_infeed(
+            m,
+            std::path::Path::new(dir),
+            cfg.num_hosts,
+            trainer.start_step,
+        )),
+        None => BatchSource::Synthetic { seed: 7 },
+    };
+    let summary = trainer.train(&source)?;
+    println!(
+        "done: loss {:.4} -> {:.4}, {:.1}s, comm {:.1} MiB",
+        summary.first_loss(),
+        summary.final_loss(),
+        summary.wall_seconds,
+        summary.comm_bytes as f64 / (1 << 20) as f64
+    );
+    // dump the operative gin config (the t5x reproducibility artifact)
+    let op = gin.operative();
+    if !op.is_empty() {
+        println!("-- operative gin config --\n{op}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args, gin: &Config) -> anyhow::Result<()> {
+    let cfg = trainer_config(args, gin)?;
+    let arts = Artifacts::load_default()?;
+    let device = DeviceHandle::spawn()?;
+    let m = arts.model(&cfg.model)?;
+    let runner = t5x::trainer::eval::EvalRunner::new(&arts, &device, &cfg.model)?;
+    let params = match args.get("ckpt") {
+        Some(dir) => {
+            let mgr = t5x::checkpoint::CheckpointManager::new(dir);
+            let step = mgr.latest().ok_or_else(|| anyhow::anyhow!("no checkpoint"))?;
+            println!("evaluating checkpoint step {step}");
+            mgr.restore(step)?.0
+        }
+        None => t5x::model::init_params(m, 0),
+    };
+    let eval_task = recipes::lm_task("cli_eval", 200, m.seq_len(), 123);
+    let batches = recipes::eval_batches(m, &eval_task, 5, args.get_usize("batches", 8)?);
+    let metrics = runner.evaluate(&params, batches.into_iter())?;
+    println!(
+        "eval {}: loss {:.4}, token accuracy {:.2}%, {} batches",
+        cfg.model,
+        metrics.loss,
+        metrics.accuracy * 100.0,
+        metrics.num_batches
+    );
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "t5-nano-dec");
+    let arts = Artifacts::load_default()?;
+    let device = DeviceHandle::spawn()?;
+    let m = arts.model(&model)?;
+    anyhow::ensure!(m.arch == "decoder", "infer supports decoder-only models");
+    let runner = t5x::trainer::eval::EvalRunner::new(&arts, &device, &model)?;
+    let params = match args.get("ckpt") {
+        Some(dir) => {
+            let mgr = t5x::checkpoint::CheckpointManager::new(dir);
+            let step = mgr.latest().ok_or_else(|| anyhow::anyhow!("no checkpoint"))?;
+            mgr.restore(step)?.0
+        }
+        None => t5x::model::init_params(m, 0),
+    };
+    let prompt: Vec<i32> = args
+        .get_or("prompt", "5 9 11")
+        .split_whitespace()
+        .filter_map(|t| t.parse().ok())
+        .collect();
+    let len = args.get_usize("len", 8)?;
+    let prompts = vec![prompt; m.batch()];
+    let outs = runner.greedy_decode(&params, None, &prompts, len, 1)?;
+    println!("prompt ids: {:?}", prompts[0]);
+    println!("generated ids: {:?}", outs[0]);
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get("dir").ok_or_else(|| anyhow::anyhow!("--dir required"))?;
+    let mgr = t5x::checkpoint::CheckpointManager::new(dir);
+    let steps = mgr.steps();
+    println!("checkpoints: {steps:?}");
+    if let Some(&latest) = steps.last() {
+        let (params, extra) = mgr.restore(latest)?;
+        println!("step {latest}: {} params", params.len());
+        let mut total = 0usize;
+        for (name, t) in &params {
+            println!("  {:<44} {:?}  |x|={:.4}", name, t.shape, t.norm());
+            total += t.elements();
+        }
+        println!("total params: {total}");
+        println!("optimizer state vectors: {}", extra.len());
+    }
+    Ok(())
+}
+
+/// Render bench_results.jsonl (written by `cargo bench`) as the markdown
+/// tables embedded in EXPERIMENTS.md.
+fn cmd_bench_report(args: &Args) -> anyhow::Result<()> {
+    use t5x::util::json::Json;
+    let path = args.get_or("file", "bench_results.jsonl");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e} (run `cargo bench` first)"))?;
+    let mut groups: std::collections::BTreeMap<String, Vec<Json>> = Default::default();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)?;
+        let group = v.get("group").and_then(|g| g.as_str()).unwrap_or("?").to_string();
+        groups.entry(group).or_default().push(v);
+    }
+    for (group, rows) in groups {
+        println!("### {group}\n");
+        println!("| case | median | p95 | throughput |");
+        println!("|---|---|---|---|");
+        for r in rows {
+            let med = r.get("median_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let p95 = r.get("p95_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let tput = match (
+                r.get("throughput_per_s").and_then(|v| v.as_f64()),
+                r.get("throughput_unit").and_then(|v| v.as_str()),
+            ) {
+                (Some(t), Some(u)) => format!("{}/s", t5x::bench::human_count(t, u)),
+                _ => "-".to_string(),
+            };
+            println!(
+                "| {} | {} | {} | {} |",
+                r.get("name").and_then(|v| v.as_str()).unwrap_or("?"),
+                t5x::bench::human_time(med),
+                t5x::bench::human_time(p95),
+                tput
+            );
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_cost_table(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "t5-100m-dec");
+    let arts = Artifacts::load_default()?;
+    let m = arts.model(&model)?;
+    let meshes = [
+        Mesh::new(1, 1),
+        Mesh::new(4, 1),
+        Mesh::new(16, 1),
+        Mesh::new(64, 1),
+        Mesh::new(4, 4),
+        Mesh::new(1, 8),
+    ];
+    println!("{}", cost::strategy_table(m, &meshes, cost::LinkModel::default()));
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! CLU-style metrics library: counters, gauges, and periodic writers.
+//!
+//! The trainer emits [`MetricPoint`]s (step-stamped scalar values) through a
+//! [`MetricsLogger`]; writers render them to the terminal and/or a JSONL
+//! file (`train_log.jsonl`) which EXPERIMENTS.md plots are generated from.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// One scalar observation at a training step.
+#[derive(Debug, Clone)]
+pub struct MetricPoint {
+    pub step: u64,
+    pub name: String,
+    pub value: f64,
+}
+
+/// Destination for metric points.
+pub trait MetricWriter: Send {
+    fn write(&mut self, points: &[MetricPoint]);
+    fn flush(&mut self) {}
+}
+
+/// Writes `step metric=value ...` lines to stdout.
+pub struct TerminalWriter {
+    start: Instant,
+}
+
+impl TerminalWriter {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+}
+
+impl Default for TerminalWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricWriter for TerminalWriter {
+    fn write(&mut self, points: &[MetricPoint]) {
+        if points.is_empty() {
+            return;
+        }
+        let step = points[0].step;
+        let body: Vec<String> = points
+            .iter()
+            .map(|p| format!("{}={:.6}", p.name, p.value))
+            .collect();
+        println!(
+            "[{:>8.1}s] step {:>6}  {}",
+            self.start.elapsed().as_secs_f64(),
+            step,
+            body.join("  ")
+        );
+    }
+}
+
+/// Appends one JSON object per step to a file.
+pub struct JsonlWriter {
+    path: PathBuf,
+    buf: String,
+}
+
+impl JsonlWriter {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into(), buf: String::new() }
+    }
+}
+
+impl MetricWriter for JsonlWriter {
+    fn write(&mut self, points: &[MetricPoint]) {
+        if points.is_empty() {
+            return;
+        }
+        let mut pairs = vec![("step", Json::num(points[0].step as f64))];
+        for p in points {
+            pairs.push((p.name.as_str(), Json::num(p.value)));
+        }
+        self.buf.push_str(&Json::obj(pairs).to_string());
+        self.buf.push('\n');
+        if self.buf.len() > 16 * 1024 {
+            self.flush();
+        }
+    }
+
+    fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        if let Some(dir) = self.path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        if let Ok(mut f) =
+            std::fs::OpenOptions::new().create(true).append(true).open(&self.path)
+        {
+            let _ = f.write_all(self.buf.as_bytes());
+        }
+        self.buf.clear();
+    }
+}
+
+impl Drop for JsonlWriter {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// Fan-out logger; thread-safe, shared by trainer + hooks.
+pub struct MetricsLogger {
+    writers: Mutex<Vec<Box<dyn MetricWriter>>>,
+}
+
+impl MetricsLogger {
+    pub fn new() -> Self {
+        Self { writers: Mutex::new(Vec::new()) }
+    }
+
+    pub fn with_terminal(self) -> Self {
+        self.add(Box::new(TerminalWriter::new()))
+    }
+
+    pub fn with_jsonl(self, path: impl Into<PathBuf>) -> Self {
+        self.add(Box::new(JsonlWriter::new(path)))
+    }
+
+    pub fn add(self, w: Box<dyn MetricWriter>) -> Self {
+        self.writers.lock().unwrap().push(w);
+        self
+    }
+
+    pub fn log(&self, step: u64, values: &[(&str, f64)]) {
+        let points: Vec<MetricPoint> = values
+            .iter()
+            .map(|(n, v)| MetricPoint { step, name: n.to_string(), value: *v })
+            .collect();
+        for w in self.writers.lock().unwrap().iter_mut() {
+            w.write(&points);
+        }
+    }
+
+    pub fn flush(&self) {
+        for w in self.writers.lock().unwrap().iter_mut() {
+            w.flush();
+        }
+    }
+}
+
+impl Default for MetricsLogger {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_writer_appends_parseable_lines() {
+        let path = std::env::temp_dir().join(format!("metrics_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let logger = MetricsLogger::new().with_jsonl(&path);
+            logger.log(1, &[("loss", 3.5), ("lr", 0.001)]);
+            logger.log(2, &[("loss", 3.2)]);
+            logger.flush();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v = Json::parse(lines[0]).unwrap();
+        assert_eq!(v.get("step").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(v.get("loss").unwrap().as_f64().unwrap(), 3.5);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,110 @@
+//! Golden cross-checks: the deterministic batch + expected loss/grad norms
+//! exported by `aot.py` (`artifacts/golden.json`). The Rust runtime must
+//! reproduce the JAX numbers bit-for-bit-ish (f32 tolerance) — the
+//! strongest end-to-end signal that HLO loading, input ordering and
+//! parameter construction are all correct.
+
+use crate::runtime::artifacts::ModelManifest;
+use crate::runtime::HostTensor;
+use crate::util::json::Json;
+
+/// The deterministic golden batch (mirrors `aot.golden_batch`).
+pub fn golden_batch(m: &ModelManifest) -> Vec<HostTensor> {
+    let b = m.batch();
+    let l = m.seq_len();
+    let v = m.vocab();
+    let tgt: Vec<i32> = (0..b * l)
+        .map(|idx| {
+            let (i, j) = (idx / l, idx % l);
+            ((i * 7919 + j * 104_729 + 13) % (v - 2) + 2) as i32
+        })
+        .collect();
+    let mut dec_in = vec![0i32; b * l];
+    for i in 0..b {
+        for j in 1..l {
+            dec_in[i * l + j] = tgt[i * l + j - 1];
+        }
+    }
+    let mut weights = vec![1.0f32; b * l];
+    for j in (l - 4)..l {
+        weights[j] = 0.0; // row 0, last 4 positions
+    }
+    let mut out = Vec::new();
+    if m.arch == "encdec" {
+        let enc: Vec<i32> = (0..b * l)
+            .map(|idx| {
+                let (i, j) = (idx / l, idx % l);
+                ((i * 6101 + j * 3571 + 29) % (v - 2) + 2) as i32
+            })
+            .collect();
+        out.push(HostTensor::i32(vec![b, l], enc));
+    }
+    out.push(HostTensor::i32(vec![b, l], dec_in));
+    out.push(HostTensor::i32(vec![b, l], tgt));
+    out.push(HostTensor::f32(vec![b, l], weights));
+    out
+}
+
+/// Expected values parsed from golden.json.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub loss_sum: f64,
+    pub weight_sum: f64,
+    pub correct_sum: f64,
+    pub grad_norms: Vec<(String, f64)>,
+}
+
+pub fn load_golden(dir: &std::path::Path, model: &str) -> anyhow::Result<Golden> {
+    let j = Json::parse_file(dir.join("golden.json"))?;
+    let g = j
+        .get(model)
+        .ok_or_else(|| anyhow::anyhow!("no golden entry for {model}"))?;
+    let grad_norms = g
+        .get("grad_norms")
+        .and_then(|v| v.as_obj())
+        .map(|m| {
+            m.iter()
+                .map(|(k, v)| (k.clone(), v.as_f64().unwrap_or(0.0)))
+                .collect()
+        })
+        .unwrap_or_default();
+    Ok(Golden {
+        loss_sum: g.get("loss_sum").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        weight_sum: g.get("weight_sum").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        correct_sum: g.get("correct_sum").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        grad_norms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Artifacts;
+
+    #[test]
+    fn golden_batch_shape_and_mask() {
+        let arts = Artifacts::load_default().unwrap();
+        let m = arts.model("t5-nano-dec").unwrap();
+        let batch = golden_batch(m);
+        assert_eq!(batch.len(), 3);
+        let w = batch[2].as_f32();
+        let l = m.seq_len();
+        assert_eq!(w.iter().filter(|&&x| x == 0.0).count(), 4);
+        assert_eq!(w[l - 1], 0.0);
+        assert_eq!(w[l], 1.0); // row 1 all ones
+        // shift property: dec_in[i, j] == tgt[i, j-1]
+        let dec_in = batch[0].as_i32();
+        let tgt = batch[1].as_i32();
+        assert_eq!(dec_in[1], tgt[0]);
+        assert_eq!(dec_in[0], 0);
+    }
+
+    #[test]
+    fn golden_json_parses() {
+        let arts = Artifacts::load_default().unwrap();
+        let g = load_golden(&arts.dir, "t5-nano-dec").unwrap();
+        assert!(g.loss_sum > 100.0);
+        assert_eq!(g.weight_sum, 252.0);
+        assert!(!g.grad_norms.is_empty());
+    }
+}

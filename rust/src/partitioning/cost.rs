@@ -1,0 +1,245 @@
+//! Analytic GSPMD cost model (E3): per-host memory and per-step collective
+//! traffic for the paper's §2.2 strategy matrix — 1D/2D parameter
+//! partitioning × 1D/2D activation partitioning — on an N = data × model
+//! mesh. This regenerates the trade-off table the paper describes in prose,
+//! and its communication terms are validated against the *measured* byte
+//! counters of [`crate::collectives`] by `bench_partitioning`.
+
+use super::{ActivationStrategy, Mesh, ParamStrategy};
+use crate::runtime::ModelManifest;
+
+/// Memory + communication estimate for one (strategy, mesh) point.
+#[derive(Debug, Clone)]
+pub struct CostEstimate {
+    pub mesh: Mesh,
+    pub params: ParamStrategy,
+    pub activations: ActivationStrategy,
+    /// Per-host bytes of parameters.
+    pub param_bytes_per_host: u64,
+    /// Per-host bytes of optimizer state (Adam: 2 moments, f32).
+    pub optim_bytes_per_host: u64,
+    /// Per-host peak activation bytes for one microbatch.
+    pub activation_bytes_per_host: u64,
+    /// Per-step collective bytes *sent per host* for gradient sync +
+    /// (2D) parameter gather.
+    pub comm_bytes_per_host: u64,
+    /// Estimated per-step communication seconds on the link model.
+    pub comm_seconds: f64,
+}
+
+/// Simple α-β link model per host (latency + inverse bandwidth).
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Per-collective latency, seconds.
+    pub alpha: f64,
+    /// Seconds per byte (1 / bandwidth).
+    pub beta: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        // ~100 GB/s ICI-class link, 10 µs latency.
+        Self { alpha: 10e-6, beta: 1.0 / 100e9 }
+    }
+}
+
+/// Ring collective bytes sent per participant for payload `n` bytes.
+pub fn ring_all_reduce_bytes(n: u64, ranks: u64) -> u64 {
+    if ranks <= 1 {
+        0
+    } else {
+        2 * n * (ranks - 1) / ranks
+    }
+}
+
+pub fn ring_all_gather_bytes(full: u64, ranks: u64) -> u64 {
+    if ranks <= 1 {
+        0
+    } else {
+        full * (ranks - 1) / ranks
+    }
+}
+
+pub fn ring_reduce_scatter_bytes(n: u64, ranks: u64) -> u64 {
+    if ranks <= 1 {
+        0
+    } else {
+        n * (ranks - 1) / ranks
+    }
+}
+
+/// Estimate costs for one model/strategy/mesh point.
+///
+/// Model-axis sharding divides parameter storage by `model` (for the
+/// shardable fraction; norm scales and small tables stay replicated — we
+/// approximate with the exact shardable bytes from the manifest specs).
+pub fn estimate(
+    m: &ModelManifest,
+    mesh: Mesh,
+    params: ParamStrategy,
+    activations: ActivationStrategy,
+    link: LinkModel,
+) -> CostEstimate {
+    let partitioner = super::Partitioner::new(mesh, params);
+    // Exact per-host parameter bytes from the per-param specs.
+    let mut param_bytes: u64 = 0;
+    for p in &m.params {
+        let spec = partitioner.spec_for(p);
+        let shard_elems: usize = spec.shard_shape(&p.shape).iter().product();
+        param_bytes += shard_elems as u64 * 4;
+    }
+    // Optimizer state (Adam: m + v) lives at the parameter sharding under
+    // 2D (ZeRO), but is *replicated per data-parallel rank* under 1D.
+    let optim_bytes = 2 * param_bytes;
+
+    // Activation estimate for one layer stack pass (batch B, seq L, d_model
+    // D, heads H, ff F): the dominant residual stream + attention + mlp
+    // activations, bf16-ish but we count f32 as executed here.
+    let b = m.cfg_usize("batch") as u64;
+    let l = m.cfg_usize("seq_len") as u64;
+    let d = m.cfg_usize("d_model") as u64;
+    let f = m.cfg_usize("d_ff") as u64;
+    let layers = m.cfg_usize("num_layers") as u64;
+    let per_layer = b * l * (2 * d + 2 * f) * 4; // resid + qkv-ish + mlp hidden
+    let mut act_bytes = per_layer * layers;
+    // model-parallel activations: hidden/heads dims divide by `model`;
+    // embed-axis activations divide only under 2D activation sharding.
+    if mesh.model > 1 {
+        let sharded_fraction = match activations {
+            ActivationStrategy::OneD => {
+                // hidden (f) shards; embed-axis (d) activations replicated
+                (2 * f / mesh.model as u64 + 2 * d) as f64 / (2 * f + 2 * d) as f64
+            }
+            ActivationStrategy::TwoD => 1.0 / mesh.model as f64,
+        };
+        act_bytes = (act_bytes as f64 * sharded_fraction) as u64;
+    }
+    // data parallel batch split
+    act_bytes /= mesh.data.max(1) as u64;
+
+    // Communication per step (per host):
+    // grads have the size of the host's param shard * model-axis... grads
+    // are produced at the 1D sharding (each host computes grads for the
+    // params it holds along the model axis) and must be summed over the
+    // data axis.
+    let grad_bytes = param_bytes;
+    let comm = match params {
+        ParamStrategy::OneD => {
+            // all-reduce grads over the data axis
+            ring_all_reduce_bytes(grad_bytes, mesh.data as u64)
+        }
+        ParamStrategy::TwoD => {
+            // reduce-scatter grads + all-gather updated params over data axis
+            // (grad/param "full" size along the data axis is data * shard)
+            let full = grad_bytes * mesh.data as u64;
+            ring_reduce_scatter_bytes(full, mesh.data as u64)
+                + ring_all_gather_bytes(full, mesh.data as u64)
+        }
+    };
+    // model-parallel activation all-reduces: 2 per layer (attn + mlp outs),
+    // payload = residual stream per microbatch.
+    let mp_comm = if mesh.model > 1 {
+        2 * layers * ring_all_reduce_bytes(b * l * d * 4 / mesh.data as u64, mesh.model as u64)
+    } else {
+        0
+    };
+    let comm_total = comm + mp_comm;
+    let n_collectives = match params {
+        ParamStrategy::OneD => 1,
+        ParamStrategy::TwoD => 2,
+    } + if mesh.model > 1 { 2 * layers } else { 0 };
+    let comm_seconds = n_collectives as f64 * link.alpha + comm_total as f64 * link.beta;
+
+    CostEstimate {
+        mesh,
+        params,
+        activations,
+        param_bytes_per_host: param_bytes,
+        optim_bytes_per_host: optim_bytes,
+        activation_bytes_per_host: act_bytes,
+        comm_bytes_per_host: comm_total,
+        comm_seconds,
+    }
+}
+
+/// Render the full strategy matrix as a markdown table (the E3 artifact).
+pub fn strategy_table(m: &ModelManifest, meshes: &[Mesh], link: LinkModel) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "| mesh (DxM) | params | acts | param MiB/host | optim MiB/host | act MiB/host | comm MiB/step/host | comm ms |\n|---|---|---|---|---|---|---|---|\n"
+    ));
+    for &mesh in meshes {
+        for params in [ParamStrategy::OneD, ParamStrategy::TwoD] {
+            for acts in [ActivationStrategy::OneD, ActivationStrategy::TwoD] {
+                let e = estimate(m, mesh, params, acts, link);
+                out.push_str(&format!(
+                    "| {}x{} | {:?} | {:?} | {:.2} | {:.2} | {:.2} | {:.2} | {:.3} |\n",
+                    mesh.data,
+                    mesh.model,
+                    params,
+                    acts,
+                    e.param_bytes_per_host as f64 / (1 << 20) as f64,
+                    e.optim_bytes_per_host as f64 / (1 << 20) as f64,
+                    e.activation_bytes_per_host as f64 / (1 << 20) as f64,
+                    e.comm_bytes_per_host as f64 / (1 << 20) as f64,
+                    e.comm_seconds * 1e3,
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Artifacts;
+
+    #[test]
+    fn zero3_divides_param_memory() {
+        let arts = Artifacts::load_default().unwrap();
+        let m = arts.model("t5-micro-dec").unwrap();
+        let link = LinkModel::default();
+        let base = estimate(m, Mesh::new(1, 1), ParamStrategy::OneD, ActivationStrategy::OneD, link);
+        let dp4_1d = estimate(m, Mesh::new(4, 1), ParamStrategy::OneD, ActivationStrategy::OneD, link);
+        let dp4_2d = estimate(m, Mesh::new(4, 1), ParamStrategy::TwoD, ActivationStrategy::OneD, link);
+        // 1D data parallelism replicates params...
+        assert_eq!(dp4_1d.param_bytes_per_host, base.param_bytes_per_host);
+        // ...ZeRO-3 shards them ~4x (up to indivisible residue)
+        assert!(
+            (dp4_2d.param_bytes_per_host as f64)
+                < 0.3 * base.param_bytes_per_host as f64,
+            "2D {} vs base {}",
+            dp4_2d.param_bytes_per_host,
+            base.param_bytes_per_host
+        );
+        // ZeRO trades memory for ~1.5x gradient-sync traffic (RS+AG vs AR
+        // at equal full size: (1+1)(n-1)/n vs 2(n-1)/n -> equal, but full
+        // here is data*shard so 2D sends no more than ~= 1D; just sanity
+        // check both are positive.
+        assert!(dp4_1d.comm_bytes_per_host > 0);
+        assert!(dp4_2d.comm_bytes_per_host > 0);
+    }
+
+    #[test]
+    fn model_parallel_reduces_act_memory_2d_more_than_1d() {
+        let arts = Artifacts::load_default().unwrap();
+        let m = arts.model("t5-micro-dec").unwrap();
+        let link = LinkModel::default();
+        let a1 = estimate(m, Mesh::new(1, 4), ParamStrategy::OneD, ActivationStrategy::OneD, link);
+        let a2 = estimate(m, Mesh::new(1, 4), ParamStrategy::OneD, ActivationStrategy::TwoD, link);
+        assert!(a2.activation_bytes_per_host < a1.activation_bytes_per_host);
+        // model parallelism costs per-layer all-reduces
+        assert!(a1.comm_bytes_per_host > 0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let arts = Artifacts::load_default().unwrap();
+        let m = arts.model("t5-micro-dec").unwrap();
+        let t = strategy_table(m, &[Mesh::new(1, 1), Mesh::new(4, 1)], LinkModel::default());
+        assert!(t.lines().count() >= 10);
+        assert!(t.contains("OneD"));
+        assert!(t.contains("TwoD"));
+    }
+}

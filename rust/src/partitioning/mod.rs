@@ -1,0 +1,327 @@
+//! Partitioning (paper §2.2, S2): the t5x high-level API over GSPMD-style
+//! sharding, reimplemented explicitly for the simulated host mesh.
+//!
+//! * [`Mesh`] — the 2-D device decomposition N = data × model.
+//! * [`LogicalAxisRules`] — map *logical* axis names (the
+//!   `param_with_axes` annotations carried in the artifact manifest) to
+//!   mesh axes, exactly like `t5x.partitioning.standard_logical_axis_rules`.
+//! * [`Partitioner`] — computes a [`PartitionSpec`] per parameter, slices /
+//!   reassembles host shards of [`HostTensor`]s, and implements the
+//!   paper's strategy matrix (1D vs 2D parameter partitioning).
+//! * [`cost`] — the analytic GSPMD memory/communication model that
+//!   regenerates the §2.2 trade-off discussion as a table (E3).
+
+pub mod cost;
+
+
+use crate::runtime::artifacts::ParamSpec;
+use crate::runtime::HostTensor;
+
+/// Hardware mesh axes (t5x: "data" and "model").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MeshAxis {
+    Data,
+    Model,
+}
+
+/// The device mesh: `data * model` simulated hosts. Host h has coordinates
+/// (h / model, h % model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mesh {
+    pub data: usize,
+    pub model: usize,
+}
+
+impl Mesh {
+    pub fn new(data: usize, model: usize) -> Mesh {
+        assert!(data >= 1 && model >= 1);
+        Mesh { data, model }
+    }
+
+    pub fn num_hosts(&self) -> usize {
+        self.data * self.model
+    }
+
+    pub fn coords(&self, host: usize) -> (usize, usize) {
+        (host / self.model, host % self.model)
+    }
+
+    pub fn axis_size(&self, axis: MeshAxis) -> usize {
+        match axis {
+            MeshAxis::Data => self.data,
+            MeshAxis::Model => self.model,
+        }
+    }
+}
+
+/// Parameter-partitioning strategy (paper §2.2):
+/// * `OneD` — parameters sharded over the *model* axis only; replicated
+///   over the data axis ("1D parameter partitioning", Megatron-style).
+/// * `TwoD` — additionally sharded over the *data* axis (ZeRO-3 / fully
+///   sharded data parallelism: "2D parameter partitioning").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamStrategy {
+    OneD,
+    TwoD,
+}
+
+/// Activation-partitioning strategy (cost model only — activations live
+/// inside XLA on this testbed): 1D = replicate activations with an
+/// embed/model axis over the model axis; 2D = shard them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActivationStrategy {
+    OneD,
+    TwoD,
+}
+
+/// Per-dimension sharding of one tensor: `Some((axis, shards))` or None
+/// (replicated dim).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionSpec {
+    pub dims: Vec<Option<(MeshAxis, usize)>>,
+}
+
+impl PartitionSpec {
+    pub fn replicated(rank: usize) -> Self {
+        Self { dims: vec![None; rank] }
+    }
+
+    /// Number of distinct shards this spec produces.
+    pub fn num_shards(&self) -> usize {
+        self.dims.iter().flatten().map(|(_, s)| s).product()
+    }
+
+    /// Shape of one shard of a tensor with `shape`.
+    pub fn shard_shape(&self, shape: &[usize]) -> Vec<usize> {
+        shape
+            .iter()
+            .zip(&self.dims)
+            .map(|(&d, s)| match s {
+                Some((_, n)) => d / n,
+                None => d,
+            })
+            .collect()
+    }
+}
+
+/// Logical-axis-name -> mesh-axis rules, in priority order. A rule applies
+/// to a dimension if the axis name matches and the mesh axis size divides
+/// the dimension (t5x semantics).
+#[derive(Debug, Clone)]
+pub struct LogicalAxisRules {
+    pub rules: Vec<(String, MeshAxis)>,
+}
+
+impl LogicalAxisRules {
+    /// The t5x standard rules: vocab/heads/mlp/joined_kv shard over the
+    /// model axis; batch over data; embed & norms replicated.
+    pub fn standard() -> Self {
+        Self {
+            rules: vec![
+                ("vocab".into(), MeshAxis::Model),
+                ("heads".into(), MeshAxis::Model),
+                ("mlp".into(), MeshAxis::Model),
+                ("joined_kv".into(), MeshAxis::Model),
+                ("batch".into(), MeshAxis::Data),
+            ],
+        }
+    }
+
+    pub fn mesh_axis_for(&self, logical: &str) -> Option<MeshAxis> {
+        self.rules
+            .iter()
+            .find(|(name, _)| name == logical)
+            .map(|(_, a)| *a)
+    }
+}
+
+/// The t5x partitioner: logical axes + mesh + strategy -> concrete specs
+/// and shard/unshard operations.
+pub struct Partitioner {
+    pub mesh: Mesh,
+    pub rules: LogicalAxisRules,
+    pub strategy: ParamStrategy,
+}
+
+impl Partitioner {
+    pub fn new(mesh: Mesh, strategy: ParamStrategy) -> Self {
+        Self { mesh, rules: LogicalAxisRules::standard(), strategy }
+    }
+
+    /// Compute the axis-wise partition spec for a parameter.
+    ///
+    /// 1D: the first dimension whose logical axis maps to Model (and is
+    /// divisible) is sharded `model`-ways.
+    /// 2D: additionally, the first *other* dimension divisible by `data`
+    /// is sharded `data`-ways (ZeRO-3's second array axis, following
+    /// Xu et al.'s 2D scheme).
+    pub fn spec_for(&self, param: &ParamSpec) -> PartitionSpec {
+        let mut dims: Vec<Option<(MeshAxis, usize)>> = vec![None; param.shape.len()];
+        // model-axis sharding
+        if self.mesh.model > 1 {
+            for (i, axis_name) in param.logical_axes.iter().enumerate() {
+                if self.rules.mesh_axis_for(axis_name) == Some(MeshAxis::Model)
+                    && param.shape[i] % self.mesh.model == 0
+                {
+                    dims[i] = Some((MeshAxis::Model, self.mesh.model));
+                    break;
+                }
+            }
+        }
+        // data-axis sharding (2D only)
+        if self.strategy == ParamStrategy::TwoD && self.mesh.data > 1 {
+            for i in 0..param.shape.len() {
+                if dims[i].is_none() && param.shape[i] % self.mesh.data == 0 {
+                    dims[i] = Some((MeshAxis::Data, self.mesh.data));
+                    break;
+                }
+            }
+        }
+        PartitionSpec { dims }
+    }
+
+    /// Extract host `h`'s shard of a full tensor under `spec`.
+    pub fn shard(&self, full: &HostTensor, spec: &PartitionSpec, host: usize) -> HostTensor {
+        let (d, m) = self.mesh.coords(host);
+        let mut out = full.clone();
+        // Slice axis-by-axis (order doesn't matter for disjoint axes).
+        for (axis_idx, dim_spec) in spec.dims.iter().enumerate() {
+            if let Some((mesh_axis, shards)) = dim_spec {
+                let coord = match mesh_axis {
+                    MeshAxis::Data => d,
+                    MeshAxis::Model => m,
+                };
+                let size = out.shape[axis_idx] / shards;
+                out = out.slice_axis(axis_idx, coord * size, size);
+            }
+        }
+        out
+    }
+
+    /// Reassemble the full tensor from all hosts' shards (inverse of
+    /// [`Partitioner::shard`]). `shards[h]` is host h's piece. Replicated
+    /// tensors return host 0's copy.
+    pub fn unshard(&self, shards: &[HostTensor], spec: &PartitionSpec) -> HostTensor {
+        assert_eq!(shards.len(), self.mesh.num_hosts());
+        let mut current: Vec<HostTensor> = shards.to_vec();
+        let mut group = self.mesh.num_hosts();
+        // Fold mesh axes back in reverse declaration order: model is the
+        // fastest-varying host coordinate, so merge model first.
+        for (mesh_axis, axis_size) in [(MeshAxis::Model, self.mesh.model), (MeshAxis::Data, self.mesh.data)] {
+            if axis_size == 1 {
+                continue;
+            }
+            let dim_idx = spec
+                .dims
+                .iter()
+                .position(|d| matches!(d, Some((a, _)) if *a == mesh_axis));
+            group /= axis_size;
+            let mut next: Vec<HostTensor> = Vec::with_capacity(group);
+            for g in 0..group {
+                let members: Vec<HostTensor> = (0..axis_size)
+                    .map(|k| current[g * axis_size + k].clone())
+                    .collect();
+                next.push(match dim_idx {
+                    Some(di) => HostTensor::concat_axis(&members, di),
+                    None => members[0].clone(), // replicated over this axis
+                });
+            }
+            current = next;
+        }
+        assert_eq!(current.len(), 1);
+        current.remove(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pspec(name: &str, shape: Vec<usize>, axes: Vec<&str>) -> ParamSpec {
+        ParamSpec {
+            name: name.into(),
+            shape,
+            logical_axes: axes.into_iter().map(|s| s.to_string()).collect(),
+            init: "const:0".into(),
+        }
+    }
+
+    #[test]
+    fn mesh_coords() {
+        let mesh = Mesh::new(2, 4);
+        assert_eq!(mesh.num_hosts(), 8);
+        assert_eq!(mesh.coords(0), (0, 0));
+        assert_eq!(mesh.coords(5), (1, 1));
+        assert_eq!(mesh.coords(7), (1, 3));
+    }
+
+    #[test]
+    fn spec_1d_shards_model_axis_only() {
+        let p = Partitioner::new(Mesh::new(2, 2), ParamStrategy::OneD);
+        let wq = pspec("wq", vec![64, 64], vec!["embed", "joined_kv"]);
+        let spec = p.spec_for(&wq);
+        assert_eq!(spec.dims[0], None);
+        assert_eq!(spec.dims[1], Some((MeshAxis::Model, 2)));
+        assert_eq!(spec.shard_shape(&wq.shape), vec![64, 32]);
+        // norm scale: replicated
+        let norm = pspec("scale", vec![64], vec!["embed"]);
+        assert_eq!(p.spec_for(&norm), PartitionSpec::replicated(1));
+    }
+
+    #[test]
+    fn spec_2d_adds_data_axis() {
+        let p = Partitioner::new(Mesh::new(2, 2), ParamStrategy::TwoD);
+        let wq = pspec("wq", vec![64, 64], vec!["embed", "joined_kv"]);
+        let spec = p.spec_for(&wq);
+        assert_eq!(spec.dims[1], Some((MeshAxis::Model, 2)));
+        assert_eq!(spec.dims[0], Some((MeshAxis::Data, 2)));
+        assert_eq!(spec.shard_shape(&wq.shape), vec![32, 32]);
+        // 2D with pure data parallelism (model=1): ZeRO shards first axis
+        let pdp = Partitioner::new(Mesh::new(4, 1), ParamStrategy::TwoD);
+        let spec2 = pdp.spec_for(&wq);
+        assert_eq!(spec2.dims[0], Some((MeshAxis::Data, 4)));
+        assert_eq!(spec2.dims[1], None);
+    }
+
+    #[test]
+    fn shard_unshard_roundtrip() {
+        for (mesh, strategy) in [
+            (Mesh::new(1, 2), ParamStrategy::OneD),
+            (Mesh::new(2, 2), ParamStrategy::OneD),
+            (Mesh::new(2, 2), ParamStrategy::TwoD),
+            (Mesh::new(4, 1), ParamStrategy::TwoD),
+        ] {
+            let p = Partitioner::new(mesh, strategy);
+            let param = pspec("w", vec![8, 12], vec!["embed", "mlp"]);
+            let full = HostTensor::f32(
+                vec![8, 12],
+                (0..96).map(|i| i as f32).collect(),
+            );
+            let spec = p.spec_for(&param);
+            let shards: Vec<HostTensor> = (0..mesh.num_hosts())
+                .map(|h| p.shard(&full, &spec, h))
+                .collect();
+            let back = p.unshard(&shards, &spec);
+            assert_eq!(back, full, "mesh={mesh:?} strategy={strategy:?}");
+        }
+    }
+
+    #[test]
+    fn indivisible_dims_stay_replicated() {
+        let p = Partitioner::new(Mesh::new(1, 4), ParamStrategy::OneD);
+        // relpos bias: heads=6 not divisible by 4 -> replicated
+        let param = pspec("relpos", vec![32, 6], vec!["relpos_buckets", "heads"]);
+        assert_eq!(p.spec_for(&param), PartitionSpec::replicated(2));
+    }
+
+    #[test]
+    fn shard_shapes_consistent_across_hosts() {
+        let p = Partitioner::new(Mesh::new(2, 2), ParamStrategy::TwoD);
+        let param = pspec("w", vec![16, 8], vec!["embed", "joined_kv"]);
+        let spec = p.spec_for(&param);
+        let full = HostTensor::zeros(vec![16, 8]);
+        for h in 0..4 {
+            assert_eq!(p.shard(&full, &spec, h).shape, spec.shard_shape(&param.shape));
+        }
+    }
+}

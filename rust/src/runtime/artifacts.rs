@@ -1,0 +1,279 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (L2/L1)
+//! and the Rust coordinator. Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One model parameter: name, shape, logical axes (t5x `param_with_axes`),
+/// and an init spec ("normal:<stddev>" or "const:<value>").
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub logical_axes: Vec<String>,
+    pub init: String,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One batch feature expected by the entrypoints.
+#[derive(Debug, Clone)]
+pub struct FeatureSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub is_int: bool,
+}
+
+/// One exported HLO computation.
+#[derive(Debug, Clone)]
+pub struct Entrypoint {
+    pub hlo: PathBuf,
+    pub outputs: Vec<String>,
+}
+
+/// Everything the coordinator knows about one exported model.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub arch: String,
+    pub config: BTreeMap<String, f64>,
+    pub params: Vec<ParamSpec>,
+    pub batch_features: Vec<FeatureSpec>,
+    pub entrypoints: BTreeMap<String, Entrypoint>,
+}
+
+impl ModelManifest {
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.elements()).sum()
+    }
+
+    pub fn param(&self, name: &str) -> Option<&ParamSpec> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    pub fn entrypoint(&self, name: &str) -> anyhow::Result<&Entrypoint> {
+        self.entrypoints
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model {} has no entrypoint {name}", self.name))
+    }
+
+    pub fn cfg_usize(&self, key: &str) -> usize {
+        *self.config.get(key).unwrap_or(&0.0) as usize
+    }
+
+    /// Per-host batch size baked into the HLO.
+    pub fn batch(&self) -> usize {
+        self.cfg_usize("batch")
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.cfg_usize("seq_len")
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.cfg_usize("vocab")
+    }
+
+    /// Tokens contributing to a train step on one host.
+    pub fn tokens_per_step(&self) -> usize {
+        self.batch() * self.seq_len()
+    }
+}
+
+/// The parsed manifest + artifact directory.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+    /// Compile-bench HLOs (scan vs unroll), name -> path.
+    pub bench: BTreeMap<String, PathBuf>,
+    /// Partitioning-demo HLOs + dims.
+    pub partdemo: Option<PartDemo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PartDemo {
+    pub m: usize,
+    pub k: usize,
+    pub f: usize,
+    pub hlos: BTreeMap<String, PathBuf>,
+}
+
+impl Artifacts {
+    /// Default location: `$T5X_ARTIFACTS` or `artifacts/` under the cwd /
+    /// the cargo manifest dir (so tests work from any directory).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("T5X_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        let cwd = PathBuf::from("artifacts");
+        if cwd.join("manifest.json").exists() {
+            return cwd;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn load_default() -> anyhow::Result<Artifacts> {
+        Self::load(Self::default_dir())
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Artifacts> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Json::parse_file(dir.join("manifest.json"))?;
+        let mut models = BTreeMap::new();
+        if let Some(Json::Obj(m)) = manifest.get("models") {
+            for (name, jm) in m {
+                models.insert(name.clone(), parse_model(name, jm, &dir)?);
+            }
+        }
+        let mut bench = BTreeMap::new();
+        if let Some(Json::Obj(b)) = manifest.get("bench") {
+            for (name, path) in b {
+                if let Some(p) = path.as_str() {
+                    bench.insert(name.clone(), dir.join(p));
+                }
+            }
+        }
+        let partdemo = manifest.get("partdemo").map(|pd| {
+            let mut hlos = BTreeMap::new();
+            if let Some(Json::Obj(h)) = pd.get("hlos") {
+                for (name, path) in h {
+                    if let Some(p) = path.as_str() {
+                        hlos.insert(name.clone(), dir.join(p));
+                    }
+                }
+            }
+            PartDemo {
+                m: pd.get("m").and_then(|v| v.as_usize()).unwrap_or(0),
+                k: pd.get("k").and_then(|v| v.as_usize()).unwrap_or(0),
+                f: pd.get("f").and_then(|v| v.as_usize()).unwrap_or(0),
+                hlos,
+            }
+        });
+        Ok(Artifacts { dir, models, bench, partdemo })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model '{name}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+}
+
+fn parse_model(name: &str, j: &Json, dir: &Path) -> anyhow::Result<ModelManifest> {
+    let arch = j.get("arch").and_then(|v| v.as_str()).unwrap_or("decoder").to_string();
+    let mut config = BTreeMap::new();
+    if let Some(Json::Obj(c)) = j.get("config") {
+        for (k, v) in c {
+            if let Some(n) = v.as_f64() {
+                config.insert(k.clone(), n);
+            }
+        }
+    }
+    let mut params = Vec::new();
+    for p in j.get("params").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        params.push(ParamSpec {
+            name: p.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            shape: p
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+            logical_axes: p
+                .get("logical_axes")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            init: p.get("init").and_then(|v| v.as_str()).unwrap_or("const:0").to_string(),
+        });
+    }
+    let mut batch_features = Vec::new();
+    for f in j.get("batch_features").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        batch_features.push(FeatureSpec {
+            name: f.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            shape: f
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+            is_int: f.get("dtype").and_then(|v| v.as_str()) == Some("i32"),
+        });
+    }
+    let mut entrypoints = BTreeMap::new();
+    if let Some(Json::Obj(eps)) = j.get("entrypoints") {
+        for (ep_name, ep) in eps {
+            entrypoints.insert(
+                ep_name.clone(),
+                Entrypoint {
+                    hlo: dir.join(ep.get("hlo").and_then(|v| v.as_str()).unwrap_or("")),
+                    outputs: ep
+                        .get("outputs")
+                        .and_then(|v| v.as_arr())
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                },
+            );
+        }
+    }
+    Ok(ModelManifest { name: name.to_string(), arch, config, params, batch_features, entrypoints })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest() {
+        let a = Artifacts::load_default().expect("run `make artifacts` first");
+        let m = a.model("t5-nano-dec").unwrap();
+        assert_eq!(m.arch, "decoder");
+        assert!(m.total_params() > 100_000);
+        assert!(m.entrypoint("train_step").is_ok());
+        assert!(m.entrypoint("eval_step").is_ok());
+        assert!(m.entrypoint("decode_logits").is_ok());
+        // params sorted by name, embed present with vocab axis
+        let emb = m.param("token_embed").unwrap();
+        assert_eq!(emb.logical_axes, vec!["vocab", "embed"]);
+        assert_eq!(emb.shape, vec![m.vocab(), 64]);
+        // train outputs: 3 scalars + one grad per param
+        let ep = m.entrypoint("train_step").unwrap();
+        assert_eq!(ep.outputs.len(), 3 + m.params.len());
+        assert!(ep.hlo.exists());
+        // bench + partdemo artifacts present
+        assert!(a.bench.contains_key("scan_L4"));
+        assert!(a.partdemo.as_ref().unwrap().hlos.contains_key("ffn_full"));
+    }
+
+    #[test]
+    fn encdec_manifest_features() {
+        let a = Artifacts::load_default().unwrap();
+        let m = a.model("t5-nano-encdec").unwrap();
+        let names: Vec<&str> = m.batch_features.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "encoder_input_tokens",
+                "decoder_input_tokens",
+                "decoder_target_tokens",
+                "decoder_loss_weights"
+            ]
+        );
+        assert!(m.batch_features[0].is_int);
+        assert!(!m.batch_features[3].is_int);
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime (the t5x execution substrate, S1 in DESIGN.md).
+//!
+//! * [`artifacts`] — parse `artifacts/manifest.json`, the L2→L3 contract.
+//! * [`tensor`] — [`tensor::HostTensor`], the host-side ndarray currency.
+//! * [`service`] — the device-service thread wrapping `xla::PjRtClient`
+//!   (HLO text → compile → execute), with cloneable, thread-safe handles.
+
+pub mod artifacts;
+pub mod service;
+pub mod tensor;
+
+pub use artifacts::{Artifacts, ModelManifest, ParamSpec};
+pub use service::{DeviceHandle, Executable};
+pub use tensor::{HostTensor, TensorData};

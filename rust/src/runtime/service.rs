@@ -1,0 +1,205 @@
+//! Device service: a dedicated thread that owns the PJRT client and all
+//! compiled executables, serving execute requests over channels.
+//!
+//! Rationale: the `xla` crate's `PjRtClient` is `Rc`-based (neither `Send`
+//! nor `Sync`), so all PJRT calls must stay on one OS thread. Simulated
+//! hosts (trainer worker threads, collectives) talk to the device through
+//! cloneable [`DeviceHandle`]s. Executions therefore serialize on the
+//! device thread — which mirrors reality on this testbed: all simulated
+//! hosts share one physical CPU, and XLA already multi-threads each
+//! execution internally. Coordination (sharding, collectives, optimizer
+//! updates) runs fully parallel on the host threads.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::tensor::HostTensor;
+
+enum Request {
+    /// Compile HLO text from a file; reply with (exe_id, compile_time).
+    Compile(PathBuf, Sender<anyhow::Result<(usize, Duration)>>),
+    /// Execute exe_id on inputs; reply with outputs (tuple flattened).
+    Execute(usize, Vec<HostTensor>, Sender<anyhow::Result<Vec<HostTensor>>>),
+    /// Drop a compiled executable (frees memory for compile benches).
+    Release(usize),
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the device thread.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    tx: Arc<Mutex<Sender<Request>>>,
+}
+
+impl DeviceHandle {
+    /// Spawn the device-service thread (one per process is typical).
+    pub fn spawn() -> anyhow::Result<DeviceHandle> {
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-device".into())
+            .spawn(move || {
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => {
+                        let _ = ready_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(anyhow::anyhow!("PJRT init: {e}")));
+                        return;
+                    }
+                };
+                let mut executables: Vec<Option<xla::PjRtLoadedExecutable>> = Vec::new();
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Compile(path, reply) => {
+                            let t0 = Instant::now();
+                            let result = compile(&client, &path).map(|exe| {
+                                executables.push(Some(exe));
+                                (executables.len() - 1, t0.elapsed())
+                            });
+                            let _ = reply.send(result);
+                        }
+                        Request::Execute(id, inputs, reply) => {
+                            let result = match executables.get(id).and_then(|e| e.as_ref()) {
+                                Some(exe) => execute(exe, &inputs),
+                                None => Err(anyhow::anyhow!("bad executable id {id}")),
+                            };
+                            let _ = reply.send(result);
+                        }
+                        Request::Release(id) => {
+                            if let Some(slot) = executables.get_mut(id) {
+                                *slot = None;
+                            }
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx.recv().map_err(|_| anyhow::anyhow!("device thread died"))??;
+        Ok(DeviceHandle { tx: Arc::new(Mutex::new(tx)) })
+    }
+
+    fn send(&self, req: Request) {
+        self.tx.lock().unwrap().send(req).expect("device thread alive");
+    }
+
+    /// Compile HLO text from `path`; returns a runnable handle + the
+    /// PJRT compile time (used by bench_compile / E12).
+    pub fn compile(&self, path: impl AsRef<Path>) -> anyhow::Result<(Executable, Duration)> {
+        let (reply_tx, reply_rx) = channel();
+        self.send(Request::Compile(path.as_ref().to_path_buf(), reply_tx));
+        let (id, dt) = reply_rx.recv().map_err(|_| anyhow::anyhow!("device thread died"))??;
+        Ok((Executable { device: self.clone(), id }, dt))
+    }
+
+    pub fn shutdown(&self) {
+        self.send(Request::Shutdown);
+    }
+}
+
+/// A compiled computation living on the device thread.
+#[derive(Clone)]
+pub struct Executable {
+    device: DeviceHandle,
+    id: usize,
+}
+
+impl Executable {
+    /// Execute synchronously. Inputs are positional (manifest order).
+    pub fn run(&self, inputs: Vec<HostTensor>) -> anyhow::Result<Vec<HostTensor>> {
+        let (reply_tx, reply_rx) = channel();
+        self.device.send(Request::Execute(self.id, inputs, reply_tx));
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("device thread died"))?
+    }
+
+    /// Free the underlying PJRT executable.
+    pub fn release(self) {
+        self.device.send(Request::Release(self.id));
+    }
+}
+
+fn compile(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))
+}
+
+fn execute(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[HostTensor],
+) -> anyhow::Result<Vec<HostTensor>> {
+    // NOTE: we deliberately use `execute_b` with Rust-owned PjRtBuffers.
+    // The crate's `execute(literals)` path leaks every input buffer (the
+    // C++ shim `release()`s them and never frees after the run) — with
+    // per-step full-parameter inputs that is ~params-bytes leaked per
+    // step. Rust-side `PjRtBuffer` has a correct Drop. (Found via the
+    // §Perf leak hunt; see EXPERIMENTS.md.)
+    let client = exe.client();
+    let mut buffers: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+    for t in inputs {
+        let buf = match &t.data {
+            crate::runtime::tensor::TensorData::F32(v) => {
+                client.buffer_from_host_buffer(v, &t.shape, None)
+            }
+            crate::runtime::tensor::TensorData::I32(v) => {
+                client.buffer_from_host_buffer(v, &t.shape, None)
+            }
+        }
+        .map_err(|e| anyhow::anyhow!("host->device transfer: {e}"))?;
+        buffers.push(buf);
+    }
+    let result = exe
+        .execute_b::<xla::PjRtBuffer>(&buffers)
+        .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+    drop(buffers);
+    let out_lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetch output: {e}"))?;
+    // aot.py lowers with return_tuple=True: flatten the tuple.
+    let parts = out_lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+    parts.iter().map(HostTensor::from_literal).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Artifacts;
+
+    #[test]
+    fn device_runs_partdemo_ffn() {
+        let arts = Artifacts::load_default().unwrap();
+        let pd = arts.partdemo.as_ref().unwrap();
+        let device = DeviceHandle::spawn().unwrap();
+        let (exe, dt) = device.compile(&pd.hlos["ffn_full"]).unwrap();
+        assert!(dt.as_secs_f64() > 0.0);
+        let x = HostTensor::f32(vec![pd.m, pd.k], vec![0.01; pd.m * pd.k]);
+        let w1 = HostTensor::f32(vec![pd.k, pd.f], vec![0.02; pd.k * pd.f]);
+        let w2 = HostTensor::f32(vec![pd.f, pd.k], vec![0.03; pd.f * pd.k]);
+        let out = exe.run(vec![x, w1, w2]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![pd.m, pd.k]);
+        // y = gelu(x@w1)@w2; with x@w1 = 0.01*0.02*256 = 0.0512 per elem,
+        // gelu(0.0512) ~ 0.0266, y ~ 0.0266*0.03*1024 ~ 0.817
+        let v = out[0].as_f32()[0];
+        assert!((v - 0.817).abs() < 0.05, "v={v}");
+        // handle usable from other threads
+        let exe2 = exe.clone();
+        let h = std::thread::spawn(move || {
+            let x = HostTensor::f32(vec![64, 256], vec![0.0; 64 * 256]);
+            let w1 = HostTensor::f32(vec![256, 1024], vec![0.0; 256 * 1024]);
+            let w2 = HostTensor::f32(vec![1024, 256], vec![0.0; 1024 * 256]);
+            exe2.run(vec![x, w1, w2]).unwrap()[0].as_f32()[0]
+        });
+        assert_eq!(h.join().unwrap(), 0.0);
+        device.shutdown();
+    }
+}

@@ -1,0 +1,217 @@
+//! Host-side tensors: the currency between seqio infeed, the PJRT runtime,
+//! the partitioner/collectives, and the optimizers.
+
+use xla::Literal;
+
+/// Typed flat storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self::f32(shape, vec![0.0; n])
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self::f32(vec![], vec![v])
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.elements() * 4
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            TensorData::F32(_) => panic!("expected i32 tensor"),
+        }
+    }
+
+    pub fn first_f32(&self) -> f32 {
+        self.as_f32()[0]
+    }
+
+    /// L2 norm (f32 tensors).
+    pub fn norm(&self) -> f64 {
+        self.as_f32().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    // ---- slicing / concatenation (partitioning primitives) --------------
+
+    /// Slice `count` elements starting at `start` along `axis`.
+    pub fn slice_axis(&self, axis: usize, start: usize, count: usize) -> HostTensor {
+        assert!(axis < self.shape.len(), "axis {axis} out of range");
+        assert!(start + count <= self.shape[axis], "slice out of range");
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let dim = self.shape[axis];
+        let mut new_shape = self.shape.clone();
+        new_shape[axis] = count;
+        match &self.data {
+            TensorData::F32(v) => {
+                let mut out = Vec::with_capacity(outer * count * inner);
+                for o in 0..outer {
+                    let base = o * dim * inner + start * inner;
+                    out.extend_from_slice(&v[base..base + count * inner]);
+                }
+                HostTensor::f32(new_shape, out)
+            }
+            TensorData::I32(v) => {
+                let mut out = Vec::with_capacity(outer * count * inner);
+                for o in 0..outer {
+                    let base = o * dim * inner + start * inner;
+                    out.extend_from_slice(&v[base..base + count * inner]);
+                }
+                HostTensor::i32(new_shape, out)
+            }
+        }
+    }
+
+    /// Concatenate tensors along `axis` (all other dims must match).
+    pub fn concat_axis(parts: &[HostTensor], axis: usize) -> HostTensor {
+        assert!(!parts.is_empty());
+        let first = &parts[0];
+        let outer: usize = first.shape[..axis].iter().product();
+        let inner: usize = first.shape[axis + 1..].iter().product();
+        let total_dim: usize = parts.iter().map(|p| p.shape[axis]).sum();
+        let mut new_shape = first.shape.clone();
+        new_shape[axis] = total_dim;
+        let is_f32 = matches!(first.data, TensorData::F32(_));
+        let mut out_f = Vec::new();
+        let mut out_i = Vec::new();
+        if is_f32 {
+            out_f.reserve(outer * total_dim * inner);
+        } else {
+            out_i.reserve(outer * total_dim * inner);
+        }
+        for o in 0..outer {
+            for p in parts {
+                let dim = p.shape[axis];
+                match &p.data {
+                    TensorData::F32(v) => {
+                        out_f.extend_from_slice(&v[o * dim * inner..(o + 1) * dim * inner])
+                    }
+                    TensorData::I32(v) => {
+                        out_i.extend_from_slice(&v[o * dim * inner..(o + 1) * dim * inner])
+                    }
+                }
+            }
+        }
+        if is_f32 {
+            HostTensor::f32(new_shape, out_f)
+        } else {
+            HostTensor::i32(new_shape, out_i)
+        }
+    }
+
+    // ---- PJRT literal conversion -----------------------------------------
+
+    pub fn to_literal(&self) -> anyhow::Result<Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => Literal::vec1(v.as_slice()),
+            TensorData::I32(v) => Literal::vec1(v.as_slice()),
+        };
+        if self.shape.is_empty() {
+            // scalar: reshape to rank-0
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    pub fn from_literal(lit: &Literal) -> anyhow::Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::f32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(HostTensor::i32(dims, lit.to_vec::<i32>()?)),
+            other => anyhow::bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_and_concat_roundtrip_axis0() {
+        let t = HostTensor::f32(vec![4, 3], (0..12).map(|i| i as f32).collect());
+        let a = t.slice_axis(0, 0, 2);
+        let b = t.slice_axis(0, 2, 2);
+        assert_eq!(a.shape, vec![2, 3]);
+        assert_eq!(a.as_f32(), &[0., 1., 2., 3., 4., 5.]);
+        let back = HostTensor::concat_axis(&[a, b], 0);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn slice_and_concat_roundtrip_axis1() {
+        let t = HostTensor::f32(vec![2, 4], (0..8).map(|i| i as f32).collect());
+        let a = t.slice_axis(1, 0, 2);
+        let b = t.slice_axis(1, 2, 2);
+        assert_eq!(a.as_f32(), &[0., 1., 4., 5.]);
+        assert_eq!(b.as_f32(), &[2., 3., 6., 7.]);
+        let back = HostTensor::concat_axis(&[a, b], 1);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_slicing() {
+        let t = HostTensor::i32(vec![2, 2], vec![1, 2, 3, 4]);
+        let a = t.slice_axis(1, 1, 1);
+        assert_eq!(a.as_i32(), &[2, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn norm_computes() {
+        let t = HostTensor::f32(vec![2], vec![3.0, 4.0]);
+        assert!((t.norm() - 5.0).abs() < 1e-9);
+    }
+}

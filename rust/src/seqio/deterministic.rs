@@ -1,0 +1,284 @@
+//! Deterministic pipeline reader (paper §3.2). Provides the four
+//! properties over a directory produced by [`super::cache`]:
+//!
+//! * **Reproducibility** — examples always arrive in global index order.
+//! * **Recoverability** — `start_at(k)` resumes the stream at the k-th
+//!   example of this host, in O(num_host_files) seeks (sidecar indices),
+//!   so restarts never repeat or skip data.
+//! * **Sharding** — host h of H reads exactly the indices i ≡ h (mod H);
+//!   because files hold indices i ≡ f (mod N) and H divides N, host h
+//!   touches only files f ≡ h (mod H): an *exclusive, sequentially
+//!   readable* file set (the throughput claim, E9).
+//! * **Global shuffle** — performed once by the offline cache job.
+//!
+//! The reader emits each example with an extra `_index` int feature (its
+//! global index), which tests and the trainer's data-order audits use.
+
+use std::path::{Path, PathBuf};
+
+use super::cache::CacheMeta;
+use super::dataset::Dataset;
+use super::records::RecordReader;
+use super::{deserialize_example, Example, Feature};
+
+/// Handle to a cached deterministic task directory.
+pub struct DeterministicPipeline {
+    pub dir: PathBuf,
+    pub meta: CacheMeta,
+}
+
+impl DeterministicPipeline {
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta = CacheMeta::load(&dir)?;
+        Ok(Self { dir, meta })
+    }
+
+    /// Number of examples host `h` of `num_hosts` owns.
+    pub fn host_examples(&self, host: usize, num_hosts: usize) -> usize {
+        (self.meta.num_examples + num_hosts - 1 - host) / num_hosts
+    }
+
+    /// The exclusive file set of host `h` (paper's sequential-read claim).
+    pub fn host_files(&self, host: usize, num_hosts: usize) -> Vec<usize> {
+        assert!(
+            self.meta.num_shards % num_hosts == 0,
+            "num_shards ({}) must be a multiple of num_hosts ({num_hosts})",
+            self.meta.num_shards
+        );
+        (0..self.meta.num_shards)
+            .filter(|f| f % num_hosts == host)
+            .collect()
+    }
+
+    /// Stream host `h`'s examples starting from its `start_k`-th example
+    /// (start_k = step * per_host_batch for resume), in global index order,
+    /// optionally repeating over epochs.
+    pub fn host_stream(
+        &self,
+        host: usize,
+        num_hosts: usize,
+        start_k: usize,
+        repeat: bool,
+    ) -> Dataset {
+        let files = self.host_files(host, num_hosts);
+        let n = self.meta.num_examples;
+        let shards = self.meta.num_shards;
+        let dir = self.dir.clone();
+        let per_host = self.host_examples(host, num_hosts);
+
+        struct HostReader {
+            readers: Vec<RecordReader>,
+            /// file index within `readers` to pull from next
+            r: usize,
+            /// entry index within that file
+            q: usize,
+            /// absolute shard number per reader (for global index calc)
+            shard_ids: Vec<usize>,
+            n: usize,
+            shards: usize,
+            emitted: usize,
+            per_host: usize,
+            repeat: bool,
+        }
+
+        impl HostReader {
+            fn reset(&mut self) {
+                self.r = 0;
+                self.q = 0;
+                self.emitted = 0;
+                for rd in &mut self.readers {
+                    let _ = rd.seek_to(0);
+                }
+            }
+        }
+
+        impl Iterator for HostReader {
+            type Item = Example;
+
+            fn next(&mut self) -> Option<Example> {
+                loop {
+                    if self.emitted >= self.per_host {
+                        if self.repeat {
+                            self.reset();
+                        } else {
+                            return None;
+                        }
+                    }
+                    let shard = self.shard_ids[self.r];
+                    let global_index = self.q * self.shards + shard;
+                    if global_index >= self.n {
+                        // ragged tail: this file has no entry q; advance.
+                        self.advance();
+                        continue;
+                    }
+                    let payload = self.readers[self.r]
+                        .read_at(self.q)
+                        .expect("deterministic read");
+                    let mut ex =
+                        deserialize_example(&payload).expect("deserialize example");
+                    ex.insert("_index".into(), Feature::Ints(vec![global_index as i32]));
+                    self.advance();
+                    self.emitted += 1;
+                    return Some(ex);
+                }
+            }
+        }
+
+        impl HostReader {
+            fn advance(&mut self) {
+                self.r += 1;
+                if self.r == self.readers.len() {
+                    self.r = 0;
+                    self.q += 1;
+                }
+            }
+        }
+
+        let readers: Vec<RecordReader> = files
+            .iter()
+            .map(|&f| {
+                RecordReader::open(CacheMeta::shard_file(&dir, f))
+                    .expect("open shard file")
+            })
+            .collect();
+        let m = files.len().max(1);
+        // Within-epoch resume position: wraps for repeating streams, clamps
+        // (=> empty stream) for finite ones resumed past their end.
+        let k = if repeat {
+            start_k % per_host.max(1)
+        } else {
+            start_k.min(per_host)
+        };
+        let hr = HostReader {
+            readers,
+            r: k % m,
+            q: k / m,
+            shard_ids: files,
+            n,
+            shards,
+            emitted: k,
+            per_host,
+            repeat,
+        };
+        Dataset::new(hr)
+    }
+
+    /// Convenience: the merged global-order stream (single host view).
+    pub fn global_stream(&self) -> Dataset {
+        self.host_stream(0, 1, 0, false)
+    }
+}
+
+/// Strip the bookkeeping `_index` feature (before feeding converters).
+pub fn strip_index(mut ex: Example) -> Example {
+    ex.remove("_index");
+    ex
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seqio::cache::{cache_task, CacheConfig};
+    use crate::seqio::preprocessors::Tokenize;
+    use crate::seqio::source::SyntheticTextSource;
+    use crate::seqio::task::Task;
+    use crate::seqio::vocab::{ByteVocabulary, Vocabulary};
+    use std::sync::Arc;
+
+    fn build_cache(n: usize, shards: usize, tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("det_{}_{tag}", std::process::id()));
+        let vocab: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(16));
+        let task = Task::builder("det_test_task")
+            .source(Arc::new(SyntheticTextSource::new(7, n)))
+            .preprocessor(Arc::new(Tokenize::new(vocab.clone(), &[("text", "targets")])))
+            .output_feature("targets", vocab, true)
+            .build();
+        cache_task(&task, &dir, &CacheConfig { num_shards: shards, seed: 1, workers: 2 })
+            .unwrap();
+        dir
+    }
+
+    fn indices(ds: Dataset) -> Vec<i32> {
+        ds.collect_vec()
+            .iter()
+            .map(|e| e["_index"].as_ints().unwrap()[0])
+            .collect()
+    }
+
+    #[test]
+    fn global_stream_is_index_ordered() {
+        let dir = build_cache(41, 8, "order");
+        let p = DeterministicPipeline::open(&dir).unwrap();
+        let idx = indices(p.global_stream());
+        assert_eq!(idx, (0..41).collect::<Vec<_>>());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn host_shards_partition_and_interleave() {
+        let dir = build_cache(40, 8, "shard");
+        let p = DeterministicPipeline::open(&dir).unwrap();
+        let h0 = indices(p.host_stream(0, 4, 0, false));
+        let h1 = indices(p.host_stream(1, 4, 0, false));
+        // host h sees exactly indices ≡ h (mod 4), in order
+        assert_eq!(h0, (0..40).step_by(4).collect::<Vec<_>>());
+        assert_eq!(h1, (1..40).step_by(4).collect::<Vec<_>>());
+        // exclusive file sets
+        assert_eq!(p.host_files(0, 4), vec![0, 4]);
+        assert_eq!(p.host_files(1, 4), vec![1, 5]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_matches_continuous_stream() {
+        let dir = build_cache(50, 4, "resume");
+        let p = DeterministicPipeline::open(&dir).unwrap();
+        let full = indices(p.host_stream(1, 2, 0, false));
+        for start_k in [0usize, 1, 5, 11, 24] {
+            let resumed = indices(p.host_stream(1, 2, start_k, false));
+            assert_eq!(resumed, full[start_k..], "start_k={start_k}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn repeat_wraps_epochs() {
+        let dir = build_cache(10, 2, "repeat");
+        let p = DeterministicPipeline::open(&dir).unwrap();
+        let idx: Vec<i32> = p
+            .host_stream(0, 1, 0, true)
+            .take(25)
+            .collect_vec()
+            .iter()
+            .map(|e| e["_index"].as_ints().unwrap()[0])
+            .collect();
+        assert_eq!(&idx[0..10], (0..10).collect::<Vec<_>>().as_slice());
+        assert_eq!(&idx[10..20], (0..10).collect::<Vec<_>>().as_slice());
+        assert_eq!(&idx[20..25], (0..5).collect::<Vec<_>>().as_slice());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ragged_tail_handled() {
+        // 13 examples over 4 shards: files have 4,3,3,3 entries.
+        let dir = build_cache(13, 4, "ragged");
+        let p = DeterministicPipeline::open(&dir).unwrap();
+        let idx = indices(p.global_stream());
+        assert_eq!(idx, (0..13).collect::<Vec<_>>());
+        let h1 = indices(p.host_stream(1, 2, 0, false));
+        assert_eq!(h1, vec![1, 3, 5, 7, 9, 11]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mismatched_host_count_panics() {
+        let dir = build_cache(10, 4, "mismatch");
+        let p = DeterministicPipeline::open(&dir).unwrap();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.host_files(0, 3)
+        }));
+        assert!(r.is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,347 @@
+//! Evaluation (seqio.Evaluator + metric functions): consistent benchmarks
+//! across competing models (paper §1, §3.1).
+//!
+//! Metrics operate on (target, prediction) string pairs or token streams;
+//! the [`Evaluator`] aggregates them over a task's eval examples.
+
+use std::collections::HashMap;
+
+/// Built-in metric functions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// Fraction of predictions exactly matching the target string.
+    ExactMatch,
+    /// Token-level accuracy over aligned positions (padded comparison).
+    TokenAccuracy,
+    /// BLEU (up to 4-gram, uniform weights, brevity penalty).
+    Bleu,
+    /// Character-level edit-distance similarity 1 - d/max_len.
+    EditSimilarity,
+    /// ROUGE-N recall of target n-grams found in the prediction.
+    RougeN(u8),
+    /// Bag-of-tokens F1 (the SQuAD-style answer metric).
+    TokenF1,
+}
+
+impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::ExactMatch => "exact_match",
+            Metric::TokenAccuracy => "token_accuracy",
+            Metric::Bleu => "bleu",
+            Metric::EditSimilarity => "edit_similarity",
+            Metric::RougeN(1) => "rouge1",
+            Metric::RougeN(2) => "rouge2",
+            Metric::RougeN(_) => "rougeN",
+            Metric::TokenF1 => "token_f1",
+        }
+    }
+
+    /// Compute over a set of (target, prediction) pairs.
+    pub fn compute(&self, pairs: &[(String, String)]) -> f64 {
+        if pairs.is_empty() {
+            return 0.0;
+        }
+        match self {
+            Metric::ExactMatch => {
+                pairs.iter().filter(|(t, p)| t == p).count() as f64 / pairs.len() as f64
+            }
+            Metric::TokenAccuracy => {
+                let mut correct = 0usize;
+                let mut total = 0usize;
+                for (t, p) in pairs {
+                    let tt: Vec<&str> = t.split_whitespace().collect();
+                    let pp: Vec<&str> = p.split_whitespace().collect();
+                    total += tt.len();
+                    correct += tt
+                        .iter()
+                        .zip(pp.iter())
+                        .filter(|(a, b)| a == b)
+                        .count();
+                }
+                if total == 0 {
+                    0.0
+                } else {
+                    correct as f64 / total as f64
+                }
+            }
+            Metric::Bleu => corpus_bleu(pairs),
+            Metric::EditSimilarity => {
+                pairs
+                    .iter()
+                    .map(|(t, p)| {
+                        let d = edit_distance(t, p);
+                        let m = t.chars().count().max(p.chars().count()).max(1);
+                        1.0 - d as f64 / m as f64
+                    })
+                    .sum::<f64>()
+                    / pairs.len() as f64
+            }
+            Metric::RougeN(n) => {
+                pairs
+                    .iter()
+                    .map(|(t, p)| rouge_n_recall(t, p, *n as usize))
+                    .sum::<f64>()
+                    / pairs.len() as f64
+            }
+            Metric::TokenF1 => {
+                pairs.iter().map(|(t, p)| token_f1(t, p)).sum::<f64>()
+                    / pairs.len() as f64
+            }
+        }
+    }
+}
+
+/// ROUGE-N recall: fraction of target n-grams present in the prediction
+/// (clipped multiset matching).
+pub fn rouge_n_recall(target: &str, pred: &str, n: usize) -> f64 {
+    let t: Vec<&str> = target.split_whitespace().collect();
+    let p: Vec<&str> = pred.split_whitespace().collect();
+    if t.len() < n {
+        return 0.0;
+    }
+    let mut pred_ngrams: HashMap<Vec<&str>, usize> = HashMap::new();
+    if p.len() >= n {
+        for w in p.windows(n) {
+            *pred_ngrams.entry(w.to_vec()).or_default() += 1;
+        }
+    }
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for w in t.windows(n) {
+        total += 1;
+        if let Some(c) = pred_ngrams.get_mut(&w.to_vec()) {
+            if *c > 0 {
+                *c -= 1;
+                hit += 1;
+            }
+        }
+    }
+    hit as f64 / total.max(1) as f64
+}
+
+/// Bag-of-tokens F1 between target and prediction.
+pub fn token_f1(target: &str, pred: &str) -> f64 {
+    let t: Vec<&str> = target.split_whitespace().collect();
+    let p: Vec<&str> = pred.split_whitespace().collect();
+    if t.is_empty() || p.is_empty() {
+        return if t.is_empty() && p.is_empty() { 1.0 } else { 0.0 };
+    }
+    let mut counts: HashMap<&str, usize> = HashMap::new();
+    for w in &t {
+        *counts.entry(w).or_default() += 1;
+    }
+    let mut overlap = 0usize;
+    for w in &p {
+        if let Some(c) = counts.get_mut(w) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let precision = overlap as f64 / p.len() as f64;
+    let recall = overlap as f64 / t.len() as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Corpus-level BLEU-4 with brevity penalty (uniform n-gram weights).
+pub fn corpus_bleu(pairs: &[(String, String)]) -> f64 {
+    let max_n = 4;
+    let mut match_counts = vec![0usize; max_n];
+    let mut total_counts = vec![0usize; max_n];
+    let mut ref_len = 0usize;
+    let mut hyp_len = 0usize;
+    for (target, pred) in pairs {
+        let r: Vec<&str> = target.split_whitespace().collect();
+        let h: Vec<&str> = pred.split_whitespace().collect();
+        ref_len += r.len();
+        hyp_len += h.len();
+        for n in 1..=max_n {
+            if h.len() < n {
+                continue;
+            }
+            let mut ref_ngrams: HashMap<Vec<&str>, usize> = HashMap::new();
+            if r.len() >= n {
+                for w in r.windows(n) {
+                    *ref_ngrams.entry(w.to_vec()).or_default() += 1;
+                }
+            }
+            for w in h.windows(n) {
+                total_counts[n - 1] += 1;
+                if let Some(c) = ref_ngrams.get_mut(&w.to_vec()) {
+                    if *c > 0 {
+                        *c -= 1;
+                        match_counts[n - 1] += 1;
+                    }
+                }
+            }
+        }
+    }
+    if hyp_len == 0 || match_counts[0] == 0 {
+        return 0.0;
+    }
+    // NIST-style exponential smoothing: the k-th zero-match precision is
+    // replaced by (1/2^k)/total; exact precisions are used otherwise.
+    let mut log_precision_sum = 0.0;
+    let mut smooth = 1.0f64;
+    for n in 0..max_n {
+        let p = if total_counts[n] == 0 {
+            1.0 // sentence shorter than n: skip via neutral value
+        } else if match_counts[n] == 0 {
+            smooth /= 2.0;
+            smooth / total_counts[n] as f64
+        } else {
+            match_counts[n] as f64 / total_counts[n] as f64
+        };
+        log_precision_sum += p.ln();
+    }
+    let geo_mean = (log_precision_sum / max_n as f64).exp();
+    let bp = if hyp_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    bp * geo_mean
+}
+
+/// Levenshtein distance.
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let cost = usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = (prev[j] + 1).min(cur[j - 1] + 1).min(prev[j - 1] + cost);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Aggregated evaluation over one task.
+pub struct EvalResult {
+    pub task: String,
+    pub num_examples: usize,
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl EvalResult {
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}
+
+/// The seqio Evaluator: applies a task's metric set to decoded predictions.
+pub struct Evaluator {
+    pub metrics: Vec<Metric>,
+}
+
+impl Evaluator {
+    pub fn new(metrics: Vec<Metric>) -> Self {
+        Self { metrics }
+    }
+
+    pub fn evaluate(&self, task: &str, pairs: &[(String, String)]) -> EvalResult {
+        EvalResult {
+            task: task.to_string(),
+            num_examples: pairs.len(),
+            metrics: self
+                .metrics
+                .iter()
+                .map(|m| (m.name().to_string(), m.compute(pairs)))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pairs(v: &[(&str, &str)]) -> Vec<(String, String)> {
+        v.iter().map(|(a, b)| (a.to_string(), b.to_string())).collect()
+    }
+
+    #[test]
+    fn exact_match() {
+        let p = pairs(&[("a b", "a b"), ("c", "d")]);
+        assert_eq!(Metric::ExactMatch.compute(&p), 0.5);
+    }
+
+    #[test]
+    fn token_accuracy() {
+        let p = pairs(&[("a b c d", "a x c d")]);
+        assert!((Metric::TokenAccuracy.compute(&p) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bleu_perfect_and_zero() {
+        let perfect = pairs(&[("the quick brown fox jumps", "the quick brown fox jumps")]);
+        assert!(corpus_bleu(&perfect) > 0.99);
+        let bad = pairs(&[("aa bb cc dd ee", "xx yy zz ww vv")]);
+        assert!(corpus_bleu(&bad) < 0.01);
+        let partial = pairs(&[("the quick brown fox", "the quick red fox")]);
+        let b = corpus_bleu(&partial);
+        assert!(b > 0.05 && b < 0.9, "bleu={b}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("same", "same"), 0);
+        let p = pairs(&[("abcd", "abed")]);
+        assert!((Metric::EditSimilarity.compute(&p) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evaluator_aggregates() {
+        let ev = Evaluator::new(vec![Metric::ExactMatch, Metric::TokenAccuracy]);
+        let res = ev.evaluate("task_x", &pairs(&[("a", "a"), ("b b", "b c")]));
+        assert_eq!(res.num_examples, 2);
+        assert_eq!(res.get("exact_match"), Some(0.5));
+        assert!(res.get("token_accuracy").unwrap() > 0.5);
+        assert!(res.get("bleu").is_none());
+    }
+
+    #[test]
+    fn empty_pairs_safe() {
+        for m in [
+            Metric::ExactMatch,
+            Metric::TokenAccuracy,
+            Metric::Bleu,
+            Metric::EditSimilarity,
+            Metric::RougeN(1),
+            Metric::TokenF1,
+        ] {
+            assert_eq!(m.compute(&[]), 0.0);
+        }
+    }
+
+    #[test]
+    fn rouge_recall_values() {
+        assert_eq!(rouge_n_recall("a b c", "a b c", 1), 1.0);
+        assert_eq!(rouge_n_recall("a b c", "a b c", 2), 1.0);
+        assert!((rouge_n_recall("a b c d", "a b x y", 1) - 0.5).abs() < 1e-12);
+        // bigram: "a b" matches, "b c"/"c d" don't
+        assert!((rouge_n_recall("a b c d", "a b x y", 2) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(rouge_n_recall("a", "a", 2), 0.0); // too short for bigrams
+    }
+
+    #[test]
+    fn f1_values() {
+        assert_eq!(token_f1("a b c", "a b c"), 1.0);
+        assert_eq!(token_f1("a b", "x y"), 0.0);
+        // pred "a" vs target "a b": p=1, r=0.5, f1=2/3
+        assert!((token_f1("a b", "a") - 2.0 / 3.0).abs() < 1e-12);
+        // order-insensitive
+        assert_eq!(token_f1("a b c", "c b a"), 1.0);
+    }
+}

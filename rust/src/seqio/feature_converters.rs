@@ -1,0 +1,446 @@
+//! Feature converters (paper §3.1, Figure 2): translate *task* features
+//! ("inputs"/"targets") into the raw *model* features each architecture
+//! consumes, so "the same task can be made compatible with various
+//! architectures".
+//!
+//! * [`EncDecConverter`] — encoder-decoder (T5): encoder_input_tokens +
+//!   teacher-forced decoder stream.
+//! * [`LmConverter`] — decoder-only LM (LaMDA-style): targets only.
+//! * [`PrefixLmConverter`] — decoder-only with inputs as unweighted prefix.
+//!
+//! Packing is provided by [`pack_lm`]/[`PackedLmConverter`]: multiple short
+//! examples share one row with segment ids + positions. NOTE: the exported
+//! HLO models do not take segment ids, so the trainer uses the unpacked
+//! converters; packing is exercised by tests/benches (documented in
+//! DESIGN.md).
+
+use std::collections::BTreeMap;
+
+use super::dataset::Dataset;
+use super::vocab::PAD_ID;
+use super::{Example, Feature};
+
+/// Requested sequence lengths per *task* feature, e.g.
+/// {"inputs": 64, "targets": 64}.
+pub type FeatureLengths = BTreeMap<String, usize>;
+
+pub fn lengths(pairs: &[(&str, usize)]) -> FeatureLengths {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+/// Common converter interface.
+pub trait FeatureConverter: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Names (and lengths) of the model features this converter emits.
+    fn model_feature_lengths(&self, task_lengths: &FeatureLengths) -> FeatureLengths;
+    fn convert_example(&self, ex: &Example, task_lengths: &FeatureLengths) -> Example;
+
+    fn convert(&self, ds: Dataset, task_lengths: &FeatureLengths) -> Dataset
+    where
+        Self: Sized + Clone + 'static,
+    {
+        let me = self.clone();
+        let lens = task_lengths.clone();
+        ds.map(move |ex| me.convert_example(&ex, &lens))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+fn pad_or_trim(v: &[i32], len: usize) -> Vec<i32> {
+    let mut out = v.to_vec();
+    out.truncate(len);
+    out.resize(len, PAD_ID);
+    out
+}
+
+/// Teacher-forcing shift: BOS (= pad id 0, the T5 convention) + targets[:-1].
+pub fn shift_right(targets: &[i32]) -> Vec<i32> {
+    let mut out = Vec::with_capacity(targets.len());
+    out.push(PAD_ID);
+    out.extend_from_slice(&targets[..targets.len().saturating_sub(1)]);
+    out
+}
+
+fn loss_weights(target_padded: &[i32]) -> Vec<f32> {
+    target_padded
+        .iter()
+        .map(|&t| if t == PAD_ID { 0.0 } else { 1.0 })
+        .collect()
+}
+
+fn ints<'a>(ex: &'a Example, key: &str) -> &'a [i32] {
+    ex.get(key)
+        .and_then(|f| f.as_ints())
+        .unwrap_or_else(|| panic!("feature converter: missing int feature '{key}'"))
+}
+
+// ---------------------------------------------------------------------------
+// Encoder-decoder
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Default)]
+pub struct EncDecConverter;
+
+impl FeatureConverter for EncDecConverter {
+    fn name(&self) -> &'static str {
+        "enc_dec"
+    }
+
+    fn model_feature_lengths(&self, t: &FeatureLengths) -> FeatureLengths {
+        lengths(&[
+            ("encoder_input_tokens", t["inputs"]),
+            ("decoder_input_tokens", t["targets"]),
+            ("decoder_target_tokens", t["targets"]),
+            ("decoder_loss_weights", t["targets"]),
+        ])
+    }
+
+    fn convert_example(&self, ex: &Example, t: &FeatureLengths) -> Example {
+        let enc = pad_or_trim(ints(ex, "inputs"), t["inputs"]);
+        let tgt = pad_or_trim(ints(ex, "targets"), t["targets"]);
+        let dec_in = shift_right(&tgt);
+        let w = loss_weights(&tgt);
+        let mut out = Example::new();
+        out.insert("encoder_input_tokens".into(), Feature::Ints(enc));
+        out.insert("decoder_input_tokens".into(), Feature::Ints(dec_in));
+        out.insert("decoder_target_tokens".into(), Feature::Ints(tgt));
+        out.insert("decoder_loss_weights".into(), Feature::Floats(w));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoder-only LM
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Default)]
+pub struct LmConverter;
+
+impl FeatureConverter for LmConverter {
+    fn name(&self) -> &'static str {
+        "lm"
+    }
+
+    fn model_feature_lengths(&self, t: &FeatureLengths) -> FeatureLengths {
+        lengths(&[
+            ("decoder_input_tokens", t["targets"]),
+            ("decoder_target_tokens", t["targets"]),
+            ("decoder_loss_weights", t["targets"]),
+        ])
+    }
+
+    fn convert_example(&self, ex: &Example, t: &FeatureLengths) -> Example {
+        let tgt = pad_or_trim(ints(ex, "targets"), t["targets"]);
+        let dec_in = shift_right(&tgt);
+        let w = loss_weights(&tgt);
+        let mut out = Example::new();
+        out.insert("decoder_input_tokens".into(), Feature::Ints(dec_in));
+        out.insert("decoder_target_tokens".into(), Feature::Ints(tgt));
+        out.insert("decoder_loss_weights".into(), Feature::Floats(w));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prefix-LM (decoder-only with inputs as a loss-free prefix)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+pub struct PrefixLmConverter {
+    pub loss_on_targets_only: bool,
+}
+
+impl Default for PrefixLmConverter {
+    fn default() -> Self {
+        Self { loss_on_targets_only: true }
+    }
+}
+
+impl FeatureConverter for PrefixLmConverter {
+    fn name(&self) -> &'static str {
+        "prefix_lm"
+    }
+
+    fn model_feature_lengths(&self, t: &FeatureLengths) -> FeatureLengths {
+        let total = t["inputs"] + t["targets"];
+        lengths(&[
+            ("decoder_input_tokens", total),
+            ("decoder_target_tokens", total),
+            ("decoder_loss_weights", total),
+        ])
+    }
+
+    fn convert_example(&self, ex: &Example, t: &FeatureLengths) -> Example {
+        let total = t["inputs"] + t["targets"];
+        let inp = ints(ex, "inputs");
+        let tgt = ints(ex, "targets");
+        let inp_trim: Vec<i32> =
+            inp.iter().copied().take(t["inputs"]).collect();
+        let mut full: Vec<i32> = inp_trim.clone();
+        full.extend(tgt.iter().copied().take(t["targets"]));
+        let full_padded = pad_or_trim(&full, total);
+        let dec_in = shift_right(&full_padded);
+        let mut w = loss_weights(&full_padded);
+        if self.loss_on_targets_only {
+            for slot in w.iter_mut().take(inp_trim.len()) {
+                *slot = 0.0;
+            }
+        }
+        let mut out = Example::new();
+        out.insert("decoder_input_tokens".into(), Feature::Ints(dec_in));
+        out.insert("decoder_target_tokens".into(), Feature::Ints(full_padded));
+        out.insert("decoder_loss_weights".into(), Feature::Floats(w));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------------
+
+/// Greedy first-fit packing of LM examples into rows of length `row_len`.
+/// Emits `decoder_*` features plus `decoder_segment_ids` (1-based per packed
+/// example) and `decoder_positions` (position within each segment).
+pub fn pack_lm(examples: &[Example], row_len: usize) -> Vec<Example> {
+    let mut rows: Vec<(Vec<i32>, Vec<i32>, Vec<i32>)> = Vec::new(); // (tokens, seg, pos)
+    for ex in examples {
+        let tgt = ints(ex, "targets");
+        let tgt: Vec<i32> = tgt.iter().copied().take(row_len).collect();
+        // first-fit
+        let slot = rows.iter_mut().find(|(toks, _, _)| toks.len() + tgt.len() <= row_len);
+        match slot {
+            Some((toks, seg, pos)) => {
+                let seg_id = seg.last().copied().unwrap_or(0) + 1;
+                for (i, &t) in tgt.iter().enumerate() {
+                    toks.push(t);
+                    seg.push(seg_id);
+                    pos.push(i as i32);
+                }
+            }
+            None => {
+                let mut toks = Vec::with_capacity(row_len);
+                let mut seg = Vec::with_capacity(row_len);
+                let mut pos = Vec::with_capacity(row_len);
+                for (i, &t) in tgt.iter().enumerate() {
+                    toks.push(t);
+                    seg.push(1);
+                    pos.push(i as i32);
+                }
+                rows.push((toks, seg, pos));
+            }
+        }
+    }
+    rows.into_iter()
+        .map(|(mut toks, mut seg, mut pos)| {
+            let tgt_padded = {
+                toks.resize(row_len, PAD_ID);
+                toks
+            };
+            seg.resize(row_len, 0);
+            pos.resize(row_len, 0);
+            // shift within segments: BOS at each segment start
+            let mut dec_in = vec![PAD_ID; row_len];
+            for i in 0..row_len {
+                if seg[i] != 0 && pos[i] > 0 {
+                    dec_in[i] = tgt_padded[i - 1];
+                }
+            }
+            let w = loss_weights(&tgt_padded);
+            let mut out = Example::new();
+            out.insert("decoder_input_tokens".into(), Feature::Ints(dec_in));
+            out.insert("decoder_target_tokens".into(), Feature::Ints(tgt_padded));
+            out.insert("decoder_loss_weights".into(), Feature::Floats(w));
+            out.insert("decoder_segment_ids".into(), Feature::Ints(seg));
+            out.insert("decoder_positions".into(), Feature::Ints(pos));
+            out
+        })
+        .collect()
+}
+
+/// Dataset-level packed LM converter (buffers `buffer` examples per bin).
+#[derive(Clone)]
+pub struct PackedLmConverter {
+    pub buffer: usize,
+}
+
+impl Default for PackedLmConverter {
+    fn default() -> Self {
+        Self { buffer: 128 }
+    }
+}
+
+impl PackedLmConverter {
+    pub fn convert(&self, ds: Dataset, row_len: usize) -> Dataset {
+        let buffer = self.buffer.max(1);
+        struct Packer {
+            inner: super::dataset::BoxIter,
+            out: std::collections::VecDeque<Example>,
+            buffer: usize,
+            row_len: usize,
+            done: bool,
+        }
+        impl Iterator for Packer {
+            type Item = Example;
+
+            fn next(&mut self) -> Option<Example> {
+                loop {
+                    if let Some(e) = self.out.pop_front() {
+                        return Some(e);
+                    }
+                    if self.done {
+                        return None;
+                    }
+                    let mut batch = Vec::with_capacity(self.buffer);
+                    for _ in 0..self.buffer {
+                        match self.inner.next() {
+                            Some(e) => batch.push(e),
+                            None => {
+                                self.done = true;
+                                break;
+                            }
+                        }
+                    }
+                    if batch.is_empty() {
+                        return None;
+                    }
+                    self.out.extend(pack_lm(&batch, self.row_len));
+                }
+            }
+        }
+        Dataset::new(Packer {
+            inner: Box::new(ds),
+            out: Default::default(),
+            buffer,
+            row_len,
+            done: false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seqio::ints_example;
+    use crate::seqio::vocab::EOS_ID;
+
+    fn lm_ex(toks: Vec<i32>) -> Example {
+        ints_example(&[("targets", toks)])
+    }
+
+    #[test]
+    fn lm_converter_shapes_and_shift() {
+        let c = LmConverter;
+        let t = lengths(&[("targets", 8)]);
+        let out = c.convert_example(&lm_ex(vec![5, 6, 7, EOS_ID]), &t);
+        assert_eq!(
+            out["decoder_target_tokens"].as_ints().unwrap(),
+            &[5, 6, 7, EOS_ID, 0, 0, 0, 0]
+        );
+        assert_eq!(
+            out["decoder_input_tokens"].as_ints().unwrap(),
+            &[0, 5, 6, 7, EOS_ID, 0, 0, 0]
+        );
+        assert_eq!(
+            out["decoder_loss_weights"].as_floats().unwrap(),
+            &[1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn encdec_converter_emits_all_features() {
+        let c = EncDecConverter;
+        let t = lengths(&[("inputs", 6), ("targets", 4)]);
+        let mut ex = lm_ex(vec![9, 8, EOS_ID]);
+        ex.insert("inputs".into(), Feature::Ints(vec![1, 2, 3]));
+        let out = c.convert_example(&ex, &t);
+        assert_eq!(out["encoder_input_tokens"].as_ints().unwrap(), &[1, 2, 3, 0, 0, 0]);
+        assert_eq!(out["decoder_target_tokens"].as_ints().unwrap(), &[9, 8, EOS_ID, 0]);
+        assert_eq!(out["decoder_input_tokens"].as_ints().unwrap(), &[0, 9, 8, EOS_ID]);
+        let ml = c.model_feature_lengths(&t);
+        assert_eq!(ml["encoder_input_tokens"], 6);
+        assert_eq!(ml["decoder_target_tokens"], 4);
+    }
+
+    #[test]
+    fn truncation_applies() {
+        let c = LmConverter;
+        let t = lengths(&[("targets", 3)]);
+        let out = c.convert_example(&lm_ex(vec![1, 2, 3, 4, 5]), &t);
+        assert_eq!(out["decoder_target_tokens"].as_ints().unwrap(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn prefix_lm_weights_mask_prefix() {
+        let c = PrefixLmConverter::default();
+        let t = lengths(&[("inputs", 3), ("targets", 3)]);
+        let mut ex = lm_ex(vec![7, 8]);
+        ex.insert("inputs".into(), Feature::Ints(vec![4, 5]));
+        let out = c.convert_example(&ex, &t);
+        assert_eq!(out["decoder_target_tokens"].as_ints().unwrap(), &[4, 5, 7, 8, 0, 0]);
+        assert_eq!(
+            out["decoder_loss_weights"].as_floats().unwrap(),
+            &[0.0, 0.0, 1.0, 1.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn packing_invariants() {
+        let exs: Vec<Example> = vec![
+            lm_ex(vec![1, 2, 3]),
+            lm_ex(vec![4, 5]),
+            lm_ex(vec![6, 7, 8, 9]),
+            lm_ex(vec![10]),
+        ];
+        let rows = pack_lm(&exs, 8);
+        // fewer rows than examples
+        assert!(rows.len() < exs.len());
+        // every token appears exactly once across rows
+        let mut all: Vec<i32> = rows
+            .iter()
+            .flat_map(|r| {
+                r["decoder_target_tokens"]
+                    .as_ints()
+                    .unwrap()
+                    .iter()
+                    .copied()
+                    .filter(|&t| t != PAD_ID)
+            })
+            .collect();
+        all.sort();
+        assert_eq!(all, (1..=10).collect::<Vec<_>>());
+        for r in &rows {
+            let seg = r["decoder_segment_ids"].as_ints().unwrap();
+            let pos = r["decoder_positions"].as_ints().unwrap();
+            let dec_in = r["decoder_input_tokens"].as_ints().unwrap();
+            let tgt = r["decoder_target_tokens"].as_ints().unwrap();
+            for i in 0..seg.len() {
+                if seg[i] != 0 && pos[i] == 0 {
+                    // each segment starts with BOS in the shifted stream
+                    assert_eq!(dec_in[i], PAD_ID);
+                }
+                if seg[i] != 0 && pos[i] > 0 {
+                    assert_eq!(dec_in[i], tgt[i - 1]);
+                    assert_eq!(seg[i], seg[i - 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_dataset_converter_streams() {
+        let exs: Vec<Example> = (0..50)
+            .map(|i| lm_ex(vec![i + 1; (i as usize % 5) + 1]))
+            .collect();
+        let packed = PackedLmConverter { buffer: 16 }
+            .convert(Dataset::from_vec(exs), 16)
+            .collect_vec();
+        assert!(!packed.is_empty());
+        assert!(packed.len() < 50);
+        for r in &packed {
+            assert_eq!(r["decoder_target_tokens"].as_ints().unwrap().len(), 16);
+        }
+    }
+}

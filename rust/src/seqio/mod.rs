@@ -1,0 +1,218 @@
+//! # seqio-rs
+//!
+//! A Rust port of seqio (paper §3): task-based data pipelines for training,
+//! inference and evaluation, with first-class *deterministic pipelines*.
+//!
+//! Structure mirrors Figure 2 of the paper:
+//!
+//! ```text
+//!  DataSource -> Preprocessors -> (output features) -> FeatureConverter
+//!      |              |                                     |
+//!  [source.rs]  [preprocessors.rs]                [feature_converters.rs]
+//!                        Task  [task.rs]   Mixture [mixture.rs]
+//! ```
+//!
+//! Deterministic pipelines (§3.2) are provided by an offline cache job
+//! ([`cache`]) that preprocesses, globally shuffles, assigns ordered
+//! indices, and writes examples sharded by `index % num_files`
+//! ([`records`]), plus a deterministic reader ([`deterministic`]) that
+//! gives every data-parallel host an exclusive, sequentially-readable set
+//! of files, supports exact resume at an arbitrary step, and never repeats
+//! data after restarts.
+
+pub mod cache;
+pub mod dataset;
+pub mod deterministic;
+pub mod evaluation;
+pub mod feature_converters;
+pub mod mixture;
+pub mod preprocessors;
+pub mod records;
+pub mod source;
+pub mod task;
+pub mod vocab;
+
+use std::collections::BTreeMap;
+
+/// One feature value of an example.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Feature {
+    Text(String),
+    Ints(Vec<i32>),
+    Floats(Vec<f32>),
+}
+
+impl Feature {
+    pub fn as_text(&self) -> Option<&str> {
+        match self {
+            Feature::Text(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_ints(&self) -> Option<&[i32]> {
+        match self {
+            Feature::Ints(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_floats(&self) -> Option<&[f32]> {
+        match self {
+            Feature::Floats(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Feature::Text(s) => s.len(),
+            Feature::Ints(v) => v.len(),
+            Feature::Floats(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// An example: named features. BTreeMap for deterministic iteration.
+pub type Example = BTreeMap<String, Feature>;
+
+/// Convenience constructors used throughout tests and preprocessors.
+pub fn text_example(pairs: &[(&str, &str)]) -> Example {
+    pairs
+        .iter()
+        .map(|(k, v)| (k.to_string(), Feature::Text(v.to_string())))
+        .collect()
+}
+
+pub fn ints_example(pairs: &[(&str, Vec<i32>)]) -> Example {
+    pairs
+        .iter()
+        .map(|(k, v)| (k.to_string(), Feature::Ints(v.clone())))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Binary example serialization (used by the record cache).
+// Layout: u16 n_fields, then per field:
+//   u16 name_len | name utf8 | u8 tag | u32 count | payload
+// tags: 0=Text (payload utf8), 1=Ints (i32 LE each), 2=Floats (f32 LE each)
+// ---------------------------------------------------------------------------
+
+pub fn serialize_example(ex: &Example) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.extend_from_slice(&(ex.len() as u16).to_le_bytes());
+    for (name, feat) in ex {
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        match feat {
+            Feature::Text(s) => {
+                out.push(0);
+                out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                out.extend_from_slice(s.as_bytes());
+            }
+            Feature::Ints(v) => {
+                out.push(1);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Feature::Floats(v) => {
+                out.push(2);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    out
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("example deserialization error: {0}")]
+pub struct DecodeError(String);
+
+pub fn deserialize_example(buf: &[u8]) -> Result<Example, DecodeError> {
+    let mut pos = 0usize;
+    fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8], DecodeError> {
+        if *pos + n > buf.len() {
+            return Err(DecodeError(format!("truncated at byte {}", *pos)));
+        }
+        let s = &buf[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    }
+    let n_fields = u16::from_le_bytes(take(buf, &mut pos, 2)?.try_into().unwrap());
+    let mut ex = Example::new();
+    for _ in 0..n_fields {
+        let name_len =
+            u16::from_le_bytes(take(buf, &mut pos, 2)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(buf, &mut pos, name_len)?.to_vec())
+            .map_err(|e| DecodeError(e.to_string()))?;
+        let tag = take(buf, &mut pos, 1)?[0];
+        let count =
+            u32::from_le_bytes(take(buf, &mut pos, 4)?.try_into().unwrap()) as usize;
+        let feat = match tag {
+            0 => Feature::Text(
+                String::from_utf8(take(buf, &mut pos, count)?.to_vec())
+                    .map_err(|e| DecodeError(e.to_string()))?,
+            ),
+            1 => {
+                let bytes = take(buf, &mut pos, count * 4)?;
+                Feature::Ints(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            2 => {
+                let bytes = take(buf, &mut pos, count * 4)?;
+                Feature::Floats(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            t => return Err(DecodeError(format!("unknown tag {t}"))),
+        };
+        ex.insert(name, feat);
+    }
+    if pos != buf.len() {
+        return Err(DecodeError("trailing bytes".into()));
+    }
+    Ok(ex)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example_roundtrip() {
+        let mut ex = Example::new();
+        ex.insert("text".into(), Feature::Text("héllo\nworld".into()));
+        ex.insert("ids".into(), Feature::Ints(vec![1, -2, 3_000_000]));
+        ex.insert("w".into(), Feature::Floats(vec![0.5, -1.25]));
+        let buf = serialize_example(&ex);
+        let back = deserialize_example(&buf).unwrap();
+        assert_eq!(ex, back);
+    }
+
+    #[test]
+    fn corrupt_buffer_rejected() {
+        let ex = text_example(&[("a", "b")]);
+        let mut buf = serialize_example(&ex);
+        buf.truncate(buf.len() - 1);
+        assert!(deserialize_example(&buf).is_err());
+        let mut extended = serialize_example(&ex);
+        extended.push(0);
+        assert!(deserialize_example(&extended).is_err());
+    }
+}

@@ -1,0 +1,527 @@
+//! Preprocessors (seqio preprocessing steps, Figure 2): composable
+//! dataset->dataset transforms. Stochastic preprocessors draw per-example
+//! seeds derived from the pipeline seed + example index, so the same
+//! pipeline seed always yields the same stream (§3.2 Reproducibility).
+
+use std::sync::Arc;
+
+use super::dataset::Dataset;
+use super::vocab::{Vocabulary, EOS_ID};
+use super::Feature;
+use crate::util::rng::Pcg64;
+
+/// Context threaded through preprocessing (the seqio `seed`).
+#[derive(Clone, Debug)]
+pub struct PipelineCtx {
+    pub seed: u64,
+}
+
+/// A dataset-level transform.
+pub trait Preprocessor: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn apply(&self, ds: Dataset, ctx: &PipelineCtx) -> Dataset;
+}
+
+// ---------------------------------------------------------------------------
+
+/// Tokenize: text feature -> int feature using a [`Vocabulary`].
+pub struct Tokenize {
+    pub vocab: Arc<dyn Vocabulary>,
+    /// (input_key, output_key) pairs, e.g. [("text", "targets")].
+    pub keys: Vec<(String, String)>,
+}
+
+impl Tokenize {
+    pub fn new(vocab: Arc<dyn Vocabulary>, keys: &[(&str, &str)]) -> Self {
+        Self {
+            vocab,
+            keys: keys.iter().map(|(a, b)| (a.to_string(), b.to_string())).collect(),
+        }
+    }
+}
+
+impl Preprocessor for Tokenize {
+    fn name(&self) -> &'static str {
+        "tokenize"
+    }
+
+    fn apply(&self, ds: Dataset, _ctx: &PipelineCtx) -> Dataset {
+        let vocab = self.vocab.clone();
+        let keys = self.keys.clone();
+        ds.map(move |mut ex| {
+            for (src, dst) in &keys {
+                if let Some(Feature::Text(t)) = ex.get(src) {
+                    let ids = vocab.encode(t);
+                    ex.insert(dst.clone(), Feature::Ints(ids));
+                }
+            }
+            ex
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Split token streams into fixed-size chunks (one example per chunk) —
+/// `split_tokens` in seqio; used to turn documents into training windows.
+pub struct ChunkTokens {
+    pub key: String,
+    pub chunk_len: usize,
+    /// Drop trailing chunks shorter than this fraction of chunk_len.
+    pub min_fill: f32,
+}
+
+impl ChunkTokens {
+    pub fn new(key: &str, chunk_len: usize) -> Self {
+        Self { key: key.to_string(), chunk_len, min_fill: 0.25 }
+    }
+}
+
+impl Preprocessor for ChunkTokens {
+    fn name(&self) -> &'static str {
+        "chunk_tokens"
+    }
+
+    fn apply(&self, ds: Dataset, _ctx: &PipelineCtx) -> Dataset {
+        let key = self.key.clone();
+        let len = self.chunk_len;
+        let min = ((self.chunk_len as f32) * self.min_fill).ceil() as usize;
+        ds.flat_map(move |ex| {
+            let Some(Feature::Ints(ids)) = ex.get(&key) else {
+                return vec![ex];
+            };
+            let mut out = Vec::new();
+            for chunk in ids.chunks(len) {
+                if chunk.len() < min && !out.is_empty() {
+                    break;
+                }
+                let mut e2 = ex.clone();
+                e2.insert(key.clone(), Feature::Ints(chunk.to_vec()));
+                out.push(e2);
+            }
+            out
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// T5 span corruption (the pretraining objective of Raffel et al. 2020):
+/// replaces random spans in `targets` with sentinels, producing
+/// `inputs` = context with sentinel markers, `targets` = sentinel-delimited
+/// span contents.
+pub struct SpanCorruption {
+    pub vocab: Arc<dyn Vocabulary>,
+    pub noise_density: f32,
+    pub mean_span_length: f32,
+    /// Key holding the raw token stream (consumed), default "targets".
+    pub key: String,
+}
+
+impl SpanCorruption {
+    pub fn new(vocab: Arc<dyn Vocabulary>) -> Self {
+        Self {
+            vocab,
+            noise_density: 0.15,
+            mean_span_length: 3.0,
+            key: "targets".to_string(),
+        }
+    }
+
+    /// Core span-corruption math on one token sequence.
+    pub fn corrupt(
+        &self,
+        tokens: &[i32],
+        rng: &mut Pcg64,
+    ) -> (Vec<i32>, Vec<i32>) {
+        let n = tokens.len();
+        if n < 2 {
+            return (tokens.to_vec(), tokens.to_vec());
+        }
+        let num_noise = ((n as f32 * self.noise_density).round() as usize).clamp(1, n - 1);
+        let num_spans = ((num_noise as f32 / self.mean_span_length).round() as usize)
+            .clamp(1, num_noise)
+            .min(self.vocab.extra_ids().saturating_sub(1).max(1));
+        // Split num_noise into num_spans positive parts.
+        let noise_lens = random_partition(num_noise, num_spans, rng);
+        // Split the remaining tokens into num_spans+1 parts; interior parts
+        // must be positive so spans don't merge.
+        let num_keep = n - num_noise;
+        let keep_lens = random_partition_allow_ends_zero(num_keep, num_spans + 1, rng);
+        let mut inputs = Vec::with_capacity(n + num_spans);
+        let mut targets = Vec::with_capacity(num_noise + num_spans + 1);
+        let mut pos = 0usize;
+        for k in 0..num_spans {
+            let keep = keep_lens[k];
+            inputs.extend_from_slice(&tokens[pos..pos + keep]);
+            pos += keep;
+            let sent = self.vocab.sentinel(k);
+            inputs.push(sent);
+            targets.push(sent);
+            let noise = noise_lens[k];
+            targets.extend_from_slice(&tokens[pos..pos + noise]);
+            pos += noise;
+        }
+        inputs.extend_from_slice(&tokens[pos..]);
+        targets.push(self.vocab.sentinel(num_spans));
+        (inputs, targets)
+    }
+}
+
+/// Split `total` into `parts` positive integers, uniformly at random
+/// (stars and bars via sorted distinct cut points).
+fn random_partition(total: usize, parts: usize, rng: &mut Pcg64) -> Vec<usize> {
+    assert!(parts >= 1 && total >= parts, "total={total} parts={parts}");
+    if parts == 1 {
+        return vec![total];
+    }
+    // choose parts-1 distinct cut points in 1..total
+    let mut cuts = Vec::with_capacity(parts - 1);
+    while cuts.len() < parts - 1 {
+        let c = 1 + rng.next_below((total - 1) as u64) as usize;
+        if !cuts.contains(&c) {
+            cuts.push(c);
+        }
+    }
+    cuts.sort();
+    let mut out = Vec::with_capacity(parts);
+    let mut prev = 0;
+    for c in cuts {
+        out.push(c - prev);
+        prev = c;
+    }
+    out.push(total - prev);
+    out
+}
+
+/// Split `total` into `parts` parts where the first and last may be zero
+/// but interior parts are positive when feasible.
+fn random_partition_allow_ends_zero(
+    total: usize,
+    parts: usize,
+    rng: &mut Pcg64,
+) -> Vec<usize> {
+    if parts == 1 {
+        return vec![total];
+    }
+    let interior = parts - 2;
+    if total >= interior && interior > 0 {
+        // reserve 1 for each interior, distribute the rest over all parts
+        let mut out = vec![0; parts];
+        for slot in out.iter_mut().skip(1).take(interior) {
+            *slot = 1;
+        }
+        let mut rest = total - interior;
+        while rest > 0 {
+            let i = rng.next_below(parts as u64) as usize;
+            out[i] += 1;
+            rest -= 1;
+        }
+        out
+    } else {
+        // degenerate: distribute uniformly
+        let mut out = vec![0; parts];
+        let mut rest = total;
+        while rest > 0 {
+            let i = rng.next_below(parts as u64) as usize;
+            out[i] += 1;
+            rest -= 1;
+        }
+        out
+    }
+}
+
+impl Preprocessor for SpanCorruption {
+    fn name(&self) -> &'static str {
+        "span_corruption"
+    }
+
+    fn apply(&self, ds: Dataset, ctx: &PipelineCtx) -> Dataset {
+        let me = SpanCorruption {
+            vocab: self.vocab.clone(),
+            noise_density: self.noise_density,
+            mean_span_length: self.mean_span_length,
+            key: self.key.clone(),
+        };
+        let seed = ctx.seed;
+        ds.enumerate_map(move |i, mut ex| {
+            let Some(Feature::Ints(ids)) = ex.get(&me.key).cloned() else {
+                return ex;
+            };
+            let mut rng = Pcg64::new(seed).fold_in(i as u64);
+            let (inputs, targets) = me.corrupt(&ids, &mut rng);
+            ex.insert("inputs".into(), Feature::Ints(inputs));
+            ex.insert("targets".into(), Feature::Ints(targets));
+            ex
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Prefix-LM objective: split the stream at a random pivot into
+/// (inputs, targets) — the LaMDA-style decoder-only pretraining variant.
+pub struct PrefixLm {
+    pub key: String,
+}
+
+impl Default for PrefixLm {
+    fn default() -> Self {
+        Self { key: "targets".into() }
+    }
+}
+
+impl Preprocessor for PrefixLm {
+    fn name(&self) -> &'static str {
+        "prefix_lm"
+    }
+
+    fn apply(&self, ds: Dataset, ctx: &PipelineCtx) -> Dataset {
+        let key = self.key.clone();
+        let seed = ctx.seed;
+        ds.enumerate_map(move |i, mut ex| {
+            let Some(Feature::Ints(ids)) = ex.get(&key).cloned() else {
+                return ex;
+            };
+            if ids.len() < 2 {
+                return ex;
+            }
+            let mut rng = Pcg64::new(seed ^ 0x9E37).fold_in(i as u64);
+            let pivot = 1 + rng.next_below((ids.len() - 1) as u64) as usize;
+            let (a, b) = ids.split_at(pivot);
+            ex.insert("inputs".into(), Feature::Ints(a.to_vec()));
+            ex.insert("targets".into(), Feature::Ints(b.to_vec()));
+            ex
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Append EOS to listed int features (seqio.append_eos).
+pub struct AppendEos {
+    pub keys: Vec<String>,
+}
+
+impl AppendEos {
+    pub fn new(keys: &[&str]) -> Self {
+        Self { keys: keys.iter().map(|s| s.to_string()).collect() }
+    }
+}
+
+impl Preprocessor for AppendEos {
+    fn name(&self) -> &'static str {
+        "append_eos"
+    }
+
+    fn apply(&self, ds: Dataset, _ctx: &PipelineCtx) -> Dataset {
+        let keys = self.keys.clone();
+        ds.map(move |mut ex| {
+            for k in &keys {
+                if let Some(Feature::Ints(v)) = ex.get_mut(k) {
+                    v.push(EOS_ID);
+                }
+            }
+            ex
+        })
+    }
+}
+
+/// Trim int features to a maximum length (pre-converter safety).
+pub struct TrimToLength {
+    pub key: String,
+    pub max_len: usize,
+}
+
+impl Preprocessor for TrimToLength {
+    fn name(&self) -> &'static str {
+        "trim"
+    }
+
+    fn apply(&self, ds: Dataset, _ctx: &PipelineCtx) -> Dataset {
+        let key = self.key.clone();
+        let max = self.max_len;
+        ds.map(move |mut ex| {
+            if let Some(Feature::Ints(v)) = ex.get_mut(&key) {
+                v.truncate(max);
+            }
+            ex
+        })
+    }
+}
+
+/// Drop examples whose int feature is empty/too short.
+pub struct FilterShort {
+    pub key: String,
+    pub min_len: usize,
+}
+
+impl Preprocessor for FilterShort {
+    fn name(&self) -> &'static str {
+        "filter_short"
+    }
+
+    fn apply(&self, ds: Dataset, _ctx: &PipelineCtx) -> Dataset {
+        let key = self.key.clone();
+        let min = self.min_len;
+        ds.filter(move |ex| {
+            ex.get(&key)
+                .and_then(|f| f.as_ints())
+                .map(|v| v.len() >= min)
+                .unwrap_or(false)
+        })
+    }
+}
+
+/// Rename features (seqio.rekey).
+pub struct Rekey {
+    pub renames: Vec<(String, String)>,
+}
+
+impl Rekey {
+    pub fn new(renames: &[(&str, &str)]) -> Self {
+        Self {
+            renames: renames
+                .iter()
+                .map(|(a, b)| (a.to_string(), b.to_string()))
+                .collect(),
+        }
+    }
+}
+
+impl Preprocessor for Rekey {
+    fn name(&self) -> &'static str {
+        "rekey"
+    }
+
+    fn apply(&self, ds: Dataset, _ctx: &PipelineCtx) -> Dataset {
+        let renames = self.renames.clone();
+        ds.map(move |mut ex| {
+            for (from, to) in &renames {
+                if let Some(v) = ex.remove(from) {
+                    ex.insert(to.clone(), v);
+                }
+            }
+            ex
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seqio::vocab::ByteVocabulary;
+    use crate::seqio::{ints_example, text_example};
+
+    fn ctx() -> PipelineCtx {
+        PipelineCtx { seed: 42 }
+    }
+
+    #[test]
+    fn tokenize_maps_text() {
+        let v: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(4));
+        let p = Tokenize::new(v.clone(), &[("text", "targets")]);
+        let ds = Dataset::from_vec(vec![text_example(&[("text", "ab")])]);
+        let out = p.apply(ds, &ctx()).collect_vec();
+        assert_eq!(out[0]["targets"].as_ints().unwrap(), &[b'a' as i32 + 3, b'b' as i32 + 3]);
+    }
+
+    #[test]
+    fn chunk_splits_and_drops_tiny_tails() {
+        let p = ChunkTokens::new("targets", 4);
+        let ds = Dataset::from_vec(vec![ints_example(&[("targets", (0..9).collect())])]);
+        let out = p.apply(ds, &ctx()).collect_vec();
+        // 9 tokens -> chunks [0..4],[4..8],[8..9]; tail len 1 < 25% of 4? 1 >= 1 so kept
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0]["targets"].as_ints().unwrap(), &[0, 1, 2, 3]);
+        assert_eq!(out[2]["targets"].as_ints().unwrap(), &[8]);
+    }
+
+    #[test]
+    fn span_corruption_invariants() {
+        let v: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(16));
+        let sc = SpanCorruption::new(v.clone());
+        let tokens: Vec<i32> = (10..90).collect();
+        let mut rng = Pcg64::new(1);
+        let (inputs, targets) = sc.corrupt(&tokens, &mut rng);
+        // All original tokens survive in inputs+targets (minus sentinels).
+        let mut recovered: Vec<i32> = Vec::new();
+        let mut from_inputs: Vec<i32> =
+            inputs.iter().copied().filter(|&t| !v.is_sentinel(t)).collect();
+        let from_targets: Vec<i32> =
+            targets.iter().copied().filter(|&t| !v.is_sentinel(t)).collect();
+        recovered.append(&mut from_inputs);
+        recovered.extend(from_targets.iter());
+        recovered.sort();
+        let mut orig = tokens.clone();
+        orig.sort();
+        assert_eq!(recovered, orig);
+        // ~15% of tokens are noise
+        let noise_frac = from_targets.len() as f32 / tokens.len() as f32;
+        assert!((0.05..=0.3).contains(&noise_frac), "{noise_frac}");
+        // targets end with a sentinel
+        assert!(v.is_sentinel(*targets.last().unwrap()));
+        // sentinels in inputs appear in decreasing id order (k=0,1,2..)
+        let sents: Vec<i32> =
+            inputs.iter().copied().filter(|&t| v.is_sentinel(t)).collect();
+        for w in sents.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+
+    #[test]
+    fn span_corruption_deterministic_per_seed() {
+        let v: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(16));
+        let sc = SpanCorruption::new(v);
+        let ds1 = Dataset::from_vec(vec![ints_example(&[("targets", (0..50).collect())])]);
+        let ds2 = Dataset::from_vec(vec![ints_example(&[("targets", (0..50).collect())])]);
+        let a = sc.apply(ds1, &ctx()).collect_vec();
+        let b = sc.apply(ds2, &ctx()).collect_vec();
+        assert_eq!(a, b);
+        let ds3 = Dataset::from_vec(vec![ints_example(&[("targets", (0..50).collect())])]);
+        let c = sc.apply(ds3, &PipelineCtx { seed: 43 }).collect_vec();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn prefix_lm_splits() {
+        let p = PrefixLm::default();
+        let ds = Dataset::from_vec(vec![ints_example(&[("targets", (0..20).collect())])]);
+        let out = p.apply(ds, &ctx()).collect_vec();
+        let inp = out[0]["inputs"].as_ints().unwrap();
+        let tgt = out[0]["targets"].as_ints().unwrap();
+        assert!(!inp.is_empty() && !tgt.is_empty());
+        let mut joined = inp.to_vec();
+        joined.extend_from_slice(tgt);
+        assert_eq!(joined, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn append_eos_and_trim_and_filter() {
+        let p1 = AppendEos::new(&["targets"]);
+        let p2 = TrimToLength { key: "targets".into(), max_len: 3 };
+        let p3 = FilterShort { key: "targets".into(), min_len: 3 };
+        let ds = Dataset::from_vec(vec![
+            ints_example(&[("targets", vec![5, 6, 7, 8])]),
+            ints_example(&[("targets", vec![9])]),
+        ]);
+        let out = p3
+            .apply(p2.apply(p1.apply(ds, &ctx()), &ctx()), &ctx())
+            .collect_vec();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0]["targets"].as_ints().unwrap(), &[5, 6, 7]);
+    }
+
+    #[test]
+    fn random_partition_sums() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..100 {
+            let total = 5 + rng.next_below(50) as usize;
+            let parts = 1 + rng.next_below(5.min(total as u64)) as usize;
+            let p = random_partition(total, parts, &mut rng);
+            assert_eq!(p.iter().sum::<usize>(), total);
+            assert_eq!(p.len(), parts);
+            assert!(p.iter().all(|&x| x >= 1));
+        }
+    }
+}

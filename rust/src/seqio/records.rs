@@ -1,0 +1,264 @@
+//! Sharded record files — the TFRecord/ArrayRecord substitute backing the
+//! deterministic cache (§3.2).
+//!
+//! Format (little endian):
+//! ```text
+//! file:   magic "T5XREC1\n" | entries...
+//! entry:  u32 payload_len | u32 crc32(payload) | payload
+//! index:  sidecar <file>.idx = u64 count | u64 byte-offset per entry
+//! ```
+//! The sidecar index makes records *seekable*, which is what gives the
+//! deterministic pipeline O(1) resume-from-arbitrary-step (§3.2
+//! Recoverability).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+pub const MAGIC: &[u8; 8] = b"T5XREC1\n";
+
+#[derive(Debug, thiserror::Error)]
+pub enum RecordError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad magic in {0}")]
+    BadMagic(PathBuf),
+    #[error("crc mismatch in {0} at entry {1}")]
+    CrcMismatch(PathBuf, usize),
+    #[error("truncated record file {0}")]
+    Truncated(PathBuf),
+    #[error("index out of range: {0} >= {1}")]
+    OutOfRange(usize, usize),
+}
+
+/// Streaming writer; also accumulates the sidecar index.
+pub struct RecordWriter {
+    path: PathBuf,
+    w: BufWriter<File>,
+    offsets: Vec<u64>,
+    pos: u64,
+}
+
+impl RecordWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self, RecordError> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(&path)?);
+        w.write_all(MAGIC)?;
+        Ok(Self { path, w, offsets: Vec::new(), pos: MAGIC.len() as u64 })
+    }
+
+    pub fn write(&mut self, payload: &[u8]) -> Result<(), RecordError> {
+        self.offsets.push(self.pos);
+        let crc = crc32fast::hash(payload);
+        self.w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        self.w.write_all(&crc.to_le_bytes())?;
+        self.w.write_all(payload)?;
+        self.pos += 8 + payload.len() as u64;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offsets.is_empty()
+    }
+
+    /// Flush data + write the sidecar index.
+    pub fn finish(mut self) -> Result<usize, RecordError> {
+        self.w.flush()?;
+        let idx_path = index_path(&self.path);
+        let mut iw = BufWriter::new(File::create(idx_path)?);
+        iw.write_all(&(self.offsets.len() as u64).to_le_bytes())?;
+        for off in &self.offsets {
+            iw.write_all(&off.to_le_bytes())?;
+        }
+        iw.flush()?;
+        Ok(self.offsets.len())
+    }
+}
+
+pub fn index_path(path: &Path) -> PathBuf {
+    let mut p = path.as_os_str().to_owned();
+    p.push(".idx");
+    PathBuf::from(p)
+}
+
+/// Random-access + sequential reader over one record file.
+pub struct RecordReader {
+    path: PathBuf,
+    r: BufReader<File>,
+    offsets: Vec<u64>,
+    next: usize,
+}
+
+impl RecordReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<Self, RecordError> {
+        let path = path.as_ref().to_path_buf();
+        let mut r = BufReader::new(File::open(&path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)
+            .map_err(|_| RecordError::Truncated(path.clone()))?;
+        if &magic != MAGIC {
+            return Err(RecordError::BadMagic(path));
+        }
+        // Load the sidecar index; if missing, rebuild by scanning.
+        let idx = index_path(&path);
+        let offsets = if idx.exists() {
+            let mut ir = BufReader::new(File::open(&idx)?);
+            let mut buf8 = [0u8; 8];
+            ir.read_exact(&mut buf8)?;
+            let n = u64::from_le_bytes(buf8) as usize;
+            let mut offsets = Vec::with_capacity(n);
+            for _ in 0..n {
+                ir.read_exact(&mut buf8)?;
+                offsets.push(u64::from_le_bytes(buf8));
+            }
+            offsets
+        } else {
+            Self::scan_offsets(&path)?
+        };
+        Ok(Self { path, r, offsets, next: 0 })
+    }
+
+    fn scan_offsets(path: &Path) -> Result<Vec<u64>, RecordError> {
+        let mut r = BufReader::new(File::open(path)?);
+        r.seek(SeekFrom::Start(MAGIC.len() as u64))?;
+        let mut offsets = Vec::new();
+        let mut pos = MAGIC.len() as u64;
+        let mut hdr = [0u8; 8];
+        loop {
+            match r.read_exact(&mut hdr) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+                Err(e) => return Err(e.into()),
+            }
+            let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as u64;
+            offsets.push(pos);
+            pos += 8 + len;
+            r.seek(SeekFrom::Start(pos))?;
+        }
+        Ok(offsets)
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offsets.is_empty()
+    }
+
+    /// Position the cursor at entry `i` (for resume).
+    pub fn seek_to(&mut self, i: usize) -> Result<(), RecordError> {
+        if i > self.offsets.len() {
+            return Err(RecordError::OutOfRange(i, self.offsets.len()));
+        }
+        self.next = i;
+        Ok(())
+    }
+
+    /// Read entry `i` without moving the sequential cursor.
+    pub fn read_at(&mut self, i: usize) -> Result<Vec<u8>, RecordError> {
+        if i >= self.offsets.len() {
+            return Err(RecordError::OutOfRange(i, self.offsets.len()));
+        }
+        self.r.seek(SeekFrom::Start(self.offsets[i]))?;
+        let mut hdr = [0u8; 8];
+        self.r
+            .read_exact(&mut hdr)
+            .map_err(|_| RecordError::Truncated(self.path.clone()))?;
+        let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        let mut payload = vec![0u8; len];
+        self.r
+            .read_exact(&mut payload)
+            .map_err(|_| RecordError::Truncated(self.path.clone()))?;
+        if crc32fast::hash(&payload) != crc {
+            return Err(RecordError::CrcMismatch(self.path.clone(), i));
+        }
+        Ok(payload)
+    }
+
+    /// Sequential read of the next entry.
+    pub fn read_next(&mut self) -> Option<Result<Vec<u8>, RecordError>> {
+        if self.next >= self.offsets.len() {
+            return None;
+        }
+        let i = self.next;
+        self.next += 1;
+        Some(self.read_at(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("rec_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let p = tmp("rt.rec");
+        let mut w = RecordWriter::create(&p).unwrap();
+        for i in 0..100u32 {
+            w.write(format!("payload-{i}").as_bytes()).unwrap();
+        }
+        assert_eq!(w.finish().unwrap(), 100);
+        let mut r = RecordReader::open(&p).unwrap();
+        assert_eq!(r.len(), 100);
+        assert_eq!(r.read_at(42).unwrap(), b"payload-42");
+        r.seek_to(98).unwrap();
+        assert_eq!(r.read_next().unwrap().unwrap(), b"payload-98");
+        assert_eq!(r.read_next().unwrap().unwrap(), b"payload-99");
+        assert!(r.read_next().is_none());
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(index_path(&p)).ok();
+    }
+
+    #[test]
+    fn survives_missing_index() {
+        let p = tmp("noidx.rec");
+        let mut w = RecordWriter::create(&p).unwrap();
+        for i in 0..10u32 {
+            w.write(&i.to_le_bytes()).unwrap();
+        }
+        w.finish().unwrap();
+        std::fs::remove_file(index_path(&p)).unwrap();
+        let mut r = RecordReader::open(&p).unwrap();
+        assert_eq!(r.len(), 10);
+        assert_eq!(r.read_at(3).unwrap(), 3u32.to_le_bytes());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let p = tmp("corrupt.rec");
+        let mut w = RecordWriter::create(&p).unwrap();
+        w.write(b"hello world, a reasonably long payload").unwrap();
+        w.finish().unwrap();
+        // Flip a byte in the payload region.
+        let mut bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        let mut r = RecordReader::open(&p).unwrap();
+        assert!(matches!(r.read_at(0), Err(RecordError::CrcMismatch(_, 0))));
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(index_path(&p)).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("badmagic.rec");
+        std::fs::write(&p, b"NOTMAGIC").unwrap();
+        assert!(matches!(RecordReader::open(&p), Err(RecordError::BadMagic(_))));
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,315 @@
+//! Vocabularies: the SentencePiece substitute.
+//!
+//! * [`ByteVocabulary`] — ByT5-style byte-level ids (paper §4 lists ByT5).
+//! * [`BpeVocabulary`] — a trainable byte-pair-encoding subword vocabulary,
+//!   standing in for SentencePiece (unavailable offline). Trained once on
+//!   the synthetic corpus by the cache job / examples.
+//!
+//! Shared id conventions (t5x defaults):
+//!   0 = PAD, 1 = EOS, 2 = UNK; the top `extra_ids` ids are the T5 sentinel
+//!   tokens used by span corruption (`<extra_id_0>` = vocab_size - 1, ...).
+
+use std::collections::{BTreeMap, HashMap};
+
+pub const PAD_ID: i32 = 0;
+pub const EOS_ID: i32 = 1;
+pub const UNK_ID: i32 = 2;
+
+/// Common vocabulary interface (seqio.Vocabulary).
+pub trait Vocabulary: Send + Sync {
+    /// Total size including special and sentinel ids.
+    fn vocab_size(&self) -> usize;
+    /// Number of reserved sentinel (extra) ids at the top of the range.
+    fn extra_ids(&self) -> usize;
+    fn encode(&self, text: &str) -> Vec<i32>;
+    fn decode(&self, ids: &[i32]) -> String;
+
+    /// id of sentinel k (k=0 is the highest id), following T5 convention.
+    fn sentinel(&self, k: usize) -> i32 {
+        assert!(k < self.extra_ids(), "sentinel {k} out of range");
+        (self.vocab_size() - 1 - k) as i32
+    }
+
+    fn is_sentinel(&self, id: i32) -> bool {
+        let lo = self.vocab_size() - self.extra_ids();
+        (id as usize) >= lo && (id as usize) < self.vocab_size()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Byte vocabulary
+// ---------------------------------------------------------------------------
+
+/// ByT5-style byte vocabulary: id = byte + 3.
+pub struct ByteVocabulary {
+    extra: usize,
+}
+
+impl ByteVocabulary {
+    pub fn new(extra_ids: usize) -> Self {
+        Self { extra: extra_ids }
+    }
+}
+
+impl Vocabulary for ByteVocabulary {
+    fn vocab_size(&self) -> usize {
+        3 + 256 + self.extra
+    }
+
+    fn extra_ids(&self) -> usize {
+        self.extra
+    }
+
+    fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32 + 3).collect()
+    }
+
+    fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter_map(|&id| {
+                if (3..259).contains(&id) {
+                    Some((id - 3) as u8)
+                } else {
+                    None // drop pad/eos/unk/sentinels
+                }
+            })
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BPE vocabulary
+// ---------------------------------------------------------------------------
+
+/// Trainable byte-pair-encoding vocabulary over whitespace-split words.
+/// Words are terminated with `</w>`; unknown characters map to UNK.
+pub struct BpeVocabulary {
+    /// token string -> id
+    token_to_id: HashMap<String, i32>,
+    id_to_token: Vec<String>,
+    /// merge rules in priority order: (left, right) -> rank
+    merges: HashMap<(String, String), usize>,
+    extra: usize,
+}
+
+const END: &str = "</w>";
+
+impl BpeVocabulary {
+    /// Train on a corpus to approximately `target_size` total ids
+    /// (including 3 specials and `extra_ids` sentinels).
+    pub fn train(corpus: impl Iterator<Item = String>, target_size: usize, extra_ids: usize) -> Self {
+        // 1. word frequencies
+        let mut word_freq: BTreeMap<String, u64> = BTreeMap::new();
+        for line in corpus {
+            for w in line.split_whitespace() {
+                *word_freq.entry(w.to_string()).or_default() += 1;
+            }
+        }
+        // 2. initial symbol sequences: chars + </w>
+        let mut words: Vec<(Vec<String>, u64)> = word_freq
+            .iter()
+            .map(|(w, f)| {
+                let mut syms: Vec<String> = w.chars().map(|c| c.to_string()).collect();
+                syms.push(END.to_string());
+                (syms, *f)
+            })
+            .collect();
+        // alphabet
+        let mut tokens: Vec<String> = {
+            let mut set: BTreeMap<String, ()> = BTreeMap::new();
+            set.insert(END.to_string(), ());
+            for (syms, _) in &words {
+                for s in syms {
+                    set.insert(s.clone(), ());
+                }
+            }
+            set.into_keys().collect()
+        };
+        let specials = 3;
+        let budget = target_size.saturating_sub(specials + extra_ids);
+        let mut merges: Vec<(String, String)> = Vec::new();
+        // 3. merge loop
+        while tokens.len() < budget {
+            let mut pair_freq: HashMap<(String, String), u64> = HashMap::new();
+            for (syms, f) in &words {
+                for win in syms.windows(2) {
+                    *pair_freq
+                        .entry((win[0].clone(), win[1].clone()))
+                        .or_default() += f;
+                }
+            }
+            // deterministic tie-break: highest freq, then lexicographic
+            let best = pair_freq.into_iter().max_by(|a, b| {
+                a.1.cmp(&b.1).then_with(|| b.0.cmp(&a.0))
+            });
+            let Some(((l, r), f)) = best else { break };
+            if f < 2 {
+                break; // nothing frequent left to merge
+            }
+            let merged = format!("{l}{r}");
+            for (syms, _) in &mut words {
+                let mut i = 0;
+                while i + 1 < syms.len() {
+                    if syms[i] == l && syms[i + 1] == r {
+                        syms[i] = merged.clone();
+                        syms.remove(i + 1);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            tokens.push(merged);
+            merges.push((l, r));
+        }
+        // 4. id assignment: specials, then tokens (sorted for determinism),
+        //    sentinels implicitly at the top.
+        tokens.sort();
+        tokens.dedup();
+        let mut token_to_id = HashMap::new();
+        let mut id_to_token = vec!["<pad>".to_string(), "<eos>".to_string(), "<unk>".to_string()];
+        for t in &tokens {
+            token_to_id.insert(t.clone(), id_to_token.len() as i32);
+            id_to_token.push(t.clone());
+        }
+        let merge_ranks = merges
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| (p, i))
+            .collect();
+        Self { token_to_id, id_to_token, merges: merge_ranks, extra: extra_ids }
+    }
+
+    fn encode_word(&self, word: &str) -> Vec<i32> {
+        let mut syms: Vec<String> = word.chars().map(|c| c.to_string()).collect();
+        syms.push(END.to_string());
+        // apply merges in rank order until none apply
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (rank, position)
+            for i in 0..syms.len().saturating_sub(1) {
+                if let Some(&rank) = self
+                    .merges
+                    .get(&(syms[i].clone(), syms[i + 1].clone()))
+                {
+                    if best.map(|(r, _)| rank < r).unwrap_or(true) {
+                        best = Some((rank, i));
+                    }
+                }
+            }
+            match best {
+                Some((_, i)) => {
+                    let merged = format!("{}{}", syms[i], syms[i + 1]);
+                    syms[i] = merged;
+                    syms.remove(i + 1);
+                }
+                None => break,
+            }
+        }
+        syms.iter()
+            .map(|s| self.token_to_id.get(s).copied().unwrap_or(UNK_ID))
+            .collect()
+    }
+}
+
+impl Vocabulary for BpeVocabulary {
+    fn vocab_size(&self) -> usize {
+        self.id_to_token.len() + self.extra
+    }
+
+    fn extra_ids(&self) -> usize {
+        self.extra
+    }
+
+    fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::new();
+        for w in text.split_whitespace() {
+            out.extend(self.encode_word(w));
+        }
+        out
+    }
+
+    fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            let idx = id as usize;
+            if id == PAD_ID || id == EOS_ID || self.is_sentinel(id) {
+                continue;
+            }
+            if let Some(tok) = self.id_to_token.get(idx) {
+                if let Some(stripped) = tok.strip_suffix(END) {
+                    out.push_str(stripped);
+                    out.push(' ');
+                } else if tok == "<unk>" {
+                    out.push('\u{fffd}');
+                } else {
+                    out.push_str(tok);
+                }
+            }
+        }
+        out.trim_end().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_vocab_roundtrip() {
+        let v = ByteVocabulary::new(16);
+        let ids = v.encode("hello");
+        assert_eq!(v.decode(&ids), "hello");
+        assert_eq!(v.vocab_size(), 3 + 256 + 16);
+        assert_eq!(v.sentinel(0), (v.vocab_size() - 1) as i32);
+        assert!(v.is_sentinel(v.sentinel(3)));
+        assert!(!v.is_sentinel(100));
+    }
+
+    #[test]
+    fn byte_decode_skips_specials() {
+        let v = ByteVocabulary::new(4);
+        let mut ids = v.encode("ab");
+        ids.push(EOS_ID);
+        ids.push(PAD_ID);
+        ids.push(v.sentinel(0));
+        assert_eq!(v.decode(&ids), "ab");
+    }
+
+    fn corpus() -> Vec<String> {
+        let base = [
+            "the quick brown fox jumps over the lazy dog",
+            "the dog barks at the quick fox",
+            "lazy brown dogs and quick red foxes",
+            "over and over the fox jumps",
+        ];
+        (0..50).map(|i| base[i % base.len()].to_string()).collect()
+    }
+
+    #[test]
+    fn bpe_trains_and_roundtrips() {
+        let v = BpeVocabulary::train(corpus().into_iter(), 200, 16);
+        assert!(v.vocab_size() <= 200 + 16);
+        let text = "the quick fox jumps";
+        let ids = v.encode(text);
+        assert!(!ids.is_empty());
+        assert_eq!(v.decode(&ids), text);
+        // frequent words should compress below character-level length
+        assert!(ids.len() < text.len());
+    }
+
+    #[test]
+    fn bpe_unknown_chars_map_to_unk() {
+        let v = BpeVocabulary::train(corpus().into_iter(), 100, 4);
+        let ids = v.encode("zebra ξ");
+        assert!(ids.contains(&UNK_ID));
+    }
+
+    #[test]
+    fn bpe_deterministic_training() {
+        let v1 = BpeVocabulary::train(corpus().into_iter(), 150, 8);
+        let v2 = BpeVocabulary::train(corpus().into_iter(), 150, 8);
+        assert_eq!(v1.encode("the quick brown fox"), v2.encode("the quick brown fox"));
+        assert_eq!(v1.vocab_size(), v2.vocab_size());
+    }
+}

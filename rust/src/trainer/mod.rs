@@ -1,0 +1,858 @@
+//! The t5x training loop (S7): data-parallel simulated hosts, explicit
+//! gradient synchronization, ZeRO-style sharded optimizer updates, metric
+//! logging, checkpointing hooks, and exact resume.
+//!
+//! Strategy semantics (paper §2.2) at runtime:
+//!
+//! * [`ParamStrategy::OneD`] — every host holds full parameters and full
+//!   optimizer state; per-step: grads are *ring all-reduced* over the data
+//!   axis and every host applies the same update ("1D parameter
+//!   partitioning": params replicated over the data axis).
+//! * [`ParamStrategy::TwoD`] — ZeRO-3/FSDP: per-step grads are
+//!   *reduce-scattered*, each host updates only its 1/D contiguous shard
+//!   of the flat parameter vector (and owns only that shard's optimizer
+//!   state), then the updated shards are *all-gathered*. Numerics are
+//!   identical to OneD for elementwise optimizers (verified by E4).
+//!
+//! Model parallelism at runtime is exercised by the Megatron FFN demo
+//! (examples/partitioning_demo.rs); the exported whole-model HLOs are
+//! data-parallel per host (mesh.model == 1 in the trainer).
+
+pub mod eval;
+pub mod infeed;
+pub mod recipes;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::checkpoint::{CheckpointManager, ExtraState};
+use crate::collectives::{chunk_bounds, run_ranks, CollectiveGroup};
+use crate::metrics::MetricsLogger;
+use crate::model::Params;
+use crate::optim::{Optimizer, OptimizerKind, Schedule};
+use crate::partitioning::ParamStrategy;
+use crate::runtime::artifacts::ModelManifest;
+use crate::runtime::{Artifacts, DeviceHandle, Executable, HostTensor};
+
+/// Flat parameter layout: manifest order, contiguous f32.
+#[derive(Debug, Clone)]
+pub struct FlatLayout {
+    /// (name, offset, len, shape) per parameter.
+    pub entries: Vec<(String, usize, usize, Vec<usize>)>,
+    pub total: usize,
+}
+
+impl FlatLayout {
+    pub fn from_manifest(m: &ModelManifest) -> FlatLayout {
+        let mut entries = Vec::with_capacity(m.params.len());
+        let mut off = 0usize;
+        for p in &m.params {
+            let len = p.elements();
+            entries.push((p.name.clone(), off, len, p.shape.clone()));
+            off += len;
+        }
+        FlatLayout { entries, total: off }
+    }
+
+    pub fn flatten(&self, params: &Params) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.total];
+        for (name, off, len, _) in &self.entries {
+            out[*off..off + len].copy_from_slice(params[name].as_f32());
+        }
+        out
+    }
+
+    pub fn unflatten(&self, flat: &[f32]) -> Params {
+        let mut out = Params::new();
+        for (name, off, len, shape) in &self.entries {
+            out.insert(
+                name.clone(),
+                HostTensor::f32(shape.clone(), flat[*off..off + len].to_vec()),
+            );
+        }
+        out
+    }
+
+    /// Build executor inputs (manifest order) from the flat vector.
+    pub fn tensors(&self, flat: &[f32]) -> Vec<HostTensor> {
+        self.entries
+            .iter()
+            .map(|(_, off, len, shape)| {
+                HostTensor::f32(shape.clone(), flat[*off..off + len].to_vec())
+            })
+            .collect()
+    }
+}
+
+/// Where batches come from.
+pub enum BatchSource {
+    /// Deterministic random tokens (tests/benches).
+    Synthetic { seed: u64 },
+    /// A spawned seqio infeed (one prefetching stream per host).
+    Infeed(infeed::Infeed),
+}
+
+impl BatchSource {
+    fn next(&self, m: &ModelManifest, host: usize, step: u64) -> Option<Vec<HostTensor>> {
+        match self {
+            BatchSource::Synthetic { seed } => {
+                Some(infeed::synthetic_batch(m, *seed, host, step))
+            }
+            BatchSource::Infeed(inf) => inf.next(host),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    pub model: String,
+    /// Data-parallel host count (runtime model axis is 1; see module docs).
+    pub num_hosts: usize,
+    pub strategy: ParamStrategy,
+    pub optimizer: OptimizerKind,
+    pub schedule: Schedule,
+    pub steps: u64,
+    pub seed: u64,
+    pub log_every: u64,
+    pub checkpoint_every: Option<u64>,
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Clip gradients to this global L2 norm (None = off). Computed on the
+    /// *global* (post-all-reduce) gradient so all strategies agree.
+    pub grad_clip_norm: Option<f64>,
+    /// Decoupled (AdamW-style) weight decay per step (None = off).
+    pub weight_decay: Option<f64>,
+}
+
+impl TrainerConfig {
+    pub fn quick(model: &str, steps: u64) -> TrainerConfig {
+        TrainerConfig {
+            model: model.to_string(),
+            num_hosts: 1,
+            strategy: ParamStrategy::OneD,
+            optimizer: OptimizerKind::adam(),
+            schedule: Schedule::RsqrtWithWarmup { peak: 3e-3, warmup: 20 },
+            steps,
+            seed: 0,
+            log_every: 10,
+            checkpoint_every: None,
+            checkpoint_dir: None,
+            grad_clip_norm: None,
+            weight_decay: None,
+        }
+    }
+}
+
+/// Per-step metric record returned by [`Trainer::train`].
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    pub step: u64,
+    pub loss: f64,
+    pub accuracy: f64,
+    pub lr: f64,
+    pub step_seconds: f64,
+}
+
+pub struct TrainSummary {
+    pub history: Vec<StepMetrics>,
+    pub final_step: u64,
+    pub comm_bytes: u64,
+    pub wall_seconds: f64,
+}
+
+impl TrainSummary {
+    pub fn final_loss(&self) -> f64 {
+        self.history.last().map(|h| h.loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn first_loss(&self) -> f64 {
+        self.history.first().map(|h| h.loss).unwrap_or(f64::NAN)
+    }
+}
+
+/// Per-host training state.
+struct HostState {
+    flat_params: Vec<f32>,
+    optimizer: Optimizer,
+}
+
+/// Accumulated wall time of one pipeline phase (all hosts summed),
+/// microseconds. Drives the §Perf breakdown in `bench_train_step`.
+#[derive(Default)]
+pub struct PhaseTimer(AtomicU64);
+
+impl PhaseTimer {
+    fn add_since(&self, t0: Instant) {
+        self.0.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.0.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Per-phase timing across the training loop.
+#[derive(Default)]
+pub struct TimingBreakdown {
+    pub infeed: PhaseTimer,
+    pub tensorize: PhaseTimer,
+    pub execute: PhaseTimer,
+    pub collectives: PhaseTimer,
+    pub optimizer: PhaseTimer,
+}
+
+impl TimingBreakdown {
+    pub fn reset(&self) {
+        self.infeed.reset();
+        self.tensorize.reset();
+        self.execute.reset();
+        self.collectives.reset();
+        self.optimizer.reset();
+    }
+
+    /// (phase, seconds) rows, largest first.
+    pub fn rows(&self) -> Vec<(&'static str, f64)> {
+        let mut rows = vec![
+            ("infeed", self.infeed.seconds()),
+            ("tensorize", self.tensorize.seconds()),
+            ("execute", self.execute.seconds()),
+            ("collectives", self.collectives.seconds()),
+            ("optimizer", self.optimizer.seconds()),
+        ];
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+}
+
+/// Gradient scale factor implementing global-norm clipping: 1 when the
+/// norm is within `clip`, else clip/norm.
+fn clip_scale(clip: Option<f64>, grads: impl Iterator<Item = f64>) -> f32 {
+    match clip {
+        None => 1.0,
+        Some(c) => {
+            let norm = grads.map(|g| g * g).sum::<f64>().sqrt();
+            clip_scale_from_norm(Some(c), norm)
+        }
+    }
+}
+
+fn clip_scale_from_norm(clip: Option<f64>, norm: f64) -> f32 {
+    match clip {
+        Some(c) if norm > c && norm > 0.0 => (c / norm) as f32,
+        _ => 1.0,
+    }
+}
+
+pub struct Trainer {
+    pub manifest: ModelManifest,
+    pub layout: FlatLayout,
+    pub config: TrainerConfig,
+    exe: Executable,
+    group: Arc<CollectiveGroup>,
+    hosts: Vec<Mutex<HostState>>,
+    pub start_step: u64,
+    pub logger: Arc<MetricsLogger>,
+    /// Per-phase wall-time accounting (summed over hosts); reset per train().
+    pub timing: TimingBreakdown,
+}
+
+impl Trainer {
+    pub fn new(
+        arts: &Artifacts,
+        device: &DeviceHandle,
+        config: TrainerConfig,
+    ) -> anyhow::Result<Trainer> {
+        let manifest = arts.model(&config.model)?.clone();
+        let layout = FlatLayout::from_manifest(&manifest);
+        let (exe, _) = device.compile(&manifest.entrypoint("train_step")?.hlo)?;
+        let group = CollectiveGroup::new(config.num_hosts);
+
+        // init params once, replicate to hosts (t5x broadcasts from host 0)
+        let init = crate::model::init_params(&manifest, config.seed);
+        let flat0 = layout.flatten(&init);
+        let hosts = (0..config.num_hosts)
+            .map(|h| {
+                Mutex::new(HostState {
+                    flat_params: flat0.clone(),
+                    optimizer: Self::build_optimizer(&config, &layout, h),
+                })
+            })
+            .collect();
+        Ok(Trainer {
+            manifest,
+            layout,
+            config,
+            exe,
+            group,
+            hosts,
+            start_step: 0,
+            logger: Arc::new(MetricsLogger::new()),
+            timing: TimingBreakdown::default(),
+        })
+    }
+
+    pub fn with_logger(mut self, logger: MetricsLogger) -> Self {
+        self.logger = Arc::new(logger);
+        self
+    }
+
+    fn build_optimizer(config: &TrainerConfig, layout: &FlatLayout, host: usize) -> Optimizer {
+        let mut opt = Optimizer::new(config.optimizer, config.schedule);
+        match config.strategy {
+            ParamStrategy::OneD => {
+                // full per-param states; factoring allowed
+                for (name, _, len, shape) in &layout.entries {
+                    let mat = if shape.len() >= 2 {
+                        Some((shape[0], shape[1..].iter().product()))
+                    } else {
+                        None
+                    };
+                    opt.register(name, *len, mat);
+                }
+            }
+            ParamStrategy::TwoD => {
+                // ZeRO: one flat contiguous shard per host
+                let bounds = chunk_bounds(layout.total, config.num_hosts);
+                let (lo, hi) = bounds[host];
+                opt.register("zero_shard", hi - lo, None);
+            }
+        }
+        opt
+    }
+
+    /// Total optimizer-state floats currently held per host (memory claim).
+    pub fn optimizer_state_floats(&self, host: usize) -> usize {
+        self.hosts[host].lock().unwrap().optimizer.state_floats()
+    }
+
+    /// Current parameters (host 0's copy).
+    pub fn params(&self) -> Params {
+        self.layout.unflatten(&self.hosts[0].lock().unwrap().flat_params)
+    }
+
+    /// Run the training loop over `source`, returning per-step metrics.
+    pub fn train(&self, source: &BatchSource) -> anyhow::Result<TrainSummary> {
+        let n = self.config.num_hosts;
+        let history = Mutex::new(Vec::<StepMetrics>::new());
+        let stop_step = AtomicU64::new(u64::MAX);
+        let t0 = Instant::now();
+        self.group.reset_stats();
+        self.timing.reset();
+
+        let errors: Vec<Option<String>> = run_ranks(n, |rank| {
+            match self.host_loop(rank, source, &history, &stop_step) {
+                Ok(()) => None,
+                Err(e) => Some(format!("host {rank}: {e}")),
+            }
+        });
+        for e in errors.into_iter().flatten() {
+            anyhow::bail!("{e}");
+        }
+        let mut history = history.into_inner().unwrap();
+        history.sort_by_key(|h| h.step);
+        let final_step = history.last().map(|h| h.step + 1).unwrap_or(self.start_step);
+        self.logger.flush();
+        Ok(TrainSummary {
+            history,
+            final_step,
+            comm_bytes: self.group.bytes_sent(),
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn host_loop(
+        &self,
+        rank: usize,
+        source: &BatchSource,
+        history: &Mutex<Vec<StepMetrics>>,
+        stop_step: &AtomicU64,
+    ) -> anyhow::Result<()> {
+        let m = &self.manifest;
+        let n = self.config.num_hosts;
+        let bounds = chunk_bounds(self.layout.total, n);
+        let end = self.start_step + self.config.steps;
+        for step in self.start_step..end {
+            if step >= stop_step.load(Ordering::Acquire) {
+                break;
+            }
+            let t_step = Instant::now();
+            // ---- infeed ----
+            let Some(batch) = source.next(m, rank, step) else {
+                // data exhausted: all hosts exhaust simultaneously because
+                // shards are balanced; signal and stop.
+                stop_step.fetch_min(step, Ordering::AcqRel);
+                // unblock peers mid-collective is unnecessary: all ranks
+                // exhaust at the same step by construction.
+                break;
+            };
+            self.timing.infeed.add_since(t_step);
+            // ---- forward/backward on the device ----
+            let t_tensorize = Instant::now();
+            let mut inputs = {
+                let host = self.hosts[rank].lock().unwrap();
+                self.layout.tensors(&host.flat_params)
+            };
+            inputs.extend(batch);
+            self.timing.tensorize.add_since(t_tensorize);
+            let t_exec = Instant::now();
+            let outs = self.exe.run(inputs)?;
+            self.timing.execute.add_since(t_exec);
+            let loss_sum = outs[0].first_f32();
+            let weight_sum = outs[1].first_f32();
+            let correct_sum = outs[2].first_f32();
+            anyhow::ensure!(loss_sum.is_finite(), "non-finite loss at step {step}");
+
+            // flatten grads (manifest order == layout order)
+            let mut flat_grad = vec![0.0f32; self.layout.total];
+            for (i, (_, off, len, _)) in self.layout.entries.iter().enumerate() {
+                flat_grad[*off..off + len].copy_from_slice(outs[3 + i].as_f32());
+            }
+
+            // ---- gradient sync + update ----
+            let t_comm = Instant::now();
+            let scalars =
+                self.group
+                    .all_reduce(rank, vec![loss_sum, weight_sum, correct_sum]);
+            let w_total = scalars[1].max(1e-9);
+            let clip = self.config.grad_clip_norm;
+            let decay = self.config.weight_decay.map(|d| d as f32);
+            let lr_now = self.config.schedule.lr(step) as f32;
+            match self.config.strategy {
+                ParamStrategy::OneD => {
+                    let summed = self.group.all_reduce(rank, flat_grad);
+                    self.timing.collectives.add_since(t_comm);
+                    let t_opt = Instant::now();
+                    // global-norm clip scale on the normalized gradient
+                    let scale = clip_scale(
+                        clip,
+                        summed.iter().map(|&x| (x / w_total) as f64),
+                    ) / w_total;
+                    let mut host = self.hosts[rank].lock().unwrap();
+                    let HostState { flat_params, optimizer } = &mut *host;
+                    for (name, off, len, _) in &self.layout.entries {
+                        let g: Vec<f32> = summed[*off..off + len]
+                            .iter()
+                            .map(|&x| x * scale)
+                            .collect();
+                        if let Some(d) = decay {
+                            for p in flat_params[*off..off + len].iter_mut() {
+                                *p -= lr_now * d * *p;
+                            }
+                        }
+                        optimizer.update(
+                            name,
+                            step,
+                            &mut flat_params[*off..off + len],
+                            &g,
+                        );
+                    }
+                    self.timing.optimizer.add_since(t_opt);
+                }
+                ParamStrategy::TwoD => {
+                    let chunk = self.group.reduce_scatter(rank, flat_grad);
+                    // global-norm clip needs the norm over ALL shards:
+                    // all-reduce the local squared sum (tiny payload).
+                    let local_sq: f64 = chunk
+                        .iter()
+                        .map(|&x| {
+                            let g = (x / w_total) as f64;
+                            g * g
+                        })
+                        .sum();
+                    let scale = if clip.is_some() {
+                        let total_sq =
+                            self.group.all_reduce(rank, vec![local_sq as f32])[0] as f64;
+                        clip_scale_from_norm(clip, total_sq.sqrt()) / w_total
+                    } else {
+                        1.0 / w_total
+                    };
+                    self.timing.collectives.add_since(t_comm);
+                    let t_opt = Instant::now();
+                    let (lo, hi) = bounds[rank];
+                    let g: Vec<f32> = chunk.iter().map(|&x| x * scale).collect();
+                    let updated_chunk = {
+                        let mut host = self.hosts[rank].lock().unwrap();
+                        let HostState { flat_params, optimizer } = &mut *host;
+                        if let Some(d) = decay {
+                            for p in flat_params[lo..hi].iter_mut() {
+                                *p -= lr_now * d * *p;
+                            }
+                        }
+                        optimizer.update(
+                            "zero_shard",
+                            step,
+                            &mut flat_params[lo..hi],
+                            &g,
+                        );
+                        flat_params[lo..hi].to_vec()
+                    };
+                    self.timing.optimizer.add_since(t_opt);
+                    let t_ag = Instant::now();
+                    let full =
+                        self.group.all_gather(rank, updated_chunk, self.layout.total);
+                    self.hosts[rank].lock().unwrap().flat_params = full;
+                    self.timing.collectives.add_since(t_ag);
+                }
+            }
+
+            // ---- metrics (host 0) ----
+            if rank == 0 {
+                let loss = (scalars[0] / scalars[1]) as f64;
+                let acc = (scalars[2] / scalars[1]) as f64;
+                let lr = self.config.schedule.lr(step);
+                let rec = StepMetrics {
+                    step,
+                    loss,
+                    accuracy: acc,
+                    lr,
+                    step_seconds: t_step.elapsed().as_secs_f64(),
+                };
+                if step % self.config.log_every == 0 || step + 1 == end {
+                    let tokens =
+                        (m.tokens_per_step() * n) as f64 / rec.step_seconds;
+                    self.logger.log(
+                        step,
+                        &[
+                            ("loss", loss),
+                            ("accuracy", acc),
+                            ("lr", lr),
+                            ("tokens_per_sec", tokens),
+                        ],
+                    );
+                }
+                history.lock().unwrap().push(rec);
+            }
+
+            // ---- checkpoint hook ----
+            if let (Some(every), Some(dir)) =
+                (self.config.checkpoint_every, self.config.checkpoint_dir.as_ref())
+            {
+                if (step + 1) % every == 0 || step + 1 == end {
+                    self.checkpoint_barrier(rank, step + 1, dir)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Synchronized checkpoint: all hosts contribute optimizer shards
+    /// (2D) / host 0 saves (1D has replicated state).
+    fn checkpoint_barrier(&self, rank: usize, step: u64, dir: &PathBuf) -> anyhow::Result<()> {
+        let extra: ExtraState = match self.config.strategy {
+            ParamStrategy::OneD => {
+                if rank == 0 {
+                    let host = self.hosts[0].lock().unwrap();
+                    let mut extra = Vec::new();
+                    for (name, _, _, _) in &self.layout.entries {
+                        for (slot, vec) in host.optimizer.state_vectors(name) {
+                            extra.push((format!("{name}/{slot}"), vec));
+                        }
+                    }
+                    extra
+                } else {
+                    Vec::new()
+                }
+            }
+            ParamStrategy::TwoD => {
+                // gather each slot's flat shards to every host (cheap at
+                // these sizes); host 0 persists.
+                let my = {
+                    let host = self.hosts[rank].lock().unwrap();
+                    host.optimizer.state_vectors("zero_shard")
+                };
+                let mut extra = Vec::new();
+                for (slot, vec) in my {
+                    let full = self.group.all_gather(rank, vec, self.layout.total);
+                    if rank == 0 {
+                        extra.push((format!("flat/{slot}"), full));
+                    }
+                }
+                extra
+            }
+        };
+        self.group.barrier(rank);
+        if rank == 0 {
+            let mgr = CheckpointManager::new(dir.clone());
+            let params = self.layout.unflatten(&self.hosts[0].lock().unwrap().flat_params);
+            let mut meta_extra = extra;
+            meta_extra.push(("trainstate/step".into(), vec![step as f32]));
+            mgr.save(step, &params, &meta_extra)?;
+        }
+        self.group.barrier(rank);
+        Ok(())
+    }
+
+    /// Restore params + optimizer state + step from the latest checkpoint.
+    pub fn restore_latest(&mut self, dir: &PathBuf) -> anyhow::Result<u64> {
+        let mgr = CheckpointManager::new(dir.clone());
+        let step = mgr
+            .latest()
+            .ok_or_else(|| anyhow::anyhow!("no checkpoint in {}", dir.display()))?;
+        let (params, extra) = mgr.restore(step)?;
+        let flat = self.layout.flatten(&params);
+        let n = self.config.num_hosts;
+        let bounds = chunk_bounds(self.layout.total, n);
+        for (h, hs) in self.hosts.iter().enumerate() {
+            let mut host = hs.lock().unwrap();
+            host.flat_params = flat.clone();
+            for (key, vec) in &extra {
+                if key == "trainstate/step" {
+                    continue;
+                }
+                match self.config.strategy {
+                    ParamStrategy::OneD => {
+                        if let Some((name, slot)) = key.rsplit_once('/') {
+                            host.optimizer.restore_state_vector(name, slot, vec.clone());
+                        }
+                    }
+                    ParamStrategy::TwoD => {
+                        if let Some(slot) = key.strip_prefix("flat/") {
+                            let (lo, hi) = bounds[h];
+                            host.optimizer.restore_state_vector(
+                                "zero_shard",
+                                slot,
+                                vec[lo..hi].to_vec(),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        self.start_step = step;
+        Ok(step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn device() -> DeviceHandle {
+        DeviceHandle::spawn().unwrap()
+    }
+
+    #[test]
+    fn loss_decreases_on_fixed_batch_distribution() {
+        let arts = Artifacts::load_default().unwrap();
+        let dev = device();
+        let mut cfg = TrainerConfig::quick("t5-nano-dec", 12);
+        cfg.schedule = Schedule::Constant(2e-3);
+        let trainer = Trainer::new(&arts, &dev, cfg).unwrap();
+        let summary = trainer.train(&BatchSource::Synthetic { seed: 7 }).unwrap();
+        assert_eq!(summary.history.len(), 12);
+        assert!(
+            summary.final_loss() < summary.first_loss(),
+            "loss did not decrease: {} -> {}",
+            summary.first_loss(),
+            summary.final_loss()
+        );
+        dev.shutdown();
+    }
+
+    #[test]
+    fn multi_host_1d_matches_single_host_global_batch() {
+        // 2 hosts with the same per-host batch == global batch 2x; loss at
+        // step 0 should equal the average of both hosts' losses and grads
+        // must sync (smoke: just ensure it runs and improves).
+        let arts = Artifacts::load_default().unwrap();
+        let dev = device();
+        let mut cfg = TrainerConfig::quick("t5-nano-dec", 6);
+        cfg.num_hosts = 2;
+        let trainer = Trainer::new(&arts, &dev, cfg).unwrap();
+        let summary = trainer.train(&BatchSource::Synthetic { seed: 3 }).unwrap();
+        assert!(summary.final_loss() < summary.first_loss());
+        assert!(summary.comm_bytes > 0);
+        dev.shutdown();
+    }
+
+    #[test]
+    fn zero3_matches_1d_losses_exactly() {
+        // E4: 2D (ZeRO-3) must reproduce the 1D loss trajectory with an
+        // elementwise optimizer.
+        let arts = Artifacts::load_default().unwrap();
+        let dev = device();
+        let mk = |strategy| {
+            let mut cfg = TrainerConfig::quick("t5-nano-dec", 5);
+            cfg.num_hosts = 2;
+            cfg.strategy = strategy;
+            cfg.seed = 11;
+            Trainer::new(&arts, &dev, cfg).unwrap()
+        };
+        let s1 = mk(ParamStrategy::OneD)
+            .train(&BatchSource::Synthetic { seed: 5 })
+            .unwrap();
+        let s2 = mk(ParamStrategy::TwoD)
+            .train(&BatchSource::Synthetic { seed: 5 })
+            .unwrap();
+        for (a, b) in s1.history.iter().zip(&s2.history) {
+            assert!(
+                (a.loss - b.loss).abs() < 1e-4,
+                "step {}: 1D {} vs 2D {}",
+                a.step,
+                a.loss,
+                b.loss
+            );
+        }
+        // and ZeRO holds ~1/2 the optimizer state per host
+        let t1 = mk(ParamStrategy::OneD);
+        let t2 = mk(ParamStrategy::TwoD);
+        assert!(
+            t2.optimizer_state_floats(0) * 2 <= t1.optimizer_state_floats(0) + 16
+        );
+        dev.shutdown();
+    }
+
+    #[test]
+    fn checkpoint_and_resume_continue_exactly() {
+        let arts = Artifacts::load_default().unwrap();
+        let dev = device();
+        let dir = std::env::temp_dir().join(format!("trainer_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // run 6 steps straight
+        let mut cfg = TrainerConfig::quick("t5-nano-dec", 6);
+        cfg.seed = 2;
+        cfg.schedule = Schedule::Constant(1e-3);
+        let t_full = Trainer::new(&arts, &dev, cfg.clone()).unwrap();
+        let full = t_full.train(&BatchSource::Synthetic { seed: 9 }).unwrap();
+
+        // run 3 + checkpoint + restore + 3
+        let mut cfg_a = cfg.clone();
+        cfg_a.steps = 3;
+        cfg_a.checkpoint_every = Some(3);
+        cfg_a.checkpoint_dir = Some(dir.clone());
+        let t_a = Trainer::new(&arts, &dev, cfg_a).unwrap();
+        t_a.train(&BatchSource::Synthetic { seed: 9 }).unwrap();
+
+        let mut cfg_b = cfg;
+        cfg_b.steps = 3;
+        let mut t_b = Trainer::new(&arts, &dev, cfg_b).unwrap();
+        let resumed_step = t_b.restore_latest(&dir).unwrap();
+        assert_eq!(resumed_step, 3);
+        let resumed = t_b.train(&BatchSource::Synthetic { seed: 9 }).unwrap();
+
+        // steps 3..6 must match the uninterrupted run exactly
+        for (a, b) in full.history[3..].iter().zip(&resumed.history) {
+            assert_eq!(a.step, b.step);
+            assert!(
+                (a.loss - b.loss).abs() < 1e-5,
+                "step {}: {} vs {}",
+                a.step,
+                a.loss,
+                b.loss
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        dev.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod feature_tests {
+    use super::*;
+
+    #[test]
+    fn grad_clip_keeps_training_stable_and_changes_trajectory() {
+        let arts = Artifacts::load_default().unwrap();
+        let dev = DeviceHandle::spawn().unwrap();
+        let mut base = TrainerConfig::quick("t5-nano-dec", 5);
+        base.schedule = Schedule::Constant(1e-3);
+        let unclipped = Trainer::new(&arts, &dev, base.clone())
+            .unwrap()
+            .train(&BatchSource::Synthetic { seed: 2 })
+            .unwrap();
+        let mut clipped_cfg = base.clone();
+        clipped_cfg.grad_clip_norm = Some(0.05); // tight: always active
+        let clipped = Trainer::new(&arts, &dev, clipped_cfg)
+            .unwrap()
+            .train(&BatchSource::Synthetic { seed: 2 })
+            .unwrap();
+        // both runs train; trajectories differ because the clip is active
+        assert!(clipped.final_loss().is_finite());
+        assert!(
+            (clipped.final_loss() - unclipped.final_loss()).abs() > 1e-6,
+            "clip had no effect"
+        );
+        dev.shutdown();
+    }
+
+    #[test]
+    fn grad_clip_identical_across_strategies() {
+        // clipping is computed on the GLOBAL gradient, so 1D and 2D still
+        // agree step-for-step with clipping enabled.
+        let arts = Artifacts::load_default().unwrap();
+        let dev = DeviceHandle::spawn().unwrap();
+        let mk = |strategy| {
+            let mut cfg = TrainerConfig::quick("t5-nano-dec", 4);
+            cfg.num_hosts = 2;
+            cfg.strategy = strategy;
+            cfg.grad_clip_norm = Some(0.1);
+            cfg.schedule = Schedule::Constant(1e-3);
+            Trainer::new(&arts, &dev, cfg).unwrap()
+        };
+        let a = mk(ParamStrategy::OneD)
+            .train(&BatchSource::Synthetic { seed: 4 })
+            .unwrap();
+        let b = mk(ParamStrategy::TwoD)
+            .train(&BatchSource::Synthetic { seed: 4 })
+            .unwrap();
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert!((x.loss - y.loss).abs() < 1e-4, "step {}: {} vs {}", x.step, x.loss, y.loss);
+        }
+        dev.shutdown();
+    }
+
+    #[test]
+    fn weight_decay_shrinks_param_norm() {
+        let arts = Artifacts::load_default().unwrap();
+        let dev = DeviceHandle::spawn().unwrap();
+        let mut cfg = TrainerConfig::quick("t5-nano-dec", 6);
+        cfg.schedule = Schedule::Constant(1e-4); // tiny lr: decay dominates
+        cfg.weight_decay = Some(5.0);
+        let trainer = Trainer::new(&arts, &dev, cfg.clone()).unwrap();
+        let norm_before: f64 = trainer
+            .params()
+            .values()
+            .map(|t| t.norm().powi(2))
+            .sum::<f64>()
+            .sqrt();
+        trainer.train(&BatchSource::Synthetic { seed: 1 }).unwrap();
+        let norm_after: f64 = trainer
+            .params()
+            .values()
+            .map(|t| t.norm().powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(
+            norm_after < norm_before * 0.999,
+            "decay did not shrink params: {norm_before} -> {norm_after}"
+        );
+        dev.shutdown();
+    }
+
+    #[test]
+    fn timing_breakdown_accounts_for_step_time() {
+        let arts = Artifacts::load_default().unwrap();
+        let dev = DeviceHandle::spawn().unwrap();
+        let cfg = TrainerConfig::quick("t5-nano-dec", 3);
+        let trainer = Trainer::new(&arts, &dev, cfg).unwrap();
+        let summary = trainer.train(&BatchSource::Synthetic { seed: 0 }).unwrap();
+        let rows = trainer.timing.rows();
+        let phase_total: f64 = rows.iter().map(|(_, s)| s).sum();
+        assert!(phase_total > 0.0);
+        // phases cover the bulk of wall time (single host, no overlap)
+        assert!(
+            phase_total > 0.5 * summary.wall_seconds,
+            "phases {phase_total} vs wall {}",
+            summary.wall_seconds
+        );
+        // execute dominates on this workload
+        assert_eq!(rows[0].0, "execute");
+        dev.shutdown();
+    }
+}

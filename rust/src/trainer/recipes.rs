@@ -1,0 +1,243 @@
+//! Recipes: canonical task/pipeline constructions shared by the examples,
+//! the CLI launcher, and the benches — the t5x "configs" directory as code.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::runtime::artifacts::ModelManifest;
+use crate::seqio::cache::{cache_task, CacheConfig, CacheMeta};
+use crate::seqio::dataset::Dataset;
+use crate::seqio::deterministic::{strip_index, DeterministicPipeline};
+use crate::seqio::feature_converters::{
+    lengths, EncDecConverter, FeatureConverter, LmConverter,
+};
+use crate::seqio::preprocessors::{AppendEos, ChunkTokens, SpanCorruption, Tokenize};
+use crate::seqio::source::SyntheticTextSource;
+use crate::seqio::task::Task;
+use crate::seqio::vocab::{ByteVocabulary, Vocabulary};
+use crate::trainer::infeed::Infeed;
+
+/// Byte vocabulary sized for every exported model (vocab >= 275).
+pub fn default_vocab() -> Arc<dyn Vocabulary> {
+    Arc::new(ByteVocabulary::new(16))
+}
+
+/// Causal-LM pretraining task over the synthetic corpus: tokenize ->
+/// chunk(seq_len-1) -> append EOS. (The C4-substitute pipeline.)
+pub fn lm_task(name: &str, docs: usize, seq_len: usize, seed: u64) -> Arc<Task> {
+    let vocab = default_vocab();
+    Task::builder(name)
+        .source(Arc::new(SyntheticTextSource::new(seed, docs)))
+        .preprocessor(Arc::new(Tokenize::new(vocab.clone(), &[("text", "targets")])))
+        .preprocessor(Arc::new(ChunkTokens::new("targets", seq_len - 1)))
+        .preprocessor(Arc::new(AppendEos::new(&["targets"])))
+        .output_feature("targets", vocab, true)
+        .build()
+}
+
+/// T5 span-corruption pretraining task (the enc-dec objective).
+pub fn span_corruption_task(name: &str, docs: usize, seq_len: usize, seed: u64) -> Arc<Task> {
+    let vocab = default_vocab();
+    Task::builder(name)
+        .source(Arc::new(SyntheticTextSource::new(seed, docs)))
+        .preprocessor(Arc::new(Tokenize::new(vocab.clone(), &[("text", "targets")])))
+        .preprocessor(Arc::new(ChunkTokens::new("targets", seq_len)))
+        .preprocessor(Arc::new(SpanCorruption::new(vocab.clone())))
+        .preprocessor(Arc::new(AppendEos::new(&["targets"])))
+        .output_feature("inputs", vocab.clone(), false)
+        .output_feature("targets", vocab, true)
+        .build()
+}
+
+/// A synthetic *seq2seq* task with learnable structure: the target is the
+/// input sentence with its words reversed. Used by the finetune/eval
+/// example (E15) — exact-match/BLEU rise above chance quickly.
+pub fn reverse_words_task(name: &str, examples: usize, seed: u64) -> Arc<Task> {
+    let vocab = default_vocab();
+    let src = SyntheticTextSource::with_shape(seed, examples, 1, 5);
+    Task::builder(name)
+        .source(Arc::new(src))
+        .preprocessor(Arc::new(MapReverse))
+        .preprocessor(Arc::new(Tokenize::new(
+            vocab.clone(),
+            &[("inputs_text", "inputs"), ("targets_text", "targets")],
+        )))
+        .preprocessor(Arc::new(AppendEos::new(&["targets"])))
+        .output_feature("inputs", vocab.clone(), false)
+        .output_feature("targets", vocab, true)
+        .metric(crate::seqio::evaluation::Metric::ExactMatch)
+        .metric(crate::seqio::evaluation::Metric::TokenAccuracy)
+        .metric(crate::seqio::evaluation::Metric::Bleu)
+        .build()
+}
+
+/// text -> (inputs_text = text, targets_text = words reversed).
+struct MapReverse;
+
+impl crate::seqio::preprocessors::Preprocessor for MapReverse {
+    fn name(&self) -> &'static str {
+        "map_reverse"
+    }
+
+    fn apply(
+        &self,
+        ds: Dataset,
+        _ctx: &crate::seqio::preprocessors::PipelineCtx,
+    ) -> Dataset {
+        ds.map(|mut ex| {
+            let text = ex["text"].as_text().unwrap_or("").trim_end_matches('.').to_string();
+            let reversed: Vec<&str> = text.split_whitespace().rev().collect();
+            ex.insert(
+                "inputs_text".into(),
+                crate::seqio::Feature::Text(text.clone()),
+            );
+            ex.insert(
+                "targets_text".into(),
+                crate::seqio::Feature::Text(reversed.join(" ")),
+            );
+            ex
+        })
+    }
+}
+
+/// Cache a task if not already cached (idempotent `make`-style).
+pub fn ensure_cached(
+    task: &Task,
+    dir: &Path,
+    num_shards: usize,
+    seed: u64,
+) -> anyhow::Result<CacheMeta> {
+    if dir.join("cache_meta.json").exists() {
+        let meta = CacheMeta::load(dir)?;
+        if meta.num_shards == num_shards && meta.seed == seed {
+            return Ok(meta);
+        }
+    }
+    cache_task(task, dir, &CacheConfig { num_shards, seed, workers: 4 })
+}
+
+/// Infeed over a cached deterministic pipeline with the right converter
+/// for the model arch, resuming at `start_step`.
+pub fn cached_infeed(
+    m: &ModelManifest,
+    cache_dir: &Path,
+    num_hosts: usize,
+    start_step: u64,
+) -> Infeed {
+    let batch = m.batch();
+    let seq = m.seq_len();
+    let arch = m.arch.clone();
+    let dir = cache_dir.to_path_buf();
+    Infeed::spawn(m, num_hosts, 4, move |host| {
+        let p = DeterministicPipeline::open(&dir).expect("open cache");
+        let ds = p
+            .host_stream(host, num_hosts, start_step as usize * batch, true)
+            .map(strip_index);
+        if arch == "encdec" {
+            let tl = lengths(&[("inputs", seq), ("targets", seq)]);
+            EncDecConverter.convert(ds, &tl)
+        } else {
+            let tl = lengths(&[("targets", seq)]);
+            LmConverter.convert(ds, &tl)
+        }
+    })
+}
+
+/// Eval batches straight from a task (no cache), converter per arch.
+pub fn eval_batches(
+    m: &ModelManifest,
+    task: &Task,
+    seed: u64,
+    num_batches: usize,
+) -> Vec<Vec<crate::runtime::HostTensor>> {
+    let seq = m.seq_len();
+    let ds = task.dataset(seed, 0, 1);
+    let converted = if m.arch == "encdec" {
+        let tl = lengths(&[("inputs", seq), ("targets", seq)]);
+        EncDecConverter.convert(ds, &tl)
+    } else {
+        let tl = lengths(&[("targets", seq)]);
+        LmConverter.convert(ds, &tl)
+    };
+    let examples = converted.collect_vec();
+    examples
+        .chunks(m.batch())
+        .filter(|c| c.len() == m.batch())
+        .take(num_batches)
+        .map(|c| crate::trainer::infeed::assemble_batch(m, c))
+        .collect()
+}
+
+/// Raw (target, source-pairs) for decode-based evaluation of the
+/// reverse-words task: returns (enc_batch_tensors, target_strings).
+pub fn decode_eval_set(
+    m: &ModelManifest,
+    task: &Task,
+    seed: u64,
+) -> (Vec<crate::runtime::HostTensor>, Vec<String>, Vec<String>) {
+    assert_eq!(m.arch, "encdec");
+    let seq = m.seq_len();
+    let examples = task.dataset(seed, 0, 1).take(m.batch()).collect_vec();
+    assert_eq!(examples.len(), m.batch(), "not enough eval examples");
+    let tl = lengths(&[("inputs", seq), ("targets", seq)]);
+    let converted: Vec<_> = examples
+        .iter()
+        .map(|e| EncDecConverter.convert_example(e, &tl))
+        .collect();
+    let batch = crate::trainer::infeed::assemble_batch(m, &converted);
+    let enc = batch[0].clone();
+    let targets: Vec<String> = examples
+        .iter()
+        .map(|e| e["targets_text"].as_text().unwrap_or("").to_string())
+        .collect();
+    let inputs: Vec<String> = examples
+        .iter()
+        .map(|e| e["inputs_text"].as_text().unwrap_or("").to_string())
+        .collect();
+    (vec![enc], targets, inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Artifacts;
+
+    #[test]
+    fn reverse_task_produces_learnable_pairs() {
+        let task = reverse_words_task("rev_test", 10, 1);
+        let exs = task.dataset(0, 0, 1).collect_vec();
+        assert_eq!(exs.len(), 10);
+        for ex in &exs {
+            let inp = ex["inputs_text"].as_text().unwrap();
+            let tgt = ex["targets_text"].as_text().unwrap();
+            let rev: Vec<&str> = inp.split_whitespace().rev().collect();
+            assert_eq!(tgt, rev.join(" "));
+            assert!(!ex["inputs"].as_ints().unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn eval_batches_shapes() {
+        let arts = Artifacts::load_default().unwrap();
+        let m = arts.model("t5-nano-dec").unwrap();
+        let task = lm_task("recipes_eval_lm", 100, m.seq_len(), 3);
+        let batches = eval_batches(m, &task, 0, 3);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].len(), 3);
+        assert_eq!(batches[0][0].shape, vec![m.batch(), m.seq_len()]);
+    }
+
+    #[test]
+    fn ensure_cached_idempotent() {
+        let dir = std::env::temp_dir().join(format!("recipes_cache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let task = lm_task("recipes_cache_lm", 50, 32, 1);
+        let m1 = ensure_cached(&task, &dir, 4, 9).unwrap();
+        let mtime1 = std::fs::metadata(dir.join("cache_meta.json")).unwrap().modified().unwrap();
+        let m2 = ensure_cached(&task, &dir, 4, 9).unwrap();
+        let mtime2 = std::fs::metadata(dir.join("cache_meta.json")).unwrap().modified().unwrap();
+        assert_eq!(m1.num_examples, m2.num_examples);
+        assert_eq!(mtime1, mtime2, "cache should not be rebuilt");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,129 @@
+//! Tiny CLI argument parser (clap substitute).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! args, and pass-through of `--gin.<binding>=<value>` overrides to the
+//! [`crate::gin`] configuration system (the t5x launcher convention).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// `--gin.trainer.steps=100` style overrides, with the `gin.` stripped.
+    pub gin_overrides: Vec<String>,
+}
+
+impl Args {
+    /// Parse std::env::args() (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(raw: Vec<String>) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        // First non-flag token is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some(binding) = rest.strip_prefix("gin.") {
+                    args.gin_overrides.push(binding.to_string());
+                    continue;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        // Convention: positionals come before options; a bare token after
+        // `--key` is consumed as that option's value.
+        let a = Args::parse(s(&[
+            "train", "pos1", "--model", "t5-nano-dec", "--steps=10", "--verbose",
+        ]));
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("t5-nano-dec"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 10);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn gin_overrides_passthrough() {
+        let a = Args::parse(s(&["train", "--gin.trainer.lr=0.1", "--gin.seqio.seed=3"]));
+        assert_eq!(a.gin_overrides, vec!["trainer.lr=0.1", "seqio.seed=3"]);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = Args::parse(s(&["--steps", "abc"]));
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(s(&["--check"]));
+        assert!(a.has_flag("check"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Substrate utilities implemented from scratch (no serde/clap/rand/tokio
+//! in the offline registry — see DESIGN.md substitution table).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threads;

@@ -1,0 +1,256 @@
+//! Deterministic, splittable PRNG (rand-crate substitute).
+//!
+//! Two generators:
+//! * [`SplitMix64`] — the exact splitmix64 used by `model.pattern_init` on
+//!   the Python side; parameter "pattern" initialization must be bit-equal
+//!   across languages for the golden tests.
+//! * [`Pcg64`] — the workhorse stream RNG used by seqio shuffling, synthetic
+//!   data generation and parameter init. Seeded, splittable by `fold_in`.
+
+/// splitmix64 step (Vigna). Must match `python/compile/model.py`.
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// FNV-1a 64-bit hash. Must match `python/compile/model.py`.
+#[inline]
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in s.as_bytes() {
+        h = (h ^ (*b as u64)).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Stateless splitmix64 stream used for cross-language pattern init.
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSH-RR 64/32 with 128-bit-ish state emulated as two u64 lanes.
+/// Deterministic across platforms; not cryptographic.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xDA3E_39CB_94B9_5BDB)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(splitmix64(seed));
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent generator (jax.random.fold_in analog).
+    pub fn fold_in(&self, data: u64) -> Pcg64 {
+        Pcg64::with_stream(
+            splitmix64(self.state ^ splitmix64(data)),
+            splitmix64(self.inc ^ data.rotate_left(17)),
+        )
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, n) without modulo bias (Lemire).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = widening_mul(x, n);
+            if lo >= n || lo >= x.wrapping_neg() % n {
+                return hi;
+            }
+        }
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn next_normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Truncated (±2σ, re-draw) normal, the t5x parameter-init default.
+    pub fn next_trunc_normal(&mut self) -> f64 {
+        loop {
+            let x = self.next_normal();
+            if x.abs() <= 2.0 {
+                return x;
+            }
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn sample_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[inline]
+fn widening_mul(a: u64, b: u64) -> (u64, u64) {
+    let r = (a as u128) * (b as u128);
+    ((r >> 64) as u64, r as u64)
+}
+
+/// Cross-language deterministic parameter init, mirroring
+/// `model.pattern_init`: value[i] = (2*u[i] - 1) * scale with
+/// u[i] = splitmix64(fnv1a64(name) ^ seed ^ (i+1)) >> 11 scaled to [0,1).
+pub fn pattern_init(name: &str, count: usize, scale: f32, seed: u64) -> Vec<f32> {
+    let base = fnv1a64(name) ^ seed;
+    (0..count)
+        .map(|i| {
+            let u = splitmix64(base ^ (i as u64 + 1)) >> 11;
+            let f = u as f64 * (1.0 / (1u64 << 53) as f64);
+            ((2.0 * f - 1.0) * scale as f64) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // Reference values from the canonical splitmix64 with seed 1234567.
+        let mut sm = SplitMix64::new(1234567);
+        let v: Vec<u64> = (0..3).map(|_| sm.next_u64()).collect();
+        assert_eq!(v[0], splitmix64(1234567));
+    }
+
+    #[test]
+    fn fnv_matches_python_formula() {
+        // Value computed from the same algorithm in python (see model.py).
+        assert_eq!(fnv1a64(""), 0xCBF2_9CE4_8422_2325);
+        assert_ne!(fnv1a64("a"), fnv1a64("b"));
+    }
+
+    #[test]
+    fn pcg_deterministic_and_uniformish() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+        // mean of uniforms ~ 0.5
+        let mut r = Pcg64::new(7);
+        let mean: f64 = (0..10_000).map(|_| r.next_f64()).sum::<f64>() / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn next_below_unbiased_range() {
+        let mut r = Pcg64::new(1);
+        for _ in 0..1000 {
+            assert!(r.next_below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn fold_in_independent() {
+        let r = Pcg64::new(9);
+        let mut a = r.fold_in(1);
+        let mut b = r.fold_in(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn trunc_normal_bounded() {
+        let mut r = Pcg64::new(3);
+        for _ in 0..1000 {
+            assert!(r.next_trunc_normal().abs() <= 2.0);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pattern_init_salted_and_bounded() {
+        let a = pattern_init("x", 100, 0.05, 0);
+        let b = pattern_init("x", 100, 0.05, 0);
+        let c = pattern_init("y", 100, 0.05, 0);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.iter().all(|v| v.abs() <= 0.05));
+    }
+}

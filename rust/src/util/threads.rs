@@ -1,0 +1,141 @@
+//! Thread utilities (tokio substitute): bounded SPSC/MPSC channels via
+//! std::sync::mpsc plus a tiny scoped worker-pool used by the seqio cache
+//! job and prefetch pipelines.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// A bounded producer/consumer queue with explicit close semantics, used as
+/// the infeed backpressure mechanism (§3.2 throughput claims, E9).
+/// Namespace struct: construct ends via [`Pipe::bounded`].
+pub struct Pipe<T>(std::marker::PhantomData<T>);
+
+impl<T> Pipe<T> {
+    pub fn bounded(cap: usize) -> (PipeSender<T>, PipeReceiver<T>) {
+        let (tx, rx) = sync_channel(cap.max(1));
+        (PipeSender { tx }, PipeReceiver { rx })
+    }
+}
+
+pub struct PipeSender<T> {
+    tx: SyncSender<T>,
+}
+
+impl<T> Clone for PipeSender<T> {
+    fn clone(&self) -> Self {
+        Self { tx: self.tx.clone() }
+    }
+}
+
+impl<T> PipeSender<T> {
+    /// Blocks when the pipe is full (backpressure). Returns false if the
+    /// receiver hung up.
+    pub fn send(&self, item: T) -> bool {
+        self.tx.send(item).is_ok()
+    }
+}
+
+pub struct PipeReceiver<T> {
+    rx: Receiver<T>,
+}
+
+impl<T> PipeReceiver<T> {
+    /// Blocks until an item arrives; None when all senders dropped.
+    pub fn recv(&self) -> Option<T> {
+        self.rx.recv().ok()
+    }
+
+    pub fn try_recv(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+
+    pub fn into_iter(self) -> impl Iterator<Item = T> {
+        self.rx.into_iter()
+    }
+}
+
+/// Run `f(i)` for i in 0..n on up to `workers` threads, collecting results
+/// in index order. Panics in workers are propagated.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+    thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let val = f(i);
+                slots.lock().unwrap()[i] = Some(val);
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker did not fill slot")).collect()
+}
+
+/// Shared atomic counter for cross-thread byte/item accounting.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicUsize>);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, n: usize) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipe_backpressure_and_close() {
+        let (tx, rx) = Pipe::bounded(2);
+        let producer = thread::spawn(move || {
+            for i in 0..10 {
+                assert!(tx.send(i));
+            }
+        });
+        let got: Vec<i32> = rx.into_iter().collect();
+        producer.join().unwrap();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out[7], 49);
+        assert_eq!(out.len(), 100);
+    }
+
+    #[test]
+    fn counter_accumulates_across_threads() {
+        let c = Counter::new();
+        let c2 = c.clone();
+        parallel_map(50, 4, |_| c2.add(2));
+        assert_eq!(c.get(), 100);
+    }
+}

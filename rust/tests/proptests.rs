@@ -1,0 +1,277 @@
+//! Property-based tests (via the in-crate `testing` harness) over the
+//! library's core invariants: collectives == mathematical reductions,
+//! deterministic-pipeline resume/shard laws, packing conservation,
+//! partitioner roundtrips, record/JSON codecs.
+
+use std::sync::Arc;
+
+use t5x::collectives::{chunk_bounds, run_ranks, CollectiveGroup};
+use t5x::partitioning::{Mesh, ParamStrategy, Partitioner};
+use t5x::runtime::artifacts::ParamSpec;
+use t5x::runtime::HostTensor;
+use t5x::seqio::cache::{cache_task, CacheConfig};
+use t5x::seqio::deterministic::DeterministicPipeline;
+use t5x::seqio::feature_converters::pack_lm;
+use t5x::seqio::preprocessors::Tokenize;
+use t5x::seqio::source::SyntheticTextSource;
+use t5x::seqio::task::Task;
+use t5x::seqio::vocab::{ByteVocabulary, Vocabulary, PAD_ID};
+use t5x::seqio::{deserialize_example, ints_example, serialize_example, Feature};
+use t5x::testing::{assert_allclose, Runner};
+use t5x::util::json::Json;
+
+#[test]
+fn prop_all_reduce_equals_sum() {
+    Runner::new("all_reduce_sum", 30).run(|g| {
+        let n = g.usize_in(1, 8);
+        let len = g.usize_in(1, 300);
+        let inputs: Vec<Vec<f32>> =
+            (0..n).map(|_| g.vec_f32(len, -10.0, 10.0)).collect();
+        let expect: Vec<f32> = (0..len)
+            .map(|i| inputs.iter().map(|v| v[i]).sum())
+            .collect();
+        let group = CollectiveGroup::new(n);
+        let outs = run_ranks(n, |r| group.all_reduce(r, inputs[r].clone()));
+        for out in outs {
+            assert_allclose(&out, &expect, 1e-3, 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_reduce_scatter_all_gather_compose() {
+    Runner::new("rs_ag_compose", 20).run(|g| {
+        let n = g.usize_in(1, 6);
+        let len = g.usize_in(n, 200);
+        let inputs: Vec<Vec<f32>> =
+            (0..n).map(|_| g.vec_f32(len, -5.0, 5.0)).collect();
+        let expect: Vec<f32> = (0..len)
+            .map(|i| inputs.iter().map(|v| v[i]).sum())
+            .collect();
+        let group = CollectiveGroup::new(n);
+        let outs = run_ranks(n, |r| {
+            let chunk = group.reduce_scatter(r, inputs[r].clone());
+            group.all_gather(r, chunk, len)
+        });
+        for out in outs {
+            assert_allclose(&out, &expect, 1e-3, 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_chunk_bounds_partition() {
+    Runner::new("chunk_bounds", 200).run(|g| {
+        let len = g.usize_in(0, 10_000);
+        let n = g.usize_in(1, 64);
+        let b = chunk_bounds(len, n);
+        assert_eq!(b.len(), n);
+        assert_eq!(b[0].0, 0);
+        assert_eq!(b[n - 1].1, len);
+        for w in b.windows(2) {
+            assert_eq!(w[0].1, w[1].0); // contiguous
+        }
+        // balanced within 1
+        let sizes: Vec<usize> = b.iter().map(|(lo, hi)| hi - lo).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    });
+}
+
+#[test]
+fn prop_partitioner_shard_unshard_roundtrip() {
+    Runner::new("partitioner_roundtrip", 40).run(|g| {
+        let data = 1 << g.usize_in(0, 2);
+        let model = 1 << g.usize_in(0, 2);
+        let rows = *g.pick(&[4, 8, 12, 16]);
+        let cols = *g.pick(&[4, 8, 16]);
+        let strategy = if g.bool() { ParamStrategy::OneD } else { ParamStrategy::TwoD };
+        let p = Partitioner::new(Mesh::new(data, model), strategy);
+        let spec = ParamSpec {
+            name: "w".into(),
+            shape: vec![rows, cols],
+            logical_axes: vec!["embed".into(), "mlp".into()],
+            init: "const:0".into(),
+        };
+        let full = HostTensor::f32(
+            vec![rows, cols],
+            g.vec_f32(rows * cols, -1.0, 1.0),
+        );
+        let pspec = p.spec_for(&spec);
+        let shards: Vec<HostTensor> = (0..p.mesh.num_hosts())
+            .map(|h| p.shard(&full, &pspec, h))
+            .collect();
+        let back = p.unshard(&shards, &pspec);
+        assert_eq!(back, full);
+    });
+}
+
+#[test]
+fn prop_packing_conserves_tokens() {
+    Runner::new("packing_conserves", 60).run(|g| {
+        let row_len = g.usize_in(4, 32);
+        let n = g.usize_in(1, 20);
+        let examples: Vec<_> = (0..n)
+            .map(|i| {
+                let len = g.usize_in(1, row_len);
+                ints_example(&[(
+                    "targets",
+                    (0..len).map(|j| (i * 100 + j + 1) as i32).collect(),
+                )])
+            })
+            .collect();
+        let rows = pack_lm(&examples, row_len);
+        // token conservation
+        let mut packed: Vec<i32> = rows
+            .iter()
+            .flat_map(|r| {
+                r["decoder_target_tokens"]
+                    .as_ints()
+                    .unwrap()
+                    .iter()
+                    .copied()
+                    .filter(|&t| t != PAD_ID)
+            })
+            .collect();
+        let mut original: Vec<i32> = examples
+            .iter()
+            .flat_map(|e| e["targets"].as_ints().unwrap().iter().copied())
+            .collect();
+        packed.sort();
+        original.sort();
+        assert_eq!(packed, original);
+        // segment monotonicity within each row
+        for r in &rows {
+            let seg = r["decoder_segment_ids"].as_ints().unwrap();
+            let mut last = 0;
+            for &s in seg {
+                if s != 0 {
+                    assert!(s == last || s == last + 1);
+                    last = s.max(last);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_example_serialization_roundtrip() {
+    Runner::new("example_codec", 100).run(|g| {
+        let mut ex = t5x::seqio::Example::new();
+        let n_fields = g.usize_in(0, 6);
+        for i in 0..n_fields {
+            let name = format!("f{i}_{}", g.string(6).replace(' ', "_"));
+            let feat = match g.usize_in(0, 2) {
+                0 => Feature::Text(g.string(40)),
+                1 => Feature::Ints(
+                    (0..g.usize_in(0, 50)).map(|_| g.i64_in(-1000, 1000) as i32).collect(),
+                ),
+                _ => {
+                    let len = g.usize_in(0, 50);
+                    Feature::Floats(g.vec_f32(len, -100.0, 100.0))
+                }
+            };
+            ex.insert(name, feat);
+        }
+        let buf = serialize_example(&ex);
+        let back = deserialize_example(&buf).unwrap();
+        assert_eq!(ex, back);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    Runner::new("json_roundtrip", 100).run(|g| {
+        fn gen_value(g: &mut t5x::testing::Gen, depth: usize) -> Json {
+            match if depth > 2 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num(g.i64_in(-1_000_000, 1_000_000) as f64),
+                3 => Json::Str(g.string(24)),
+                4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| gen_value(g, depth + 1)).collect()),
+                _ => {
+                    let mut m = std::collections::BTreeMap::new();
+                    for i in 0..g.usize_in(0, 4) {
+                        m.insert(format!("k{i}"), gen_value(g, depth + 1));
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        let v = gen_value(g, 0);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(v, back);
+    });
+}
+
+#[test]
+fn prop_deterministic_pipeline_resume_and_shard_laws() {
+    // Heavier property: random (docs, shards, hosts, start) — resume ==
+    // continuous suffix, shards partition the index space.
+    let dir_base = std::env::temp_dir().join(format!("prop_det_{}", std::process::id()));
+    let vocab: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(16));
+    let task = Task::builder("prop_det_task")
+        .source(Arc::new(SyntheticTextSource::new(3, 60)))
+        .preprocessor(Arc::new(Tokenize::new(vocab.clone(), &[("text", "targets")])))
+        .output_feature("targets", vocab, true)
+        .build();
+
+    Runner::new("det_pipeline_laws", 8).run(|g| {
+        let hosts = *g.pick(&[1usize, 2, 4]);
+        let shards = hosts * g.usize_in(1, 3);
+        let dir = dir_base.join(format!("{}_{}", hosts, shards));
+        cache_task(
+            &task,
+            &dir,
+            &CacheConfig { num_shards: shards, seed: g.u64(), workers: 2 },
+        )
+        .unwrap();
+        let p = DeterministicPipeline::open(&dir).unwrap();
+        let mut seen = Vec::new();
+        for h in 0..hosts {
+            let full: Vec<i32> = p
+                .host_stream(h, hosts, 0, false)
+                .collect_vec()
+                .iter()
+                .map(|e| e["_index"].as_ints().unwrap()[0])
+                .collect();
+            let k = g.usize_in(0, full.len());
+            let resumed: Vec<i32> = p
+                .host_stream(h, hosts, k, false)
+                .collect_vec()
+                .iter()
+                .map(|e| e["_index"].as_ints().unwrap()[0])
+                .collect();
+            assert_eq!(resumed.as_slice(), &full[k..]);
+            seen.extend(full);
+        }
+        seen.sort();
+        assert_eq!(seen, (0..p.meta.num_examples as i32).collect::<Vec<_>>());
+        std::fs::remove_dir_all(&dir).ok();
+    });
+    std::fs::remove_dir_all(&dir_base).ok();
+}
+
+#[test]
+fn prop_span_corruption_conserves_tokens() {
+    let vocab: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(16));
+    Runner::new("span_corruption_tokens", 80).run(|g| {
+        let len = g.usize_in(2, 200);
+        let tokens: Vec<i32> =
+            (0..len).map(|_| g.i64_in(3, 250) as i32).collect();
+        let sc = t5x::seqio::preprocessors::SpanCorruption::new(vocab.clone());
+        let mut rng = t5x::util::rng::Pcg64::new(g.u64());
+        let (inputs, targets) = sc.corrupt(&tokens, &mut rng);
+        let mut recovered: Vec<i32> = inputs
+            .iter()
+            .chain(targets.iter())
+            .copied()
+            .filter(|&t| !vocab.is_sentinel(t))
+            .collect();
+        recovered.sort();
+        let mut orig = tokens.clone();
+        orig.sort();
+        assert_eq!(recovered, orig);
+        assert!(vocab.is_sentinel(*targets.last().unwrap()));
+    });
+}
