@@ -86,7 +86,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // finetune
-    let infeed = recipes::cached_infeed(m, &cache_dir, 1, 0);
+    let infeed = recipes::cached_infeed(m, &cache_dir, 1, 0, None)?;
     let summary = trainer.train(&BatchSource::Infeed(infeed))?;
     println!(
         "\nfinetuned {} steps: loss {:.3} -> {:.3}",

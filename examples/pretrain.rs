@@ -74,7 +74,7 @@ fn main() -> anyhow::Result<()> {
             .with_terminal()
             .with_jsonl(&log_path),
     );
-    let infeed = recipes::cached_infeed(m, &cache_dir, hosts, 0);
+    let infeed = recipes::cached_infeed(m, &cache_dir, hosts, 0, None)?;
     let summary = trainer.train(&BatchSource::Infeed(infeed))?;
 
     let tokens_per_step = m.tokens_per_step() * hosts;

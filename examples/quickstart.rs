@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     };
     let trainer = Trainer::new(&arts, &device, cfg)?
         .with_logger(t5x::metrics::MetricsLogger::new().with_terminal());
-    let infeed = recipes::cached_infeed(m, &cache_dir, 2, 0);
+    let infeed = recipes::cached_infeed(m, &cache_dir, 2, 0, None)?;
     let summary = trainer.train(&BatchSource::Infeed(infeed))?;
     println!(
         "\nloss {:.3} -> {:.3} over {} steps ({:.1}s, {} comm bytes)",

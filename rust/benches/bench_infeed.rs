@@ -5,13 +5,20 @@
 //!
 //! Rows: (a) naive single shared reader fanning examples to hosts,
 //! (b) per-host exclusive sharded readers, (c) sharded + threaded
-//! prefetch + batch assembly (the production path).
+//! prefetch + batch assembly (the production path), (d) order-preserving
+//! `parallel_map` scaling on a tokenize-heavy preprocessor (1/2/4
+//! workers vs serial map — tf.data `num_parallel_calls` semantics).
+
+use std::sync::Arc;
 
 use t5x::bench::Bench;
 use t5x::runtime::Artifacts;
 use t5x::seqio::dataset::Dataset;
 use t5x::seqio::deterministic::{strip_index, DeterministicPipeline};
 use t5x::seqio::feature_converters::{lengths, FeatureConverter, LmConverter};
+use t5x::seqio::source::{DataSource, SyntheticTextSource};
+use t5x::seqio::vocab::{ByteVocabulary, Vocabulary};
+use t5x::seqio::{Example, Feature};
 use t5x::trainer::recipes;
 
 fn main() {
@@ -79,6 +86,49 @@ fn main() {
             assert!(counts.iter().sum::<usize>() >= batches_per_host * hosts - hosts);
         },
     );
+
+    // (d) parallel_map scaling: tokenize-heavy preprocessor, serial map vs
+    // 1/2/4 workers. Output order is identical in all rows (asserted).
+    let pdocs = if bench.is_quick() { 100 } else { 400 };
+    let source = Arc::new(SyntheticTextSource::with_shape(7, pdocs, 8, 12));
+    let vocab: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(16));
+    let heavy = move |mut ex: Example| {
+        if let Some(Feature::Text(t)) = ex.get("text") {
+            // repeated tokenize/detokenize: a deliberately hot pure map
+            let mut ids = vocab.encode(t);
+            for _ in 0..16 {
+                let txt = vocab.decode(&ids);
+                ids = vocab.encode(&txt);
+            }
+            ex.insert("targets".into(), Feature::Ints(ids));
+        }
+        ex
+    };
+    let serial_out = source.all().map(heavy.clone()).collect_vec();
+    bench.measure_with_throughput(
+        "tokenize-heavy serial map",
+        Some((pdocs as f64, "ex")),
+        || {
+            let out = source.all().map(heavy.clone()).collect_vec();
+            assert_eq!(out.len(), pdocs);
+            std::hint::black_box(&out);
+        },
+    );
+    for workers in [1usize, 2, 4] {
+        // order check once, outside the timed closure (it would bias the
+        // scaling numbers); determinism is also covered by the tests
+        let once = source.all().parallel_map(heavy.clone(), workers).collect_vec();
+        assert_eq!(once, serial_out, "parallel_map must preserve order");
+        bench.measure_with_throughput(
+            &format!("tokenize-heavy parallel_map({workers})"),
+            Some((pdocs as f64, "ex")),
+            || {
+                let out = source.all().parallel_map(heavy.clone(), workers).collect_vec();
+                assert_eq!(out.len(), pdocs);
+                std::hint::black_box(&out);
+            },
+        );
+    }
 
     bench.write_jsonl("bench_results.jsonl").unwrap();
 }

@@ -12,6 +12,7 @@ use std::path::{Path, PathBuf};
 
 use crate::model::Params;
 use crate::runtime::HostTensor;
+use crate::seqio::dataset::PipelineState;
 use crate::util::json::Json;
 
 /// Extra (non-parameter) f32 vectors saved alongside params — optimizer
@@ -59,6 +60,20 @@ impl CheckpointManager {
 
     /// Save synchronously: params + extra state + metadata, atomic rename.
     pub fn save(&self, step: u64, params: &Params, extra: &ExtraState) -> anyhow::Result<()> {
+        self.save_with_pipeline(step, params, extra, None)
+    }
+
+    /// [`CheckpointManager::save`] plus the per-host data-pipeline states,
+    /// persisted as a CRC-protected tstore byte array (`pipeline/state`,
+    /// a JSON array with one entry per host) inside the same atomic
+    /// checkpoint directory.
+    pub fn save_with_pipeline(
+        &self,
+        step: u64,
+        params: &Params,
+        extra: &ExtraState,
+        pipeline: Option<&[PipelineState]>,
+    ) -> anyhow::Result<()> {
         let final_dir = self.step_dir(step);
         let tmp = final_dir.with_extension("tmp");
         if tmp.exists() {
@@ -76,9 +91,19 @@ impl CheckpointManager {
             let t = HostTensor::f32(vec![vec.len()], vec.clone());
             tstore::write_full(&tmp, &format!("optstate/{key}"), &t, self.chunk_rows)?;
         }
+        if let Some(states) = pipeline {
+            let arr = Json::Arr(states.iter().map(|s| s.0.clone()).collect());
+            tstore::write_bytes(
+                &tmp,
+                "pipeline/state",
+                arr.to_string().as_bytes(),
+                64 * 1024,
+            )?;
+        }
         let meta = Json::obj(vec![
             ("step", Json::num(step as f64)),
             ("num_params", Json::num(params.len() as f64)),
+            ("has_pipeline", Json::Bool(pipeline.is_some())),
             ("format", Json::str("t5x-native-v1")),
         ]);
         std::fs::write(tmp.join("checkpoint.json"), meta.to_string())?;
@@ -135,6 +160,24 @@ impl CheckpointManager {
             }
         }
         Ok((params, extra))
+    }
+
+    /// Restore the per-host data-pipeline states saved at `step`, or None
+    /// for checkpoints written without pipeline state.
+    pub fn restore_pipeline(&self, step: u64) -> anyhow::Result<Option<Vec<PipelineState>>> {
+        let dir = self.step_dir(step);
+        let bytes = match tstore::read_bytes(&dir, "pipeline/state") {
+            Ok(b) => b,
+            Err(tstore::TStoreError::NotFound(_)) => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        let text = String::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("pipeline state is not utf-8: {e}"))?;
+        let arr = match Json::parse(&text)? {
+            Json::Arr(a) => a,
+            other => anyhow::bail!("pipeline state is not a JSON array: {other}"),
+        };
+        Ok(Some(arr.into_iter().map(PipelineState).collect()))
     }
 
     /// Restore a row-slice of one parameter (read-with-resharding: a host
@@ -211,6 +254,27 @@ mod tests {
         assert_eq!(ex.len(), 1);
         assert_eq!(ex[0].0, "decoder.layers_0.wq/m");
         assert_eq!(ex[0].1, vec![0.5; 32]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pipeline_state_saved_and_restored() {
+        let dir = tmp("pipe");
+        let mgr = CheckpointManager::new(&dir);
+        let mk = |k: f64| {
+            PipelineState(Json::obj(vec![
+                ("op", Json::str("det_reader")),
+                ("emitted_total", Json::num(k)),
+            ]))
+        };
+        let states = vec![mk(42.0), mk(17.0)];
+        mgr.save_with_pipeline(5, &fake_params(), &Vec::new(), Some(&states))
+            .unwrap();
+        let back = mgr.restore_pipeline(5).unwrap().unwrap();
+        assert_eq!(back, states);
+        // plain saves carry no pipeline state
+        mgr.save(6, &fake_params(), &Vec::new()).unwrap();
+        assert!(mgr.restore_pipeline(6).unwrap().is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 

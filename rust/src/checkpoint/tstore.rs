@@ -198,6 +198,84 @@ pub fn read_full(root: &Path, name: &str) -> Result<HostTensor, TStoreError> {
     Ok(HostTensor::f32(meta.shape.clone(), data))
 }
 
+// ---------------------------------------------------------------------------
+// Byte arrays (dtype "u8") — small opaque payloads such as the serialized
+// data-pipeline state saved with each checkpoint. Same chunk+CRC layout as
+// f32 arrays, with bytes instead of rows.
+// ---------------------------------------------------------------------------
+
+/// Write an opaque byte payload as a chunked, CRC-protected array.
+pub fn write_bytes(
+    root: &Path,
+    name: &str,
+    bytes: &[u8],
+    chunk_bytes: usize,
+) -> Result<(), TStoreError> {
+    let dir = root.join(name);
+    std::fs::create_dir_all(&dir)?;
+    let chunk = chunk_bytes.max(1);
+    let j = Json::obj(vec![
+        ("shape", Json::arr_usize(&[bytes.len()])),
+        ("chunk_rows", Json::num(chunk as f64)),
+        ("dtype", Json::str("u8")),
+    ]);
+    std::fs::write(meta_path(&dir), j.to_string())?;
+    for (k, slice) in bytes.chunks(chunk).enumerate() {
+        let crc = crc32fast::hash(slice);
+        let mut f = std::fs::File::create(chunk_path(&dir, k))?;
+        f.write_all(&crc.to_le_bytes())?;
+        f.write_all(slice)?;
+    }
+    Ok(())
+}
+
+/// Read back a byte payload written by [`write_bytes`]. A missing array
+/// is `NotFound`; an unreadable/corrupt meta file is `Corrupt` (callers
+/// treat `NotFound` as "never written" and must not confuse the two).
+pub fn read_bytes(root: &Path, name: &str) -> Result<Vec<u8>, TStoreError> {
+    let dir = root.join(name);
+    let mpath = meta_path(&dir);
+    if !mpath.exists() {
+        return Err(TStoreError::NotFound(name.to_string()));
+    }
+    let j = Json::parse_file(&mpath).map_err(|_| TStoreError::Corrupt(mpath.clone()))?;
+    let dtype = j.get("dtype").and_then(|v| v.as_str()).unwrap_or("f32");
+    if dtype != "u8" {
+        return Err(TStoreError::Other(format!(
+            "array {name} has dtype {dtype}, expected u8"
+        )));
+    }
+    let len = j
+        .get("shape")
+        .and_then(|v| v.as_arr())
+        .and_then(|a| a.first())
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| TStoreError::Other(format!("array {name} has no shape")))?;
+    let mut out = Vec::with_capacity(len);
+    let mut k = 0usize;
+    while out.len() < len {
+        let path = chunk_path(&dir, k);
+        let mut f = std::fs::File::open(&path)
+            .map_err(|_| TStoreError::Corrupt(path.clone()))?;
+        let mut crc_buf = [0u8; 4];
+        f.read_exact(&mut crc_buf)?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        if crc32fast::hash(&bytes) != u32::from_le_bytes(crc_buf) {
+            return Err(TStoreError::Corrupt(path));
+        }
+        out.extend_from_slice(&bytes);
+        k += 1;
+    }
+    if out.len() != len {
+        return Err(TStoreError::Other(format!(
+            "array {name}: expected {len} bytes, found {}",
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
 /// List array names under a root.
 pub fn list_arrays(root: &Path) -> Result<Vec<String>, TStoreError> {
     let mut out = Vec::new();
@@ -269,6 +347,36 @@ mod tests {
         bytes[n - 1] ^= 0x55;
         std::fs::write(&cp, bytes).unwrap();
         assert!(matches!(read_full(&root, "x"), Err(TStoreError::Corrupt(_))));
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn bytes_roundtrip_and_corruption() {
+        let root = tmp("bytes");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        write_bytes(&root, "pipeline/state", &payload, 128).unwrap();
+        assert_eq!(read_bytes(&root, "pipeline/state").unwrap(), payload);
+        // empty payload round-trips too
+        write_bytes(&root, "empty", &[], 64).unwrap();
+        assert_eq!(read_bytes(&root, "empty").unwrap(), Vec::<u8>::new());
+        // dtype guard: an f32 array is not readable as bytes
+        let t = HostTensor::f32(vec![4], vec![1., 2., 3., 4.]);
+        write_full(&root, "floats", &t, 4).unwrap();
+        assert!(read_bytes(&root, "floats").is_err());
+        // flipped byte detected
+        let cp = root.join("pipeline/state").join("chunk-00001");
+        let mut bytes = std::fs::read(&cp).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x01;
+        std::fs::write(&cp, bytes).unwrap();
+        assert!(matches!(
+            read_bytes(&root, "pipeline/state"),
+            Err(TStoreError::Corrupt(_))
+        ));
+        // corrupt meta is Corrupt, never NotFound (NotFound = never written)
+        std::fs::write(root.join("empty").join("meta.json"), "{not json").unwrap();
+        assert!(matches!(read_bytes(&root, "empty"), Err(TStoreError::Corrupt(_))));
+        assert!(matches!(read_bytes(&root, "nope"), Err(TStoreError::NotFound(_))));
         std::fs::remove_dir_all(&root).ok();
     }
 

@@ -20,6 +20,43 @@
 //! Python never runs on the training path: after `make artifacts` the
 //! `t5x` binary and all examples are self-contained.
 //!
+//! ## Checkpointable data pipelines
+//!
+//! Every seqio stream is a graph of stateful ops
+//! ([`seqio::dataset::PipelineOp`]); `Dataset::state()` captures the whole
+//! graph as a JSON [`seqio::dataset::PipelineState`] and `Dataset::restore`
+//! repositions a freshly built, structurally identical pipeline. The infeed
+//! snapshots each host's state at batch boundaries (pairing the state with
+//! the batch so it reflects *consumed*, not prefetched, data), the trainer
+//! saves all hosts' states with each checkpoint, and
+//! [`checkpoint::CheckpointManager`] persists them as a CRC-protected
+//! tstore byte array (`pipeline/state`: a JSON array with one entry per
+//! host). A killed-and-resumed run therefore consumes the exact global
+//! example sequence of an uninterrupted one — verified end-to-end by the
+//! `_index` audit feature in the integration tests.
+//!
+//! ### Pipeline-state payload
+//!
+//! Each op contributes one JSON object tagged with `"op"` and nesting its
+//! upstream under `"inner"`. Positional ops store counters (`pos`, `idx`,
+//! `remaining`, `emitted_total`); buffering ops (`shuffle`, `flat_map`,
+//! `parallel_map`, `packed_lm`) embed their buffered examples as hex of
+//! the binary record encoding; RNG-bearing ops store the raw generator
+//! lanes as hex strings (JSON numbers are f64 and would truncate them).
+//! Restore validates the `"op"` tag at every level and fails loudly on a
+//! structurally different pipeline.
+//!
+//! ### `parallel_map` determinism contract
+//!
+//! `Dataset::parallel_map(f, n)` fans `f` out over `n` worker threads with
+//! tf.data `num_parallel_calls` semantics: a single coordinator assigns
+//! monotonically increasing sequence numbers to upstream elements and
+//! re-sequences results, so the output order is byte-identical to serial
+//! `map` regardless of worker scheduling. `f` must be pure (it may run
+//! ahead of the consumer); `state()` quiesces in-flight work and
+//! serializes mapped-but-unemitted results so resume never recomputes or
+//! skips an element.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper claim to a bench/example, and `EXPERIMENTS.md` for
 //! measured results.

@@ -193,7 +193,8 @@ fn cmd_train(args: &Args, gin: &Config) -> anyhow::Result<()> {
             std::path::Path::new(dir),
             cfg.num_hosts,
             trainer.start_step,
-        )),
+            trainer.restored_pipeline.as_deref(),
+        )?),
         None => BatchSource::Synthetic { seed: 7 },
     };
     let summary = trainer.train(&source)?;

@@ -1,157 +1,941 @@
-//! Dataset iterator combinators — the `tensorflow.data` substitute that
+//! Dataset pipeline op graph — the `tensorflow.data` substitute that
 //! seqio pipelines are assembled from. Pull-based, lazily evaluated,
-//! deterministic when seeded, with threaded prefetch for the infeed path.
+//! deterministic when seeded, with threaded prefetch and order-preserving
+//! parallel preprocessing for the infeed path.
+//!
+//! Unlike a chain of opaque iterator combinators, every stage is a
+//! [`PipelineOp`]: it can report its position/buffers as a JSON
+//! [`PipelineState`] and be restored from one, so iterator state is a
+//! first-class checkpointed artifact (t5x's checkpointable-iterator
+//! design, paper §3.2 Recoverability).
+//!
+//! ## State & restore contract
+//!
+//! `Dataset::state()` captures the full op-graph state; `Dataset::restore`
+//! applies it to a *freshly built, structurally identical* pipeline (same
+//! constructors, same seeds, same closure logic). After a restore, the
+//! stream continues with exactly the examples an uninterrupted stream
+//! would have produced next. Closures passed to `map`/`filter`/... must be
+//! pure functions of their arguments (plus, for `enumerate_map`, the
+//! element index) — hidden mutable closure state cannot be checkpointed.
+//!
+//! Ops with positional state (sources, `take`, `skip`, `enumerate_map`,
+//! the deterministic cache reader) restore in O(1); buffering ops
+//! (`shuffle_window`, `flat_map`, `parallel_map`) serialize their buffered
+//! examples; `Dataset::new` over an arbitrary iterator records the number
+//! of consumed elements and restores by replaying (deterministic streams
+//! make replay exact).
 
-use super::Example;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use super::{deserialize_example, serialize_example, Example};
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
-use crate::util::threads::Pipe;
+use crate::util::threads::{Pipe, PipeReceiver, PipeSender};
 
+/// Legacy alias kept for downstream code that boxes example iterators.
 pub type BoxIter = Box<dyn Iterator<Item = Example> + Send>;
 
-/// A lazily-evaluated stream of [`Example`]s.
+/// One stage of a dataset pipeline: an iterator whose position (and any
+/// internal buffers) can be captured and restored.
+pub trait PipelineOp: Send {
+    fn next(&mut self) -> Option<Example>;
+    /// Capture this op's state (including all upstream ops). Takes `&mut`
+    /// because buffering ops may need to quiesce in-flight work first.
+    fn state(&mut self) -> Json;
+    /// Restore a freshly built op to the captured position. Fails if the
+    /// state was captured from a structurally different pipeline.
+    fn restore(&mut self, state: &Json) -> anyhow::Result<()>;
+}
+
+/// Serialized pipeline position, persisted alongside model checkpoints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineState(pub Json);
+
+impl PipelineState {
+    pub fn to_json_string(&self) -> String {
+        self.0.to_string()
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<PipelineState> {
+        Ok(PipelineState(Json::parse(text)?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// state (de)serialization helpers
+// ---------------------------------------------------------------------------
+
+pub(crate) fn check_tag(s: &Json, tag: &str) -> anyhow::Result<()> {
+    let got = s.get("op").and_then(|v| v.as_str()).unwrap_or("<missing>");
+    anyhow::ensure!(
+        got == tag,
+        "pipeline state mismatch: expected op '{tag}', found '{got}'"
+    );
+    Ok(())
+}
+
+pub(crate) fn field<'a>(s: &'a Json, key: &str) -> anyhow::Result<&'a Json> {
+    s.get(key)
+        .ok_or_else(|| anyhow::anyhow!("pipeline state missing field '{key}'"))
+}
+
+pub(crate) fn field_usize(s: &Json, key: &str) -> anyhow::Result<usize> {
+    field(s, key)?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("pipeline state field '{key}' is not a number"))
+}
+
+pub(crate) fn field_bool(s: &Json, key: &str) -> anyhow::Result<bool> {
+    field(s, key)?
+        .as_bool()
+        .ok_or_else(|| anyhow::anyhow!("pipeline state field '{key}' is not a bool"))
+}
+
+pub(crate) fn field_arr<'a>(s: &'a Json, key: &str) -> anyhow::Result<&'a [Json]> {
+    field(s, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("pipeline state field '{key}' is not an array"))
+}
+
+/// u64 values are serialized as hex strings: JSON numbers are f64 and
+/// cannot hold a full 64-bit RNG state losslessly.
+pub(crate) fn u64_to_json(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+pub(crate) fn u64_from_json(v: &Json) -> anyhow::Result<u64> {
+    let s = v
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("expected hex string in pipeline state"))?;
+    u64::from_str_radix(s, 16).map_err(|e| anyhow::anyhow!("bad hex u64 '{s}': {e}"))
+}
+
+pub(crate) fn rng_to_json(rng: &Pcg64) -> Json {
+    let (state, inc) = rng.raw_state();
+    Json::Arr(vec![u64_to_json(state), u64_to_json(inc)])
+}
+
+pub(crate) fn rng_from_json(v: &Json) -> anyhow::Result<Pcg64> {
+    let a = v
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected [state, inc] rng pair"))?;
+    anyhow::ensure!(a.len() == 2, "rng state must have two lanes");
+    Ok(Pcg64::from_raw_state(u64_from_json(&a[0])?, u64_from_json(&a[1])?))
+}
+
+/// Buffered examples are embedded in state as hex of the binary record
+/// encoding (compact, exact, and JSON-safe).
+pub(crate) fn example_to_json(ex: &Example) -> Json {
+    let bytes = serialize_example(ex);
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        use std::fmt::Write;
+        let _ = write!(s, "{b:02x}");
+    }
+    Json::Str(s)
+}
+
+pub(crate) fn example_from_json(v: &Json) -> anyhow::Result<Example> {
+    let s = v
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("expected hex-encoded example"))?;
+    // ASCII guard keeps the byte-indexed slicing below panic-free on
+    // malformed (e.g. hand-edited) state strings.
+    anyhow::ensure!(s.is_ascii(), "non-ascii hex example");
+    anyhow::ensure!(s.len() % 2 == 0, "odd-length hex example");
+    let bytes: Result<Vec<u8>, _> = (0..s.len() / 2)
+        .map(|i| u8::from_str_radix(&s[2 * i..2 * i + 2], 16))
+        .collect();
+    let bytes = bytes.map_err(|e| anyhow::anyhow!("bad hex example: {e}"))?;
+    Ok(deserialize_example(&bytes)?)
+}
+
+fn examples_to_json<'a>(exs: impl Iterator<Item = &'a Example>) -> Json {
+    Json::Arr(exs.map(example_to_json).collect())
+}
+
+fn examples_from_json(v: &[Json]) -> anyhow::Result<Vec<Example>> {
+    v.iter().map(example_from_json).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Dataset: the public handle over the op graph
+// ---------------------------------------------------------------------------
+
+/// A lazily-evaluated, checkpointable stream of [`Example`]s.
 pub struct Dataset {
-    iter: BoxIter,
+    op: Box<dyn PipelineOp>,
 }
 
 impl Iterator for Dataset {
     type Item = Example;
 
     fn next(&mut self) -> Option<Example> {
-        self.iter.next()
+        self.op.next()
     }
 }
 
 impl Dataset {
+    /// Wrap an explicit [`PipelineOp`] (the constructor stateful sources
+    /// like the deterministic cache reader use).
+    pub fn from_op(op: impl PipelineOp + 'static) -> Dataset {
+        Dataset { op: Box::new(op) }
+    }
+
+    /// Unwrap into the underlying op (for ops that compose datasets).
+    pub fn into_op(self) -> Box<dyn PipelineOp> {
+        self.op
+    }
+
+    /// Wrap an arbitrary iterator. Its state is the count of consumed
+    /// elements; restore replays that many elements, which is exact for
+    /// the deterministic streams seqio pipelines are built from.
     pub fn new(iter: impl Iterator<Item = Example> + Send + 'static) -> Dataset {
-        Dataset { iter: Box::new(iter) }
+        Dataset::from_op(OpaqueIter { iter: Box::new(iter), pos: 0, done: false })
     }
 
     pub fn from_vec(v: Vec<Example>) -> Dataset {
-        Dataset::new(v.into_iter())
+        Dataset::from_op(VecSource { items: v, pos: 0 })
+    }
+
+    /// Capture the full pipeline position (quiesces parallel stages).
+    pub fn state(&mut self) -> PipelineState {
+        PipelineState(self.op.state())
+    }
+
+    /// Reposition a freshly built, structurally identical pipeline to a
+    /// captured state.
+    pub fn restore(&mut self, state: &PipelineState) -> anyhow::Result<()> {
+        self.op.restore(&state.0)
     }
 
     pub fn map<F>(self, f: F) -> Dataset
     where
         F: FnMut(Example) -> Example + Send + 'static,
     {
-        Dataset::new(self.iter.map(f))
+        Dataset::from_op(MapOp { inner: self.op, f: Box::new(f) })
     }
 
-    pub fn filter<F>(self, mut f: F) -> Dataset
+    pub fn filter<F>(self, f: F) -> Dataset
     where
         F: FnMut(&Example) -> bool + Send + 'static,
     {
-        Dataset::new(self.iter.filter(move |e| f(e)))
+        Dataset::from_op(FilterOp { inner: self.op, f: Box::new(f) })
     }
 
-    pub fn flat_map<F>(self, mut f: F) -> Dataset
+    pub fn flat_map<F>(self, f: F) -> Dataset
     where
         F: FnMut(Example) -> Vec<Example> + Send + 'static,
     {
-        Dataset::new(self.iter.flat_map(move |e| f(e).into_iter()))
+        Dataset::from_op(FlatMapOp {
+            inner: self.op,
+            f: Box::new(f),
+            pending: VecDeque::new(),
+        })
     }
 
     /// Stamp each example with a per-example seed derived from `seed` and
     /// the example's position — how seqio gives stochastic preprocessors
     /// (e.g. span corruption) reproducible randomness.
-    pub fn enumerate_map<F>(self, mut f: F) -> Dataset
+    pub fn enumerate_map<F>(self, f: F) -> Dataset
     where
         F: FnMut(usize, Example) -> Example + Send + 'static,
     {
-        Dataset::new(self.iter.enumerate().map(move |(i, e)| f(i, e)))
+        Dataset::from_op(EnumerateMapOp { inner: self.op, f: Box::new(f), idx: 0 })
+    }
+
+    /// Order-preserving parallel map (tf.data `num_parallel_calls`
+    /// semantics): `f` runs on up to `workers` background threads, but the
+    /// output order is byte-identical to serial `map` regardless of worker
+    /// scheduling. `f` must be pure — it may run ahead of the consumer and
+    /// results are re-sequenced by input index.
+    pub fn parallel_map<F>(self, f: F, workers: usize) -> Dataset
+    where
+        F: Fn(Example) -> Example + Send + Sync + 'static,
+    {
+        let workers = workers.max(1);
+        Dataset::from_op(ParallelMapOp {
+            inner: self.op,
+            f: Arc::new(f),
+            workers,
+            capacity: (workers as u64) * 2,
+            started: false,
+            work_tx: None,
+            result_rx: None,
+            next_dispatch: 0,
+            next_emit: 0,
+            reorder: BTreeMap::new(),
+            inner_done: false,
+        })
     }
 
     pub fn take(self, n: usize) -> Dataset {
-        Dataset::new(self.iter.take(n))
+        Dataset::from_op(TakeOp { inner: self.op, remaining: n })
     }
 
     pub fn skip(self, n: usize) -> Dataset {
-        Dataset::new(self.iter.skip(n))
+        Dataset::from_op(SkipOp { inner: self.op, n, done: false })
     }
 
-    /// Windowed shuffle (tf.data.shuffle semantics): maintain a buffer of
-    /// `window` elements, emit a uniformly random one, refill.
+    /// Windowed shuffle (tf.data.shuffle semantics): fill a buffer of
+    /// `window` elements once, then emit a uniformly random element and
+    /// refill exactly one per `next()`. After the upstream ends the buffer
+    /// drains without polling the upstream again.
     pub fn shuffle_window(self, window: usize, seed: u64) -> Dataset {
-        struct Shuffler {
-            inner: BoxIter,
-            buf: Vec<Example>,
-            rng: Pcg64,
-            window: usize,
-        }
-        impl Iterator for Shuffler {
-            type Item = Example;
-
-            fn next(&mut self) -> Option<Example> {
-                while self.buf.len() < self.window {
-                    match self.inner.next() {
-                        Some(e) => self.buf.push(e),
-                        None => break,
-                    }
-                }
-                if self.buf.is_empty() {
-                    return None;
-                }
-                let i = self.rng.next_below(self.buf.len() as u64) as usize;
-                Some(self.buf.swap_remove(i))
-            }
-        }
-        Dataset::new(Shuffler {
-            inner: self.iter,
+        Dataset::from_op(ShuffleOp {
+            inner: self.op,
             buf: Vec::new(),
             rng: Pcg64::new(seed),
             window: window.max(1),
+            primed: false,
+            exhausted: false,
         })
     }
 
     /// Round-robin interleave of several datasets (used by file readers).
     pub fn interleave(parts: Vec<Dataset>) -> Dataset {
-        struct Interleave {
-            parts: Vec<BoxIter>,
-            next: usize,
-        }
-        impl Iterator for Interleave {
-            type Item = Example;
-
-            fn next(&mut self) -> Option<Example> {
-                let n = self.parts.len();
-                for _ in 0..n {
-                    let i = self.next;
-                    self.next = (self.next + 1) % n;
-                    if let Some(e) = self.parts[i].next() {
-                        return Some(e);
-                    }
-                }
-                None
-            }
-        }
-        Dataset::new(Interleave {
-            parts: parts.into_iter().map(|d| d.iter).collect(),
+        Dataset::from_op(InterleaveOp {
+            parts: parts.into_iter().map(|d| d.op).collect(),
             next: 0,
         })
     }
 
     /// Move production to a background thread with a bounded buffer —
-    /// the infeed prefetch that hides data-pipeline latency (E9).
+    /// the infeed prefetch that hides data-pipeline latency (E9). The
+    /// producer pairs every element with the upstream state that follows
+    /// it, so `state()` reflects *delivered* (not merely produced)
+    /// elements; elements still in the buffer are re-produced on restore.
+    ///
+    /// Cost note: the per-element upstream snapshot serializes buffering
+    /// ops' buffers and quiesces `parallel_map` in-flight work on every
+    /// element, so do NOT place `prefetch` directly downstream of
+    /// `parallel_map` or a huge `shuffle_window` — `parallel_map` already
+    /// provides its own lookahead (see the ROADMAP incremental-snapshot
+    /// item).
     pub fn prefetch(self, buffer: usize) -> Dataset {
-        let (tx, rx) = Pipe::bounded(buffer);
-        let iter = self.iter;
+        Dataset::from_op(PrefetchOp {
+            pending: Some(self.op),
+            buffer: buffer.max(1),
+            rx: None,
+            last_state: None,
+        })
+    }
+
+    pub fn collect_vec(self) -> Vec<Example> {
+        self.collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// source ops
+// ---------------------------------------------------------------------------
+
+struct VecSource {
+    items: Vec<Example>,
+    pos: usize,
+}
+
+impl PipelineOp for VecSource {
+    fn next(&mut self) -> Option<Example> {
+        let e = self.items.get(self.pos).cloned();
+        if e.is_some() {
+            self.pos += 1;
+        }
+        e
+    }
+
+    fn state(&mut self) -> Json {
+        Json::obj(vec![("op", Json::str("vec")), ("pos", Json::num(self.pos as f64))])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "vec")?;
+        let pos = field_usize(s, "pos")?;
+        anyhow::ensure!(
+            pos <= self.items.len(),
+            "saved position {pos} exceeds vec source length {}",
+            self.items.len()
+        );
+        self.pos = pos;
+        Ok(())
+    }
+}
+
+struct OpaqueIter {
+    iter: BoxIter,
+    pos: usize,
+    done: bool,
+}
+
+impl PipelineOp for OpaqueIter {
+    fn next(&mut self) -> Option<Example> {
+        if self.done {
+            return None;
+        }
+        match self.iter.next() {
+            Some(e) => {
+                self.pos += 1;
+                Some(e)
+            }
+            None => {
+                self.done = true;
+                None
+            }
+        }
+    }
+
+    fn state(&mut self) -> Json {
+        Json::obj(vec![("op", Json::str("iter")), ("pos", Json::num(self.pos as f64))])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "iter")?;
+        let target = field_usize(s, "pos")?;
+        anyhow::ensure!(
+            self.pos == 0,
+            "opaque iterator can only be restored before consumption"
+        );
+        for i in 0..target {
+            anyhow::ensure!(
+                self.next().is_some(),
+                "stream ended at {i} while replaying to saved position {target}"
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// element-wise ops
+// ---------------------------------------------------------------------------
+
+struct MapOp {
+    inner: Box<dyn PipelineOp>,
+    f: Box<dyn FnMut(Example) -> Example + Send>,
+}
+
+impl PipelineOp for MapOp {
+    fn next(&mut self) -> Option<Example> {
+        self.inner.next().map(|e| (self.f)(e))
+    }
+
+    fn state(&mut self) -> Json {
+        Json::obj(vec![("op", Json::str("map")), ("inner", self.inner.state())])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "map")?;
+        self.inner.restore(field(s, "inner")?)
+    }
+}
+
+struct FilterOp {
+    inner: Box<dyn PipelineOp>,
+    f: Box<dyn FnMut(&Example) -> bool + Send>,
+}
+
+impl PipelineOp for FilterOp {
+    fn next(&mut self) -> Option<Example> {
+        loop {
+            let e = self.inner.next()?;
+            if (self.f)(&e) {
+                return Some(e);
+            }
+        }
+    }
+
+    fn state(&mut self) -> Json {
+        Json::obj(vec![("op", Json::str("filter")), ("inner", self.inner.state())])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "filter")?;
+        self.inner.restore(field(s, "inner")?)
+    }
+}
+
+struct FlatMapOp {
+    inner: Box<dyn PipelineOp>,
+    f: Box<dyn FnMut(Example) -> Vec<Example> + Send>,
+    /// Expansion of the last consumed upstream example not yet emitted.
+    pending: VecDeque<Example>,
+}
+
+impl PipelineOp for FlatMapOp {
+    fn next(&mut self) -> Option<Example> {
+        loop {
+            if let Some(e) = self.pending.pop_front() {
+                return Some(e);
+            }
+            let e = self.inner.next()?;
+            self.pending.extend((self.f)(e));
+        }
+    }
+
+    fn state(&mut self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("flat_map")),
+            ("pending", examples_to_json(self.pending.iter())),
+            ("inner", self.inner.state()),
+        ])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "flat_map")?;
+        self.pending = examples_from_json(field_arr(s, "pending")?)?.into();
+        self.inner.restore(field(s, "inner")?)
+    }
+}
+
+struct EnumerateMapOp {
+    inner: Box<dyn PipelineOp>,
+    f: Box<dyn FnMut(usize, Example) -> Example + Send>,
+    idx: usize,
+}
+
+impl PipelineOp for EnumerateMapOp {
+    fn next(&mut self) -> Option<Example> {
+        let e = self.inner.next()?;
+        let i = self.idx;
+        self.idx += 1;
+        Some((self.f)(i, e))
+    }
+
+    fn state(&mut self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("enumerate_map")),
+            ("idx", Json::num(self.idx as f64)),
+            ("inner", self.inner.state()),
+        ])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "enumerate_map")?;
+        self.idx = field_usize(s, "idx")?;
+        self.inner.restore(field(s, "inner")?)
+    }
+}
+
+struct TakeOp {
+    inner: Box<dyn PipelineOp>,
+    remaining: usize,
+}
+
+impl PipelineOp for TakeOp {
+    fn next(&mut self) -> Option<Example> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let e = self.inner.next();
+        if e.is_some() {
+            self.remaining -= 1;
+        }
+        e
+    }
+
+    fn state(&mut self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("take")),
+            ("remaining", Json::num(self.remaining as f64)),
+            ("inner", self.inner.state()),
+        ])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "take")?;
+        self.remaining = field_usize(s, "remaining")?;
+        self.inner.restore(field(s, "inner")?)
+    }
+}
+
+struct SkipOp {
+    inner: Box<dyn PipelineOp>,
+    n: usize,
+    done: bool,
+}
+
+impl PipelineOp for SkipOp {
+    fn next(&mut self) -> Option<Example> {
+        if !self.done {
+            self.done = true;
+            for _ in 0..self.n {
+                if self.inner.next().is_none() {
+                    break;
+                }
+            }
+        }
+        self.inner.next()
+    }
+
+    fn state(&mut self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("skip")),
+            ("done", Json::Bool(self.done)),
+            ("inner", self.inner.state()),
+        ])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "skip")?;
+        self.done = field_bool(s, "done")?;
+        self.inner.restore(field(s, "inner")?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// buffering ops
+// ---------------------------------------------------------------------------
+
+struct ShuffleOp {
+    inner: Box<dyn PipelineOp>,
+    buf: Vec<Example>,
+    rng: Pcg64,
+    window: usize,
+    /// Initial window fill completed.
+    primed: bool,
+    /// Upstream returned None; never poll it again (tf.data end-of-stream
+    /// behavior — drains the buffer without a per-element upstream probe).
+    exhausted: bool,
+}
+
+impl ShuffleOp {
+    fn pull(&mut self) {
+        match self.inner.next() {
+            Some(e) => self.buf.push(e),
+            None => self.exhausted = true,
+        }
+    }
+}
+
+impl PipelineOp for ShuffleOp {
+    fn next(&mut self) -> Option<Example> {
+        if !self.primed {
+            while !self.exhausted && self.buf.len() < self.window {
+                self.pull();
+            }
+            self.primed = true;
+        } else if !self.exhausted {
+            self.pull();
+        }
+        if self.buf.is_empty() {
+            return None;
+        }
+        let i = self.rng.next_below(self.buf.len() as u64) as usize;
+        Some(self.buf.swap_remove(i))
+    }
+
+    fn state(&mut self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("shuffle")),
+            ("rng", rng_to_json(&self.rng)),
+            ("primed", Json::Bool(self.primed)),
+            ("exhausted", Json::Bool(self.exhausted)),
+            ("buf", examples_to_json(self.buf.iter())),
+            ("inner", self.inner.state()),
+        ])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "shuffle")?;
+        self.rng = rng_from_json(field(s, "rng")?)?;
+        self.primed = field_bool(s, "primed")?;
+        self.exhausted = field_bool(s, "exhausted")?;
+        self.buf = examples_from_json(field_arr(s, "buf")?)?;
+        self.inner.restore(field(s, "inner")?)
+    }
+}
+
+struct InterleaveOp {
+    parts: Vec<Box<dyn PipelineOp>>,
+    next: usize,
+}
+
+impl PipelineOp for InterleaveOp {
+    fn next(&mut self) -> Option<Example> {
+        let n = self.parts.len();
+        for _ in 0..n {
+            let i = self.next;
+            self.next = (self.next + 1) % n;
+            if let Some(e) = self.parts[i].next() {
+                return Some(e);
+            }
+        }
+        None
+    }
+
+    fn state(&mut self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("interleave")),
+            ("next", Json::num(self.next as f64)),
+            (
+                "parts",
+                Json::Arr(self.parts.iter_mut().map(|p| p.state()).collect()),
+            ),
+        ])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "interleave")?;
+        self.next = field_usize(s, "next")?;
+        let parts = field_arr(s, "parts")?;
+        anyhow::ensure!(
+            parts.len() == self.parts.len(),
+            "interleave arity changed: saved {} parts, have {}",
+            parts.len(),
+            self.parts.len()
+        );
+        for (p, st) in self.parts.iter_mut().zip(parts) {
+            p.restore(st)?;
+        }
+        Ok(())
+    }
+}
+
+struct PrefetchOp {
+    /// The upstream op; present until the producer thread starts.
+    pending: Option<Box<dyn PipelineOp>>,
+    buffer: usize,
+    rx: Option<PipeReceiver<(Example, Json)>>,
+    /// Upstream state immediately after the last *delivered* element.
+    last_state: Option<Json>,
+}
+
+impl PrefetchOp {
+    fn start(&mut self) {
+        let mut inner = self.pending.take().expect("prefetch already started");
+        self.last_state = Some(inner.state());
+        let (tx, rx) = Pipe::bounded(self.buffer);
         std::thread::Builder::new()
             .name("seqio-prefetch".into())
             .spawn(move || {
-                for item in iter {
-                    if !tx.send(item) {
+                while let Some(e) = inner.next() {
+                    let st = inner.state();
+                    if !tx.send((e, st)) {
                         break; // consumer hung up
                     }
                 }
             })
             .expect("spawn prefetch thread");
-        Dataset::new(rx.into_iter())
-    }
-
-    pub fn collect_vec(self) -> Vec<Example> {
-        self.iter.collect()
+        self.rx = Some(rx);
     }
 }
+
+impl PipelineOp for PrefetchOp {
+    fn next(&mut self) -> Option<Example> {
+        if self.rx.is_none() {
+            self.start();
+        }
+        match self.rx.as_ref().and_then(|rx| rx.recv()) {
+            Some((e, st)) => {
+                self.last_state = Some(st);
+                Some(e)
+            }
+            None => None,
+        }
+    }
+
+    fn state(&mut self) -> Json {
+        let inner = match (&mut self.pending, &self.last_state) {
+            (Some(p), _) => p.state(),
+            (None, Some(st)) => st.clone(),
+            (None, None) => Json::Null,
+        };
+        Json::obj(vec![("op", Json::str("prefetch")), ("inner", inner)])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "prefetch")?;
+        let p = self
+            .pending
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("cannot restore a running prefetch"))?;
+        p.restore(field(s, "inner")?)
+    }
+}
+
+/// Order-preserving parallel map. A single coordinator (the op itself)
+/// pulls from the upstream, fans work out to `workers` threads, and
+/// re-sequences results by input index, so output order never depends on
+/// worker scheduling. `state()` quiesces in-flight work and serializes
+/// the already-mapped-but-unemitted results.
+struct ParallelMapOp {
+    inner: Box<dyn PipelineOp>,
+    f: Arc<dyn Fn(Example) -> Example + Send + Sync>,
+    workers: usize,
+    capacity: u64,
+    started: bool,
+    work_tx: Option<PipeSender<(u64, Example)>>,
+    /// Workers send `Err(panic message)` instead of vanishing, so a panic
+    /// in the map fn propagates to the consumer rather than deadlocking.
+    result_rx: Option<PipeReceiver<(u64, Result<Example, String>)>>,
+    /// Sequence number assigned to the next upstream element.
+    next_dispatch: u64,
+    /// Sequence number of the next element to emit.
+    next_emit: u64,
+    reorder: BTreeMap<u64, Example>,
+    inner_done: bool,
+}
+
+impl ParallelMapOp {
+    fn start(&mut self) {
+        self.started = true;
+        let (work_tx, work_rx) = Pipe::bounded(self.capacity as usize);
+        let (result_tx, result_rx) = Pipe::bounded(self.capacity as usize);
+        let shared_rx = Arc::new(Mutex::new(work_rx));
+        for w in 0..self.workers {
+            let rx = shared_rx.clone();
+            let tx = result_tx.clone();
+            let f = self.f.clone();
+            std::thread::Builder::new()
+                .name(format!("seqio-pmap-{w}"))
+                .spawn(move || loop {
+                    let item = rx.lock().unwrap().recv();
+                    match item {
+                        Some((seq, ex)) => {
+                            let out = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| f(ex)),
+                            )
+                            .map_err(|p| panic_message(&p));
+                            let died = out.is_err();
+                            if !tx.send((seq, out)) || died {
+                                break; // consumer hung up / map fn panicked
+                            }
+                        }
+                        None => break, // work channel closed and drained
+                    }
+                })
+                .expect("spawn parallel_map worker");
+        }
+        self.work_tx = Some(work_tx);
+        self.result_rx = Some(result_rx);
+    }
+
+    /// Items dispatched to workers whose results have not yet come back.
+    fn in_flight(&self) -> u64 {
+        self.next_dispatch - self.next_emit - self.reorder.len() as u64
+    }
+
+    /// Total lookahead: dispatched but not yet emitted (in workers OR
+    /// parked in the reorder buffer). Bounding on this — not `in_flight`
+    /// — keeps the reorder buffer from growing without limit when one
+    /// straggler element blocks emission while other workers keep
+    /// finishing (tf.data's bounded num_parallel_calls lookahead).
+    fn outstanding(&self) -> u64 {
+        self.next_dispatch - self.next_emit
+    }
+
+    /// Keep the workers fed up to `capacity` outstanding items.
+    fn dispatch(&mut self) {
+        while !self.inner_done && self.outstanding() < self.capacity {
+            match self.inner.next() {
+                Some(ex) => {
+                    let sent = self
+                        .work_tx
+                        .as_ref()
+                        .map(|tx| tx.send((self.next_dispatch, ex)))
+                        .unwrap_or(false);
+                    if !sent {
+                        self.inner_done = true; // workers gone
+                        break;
+                    }
+                    self.next_dispatch += 1;
+                }
+                None => {
+                    self.inner_done = true;
+                    self.work_tx = None; // close so workers exit when drained
+                }
+            }
+        }
+    }
+
+    /// Blocking receive of one finished result into the reorder buffer.
+    /// Panics if a worker's map fn panicked (propagation, matching
+    /// `util::threads::parallel_map`) or if workers died with work still
+    /// in flight — both would otherwise hang or silently truncate.
+    fn collect_one(&mut self) {
+        match self.result_rx.as_ref().and_then(|rx| rx.recv()) {
+            Some((seq, Ok(e))) => {
+                self.reorder.insert(seq, e);
+            }
+            Some((_, Err(msg))) => {
+                panic!("parallel_map worker panicked: {msg}");
+            }
+            None => panic!(
+                "parallel_map workers exited with {} items in flight",
+                self.in_flight()
+            ),
+        }
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+impl PipelineOp for ParallelMapOp {
+    fn next(&mut self) -> Option<Example> {
+        if !self.started {
+            self.start();
+        }
+        loop {
+            if let Some(e) = self.reorder.remove(&self.next_emit) {
+                self.next_emit += 1;
+                return Some(e);
+            }
+            self.dispatch();
+            if self.in_flight() == 0 {
+                return None;
+            }
+            self.collect_one();
+        }
+    }
+
+    fn state(&mut self) -> Json {
+        if self.started {
+            // Quiesce: wait for all dispatched work so the reorder buffer
+            // holds the full contiguous run [next_emit, next_dispatch).
+            while self.in_flight() > 0 {
+                self.collect_one();
+            }
+        }
+        Json::obj(vec![
+            ("op", Json::str("parallel_map")),
+            ("emitted", Json::num(self.next_emit as f64)),
+            (
+                "buffered",
+                examples_to_json(self.reorder.values()),
+            ),
+            ("inner", self.inner.state()),
+        ])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "parallel_map")?;
+        anyhow::ensure!(!self.started, "cannot restore a running parallel_map");
+        let emitted = field_usize(s, "emitted")? as u64;
+        let buffered = examples_from_json(field_arr(s, "buffered")?)?;
+        self.next_emit = emitted;
+        self.reorder.clear();
+        for (i, e) in buffered.into_iter().enumerate() {
+            self.reorder.insert(emitted + i as u64, e);
+        }
+        self.next_dispatch = emitted + self.reorder.len() as u64;
+        self.inner.restore(field(s, "inner")?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// factories and epoch repetition
+// ---------------------------------------------------------------------------
 
 /// A re-instantiable dataset (source of truth for `repeat`): seqio Tasks
 /// hand out factories so epochs can restart the stream deterministically.
@@ -168,36 +952,52 @@ impl DatasetFactory {
         (self.make)()
     }
 
-    /// Infinite repetition across epochs.
-    pub fn repeat(self: std::sync::Arc<Self>) -> Dataset {
-        struct Repeat {
-            factory: std::sync::Arc<DatasetFactory>,
-            cur: BoxIter,
-        }
-        impl Iterator for Repeat {
-            type Item = Example;
+    /// Infinite repetition across epochs. Epoch k's stream is the k-th
+    /// fresh instantiation, so state is (epoch, position-within-epoch).
+    pub fn repeat(self: Arc<Self>) -> Dataset {
+        let cur = self.instantiate().op;
+        Dataset::from_op(RepeatOp { factory: self, cur, epoch: 0 })
+    }
+}
 
-            fn next(&mut self) -> Option<Example> {
-                loop {
-                    if let Some(e) = self.cur.next() {
-                        return Some(e);
-                    }
-                    let fresh = self.factory.instantiate();
-                    if let Some(e2) = {
-                        let mut it = fresh;
-                        let first = it.next();
-                        self.cur = Box::new(it);
-                        first
-                    } {
-                        return Some(e2);
-                    }
-                    // empty dataset: avoid infinite loop
-                    return None;
-                }
-            }
+struct RepeatOp {
+    factory: Arc<DatasetFactory>,
+    cur: Box<dyn PipelineOp>,
+    epoch: u64,
+}
+
+impl PipelineOp for RepeatOp {
+    fn next(&mut self) -> Option<Example> {
+        if let Some(e) = self.cur.next() {
+            return Some(e);
         }
-        let cur = self.instantiate();
-        Dataset::new(Repeat { factory: self, cur: Box::new(cur) })
+        // Epoch boundary: restart once; an empty dataset ends the stream
+        // instead of looping forever.
+        let mut fresh = self.factory.instantiate().op;
+        match fresh.next() {
+            Some(e) => {
+                self.cur = fresh;
+                self.epoch += 1;
+                Some(e)
+            }
+            None => None,
+        }
+    }
+
+    fn state(&mut self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("repeat")),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("cur", self.cur.state()),
+        ])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "repeat")?;
+        self.epoch = field_usize(s, "epoch")? as u64;
+        // Every epoch's stream is an identical fresh instantiation, so the
+        // current (epoch-0) instance restores to any epoch's position.
+        self.cur.restore(field(s, "cur")?)
     }
 }
 
@@ -246,6 +1046,27 @@ mod tests {
     }
 
     #[test]
+    fn shuffle_stops_polling_exhausted_upstream() {
+        // tf.data end-of-stream semantics: once the upstream returns None,
+        // draining the buffer must not probe the upstream again.
+        let calls = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let c2 = calls.clone();
+        let n = 20usize;
+        let counted = (0..=n).filter_map(move |i| {
+            c2.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            if i < n {
+                Some(ints_example(&[("x", vec![i as i32])]))
+            } else {
+                None
+            }
+        });
+        let out = xs(Dataset::new(counted).shuffle_window(8, 3));
+        assert_eq!(out.len(), n);
+        // n Some-calls + exactly one None probe.
+        assert_eq!(calls.load(std::sync::atomic::Ordering::Relaxed), n + 1);
+    }
+
+    #[test]
     fn interleave_round_robin() {
         let d1 = Dataset::from_vec(nums(3));
         let d2 = Dataset::from_vec(
@@ -263,7 +1084,7 @@ mod tests {
 
     #[test]
     fn factory_repeat() {
-        let f = std::sync::Arc::new(DatasetFactory::new(|| Dataset::from_vec(nums(3))));
+        let f = Arc::new(DatasetFactory::new(|| Dataset::from_vec(nums(3))));
         let out = xs(f.repeat().take(8));
         assert_eq!(out, vec![0, 1, 2, 0, 1, 2, 0, 1]);
     }
@@ -277,5 +1098,200 @@ mod tests {
             e
         });
         assert_eq!(xs(d), vec![0, 101, 202, 303, 404]);
+    }
+
+    // -- stateful pipeline tests -------------------------------------------
+
+    /// The canonical test pipeline: every op class in one chain.
+    fn chain(n: usize) -> Dataset {
+        Dataset::from_vec(nums(n))
+            .map(|mut e| {
+                if let Feature::Ints(v) = e.get_mut("x").unwrap() {
+                    v[0] += 1;
+                }
+                e
+            })
+            .filter(|e| e["x"].as_ints().unwrap()[0] % 3 != 0)
+            .flat_map(|e| vec![e.clone(), e])
+            .enumerate_map(|i, mut e| {
+                if let Feature::Ints(v) = e.get_mut("x").unwrap() {
+                    v[0] += 1000 * (i as i32 % 2);
+                }
+                e
+            })
+            .shuffle_window(7, 42)
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_exact_stream() {
+        for cut in [0usize, 1, 5, 13, 29] {
+            let mut full = chain(40);
+            let all: Vec<Example> = (&mut full).collect();
+
+            let mut first = chain(40);
+            let head: Vec<Example> = (&mut first).take(cut).collect();
+            let snap = first.state();
+
+            let mut resumed = chain(40);
+            resumed.restore(&snap).unwrap();
+            let tail: Vec<Example> = resumed.collect();
+
+            let mut joined = head;
+            joined.extend(tail);
+            assert_eq!(joined, all, "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn state_roundtrips_through_json_text() {
+        let mut first = chain(30);
+        let head: Vec<Example> = (&mut first).take(11).collect();
+        let text = first.state().to_json_string();
+        let snap = PipelineState::parse(&text).unwrap();
+
+        let mut resumed = chain(30);
+        resumed.restore(&snap).unwrap();
+        let tail: Vec<Example> = resumed.collect();
+
+        let mut full = chain(30);
+        let all: Vec<Example> = (&mut full).collect();
+        let mut joined = head;
+        joined.extend(tail);
+        assert_eq!(joined, all);
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_pipeline() {
+        let mut a = Dataset::from_vec(nums(5)).take(3);
+        let snap = a.state();
+        let mut b = Dataset::from_vec(nums(5)).skip(1);
+        assert!(b.restore(&snap).is_err());
+    }
+
+    #[test]
+    fn repeat_state_resumes_across_epochs() {
+        let f = Arc::new(DatasetFactory::new(|| Dataset::from_vec(nums(4))));
+        let mut first = f.clone().repeat();
+        let head: Vec<i32> = (&mut first)
+            .take(10)
+            .map(|e| e["x"].as_ints().unwrap()[0])
+            .collect();
+        assert_eq!(head, vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1]);
+        let snap = first.state();
+
+        let mut resumed = f.repeat();
+        resumed.restore(&snap).unwrap();
+        // NB: inherent `take`/`map` shadow the Iterator adaptors, so go
+        // through `&mut` to keep plain Iterator semantics.
+        let tail: Vec<i32> = (&mut resumed)
+            .take(6)
+            .map(|e| e["x"].as_ints().unwrap()[0])
+            .collect();
+        assert_eq!(tail, vec![2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn parallel_map_matches_serial_map_order() {
+        let f = |mut e: Example| {
+            if let Feature::Ints(v) = e.get_mut("x").unwrap() {
+                v[0] = v[0] * 7 + 1;
+            }
+            e
+        };
+        let serial = xs(Dataset::from_vec(nums(200)).map(f));
+        for workers in [1usize, 2, 4] {
+            let par = xs(Dataset::from_vec(nums(200)).parallel_map(f, workers));
+            assert_eq!(par, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn parallel_map_state_roundtrip() {
+        let f = |mut e: Example| {
+            if let Feature::Ints(v) = e.get_mut("x").unwrap() {
+                v[0] += 500;
+            }
+            e
+        };
+        let build = || Dataset::from_vec(nums(60)).parallel_map(f, 4);
+        let all = xs(build());
+
+        let mut first = build();
+        let head: Vec<i32> = (&mut first)
+            .take(23)
+            .map(|e| e["x"].as_ints().unwrap()[0])
+            .collect();
+        let snap = first.state();
+
+        let mut resumed = build();
+        resumed.restore(&snap).unwrap();
+        let tail: Vec<i32> =
+            (&mut resumed).map(|e| e["x"].as_ints().unwrap()[0]).collect();
+
+        let mut joined = head;
+        joined.extend(tail);
+        assert_eq!(joined, all);
+    }
+
+    #[test]
+    fn parallel_map_propagates_worker_panic() {
+        let r = std::panic::catch_unwind(|| {
+            Dataset::from_vec(nums(10))
+                .parallel_map(
+                    |e| {
+                        if e["x"].as_ints().unwrap()[0] == 5 {
+                            panic!("boom");
+                        }
+                        e
+                    },
+                    2,
+                )
+                .collect_vec()
+        });
+        assert!(r.is_err(), "worker panic must propagate, not hang/truncate");
+    }
+
+    #[test]
+    fn prefetch_state_reflects_delivered_elements() {
+        let build = || Dataset::from_vec(nums(30)).prefetch(4);
+        let mut first = build();
+        let head: Vec<i32> = (&mut first)
+            .take(9)
+            .map(|e| e["x"].as_ints().unwrap()[0])
+            .collect();
+        assert_eq!(head, (0..9).collect::<Vec<_>>());
+        let snap = first.state();
+
+        let mut resumed = build();
+        resumed.restore(&snap).unwrap();
+        let tail: Vec<i32> =
+            (&mut resumed).map(|e| e["x"].as_ints().unwrap()[0]).collect();
+        assert_eq!(tail, (9..30).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn interleave_state_roundtrip() {
+        let build = || {
+            Dataset::interleave(vec![
+                Dataset::from_vec(nums(5)),
+                Dataset::from_vec(
+                    (100..103).map(|i| ints_example(&[("x", vec![i])])).collect(),
+                ),
+            ])
+        };
+        let all = xs(build());
+        let mut first = build();
+        let head: Vec<i32> = (&mut first)
+            .take(4)
+            .map(|e| e["x"].as_ints().unwrap()[0])
+            .collect();
+        let snap = first.state();
+        let mut resumed = build();
+        resumed.restore(&snap).unwrap();
+        let tail: Vec<i32> =
+            (&mut resumed).map(|e| e["x"].as_ints().unwrap()[0]).collect();
+        let mut joined = head;
+        joined.extend(tail);
+        assert_eq!(joined, all);
     }
 }

@@ -17,9 +17,10 @@
 use std::path::{Path, PathBuf};
 
 use super::cache::CacheMeta;
-use super::dataset::Dataset;
+use super::dataset::{check_tag, field_usize, Dataset, PipelineOp};
 use super::records::RecordReader;
 use super::{deserialize_example, Example, Feature};
+use crate::util::json::Json;
 
 /// Handle to a cached deterministic task directory.
 pub struct DeterministicPipeline {
@@ -54,6 +55,10 @@ impl DeterministicPipeline {
     /// Stream host `h`'s examples starting from its `start_k`-th example
     /// (start_k = step * per_host_batch for resume), in global index order,
     /// optionally repeating over epochs.
+    ///
+    /// The returned dataset is a stateful [`PipelineOp`]: its op state is
+    /// the total-emitted cursor (`start_at` position), so trainer restarts
+    /// can snapshot and seek it in O(1) via the sidecar record indices.
     pub fn host_stream(
         &self,
         host: usize,
@@ -62,111 +67,131 @@ impl DeterministicPipeline {
         repeat: bool,
     ) -> Dataset {
         let files = self.host_files(host, num_hosts);
-        let n = self.meta.num_examples;
-        let shards = self.meta.num_shards;
-        let dir = self.dir.clone();
-        let per_host = self.host_examples(host, num_hosts);
-
-        struct HostReader {
-            readers: Vec<RecordReader>,
-            /// file index within `readers` to pull from next
-            r: usize,
-            /// entry index within that file
-            q: usize,
-            /// absolute shard number per reader (for global index calc)
-            shard_ids: Vec<usize>,
-            n: usize,
-            shards: usize,
-            emitted: usize,
-            per_host: usize,
-            repeat: bool,
-        }
-
-        impl HostReader {
-            fn reset(&mut self) {
-                self.r = 0;
-                self.q = 0;
-                self.emitted = 0;
-                for rd in &mut self.readers {
-                    let _ = rd.seek_to(0);
-                }
-            }
-        }
-
-        impl Iterator for HostReader {
-            type Item = Example;
-
-            fn next(&mut self) -> Option<Example> {
-                loop {
-                    if self.emitted >= self.per_host {
-                        if self.repeat {
-                            self.reset();
-                        } else {
-                            return None;
-                        }
-                    }
-                    let shard = self.shard_ids[self.r];
-                    let global_index = self.q * self.shards + shard;
-                    if global_index >= self.n {
-                        // ragged tail: this file has no entry q; advance.
-                        self.advance();
-                        continue;
-                    }
-                    let payload = self.readers[self.r]
-                        .read_at(self.q)
-                        .expect("deterministic read");
-                    let mut ex =
-                        deserialize_example(&payload).expect("deserialize example");
-                    ex.insert("_index".into(), Feature::Ints(vec![global_index as i32]));
-                    self.advance();
-                    self.emitted += 1;
-                    return Some(ex);
-                }
-            }
-        }
-
-        impl HostReader {
-            fn advance(&mut self) {
-                self.r += 1;
-                if self.r == self.readers.len() {
-                    self.r = 0;
-                    self.q += 1;
-                }
-            }
-        }
-
         let readers: Vec<RecordReader> = files
             .iter()
             .map(|&f| {
-                RecordReader::open(CacheMeta::shard_file(&dir, f))
+                RecordReader::open(CacheMeta::shard_file(&self.dir, f))
                     .expect("open shard file")
             })
             .collect();
-        let m = files.len().max(1);
-        // Within-epoch resume position: wraps for repeating streams, clamps
-        // (=> empty stream) for finite ones resumed past their end.
-        let k = if repeat {
-            start_k % per_host.max(1)
-        } else {
-            start_k.min(per_host)
-        };
-        let hr = HostReader {
+        let mut hr = HostReader {
             readers,
-            r: k % m,
-            q: k / m,
+            r: 0,
+            q: 0,
             shard_ids: files,
-            n,
-            shards,
-            emitted: k,
-            per_host,
+            n: self.meta.num_examples,
+            shards: self.meta.num_shards,
+            emitted: 0,
+            total_emitted: 0,
+            per_host: self.host_examples(host, num_hosts),
             repeat,
         };
-        Dataset::new(hr)
+        hr.seek(start_k);
+        Dataset::from_op(hr)
     }
 
     /// Convenience: the merged global-order stream (single host view).
     pub fn global_stream(&self) -> Dataset {
         self.host_stream(0, 1, 0, false)
+    }
+}
+
+/// The stateful reader behind [`DeterministicPipeline::host_stream`]. Its
+/// entire position is one number — the total examples emitted — which the
+/// trainer snapshots at batch boundaries and the restore path seeks to.
+struct HostReader {
+    readers: Vec<RecordReader>,
+    /// file index within `readers` to pull from next
+    r: usize,
+    /// entry index within that file
+    q: usize,
+    /// absolute shard number per reader (for global index calc)
+    shard_ids: Vec<usize>,
+    n: usize,
+    shards: usize,
+    /// emitted within the current epoch
+    emitted: usize,
+    /// emitted across all epochs (the `start_at` cursor reported as state)
+    total_emitted: usize,
+    per_host: usize,
+    repeat: bool,
+}
+
+impl HostReader {
+    /// Position the reader so the next example is the `k_total`-th this
+    /// host would emit overall. Wraps for repeating streams; clamps (=>
+    /// empty stream) for finite ones resumed past their end.
+    fn seek(&mut self, k_total: usize) {
+        let m = self.readers.len().max(1);
+        let k = if self.repeat {
+            k_total % self.per_host.max(1)
+        } else {
+            k_total.min(self.per_host)
+        };
+        self.r = k % m;
+        self.q = k / m;
+        self.emitted = k;
+        self.total_emitted = k_total;
+    }
+
+    fn advance(&mut self) {
+        self.r += 1;
+        if self.r == self.readers.len() {
+            self.r = 0;
+            self.q += 1;
+        }
+    }
+
+    fn reset_epoch(&mut self) {
+        self.r = 0;
+        self.q = 0;
+        self.emitted = 0;
+        for rd in &mut self.readers {
+            let _ = rd.seek_to(0);
+        }
+    }
+}
+
+impl PipelineOp for HostReader {
+    fn next(&mut self) -> Option<Example> {
+        loop {
+            if self.emitted >= self.per_host {
+                if self.repeat {
+                    self.reset_epoch();
+                } else {
+                    return None;
+                }
+            }
+            let shard = self.shard_ids[self.r];
+            let global_index = self.q * self.shards + shard;
+            if global_index >= self.n {
+                // ragged tail: this file has no entry q; advance.
+                self.advance();
+                continue;
+            }
+            let payload = self.readers[self.r]
+                .read_at(self.q)
+                .expect("deterministic read");
+            let mut ex = deserialize_example(&payload).expect("deserialize example");
+            ex.insert("_index".into(), Feature::Ints(vec![global_index as i32]));
+            self.advance();
+            self.emitted += 1;
+            self.total_emitted += 1;
+            return Some(ex);
+        }
+    }
+
+    fn state(&mut self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("det_reader")),
+            ("emitted_total", Json::num(self.total_emitted as f64)),
+        ])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "det_reader")?;
+        self.seek(field_usize(s, "emitted_total")?);
+        Ok(())
     }
 }
 

@@ -274,49 +274,80 @@ impl Default for PackedLmConverter {
 
 impl PackedLmConverter {
     pub fn convert(&self, ds: Dataset, row_len: usize) -> Dataset {
-        let buffer = self.buffer.max(1);
-        struct Packer {
-            inner: super::dataset::BoxIter,
-            out: std::collections::VecDeque<Example>,
-            buffer: usize,
-            row_len: usize,
-            done: bool,
-        }
-        impl Iterator for Packer {
-            type Item = Example;
-
-            fn next(&mut self) -> Option<Example> {
-                loop {
-                    if let Some(e) = self.out.pop_front() {
-                        return Some(e);
-                    }
-                    if self.done {
-                        return None;
-                    }
-                    let mut batch = Vec::with_capacity(self.buffer);
-                    for _ in 0..self.buffer {
-                        match self.inner.next() {
-                            Some(e) => batch.push(e),
-                            None => {
-                                self.done = true;
-                                break;
-                            }
-                        }
-                    }
-                    if batch.is_empty() {
-                        return None;
-                    }
-                    self.out.extend(pack_lm(&batch, self.row_len));
-                }
-            }
-        }
-        Dataset::new(Packer {
-            inner: Box::new(ds),
+        Dataset::from_op(Packer {
+            inner: ds.into_op(),
             out: Default::default(),
-            buffer,
+            buffer: self.buffer.max(1),
             row_len,
             done: false,
         })
+    }
+}
+
+/// Stateful packing op: buffers `buffer` upstream examples per bin, emits
+/// packed rows. Its state is the not-yet-emitted packed rows plus the
+/// upstream state, so packed pipelines checkpoint/resume exactly.
+struct Packer {
+    inner: Box<dyn crate::seqio::dataset::PipelineOp>,
+    out: std::collections::VecDeque<Example>,
+    buffer: usize,
+    row_len: usize,
+    done: bool,
+}
+
+impl crate::seqio::dataset::PipelineOp for Packer {
+    fn next(&mut self) -> Option<Example> {
+        loop {
+            if let Some(e) = self.out.pop_front() {
+                return Some(e);
+            }
+            if self.done {
+                return None;
+            }
+            let mut batch = Vec::with_capacity(self.buffer);
+            for _ in 0..self.buffer {
+                match self.inner.next() {
+                    Some(e) => batch.push(e),
+                    None => {
+                        self.done = true;
+                        break;
+                    }
+                }
+            }
+            if batch.is_empty() {
+                return None;
+            }
+            self.out.extend(pack_lm(&batch, self.row_len));
+        }
+    }
+
+    fn state(&mut self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("op", Json::str("packed_lm")),
+            ("done", Json::Bool(self.done)),
+            (
+                "out",
+                Json::Arr(
+                    self.out
+                        .iter()
+                        .map(crate::seqio::dataset::example_to_json)
+                        .collect(),
+                ),
+            ),
+            ("inner", self.inner.state()),
+        ])
+    }
+
+    fn restore(&mut self, s: &crate::util::json::Json) -> anyhow::Result<()> {
+        use crate::seqio::dataset::{check_tag, example_from_json, field, field_arr, field_bool};
+        check_tag(s, "packed_lm")?;
+        self.done = field_bool(s, "done")?;
+        self.out = field_arr(s, "out")?
+            .iter()
+            .map(example_from_json)
+            .collect::<anyhow::Result<_>>()?;
+        self.inner.restore(field(s, "inner")?)
     }
 }
 

@@ -4,8 +4,12 @@
 
 use std::sync::Arc;
 
-use super::dataset::Dataset;
+use super::dataset::{
+    check_tag, field, field_arr, rng_from_json, rng_to_json, Dataset, PipelineOp,
+    PipelineState,
+};
 use super::task::Task;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
 /// A weighted collection of tasks.
@@ -30,47 +34,116 @@ impl Mixture {
     /// stamped with a `_task` feature naming its origin (for rate tests and
     /// eval routing). Tasks that run out are dropped from the draw
     /// (seqio's behaviour with non-repeating datasets).
+    ///
+    /// The stream is a stateful [`PipelineOp`]: its state captures the
+    /// sampling RNG, the set of still-active tasks, and every member
+    /// stream's own state, so a mixture resumes mid-draw exactly.
     pub fn dataset(&self, seed: u64, shard_id: usize, num_shards: usize) -> Dataset {
-        struct Sampler {
-            streams: Vec<(String, super::dataset::BoxIter)>,
-            weights: Vec<f64>,
-            rng: Pcg64,
-        }
-        impl Iterator for Sampler {
-            type Item = super::Example;
-
-            fn next(&mut self) -> Option<super::Example> {
-                while !self.streams.is_empty() {
-                    let i = self.rng.sample_weighted(&self.weights);
-                    match self.streams[i].1.next() {
-                        Some(mut ex) => {
-                            ex.insert(
-                                "_task".into(),
-                                super::Feature::Text(self.streams[i].0.clone()),
-                            );
-                            return Some(ex);
-                        }
-                        None => {
-                            drop(self.streams.remove(i));
-                            self.weights.remove(i);
-                        }
-                    }
-                }
-                None
-            }
-        }
-        let mut streams: Vec<(String, super::dataset::BoxIter)> = Vec::new();
+        let mut streams: Vec<(String, Box<dyn PipelineOp>)> = Vec::new();
         let mut weights = Vec::new();
         for (task, rate) in &self.tasks {
             let ds = task.dataset(seed, shard_id, num_shards);
-            streams.push((task.name.clone(), Box::new(ds)));
+            streams.push((task.name.clone(), ds.into_op()));
             weights.push(*rate);
         }
-        Dataset::new(Sampler {
+        Dataset::from_op(Sampler {
             streams,
             weights,
             rng: Pcg64::new(seed ^ 0x4D49_5854), // "MIXT"
         })
+    }
+
+    /// Rebuild the mixture stream and reposition it to a captured state.
+    pub fn dataset_resumed(
+        &self,
+        seed: u64,
+        shard_id: usize,
+        num_shards: usize,
+        state: &PipelineState,
+    ) -> anyhow::Result<Dataset> {
+        let mut ds = self.dataset(seed, shard_id, num_shards);
+        ds.restore(state)?;
+        Ok(ds)
+    }
+}
+
+struct Sampler {
+    streams: Vec<(String, Box<dyn PipelineOp>)>,
+    weights: Vec<f64>,
+    rng: Pcg64,
+}
+
+impl PipelineOp for Sampler {
+    fn next(&mut self) -> Option<super::Example> {
+        while !self.streams.is_empty() {
+            let i = self.rng.sample_weighted(&self.weights);
+            match self.streams[i].1.next() {
+                Some(mut ex) => {
+                    ex.insert(
+                        "_task".into(),
+                        super::Feature::Text(self.streams[i].0.clone()),
+                    );
+                    return Some(ex);
+                }
+                None => {
+                    drop(self.streams.remove(i));
+                    self.weights.remove(i);
+                }
+            }
+        }
+        None
+    }
+
+    fn state(&mut self) -> Json {
+        let active: Vec<Json> =
+            self.streams.iter().map(|(n, _)| Json::str(n.clone())).collect();
+        let states: Vec<Json> =
+            self.streams.iter_mut().map(|(_, op)| op.state()).collect();
+        Json::obj(vec![
+            ("op", Json::str("mixture")),
+            ("rng", rng_to_json(&self.rng)),
+            ("active", Json::Arr(active)),
+            ("streams", Json::Arr(states)),
+        ])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "mixture")?;
+        let active = field_arr(s, "active")?;
+        let states = field_arr(s, "streams")?;
+        anyhow::ensure!(
+            active.len() == states.len(),
+            "mixture state arrays disagree: {} names vs {} states",
+            active.len(),
+            states.len()
+        );
+        // The saved active list is an order-preserving subset of the full
+        // task list; exhausted tasks were dropped before the snapshot.
+        let mut old: std::collections::VecDeque<((String, Box<dyn PipelineOp>), f64)> =
+            self.streams.drain(..).zip(self.weights.drain(..)).collect();
+        let mut new_streams = Vec::with_capacity(active.len());
+        let mut new_weights = Vec::with_capacity(active.len());
+        for (name_j, st) in active.iter().zip(states) {
+            let name = name_j
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("mixture task name is not a string"))?;
+            loop {
+                let Some(((n, mut op), w)) = old.pop_front() else {
+                    anyhow::bail!("mixture state names task '{name}' not in this mixture");
+                };
+                if n == name {
+                    op.restore(st)?;
+                    new_streams.push((n, op));
+                    new_weights.push(w);
+                    break;
+                }
+                // task exhausted before the snapshot: drop it here too
+            }
+        }
+        self.streams = new_streams;
+        self.weights = new_weights;
+        self.rng = rng_from_json(field(s, "rng")?)?;
+        Ok(())
     }
 }
 
@@ -159,6 +232,31 @@ mod tests {
         assert_eq!(a, b);
         let c: Vec<_> = make().dataset(10, 0, 1).take(50).collect();
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn mixture_state_resumes_exact_stream() {
+        let make = || {
+            Mixture::new(
+                "m6",
+                vec![
+                    (const_task("a_res", 1, 30), 0.6),
+                    (const_task("b_res", 2, 120), 0.4),
+                ],
+            )
+        };
+        let all = make().dataset(3, 0, 1).collect_vec();
+        // cut=80 lands after the small task exhausts, exercising the
+        // dropped-task bookkeeping in the saved state.
+        for cut in [0usize, 7, 80] {
+            let mut first = make().dataset(3, 0, 1);
+            let head: Vec<_> = (&mut first).take(cut).collect();
+            let snap = first.state();
+            let resumed = make().dataset_resumed(3, 0, 1, &snap).unwrap();
+            let mut joined = head;
+            joined.extend(resumed.collect_vec());
+            assert_eq!(joined, all, "cut={cut}");
+        }
     }
 
     #[test]

@@ -7,7 +7,7 @@ use std::sync::{Arc, Mutex};
 
 use once_cell::sync::Lazy;
 
-use super::dataset::Dataset;
+use super::dataset::{Dataset, PipelineState};
 use super::evaluation::Metric;
 use super::preprocessors::{PipelineCtx, Preprocessor};
 use super::source::DataSource;
@@ -42,7 +42,10 @@ impl Task {
         }
     }
 
-    /// Instantiate the preprocessed dataset for one data shard.
+    /// Instantiate the preprocessed dataset for one data shard. The
+    /// returned stream is stateful: `Dataset::state()` captures the whole
+    /// op graph (source position, preprocessor buffers) and
+    /// [`Task::dataset_resumed`] rebuilds + repositions it.
     pub fn dataset(&self, seed: u64, shard_id: usize, num_shards: usize) -> Dataset {
         let ctx = PipelineCtx { seed };
         let mut ds = self.source.dataset(shard_id, num_shards);
@@ -50,6 +53,20 @@ impl Task {
             ds = p.apply(ds, &ctx);
         }
         ds
+    }
+
+    /// Rebuild the task stream (same seed/sharding) and reposition it to a
+    /// previously captured [`PipelineState`].
+    pub fn dataset_resumed(
+        &self,
+        seed: u64,
+        shard_id: usize,
+        num_shards: usize,
+        state: &PipelineState,
+    ) -> anyhow::Result<Dataset> {
+        let mut ds = self.dataset(seed, shard_id, num_shards);
+        ds.restore(state)?;
+        Ok(ds)
     }
 
     pub fn output_feature(&self, name: &str) -> Option<&OutputFeature> {
@@ -191,6 +208,27 @@ mod tests {
         assert!(TaskRegistry::names().contains(&"test_task_registry".to_string()));
         TaskRegistry::remove("test_task_registry");
         assert!(TaskRegistry::get("test_task_registry").is_none());
+    }
+
+    #[test]
+    fn task_stream_resumes_mid_epoch() {
+        let vocab: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(16));
+        let task = Task::builder("test_task_resume")
+            .source(Arc::new(SyntheticTextSource::new(5, 20)))
+            .preprocessor(Arc::new(Tokenize::new(vocab.clone(), &[("text", "targets")])))
+            .preprocessor(Arc::new(
+                crate::seqio::preprocessors::SpanCorruption::new(vocab.clone()),
+            ))
+            .output_feature("targets", vocab, true)
+            .build();
+        let all = task.dataset(11, 0, 1).collect_vec();
+        let mut first = task.dataset(11, 0, 1);
+        let head: Vec<_> = (&mut first).take(8).collect();
+        let snap = first.state();
+        let resumed = task.dataset_resumed(11, 0, 1, &snap).unwrap();
+        let mut joined = head;
+        joined.extend(resumed.collect_vec());
+        assert_eq!(joined, all);
     }
 
     #[test]

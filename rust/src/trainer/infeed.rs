@@ -2,13 +2,29 @@
 //! the positional [`HostTensor`] layout the HLO entrypoints expect, with a
 //! per-host background prefetch thread and bounded backpressure — the
 //! paper's "prevent bottlenecks when infeeding data" machinery (E9).
+//!
+//! Each producer thread snapshots its pipeline's [`PipelineState`] at
+//! every batch boundary and ships it alongside the batch; the state the
+//! trainer observes via [`Infeed::pipeline_state`] therefore corresponds
+//! to the batches actually *consumed*, never to batches merely sitting in
+//! the prefetch buffer — the property that makes kill-and-resume runs
+//! consume the exact same global example sequence.
+//!
+//! Cost note: a snapshot serializes each buffering op's buffer (and
+//! quiesces `parallel_map` in-flight work), so its per-batch price scales
+//! with `shuffle_window`/packer buffer sizes. The trainer-facing streams
+//! (deterministic cache reader + converters) are pure positional ops
+//! where a snapshot is a handful of counters; pipelines with very large
+//! in-memory buffers should keep them upstream of the offline cache job
+//! (see the ROADMAP item on incremental snapshots).
 
 use std::sync::Mutex;
 
 use crate::runtime::artifacts::ModelManifest;
 use crate::runtime::HostTensor;
-use crate::seqio::dataset::Dataset;
+use crate::seqio::dataset::{Dataset, PipelineState};
 use crate::seqio::{Example, Feature};
+use crate::util::json::Json;
 use crate::util::threads::{Pipe, PipeReceiver};
 
 /// Assemble one batch: `examples.len()` rows of the manifest's batch
@@ -54,9 +70,13 @@ pub fn assemble_batch(m: &ModelManifest, examples: &[Example]) -> Vec<HostTensor
 }
 
 /// Multi-host prefetching infeed. One background thread per host converts
-/// its stream into ready batches through a bounded pipe.
+/// its stream into ready batches through a bounded pipe, pairing each
+/// batch with the pipeline state that follows it.
 pub struct Infeed {
-    receivers: Vec<Mutex<PipeReceiver<Vec<HostTensor>>>>,
+    receivers: Vec<Mutex<PipeReceiver<(Vec<HostTensor>, Json)>>>,
+    /// Per host: pipeline state after the last batch *delivered* by
+    /// [`Infeed::next`] (initially the stream's starting state).
+    states: Vec<Mutex<Json>>,
 }
 
 impl Infeed {
@@ -68,23 +88,54 @@ impl Infeed {
         prefetch: usize,
         make_stream: impl Fn(usize) -> Dataset + Send + Sync,
     ) -> Infeed {
+        Self::spawn_resumable(m, num_hosts, prefetch, make_stream, None)
+            .expect("infeed spawn without resume state cannot fail")
+    }
+
+    /// Like [`Infeed::spawn`], but optionally repositions every host's
+    /// freshly built stream to a checkpointed per-host [`PipelineState`]
+    /// before production starts (the trainer's exact-resume path).
+    pub fn spawn_resumable(
+        m: &ModelManifest,
+        num_hosts: usize,
+        prefetch: usize,
+        make_stream: impl Fn(usize) -> Dataset + Send + Sync,
+        resume: Option<&[PipelineState]>,
+    ) -> anyhow::Result<Infeed> {
+        if let Some(states) = resume {
+            anyhow::ensure!(
+                states.len() == num_hosts,
+                "resume has {} host states, trainer has {num_hosts} hosts",
+                states.len()
+            );
+        }
         let mut receivers = Vec::with_capacity(num_hosts);
+        let mut states_out = Vec::with_capacity(num_hosts);
         let batch = m.batch();
-        std::thread::scope(|_| {});
         for host in 0..num_hosts {
             let (tx, rx) = Pipe::bounded(prefetch.max(1));
-            let stream = make_stream(host);
+            let mut stream = make_stream(host);
+            if let Some(states) = resume {
+                stream
+                    .restore(&states[host])
+                    .map_err(|e| anyhow::anyhow!("restoring host {host} stream: {e}"))?;
+            }
+            let start_state = stream.state().0;
+            states_out.push(Mutex::new(start_state));
             let manifest = m.clone();
             std::thread::Builder::new()
                 .name(format!("infeed-{host}"))
                 .spawn(move || {
                     let mut buf = Vec::with_capacity(batch);
-                    for ex in stream {
+                    while let Some(ex) = stream.next() {
                         buf.push(ex);
                         if buf.len() == batch {
                             let assembled = assemble_batch(&manifest, &buf);
                             buf.clear();
-                            if !tx.send(assembled) {
+                            // Snapshot at the batch boundary: the state a
+                            // consumer resumes from after this batch.
+                            let state = stream.state().0;
+                            if !tx.send((assembled, state)) {
                                 return; // trainer hung up
                             }
                         }
@@ -94,12 +145,25 @@ impl Infeed {
                 .expect("spawn infeed thread");
             receivers.push(Mutex::new(rx));
         }
-        Infeed { receivers }
+        Ok(Infeed { receivers, states: states_out })
     }
 
     /// Blocking fetch of host `h`'s next batch; None when the stream ends.
     pub fn next(&self, host: usize) -> Option<Vec<HostTensor>> {
-        self.receivers[host].lock().unwrap().recv()
+        let item = self.receivers[host].lock().unwrap().recv();
+        match item {
+            Some((batch, state)) => {
+                *self.states[host].lock().unwrap() = state;
+                Some(batch)
+            }
+            None => None,
+        }
+    }
+
+    /// Pipeline state of host `h` as of its last consumed batch. Saved in
+    /// checkpoints so a restarted run resumes the exact example sequence.
+    pub fn pipeline_state(&self, host: usize) -> PipelineState {
+        PipelineState(self.states[host].lock().unwrap().clone())
     }
 }
 

@@ -29,6 +29,7 @@ use std::time::Instant;
 
 use crate::checkpoint::{CheckpointManager, ExtraState};
 use crate::collectives::{chunk_bounds, run_ranks, CollectiveGroup};
+use crate::seqio::dataset::PipelineState;
 use crate::metrics::MetricsLogger;
 use crate::model::Params;
 use crate::optim::{Optimizer, OptimizerKind, Schedule};
@@ -101,6 +102,18 @@ impl BatchSource {
                 Some(infeed::synthetic_batch(m, *seed, host, step))
             }
             BatchSource::Infeed(inf) => inf.next(host),
+        }
+    }
+
+    /// Per-host pipeline states as of the last consumed batch (None for
+    /// stateless synthetic sources). Persisted with each checkpoint so the
+    /// data stream resumes exactly where the params/optimizer do.
+    fn pipeline_states(&self, num_hosts: usize) -> Option<Vec<PipelineState>> {
+        match self {
+            BatchSource::Synthetic { .. } => None,
+            BatchSource::Infeed(inf) => {
+                Some((0..num_hosts).map(|h| inf.pipeline_state(h)).collect())
+            }
         }
     }
 }
@@ -256,6 +269,11 @@ pub struct Trainer {
     group: Arc<CollectiveGroup>,
     hosts: Vec<Mutex<HostState>>,
     pub start_step: u64,
+    /// Per-host data pipeline states recovered by [`Trainer::restore_latest`]
+    /// (None when the checkpoint predates pipeline checkpointing or the run
+    /// used a synthetic source). Pass to
+    /// [`infeed::Infeed::spawn_resumable`] to resume the exact stream.
+    pub restored_pipeline: Option<Vec<PipelineState>>,
     pub logger: Arc<MetricsLogger>,
     /// Per-phase wall-time accounting (summed over hosts); reset per train().
     pub timing: TimingBreakdown,
@@ -291,6 +309,7 @@ impl Trainer {
             group,
             hosts,
             start_step: 0,
+            restored_pipeline: None,
             logger: Arc::new(MetricsLogger::new()),
             timing: TimingBreakdown::default(),
         })
@@ -533,7 +552,7 @@ impl Trainer {
                 (self.config.checkpoint_every, self.config.checkpoint_dir.as_ref())
             {
                 if (step + 1) % every == 0 || step + 1 == end {
-                    self.checkpoint_barrier(rank, step + 1, dir)?;
+                    self.checkpoint_barrier(rank, step + 1, dir, source)?;
                 }
             }
         }
@@ -541,8 +560,16 @@ impl Trainer {
     }
 
     /// Synchronized checkpoint: all hosts contribute optimizer shards
-    /// (2D) / host 0 saves (1D has replicated state).
-    fn checkpoint_barrier(&self, rank: usize, step: u64, dir: &PathBuf) -> anyhow::Result<()> {
+    /// (2D) / host 0 saves (1D has replicated state). Host 0 additionally
+    /// persists every host's data-pipeline state (all ranks are at the
+    /// same step boundary here, so the snapshot is globally consistent).
+    fn checkpoint_barrier(
+        &self,
+        rank: usize,
+        step: u64,
+        dir: &PathBuf,
+        source: &BatchSource,
+    ) -> anyhow::Result<()> {
         let extra: ExtraState = match self.config.strategy {
             ParamStrategy::OneD => {
                 if rank == 0 {
@@ -581,19 +608,22 @@ impl Trainer {
             let params = self.layout.unflatten(&self.hosts[0].lock().unwrap().flat_params);
             let mut meta_extra = extra;
             meta_extra.push(("trainstate/step".into(), vec![step as f32]));
-            mgr.save(step, &params, &meta_extra)?;
+            let pipeline = source.pipeline_states(self.config.num_hosts);
+            mgr.save_with_pipeline(step, &params, &meta_extra, pipeline.as_deref())?;
         }
         self.group.barrier(rank);
         Ok(())
     }
 
-    /// Restore params + optimizer state + step from the latest checkpoint.
+    /// Restore params + optimizer state + step + data-pipeline position
+    /// from the latest checkpoint.
     pub fn restore_latest(&mut self, dir: &PathBuf) -> anyhow::Result<u64> {
         let mgr = CheckpointManager::new(dir.clone());
         let step = mgr
             .latest()
             .ok_or_else(|| anyhow::anyhow!("no checkpoint in {}", dir.display()))?;
         let (params, extra) = mgr.restore(step)?;
+        self.restored_pipeline = mgr.restore_pipeline(step)?;
         let flat = self.layout.flatten(&params);
         let n = self.config.num_hosts;
         let bounds = chunk_bounds(self.layout.total, n);

@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use crate::runtime::artifacts::ModelManifest;
 use crate::seqio::cache::{cache_task, CacheConfig, CacheMeta};
-use crate::seqio::dataset::Dataset;
+use crate::seqio::dataset::{Dataset, PipelineState};
 use crate::seqio::deterministic::{strip_index, DeterministicPipeline};
 use crate::seqio::feature_converters::{
     lengths, EncDecConverter, FeatureConverter, LmConverter,
@@ -117,30 +117,40 @@ pub fn ensure_cached(
 }
 
 /// Infeed over a cached deterministic pipeline with the right converter
-/// for the model arch, resuming at `start_step`.
+/// for the model arch. Positioning: when `resume` carries checkpointed
+/// per-host pipeline states they win (exact op-graph restore); otherwise
+/// the stream starts at `start_step * batch` (the coarse positional
+/// fallback for checkpoints that predate pipeline state).
 pub fn cached_infeed(
     m: &ModelManifest,
     cache_dir: &Path,
     num_hosts: usize,
     start_step: u64,
-) -> Infeed {
+    resume: Option<&[PipelineState]>,
+) -> anyhow::Result<Infeed> {
     let batch = m.batch();
     let seq = m.seq_len();
     let arch = m.arch.clone();
     let dir = cache_dir.to_path_buf();
-    Infeed::spawn(m, num_hosts, 4, move |host| {
-        let p = DeterministicPipeline::open(&dir).expect("open cache");
-        let ds = p
-            .host_stream(host, num_hosts, start_step as usize * batch, true)
-            .map(strip_index);
-        if arch == "encdec" {
-            let tl = lengths(&[("inputs", seq), ("targets", seq)]);
-            EncDecConverter.convert(ds, &tl)
-        } else {
-            let tl = lengths(&[("targets", seq)]);
-            LmConverter.convert(ds, &tl)
-        }
-    })
+    Infeed::spawn_resumable(
+        m,
+        num_hosts,
+        4,
+        move |host| {
+            let p = DeterministicPipeline::open(&dir).expect("open cache");
+            let ds = p
+                .host_stream(host, num_hosts, start_step as usize * batch, true)
+                .map(strip_index);
+            if arch == "encdec" {
+                let tl = lengths(&[("inputs", seq), ("targets", seq)]);
+                EncDecConverter.convert(ds, &tl)
+            } else {
+                let tl = lengths(&[("targets", seq)]);
+                LmConverter.convert(ds, &tl)
+            }
+        },
+        resume,
+    )
 }
 
 /// Eval batches straight from a task (no cache), converter per arch.

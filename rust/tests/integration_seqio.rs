@@ -144,6 +144,70 @@ fn bpe_vocabulary_through_task() {
 }
 
 #[test]
+fn pipeline_state_resumes_cached_stream_mid_epoch() {
+    // §3.2 Recoverability via op state: snapshot a repeating host stream
+    // at arbitrary cut points (including across an epoch boundary) and the
+    // restored stream's `_index` audit sequence must continue exactly
+    // where the uninterrupted stream's does.
+    let task = span_corruption_task("state_resume_task", 48);
+    let dir = tmpdir("state_resume");
+    cache_task(&task, &dir, &CacheConfig { num_shards: 4, seed: 2, workers: 2 }).unwrap();
+    let p = DeterministicPipeline::open(&dir).unwrap();
+    let per_host = p.host_examples(1, 2);
+    let total = per_host * 2 + 3; // crosses two epoch boundaries
+
+    let idx_of = |e: &t5x::seqio::Example| e["_index"].as_ints().unwrap()[0];
+    let mut full = p.host_stream(1, 2, 0, true);
+    let all: Vec<i32> = (&mut full).take(total).map(|e| idx_of(&e)).collect();
+
+    for cut in [0usize, 1, per_host - 1, per_host + 5, 2 * per_host + 1] {
+        let mut first = p.host_stream(1, 2, 0, true);
+        let head: Vec<i32> = (&mut first).take(cut).map(|e| idx_of(&e)).collect();
+        let snap = first.state();
+
+        let mut resumed = p.host_stream(1, 2, 0, true);
+        resumed.restore(&snap).unwrap();
+        let tail: Vec<i32> =
+            (&mut resumed).take(total - cut).map(|e| idx_of(&e)).collect();
+
+        let mut joined = head;
+        joined.extend(tail);
+        assert_eq!(joined, all, "cut={cut}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn parallel_map_preprocessing_is_order_identical_to_serial() {
+    // Acceptance: parallel_map(4) yields byte-identical example order to
+    // serial map on a tokenize-heavy preprocessor, regardless of worker
+    // scheduling.
+    use t5x::seqio::source::DataSource;
+    use t5x::seqio::{Example, Feature};
+
+    let vocab: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(16));
+    let heavy = move |mut ex: Example| {
+        if let Some(Feature::Text(t)) = ex.get("text") {
+            // tokenize several times to make the map genuinely hot
+            let mut ids = vocab.encode(t);
+            for _ in 0..8 {
+                let txt = vocab.decode(&ids);
+                ids = vocab.encode(&txt);
+            }
+            ex.insert("targets".into(), Feature::Ints(ids));
+        }
+        ex
+    };
+
+    let source = SyntheticTextSource::new(9, 120);
+    let serial = source.all().map(heavy.clone()).collect_vec();
+    for workers in [1usize, 2, 4] {
+        let par = source.all().parallel_map(heavy.clone(), workers).collect_vec();
+        assert_eq!(par, serial, "workers={workers}");
+    }
+}
+
+#[test]
 fn mixture_over_cached_tasks() {
     // E10: a mixture of two tasks keeps rates and examples flowing.
     let t1 = span_corruption_task("mix_a", 40);

@@ -8,7 +8,7 @@ use t5x::optim::{OptimizerKind, Schedule};
 use t5x::partitioning::ParamStrategy;
 use t5x::runtime::{Artifacts, DeviceHandle};
 use t5x::seqio::cache::{cache_task, CacheConfig};
-use t5x::seqio::dataset::Dataset;
+use t5x::seqio::dataset::{Dataset, PipelineState};
 use t5x::seqio::deterministic::{strip_index, DeterministicPipeline};
 use t5x::seqio::feature_converters::{lengths, FeatureConverter, LmConverter};
 use t5x::seqio::preprocessors::{AppendEos, ChunkTokens, Tokenize};
@@ -30,26 +30,35 @@ fn lm_task(name: &str, docs: usize, seq_len: usize) -> Arc<Task> {
 }
 
 /// Build the infeed for a cached deterministic pipeline feeding the
-/// nano decoder model, resuming at `start_step`.
+/// nano decoder model, resuming at `start_step` (positional) or at an
+/// exact checkpointed per-host pipeline state.
 fn build_infeed(
     arts: &Artifacts,
     dir: &std::path::Path,
     num_hosts: usize,
     start_step: u64,
+    resume: Option<&[PipelineState]>,
 ) -> Infeed {
     let m = arts.model("t5-nano-dec").unwrap();
     let batch = m.batch();
     let seq = m.seq_len();
     let dir = dir.to_path_buf();
-    Infeed::spawn(m, num_hosts, 4, move |host| {
-        let p = DeterministicPipeline::open(&dir).unwrap();
-        let conv = LmConverter;
-        let tl = lengths(&[("targets", seq)]);
-        let ds: Dataset = p
-            .host_stream(host, num_hosts, start_step as usize * batch, true)
-            .map(strip_index);
-        conv.convert(ds, &tl)
-    })
+    Infeed::spawn_resumable(
+        m,
+        num_hosts,
+        4,
+        move |host| {
+            let p = DeterministicPipeline::open(&dir).unwrap();
+            let conv = LmConverter;
+            let tl = lengths(&[("targets", seq)]);
+            let ds: Dataset = p
+                .host_stream(host, num_hosts, start_step as usize * batch, true)
+                .map(strip_index);
+            conv.convert(ds, &tl)
+        },
+        resume,
+    )
+    .unwrap()
 }
 
 #[test]
@@ -76,7 +85,7 @@ fn figure1_full_stack_loss_decreases() {
         weight_decay: None,
     };
     let trainer = Trainer::new(&arts, &device, cfg).unwrap();
-    let source = BatchSource::Infeed(build_infeed(&arts, &dir, 2, 0));
+    let source = BatchSource::Infeed(build_infeed(&arts, &dir, 2, 0, None));
     let summary = trainer.train(&source).unwrap();
     assert_eq!(summary.history.len(), 15);
     assert!(
@@ -101,7 +110,7 @@ fn data_pipeline_resume_feeds_identical_batches() {
     let task = lm_task("resume_lm", 120, m.seq_len());
     cache_task(&task, &dir, &CacheConfig { num_shards: 4, seed: 2, workers: 2 }).unwrap();
 
-    let straight = build_infeed(&arts, &dir, 2, 0);
+    let straight = build_infeed(&arts, &dir, 2, 0, None);
     // consume 3 steps' worth, keep the 4th
     for _ in 0..3 {
         straight.next(0).unwrap();
@@ -110,12 +119,111 @@ fn data_pipeline_resume_feeds_identical_batches() {
     let expected_h0 = straight.next(0).unwrap();
     let expected_h1 = straight.next(1).unwrap();
 
-    let resumed = build_infeed(&arts, &dir, 2, 3);
+    let resumed = build_infeed(&arts, &dir, 2, 3, None);
     let got_h0 = resumed.next(0).unwrap();
     let got_h1 = resumed.next(1).unwrap();
     assert_eq!(got_h0, expected_h0);
     assert_eq!(got_h1, expected_h1);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn infeed_resume_from_pipeline_state_feeds_identical_batches() {
+    // The exact-resume path: snapshot per-host pipeline state after k
+    // consumed batches, rebuild the infeed from the snapshot, and the next
+    // batches must be byte-identical to the uninterrupted stream's —
+    // even though the snapshot point is not a multiple of anything the
+    // positional (start_step) fallback could express.
+    let arts = Artifacts::load_default().unwrap();
+    let m = arts.model("t5-nano-dec").unwrap();
+    let dir = std::env::temp_dir().join(format!("resume_state_{}", std::process::id()));
+    let task = lm_task("resume_state_lm", 150, m.seq_len());
+    cache_task(&task, &dir, &CacheConfig { num_shards: 4, seed: 3, workers: 2 }).unwrap();
+
+    let straight = build_infeed(&arts, &dir, 2, 0, None);
+    for _ in 0..3 {
+        straight.next(0).unwrap();
+        straight.next(1).unwrap();
+    }
+    // snapshot reflects *consumed* batches, not prefetch-produced ones
+    let states: Vec<PipelineState> =
+        (0..2).map(|h| straight.pipeline_state(h)).collect();
+    let expected_h0 = straight.next(0).unwrap();
+    let expected_h1 = straight.next(1).unwrap();
+
+    let resumed = build_infeed(&arts, &dir, 2, 0, Some(&states));
+    assert_eq!(resumed.next(0).unwrap(), expected_h0);
+    assert_eq!(resumed.next(1).unwrap(), expected_h1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trainer_kill_and_resume_matches_uninterrupted_run() {
+    // End-to-end acceptance: a killed-and-resumed training run over a real
+    // cached data pipeline reproduces the uninterrupted run's loss
+    // trajectory exactly, because the checkpoint carries the data-pipeline
+    // state alongside params/optimizer.
+    let arts = Artifacts::load_default().unwrap();
+    let device = DeviceHandle::spawn().unwrap();
+    let m = arts.model("t5-nano-dec").unwrap();
+    let dir = std::env::temp_dir().join(format!("resume_train_{}", std::process::id()));
+    let ckpt = std::env::temp_dir().join(format!("resume_train_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt);
+    let task = lm_task("resume_train_lm", 300, m.seq_len());
+    cache_task(&task, &dir, &CacheConfig { num_shards: 4, seed: 5, workers: 2 }).unwrap();
+
+    let mut cfg = TrainerConfig::quick("t5-nano-dec", 6);
+    cfg.num_hosts = 2;
+    cfg.seed = 2;
+    cfg.schedule = Schedule::Constant(1e-3);
+
+    // uninterrupted 6-step run
+    let t_full = Trainer::new(&arts, &device, cfg.clone()).unwrap();
+    let src_full = BatchSource::Infeed(build_infeed(&arts, &dir, 2, 0, None));
+    let full = t_full.train(&src_full).unwrap();
+
+    // "killed" run: 3 steps, checkpoint (params + optimizer + pipeline)
+    let mut cfg_a = cfg.clone();
+    cfg_a.steps = 3;
+    cfg_a.checkpoint_every = Some(3);
+    cfg_a.checkpoint_dir = Some(ckpt.clone());
+    let t_a = Trainer::new(&arts, &device, cfg_a).unwrap();
+    let src_a = BatchSource::Infeed(build_infeed(&arts, &dir, 2, 0, None));
+    t_a.train(&src_a).unwrap();
+
+    // resumed run: fresh trainer, restore, rebuild infeed from the
+    // checkpointed pipeline state, train the remaining 3 steps
+    let mut cfg_b = cfg;
+    cfg_b.steps = 3;
+    let mut t_b = Trainer::new(&arts, &device, cfg_b).unwrap();
+    let resumed_step = t_b.restore_latest(&ckpt).unwrap();
+    assert_eq!(resumed_step, 3);
+    let states = t_b
+        .restored_pipeline
+        .clone()
+        .expect("checkpoint must carry pipeline state");
+    assert_eq!(states.len(), 2);
+    let src_b = BatchSource::Infeed(build_infeed(&arts, &dir, 2, 0, Some(&states)));
+    let resumed = t_b.train(&src_b).unwrap();
+
+    assert_eq!(resumed.history.len(), 3);
+    for (a, b) in full.history[3..].iter().zip(&resumed.history) {
+        assert_eq!(a.step, b.step);
+        assert!(
+            (a.loss - b.loss).abs() < 1e-7,
+            "step {}: uninterrupted {} vs resumed {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+    assert!(
+        (full.final_loss() - resumed.final_loss()).abs() < 1e-7,
+        "final losses diverged"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&ckpt).ok();
+    device.shutdown();
 }
 
 #[test]
