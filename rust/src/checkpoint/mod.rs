@@ -115,19 +115,25 @@ impl CheckpointManager {
         Ok(())
     }
 
-    /// Async save on a snapshot (t5x saves without blocking the train loop).
+    /// Async save on a snapshot (t5x saves without blocking the train
+    /// loop). `pipeline` carries the per-host data-pipeline states
+    /// captured with the snapshot, so async checkpoints are just as
+    /// resumable as synchronous ones (pass `None` for synthetic sources).
     pub fn save_async(
         &self,
         step: u64,
         params: Params,
         extra: ExtraState,
+        pipeline: Option<Vec<PipelineState>>,
     ) -> std::thread::JoinHandle<anyhow::Result<()>> {
         let mgr = CheckpointManager {
             dir: self.dir.clone(),
             retain: self.retain,
             chunk_rows: self.chunk_rows,
         };
-        std::thread::spawn(move || mgr.save(step, &params, &extra))
+        std::thread::spawn(move || {
+            mgr.save_with_pipeline(step, &params, &extra, pipeline.as_deref())
+        })
     }
 
     fn apply_retention(&self) -> anyhow::Result<()> {
@@ -310,9 +316,24 @@ mod tests {
     fn async_save_completes() {
         let dir = tmp("async");
         let mgr = CheckpointManager::new(&dir);
-        let h = mgr.save_async(3, fake_params(), Vec::new());
+        let h = mgr.save_async(3, fake_params(), Vec::new(), None);
         h.join().unwrap().unwrap();
         assert_eq!(mgr.latest(), Some(3));
+        assert!(mgr.restore_pipeline(3).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn async_save_carries_pipeline_state() {
+        let dir = tmp("async_pipe");
+        let mgr = CheckpointManager::new(&dir);
+        let states = vec![PipelineState(Json::obj(vec![
+            ("op", Json::str("vec")),
+            ("pos", Json::num(9.0)),
+        ]))];
+        let h = mgr.save_async(4, fake_params(), Vec::new(), Some(states.clone()));
+        h.join().unwrap().unwrap();
+        assert_eq!(mgr.restore_pipeline(4).unwrap().unwrap(), states);
         std::fs::remove_dir_all(&dir).ok();
     }
 

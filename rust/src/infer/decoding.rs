@@ -1,0 +1,454 @@
+//! Decoding library — the `t5x.decoding` mirror: greedy, temperature /
+//! top-k / top-p sampling, and beam search with length penalty.
+//!
+//! All routines are *pure host-side* functions over next-token logits
+//! rows; they never touch the device. The model is abstracted as a step
+//! function `&[prefix] -> next-token logits per prefix`, so the same code
+//! is driven by the XLA `decode_logits` executable (via
+//! [`crate::infer::engine::InferEngine`]), by the batched beam adapter,
+//! and by toy closures in golden tests.
+//!
+//! ## Determinism contract
+//!
+//! * [`argmax`] breaks ties toward the lowest token id (first strict max),
+//!   the same rule `EvalRunner::greedy_decode` has always used — batched
+//!   engine decodes and single-request decodes pick identical tokens.
+//! * [`sample_token`] draws exactly **one** `next_f64` from the caller's
+//!   [`Pcg64`] per emitted token, so a request's sampled continuation
+//!   depends only on (logits, seed, position) — never on how requests were
+//!   packed into batch slots or interleaved by the engine scheduler.
+//! * [`beam_search`] orders candidates by (score desc, parent beam asc,
+//!   token asc) and final hypotheses by (score desc, tokens asc): full
+//!   ties are impossible, so results are reproducible across runs.
+
+use crate::util::rng::Pcg64;
+
+/// How to turn logits into tokens, per request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DecodeMethod {
+    /// Argmax at every step (temperature -> 0 limit).
+    Greedy,
+    /// Seeded ancestral sampling. `top_k == 0` disables top-k;
+    /// `top_p >= 1.0` disables nucleus truncation. The seed is
+    /// per-request: the same (prompt, seed) always yields the same tokens.
+    Sample { temperature: f32, top_k: usize, top_p: f32, seed: u64 },
+    /// Beam search with GNMT/t5x length penalty `((5+len)/6)^alpha`.
+    Beam { beams: usize, length_penalty: f32 },
+}
+
+impl DecodeMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecodeMethod::Greedy => "greedy",
+            DecodeMethod::Sample { .. } => "sample",
+            DecodeMethod::Beam { .. } => "beam",
+        }
+    }
+}
+
+/// Index of the first strict maximum — the greedy token. Must stay
+/// byte-compatible with the historical `greedy_decode` loop (ties break
+/// toward the lowest id).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (k, &x) in row.iter().enumerate() {
+        if x > best_v {
+            best = k;
+            best_v = x;
+        }
+    }
+    best
+}
+
+/// Numerically stable log-softmax over one logits row (f64 accumulation).
+pub fn log_softmax(row: &[f32]) -> Vec<f64> {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse = row.iter().map(|&x| (x as f64 - max).exp()).sum::<f64>().ln() + max;
+    row.iter().map(|&x| x as f64 - lse).collect()
+}
+
+/// Sample one token id from a logits row.
+///
+/// Pipeline (matching `t5x.decoding.temperature_sample`): scale by
+/// `1/temperature`, keep the `top_k` highest-logit candidates (0 = all),
+/// then keep the smallest high-probability prefix with mass `>= top_p`
+/// (nucleus), renormalize, and draw once from `rng`. `temperature <= 0`
+/// degenerates to [`argmax`] without consuming randomness.
+pub fn sample_token(
+    row: &[f32],
+    temperature: f32,
+    top_k: usize,
+    top_p: f32,
+    rng: &mut Pcg64,
+) -> usize {
+    if temperature <= 0.0 || row.len() == 1 {
+        return argmax(row);
+    }
+    // Candidates sorted by (logit desc, id asc) — deterministic under
+    // ties, and total_cmp keeps the comparator a total order even if a
+    // degenerate checkpoint produces NaN logits (sort_by panics on
+    // intransitive comparators).
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
+    if top_k > 0 {
+        idx.truncate(top_k.min(idx.len()));
+    }
+    let inv_t = 1.0 / temperature as f64;
+    let max = row[idx[0]] as f64 * inv_t;
+    let weights: Vec<f64> =
+        idx.iter().map(|&i| (row[i] as f64 * inv_t - max).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut keep = weights.len();
+    if top_p < 1.0 {
+        let threshold = (top_p.max(0.0) as f64) * total;
+        let mut acc = 0.0;
+        for (i, w) in weights.iter().enumerate() {
+            acc += w;
+            if acc >= threshold {
+                keep = i + 1;
+                break;
+            }
+        }
+    }
+    let kept_total: f64 = weights[..keep].iter().sum();
+    let mut x = rng.next_f64() * kept_total;
+    for (i, w) in weights[..keep].iter().enumerate() {
+        x -= w;
+        if x < 0.0 {
+            return idx[i];
+        }
+    }
+    idx[keep - 1]
+}
+
+/// Pick the next token for a row under `method`. Sampling methods must be
+/// given the request's RNG (one draw per token, see module docs).
+pub fn next_token(method: &DecodeMethod, row: &[f32], rng: Option<&mut Pcg64>) -> usize {
+    match method {
+        DecodeMethod::Greedy => argmax(row),
+        DecodeMethod::Sample { temperature, top_k, top_p, .. } => {
+            let rng = rng.expect("sampling requires the request RNG");
+            sample_token(row, *temperature, *top_k, *top_p, rng)
+        }
+        DecodeMethod::Beam { .. } => {
+            panic!("beam search decodes whole sequences; use beam_search()")
+        }
+    }
+}
+
+/// GNMT / t5x brevity penalty: `((5 + len) / 6)^alpha`. `alpha = 0`
+/// disables it; larger alpha favors longer hypotheses.
+pub fn length_penalty(alpha: f32, len: usize) -> f64 {
+    ((5.0 + len as f64) / 6.0).powf(alpha as f64)
+}
+
+/// One (possibly finished) decoded sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hypothesis {
+    /// Generated ids, including the terminating EOS when present.
+    pub tokens: Vec<i32>,
+    /// Sum of token log-probabilities.
+    pub log_prob: f64,
+    /// `log_prob / length_penalty(alpha, tokens.len())` — the sort key.
+    pub score: f64,
+}
+
+/// Beam search over a step function.
+///
+/// `step(&prefixes)` receives the live prefixes (generated ids only — the
+/// caller's closure owns the prompt) and returns one next-token logits row
+/// per prefix. All live prefixes at one call have equal length, so
+/// batch-packed XLA adapters can feed them as rows of one `[B, L]` batch.
+///
+/// Classic 2x-expansion: each round keeps the `2*beams` best candidate
+/// extensions, absorbs those ending in `eos_id` into the finished pool,
+/// and carries at most `beams` live hypotheses forward. Hypotheses still
+/// live at `max_len` are closed out unfinished. Returns up to `beams`
+/// hypotheses, best (length-penalized) first.
+pub fn beam_search<F>(
+    mut step: F,
+    beams: usize,
+    max_len: usize,
+    eos_id: i32,
+    alpha: f32,
+) -> anyhow::Result<Vec<Hypothesis>>
+where
+    F: FnMut(&[Vec<i32>]) -> anyhow::Result<Vec<Vec<f32>>>,
+{
+    anyhow::ensure!(beams >= 1, "need at least one beam");
+    anyhow::ensure!(max_len >= 1, "need max_len >= 1");
+    let mut live: Vec<(Vec<i32>, f64)> = vec![(Vec::new(), 0.0)];
+    let mut finished: Vec<Hypothesis> = Vec::new();
+    for _ in 0..max_len {
+        let prefixes: Vec<Vec<i32>> = live.iter().map(|(t, _)| t.clone()).collect();
+        let logits = step(&prefixes)?;
+        anyhow::ensure!(
+            logits.len() == live.len(),
+            "step returned {} logits rows for {} prefixes",
+            logits.len(),
+            live.len()
+        );
+        // Expand every live hypothesis by every token.
+        let mut cands: Vec<(usize, i32, f64)> = Vec::new();
+        for (p, ((_, lp), row)) in live.iter().zip(&logits).enumerate() {
+            for (tok, l) in log_softmax(row).into_iter().enumerate() {
+                cands.push((p, tok as i32, lp + l));
+            }
+        }
+        cands.sort_by(|a, b| b.2.total_cmp(&a.2).then(a.0.cmp(&b.0)).then(a.1.cmp(&b.1)));
+        let mut next_live: Vec<(Vec<i32>, f64)> = Vec::new();
+        for (p, tok, lp) in cands.into_iter().take(2 * beams) {
+            let mut tokens = live[p].0.clone();
+            tokens.push(tok);
+            if tok == eos_id {
+                let score = lp / length_penalty(alpha, tokens.len());
+                finished.push(Hypothesis { tokens, log_prob: lp, score });
+            } else if next_live.len() < beams {
+                next_live.push((tokens, lp));
+            }
+        }
+        if next_live.is_empty() {
+            break;
+        }
+        live = next_live;
+    }
+    for (tokens, lp) in live {
+        let score = lp / length_penalty(alpha, tokens.len());
+        finished.push(Hypothesis { tokens, log_prob: lp, score });
+    }
+    finished.sort_by(|a, b| b.score.total_cmp(&a.score).then(a.tokens.cmp(&b.tokens)));
+    finished.truncate(beams);
+    anyhow::ensure!(!finished.is_empty(), "beam search produced no hypotheses");
+    Ok(finished)
+}
+
+/// Brute-force reference: enumerate *every* sequence (terminated by EOS or
+/// by `max_len`) and return the best length-penalized one. Exponential in
+/// `max_len` — golden tests only. Ties resolve to the lexicographically
+/// smallest token sequence, matching [`beam_search`]'s final sort.
+pub fn exhaustive_search<F>(
+    step: &mut F,
+    max_len: usize,
+    eos_id: i32,
+    alpha: f32,
+) -> anyhow::Result<Hypothesis>
+where
+    F: FnMut(&[Vec<i32>]) -> anyhow::Result<Vec<Vec<f32>>>,
+{
+    fn recurse<F>(
+        step: &mut F,
+        prefix: &mut Vec<i32>,
+        lp: f64,
+        max_len: usize,
+        eos_id: i32,
+        alpha: f32,
+        best: &mut Option<Hypothesis>,
+    ) -> anyhow::Result<()>
+    where
+        F: FnMut(&[Vec<i32>]) -> anyhow::Result<Vec<Vec<f32>>>,
+    {
+        let rows = step(std::slice::from_ref(prefix))?;
+        anyhow::ensure!(rows.len() == 1, "step must return one row per prefix");
+        let ls = log_softmax(&rows[0]);
+        for (tok, l) in ls.into_iter().enumerate() {
+            let tok = tok as i32;
+            let new_lp = lp + l;
+            prefix.push(tok);
+            if tok == eos_id || prefix.len() == max_len {
+                let score = new_lp / length_penalty(alpha, prefix.len());
+                let better = match best {
+                    None => true,
+                    Some(b) => {
+                        score > b.score
+                            || (score == b.score && prefix.as_slice() < b.tokens.as_slice())
+                    }
+                };
+                if better {
+                    *best = Some(Hypothesis {
+                        tokens: prefix.clone(),
+                        log_prob: new_lp,
+                        score,
+                    });
+                }
+            } else {
+                recurse(step, prefix, new_lp, max_len, eos_id, alpha, best)?;
+            }
+            prefix.pop();
+        }
+        Ok(())
+    }
+    let mut best = None;
+    let mut prefix = Vec::new();
+    recurse(step, &mut prefix, 0.0, max_len, eos_id, alpha, &mut best)?;
+    best.ok_or_else(|| anyhow::anyhow!("empty search space"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::splitmix64;
+
+    /// Deterministic toy model: logits depend on the prefix hash, so the
+    /// "model" has real sequential structure without any device.
+    fn toy_step(
+        vocab: usize,
+        salt: u64,
+    ) -> impl FnMut(&[Vec<i32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        move |prefixes| {
+            Ok(prefixes
+                .iter()
+                .map(|p| {
+                    let mut h = salt;
+                    for &t in p {
+                        h = splitmix64(h ^ (t as u64 + 1));
+                    }
+                    (0..vocab)
+                        .map(|v| {
+                            let x = splitmix64(h ^ ((v as u64 + 1) << 17));
+                            (x >> 40) as f32 / (1u64 << 24) as f32 * 4.0 - 2.0
+                        })
+                        .collect()
+                })
+                .collect())
+        }
+    }
+
+    fn toy_row(vocab: usize, seed: u64) -> Vec<f32> {
+        toy_step(vocab, seed)(&[vec![]]).unwrap().pop().unwrap()
+    }
+
+    #[test]
+    fn argmax_breaks_ties_low() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let ls = log_softmax(&[1.0, 2.0, 3.0]);
+        let total: f64 = ls.iter().map(|l| l.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert!(ls[2] > ls[1] && ls[1] > ls[0]);
+    }
+
+    #[test]
+    fn sampling_same_seed_same_tokens() {
+        let row = toy_row(64, 9);
+        let draw = |seed: u64| -> Vec<usize> {
+            let mut rng = Pcg64::new(seed);
+            (0..32).map(|_| sample_token(&row, 0.9, 0, 1.0, &mut rng)).collect()
+        };
+        assert_eq!(draw(7), draw(7), "same seed must reproduce exactly");
+        assert_ne!(draw(7), draw(8), "different seeds must diverge");
+    }
+
+    #[test]
+    fn temperature_zero_is_greedy_and_draws_no_randomness() {
+        let row = toy_row(32, 4);
+        let mut rng = Pcg64::new(1);
+        let before = rng.raw_state();
+        assert_eq!(sample_token(&row, 0.0, 0, 1.0, &mut rng), argmax(&row));
+        assert_eq!(rng.raw_state(), before, "greedy limit must not consume rng");
+    }
+
+    #[test]
+    fn one_draw_per_token() {
+        // The packing-independence contract: exactly one next_f64 per call.
+        let row = toy_row(32, 5);
+        let mut a = Pcg64::new(3);
+        let mut b = Pcg64::new(3);
+        sample_token(&row, 0.7, 8, 0.9, &mut a);
+        b.next_f64();
+        assert_eq!(a.raw_state(), b.raw_state());
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let row = toy_row(64, 11);
+        let mut sorted: Vec<usize> = (0..row.len()).collect();
+        sorted.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b)));
+        let allowed: std::collections::BTreeSet<usize> =
+            sorted[..4].iter().copied().collect();
+        let mut rng = Pcg64::new(0);
+        for _ in 0..500 {
+            let t = sample_token(&row, 1.5, 4, 1.0, &mut rng);
+            assert!(allowed.contains(&t), "token {t} outside top-4");
+        }
+    }
+
+    #[test]
+    fn top_p_tiny_is_greedy() {
+        // A nucleus smaller than the top token's mass keeps only argmax.
+        let row = toy_row(64, 13);
+        let mut rng = Pcg64::new(5);
+        for _ in 0..100 {
+            assert_eq!(sample_token(&row, 1.0, 0, 1e-9, &mut rng), argmax(&row));
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let row = toy_row(16, 21);
+        let mut rng = Pcg64::new(2);
+        let distinct: std::collections::BTreeSet<usize> =
+            (0..400).map(|_| sample_token(&row, 10.0, 0, 1.0, &mut rng)).collect();
+        assert!(distinct.len() > 8, "hot sampling should cover most of V=16");
+    }
+
+    #[test]
+    fn beam_matches_exhaustive_when_wide() {
+        // With beams >= |search space| the beam is exhaustive: the top
+        // hypothesis must equal the brute-force optimum (score AND tokens).
+        for (vocab, max_len, alpha) in [(4usize, 3usize, 0.0f32), (5, 3, 0.6), (3, 4, 1.0)] {
+            let eos = 0;
+            let wide = vocab.pow(max_len as u32);
+            let best_beam =
+                beam_search(toy_step(vocab, 77), wide, max_len, eos, alpha).unwrap();
+            let mut step = toy_step(vocab, 77);
+            let best_exh = exhaustive_search(&mut step, max_len, eos, alpha).unwrap();
+            assert_eq!(
+                best_beam[0].tokens, best_exh.tokens,
+                "vocab={vocab} len={max_len} alpha={alpha}"
+            );
+            assert!((best_beam[0].score - best_exh.score).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn narrow_beam_never_beats_exhaustive() {
+        let eos = 0;
+        let mut step = toy_step(5, 123);
+        let optimum = exhaustive_search(&mut step, 3, eos, 0.6).unwrap();
+        for beams in [1usize, 2, 3] {
+            let hyps = beam_search(toy_step(5, 123), beams, 3, eos, 0.6).unwrap();
+            assert!(hyps.len() <= beams);
+            assert!(
+                hyps[0].score <= optimum.score + 1e-9,
+                "beam={beams} found score {} above optimum {}",
+                hyps[0].score,
+                optimum.score
+            );
+            // hypotheses sorted best-first
+            for w in hyps.windows(2) {
+                assert!(w[0].score >= w[1].score);
+            }
+        }
+    }
+
+    #[test]
+    fn beam_is_deterministic() {
+        let a = beam_search(toy_step(6, 9), 4, 5, 0, 0.6).unwrap();
+        let b = beam_search(toy_step(6, 9), 4, 5, 0, 0.6).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn length_penalty_shape() {
+        assert!((length_penalty(0.0, 10) - 1.0).abs() < 1e-12);
+        assert_eq!(length_penalty(1.0, 1), 1.0);
+        assert!(length_penalty(1.0, 13) == 3.0);
+        assert!(length_penalty(0.6, 20) > length_penalty(0.6, 5));
+    }
+}

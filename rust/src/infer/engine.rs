@@ -1,0 +1,375 @@
+//! Continuous-batching inference engine (the serving half of t5x's
+//! `InferTask` path, grown into a real scheduler).
+//!
+//! The model's `decode_logits` HLO has a fixed batch `B` baked in; naive
+//! serving runs one request per full-batch call (1/B slot utilization) or
+//! waits for the slowest row of a batch to finish (head-of-line blocking).
+//! This engine instead treats the `B` rows as *slots*:
+//!
+//! * a FIFO queue holds submitted [`InferRequest`]s;
+//! * before every decode step, free slots are refilled from the queue —
+//!   a request admitted at step `s` starts decoding at step `s` while
+//!   longer-running rows continue uninterrupted (continuous batching);
+//! * a row that emits EOS or reaches its token budget exits immediately,
+//!   freeing its slot for the next queued request at the *next* step, not
+//!   at the end of the batch.
+//!
+//! ## Determinism contract
+//!
+//! Per-row logits from `decode_logits` are independent of the other rows'
+//! contents, greedy tokens come from [`decoding::argmax`] (shared with
+//! `EvalRunner::greedy_decode`), and sampling draws exactly one RNG value
+//! per token from a per-request [`Pcg64`] — so a request's output is
+//! byte-identical whether it ran alone or packed with arbitrary neighbors
+//! (asserted by `tests/integration_infer.rs`).
+//!
+//! Metrics flow through [`crate::metrics::CounterSet`]: `infer/steps`,
+//! `infer/tokens`, `infer/requests_completed`, `infer/slot_steps_busy`
+//! (utilization = busy / (steps * B)), and `infer/refills` (admissions
+//! that happened while other requests were mid-flight).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::decoding::{self, DecodeMethod, Hypothesis};
+use crate::metrics::CounterSet;
+use crate::model::Params;
+use crate::runtime::artifacts::ModelManifest;
+use crate::runtime::{Artifacts, DeviceHandle, Executable, HostTensor};
+use crate::util::rng::Pcg64;
+
+/// One inference request. `id` is caller-assigned and echoed on the result.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_tokens: usize,
+    pub method: DecodeMethod,
+}
+
+/// A completed request.
+#[derive(Debug, Clone)]
+pub struct InferResult {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// Generated ids (EOS included when it terminated generation).
+    pub tokens: Vec<i32>,
+    /// Engine step at which the request entered a batch slot.
+    pub started_step: u64,
+    /// Engine step after which the request left its slot.
+    pub finished_step: u64,
+    /// Seconds spent queued before a slot freed up.
+    pub queue_seconds: f64,
+    /// Submit-to-completion wall time in seconds.
+    pub latency_seconds: f64,
+}
+
+struct ActiveSlot {
+    id: u64,
+    prompt_len: usize,
+    /// Next decoder position to fill (BOS at 0, prompt at 1..=prompt_len).
+    len: usize,
+    produced: Vec<i32>,
+    max_tokens: usize,
+    method: DecodeMethod,
+    rng: Option<Pcg64>,
+    submitted: Instant,
+    admitted: Instant,
+    started_step: u64,
+}
+
+/// Aggregate serving statistics derived from the engine counters.
+#[derive(Debug, Clone)]
+pub struct EngineSummary {
+    pub steps: u64,
+    pub tokens: u64,
+    pub completed: u64,
+    pub refills: u64,
+    /// Mean fraction of batch slots occupied per decode step.
+    pub slot_utilization: f64,
+    /// Wall time spent inside decode steps.
+    pub decode_seconds: f64,
+    pub tokens_per_sec: f64,
+}
+
+pub struct InferEngine {
+    pub manifest: ModelManifest,
+    exe: Executable,
+    /// Parameter tensors in manifest order. Arc-backed `HostTensor` makes
+    /// the per-step `ordered.clone()` O(num_params) pointer bumps, not a
+    /// deep copy of the parameter bytes.
+    ordered: Vec<HostTensor>,
+    eos_id: i32,
+    queue: VecDeque<(InferRequest, Instant)>,
+    slots: Vec<Option<ActiveSlot>>,
+    /// The shared `[B, L]` decoder token buffer, row per slot.
+    dec: Vec<i32>,
+    steps: u64,
+    decode_seconds: f64,
+    finished: Vec<InferResult>,
+    counters: CounterSet,
+}
+
+impl InferEngine {
+    pub fn new(
+        arts: &Artifacts,
+        device: &DeviceHandle,
+        model: &str,
+        params: &Params,
+        eos_id: i32,
+    ) -> anyhow::Result<InferEngine> {
+        let manifest = arts.model(model)?.clone();
+        anyhow::ensure!(
+            manifest.arch == "decoder",
+            "InferEngine serves decoder-only models; {} is {}",
+            model,
+            manifest.arch
+        );
+        let (exe, _) = device.compile(&manifest.entrypoint("decode_logits")?.hlo)?;
+        let ordered = crate::model::params_in_order(&manifest, params);
+        let b = manifest.batch();
+        let l = manifest.seq_len();
+        Ok(InferEngine {
+            manifest,
+            exe,
+            ordered,
+            eos_id,
+            queue: VecDeque::new(),
+            slots: (0..b).map(|_| None).collect(),
+            dec: vec![0i32; b * l],
+            steps: 0,
+            decode_seconds: 0.0,
+            finished: Vec::new(),
+            counters: CounterSet::new(),
+        })
+    }
+
+    pub fn eos_id(&self) -> i32 {
+        self.eos_id
+    }
+
+    /// Enqueue a request. `max_tokens` is clamped to the sequence budget
+    /// (`seq_len - 1 - prompt_len`); over-long prompts are rejected.
+    pub fn submit(&mut self, req: InferRequest) -> anyhow::Result<()> {
+        let l = self.manifest.seq_len();
+        anyhow::ensure!(
+            req.prompt.len() + 2 <= l,
+            "prompt of {} tokens leaves no room to decode (seq_len {})",
+            req.prompt.len(),
+            l
+        );
+        anyhow::ensure!(req.max_tokens >= 1, "max_tokens must be >= 1");
+        anyhow::ensure!(
+            matches!(req.method, DecodeMethod::Greedy | DecodeMethod::Sample { .. }),
+            "the continuous-batching engine decodes greedy/sample requests; \
+             use beam_decode() for beam search"
+        );
+        self.counters.inc("infer/requests_submitted");
+        self.queue.push_back((req, Instant::now()));
+        Ok(())
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.slots.iter().any(|s| s.is_some())
+    }
+
+    /// Pull queued requests into free slots (continuous-batching refill).
+    fn admit(&mut self) {
+        let l = self.manifest.seq_len();
+        for i in 0..self.slots.len() {
+            if self.slots[i].is_some() {
+                continue;
+            }
+            let Some((req, submitted)) = self.queue.pop_front() else {
+                break;
+            };
+            // A *refill* is an admission while other requests are already
+            // mid-decode (have produced tokens) — i.e. this request joins
+            // a running batch rather than a fresh one.
+            let mid_flight =
+                self.slots.iter().flatten().any(|s| !s.produced.is_empty());
+            if mid_flight {
+                self.counters.inc("infer/refills");
+            }
+            let plen = req.prompt.len();
+            let max_tokens = req.max_tokens.min(l - 1 - plen);
+            let row = &mut self.dec[i * l..(i + 1) * l];
+            row.fill(0);
+            row[1..=plen].copy_from_slice(&req.prompt);
+            let rng = match &req.method {
+                DecodeMethod::Sample { seed, .. } => Some(Pcg64::new(*seed)),
+                _ => None,
+            };
+            self.slots[i] = Some(ActiveSlot {
+                id: req.id,
+                prompt_len: plen,
+                len: plen + 1,
+                produced: Vec::new(),
+                max_tokens,
+                method: req.method,
+                rng,
+                submitted,
+                admitted: Instant::now(),
+                started_step: self.steps,
+            });
+        }
+    }
+
+    /// Run one decode step over all occupied slots: admit from the queue,
+    /// execute `decode_logits` once, extend every active row by one token,
+    /// and retire rows that hit EOS / their budget / the sequence end.
+    /// Returns the number of rows that decoded (0 = engine idle).
+    pub fn step(&mut self) -> anyhow::Result<usize> {
+        self.admit();
+        let active = self.active();
+        if active == 0 {
+            return Ok(0);
+        }
+        let b = self.manifest.batch();
+        let l = self.manifest.seq_len();
+        let v = self.manifest.vocab();
+        let t0 = Instant::now();
+        let mut inputs = self.ordered.clone();
+        inputs.push(HostTensor::i32(vec![b, l], self.dec.clone()));
+        let outs = self.exe.run(inputs)?;
+        self.decode_seconds += t0.elapsed().as_secs_f64();
+        let lf = outs[0].as_f32(); // [B, L, V]
+        self.steps += 1;
+        self.counters.inc("infer/steps");
+        self.counters.add("infer/slot_steps_busy", active as u64);
+        for i in 0..b {
+            let Some(slot) = self.slots[i].as_mut() else {
+                continue;
+            };
+            // logits at the last filled position predict the next token
+            let pos = slot.len - 1;
+            let row = &lf[(i * l + pos) * v..(i * l + pos + 1) * v];
+            let tok = decoding::next_token(&slot.method, row, slot.rng.as_mut()) as i32;
+            slot.produced.push(tok);
+            self.counters.inc("infer/tokens");
+            let done =
+                tok == self.eos_id || slot.len + 1 >= l || slot.produced.len() >= slot.max_tokens;
+            if done {
+                let slot = self.slots[i].take().unwrap();
+                self.dec[i * l..(i + 1) * l].fill(0);
+                let now = Instant::now();
+                self.counters.inc("infer/requests_completed");
+                self.finished.push(InferResult {
+                    id: slot.id,
+                    prompt_len: slot.prompt_len,
+                    tokens: slot.produced,
+                    started_step: slot.started_step,
+                    finished_step: self.steps,
+                    queue_seconds: (slot.admitted - slot.submitted).as_secs_f64(),
+                    latency_seconds: (now - slot.submitted).as_secs_f64(),
+                });
+            } else {
+                self.dec[i * l + slot.len] = tok;
+                slot.len += 1;
+            }
+        }
+        Ok(active)
+    }
+
+    /// Step until queue and slots are empty; returns everything completed
+    /// since the last drain, in completion order.
+    pub fn run_until_idle(&mut self) -> anyhow::Result<Vec<InferResult>> {
+        while self.has_work() {
+            self.step()?;
+        }
+        Ok(self.drain_finished())
+    }
+
+    /// Take completed results accumulated so far (completion order).
+    pub fn drain_finished(&mut self) -> Vec<InferResult> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Beam search for a single request, using the batch rows as beam
+    /// slots. Requires an idle engine (beams borrow the whole batch) and
+    /// `beams <= B`.
+    pub fn beam_decode(
+        &mut self,
+        prompt: &[i32],
+        beams: usize,
+        alpha: f32,
+        max_tokens: usize,
+    ) -> anyhow::Result<Vec<Hypothesis>> {
+        anyhow::ensure!(
+            !self.has_work(),
+            "beam_decode needs an idle engine (beams occupy every slot)"
+        );
+        let b = self.manifest.batch();
+        let l = self.manifest.seq_len();
+        let v = self.manifest.vocab();
+        anyhow::ensure!(beams >= 1 && beams <= b, "need 1 <= beams <= batch ({b})");
+        anyhow::ensure!(prompt.len() + 2 <= l, "prompt leaves no room to decode");
+        let plen = prompt.len();
+        let max_tokens = max_tokens.min(l - 1 - plen).max(1);
+        let exe = self.exe.clone();
+        let ordered = self.ordered.clone();
+        let counters = self.counters.clone();
+        let step = move |prefixes: &[Vec<i32>]| -> anyhow::Result<Vec<Vec<f32>>> {
+            anyhow::ensure!(prefixes.len() <= b, "live beams exceed batch");
+            let mut dec = vec![0i32; b * l];
+            for (r, pre) in prefixes.iter().enumerate() {
+                dec[r * l + 1..r * l + 1 + plen].copy_from_slice(prompt);
+                for (j, &t) in pre.iter().enumerate() {
+                    dec[r * l + 1 + plen + j] = t;
+                }
+            }
+            let mut inputs = ordered.clone();
+            inputs.push(HostTensor::i32(vec![b, l], dec));
+            let outs = exe.run(inputs)?;
+            let lf = outs[0].as_f32();
+            counters.inc("infer/beam_steps");
+            // all live prefixes share one length by beam_search's contract
+            let pos = plen + prefixes[0].len();
+            Ok(prefixes
+                .iter()
+                .enumerate()
+                .map(|(r, _)| lf[(r * l + pos) * v..(r * l + pos + 1) * v].to_vec())
+                .collect())
+        };
+        decoding::beam_search(step, beams, max_tokens, self.eos_id, alpha)
+    }
+
+    pub fn counters(&self) -> &CounterSet {
+        &self.counters
+    }
+
+    /// Mean slot occupancy over all decode steps so far.
+    pub fn slot_utilization(&self) -> f64 {
+        let steps = self.counters.get("infer/steps");
+        if steps == 0 {
+            return 0.0;
+        }
+        self.counters.get("infer/slot_steps_busy") as f64
+            / (steps * self.manifest.batch() as u64) as f64
+    }
+
+    pub fn summary(&self) -> EngineSummary {
+        let tokens = self.counters.get("infer/tokens");
+        EngineSummary {
+            steps: self.counters.get("infer/steps"),
+            tokens,
+            completed: self.counters.get("infer/requests_completed"),
+            refills: self.counters.get("infer/refills"),
+            slot_utilization: self.slot_utilization(),
+            decode_seconds: self.decode_seconds,
+            tokens_per_sec: if self.decode_seconds > 0.0 {
+                tokens as f64 / self.decode_seconds
+            } else {
+                0.0
+            },
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Inference serving subsystem (S8): the `t5x.decoding` + `InferTask`
+//! counterpart, grown into a serving stack.
+//!
+//! * [`decoding`] — pure host-side decoding algorithms: greedy,
+//!   temperature/top-k/top-p sampling (seeded, one RNG draw per token),
+//!   and beam search with length penalty, plus a brute-force exhaustive
+//!   reference used by golden tests.
+//! * [`engine`] — the continuous-batching engine: packs independent
+//!   requests into the fixed `B` batch slots of the `decode_logits` HLO,
+//!   retires rows at EOS, and refills freed slots from the queue
+//!   mid-flight. Reports latency/throughput/utilization through
+//!   [`crate::metrics::CounterSet`].
+//! * [`server`] — a JSONL request/response loop (`t5x serve`) with a
+//!   background reader so requests join the running batch.
+//!
+//! The subsystem's determinism contract (engine output byte-identical to
+//! single-request decoding, seeded sampling reproducible per request) is
+//! documented in [`decoding`] and [`engine`] and enforced by
+//! `tests/integration_infer.rs`.
+
+pub mod decoding;
+pub mod engine;
+pub mod server;
+
+pub use decoding::{DecodeMethod, Hypothesis};
+pub use engine::{EngineSummary, InferEngine, InferRequest, InferResult};

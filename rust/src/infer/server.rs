@@ -1,0 +1,260 @@
+//! JSONL request/response serving loop over the continuous-batching
+//! engine (the `t5x serve` subcommand).
+//!
+//! Protocol: one JSON object per input line —
+//!
+//! ```json
+//! {"id": 1, "prompt": [5, 9, 11], "max_tokens": 8,
+//!  "method": "sample", "temperature": 0.8, "top_k": 20, "top_p": 0.95,
+//!  "seed": 7}
+//! ```
+//!
+//! Only `prompt` is required: `id` defaults to an auto-incremented
+//! counter, `method` to `"greedy"`, `max_tokens` to the server default.
+//! Responses are emitted *as requests complete* (not in submission
+//! order):
+//!
+//! ```json
+//! {"id": 1, "tokens": [12, 4, 1], "steps": 3,
+//!  "queue_ms": 0.1, "latency_ms": 5.2}
+//! ```
+//!
+//! A background thread reads the input while the engine decodes, so new
+//! requests join the running batch mid-flight — the same continuous
+//! batching the engine gives programmatic callers. Malformed lines
+//! produce `{"error": ...}` responses and do not stop the loop.
+
+use std::io::{BufRead, Write};
+
+use super::decoding::DecodeMethod;
+use super::engine::{InferEngine, InferRequest, InferResult};
+use crate::util::json::Json;
+use crate::util::threads::Pipe;
+
+/// Parse one request line. `auto_id` is used when the line carries no
+/// `"id"`; `default_max_tokens` when it carries no `"max_tokens"`.
+pub fn parse_request(
+    line: &str,
+    auto_id: u64,
+    default_max_tokens: usize,
+) -> anyhow::Result<InferRequest> {
+    let v = Json::parse(line.trim())?;
+    let prompt: Vec<i32> = v
+        .get("prompt")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("request needs a \"prompt\" array of token ids"))?
+        .iter()
+        .map(|x| {
+            let n = x
+                .as_i64()
+                .ok_or_else(|| anyhow::anyhow!("non-numeric token id in prompt"))?;
+            i32::try_from(n)
+                .map_err(|_| anyhow::anyhow!("token id {n} out of i32 range"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let id = match v.get("id") {
+        None => auto_id,
+        Some(x) => {
+            let n = x.as_i64().unwrap_or(-1);
+            anyhow::ensure!(n >= 0, "\"id\" must be a non-negative integer");
+            n as u64
+        }
+    };
+    let max_tokens =
+        v.get("max_tokens").and_then(|x| x.as_usize()).unwrap_or(default_max_tokens);
+    let method = match v.get("method").and_then(|m| m.as_str()).unwrap_or("greedy") {
+        "greedy" => DecodeMethod::Greedy,
+        "sample" => DecodeMethod::Sample {
+            temperature: v
+                .get("temperature")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(1.0) as f32,
+            top_k: v.get("top_k").and_then(|x| x.as_usize()).unwrap_or(0),
+            top_p: v.get("top_p").and_then(|x| x.as_f64()).unwrap_or(1.0) as f32,
+            seed: v.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+        },
+        other => anyhow::bail!("unknown method '{other}' (greedy|sample)"),
+    };
+    Ok(InferRequest { id, prompt, max_tokens, method })
+}
+
+/// Render one completed request as a response line.
+pub fn result_to_json(r: &InferResult) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(r.id as f64)),
+        (
+            "tokens",
+            Json::Arr(r.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("steps", Json::num(r.tokens.len() as f64)),
+        ("queue_ms", Json::num(r.queue_seconds * 1e3)),
+        ("latency_ms", Json::num(r.latency_seconds * 1e3)),
+    ])
+}
+
+/// Totals reported when the input stream closes.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    /// Requests accepted into the engine queue.
+    pub requests: u64,
+    /// Lines rejected at parse time or by `submit` validation.
+    pub errors: u64,
+}
+
+/// Drive the engine from a line-oriented reader until EOF, writing one
+/// response line per completed request to `output`. The reader runs on a
+/// background thread so requests arriving mid-decode join the running
+/// batch (continuous batching at the I/O boundary too).
+pub fn serve<R, W>(
+    engine: &mut InferEngine,
+    input: R,
+    mut output: W,
+    default_max_tokens: usize,
+) -> anyhow::Result<ServeSummary>
+where
+    R: BufRead + Send + 'static,
+    W: Write,
+{
+    let (tx, rx) = Pipe::<String>::bounded(256);
+    std::thread::Builder::new()
+        .name("serve-reader".into())
+        .spawn(move || {
+            for line in input.lines() {
+                let Ok(line) = line else { break };
+                if line.trim().is_empty() {
+                    continue;
+                }
+                if !tx.send(line) {
+                    break; // server hung up
+                }
+            }
+        })?;
+    let mut summary = ServeSummary { requests: 0, errors: 0 };
+    let mut next_auto_id = 0u64;
+    let mut input_open = true;
+    // Stop draining input once this many requests are queued: lines then
+    // back up in the bounded pipe and the reader thread blocks, so a
+    // client streaming faster than the engine decodes hits backpressure
+    // instead of growing the queue without limit.
+    let max_backlog = 4 * engine.manifest.batch().max(1);
+    while input_open || engine.has_work() {
+        // Drain lines already available without blocking (up to the
+        // backlog cap), so queued requests are admitted before the next
+        // decode step; block only when the engine would otherwise spin
+        // idle.
+        loop {
+            let line: String = if engine.has_work() {
+                if engine.queued() >= max_backlog {
+                    break;
+                }
+                match rx.try_recv() {
+                    Some(l) => l,
+                    None => break,
+                }
+            } else {
+                // about to block for input: any responses/errors already
+                // written must reach the client first, or a request/reply
+                // client deadlocks against a buffering writer
+                output.flush()?;
+                match rx.recv() {
+                    Some(l) => l,
+                    None => {
+                        input_open = false;
+                        break;
+                    }
+                }
+            };
+            match parse_request(&line, next_auto_id, default_max_tokens) {
+                Ok(req) => {
+                    next_auto_id = next_auto_id.max(req.id).saturating_add(1);
+                    let id = req.id;
+                    match engine.submit(req) {
+                        Ok(()) => summary.requests += 1,
+                        Err(e) => {
+                            summary.errors += 1;
+                            // echo the id so the client can correlate the
+                            // rejection with its in-flight request
+                            writeln!(
+                                output,
+                                "{}",
+                                Json::obj(vec![
+                                    ("id", Json::num(id as f64)),
+                                    ("error", Json::str(format!("{e:#}"))),
+                                ])
+                            )?;
+                        }
+                    }
+                }
+                Err(e) => {
+                    summary.errors += 1;
+                    writeln!(
+                        output,
+                        "{}",
+                        Json::obj(vec![("error", Json::str(format!("{e:#}")))])
+                    )?;
+                }
+            }
+        }
+        engine.step()?;
+        for r in engine.drain_finished() {
+            writeln!(output, "{}", result_to_json(&r))?;
+        }
+        output.flush()?;
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_and_full_requests() {
+        let r = parse_request(r#"{"prompt": [5, 9]}"#, 7, 16).unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt, vec![5, 9]);
+        assert_eq!(r.max_tokens, 16);
+        assert_eq!(r.method, DecodeMethod::Greedy);
+
+        let r = parse_request(
+            r#"{"id": 3, "prompt": [1], "max_tokens": 4, "method": "sample",
+               "temperature": 0.5, "top_k": 8, "top_p": 0.9, "seed": 11}"#,
+            0,
+            16,
+        )
+        .unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(
+            r.method,
+            DecodeMethod::Sample { temperature: 0.5, top_k: 8, top_p: 0.9, seed: 11 }
+        );
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(parse_request("not json", 0, 8).is_err());
+        assert!(parse_request(r#"{"max_tokens": 3}"#, 0, 8).is_err(), "missing prompt");
+        assert!(parse_request(r#"{"prompt": [1], "method": "magic"}"#, 0, 8).is_err());
+        assert!(parse_request(r#"{"prompt": ["x"]}"#, 0, 8).is_err());
+        // out-of-range numbers must be rejected, not silently wrapped
+        assert!(parse_request(r#"{"prompt": [4294967301]}"#, 0, 8).is_err());
+        assert!(parse_request(r#"{"id": -1, "prompt": [1]}"#, 0, 8).is_err());
+    }
+
+    #[test]
+    fn result_lines_are_json() {
+        let r = InferResult {
+            id: 9,
+            prompt_len: 3,
+            tokens: vec![4, 5, 1],
+            started_step: 0,
+            finished_step: 3,
+            queue_seconds: 0.001,
+            latency_seconds: 0.01,
+        };
+        let v = Json::parse(&result_to_json(&r).to_string()).unwrap();
+        assert_eq!(v.get("id").unwrap().as_i64(), Some(9));
+        assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("steps").unwrap().as_i64(), Some(3));
+    }
+}

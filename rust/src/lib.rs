@@ -57,6 +57,31 @@
 //! serializes mapped-but-unemitted results so resume never recomputes or
 //! skips an element.
 //!
+//! ## Inference serving ([`infer`])
+//!
+//! The serving stack mirrors `t5x.decoding` + `InferTask`: a pure
+//! host-side decoding library (greedy / temperature / top-k / top-p
+//! sampling / beam search with length penalty) over the `[B, L, V]`
+//! logits of the `decode_logits` HLO, and a continuous-batching engine
+//! that packs independent requests into the fixed `B` batch slots,
+//! retires rows at EOS, and refills freed slots from the request queue
+//! mid-flight (`t5x serve` speaks JSONL over stdin/stdout).
+//!
+//! ### Inference determinism contract
+//!
+//! * Greedy ties break toward the lowest token id everywhere
+//!   ([`infer::decoding::argmax`] is shared by the engine and
+//!   `EvalRunner::greedy_decode`), and per-row `decode_logits` outputs do
+//!   not depend on other rows — so a request's greedy output is
+//!   byte-identical whether it ran alone or packed with arbitrary
+//!   neighbors (asserted by `tests/integration_infer.rs`).
+//! * Sampling is seeded per request and draws exactly one RNG value per
+//!   emitted token, so (prompt, seed) fully determines the continuation
+//!   regardless of batch packing or scheduler interleaving.
+//! * Beam search orders candidates and final hypotheses with total,
+//!   deterministic tie-breaks and is golden-tested against a brute-force
+//!   exhaustive reference.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper claim to a bench/example, and `EXPERIMENTS.md` for
 //! measured results.
@@ -65,6 +90,7 @@ pub mod bench;
 pub mod checkpoint;
 pub mod collectives;
 pub mod gin;
+pub mod infer;
 pub mod metrics;
 pub mod model;
 pub mod optim;

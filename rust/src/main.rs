@@ -7,7 +7,10 @@
 //! t5x train  --model t5-micro-dec --steps 100 --hosts 2 --strategy 2d \
 //!            [--cache /tmp/cache] [--config run.gin] [--gin.trainer.lr=1e-3]
 //! t5x eval   --model t5-micro-dec [--ckpt DIR]
-//! t5x infer  --model t5-nano-dec --prompt "5 9 11" --len 8
+//! t5x infer  --model t5-nano-dec --prompt "5 9 11" --len 8 \
+//!            [--decode greedy|sample|beam] [--temperature 0.8] [--top-k 20] \
+//!            [--top-p 0.95] [--seed 7] [--beam 4] [--alpha 0.6]
+//! t5x serve  --model t5-nano-dec [--len 16]   # JSONL requests on stdin
 //! t5x inspect-ckpt --dir DIR
 //! t5x cost-table --model t5-100m-dec
 //! ```
@@ -15,6 +18,7 @@
 use std::path::PathBuf;
 
 use t5x::gin::Config;
+use t5x::infer::{DecodeMethod, InferEngine, InferRequest};
 use t5x::optim::{OptimizerKind, Schedule};
 use t5x::partitioning::{cost, Mesh, ParamStrategy};
 use t5x::runtime::{Artifacts, DeviceHandle};
@@ -111,6 +115,7 @@ fn run() -> anyhow::Result<()> {
         Some("train") => cmd_train(&args, &gin),
         Some("eval") => cmd_eval(&args, &gin),
         Some("infer") => cmd_infer(&args),
+        Some("serve") => cmd_serve(&args),
         Some("inspect-ckpt") => cmd_inspect(&args),
         Some("cost-table") => cmd_cost_table(&args),
         Some("bench-report") => cmd_bench_report(&args),
@@ -120,7 +125,8 @@ fn run() -> anyhow::Result<()> {
                 eprintln!("unknown subcommand '{o}'\n");
             }
             println!(
-                "usage: t5x <cache|train|eval|infer|inspect-ckpt|cost-table|bench-report|list-models> [flags]"
+                "usage: t5x <cache|train|eval|infer|serve|inspect-ckpt|cost-table|\
+                 bench-report|list-models> [flags]"
             );
             println!("  see rust/src/main.rs docs for per-command flags");
             Ok(())
@@ -241,31 +247,104 @@ fn cmd_eval(args: &Args, gin: &Config) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_infer(args: &Args) -> anyhow::Result<()> {
-    let model = args.get_or("model", "t5-nano-dec");
-    let arts = Artifacts::load_default()?;
-    let device = DeviceHandle::spawn()?;
-    let m = arts.model(&model)?;
-    anyhow::ensure!(m.arch == "decoder", "infer supports decoder-only models");
-    let runner = t5x::trainer::eval::EvalRunner::new(&arts, &device, &model)?;
-    let params = match args.get("ckpt") {
+/// Params from --ckpt (latest step) or seeded init.
+fn load_infer_params(
+    args: &Args,
+    m: &t5x::runtime::ModelManifest,
+) -> anyhow::Result<t5x::model::Params> {
+    Ok(match args.get("ckpt") {
         Some(dir) => {
             let mgr = t5x::checkpoint::CheckpointManager::new(dir);
             let step = mgr.latest().ok_or_else(|| anyhow::anyhow!("no checkpoint"))?;
             mgr.restore(step)?.0
         }
         None => t5x::model::init_params(m, 0),
-    };
+    })
+}
+
+fn cmd_infer(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "t5-nano-dec");
+    let arts = Artifacts::load_default()?;
+    let device = DeviceHandle::spawn()?;
+    let m = arts.model(&model)?;
+    let params = load_infer_params(args, m)?;
+    let mut engine = InferEngine::new(&arts, &device, &model, &params, 1)?;
     let prompt: Vec<i32> = args
         .get_or("prompt", "5 9 11")
         .split_whitespace()
         .filter_map(|t| t.parse().ok())
         .collect();
     let len = args.get_usize("len", 8)?;
-    let prompts = vec![prompt; m.batch()];
-    let outs = runner.greedy_decode(&params, None, &prompts, len, 1)?;
-    println!("prompt ids: {:?}", prompts[0]);
-    println!("generated ids: {:?}", outs[0]);
+    println!("prompt ids: {prompt:?}");
+    if args.get_or("decode", "greedy") == "beam" {
+        let hyps = engine.beam_decode(
+            &prompt,
+            args.get_usize("beam", 4)?,
+            args.get_f64("alpha", 0.6)? as f32,
+            len,
+        )?;
+        for (i, h) in hyps.iter().enumerate() {
+            println!(
+                "beam {i}: score {:.4} (logp {:.4}) ids {:?}",
+                h.score, h.log_prob, h.tokens
+            );
+        }
+        return Ok(());
+    }
+    let method = match args.get_or("decode", "greedy").as_str() {
+        "greedy" => DecodeMethod::Greedy,
+        "sample" => DecodeMethod::Sample {
+            temperature: args.get_f64("temperature", 1.0)? as f32,
+            top_k: args.get_usize("top-k", 0)?,
+            top_p: args.get_f64("top-p", 1.0)? as f32,
+            seed: args.get_usize("seed", 0)? as u64,
+        },
+        other => anyhow::bail!("unknown --decode '{other}' (greedy|sample|beam)"),
+    };
+    engine.submit(InferRequest { id: 0, prompt, max_tokens: len, method })?;
+    let results = engine.run_until_idle()?;
+    let s = engine.summary();
+    println!("generated ids: {:?}", results[0].tokens);
+    println!(
+        "latency {:.2} ms, {:.1} tok/s, slot utilization {:.1}%",
+        results[0].latency_seconds * 1e3,
+        s.tokens_per_sec,
+        s.slot_utilization * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "t5-nano-dec");
+    let arts = Artifacts::load_default()?;
+    let device = DeviceHandle::spawn()?;
+    let m = arts.model(&model)?;
+    let params = load_infer_params(args, m)?;
+    let mut engine = InferEngine::new(&arts, &device, &model, &params, 1)?;
+    let default_max = args.get_usize("len", 16)?;
+    eprintln!(
+        "serving {model} (batch {} slots): one JSON request per stdin line, \
+         e.g. {{\"prompt\": [5, 9, 11], \"max_tokens\": 8}}; EOF to stop",
+        m.batch()
+    );
+    let served = t5x::infer::server::serve(
+        &mut engine,
+        std::io::BufReader::new(std::io::stdin()),
+        std::io::stdout(),
+        default_max,
+    )?;
+    let s = engine.summary();
+    eprintln!(
+        "served {} requests ({} malformed): {} decode steps, {} tokens, \
+         {:.1} tok/s, slot utilization {:.1}%, {} mid-flight refills",
+        served.requests,
+        served.errors,
+        s.steps,
+        s.tokens,
+        s.tokens_per_sec,
+        s.slot_utilization * 100.0,
+        s.refills
+    );
     Ok(())
 }
 
@@ -284,6 +363,19 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
         }
         println!("total params: {total}");
         println!("optimizer state vectors: {}", extra.len());
+        match mgr.restore_pipeline(latest)? {
+            Some(states) => {
+                println!("pipeline state: {} host stream(s)", states.len());
+                for (h, st) in states.iter().enumerate() {
+                    let tag = st.0.get("op").and_then(|v| v.as_str()).unwrap_or("?");
+                    println!(
+                        "  host {h}: root op '{tag}', {} bytes",
+                        st.to_json_string().len()
+                    );
+                }
+            }
+            None => println!("pipeline state: none (synthetic source or pre-pipeline checkpoint)"),
+        }
     }
     Ok(())
 }

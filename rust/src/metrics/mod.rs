@@ -157,9 +157,73 @@ impl Default for MetricsLogger {
     }
 }
 
+/// Named monotonic counters (the CLU `metrics.Counter` analog), shared by
+/// the serving engine and its callers. Cheap to clone (Arc-backed); values
+/// are flushed to a [`MetricsLogger`] via [`CounterSet::log_to`].
+#[derive(Clone, Default)]
+pub struct CounterSet {
+    inner: std::sync::Arc<Mutex<std::collections::BTreeMap<String, u64>>>,
+}
+
+impl CounterSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, name: &str, n: u64) {
+        *self.inner.lock().unwrap().entry(name.to_string()).or_insert(0) += n;
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// All counters, name-sorted.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        self.inner.lock().unwrap().iter().map(|(k, &v)| (k.clone(), v)).collect()
+    }
+
+    /// Emit every counter as a metric point at `step`.
+    pub fn log_to(&self, logger: &MetricsLogger, step: u64) {
+        let snap = self.snapshot();
+        let values: Vec<(&str, f64)> =
+            snap.iter().map(|(k, v)| (k.as_str(), *v as f64)).collect();
+        logger.log(step, &values);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn counter_set_accumulates_and_logs() {
+        let c = CounterSet::new();
+        c.inc("infer/steps");
+        c.add("infer/tokens", 41);
+        c.inc("infer/tokens");
+        assert_eq!(c.get("infer/steps"), 1);
+        assert_eq!(c.get("infer/tokens"), 42);
+        assert_eq!(c.get("missing"), 0);
+        let c2 = c.clone();
+        c2.inc("infer/steps");
+        assert_eq!(c.get("infer/steps"), 2, "clones share storage");
+        let path = std::env::temp_dir().join(format!("counters_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let logger = MetricsLogger::new().with_jsonl(&path);
+            c.log_to(&logger, 3);
+            logger.flush();
+        }
+        let v = Json::parse(std::fs::read_to_string(&path).unwrap().lines().next().unwrap())
+            .unwrap();
+        assert_eq!(v.get("infer/tokens").unwrap().as_f64().unwrap(), 42.0);
+        std::fs::remove_file(&path).ok();
+    }
 
     #[test]
     fn jsonl_writer_appends_parseable_lines() {

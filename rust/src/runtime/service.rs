@@ -148,10 +148,10 @@ fn execute(
     for t in inputs {
         let buf = match &t.data {
             crate::runtime::tensor::TensorData::F32(v) => {
-                client.buffer_from_host_buffer(v, &t.shape, None)
+                client.buffer_from_host_buffer(v.as_slice(), &t.shape, None)
             }
             crate::runtime::tensor::TensorData::I32(v) => {
-                client.buffer_from_host_buffer(v, &t.shape, None)
+                client.buffer_from_host_buffer(v.as_slice(), &t.shape, None)
             }
         }
         .map_err(|e| anyhow::anyhow!("host->device transfer: {e}"))?;

@@ -1,13 +1,23 @@
 //! Host-side tensors: the currency between seqio infeed, the PJRT runtime,
 //! the partitioner/collectives, and the optimizers.
+//!
+//! Storage is `Arc`-backed: `HostTensor::clone` is O(1) regardless of
+//! tensor size, so hot loops (the decode engine re-feeding the full
+//! parameter set every step, `params_in_order(..).clone()` in eval paths)
+//! share one allocation instead of deep-copying parameter bytes. Mutation
+//! goes through copy-on-write: [`HostTensor::as_f32_mut`] /
+//! [`HostTensor::as_i32_mut`] clone the underlying buffer only when it is
+//! actually shared.
+
+use std::sync::Arc;
 
 use xla::Literal;
 
-/// Typed flat storage.
+/// Typed flat storage, shared by cheap clones (copy-on-write on mutation).
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
+    F32(Arc<Vec<f32>>),
+    I32(Arc<Vec<i32>>),
 }
 
 /// A dense row-major host tensor.
@@ -20,12 +30,12 @@ pub struct HostTensor {
 impl HostTensor {
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
-        Self { shape, data: TensorData::F32(data) }
+        Self { shape, data: TensorData::F32(Arc::new(data)) }
     }
 
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
-        Self { shape, data: TensorData::I32(data) }
+        Self { shape, data: TensorData::I32(Arc::new(data)) }
     }
 
     pub fn zeros(shape: Vec<usize>) -> Self {
@@ -52,9 +62,12 @@ impl HostTensor {
         }
     }
 
+    /// Mutable access with copy-on-write: if the buffer is shared with
+    /// other clones, it is detached (cloned) first, so mutations never
+    /// alias into another tensor.
     pub fn as_f32_mut(&mut self) -> &mut [f32] {
         match &mut self.data {
-            TensorData::F32(v) => v,
+            TensorData::F32(v) => Arc::make_mut(v),
             TensorData::I32(_) => panic!("expected f32 tensor"),
         }
     }
@@ -63,6 +76,24 @@ impl HostTensor {
         match &self.data {
             TensorData::I32(v) => v,
             TensorData::F32(_) => panic!("expected i32 tensor"),
+        }
+    }
+
+    /// Copy-on-write mutable access for i32 tensors (see
+    /// [`HostTensor::as_f32_mut`]).
+    pub fn as_i32_mut(&mut self) -> &mut [i32] {
+        match &mut self.data {
+            TensorData::I32(v) => Arc::make_mut(v),
+            TensorData::F32(_) => panic!("expected i32 tensor"),
+        }
+    }
+
+    /// True if this tensor shares its buffer with at least one other clone
+    /// (diagnostics/tests for the COW contract).
+    pub fn is_shared(&self) -> bool {
+        match &self.data {
+            TensorData::F32(v) => Arc::strong_count(v) > 1,
+            TensorData::I32(v) => Arc::strong_count(v) > 1,
         }
     }
 
@@ -213,5 +244,28 @@ mod tests {
     fn norm_computes() {
         let t = HostTensor::f32(vec![2], vec![3.0, 4.0]);
         assert!((t.norm() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clone_shares_storage_until_mutation() {
+        let a = HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        let mut b = a.clone();
+        assert!(a.is_shared() && b.is_shared(), "clone must share the buffer");
+        // COW: mutating b detaches it, a is untouched
+        b.as_f32_mut()[0] = 99.0;
+        assert!(!a.is_shared() && !b.is_shared());
+        assert_eq!(a.as_f32(), &[1.0, 2.0, 3.0]);
+        assert_eq!(b.as_f32(), &[99.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn unshared_mutation_does_not_copy() {
+        // Arc::make_mut on a unique tensor mutates in place: the data
+        // pointer must be stable across mutations.
+        let mut t = HostTensor::i32(vec![2], vec![7, 8]);
+        let p0 = t.as_i32().as_ptr();
+        t.as_i32_mut()[1] = 9;
+        assert_eq!(t.as_i32().as_ptr(), p0);
+        assert_eq!(t.as_i32(), &[7, 9]);
     }
 }

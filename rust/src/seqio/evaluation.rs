@@ -259,6 +259,18 @@ impl Evaluator {
                 .collect(),
         }
     }
+
+    /// Iterator-accepting convenience over [`Evaluator::evaluate`] for
+    /// streamed prediction sources (e.g. inference-engine completions);
+    /// pairs are collected internally before the metric pass.
+    pub fn evaluate_stream(
+        &self,
+        task: &str,
+        pairs: impl IntoIterator<Item = (String, String)>,
+    ) -> EvalResult {
+        let pairs: Vec<(String, String)> = pairs.into_iter().collect();
+        self.evaluate(task, &pairs)
+    }
 }
 
 #[cfg(test)]
@@ -309,6 +321,16 @@ mod tests {
         assert_eq!(res.get("exact_match"), Some(0.5));
         assert!(res.get("token_accuracy").unwrap() > 0.5);
         assert!(res.get("bleu").is_none());
+    }
+
+    #[test]
+    fn evaluate_stream_matches_slice_api() {
+        let ev = Evaluator::new(vec![Metric::ExactMatch, Metric::TokenF1]);
+        let data = pairs(&[("a b", "a b"), ("c d", "c x")]);
+        let from_slice = ev.evaluate("t", &data);
+        let from_stream = ev.evaluate_stream("t", data.clone());
+        assert_eq!(from_slice.num_examples, from_stream.num_examples);
+        assert_eq!(from_slice.metrics, from_stream.metrics);
     }
 
     #[test]

@@ -1,11 +1,16 @@
 //! Evaluation + inference loops (the t5x `EvaluateTask` / `InferTask`
-//! paths): loss/accuracy over held-out batches via the `eval_step` HLO and
-//! greedy decoding via the `decode_logits` HLO, feeding seqio's
-//! [`crate::seqio::evaluation::Evaluator`] metrics.
+//! paths): loss/accuracy over held-out batches via the `eval_step` HLO,
+//! greedy decoding via the `decode_logits` HLO, and the predict-based
+//! [`predict_and_evaluate`] path that streams continuous-batching engine
+//! outputs through seqio's [`crate::seqio::evaluation::Evaluator`].
 
+use crate::infer::decoding;
+use crate::infer::engine::{InferEngine, InferRequest};
 use crate::model::Params;
 use crate::runtime::artifacts::ModelManifest;
 use crate::runtime::{DeviceHandle, Executable, HostTensor};
+use crate::seqio::evaluation::{EvalResult, Evaluator, Metric};
+use crate::seqio::vocab::Vocabulary;
 
 /// Holds the compiled eval/decode entrypoints for one model.
 pub struct EvalRunner {
@@ -112,14 +117,8 @@ impl EvalRunner {
                 // logits at the last filled position predict the next token
                 let pos = lens[i] - 1;
                 let row = &lf[(i * l + pos) * v..(i * l + pos + 1) * v];
-                let (mut best, mut best_v) = (0usize, f32::NEG_INFINITY);
-                for (k, &x) in row.iter().enumerate() {
-                    if x > best_v {
-                        best = k;
-                        best_v = x;
-                    }
-                }
-                let tok = best as i32;
+                // shared argmax => engine decodes stay byte-identical
+                let tok = decoding::argmax(row) as i32;
                 outputs[i].push(tok);
                 if tok == eos_id || lens[i] + 1 >= l {
                     done[i] = true;
@@ -134,6 +133,64 @@ impl EvalRunner {
         }
         Ok(outputs)
     }
+}
+
+/// Prediction-based evaluation report: the seqio metric values plus the
+/// decoded prediction strings (prediction order matches `examples`).
+pub struct PredictEvalReport {
+    pub result: EvalResult,
+    pub predictions: Vec<String>,
+}
+
+/// The t5x predict-then-evaluate path: decode every `(prompt, target)`
+/// example through the continuous-batching engine (greedy, so results are
+/// reproducible), detokenize with `vocab`, and stream the (target,
+/// prediction) pairs through the seqio [`Evaluator`].
+pub fn predict_and_evaluate(
+    engine: &mut InferEngine,
+    vocab: &dyn Vocabulary,
+    task_name: &str,
+    examples: &[(Vec<i32>, String)],
+    max_tokens: usize,
+    metrics: &[Metric],
+) -> anyhow::Result<PredictEvalReport> {
+    anyhow::ensure!(!examples.is_empty(), "no examples to evaluate");
+    for (i, (prompt, _)) in examples.iter().enumerate() {
+        engine.submit(InferRequest {
+            id: i as u64,
+            prompt: prompt.clone(),
+            max_tokens,
+            method: decoding::DecodeMethod::Greedy,
+        })?;
+    }
+    let mut results = engine.run_until_idle()?;
+    anyhow::ensure!(
+        results.len() == examples.len(),
+        "engine completed {} of {} requests",
+        results.len(),
+        examples.len()
+    );
+    results.sort_by_key(|r| r.id);
+    let predictions: Vec<String> = results
+        .iter()
+        .map(|r| {
+            // drop the trailing EOS before detokenizing
+            let ids: &[i32] = match r.tokens.split_last() {
+                Some((&last, rest)) if last == engine.eos_id() => rest,
+                _ => &r.tokens,
+            };
+            vocab.decode(ids)
+        })
+        .collect();
+    let evaluator = Evaluator::new(metrics.to_vec());
+    let result = evaluator.evaluate_stream(
+        task_name,
+        examples
+            .iter()
+            .zip(&predictions)
+            .map(|((_, target), pred)| (target.clone(), pred.clone())),
+    );
+    Ok(PredictEvalReport { result, predictions })
 }
 
 #[cfg(test)]

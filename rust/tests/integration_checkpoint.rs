@@ -115,7 +115,7 @@ fn async_save_snapshot_isolated() {
     let mgr = CheckpointManager::new(&dir);
     let params = t5x::model::init_params(m, 4);
     let snapshot = params.clone();
-    let handle = mgr.save_async(10, snapshot, Vec::new());
+    let handle = mgr.save_async(10, snapshot, Vec::new(), None);
     // mutate "live" params while the save runs — the snapshot must win
     handle.join().unwrap().unwrap();
     let (restored, _) = mgr.restore(10).unwrap();
