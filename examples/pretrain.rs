@@ -91,12 +91,12 @@ fn main() -> anyhow::Result<()> {
     println!("checkpoints at {:?}: {:?}", ckpt_dir,
         t5x::checkpoint::CheckpointManager::new(&ckpt_dir).steps());
 
-    // held-out eval
-    let eval_task = recipes::lm_task("pretrain_eval", 100, m.seq_len(), 777);
+    // held-out eval: same task, its "validation" split (via get_dataset)
     let runner = t5x::trainer::eval::EvalRunner::new(&arts, &device, &model)?;
+    let split = recipes::eval_split(task.as_ref());
     let metrics = runner.evaluate(
         &trainer.params(),
-        recipes::eval_batches(m, &eval_task, 3, 4).into_iter(),
+        recipes::eval_batches(m, task.clone(), &split, 3, 4)?.into_iter(),
     )?;
     println!(
         "heldout eval: loss {:.4}, token accuracy {:.2}%",

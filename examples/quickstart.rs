@@ -1,15 +1,30 @@
-//! Quickstart (E1): the whole Figure-1 stack in ~60 lines of user code.
+//! Quickstart (E1): the whole Figure-1 stack in ~60 lines of user code,
+//! with every dataset resolved *by registry name* through the unified
+//! `seqio::get_dataset` provider API (paper §3.1).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
-//! Loads the AOT artifacts, trains the nano decoder for 30 steps on the
-//! synthetic corpus through a deterministic seqio pipeline, evaluates, and
-//! prints the loss curve — all from Rust, no Python on the hot path.
+//!
+//! The same scenario from the CLI / gin (flags win over bindings):
+//!
+//! ```bash
+//! t5x train --model t5-nano-dec --steps 30 --task c4_lm --use-cached
+//! #   equivalently, in a .gin file:
+//! #   train.task = 'c4_lm'
+//! #   train.split = 'train'
+//! #   train.use_cached = True
+//! t5x eval  --model t5-nano-dec --task c4_lm   # reads its validation split
+//! t5x list-tasks                               # the registry namespace
+//! ```
+
+use std::sync::Arc;
 
 use t5x::optim::{OptimizerKind, Schedule};
 use t5x::partitioning::ParamStrategy;
 use t5x::runtime::{Artifacts, DeviceHandle};
+use t5x::seqio::provider::CachedTask;
+use t5x::seqio::task::TaskRegistry;
 use t5x::trainer::recipes;
 use t5x::trainer::{BatchSource, Trainer, TrainerConfig};
 
@@ -25,11 +40,14 @@ fn main() -> anyhow::Result<()> {
         m.seq_len()
     );
 
-    // 1. seqio: task -> deterministic cache (idempotent)
+    // 1. seqio: the pretraining corpus is one registry name away. A Task,
+    //    a Mixture, or a cached pipeline behind the same get_dataset call.
+    recipes::register_defaults();
+    let task = TaskRegistry::get("c4_lm").expect("default registry task");
     let cache_dir = std::env::temp_dir().join("t5x_quickstart_cache");
-    let task = recipes::lm_task("quickstart_lm", 400, m.seq_len(), 42);
     let meta = recipes::ensure_cached(&task, &cache_dir, 8, 0)?;
     println!("cached {} examples in {} shards", meta.num_examples, meta.num_shards);
+    let cached = Arc::new(CachedTask::open(&cache_dir, Some(&task))?);
 
     // 2. t5x: two data-parallel hosts, ZeRO-3 sharded optimizer
     let cfg = TrainerConfig {
@@ -48,7 +66,9 @@ fn main() -> anyhow::Result<()> {
     };
     let trainer = Trainer::new(&arts, &device, cfg)?
         .with_logger(t5x::metrics::MetricsLogger::new().with_terminal());
-    let infeed = recipes::cached_infeed(m, &cache_dir, 2, 0, None)?;
+    // provider -> model-ready infeed: get_dataset picks the feature
+    // converter for the model arch and shards the split per host.
+    let infeed = recipes::provider_infeed(m, cached, "train", 2, 0, 0, None)?;
     let summary = trainer.train(&BatchSource::Infeed(infeed))?;
     println!(
         "\nloss {:.3} -> {:.3} over {} steps ({:.1}s, {} comm bytes)",
@@ -59,15 +79,16 @@ fn main() -> anyhow::Result<()> {
         summary.comm_bytes,
     );
 
-    // 3. eval on held-out synthetic data
-    let eval_task = recipes::lm_task("quickstart_eval", 50, m.seq_len(), 1234);
+    // 3. eval on the task's held-out "validation" split — same provider,
+    //    same entry point, different split.
     let runner = t5x::trainer::eval::EvalRunner::new(&arts, &device, model)?;
+    let split = recipes::eval_split(task.as_ref());
     let metrics = runner.evaluate(
         &trainer.params(),
-        recipes::eval_batches(m, &eval_task, 7, 4).into_iter(),
+        recipes::eval_batches(m, task, &split, 7, 4)?.into_iter(),
     )?;
     println!(
-        "eval: loss {:.3}, token accuracy {:.1}% over {} batches",
+        "eval [validation]: loss {:.3}, token accuracy {:.1}% over {} batches",
         metrics.loss,
         metrics.accuracy * 100.0,
         metrics.num_batches

@@ -38,7 +38,7 @@ fn main() {
                 )
             })
             .collect();
-        let mixture = Mixture::new("bench_mix", tasks);
+        let mixture = Mixture::new("bench_mix", tasks).unwrap();
         let rates = mixture.rates();
         bench.measure_with_throughput(
             &format!("sample {num_tasks}-task mixture"),

@@ -20,6 +20,30 @@
 //! Python never runs on the training path: after `make artifacts` the
 //! `t5x` binary and all examples are self-contained.
 //!
+//! ## One data entry point: `seqio::get_dataset` (§3.1)
+//!
+//! Every data scenario resolves through
+//! [`seqio::get_dataset`]`(name_or_provider, GetDatasetOptions { split,
+//! task_feature_lengths, converter, shard, seed, resume, .. })`. Behind it
+//! sits the [`seqio::DatasetProvider`] trait — implemented by live
+//! [`seqio::task::Task`]s, weighted [`seqio::mixture::Mixture`]s, and
+//! [`seqio::CachedTask`] (an offline §3.2 deterministic cache) — plus a
+//! single [`seqio::ProviderRegistry`] namespace where duplicate
+//! registration is an error. `get_dataset` validates the split, the
+//! task-vs-converter feature declaration, and the stream head; applies
+//! the [`seqio::feature_converters`] registry entry for the requested
+//! converter/model arch; and returns a model-ready, checkpoint-resumable
+//! stream. The trainer, evaluator, and cache CLI all select data by name:
+//!
+//! ```text
+//! t5x list-tasks                       # the registry namespace
+//! t5x train --task c4_span            # or gin: train.task = 'c4_span'
+//!           --split train             #         train.split = 'train'
+//!           --use-cached              #         train.use_cached = True
+//! t5x eval  --task reverse_words      # defaults per model arch
+//! t5x cache --task c4_lm --out DIR
+//! ```
+//!
 //! ## Checkpointable data pipelines
 //!
 //! Every seqio stream is a graph of stateful ops

@@ -2,11 +2,16 @@
 //! `infer.py` scripts, unified). Fully configurable via gin files +
 //! `--gin.binding=value` overrides (paper §2.1).
 //!
+//! Data is resolved *by registry name* through `seqio::get_dataset`
+//! (`t5x list-tasks` prints the namespace — tasks and mixtures alike):
+//!
 //! ```bash
-//! t5x cache  --task lm --docs 1000 --out /tmp/cache --shards 16
+//! t5x list-tasks
+//! t5x cache  --task c4_lm --out /tmp/cache --shards 16 [--seed 0]
 //! t5x train  --model t5-micro-dec --steps 100 --hosts 2 --strategy 2d \
-//!            [--cache /tmp/cache] [--config run.gin] [--gin.trainer.lr=1e-3]
-//! t5x eval   --model t5-micro-dec [--ckpt DIR]
+//!            [--task c4_span] [--split train] [--use-cached] [--cache DIR] \
+//!            [--config run.gin] [--gin.trainer.lr=1e-3]
+//! t5x eval   --model t5-micro-dec [--task <registry-name>] [--ckpt DIR]
 //! t5x infer  --model t5-nano-dec --prompt "5 9 11" --len 8 \
 //!            [--decode greedy|sample|beam] [--temperature 0.8] [--top-k 20] \
 //!            [--top-p 0.95] [--seed 7] [--beam 4] [--alpha 0.6]
@@ -14,14 +19,27 @@
 //! t5x inspect-ckpt --dir DIR
 //! t5x cost-table --model t5-100m-dec
 //! ```
+//!
+//! Gin bindings for data selection (CLI flags win over gin):
+//!
+//! ```text
+//! train.task = 'c4_span'      # registry name (task or mixture)
+//! train.split = 'train'
+//! train.use_cached = True     # route through the deterministic cache
+//! train.cache_dir = '/tmp/c'  # optional explicit cache directory
+//! train.data_seed = 0
+//! eval.task = 'reverse_words'
+//! ```
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use t5x::gin::Config;
 use t5x::infer::{DecodeMethod, InferEngine, InferRequest};
 use t5x::optim::{OptimizerKind, Schedule};
 use t5x::partitioning::{cost, Mesh, ParamStrategy};
 use t5x::runtime::{Artifacts, DeviceHandle};
+use t5x::seqio::provider::{CachedTask, DatasetProvider, ProviderRegistry};
 use t5x::trainer::recipes;
 use t5x::trainer::{BatchSource, Trainer, TrainerConfig};
 use t5x::util::cli::Args;
@@ -120,18 +138,37 @@ fn run() -> anyhow::Result<()> {
         Some("cost-table") => cmd_cost_table(&args),
         Some("bench-report") => cmd_bench_report(&args),
         Some("list-models") => cmd_list_models(),
+        Some("list-tasks") => cmd_list_tasks(),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand '{o}'\n");
             }
             println!(
                 "usage: t5x <cache|train|eval|infer|serve|inspect-ckpt|cost-table|\
-                 bench-report|list-models> [flags]"
+                 bench-report|list-models|list-tasks> [flags]"
             );
             println!("  see rust/src/main.rs docs for per-command flags");
             Ok(())
         }
     }
+}
+
+/// Print the unified provider registry: every name `--task` / gin
+/// `train.task` can resolve, with its kind, splits, and features.
+fn cmd_list_tasks() -> anyhow::Result<()> {
+    recipes::register_defaults();
+    println!("{:<20} {:<8} {:<20} features", "name", "kind", "splits");
+    for (name, entry) in ProviderRegistry::entries() {
+        let p = entry.provider();
+        let feats: Vec<String> = p.output_features().iter().map(|f| f.name.clone()).collect();
+        println!(
+            "{name:<20} {:<8} {:<20} {}",
+            entry.kind(),
+            p.splits().join(","),
+            feats.join(",")
+        );
+    }
+    Ok(())
 }
 
 fn cmd_list_models() -> anyhow::Result<()> {
@@ -150,16 +187,37 @@ fn cmd_list_models() -> anyhow::Result<()> {
 }
 
 fn cmd_cache(args: &Args) -> anyhow::Result<()> {
-    let docs = args.get_usize("docs", 1000)?;
+    recipes::register_defaults();
     let shards = args.get_usize("shards", 16)?;
-    let seq = args.get_usize("seq", 64)?;
+    let seed = args.get_usize("seed", 0)? as u64;
     let out = PathBuf::from(args.get_or("out", "/tmp/t5x_cache"));
-    let kind = args.get_or("task", "lm");
-    let task = match kind.as_str() {
-        "span" => recipes::span_corruption_task("cli_span", docs, seq, 42),
-        _ => recipes::lm_task("cli_lm", docs, seq, 42),
+    let name = args.get_or("task", "c4_lm");
+    // legacy aliases from the pre-registry CLI
+    let name: String = match name.as_str() {
+        "lm" => "c4_lm".to_string(),
+        "span" => "c4_span".to_string(),
+        other => other.to_string(),
     };
-    let meta = recipes::ensure_cached(&task, &out, shards, 0)?;
+    for legacy in ["docs", "seq"] {
+        if args.get(legacy).is_some() {
+            eprintln!(
+                "warning: --{legacy} is ignored — registry tasks have fixed corpora; \
+                 register a custom task (or edit recipes::register_defaults) instead"
+            );
+        }
+    }
+    let task = match ProviderRegistry::get(&name) {
+        Some(entry) => entry.as_task().ok_or_else(|| {
+            anyhow::anyhow!(
+                "'{name}' is a {} — only plain tasks can be cached",
+                entry.kind()
+            )
+        })?,
+        None => anyhow::bail!(
+            "no task named '{name}' in the registry; see `t5x list-tasks`"
+        ),
+    };
+    let meta = recipes::ensure_cached(&task, &out, shards, seed)?;
     println!(
         "cached task '{}': {} examples in {} shards at {}",
         meta.task,
@@ -168,6 +226,122 @@ fn cmd_cache(args: &Args) -> anyhow::Result<()> {
         out.display()
     );
     Ok(())
+}
+
+/// Resolve the training data source: CLI flag > gin binding > default.
+/// Every named scenario — live task, mixture, cached — goes through
+/// `seqio::get_dataset` via `recipes::provider_infeed`.
+fn train_source(
+    args: &Args,
+    gin: &Config,
+    m: &t5x::runtime::ModelManifest,
+    cfg: &TrainerConfig,
+    trainer: &Trainer,
+) -> anyhow::Result<BatchSource> {
+    recipes::register_defaults();
+    let task_name = args
+        .get("task")
+        .map(|s| s.to_string())
+        .or_else(|| gin.get("train", "task").and_then(|v| v.as_str()).map(|s| s.to_string()));
+    let split = args
+        .get("split")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| gin.str_or("train", "split", "train"));
+    let use_cached = args.has_flag("use-cached") || gin.bool_or("train", "use_cached", false);
+    let cache_dir = args
+        .get("cache")
+        .map(PathBuf::from)
+        .or_else(|| gin.get("train", "cache_dir").and_then(|v| v.as_str()).map(PathBuf::from));
+    let data_seed = gin.usize_or("train", "data_seed", cfg.seed as usize) as u64;
+    let resume = trainer.restored_pipeline.as_deref();
+    // A cache's build seed pins its data; a different requested seed is
+    // ignored, so say so instead of silently training on other data.
+    fn warn_seed_pinned(label: &str, build_seed: u64, data_seed: u64) {
+        if build_seed != data_seed {
+            eprintln!(
+                "warning: cache {label} was built with seed {build_seed}, not the \
+                 requested data seed {data_seed}; the cache's seed wins"
+            );
+        }
+    }
+
+    let source = match (task_name, cache_dir) {
+        (Some(name), cache_dir) => {
+            let entry = ProviderRegistry::get(&name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--task '{name}' is not in the registry (registered: [{}]); \
+                     see `t5x list-tasks`",
+                    ProviderRegistry::names().join(", ")
+                )
+            })?;
+            let provider: Arc<dyn DatasetProvider> = if use_cached || cache_dir.is_some() {
+                if let t5x::seqio::provider::RegistryEntry::Cached(c) = &entry {
+                    // already a cache-backed provider; nothing to build
+                    anyhow::ensure!(
+                        cache_dir.is_none(),
+                        "'{name}' is already cache-backed; --cache/train.cache_dir \
+                         conflicts with its registered directory"
+                    );
+                    warn_seed_pinned(&format!("'{name}'"), c.build_seed(), data_seed);
+                    println!("training '{name}' from its registered cache");
+                    c.clone()
+                } else {
+                    let task = entry.as_task().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "use_cached requires a plain task; '{name}' is a {}",
+                            entry.kind()
+                        )
+                    })?;
+                    let user_dir = cache_dir.is_some();
+                    let dir = cache_dir
+                        .unwrap_or_else(|| std::env::temp_dir().join(format!("t5x_cache_{name}")));
+                    if user_dir && dir.join("cache_meta.json").exists() {
+                        // A user-supplied cache directory is reused
+                        // read-only — never deleted/rebuilt in place.
+                        // CachedTask::open rejects one built from another
+                        // task; an incompatible shard count errors at
+                        // get_dataset; a seed mismatch only warns (the
+                        // cache's build seed pins the data).
+                        let meta = t5x::seqio::cache::CacheMeta::load(&dir)?;
+                        warn_seed_pinned(&format!("at {}", dir.display()), meta.seed, data_seed);
+                        println!("training '{name}' from existing cache at {}", dir.display());
+                    } else {
+                        // Tool-owned (or absent) directory: (re)build as
+                        // needed; ensure_cached is idempotent and rebuilds
+                        // on a task/seed/shard mismatch.
+                        recipes::ensure_cached(&task, &dir, 8 * cfg.num_hosts, data_seed)?;
+                        println!(
+                            "training '{name}' from deterministic cache at {}",
+                            dir.display()
+                        );
+                    }
+                    Arc::new(CachedTask::open(&dir, Some(&task))?)
+                }
+            } else {
+                println!("training '{name}' ({}) live, split '{split}'", entry.kind());
+                entry.provider()
+            };
+            BatchSource::Infeed(recipes::provider_infeed(
+                m,
+                provider,
+                &split,
+                cfg.num_hosts,
+                trainer.start_step,
+                data_seed,
+                resume,
+            )?)
+        }
+        // legacy: a bare --cache DIR without --task
+        (None, Some(dir)) => BatchSource::Infeed(recipes::cached_infeed(
+            m,
+            &dir,
+            cfg.num_hosts,
+            trainer.start_step,
+            resume,
+        )?),
+        (None, None) => BatchSource::Synthetic { seed: 7 },
+    };
+    Ok(source)
 }
 
 fn cmd_train(args: &Args, gin: &Config) -> anyhow::Result<()> {
@@ -193,16 +367,7 @@ fn cmd_train(args: &Args, gin: &Config) -> anyhow::Result<()> {
             println!("resumed from checkpoint at step {step}");
         }
     }
-    let source = match args.get("cache") {
-        Some(dir) => BatchSource::Infeed(recipes::cached_infeed(
-            m,
-            std::path::Path::new(dir),
-            cfg.num_hosts,
-            trainer.start_step,
-            trainer.restored_pipeline.as_deref(),
-        )?),
-        None => BatchSource::Synthetic { seed: 7 },
-    };
+    let source = train_source(args, gin, m, &cfg, &trainer)?;
     let summary = trainer.train(&source)?;
     println!(
         "done: loss {:.4} -> {:.4}, {:.1}s, comm {:.1} MiB",
@@ -234,11 +399,28 @@ fn cmd_eval(args: &Args, gin: &Config) -> anyhow::Result<()> {
         }
         None => t5x::model::init_params(m, 0),
     };
-    let eval_task = recipes::lm_task("cli_eval", 200, m.seq_len(), 123);
-    let batches = recipes::eval_batches(m, &eval_task, 5, args.get_usize("batches", 8)?);
+    // Resolve the eval task from the registry — default per arch, so an
+    // encdec model gets a task that actually declares encoder inputs
+    // (get_dataset errors on a feature mismatch instead of silently
+    // evaluating on empty encoder rows).
+    recipes::register_defaults();
+    let task_name = args
+        .get("task")
+        .map(|s| s.to_string())
+        .or_else(|| gin.get("eval", "task").and_then(|v| v.as_str()).map(|s| s.to_string()))
+        .unwrap_or_else(|| recipes::default_task_for_arch(&m.arch).to_string());
+    let provider = ProviderRegistry::provider(&task_name)?;
+    let split = recipes::eval_split(provider.as_ref());
+    let seed = gin.usize_or("eval", "data_seed", 5) as u64;
+    let num_batches = args.get_usize("batches", 8)?;
+    let batches = recipes::eval_batches(m, provider, &split, seed, num_batches)?;
+    anyhow::ensure!(
+        !batches.is_empty(),
+        "eval task '{task_name}' split '{split}' produced no full batches"
+    );
     let metrics = runner.evaluate(&params, batches.into_iter())?;
     println!(
-        "eval {}: loss {:.4}, token accuracy {:.2}%, {} batches",
+        "eval {} on '{task_name}' [{split}]: loss {:.4}, token accuracy {:.2}%, {} batches",
         cfg.model,
         metrics.loss,
         metrics.accuracy * 100.0,

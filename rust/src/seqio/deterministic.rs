@@ -66,14 +66,29 @@ impl DeterministicPipeline {
         start_k: usize,
         repeat: bool,
     ) -> Dataset {
+        self.try_host_stream(host, num_hosts, start_k, repeat)
+            .expect("open cache shard files")
+    }
+
+    /// Fallible variant of [`DeterministicPipeline::host_stream`] — a
+    /// missing/unreadable shard file surfaces as an error instead of a
+    /// panic (the `DatasetProvider` contract).
+    pub fn try_host_stream(
+        &self,
+        host: usize,
+        num_hosts: usize,
+        start_k: usize,
+        repeat: bool,
+    ) -> anyhow::Result<Dataset> {
         let files = self.host_files(host, num_hosts);
-        let readers: Vec<RecordReader> = files
-            .iter()
-            .map(|&f| {
-                RecordReader::open(CacheMeta::shard_file(&self.dir, f))
-                    .expect("open shard file")
-            })
-            .collect();
+        let mut readers: Vec<RecordReader> = Vec::with_capacity(files.len());
+        for &f in &files {
+            readers.push(
+                RecordReader::open(CacheMeta::shard_file(&self.dir, f)).map_err(|e| {
+                    anyhow::anyhow!("cache at {}: shard file {f}: {e}", self.dir.display())
+                })?,
+            );
+        }
         let mut hr = HostReader {
             readers,
             r: 0,
@@ -87,7 +102,7 @@ impl DeterministicPipeline {
             repeat,
         };
         hr.seek(start_k);
-        Dataset::from_op(hr)
+        Ok(Dataset::from_op(hr))
     }
 
     /// Convenience: the merged global-order stream (single host view).

@@ -15,6 +15,7 @@
 //! DESIGN.md).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use super::dataset::Dataset;
 use super::vocab::PAD_ID;
@@ -31,6 +32,10 @@ pub fn lengths(pairs: &[(&str, usize)]) -> FeatureLengths {
 /// Common converter interface.
 pub trait FeatureConverter: Send + Sync {
     fn name(&self) -> &'static str;
+    /// The *task* features this converter consumes ("inputs"/"targets").
+    /// `get_dataset` validates them against the task's declared output
+    /// features and requires a task_feature_length for each.
+    fn task_features(&self) -> &'static [&'static str];
     /// Names (and lengths) of the model features this converter emits.
     fn model_feature_lengths(&self, task_lengths: &FeatureLengths) -> FeatureLengths;
     fn convert_example(&self, ex: &Example, task_lengths: &FeatureLengths) -> Example;
@@ -43,6 +48,73 @@ pub trait FeatureConverter: Send + Sync {
         let lens = task_lengths.clone();
         ds.map(move |ex| me.convert_example(&ex, &lens))
     }
+}
+
+// ---------------------------------------------------------------------------
+// Converter registry: name / model-arch -> converter
+// ---------------------------------------------------------------------------
+
+static CONVERTERS: once_cell::sync::Lazy<
+    std::sync::Mutex<BTreeMap<String, Arc<dyn FeatureConverter>>>,
+> = once_cell::sync::Lazy::new(|| {
+    let mut m: BTreeMap<String, Arc<dyn FeatureConverter>> = BTreeMap::new();
+    m.insert("enc_dec".to_string(), Arc::new(EncDecConverter));
+    m.insert("lm".to_string(), Arc::new(LmConverter));
+    m.insert("prefix_lm".to_string(), Arc::new(PrefixLmConverter::default()));
+    std::sync::Mutex::new(m)
+});
+
+/// Register a custom converter under a unique name (duplicates error,
+/// matching the task registry contract).
+pub fn register_converter(
+    name: &str,
+    conv: Arc<dyn FeatureConverter>,
+) -> anyhow::Result<()> {
+    let mut reg = CONVERTERS.lock().unwrap();
+    anyhow::ensure!(
+        !reg.contains_key(name),
+        "a feature converter named '{name}' is already registered"
+    );
+    reg.insert(name.to_string(), conv);
+    Ok(())
+}
+
+pub fn converter(name: &str) -> Option<Arc<dyn FeatureConverter>> {
+    CONVERTERS.lock().unwrap().get(name).cloned()
+}
+
+pub fn converter_names() -> Vec<String> {
+    CONVERTERS.lock().unwrap().keys().cloned().collect()
+}
+
+/// The converter a model architecture consumes by default — the single
+/// home of the arch dispatch that used to be copy-pasted per call site.
+pub fn converter_for_arch(arch: &str) -> Arc<dyn FeatureConverter> {
+    let name = match arch {
+        "encdec" | "enc_dec" | "encoder_decoder" => "enc_dec",
+        _ => "lm",
+    };
+    converter(name).expect("built-in converter present")
+}
+
+/// Resolve a registry name or a model-arch alias to a converter.
+pub fn resolve_converter(name_or_arch: &str) -> anyhow::Result<Arc<dyn FeatureConverter>> {
+    if let Some(c) = converter(name_or_arch) {
+        return Ok(c);
+    }
+    match name_or_arch {
+        "encdec" | "encoder_decoder" | "decoder" | "dec" => Ok(converter_for_arch(name_or_arch)),
+        other => anyhow::bail!(
+            "unknown feature converter '{other}' (registered: [{}])",
+            converter_names().join(", ")
+        ),
+    }
+}
+
+/// Uniform task-feature lengths for a converter (every consumed feature
+/// at `len` — the trainer's default when only a model seq_len is known).
+pub fn default_task_lengths(conv: &dyn FeatureConverter, len: usize) -> FeatureLengths {
+    conv.task_features().iter().map(|f| (f.to_string(), len)).collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -89,6 +161,10 @@ impl FeatureConverter for EncDecConverter {
         "enc_dec"
     }
 
+    fn task_features(&self) -> &'static [&'static str] {
+        &["inputs", "targets"]
+    }
+
     fn model_feature_lengths(&self, t: &FeatureLengths) -> FeatureLengths {
         lengths(&[
             ("encoder_input_tokens", t["inputs"]),
@@ -122,6 +198,10 @@ pub struct LmConverter;
 impl FeatureConverter for LmConverter {
     fn name(&self) -> &'static str {
         "lm"
+    }
+
+    fn task_features(&self) -> &'static [&'static str] {
+        &["targets"]
     }
 
     fn model_feature_lengths(&self, t: &FeatureLengths) -> FeatureLengths {
@@ -162,6 +242,10 @@ impl Default for PrefixLmConverter {
 impl FeatureConverter for PrefixLmConverter {
     fn name(&self) -> &'static str {
         "prefix_lm"
+    }
+
+    fn task_features(&self) -> &'static [&'static str] {
+        &["inputs", "targets"]
     }
 
     fn model_feature_lengths(&self, t: &FeatureLengths) -> FeatureLengths {
@@ -458,6 +542,25 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn converter_registry_resolves_names_and_arch_aliases() {
+        assert_eq!(resolve_converter("enc_dec").unwrap().name(), "enc_dec");
+        assert_eq!(resolve_converter("encdec").unwrap().name(), "enc_dec");
+        assert_eq!(resolve_converter("lm").unwrap().name(), "lm");
+        assert_eq!(resolve_converter("decoder").unwrap().name(), "lm");
+        assert_eq!(resolve_converter("prefix_lm").unwrap().name(), "prefix_lm");
+        assert!(resolve_converter("no_such_converter").is_err());
+        assert_eq!(converter_for_arch("encdec").name(), "enc_dec");
+        assert_eq!(converter_for_arch("decoder").name(), "lm");
+        // duplicate registration of a built-in name errors
+        assert!(register_converter("lm", Arc::new(LmConverter)).is_err());
+        // default lengths cover exactly the consumed task features
+        let tl = default_task_lengths(&EncDecConverter, 32);
+        assert_eq!(tl["inputs"], 32);
+        assert_eq!(tl["targets"], 32);
+        assert_eq!(default_task_lengths(&LmConverter, 16).len(), 1);
     }
 
     #[test]

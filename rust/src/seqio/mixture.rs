@@ -9,6 +9,7 @@ use super::dataset::{
     PipelineState,
 };
 use super::task::Task;
+use super::vocab::Vocabulary;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
@@ -19,10 +20,68 @@ pub struct Mixture {
 }
 
 impl Mixture {
-    pub fn new(name: &str, tasks: Vec<(Arc<Task>, f64)>) -> Self {
-        assert!(!tasks.is_empty(), "mixture needs at least one task");
-        assert!(tasks.iter().all(|(_, r)| *r > 0.0), "rates must be positive");
-        Self { name: name.to_string(), tasks }
+    /// Construct a mixture. Errors (instead of panicking) on an empty
+    /// task list or non-positive rates — construction problems surface as
+    /// `anyhow::Result` like every other registry operation.
+    pub fn new(name: &str, tasks: Vec<(Arc<Task>, f64)>) -> anyhow::Result<Mixture> {
+        anyhow::ensure!(!tasks.is_empty(), "mixture '{name}' needs at least one task");
+        // schema fingerprint: feature name + vocab size + required flag —
+        // mixing tasks that tokenize into different id spaces corrupts
+        // training data silently, so it must fail at construction.
+        fn feature_names(t: &Task) -> Vec<String> {
+            let mut v: Vec<String> = t
+                .output_features
+                .iter()
+                .map(|f| format!("{}/v{}/req={}", f.name, f.vocab.vocab_size(), f.required))
+                .collect();
+            v.sort_unstable();
+            v
+        }
+        let schema = feature_names(&tasks[0].0);
+        for (task, rate) in &tasks {
+            anyhow::ensure!(
+                rate.is_finite() && *rate > 0.0,
+                "mixture '{name}': task '{}' has non-positive rate {rate}",
+                task.name
+            );
+            // seqio requires member tasks to share an output-feature
+            // schema; enforce it here so feature converters never meet a
+            // member example missing a feature mid-stream.
+            let theirs = feature_names(task);
+            anyhow::ensure!(
+                theirs == schema,
+                "mixture '{name}': task '{}' declares features [{}], but '{}' \
+                 declares [{}] — member tasks must share an output-feature schema",
+                task.name,
+                theirs.join(", "),
+                tasks[0].0.name,
+                schema.join(", ")
+            );
+        }
+        Ok(Self { name: name.to_string(), tasks })
+    }
+
+    /// Construct a mixture from *registered task names* (the gin/CLI
+    /// path: `MixtureRegistry.add(name, [(task, rate), ...])` in seqio).
+    pub fn from_names(name: &str, members: &[(&str, f64)]) -> anyhow::Result<Mixture> {
+        let mut tasks = Vec::with_capacity(members.len());
+        for (task_name, rate) in members {
+            let t = super::task::TaskRegistry::get(task_name).ok_or_else(|| {
+                anyhow::anyhow!("mixture '{name}': no task named '{task_name}' in the registry")
+            })?;
+            tasks.push((t, *rate));
+        }
+        Mixture::new(name, tasks)
+    }
+
+    /// Register into the unified provider namespace (shared with tasks);
+    /// duplicate names error like seqio's ValueError.
+    pub fn register(self) -> anyhow::Result<Arc<Mixture>> {
+        let m = Arc::new(self);
+        super::provider::ProviderRegistry::add(super::provider::RegistryEntry::Mixture(
+            m.clone(),
+        ))?;
+        Ok(m)
     }
 
     pub fn rates(&self) -> Vec<f64> {
@@ -30,27 +89,40 @@ impl Mixture {
         self.tasks.iter().map(|(_, r)| r / total).collect()
     }
 
-    /// Sample-based interleave of the member task datasets. Each example is
-    /// stamped with a `_task` feature naming its origin (for rate tests and
-    /// eval routing). Tasks that run out are dropped from the draw
-    /// (seqio's behaviour with non-repeating datasets).
+    /// Sample-based interleave of the member task "train" streams; see
+    /// [`Mixture::dataset_split`].
+    pub fn dataset(&self, seed: u64, shard_id: usize, num_shards: usize) -> Dataset {
+        self.dataset_split("train", seed, shard_id, num_shards)
+            .expect("the train split always exists")
+    }
+
+    /// Sample-based interleave of the member task datasets for one split.
+    /// Each example is stamped with a `_task` feature naming its origin
+    /// (for rate tests and eval routing). Tasks that run out are dropped
+    /// from the draw (seqio's behaviour with non-repeating datasets).
     ///
     /// The stream is a stateful [`PipelineOp`]: its state captures the
     /// sampling RNG, the set of still-active tasks, and every member
     /// stream's own state, so a mixture resumes mid-draw exactly.
-    pub fn dataset(&self, seed: u64, shard_id: usize, num_shards: usize) -> Dataset {
+    pub fn dataset_split(
+        &self,
+        split: &str,
+        seed: u64,
+        shard_id: usize,
+        num_shards: usize,
+    ) -> anyhow::Result<Dataset> {
         let mut streams: Vec<(String, Box<dyn PipelineOp>)> = Vec::new();
         let mut weights = Vec::new();
         for (task, rate) in &self.tasks {
-            let ds = task.dataset(seed, shard_id, num_shards);
+            let ds = task.dataset_split(split, seed, shard_id, num_shards)?;
             streams.push((task.name.clone(), ds.into_op()));
             weights.push(*rate);
         }
-        Dataset::from_op(Sampler {
+        Ok(Dataset::from_op(Sampler {
             streams,
             weights,
             rng: Pcg64::new(seed ^ 0x4D49_5854), // "MIXT"
-        })
+        }))
     }
 
     /// Rebuild the mixture stream and reposition it to a captured state.
@@ -173,7 +245,8 @@ mod tests {
         let m = Mixture::new(
             "m1",
             vec![(const_task("a_rates", 1, 10), 1.0), (const_task("b_rates", 2, 10), 3.0)],
-        );
+        )
+        .unwrap();
         let r = m.rates();
         assert!((r[0] - 0.25).abs() < 1e-12);
         assert!((r[1] - 0.75).abs() < 1e-12);
@@ -187,7 +260,8 @@ mod tests {
                 (const_task("a_conv", 1, 100_000), 0.7),
                 (const_task("b_conv", 2, 100_000), 0.3),
             ],
-        );
+        )
+        .unwrap();
         // NB: Dataset's inherent `map` (Example -> Example) shadows
         // Iterator::map, so collect first in tests.
         let sample: Vec<i32> = m
@@ -207,7 +281,8 @@ mod tests {
         let m = Mixture::new(
             "m3",
             vec![(const_task("tiny_drop", 1, 3), 0.9), (const_task("big_drop", 2, 50), 0.1)],
-        );
+        )
+        .unwrap();
         let all: Vec<i32> = m
             .dataset(1, 0, 1)
             .collect_vec()
@@ -226,6 +301,7 @@ mod tests {
                 "m4",
                 vec![(const_task("a_det", 1, 100), 0.5), (const_task("b_det", 2, 100), 0.5)],
             )
+            .unwrap()
         };
         let a: Vec<_> = make().dataset(9, 0, 1).take(50).collect();
         let b: Vec<_> = make().dataset(9, 0, 1).take(50).collect();
@@ -244,6 +320,7 @@ mod tests {
                     (const_task("b_res", 2, 120), 0.4),
                 ],
             )
+            .unwrap()
         };
         let all = make().dataset(3, 0, 1).collect_vec();
         // cut=80 lands after the small task exhausts, exercising the
@@ -260,8 +337,27 @@ mod tests {
     }
 
     #[test]
+    fn construction_errors_are_results() {
+        assert!(Mixture::new("m_empty", vec![]).is_err());
+        assert!(Mixture::new("m_zero_rate", vec![(const_task("zr", 1, 3), 0.0)]).is_err());
+        assert!(Mixture::new("m_nan_rate", vec![(const_task("nr", 1, 3), f64::NAN)]).is_err());
+        assert!(Mixture::from_names("m_unknown", &[("definitely_not_registered", 1.0)]).is_err());
+        // member tasks must share an output-feature schema
+        let vocab: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(4));
+        let other = Task::builder("schema_other")
+            .source(Arc::new(FunctionSource::new(|_, _| Dataset::from_vec(vec![]))))
+            .output_feature("inputs", vocab, true)
+            .build();
+        let err = Mixture::new(
+            "m_schema",
+            vec![(const_task("schema_a", 1, 3), 1.0), (other, 1.0)],
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
     fn task_stamp_present() {
-        let m = Mixture::new("m5", vec![(const_task("only_stamp", 7, 5), 1.0)]);
+        let m = Mixture::new("m5", vec![(const_task("only_stamp", 7, 5), 1.0)]).unwrap();
         for ex in m.dataset(0, 0, 1) {
             match &ex["_task"] {
                 Feature::Text(t) => assert_eq!(t, "only_stamp"),

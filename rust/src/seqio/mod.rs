@@ -3,14 +3,37 @@
 //! A Rust port of seqio (paper §3): task-based data pipelines for training,
 //! inference and evaluation, with first-class *deterministic pipelines*.
 //!
-//! Structure mirrors Figure 2 of the paper:
+//! Structure mirrors Figure 2 of the paper, unified behind the single
+//! [`get_dataset`] entry point (§3.1):
 //!
 //! ```text
-//!  DataSource -> Preprocessors -> (output features) -> FeatureConverter
-//!      |              |                                     |
-//!  [source.rs]  [preprocessors.rs]                [feature_converters.rs]
-//!                        Task  [task.rs]   Mixture [mixture.rs]
+//!              get_dataset(name_or_provider, GetDatasetOptions)
+//!                                 |
+//!                     ProviderRegistry  [provider.rs]
+//!              (one namespace: tasks + mixtures + caches;
+//!               duplicate registration is an error)
+//!                  /              |               \
+//!              Task            Mixture          CachedTask
+//!            [task.rs]       [mixture.rs]      [provider.rs]
+//!                |                                  |
+//!   DataSource -> Preprocessors          DeterministicPipeline (§3.2)
+//!   [source.rs]  [preprocessors.rs]      [cache.rs / deterministic.rs]
+//!       (per split: train/validation/...)           |
+//!                  \_______________________________/
+//!                                 |
+//!                    FeatureConverter (per model arch)
+//!                      [feature_converters.rs]
+//!                                 |
+//!              model-ready, checkpoint-resumable Dataset
+//!                           [dataset.rs]
 //! ```
+//!
+//! Every [`provider::DatasetProvider`] — live [`task::Task`], weighted
+//! [`mixture::Mixture`], or offline [`provider::CachedTask`] — declares
+//! its splits and output features and yields the same kind of stateful,
+//! resumable example stream, so the trainer, evaluator and cache job all
+//! resolve their data *by registry name* ([`get_dataset`]) and never care
+//! which kind serves it.
 //!
 //! Deterministic pipelines (§3.2) are provided by an offline cache job
 //! ([`cache`]) that preprocesses, globally shuffles, assigns ordered
@@ -18,7 +41,8 @@
 //! ([`records`]), plus a deterministic reader ([`deterministic`]) that
 //! gives every data-parallel host an exclusive, sequentially-readable set
 //! of files, supports exact resume at an arbitrary step, and never repeats
-//! data after restarts.
+//! data after restarts. [`provider::CachedTask`] wraps that reader as a
+//! provider, making offline caches interchangeable with live tasks.
 
 pub mod cache;
 pub mod dataset;
@@ -27,10 +51,16 @@ pub mod evaluation;
 pub mod feature_converters;
 pub mod mixture;
 pub mod preprocessors;
+pub mod provider;
 pub mod records;
 pub mod source;
 pub mod task;
 pub mod vocab;
+
+pub use provider::{
+    get_dataset, CachedTask, DatasetProvider, GetDatasetOptions, ProviderRef,
+    ProviderRegistry, RegistryEntry, ShardInfo,
+};
 
 use std::collections::BTreeMap;
 

@@ -1,0 +1,726 @@
+//! The unified data-provider API (paper §3.1, Figure 2): one task-based
+//! entry point — [`get_dataset`] — behind which live [`Task`]s,
+//! [`Mixture`]s and cached deterministic pipelines ([`CachedTask`], §3.2)
+//! are interchangeable.
+//!
+//! Everything a training, eval or cache job needs is expressed as a
+//! *registry name* plus [`GetDatasetOptions`]; the provider kind (live vs
+//! mixture vs offline cache) is an implementation detail of the name.
+//! This is the paper's configurability claim: every scenario (pretrain,
+//! finetune, mixture, cached, resumed) is reachable from gin/CLI without
+//! touching library code.
+//!
+//! ```text
+//!   get_dataset("c4_span", opts)
+//!        |
+//!        v
+//!   ProviderRegistry ── Task ─────┐
+//!     (one namespace)  Mixture ───┼─ DatasetProvider::dataset(split, shard, seed)
+//!                      CachedTask ┘        |
+//!                                          v
+//!                         [repeat] -> [strip _index] -> FeatureConverter
+//!                                          |
+//!                                          v
+//!                      model-ready, checkpoint-resumable Dataset
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::Lazy;
+
+use super::dataset::{Dataset, DatasetFactory, PipelineState};
+use super::deterministic::{strip_index, DeterministicPipeline};
+use super::evaluation::Metric;
+use super::feature_converters::{resolve_converter, FeatureConverter, FeatureLengths};
+use super::mixture::Mixture;
+use super::task::{OutputFeature, Task};
+
+/// Which data shard of a split this reader owns (seqio.ShardInfo).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardInfo {
+    pub index: usize,
+    pub num_shards: usize,
+}
+
+impl ShardInfo {
+    pub fn new(index: usize, num_shards: usize) -> ShardInfo {
+        assert!(num_shards >= 1 && index < num_shards, "bad shard spec {index}/{num_shards}");
+        ShardInfo { index, num_shards }
+    }
+
+    /// The whole (unsharded) split.
+    pub fn whole() -> ShardInfo {
+        ShardInfo { index: 0, num_shards: 1 }
+    }
+}
+
+impl Default for ShardInfo {
+    fn default() -> ShardInfo {
+        ShardInfo::whole()
+    }
+}
+
+/// The common surface of every data provider (seqio.DatasetProviderBase):
+/// a named source of one or more splits of feature-dict examples, with
+/// declared output features and checkpoint-exact resume.
+pub trait DatasetProvider: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Split names this provider can serve. Every provider has "train".
+    fn splits(&self) -> Vec<String> {
+        vec!["train".to_string()]
+    }
+
+    /// The declared task-feature schema ("inputs"/"targets"/...). May be
+    /// empty for raw providers (e.g. a cache opened without its live
+    /// task); [`get_dataset`] then validates against the stream head.
+    fn output_features(&self) -> Vec<OutputFeature>;
+
+    /// Eval metrics associated with this provider's task(s).
+    fn metrics(&self) -> Vec<Metric> {
+        Vec::new()
+    }
+
+    /// One pass over `split` for this shard, seeded.
+    fn dataset(&self, split: &str, shard: ShardInfo, seed: u64) -> anyhow::Result<Dataset>;
+
+    /// Fast path for providers with native seek/repeat (the deterministic
+    /// cache reader): build the split stream already positioned `start`
+    /// examples in, optionally repeating over epochs. `Ok(None)` means
+    /// "no native support" and [`get_dataset`] applies the generic
+    /// fallback (factory-based repeat + replay-to-start).
+    fn dataset_native(
+        &self,
+        _split: &str,
+        _shard: ShardInfo,
+        _seed: u64,
+        _start: usize,
+        _repeat: bool,
+    ) -> anyhow::Result<Option<Dataset>> {
+        Ok(None)
+    }
+
+    /// Rebuild the raw split stream and reposition it to a previously
+    /// captured [`PipelineState`] (state-aware resume).
+    fn dataset_resumed(
+        &self,
+        split: &str,
+        shard: ShardInfo,
+        seed: u64,
+        state: &PipelineState,
+    ) -> anyhow::Result<Dataset> {
+        let mut ds = self.dataset(split, shard, seed)?;
+        ds.restore(state)?;
+        Ok(ds)
+    }
+
+    /// Advisory example count for `split` (None if unknown).
+    fn num_input_examples(&self, _split: &str) -> Option<usize> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Provider impls: Task, Mixture
+// ---------------------------------------------------------------------------
+
+impl DatasetProvider for Task {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn splits(&self) -> Vec<String> {
+        let mut out = vec!["train".to_string()];
+        out.extend(self.split_sources.keys().filter(|k| k.as_str() != "train").cloned());
+        out
+    }
+
+    fn output_features(&self) -> Vec<OutputFeature> {
+        self.output_features.clone()
+    }
+
+    fn metrics(&self) -> Vec<Metric> {
+        self.metrics.clone()
+    }
+
+    fn dataset(&self, split: &str, shard: ShardInfo, seed: u64) -> anyhow::Result<Dataset> {
+        self.dataset_split(split, seed, shard.index, shard.num_shards)
+    }
+
+    fn num_input_examples(&self, split: &str) -> Option<usize> {
+        self.source_for(split).ok()?.num_input_examples()
+    }
+}
+
+impl DatasetProvider for Mixture {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Splits every member task can serve (order of the first task).
+    fn splits(&self) -> Vec<String> {
+        let mut out = DatasetProvider::splits(self.tasks[0].0.as_ref());
+        out.retain(|s| {
+            self.tasks.iter().all(|(t, _)| t.source_for(s).is_ok())
+        });
+        out
+    }
+
+    /// seqio requires member tasks to share an output-feature schema; the
+    /// first task's declaration speaks for the mixture.
+    fn output_features(&self) -> Vec<OutputFeature> {
+        self.tasks[0].0.output_features.clone()
+    }
+
+    fn metrics(&self) -> Vec<Metric> {
+        self.tasks[0].0.metrics.clone()
+    }
+
+    fn dataset(&self, split: &str, shard: ShardInfo, seed: u64) -> anyhow::Result<Dataset> {
+        self.dataset_split(split, seed, shard.index, shard.num_shards)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CachedTask: an offline deterministic cache as a provider (§3.2)
+// ---------------------------------------------------------------------------
+
+/// A [`DeterministicPipeline`] cache directory wrapped as a provider, so
+/// offline-preprocessed data is interchangeable with its live task behind
+/// [`get_dataset`]. Examples arrive in global index order and carry the
+/// `_index` audit feature (stripped before feature conversion).
+pub struct CachedTask {
+    name: String,
+    pipeline: DeterministicPipeline,
+    output_features: Vec<OutputFeature>,
+    metrics: Vec<Metric>,
+}
+
+impl CachedTask {
+    /// Open a cache directory. `live` supplies the feature/metric
+    /// declarations (a cache stores only examples); pass `None` for raw
+    /// access — [`get_dataset`] then validates features against the
+    /// stream head instead of the declaration.
+    pub fn open(dir: impl AsRef<Path>, live: Option<&Task>) -> anyhow::Result<CachedTask> {
+        let dir = dir.as_ref();
+        let pipeline = DeterministicPipeline::open(dir)?;
+        let name = if let Some(t) = live {
+            anyhow::ensure!(
+                pipeline.meta.task.is_empty() || pipeline.meta.task == t.name,
+                "cache at {} was built from task '{}', not '{}'",
+                dir.display(),
+                pipeline.meta.task,
+                t.name
+            );
+            t.name.clone()
+        } else if !pipeline.meta.task.is_empty() {
+            pipeline.meta.task.clone()
+        } else {
+            dir.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default()
+        };
+        Ok(CachedTask {
+            name,
+            pipeline,
+            output_features: live.map(|t| t.output_features.clone()).unwrap_or_default(),
+            metrics: live.map(|t| t.metrics.clone()).unwrap_or_default(),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.pipeline.dir
+    }
+
+    pub fn num_examples(&self) -> usize {
+        self.pipeline.meta.num_examples
+    }
+
+    /// The preprocessing/shuffle seed the cache was built with — the seed
+    /// that pins this provider's data (runtime seeds are ignored).
+    pub fn build_seed(&self) -> u64 {
+        self.pipeline.meta.seed
+    }
+}
+
+impl DatasetProvider for CachedTask {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn output_features(&self) -> Vec<OutputFeature> {
+        self.output_features.clone()
+    }
+
+    fn metrics(&self) -> Vec<Metric> {
+        self.metrics.clone()
+    }
+
+    fn dataset(&self, split: &str, shard: ShardInfo, seed: u64) -> anyhow::Result<Dataset> {
+        Ok(self
+            .dataset_native(split, shard, seed, 0, false)?
+            .expect("CachedTask always reads natively"))
+    }
+
+    /// Native O(1) seek through the sidecar record indices — the §3.2
+    /// Recoverability property, preserved through the provider API.
+    ///
+    /// The runtime seed is ignored by contract: a cache pins its
+    /// preprocessing/shuffle seed at build time (`cache_meta.json`), so
+    /// live/cached byte-identity holds when the caller's seed matches the
+    /// cache's build seed.
+    fn dataset_native(
+        &self,
+        split: &str,
+        shard: ShardInfo,
+        _seed: u64,
+        start: usize,
+        repeat: bool,
+    ) -> anyhow::Result<Option<Dataset>> {
+        anyhow::ensure!(
+            split == "train",
+            "cached task '{}' holds a single 'train' split (got '{split}'); \
+             cache each split separately",
+            self.name
+        );
+        anyhow::ensure!(
+            self.pipeline.meta.num_shards % shard.num_shards == 0,
+            "cache '{}' has {} files, not divisible by {} shards (re-cache with a \
+             shard count that is a multiple of every host count)",
+            self.name,
+            self.pipeline.meta.num_shards,
+            shard.num_shards
+        );
+        Ok(Some(self.pipeline.try_host_stream(shard.index, shard.num_shards, start, repeat)?))
+    }
+
+    fn num_input_examples(&self, _split: &str) -> Option<usize> {
+        Some(self.pipeline.meta.num_examples)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unified registry (tasks + mixtures + cached providers, one namespace)
+// ---------------------------------------------------------------------------
+
+/// One entry of the unified registry namespace.
+#[derive(Clone)]
+pub enum RegistryEntry {
+    Task(Arc<Task>),
+    Mixture(Arc<Mixture>),
+    Cached(Arc<CachedTask>),
+    /// Any other provider implementation.
+    Provider(Arc<dyn DatasetProvider>),
+}
+
+impl RegistryEntry {
+    pub fn provider(&self) -> Arc<dyn DatasetProvider> {
+        match self {
+            RegistryEntry::Task(t) => t.clone(),
+            RegistryEntry::Mixture(m) => m.clone(),
+            RegistryEntry::Cached(c) => c.clone(),
+            RegistryEntry::Provider(p) => p.clone(),
+        }
+    }
+
+    pub fn as_task(&self) -> Option<Arc<Task>> {
+        match self {
+            RegistryEntry::Task(t) => Some(t.clone()),
+            _ => None,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RegistryEntry::Task(_) => "task",
+            RegistryEntry::Mixture(_) => "mixture",
+            RegistryEntry::Cached(_) => "cached",
+            RegistryEntry::Provider(_) => "provider",
+        }
+    }
+
+    pub fn name(&self) -> String {
+        self.provider().name().to_string()
+    }
+}
+
+static REGISTRY: Lazy<Mutex<BTreeMap<String, RegistryEntry>>> =
+    Lazy::new(|| Mutex::new(BTreeMap::new()));
+
+/// The global provider registry: tasks and mixtures share one namespace,
+/// and duplicate registration is an error (seqio's ValueError), so a name
+/// can never silently change meaning.
+pub struct ProviderRegistry;
+
+impl ProviderRegistry {
+    pub fn add(entry: RegistryEntry) -> anyhow::Result<()> {
+        let name = entry.name();
+        anyhow::ensure!(!name.is_empty(), "cannot register a provider with an empty name");
+        let mut reg = REGISTRY.lock().unwrap();
+        anyhow::ensure!(
+            !reg.contains_key(&name),
+            "a task or mixture named '{name}' is already registered \
+             (duplicate registration is an error; ProviderRegistry::remove it first)"
+        );
+        reg.insert(name, entry);
+        Ok(())
+    }
+
+    pub fn get(name: &str) -> Option<RegistryEntry> {
+        REGISTRY.lock().unwrap().get(name).cloned()
+    }
+
+    /// Resolve a name to its provider, with a did-you-mean error.
+    pub fn provider(name: &str) -> anyhow::Result<Arc<dyn DatasetProvider>> {
+        Self::get(name).map(|e| e.provider()).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no task or mixture named '{name}' in the registry (registered: [{}])",
+                Self::names().join(", ")
+            )
+        })
+    }
+
+    pub fn names() -> Vec<String> {
+        REGISTRY.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn entries() -> Vec<(String, RegistryEntry)> {
+        REGISTRY.lock().unwrap().iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+    }
+
+    pub fn remove(name: &str) {
+        REGISTRY.lock().unwrap().remove(name);
+    }
+
+    pub fn reset() {
+        REGISTRY.lock().unwrap().clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// get_dataset
+// ---------------------------------------------------------------------------
+
+/// Either a registry name or a provider instance — both sides of
+/// `get_dataset(mixture_or_task_name, ...)`.
+pub enum ProviderRef {
+    Name(String),
+    Provider(Arc<dyn DatasetProvider>),
+}
+
+impl ProviderRef {
+    pub fn resolve(self) -> anyhow::Result<Arc<dyn DatasetProvider>> {
+        match self {
+            ProviderRef::Name(n) => ProviderRegistry::provider(&n),
+            ProviderRef::Provider(p) => Ok(p),
+        }
+    }
+}
+
+impl From<&str> for ProviderRef {
+    fn from(s: &str) -> ProviderRef {
+        ProviderRef::Name(s.to_string())
+    }
+}
+
+impl From<String> for ProviderRef {
+    fn from(s: String) -> ProviderRef {
+        ProviderRef::Name(s)
+    }
+}
+
+impl From<Arc<dyn DatasetProvider>> for ProviderRef {
+    fn from(p: Arc<dyn DatasetProvider>) -> ProviderRef {
+        ProviderRef::Provider(p)
+    }
+}
+
+impl From<Arc<Task>> for ProviderRef {
+    fn from(t: Arc<Task>) -> ProviderRef {
+        ProviderRef::Provider(t)
+    }
+}
+
+impl From<Arc<Mixture>> for ProviderRef {
+    fn from(m: Arc<Mixture>) -> ProviderRef {
+        ProviderRef::Provider(m)
+    }
+}
+
+impl From<Arc<CachedTask>> for ProviderRef {
+    fn from(c: Arc<CachedTask>) -> ProviderRef {
+        ProviderRef::Provider(c)
+    }
+}
+
+/// Options of one [`get_dataset`] call (seqio's get_dataset signature).
+#[derive(Clone)]
+pub struct GetDatasetOptions {
+    /// Split to read ("train", "validation", ...).
+    pub split: String,
+    /// Requested length per *task* feature, e.g. {"inputs": 64,
+    /// "targets": 64}. Required for every feature the converter consumes.
+    pub task_feature_lengths: FeatureLengths,
+    /// Feature-converter registry name ("enc_dec", "lm", "prefix_lm") or
+    /// a model-arch alias ("encdec", "decoder"). None = raw task features.
+    pub converter: Option<String>,
+    /// Which shard of the split this reader owns.
+    pub shard: ShardInfo,
+    /// Pipeline seed (preprocessing randomness + mixture sampling).
+    pub seed: u64,
+    /// Coarse positional start: skip this many (per-shard) examples.
+    /// Providers with native seek (caches) honor it in O(1); others replay.
+    /// Ignored when `resume` is set — the exact state wins.
+    pub start: usize,
+    /// Repeat over epochs (training streams).
+    pub repeat: bool,
+    /// Exact resume: a [`PipelineState`] captured from the stream of a
+    /// previous, identically-configured get_dataset call.
+    pub resume: Option<PipelineState>,
+    /// Validate the stream head against the declared output features (and
+    /// the converter's required task features) before returning.
+    pub validate: bool,
+}
+
+impl Default for GetDatasetOptions {
+    fn default() -> GetDatasetOptions {
+        GetDatasetOptions {
+            split: "train".to_string(),
+            task_feature_lengths: FeatureLengths::new(),
+            converter: None,
+            shard: ShardInfo::whole(),
+            seed: 0,
+            start: 0,
+            repeat: false,
+            resume: None,
+            validate: true,
+        }
+    }
+}
+
+/// THE entry point (paper §3.1): resolve a task/mixture/cache by name (or
+/// take a provider directly), read the requested split shard, apply the
+/// right feature converter, and return a model-ready, checkpoint-resumable
+/// stream. Tasks, mixtures and §3.2 caches are interchangeable here.
+pub fn get_dataset(
+    provider: impl Into<ProviderRef>,
+    opts: &GetDatasetOptions,
+) -> anyhow::Result<Dataset> {
+    let provider = provider.into().resolve()?;
+
+    // -- split + converter validation ------------------------------------
+    let splits = provider.splits();
+    anyhow::ensure!(
+        splits.iter().any(|s| s == &opts.split),
+        "provider '{}' has no split '{}' (available: [{}])",
+        provider.name(),
+        opts.split,
+        splits.join(", ")
+    );
+    let conv: Option<Arc<dyn FeatureConverter>> = match &opts.converter {
+        Some(name) => Some(resolve_converter(name)?),
+        None => None,
+    };
+    let features = provider.output_features();
+    if let Some(c) = &conv {
+        for feat in c.task_features() {
+            if !features.is_empty() {
+                anyhow::ensure!(
+                    features.iter().any(|f| f.name == *feat),
+                    "task '{}' does not declare feature '{feat}' required by \
+                     converter '{}' (declared: [{}])",
+                    provider.name(),
+                    c.name(),
+                    features.iter().map(|f| f.name.as_str()).collect::<Vec<_>>().join(", ")
+                );
+            }
+            anyhow::ensure!(
+                opts.task_feature_lengths.contains_key(*feat),
+                "no task_feature_length given for '{feat}' (converter '{}' converts [{}])",
+                c.name(),
+                c.task_features().join(", ")
+            );
+        }
+    }
+
+    // -- stream-head validation on a fresh probe --------------------------
+    // (leaves the returned stream's position untouched)
+    if opts.validate {
+        let mut probe = provider.dataset(&opts.split, opts.shard, opts.seed)?;
+        if let Some(head) = probe.next() {
+            for f in features.iter().filter(|f| f.required) {
+                anyhow::ensure!(
+                    head.contains_key(&f.name),
+                    "task '{}', split '{}': stream head is missing required feature '{}'",
+                    provider.name(),
+                    opts.split,
+                    f.name
+                );
+            }
+            if let Some(c) = &conv {
+                for feat in c.task_features() {
+                    anyhow::ensure!(
+                        head.contains_key(*feat),
+                        "task '{}', split '{}': stream head is missing task feature \
+                         '{feat}' required by converter '{}'",
+                        provider.name(),
+                        opts.split,
+                        c.name()
+                    );
+                }
+            }
+        }
+    }
+
+    // -- build the positioned raw stream ----------------------------------
+    let start = if opts.resume.is_some() { 0 } else { opts.start };
+    let native =
+        provider.dataset_native(&opts.split, opts.shard, opts.seed, start, opts.repeat)?;
+    let raw = match native {
+        Some(ds) => ds,
+        None => {
+            let mut ds = if opts.repeat {
+                // Surface construction errors eagerly (the factory closure
+                // below can only panic) — unless the validation probe above
+                // already built this pipeline once and proved it constructs.
+                if !opts.validate {
+                    drop(provider.dataset(&opts.split, opts.shard, opts.seed)?);
+                }
+                let (p, split, shard, seed) =
+                    (provider.clone(), opts.split.clone(), opts.shard, opts.seed);
+                Arc::new(DatasetFactory::new(move || {
+                    p.dataset(&split, shard, seed).expect("re-instantiate epoch stream")
+                }))
+                .repeat()
+            } else {
+                provider.dataset(&opts.split, opts.shard, opts.seed)?
+            };
+            for _ in 0..start {
+                if ds.next().is_none() {
+                    break;
+                }
+            }
+            ds
+        }
+    };
+
+    // -- feature conversion ------------------------------------------------
+    let mut ds = match conv {
+        Some(c) => {
+            let lens = opts.task_feature_lengths.clone();
+            // Bookkeeping features (the cache reader's `_index`) are not
+            // model features; strip before converting.
+            raw.map(strip_index).map(move |ex| c.convert_example(&ex, &lens))
+        }
+        None => raw,
+    };
+
+    // -- exact resume -------------------------------------------------------
+    if let Some(state) = &opts.resume {
+        ds.restore(state).map_err(|e| {
+            anyhow::anyhow!(
+                "restoring '{}' split '{}' from checkpointed pipeline state: {e}",
+                provider.name(),
+                opts.split
+            )
+        })?;
+    }
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seqio::source::SyntheticTextSource;
+    use crate::seqio::vocab::{ByteVocabulary, Vocabulary};
+
+    fn toy_task(name: &str) -> Arc<Task> {
+        let vocab: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(16));
+        Task::builder(name)
+            .source(Arc::new(SyntheticTextSource::new(3, 12)))
+            .split_source("validation", Arc::new(SyntheticTextSource::new(103, 6)))
+            .preprocessor(Arc::new(crate::seqio::preprocessors::Tokenize::new(
+                vocab.clone(),
+                &[("text", "targets")],
+            )))
+            .output_feature("targets", vocab, true)
+            .build()
+    }
+
+    #[test]
+    fn provider_trait_exposes_splits_and_features() {
+        let task = toy_task("prov_unit_splits");
+        let p: Arc<dyn DatasetProvider> = task;
+        assert_eq!(p.splits(), vec!["train".to_string(), "validation".to_string()]);
+        assert_eq!(p.output_features().len(), 1);
+        assert_eq!(p.num_input_examples("train"), Some(12));
+        assert_eq!(p.num_input_examples("validation"), Some(6));
+        let train = p.dataset("train", ShardInfo::whole(), 0).unwrap().collect_vec();
+        let val = p.dataset("validation", ShardInfo::whole(), 0).unwrap().collect_vec();
+        assert_eq!(train.len(), 12);
+        assert_eq!(val.len(), 6);
+        assert!(p.dataset("test", ShardInfo::whole(), 0).is_err());
+    }
+
+    #[test]
+    fn get_dataset_validates_split_and_lengths() {
+        let task = toy_task("prov_unit_validate");
+        let missing_split = GetDatasetOptions { split: "test".into(), ..Default::default() };
+        assert!(get_dataset(task.clone(), &missing_split).is_err());
+        // converter without lengths for its features errors up front
+        let no_lengths = GetDatasetOptions {
+            converter: Some("lm".into()),
+            ..Default::default()
+        };
+        let err =
+            get_dataset(task.clone(), &no_lengths).err().expect("must error").to_string();
+        assert!(err.contains("task_feature_length"), "{err}");
+        // unknown converter name errors with the registry listing
+        let bad_conv = GetDatasetOptions {
+            converter: Some("nope".into()),
+            ..Default::default()
+        };
+        assert!(get_dataset(task, &bad_conv).is_err());
+    }
+
+    #[test]
+    fn get_dataset_repeat_and_start() {
+        let task = toy_task("prov_unit_repeat");
+        let one_pass =
+            get_dataset(task.clone(), &GetDatasetOptions::default()).unwrap().collect_vec();
+        assert_eq!(one_pass.len(), 12);
+        // repeat wraps epochs deterministically
+        let repeated: Vec<_> = (&mut get_dataset(
+            task.clone(),
+            &GetDatasetOptions { repeat: true, ..Default::default() },
+        )
+        .unwrap())
+            .take(30)
+            .collect();
+        assert_eq!(&repeated[..12], one_pass.as_slice());
+        assert_eq!(&repeated[12..24], one_pass.as_slice());
+        // coarse positional start replays exactly
+        let from_5 = get_dataset(
+            task,
+            &GetDatasetOptions { start: 5, ..Default::default() },
+        )
+        .unwrap()
+        .collect_vec();
+        assert_eq!(from_5.as_slice(), &one_pass[5..]);
+    }
+
+    #[test]
+    fn registry_name_resolution_and_errors() {
+        let task = toy_task("prov_unit_registry");
+        ProviderRegistry::add(RegistryEntry::Task(task)).unwrap();
+        let got =
+            get_dataset("prov_unit_registry", &GetDatasetOptions::default()).unwrap().collect_vec();
+        assert_eq!(got.len(), 12);
+        let err = get_dataset("prov_unit_missing", &GetDatasetOptions::default())
+            .err()
+            .expect("must error")
+            .to_string();
+        assert!(err.contains("prov_unit_missing"), "{err}");
+        ProviderRegistry::remove("prov_unit_registry");
+    }
+}

@@ -47,18 +47,81 @@ impl TextLineSource {
 
 impl DataSource for TextLineSource {
     fn dataset(&self, shard_id: usize, num_shards: usize) -> Dataset {
-        // Shard by file when possible, else by line round-robin.
-        let paths = self.paths.clone();
-        let lines = paths.into_iter().flat_map(|p| {
-            let text = std::fs::read_to_string(&p).unwrap_or_default();
-            text.lines().map(|l| l.to_string()).collect::<Vec<_>>()
-        });
-        Dataset::new(
-            lines
-                .enumerate()
-                .filter(move |(i, _)| i % num_shards == shard_id)
-                .map(|(_, l)| text_example(&[("text", &l)])),
-        )
+        // Global line enumeration, round-robin sharded by line index.
+        // Native op: its checkpoint state is three cursors (file, line,
+        // global), so restore seeks within one file instead of replaying
+        // the whole stream.
+        Dataset::from_op(TextLineOp {
+            paths: self.paths.clone(),
+            shard_id,
+            num_shards: num_shards.max(1),
+            file_idx: 0,
+            line_idx: 0,
+            global_idx: 0,
+            lines: None,
+        })
+    }
+}
+
+/// Native op over newline-delimited text files. `lines` is a lazy cache
+/// of the current file; it is never part of the state.
+struct TextLineOp {
+    paths: Vec<PathBuf>,
+    shard_id: usize,
+    num_shards: usize,
+    /// Index of the file the cursor is in.
+    file_idx: usize,
+    /// Next line within that file.
+    line_idx: usize,
+    /// Global line counter across files (for round-robin sharding).
+    global_idx: usize,
+    lines: Option<Vec<String>>,
+}
+
+impl PipelineOp for TextLineOp {
+    fn next(&mut self) -> Option<Example> {
+        loop {
+            if self.file_idx >= self.paths.len() {
+                return None;
+            }
+            if self.lines.is_none() {
+                let text =
+                    std::fs::read_to_string(&self.paths[self.file_idx]).unwrap_or_default();
+                self.lines = Some(text.lines().map(|l| l.to_string()).collect());
+            }
+            let lines = self.lines.as_ref().unwrap();
+            if self.line_idx >= lines.len() {
+                self.file_idx += 1;
+                self.line_idx = 0;
+                self.lines = None;
+                continue;
+            }
+            let line = lines[self.line_idx].clone();
+            let g = self.global_idx;
+            self.line_idx += 1;
+            self.global_idx += 1;
+            if g % self.num_shards == self.shard_id {
+                return Some(text_example(&[("text", &line)]));
+            }
+        }
+    }
+
+    fn state(&mut self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("text_lines")),
+            ("file", Json::num(self.file_idx as f64)),
+            ("line", Json::num(self.line_idx as f64)),
+            ("global", Json::num(self.global_idx as f64)),
+        ])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "text_lines")?;
+        self.file_idx = field_usize(s, "file")?;
+        self.line_idx = field_usize(s, "line")?;
+        self.global_idx = field_usize(s, "global")?;
+        self.lines = None; // reloaded lazily at the restored cursor
+        Ok(())
     }
 }
 
@@ -99,17 +162,9 @@ impl DataSource for RecordSource {
             .filter(|(i, _)| i % num_shards == shard_id)
             .map(|(_, p)| p.clone())
             .collect();
-        Dataset::new(mine.into_iter().flat_map(|p| {
-            let mut out = Vec::new();
-            if let Ok(mut r) = RecordReader::open(&p) {
-                while let Some(Ok(payload)) = r.read_next() {
-                    if let Ok(ex) = deserialize_example(&payload) {
-                        out.push(ex);
-                    }
-                }
-            }
-            out.into_iter()
-        }))
+        // Native op: state is a (file, entry) cursor and restore seeks via
+        // the sidecar record index — O(1), no replay or buffered examples.
+        Dataset::from_op(RecordSourceOp { paths: mine, file_idx: 0, entry_idx: 0, reader: None })
     }
 
     fn num_input_examples(&self) -> Option<usize> {
@@ -118,6 +173,78 @@ impl DataSource for RecordSource {
             total += RecordReader::open(p).ok()?.len();
         }
         Some(total)
+    }
+}
+
+/// Native op over this shard's record files. Unreadable files and
+/// undecodable payloads are skipped, and a read error abandons the rest of
+/// the file (the behaviour of the previous opaque-iterator reader).
+struct RecordSourceOp {
+    paths: Vec<PathBuf>,
+    file_idx: usize,
+    /// Next entry within the current file.
+    entry_idx: usize,
+    /// Open reader for `paths[file_idx]`, positioned at `entry_idx`.
+    /// Lazily (re)opened; never part of the state.
+    reader: Option<RecordReader>,
+}
+
+impl RecordSourceOp {
+    fn advance_file(&mut self) {
+        self.file_idx += 1;
+        self.entry_idx = 0;
+        self.reader = None;
+    }
+}
+
+impl PipelineOp for RecordSourceOp {
+    fn next(&mut self) -> Option<Example> {
+        loop {
+            if self.file_idx >= self.paths.len() {
+                return None;
+            }
+            if self.reader.is_none() {
+                match RecordReader::open(&self.paths[self.file_idx]) {
+                    Ok(mut r) => {
+                        if r.seek_to(self.entry_idx).is_err() {
+                            self.advance_file();
+                            continue;
+                        }
+                        self.reader = Some(r);
+                    }
+                    Err(_) => {
+                        self.advance_file();
+                        continue;
+                    }
+                }
+            }
+            match self.reader.as_mut().unwrap().read_next() {
+                Some(Ok(payload)) => {
+                    self.entry_idx += 1;
+                    match deserialize_example(&payload) {
+                        Ok(ex) => return Some(ex),
+                        Err(_) => continue, // skip undecodable payloads
+                    }
+                }
+                Some(Err(_)) | None => self.advance_file(),
+            }
+        }
+    }
+
+    fn state(&mut self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("record_source")),
+            ("file", Json::num(self.file_idx as f64)),
+            ("entry", Json::num(self.entry_idx as f64)),
+        ])
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        check_tag(s, "record_source")?;
+        self.file_idx = field_usize(s, "file")?;
+        self.entry_idx = field_usize(s, "entry")?;
+        self.reader = None; // reopened lazily, seeking via the sidecar index
+        Ok(())
     }
 }
 
@@ -359,6 +486,69 @@ mod tests {
         // mismatched pipeline shape still fails loudly
         let mut other = Dataset::from_vec(vec![]);
         assert!(other.restore(&snap).is_err());
+    }
+
+    #[test]
+    fn text_line_state_is_cursor_and_resumes() {
+        let dir = std::env::temp_dir().join(format!("tls_state_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("a.txt");
+        let p2 = dir.join("b.txt");
+        std::fs::write(&p1, "a0\na1\na2\n").unwrap();
+        std::fs::write(&p2, "b0\nb1\nb2\nb3\n").unwrap();
+        let src = TextLineSource::new(vec![p1, p2]);
+        let all = src.dataset(1, 2).collect_vec();
+
+        let mut first = src.dataset(1, 2);
+        let head: Vec<Example> = (&mut first).take(2).collect();
+        let snap = first.state();
+        // cursors only, no buffered lines
+        assert!(snap.to_json_string().len() < 96, "{}", snap.to_json_string());
+        let mut resumed = src.dataset(1, 2);
+        resumed.restore(&snap).unwrap();
+        let mut joined = head;
+        joined.extend(resumed.collect_vec());
+        assert_eq!(joined, all);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn record_source_state_seeks_without_replay() {
+        use crate::seqio::records::RecordWriter;
+        use crate::seqio::serialize_example;
+        let dir = std::env::temp_dir().join(format!("recsrc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for f in 0..3 {
+            let mut w = RecordWriter::create(dir.join(format!("f{f}.rec"))).unwrap();
+            for i in 0..5 {
+                let ex = crate::seqio::ints_example(&[("targets", vec![f * 10 + i])]);
+                w.write(&serialize_example(&ex)).unwrap();
+            }
+            w.finish().unwrap();
+        }
+        let src = RecordSource::from_dir(&dir).unwrap();
+        assert_eq!(src.num_input_examples(), Some(15));
+        let all = src.dataset(0, 1).collect_vec();
+        assert_eq!(all.len(), 15);
+
+        for cut in [0usize, 3, 7, 14] {
+            let mut first = src.dataset(0, 1);
+            let head: Vec<Example> = (&mut first).take(cut).collect();
+            let snap = first.state();
+            // a bare (file, entry) cursor — no buffered examples
+            assert!(snap.to_json_string().len() < 96, "{}", snap.to_json_string());
+            let mut resumed = src.dataset(0, 1);
+            resumed.restore(&snap).unwrap();
+            let mut joined = head;
+            joined.extend(resumed.collect_vec());
+            assert_eq!(joined, all, "cut={cut}");
+        }
+
+        // sharded readers stay disjoint + exhaustive
+        let s0 = src.dataset(0, 2).collect_vec();
+        let s1 = src.dataset(1, 2).collect_vec();
+        assert_eq!(s0.len() + s1.len(), 15);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

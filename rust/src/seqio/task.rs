@@ -1,11 +1,13 @@
-//! Tasks (seqio.Task, Figure 2): a named binding of a data source,
-//! preprocessing steps, output features, and evaluation metrics, plus the
-//! global [`TaskRegistry`].
+//! Tasks (seqio.Task, Figure 2): a named binding of per-split data
+//! sources, preprocessing steps, output features, and evaluation metrics.
+//!
+//! A Task is one kind of [`crate::seqio::provider::DatasetProvider`];
+//! registration goes through the unified
+//! [`crate::seqio::provider::ProviderRegistry`] namespace (shared with
+//! mixtures), for which [`TaskRegistry`] is the task-typed facade.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
-
-use once_cell::sync::Lazy;
+use std::sync::Arc;
 
 use super::dataset::{Dataset, PipelineState};
 use super::evaluation::Metric;
@@ -25,7 +27,11 @@ pub struct OutputFeature {
 /// A seqio Task.
 pub struct Task {
     pub name: String,
+    /// The "train" split's source.
     pub source: Arc<dyn DataSource>,
+    /// Additional named splits ("validation", "test", ...). All splits
+    /// share the task's preprocessor stack.
+    pub split_sources: BTreeMap<String, Arc<dyn DataSource>>,
     pub preprocessors: Vec<Arc<dyn Preprocessor>>,
     pub output_features: Vec<OutputFeature>,
     pub metrics: Vec<Metric>,
@@ -36,23 +42,53 @@ impl Task {
         TaskBuilder {
             name: name.to_string(),
             source: None,
+            split_sources: BTreeMap::new(),
             preprocessors: Vec::new(),
             output_features: Vec::new(),
             metrics: Vec::new(),
         }
     }
 
-    /// Instantiate the preprocessed dataset for one data shard. The
-    /// returned stream is stateful: `Dataset::state()` captures the whole
-    /// op graph (source position, preprocessor buffers) and
+    /// The data source behind `split` ("train" = the main source).
+    pub fn source_for(&self, split: &str) -> anyhow::Result<&Arc<dyn DataSource>> {
+        if split == "train" {
+            return Ok(&self.source);
+        }
+        self.split_sources.get(split).ok_or_else(|| {
+            let mut avail = vec!["train".to_string()];
+            avail.extend(self.split_sources.keys().cloned());
+            anyhow::anyhow!(
+                "task '{}' has no split '{split}' (available: [{}])",
+                self.name,
+                avail.join(", ")
+            )
+        })
+    }
+
+    /// Instantiate the preprocessed "train" stream for one data shard.
+    /// The returned stream is stateful: `Dataset::state()` captures the
+    /// whole op graph (source position, preprocessor buffers) and
     /// [`Task::dataset_resumed`] rebuilds + repositions it.
     pub fn dataset(&self, seed: u64, shard_id: usize, num_shards: usize) -> Dataset {
+        self.dataset_split("train", seed, shard_id, num_shards)
+            .expect("the train split always exists")
+    }
+
+    /// Instantiate the preprocessed stream of any split.
+    pub fn dataset_split(
+        &self,
+        split: &str,
+        seed: u64,
+        shard_id: usize,
+        num_shards: usize,
+    ) -> anyhow::Result<Dataset> {
+        let src = self.source_for(split)?;
         let ctx = PipelineCtx { seed };
-        let mut ds = self.source.dataset(shard_id, num_shards);
+        let mut ds = src.dataset(shard_id, num_shards);
         for p in &self.preprocessors {
             ds = p.apply(ds, &ctx);
         }
-        ds
+        Ok(ds)
     }
 
     /// Rebuild the task stream (same seed/sharding) and reposition it to a
@@ -91,6 +127,7 @@ impl Task {
 pub struct TaskBuilder {
     name: String,
     source: Option<Arc<dyn DataSource>>,
+    split_sources: BTreeMap<String, Arc<dyn DataSource>>,
     preprocessors: Vec<Arc<dyn Preprocessor>>,
     output_features: Vec<OutputFeature>,
     metrics: Vec<Metric>,
@@ -99,6 +136,17 @@ pub struct TaskBuilder {
 impl TaskBuilder {
     pub fn source(mut self, s: Arc<dyn DataSource>) -> Self {
         self.source = Some(s);
+        self
+    }
+
+    /// Attach an additional named split ("validation", "test", ...).
+    /// Naming it "train" replaces the main source.
+    pub fn split_source(mut self, split: &str, s: Arc<dyn DataSource>) -> Self {
+        if split == "train" {
+            self.source = Some(s);
+        } else {
+            self.split_sources.insert(split.to_string(), s);
+        }
         self
     }
 
@@ -131,45 +179,56 @@ impl TaskBuilder {
         Arc::new(Task {
             name: self.name,
             source: self.source.expect("task needs a source"),
+            split_sources: self.split_sources,
             preprocessors: self.preprocessors,
             output_features: self.output_features,
             metrics: self.metrics,
         })
     }
 
-    /// Build and register globally.
-    pub fn register(self) -> Arc<Task> {
+    /// Build and register into the unified provider namespace. Errors on
+    /// a duplicate name (seqio's ValueError).
+    pub fn register(self) -> anyhow::Result<Arc<Task>> {
         let t = self.build();
-        TaskRegistry::add(t.clone());
-        t
+        TaskRegistry::add(t.clone())?;
+        Ok(t)
     }
 }
 
-/// Global task registry (seqio.TaskRegistry).
+/// Task-typed facade over the unified
+/// [`crate::seqio::provider::ProviderRegistry`] (seqio.TaskRegistry):
+/// tasks and mixtures share one namespace, so a name always means one
+/// thing regardless of provider kind.
 pub struct TaskRegistry;
 
-static REGISTRY: Lazy<Mutex<BTreeMap<String, Arc<Task>>>> =
-    Lazy::new(|| Mutex::new(BTreeMap::new()));
-
 impl TaskRegistry {
-    pub fn add(task: Arc<Task>) {
-        REGISTRY.lock().unwrap().insert(task.name.clone(), task);
+    /// Register a task; duplicate names (task OR mixture) are an error.
+    pub fn add(task: Arc<Task>) -> anyhow::Result<()> {
+        use crate::seqio::provider::{ProviderRegistry, RegistryEntry};
+        ProviderRegistry::add(RegistryEntry::Task(task))
     }
 
+    /// Fetch a registered *task* by name (None for mixtures/other kinds).
     pub fn get(name: &str) -> Option<Arc<Task>> {
-        REGISTRY.lock().unwrap().get(name).cloned()
+        crate::seqio::provider::ProviderRegistry::get(name).and_then(|e| e.as_task())
     }
 
+    /// Names of registered tasks (mixtures excluded).
     pub fn names() -> Vec<String> {
-        REGISTRY.lock().unwrap().keys().cloned().collect()
+        crate::seqio::provider::ProviderRegistry::entries()
+            .into_iter()
+            .filter(|(_, e)| e.as_task().is_some())
+            .map(|(n, _)| n)
+            .collect()
     }
 
     pub fn remove(name: &str) {
-        REGISTRY.lock().unwrap().remove(name);
+        crate::seqio::provider::ProviderRegistry::remove(name);
     }
 
+    /// Clears the whole unified namespace (tasks AND mixtures).
     pub fn reset() {
-        REGISTRY.lock().unwrap().clear();
+        crate::seqio::provider::ProviderRegistry::reset();
     }
 }
 
@@ -200,14 +259,34 @@ mod tests {
     #[test]
     fn registry_add_get() {
         let vocab: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(4));
-        Task::builder("test_task_registry")
+        let t = Task::builder("test_task_registry")
             .source(Arc::new(SyntheticTextSource::new(2, 3)))
             .output_feature("targets", vocab, true)
-            .register();
+            .register()
+            .unwrap();
         assert!(TaskRegistry::get("test_task_registry").is_some());
         assert!(TaskRegistry::names().contains(&"test_task_registry".to_string()));
+        // duplicate registration is an error, not a silent overwrite
+        assert!(TaskRegistry::add(t).is_err());
         TaskRegistry::remove("test_task_registry");
         assert!(TaskRegistry::get("test_task_registry").is_none());
+    }
+
+    #[test]
+    fn split_sources_are_isolated() {
+        let vocab: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(16));
+        let task = Task::builder("test_task_splits")
+            .source(Arc::new(SyntheticTextSource::new(1, 6)))
+            .split_source("validation", Arc::new(SyntheticTextSource::new(2, 3)))
+            .preprocessor(Arc::new(Tokenize::new(vocab.clone(), &[("text", "targets")])))
+            .output_feature("targets", vocab, true)
+            .build();
+        let train = task.dataset_split("train", 0, 0, 1).unwrap().collect_vec();
+        let val = task.dataset_split("validation", 0, 0, 1).unwrap().collect_vec();
+        assert_eq!(train.len(), 6);
+        assert_eq!(val.len(), 3);
+        assert!(task.dataset_split("test", 0, 0, 1).is_err());
+        assert!(task.source_for("validation").is_ok());
     }
 
     #[test]

@@ -88,18 +88,21 @@ impl Infeed {
         prefetch: usize,
         make_stream: impl Fn(usize) -> Dataset + Send + Sync,
     ) -> Infeed {
-        Self::spawn_resumable(m, num_hosts, prefetch, make_stream, None)
+        Self::spawn_resumable(m, num_hosts, prefetch, move |h| Ok(make_stream(h)), None)
             .expect("infeed spawn without resume state cannot fail")
     }
 
-    /// Like [`Infeed::spawn`], but optionally repositions every host's
-    /// freshly built stream to a checkpointed per-host [`PipelineState`]
-    /// before production starts (the trainer's exact-resume path).
+    /// Like [`Infeed::spawn`], but the stream builder is fallible (the
+    /// [`crate::seqio::get_dataset`] path: registry resolution, split and
+    /// feature validation can all error), and every host's freshly built
+    /// stream is optionally repositioned to a checkpointed per-host
+    /// [`PipelineState`] before production starts (the trainer's
+    /// exact-resume path).
     pub fn spawn_resumable(
         m: &ModelManifest,
         num_hosts: usize,
         prefetch: usize,
-        make_stream: impl Fn(usize) -> Dataset + Send + Sync,
+        make_stream: impl Fn(usize) -> anyhow::Result<Dataset> + Send + Sync,
         resume: Option<&[PipelineState]>,
     ) -> anyhow::Result<Infeed> {
         if let Some(states) = resume {
@@ -114,7 +117,8 @@ impl Infeed {
         let batch = m.batch();
         for host in 0..num_hosts {
             let (tx, rx) = Pipe::bounded(prefetch.max(1));
-            let mut stream = make_stream(host);
+            let mut stream = make_stream(host)
+                .map_err(|e| anyhow::anyhow!("building host {host} stream: {e}"))?;
             if let Some(states) = resume {
                 stream
                     .restore(&states[host])

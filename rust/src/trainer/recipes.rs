@@ -1,5 +1,19 @@
 //! Recipes: canonical task/pipeline constructions shared by the examples,
 //! the CLI launcher, and the benches — the t5x "configs" directory as code.
+//!
+//! Since the [`crate::seqio::get_dataset`] redesign this module owns two
+//! things:
+//!
+//! * the **default registry** ([`register_defaults`]): the named tasks and
+//!   mixtures (`c4_lm`, `c4_span`, `reverse_words`, `c4_span_rev_mix`)
+//!   that `t5x train --task <name>` / gin `train.task = '<name>'` resolve;
+//! * the **provider → infeed bridge** ([`provider_infeed`]): any
+//!   [`DatasetProvider`] (live task, mixture, or [`CachedTask`]) becomes a
+//!   model-ready multi-host [`Infeed`] through one `get_dataset` call per
+//!   host. The feature converter comes from the converter registry keyed
+//!   by model arch — the per-arch `if arch == "encdec"` dispatch that used
+//!   to be copy-pasted per call site lives only in
+//!   [`crate::seqio::feature_converters::converter_for_arch`] now.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -7,11 +21,14 @@ use std::sync::Arc;
 use crate::runtime::artifacts::ModelManifest;
 use crate::seqio::cache::{cache_task, CacheConfig, CacheMeta};
 use crate::seqio::dataset::{Dataset, PipelineState};
-use crate::seqio::deterministic::{strip_index, DeterministicPipeline};
 use crate::seqio::feature_converters::{
-    lengths, EncDecConverter, FeatureConverter, LmConverter,
+    converter_for_arch, default_task_lengths, lengths, EncDecConverter, FeatureConverter,
 };
 use crate::seqio::preprocessors::{AppendEos, ChunkTokens, SpanCorruption, Tokenize};
+use crate::seqio::provider::{
+    get_dataset, CachedTask, DatasetProvider, GetDatasetOptions, ShardInfo,
+};
+use crate::seqio::mixture::Mixture;
 use crate::seqio::source::SyntheticTextSource;
 use crate::seqio::task::Task;
 use crate::seqio::vocab::{ByteVocabulary, Vocabulary};
@@ -22,12 +39,35 @@ pub fn default_vocab() -> Arc<dyn Vocabulary> {
     Arc::new(ByteVocabulary::new(16))
 }
 
+/// Sequence length the default registry tasks chunk to. Feature converters
+/// pad/trim per model, so models with other seq_lens still consume them.
+pub const DEFAULT_SEQ_LEN: usize = 64;
+
+/// Held-out validation corpus derived from a task's train seed: same
+/// document shape, distinct seed (`^ "VAL"`), a quarter of the train
+/// docs (floor 16).
+fn validation_source(
+    seed: u64,
+    train_docs: usize,
+    sentences_per_doc: usize,
+    words_per_sentence: usize,
+) -> Arc<SyntheticTextSource> {
+    Arc::new(SyntheticTextSource::with_shape(
+        seed ^ 0x56414C, // "VAL"
+        (train_docs / 4).max(16),
+        sentences_per_doc,
+        words_per_sentence,
+    ))
+}
+
 /// Causal-LM pretraining task over the synthetic corpus: tokenize ->
-/// chunk(seq_len-1) -> append EOS. (The C4-substitute pipeline.)
+/// chunk(seq_len-1) -> append EOS. (The C4-substitute pipeline.) Ships a
+/// held-out "validation" split alongside "train".
 pub fn lm_task(name: &str, docs: usize, seq_len: usize, seed: u64) -> Arc<Task> {
     let vocab = default_vocab();
     Task::builder(name)
         .source(Arc::new(SyntheticTextSource::new(seed, docs)))
+        .split_source("validation", validation_source(seed, docs, 5, 12))
         .preprocessor(Arc::new(Tokenize::new(vocab.clone(), &[("text", "targets")])))
         .preprocessor(Arc::new(ChunkTokens::new("targets", seq_len - 1)))
         .preprocessor(Arc::new(AppendEos::new(&["targets"])))
@@ -40,6 +80,7 @@ pub fn span_corruption_task(name: &str, docs: usize, seq_len: usize, seed: u64) 
     let vocab = default_vocab();
     Task::builder(name)
         .source(Arc::new(SyntheticTextSource::new(seed, docs)))
+        .split_source("validation", validation_source(seed, docs, 5, 12))
         .preprocessor(Arc::new(Tokenize::new(vocab.clone(), &[("text", "targets")])))
         .preprocessor(Arc::new(ChunkTokens::new("targets", seq_len)))
         .preprocessor(Arc::new(SpanCorruption::new(vocab.clone())))
@@ -57,6 +98,7 @@ pub fn reverse_words_task(name: &str, examples: usize, seed: u64) -> Arc<Task> {
     let src = SyntheticTextSource::with_shape(seed, examples, 1, 5);
     Task::builder(name)
         .source(Arc::new(src))
+        .split_source("validation", validation_source(seed, examples, 1, 5))
         .preprocessor(Arc::new(MapReverse))
         .preprocessor(Arc::new(Tokenize::new(
             vocab.clone(),
@@ -69,6 +111,57 @@ pub fn reverse_words_task(name: &str, examples: usize, seed: u64) -> Arc<Task> {
         .metric(crate::seqio::evaluation::Metric::TokenAccuracy)
         .metric(crate::seqio::evaluation::Metric::Bleu)
         .build()
+}
+
+/// Populate the unified provider registry with the canonical named tasks
+/// and mixtures every CLI/gin scenario resolves (`t5x list-tasks` prints
+/// them). Idempotent — names that already exist (user-registered or from
+/// a previous call) are left untouched, and it re-registers after a
+/// registry reset; call before any by-name lookup.
+pub fn register_defaults() {
+    use crate::seqio::provider::ProviderRegistry;
+    use crate::seqio::task::TaskRegistry;
+    if ProviderRegistry::get("c4_lm").is_none() {
+        let _ = TaskRegistry::add(lm_task("c4_lm", 512, DEFAULT_SEQ_LEN, 42));
+    }
+    if ProviderRegistry::get("c4_span").is_none() {
+        let _ = TaskRegistry::add(span_corruption_task("c4_span", 512, DEFAULT_SEQ_LEN, 42));
+    }
+    if ProviderRegistry::get("reverse_words").is_none() {
+        let _ = TaskRegistry::add(reverse_words_task("reverse_words", 2048, 11));
+    }
+    if ProviderRegistry::get("c4_span_rev_mix").is_none() {
+        // Can genuinely fail (e.g. a user-registered 'c4_span' with a
+        // different schema) — surface it instead of a later misleading
+        // "not in the registry".
+        if let Err(e) =
+            Mixture::from_names("c4_span_rev_mix", &[("c4_span", 0.7), ("reverse_words", 0.3)])
+                .and_then(|m| m.register())
+        {
+            eprintln!("warning: default mixture 'c4_span_rev_mix' not registered: {e}");
+        }
+    }
+}
+
+/// Default registry task for a model architecture: an arch must get a
+/// task whose output features its converter can consume (an encdec model
+/// needs "inputs"; the old hardcoded `lm_task` fed it empty encoder rows).
+pub fn default_task_for_arch(arch: &str) -> &'static str {
+    match arch {
+        "encdec" | "enc_dec" | "encoder_decoder" => "c4_span",
+        _ => "c4_lm",
+    }
+}
+
+/// The split evaluation should read: "validation" when the provider
+/// declares one, else "train".
+pub fn eval_split(provider: &dyn DatasetProvider) -> String {
+    let splits = provider.splits();
+    if splits.iter().any(|s| s == "validation") {
+        "validation".to_string()
+    } else {
+        "train".to_string()
+    }
 }
 
 /// text -> (inputs_text = text, targets_text = words reversed).
@@ -109,18 +202,87 @@ pub fn ensure_cached(
 ) -> anyhow::Result<CacheMeta> {
     if dir.join("cache_meta.json").exists() {
         let meta = CacheMeta::load(dir)?;
-        if meta.num_shards == num_shards && meta.seed == seed {
+        // a stale cache built from a *different task* must not be reused
+        if meta.num_shards == num_shards && meta.seed == seed && meta.task == task.name {
             return Ok(meta);
         }
     }
     cache_task(task, dir, &CacheConfig { num_shards, seed, workers: 4 })
 }
 
-/// Infeed over a cached deterministic pipeline with the right converter
-/// for the model arch. Positioning: when `resume` carries checkpointed
-/// per-host pipeline states they win (exact op-graph restore); otherwise
-/// the stream starts at `start_step * batch` (the coarse positional
-/// fallback for checkpoints that predate pipeline state).
+/// Model-ready multi-host infeed over any [`DatasetProvider`] — THE
+/// trainer data path. Per host it issues one [`get_dataset`] call with
+/// the feature converter the model arch consumes (converter registry),
+/// validates task-vs-model feature lengths against the manifest, repeats
+/// over epochs, and positions the stream: checkpointed per-host pipeline
+/// states win (exact op-graph restore); otherwise the coarse
+/// `start_step * batch` offset (the fallback for checkpoints that predate
+/// pipeline state — caches seek it in O(1), live tasks replay).
+pub fn provider_infeed(
+    m: &ModelManifest,
+    provider: Arc<dyn DatasetProvider>,
+    split: &str,
+    num_hosts: usize,
+    start_step: u64,
+    seed: u64,
+    resume: Option<&[PipelineState]>,
+) -> anyhow::Result<Infeed> {
+    let conv = converter_for_arch(&m.arch);
+    let task_lengths = default_task_lengths(conv.as_ref(), m.seq_len());
+
+    // task-vs-model feature-length validation: the converter must emit
+    // exactly the lengths the compiled entrypoints were built for.
+    let model_lengths = conv.model_feature_lengths(&task_lengths);
+    for spec in &m.batch_features {
+        let got = model_lengths.get(&spec.name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "converter '{}' does not produce model feature '{}' required by model '{}'",
+                conv.name(),
+                spec.name,
+                m.name
+            )
+        })?;
+        anyhow::ensure!(
+            *got == spec.shape[1],
+            "feature '{}': converter '{}' produces length {got}, model '{}' expects {}",
+            spec.name,
+            conv.name(),
+            m.name,
+            spec.shape[1]
+        );
+    }
+
+    let start = if resume.is_some() { 0 } else { start_step as usize * m.batch() };
+    let conv_name = conv.name().to_string();
+    let split = split.to_string();
+    Infeed::spawn_resumable(
+        m,
+        num_hosts,
+        4,
+        move |host| {
+            get_dataset(
+                provider.clone(),
+                &GetDatasetOptions {
+                    split: split.clone(),
+                    task_feature_lengths: task_lengths.clone(),
+                    converter: Some(conv_name.clone()),
+                    shard: ShardInfo { index: host, num_shards: num_hosts },
+                    seed,
+                    start,
+                    repeat: true,
+                    resume: None, // per-host restore is applied by spawn_resumable
+                    // The split/converter/feature checks are identical
+                    // across hosts; probe the stream head once, not N times.
+                    validate: host == 0,
+                },
+            )
+        },
+        resume,
+    )
+}
+
+/// Infeed over a cached deterministic pipeline — [`provider_infeed`] with
+/// the directory opened as a [`CachedTask`] provider.
 pub fn cached_infeed(
     m: &ModelManifest,
     cache_dir: &Path,
@@ -128,54 +290,40 @@ pub fn cached_infeed(
     start_step: u64,
     resume: Option<&[PipelineState]>,
 ) -> anyhow::Result<Infeed> {
-    let batch = m.batch();
-    let seq = m.seq_len();
-    let arch = m.arch.clone();
-    let dir = cache_dir.to_path_buf();
-    Infeed::spawn_resumable(
-        m,
-        num_hosts,
-        4,
-        move |host| {
-            let p = DeterministicPipeline::open(&dir).expect("open cache");
-            let ds = p
-                .host_stream(host, num_hosts, start_step as usize * batch, true)
-                .map(strip_index);
-            if arch == "encdec" {
-                let tl = lengths(&[("inputs", seq), ("targets", seq)]);
-                EncDecConverter.convert(ds, &tl)
-            } else {
-                let tl = lengths(&[("targets", seq)]);
-                LmConverter.convert(ds, &tl)
-            }
-        },
-        resume,
-    )
+    let cached: Arc<dyn DatasetProvider> = Arc::new(CachedTask::open(cache_dir, None)?);
+    provider_infeed(m, cached, "train", num_hosts, start_step, 0, resume)
 }
 
-/// Eval batches straight from a task (no cache), converter per arch.
+/// Converted eval batches for `m` from any provider, through the same
+/// [`get_dataset`] entry point. Pick `split` with [`eval_split`] (the
+/// provider's "validation" split when declared). Errors if the provider
+/// cannot feed the model's converter (e.g. a targets-only task under an
+/// encdec model).
 pub fn eval_batches(
     m: &ModelManifest,
-    task: &Task,
+    provider: Arc<dyn DatasetProvider>,
+    split: &str,
     seed: u64,
     num_batches: usize,
-) -> Vec<Vec<crate::runtime::HostTensor>> {
-    let seq = m.seq_len();
-    let ds = task.dataset(seed, 0, 1);
-    let converted = if m.arch == "encdec" {
-        let tl = lengths(&[("inputs", seq), ("targets", seq)]);
-        EncDecConverter.convert(ds, &tl)
-    } else {
-        let tl = lengths(&[("targets", seq)]);
-        LmConverter.convert(ds, &tl)
-    };
-    let examples = converted.collect_vec();
-    examples
+) -> anyhow::Result<Vec<Vec<crate::runtime::HostTensor>>> {
+    let conv = converter_for_arch(&m.arch);
+    let ds = get_dataset(
+        provider,
+        &GetDatasetOptions {
+            split: split.to_string(),
+            task_feature_lengths: default_task_lengths(conv.as_ref(), m.seq_len()),
+            converter: Some(conv.name().to_string()),
+            seed,
+            ..Default::default()
+        },
+    )?;
+    let examples = ds.take(num_batches * m.batch()).collect_vec();
+    Ok(examples
         .chunks(m.batch())
         .filter(|c| c.len() == m.batch())
         .take(num_batches)
         .map(|c| crate::trainer::infeed::assemble_batch(m, c))
-        .collect()
+        .collect())
 }
 
 /// Raw (target, source-pairs) for decode-based evaluation of the
@@ -211,6 +359,7 @@ pub fn decode_eval_set(
 mod tests {
     use super::*;
     use crate::runtime::Artifacts;
+    use crate::seqio::provider::ProviderRegistry;
 
     #[test]
     fn reverse_task_produces_learnable_pairs() {
@@ -227,14 +376,43 @@ mod tests {
     }
 
     #[test]
+    fn default_registry_resolves_by_name() {
+        register_defaults();
+        for name in ["c4_lm", "c4_span", "reverse_words", "c4_span_rev_mix"] {
+            let p = ProviderRegistry::provider(name).unwrap();
+            assert_eq!(p.name(), name);
+            assert!(p.splits().contains(&"train".to_string()), "{name}");
+        }
+        // tasks carry held-out validation splits
+        let span = ProviderRegistry::provider("c4_span").unwrap();
+        assert!(span.splits().contains(&"validation".to_string()));
+        assert_eq!(default_task_for_arch("encdec"), "c4_span");
+        assert_eq!(default_task_for_arch("decoder"), "c4_lm");
+    }
+
+    #[test]
     fn eval_batches_shapes() {
         let arts = Artifacts::load_default().unwrap();
         let m = arts.model("t5-nano-dec").unwrap();
         let task = lm_task("recipes_eval_lm", 100, m.seq_len(), 3);
-        let batches = eval_batches(m, &task, 0, 3);
+        let split = eval_split(task.as_ref());
+        assert_eq!(split, "validation");
+        let batches = eval_batches(m, task, &split, 0, 3).unwrap();
         assert_eq!(batches.len(), 3);
         assert_eq!(batches[0].len(), 3);
         assert_eq!(batches[0][0].shape, vec![m.batch(), m.seq_len()]);
+    }
+
+    #[test]
+    fn eval_batches_rejects_featureless_task_for_encdec() {
+        let arts = Artifacts::load_default().unwrap();
+        // an encdec model cannot evaluate a targets-only LM task: the
+        // converter's "inputs" feature is missing from the declaration
+        if let Ok(m) = arts.model("t5-nano-encdec") {
+            let task = lm_task("recipes_eval_mismatch", 50, m.seq_len(), 3);
+            let err = eval_batches(m, task, "validation", 0, 2).unwrap_err().to_string();
+            assert!(err.contains("inputs"), "{err}");
+        }
     }
 
     #[test]

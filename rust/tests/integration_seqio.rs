@@ -212,7 +212,7 @@ fn mixture_over_cached_tasks() {
     // E10: a mixture of two tasks keeps rates and examples flowing.
     let t1 = span_corruption_task("mix_a", 40);
     let t2 = span_corruption_task("mix_b", 40);
-    let m = Mixture::new("mix", vec![(t1, 0.8), (t2, 0.2)]);
+    let m = Mixture::new("mix", vec![(t1, 0.8), (t2, 0.2)]).unwrap();
     let sample = m.dataset(7, 0, 1).take(100).collect_vec();
     let a_count = sample
         .iter()

@@ -48,13 +48,13 @@ fn build_infeed(
         num_hosts,
         4,
         move |host| {
-            let p = DeterministicPipeline::open(&dir).unwrap();
+            let p = DeterministicPipeline::open(&dir)?;
             let conv = LmConverter;
             let tl = lengths(&[("targets", seq)]);
             let ds: Dataset = p
                 .host_stream(host, num_hosts, start_step as usize * batch, true)
                 .map(strip_index);
-            conv.convert(ds, &tl)
+            Ok(conv.convert(ds, &tl))
         },
         resume,
     )
