@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = TrainerConfig {
         model: model.into(),
-        num_hosts: 1,
+        mesh: t5x::partitioning::Mesh::new(1, 1),
         strategy: t5x::partitioning::ParamStrategy::OneD,
         optimizer: OptimizerKind::adam(),
         schedule: Schedule::RsqrtWithWarmup { peak: 3e-3, warmup: 20 },

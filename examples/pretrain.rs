@@ -12,7 +12,7 @@
 //! Results are recorded in EXPERIMENTS.md §E14.
 
 use t5x::optim::{OptimizerKind, Schedule};
-use t5x::partitioning::ParamStrategy;
+use t5x::partitioning::{Mesh, ParamStrategy};
 use t5x::runtime::{Artifacts, DeviceHandle};
 use t5x::trainer::recipes;
 use t5x::trainer::{BatchSource, Trainer, TrainerConfig};
@@ -22,7 +22,8 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let model = args.get_or("model", "t5-micro-dec");
     let steps = args.get_usize("steps", 300)? as u64;
-    let hosts = args.get_usize("hosts", 2)?;
+    let mesh = Mesh::parse(&args.get_or("mesh", "2x1"))?;
+    let hosts = mesh.data; // data rows: one infeed stream per row
     let docs = args.get_usize("docs", 2000)?;
     let strategy = match args.get_or("strategy", "2d").as_str() {
         "1d" => ParamStrategy::OneD,
@@ -34,9 +35,9 @@ fn main() -> anyhow::Result<()> {
     let device = DeviceHandle::spawn()?;
     let m = arts.model(&model)?;
     println!(
-        "== pretrain {model}: {:.1}M params, {} hosts, {:?}, {} steps ==",
+        "== pretrain {model}: {:.1}M params, {} mesh, {:?}, {} steps ==",
         m.total_params() as f64 / 1e6,
-        hosts,
+        mesh,
         strategy,
         steps
     );
@@ -57,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     let _ = std::fs::remove_dir_all(&ckpt_dir);
     let cfg = TrainerConfig {
         model: model.clone(),
-        num_hosts: hosts,
+        mesh,
         strategy,
         optimizer: OptimizerKind::adam(),
         schedule: Schedule::RsqrtWithWarmup { peak: 2e-3, warmup: 40 },

@@ -21,7 +21,7 @@
 use std::sync::Arc;
 
 use t5x::optim::{OptimizerKind, Schedule};
-use t5x::partitioning::ParamStrategy;
+use t5x::partitioning::{Mesh, ParamStrategy};
 use t5x::runtime::{Artifacts, DeviceHandle};
 use t5x::seqio::provider::CachedTask;
 use t5x::seqio::task::TaskRegistry;
@@ -49,10 +49,11 @@ fn main() -> anyhow::Result<()> {
     println!("cached {} examples in {} shards", meta.num_examples, meta.num_shards);
     let cached = Arc::new(CachedTask::open(&cache_dir, Some(&task))?);
 
-    // 2. t5x: two data-parallel hosts, ZeRO-3 sharded optimizer
+    // 2. t5x: a 2x2 data x model mesh, ZeRO-3 sharded optimizer —
+    //    every host keeps only its block of each parameter resident
     let cfg = TrainerConfig {
         model: model.into(),
-        num_hosts: 2,
+        mesh: Mesh::new(2, 2),
         strategy: ParamStrategy::TwoD,
         optimizer: OptimizerKind::adam(),
         schedule: Schedule::RsqrtWithWarmup { peak: 3e-3, warmup: 10 },

@@ -1,11 +1,16 @@
 //! E13: collective primitives — ring all-reduce / reduce-scatter /
-//! all-gather time vs host count and payload size. These are the
-//! communication terms behind every §2.2 strategy; the measured byte
-//! counts are checked against the analytic ring model.
+//! all-gather time vs host count and payload size, plus the mesh
+//! axis-subgroup fabric (per-axis rings + per-axis byte accounting).
+//! These are the communication terms behind every §2.2 strategy; the
+//! measured byte counts are checked against the analytic ring model.
 
 use t5x::bench::Bench;
-use t5x::collectives::{run_ranks, CollectiveGroup};
-use t5x::partitioning::cost::ring_all_reduce_bytes;
+use t5x::collectives::{
+    all_gather_axis, reduce_scatter_axis, run_ranks, CollectiveGroup, MeshCollectives,
+};
+use t5x::partitioning::cost::{ring_all_gather_bytes, ring_all_reduce_bytes, ring_reduce_scatter_bytes};
+use t5x::partitioning::{Mesh, MeshAxis};
+use t5x::runtime::HostTensor;
 
 fn main() {
     let mut bench = Bench::new("collectives (E13)");
@@ -59,6 +64,72 @@ fn main() {
                 },
             );
         }
+    }
+    // ---- mesh axis subgroups: the trainer's per-step pattern ----
+    // Each host reduce-scatters a "gradient" over its data-axis ring and
+    // all-gathers a "parameter" over its model-axis ring; the per-axis
+    // byte counters must match the ring model per subgroup.
+    let meshes: &[Mesh] = if bench.is_quick() {
+        &[Mesh { data: 2, model: 2 }]
+    } else {
+        &[Mesh { data: 2, model: 2 }, Mesh { data: 4, model: 2 }]
+    };
+    let rows = 1usize << 8;
+    let cols = 64usize;
+    for &mesh in meshes {
+        let mc = MeshCollectives::new(mesh);
+        let mib = (rows * cols * 4) as f64 / (1 << 20) as f64;
+        bench.measure_with_throughput(
+            &format!("mesh {mesh} RS(data)+AG(model) {mib:.2}MiB"),
+            Some(((rows * cols * 4) as f64, "B")),
+            || {
+                run_ranks(mesh.num_hosts(), |h| {
+                    let (dg, dr) = mc.data_group(h);
+                    let grad = HostTensor::f32(vec![rows, cols], vec![1.0; rows * cols]);
+                    let mine = reduce_scatter_axis(dg, dr, &grad, 0);
+                    let (mg, mr) = mc.model_group(h);
+                    let shard = HostTensor::f32(
+                        vec![rows, cols / mesh.model],
+                        vec![1.0; rows * cols / mesh.model],
+                    );
+                    let full = all_gather_axis(mg, mr, &shard, 1);
+                    std::hint::black_box((mine, full));
+                });
+            },
+        );
+        // byte accounting vs the ring model, per axis
+        mc.reset_stats();
+        run_ranks(mesh.num_hosts(), |h| {
+            let (dg, dr) = mc.data_group(h);
+            let grad = HostTensor::f32(vec![rows, cols], vec![1.0; rows * cols]);
+            let _ = reduce_scatter_axis(dg, dr, &grad, 0);
+            let (mg, mr) = mc.model_group(h);
+            let shard = HostTensor::f32(
+                vec![rows, cols / mesh.model],
+                vec![1.0; rows * cols / mesh.model],
+            );
+            let _ = all_gather_axis(mg, mr, &shard, 1);
+        });
+        let payload = (rows * cols * 4) as u64;
+        // RS over `data` ranks in `model` independent subgroups: every
+        // host sends the canonical ring reduce-scatter share.
+        let expect_data =
+            mesh.num_hosts() as u64 * ring_reduce_scatter_bytes(payload, mesh.data as u64);
+        let expect_model =
+            mesh.num_hosts() as u64 * ring_all_gather_bytes(payload, mesh.model as u64);
+        let got_data = mc.axis_bytes(MeshAxis::Data);
+        let got_model = mc.axis_bytes(MeshAxis::Model);
+        for (axis, got, expect) in
+            [("data", got_data, expect_data), ("model", got_model, expect_model)]
+        {
+            assert!(
+                (got as f64 - expect as f64).abs() / (expect.max(1) as f64) < 0.05,
+                "{axis}-axis byte model mismatch on {mesh}: got {got}, ring model {expect}"
+            );
+        }
+        println!(
+            "  mesh {mesh}: data-axis {got_data} B, model-axis {got_model} B (ring model ok)"
+        );
     }
     bench.write_jsonl("bench_results.jsonl").unwrap();
 }

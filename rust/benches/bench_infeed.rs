@@ -28,10 +28,17 @@ fn main() {
     let docs = if bench.is_quick() { 200 } else { 2000 };
     let hosts = 4;
 
-    let dir = std::env::temp_dir().join(format!("bench_infeed_{docs}"));
+    let root = std::env::temp_dir().join(format!("bench_infeed_{docs}"));
     let task = recipes::lm_task("bench_infeed_lm", docs, m.seq_len(), 42);
-    let meta = recipes::ensure_cached(&task, &dir, 16, 0).unwrap();
-    let n = meta.num_examples;
+    let meta = recipes::ensure_cached(&task, &root, 16, 0).unwrap();
+    // ensure_cached writes the per-split layout; this bench reads the
+    // train split's directory directly
+    let dir = if meta.splits.is_some() {
+        t5x::seqio::cache::CacheMeta::split_dir(&root, "train")
+    } else {
+        root.clone()
+    };
+    let n = t5x::seqio::cache::CacheMeta::load(&dir).unwrap().num_examples;
     let per_host = n / hosts;
 
     // (a) naive: one global reader, examples dealt round-robin to hosts

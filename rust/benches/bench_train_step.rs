@@ -4,7 +4,7 @@
 
 use t5x::bench::Bench;
 use t5x::optim::{OptimizerKind, Schedule};
-use t5x::partitioning::ParamStrategy;
+use t5x::partitioning::{Mesh, ParamStrategy};
 use t5x::runtime::{Artifacts, DeviceHandle};
 use t5x::trainer::{BatchSource, Trainer, TrainerConfig};
 
@@ -21,14 +21,15 @@ fn main() {
 
     for model in models {
         let m = arts.model(model).unwrap();
-        for (hosts, strategy) in [
-            (1, ParamStrategy::OneD),
-            (2, ParamStrategy::OneD),
-            (2, ParamStrategy::TwoD),
+        for (mesh, strategy) in [
+            (Mesh::new(1, 1), ParamStrategy::OneD),
+            (Mesh::new(2, 1), ParamStrategy::OneD),
+            (Mesh::new(2, 1), ParamStrategy::TwoD),
+            (Mesh::new(2, 2), ParamStrategy::TwoD),
         ] {
             let cfg = TrainerConfig {
                 model: model.to_string(),
-                num_hosts: hosts,
+                mesh,
                 strategy,
                 optimizer: OptimizerKind::adam(),
                 schedule: Schedule::Constant(1e-4),
@@ -41,9 +42,9 @@ fn main() {
         weight_decay: None,
             };
             let trainer = Trainer::new(&arts, &device, cfg).unwrap();
-            let tokens = (m.tokens_per_step() * hosts * steps as usize) as f64;
+            let tokens = (m.tokens_per_step() * mesh.data * steps as usize) as f64;
             bench.measure_with_throughput(
-                &format!("{model} hosts={hosts} {strategy:?} ({steps} steps)"),
+                &format!("{model} mesh={mesh} {strategy:?} ({steps} steps)"),
                 Some((tokens, "tok")),
                 || {
                     let s = trainer.train(&BatchSource::Synthetic { seed: 1 }).unwrap();
@@ -67,7 +68,7 @@ fn main() {
         let m = arts.model(model).unwrap();
         let cfg = TrainerConfig {
             model: model.into(),
-            num_hosts: 1,
+            mesh: Mesh::new(1, 1),
             strategy: ParamStrategy::OneD,
             optimizer: OptimizerKind::adam(),
             schedule: Schedule::Constant(1e-4),
@@ -82,7 +83,7 @@ fn main() {
         let trainer = Trainer::new(&arts, &device, cfg).unwrap();
         let tokens = m.tokens_per_step() as f64;
         bench.measure_with_throughput(
-            &format!("{model} hosts=1 OneD (1 step)"),
+            &format!("{model} mesh=1x1 OneD (1 step)"),
             Some((tokens, "tok")),
             || {
                 let s = trainer.train(&BatchSource::Synthetic { seed: 1 }).unwrap();

@@ -4,6 +4,32 @@
 //! single-file format + converter (the paper's Mesh-TF compatibility
 //! claim: converted native checkpoints read faster — measured by
 //! `bench_checkpoint`).
+//!
+//! ## Distributed sharded checkpoints
+//!
+//! Since the shard-resident trainer refactor, multi-host checkpoints are
+//! *written by the block owners* — no host ever gathers the full
+//! parameter set:
+//!
+//! 1. the coordinator host creates the tmp directory and every array's
+//!    metadata ([`ShardedWriter::declare`]);
+//! 2. after a barrier, every owning host concurrently writes its disjoint
+//!    piece — a chunk-aligned [`tstore::write_slice`] row range when the
+//!    parameter is sharded along axis 0 only ("rows" layout: the on-disk
+//!    array is indistinguishable from a host-0 save), or a per-block
+//!    sub-array under a `layout.json` grid ("blocks" layout) when the
+//!    sharding involves other dimensions;
+//! 3. after a second barrier, the coordinator writes `checkpoint.json`
+//!    (now carrying the saving mesh), the pipeline states, and atomically
+//!    renames the tmp directory.
+//!
+//! Reads are topology-agnostic: [`read_array_full`] reassembles any
+//! layout (eval / infer / inspect load through it), and
+//! [`read_array_range`] pulls an arbitrary per-dimension block range so a
+//! run saved on a `4x2` mesh restores on `2x2` or `8x1`
+//! (read-with-resharding). The single exception is the "local" layout
+//! used for factored (Adafactor row/col) optimizer statistics, which are
+//! functions of the saving block shape and only restore on the same mesh.
 
 pub mod legacy;
 pub mod tstore;
@@ -11,6 +37,7 @@ pub mod tstore;
 use std::path::{Path, PathBuf};
 
 use crate::model::Params;
+use crate::partitioning::{Mesh, MeshAxis, PartitionSpec};
 use crate::runtime::HostTensor;
 use crate::seqio::dataset::PipelineState;
 use crate::util::json::Json;
@@ -153,7 +180,7 @@ impl CheckpointManager {
         let mut params = Params::new();
         let proot = dir.join("params");
         for name in collect_array_names(&proot)? {
-            let t = tstore::read_full(&proot, &name)
+            let t = read_array_full(&proot, &name)
                 .map_err(|e| anyhow::anyhow!("restoring {name}: {e}"))?;
             params.insert(name, t);
         }
@@ -161,7 +188,7 @@ impl CheckpointManager {
         let oroot = dir.join("optstate");
         if oroot.exists() {
             for name in collect_array_names(&oroot)? {
-                let t = tstore::read_full(&oroot, &name)?;
+                let t = read_array_full(&oroot, &name)?;
                 extra.push((name, t.as_f32().to_vec()));
             }
         }
@@ -196,15 +223,478 @@ impl CheckpointManager {
         rows: usize,
     ) -> anyhow::Result<Vec<f32>> {
         let proot = self.step_dir(step).join("params");
-        let meta = tstore::open_array(&proot, name)?;
-        Ok(tstore::read_slice(&proot, name, &meta, start_row, rows)?)
+        let layout = open_layout(&proot, name)?;
+        let shape = layout.shape();
+        anyhow::ensure!(!shape.is_empty(), "cannot row-slice scalar array {name}");
+        let mut ranges: Vec<(usize, usize)> = shape.iter().map(|&d| (0, d)).collect();
+        ranges[0] = (start_row, rows);
+        Ok(read_array_range(&proot, name, &ranges)?.as_f32().to_vec())
+    }
+
+    /// Restore an arbitrary per-dimension block range of one parameter —
+    /// the read-with-resharding entry point the sharded trainer restores
+    /// through (works against any saving topology/layout).
+    pub fn restore_param_range(
+        &self,
+        step: u64,
+        name: &str,
+        ranges: &[(usize, usize)],
+    ) -> anyhow::Result<HostTensor> {
+        read_array_range(&self.step_dir(step).join("params"), name, ranges)
+    }
+
+    /// Whether an optimizer-state array exists at `step` (params-only
+    /// checkpoints, e.g. legacy conversions, have none).
+    pub fn has_optstate(&self, step: u64, name: &str) -> bool {
+        let dir = self.step_dir(step).join("optstate").join(name);
+        dir.join("meta.json").exists() || dir.join("layout.json").exists()
+    }
+
+    /// On-disk layout of an optimizer-state array (callers use it to
+    /// route factored slots and to degrade gracefully on legacy formats).
+    pub fn optstate_layout(&self, step: u64, name: &str) -> anyhow::Result<ArrayLayout> {
+        open_layout(&self.step_dir(step).join("optstate"), name)
+    }
+
+    /// Same range read against an optimizer-state array.
+    pub fn restore_optstate_range(
+        &self,
+        step: u64,
+        name: &str,
+        ranges: &[(usize, usize)],
+    ) -> anyhow::Result<HostTensor> {
+        read_array_range(&self.step_dir(step).join("optstate"), name, ranges)
+    }
+
+    /// A topology-local optimizer block (factored stats), valid only when
+    /// the restoring mesh matches the saving mesh.
+    pub fn restore_optstate_local(
+        &self,
+        step: u64,
+        name: &str,
+        mesh: &Mesh,
+        coords: (usize, usize),
+    ) -> anyhow::Result<Vec<f32>> {
+        let root = self.step_dir(step).join("optstate");
+        match open_layout(&root, name)? {
+            ArrayLayout::Local { mesh: saved } => {
+                anyhow::ensure!(
+                    saved == (mesh.data, mesh.model),
+                    "optimizer state '{name}' is topology-local (factored stats), saved on a \
+                     {}x{} mesh; restore on the same mesh or switch to an elementwise optimizer",
+                    saved.0,
+                    saved.1
+                );
+                let t = tstore::read_full(&root, &format!("{name}/{}", block_dir(coords)))?;
+                Ok(t.as_f32().to_vec())
+            }
+            _ => anyhow::bail!("optimizer state '{name}' is not a local-layout array"),
+        }
+    }
+
+    /// The mesh a checkpoint was saved on (None for host-0 v1 saves).
+    pub fn saved_mesh(&self, step: u64) -> anyhow::Result<Option<Mesh>> {
+        let j = Json::parse_file(self.step_dir(step).join("checkpoint.json"))?;
+        Ok(j.get("mesh").and_then(|v| v.as_arr()).and_then(|a| {
+            match (a.first().and_then(|x| x.as_usize()), a.get(1).and_then(|x| x.as_usize())) {
+                (Some(d), Some(m)) => Some(Mesh::new(d, m)),
+                _ => None,
+            }
+        }))
+    }
+
+    // -- distributed sharded save (see module docs) -----------------------
+
+    /// The deterministic writer handle for `step` (same path on every
+    /// host; only the coordinator calls [`CheckpointManager::begin_sharded`]).
+    pub fn sharded_writer(&self, step: u64) -> ShardedWriter {
+        ShardedWriter {
+            tmp: self.step_dir(step).with_extension("tmp"),
+            chunk_rows: self.chunk_rows,
+        }
+    }
+
+    /// Phase 1, coordinator only: (re)create the tmp directory.
+    pub fn begin_sharded(&self, step: u64) -> anyhow::Result<ShardedWriter> {
+        let w = self.sharded_writer(step);
+        if w.tmp.exists() {
+            std::fs::remove_dir_all(&w.tmp)?;
+        }
+        std::fs::create_dir_all(&w.tmp)?;
+        Ok(w)
+    }
+
+    /// Phase 3, coordinator only: metadata + pipeline states + atomic
+    /// rename + retention. All owners must have finished writing (the
+    /// trainer barriers between phases).
+    pub fn commit_sharded(
+        &self,
+        step: u64,
+        num_params: usize,
+        mesh: Mesh,
+        pipeline: Option<&[PipelineState]>,
+    ) -> anyhow::Result<()> {
+        let w = self.sharded_writer(step);
+        if let Some(states) = pipeline {
+            let arr = Json::Arr(states.iter().map(|s| s.0.clone()).collect());
+            tstore::write_bytes(&w.tmp, "pipeline/state", arr.to_string().as_bytes(), 64 * 1024)?;
+        }
+        let meta = Json::obj(vec![
+            ("step", Json::num(step as f64)),
+            ("num_params", Json::num(num_params as f64)),
+            ("has_pipeline", Json::Bool(pipeline.is_some())),
+            ("mesh", Json::arr_usize(&[mesh.data, mesh.model])),
+            ("format", Json::str("t5x-native-v2")),
+        ]);
+        std::fs::write(w.tmp.join("checkpoint.json"), meta.to_string())?;
+        let final_dir = self.step_dir(step);
+        if final_dir.exists() {
+            std::fs::remove_dir_all(&final_dir)?;
+        }
+        std::fs::rename(&w.tmp, &final_dir)?;
+        self.apply_retention()?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded array layouts
+// ---------------------------------------------------------------------------
+
+fn axis_tag(a: MeshAxis) -> &'static str {
+    match a {
+        MeshAxis::Data => "data",
+        MeshAxis::Model => "model",
+    }
+}
+
+fn axis_from_tag(s: &str) -> anyhow::Result<MeshAxis> {
+    match s {
+        "data" => Ok(MeshAxis::Data),
+        "model" => Ok(MeshAxis::Model),
+        other => anyhow::bail!("unknown mesh axis tag '{other}' in layout.json"),
+    }
+}
+
+fn block_dir(coords: (usize, usize)) -> String {
+    format!("block-{}-{}", coords.0, coords.1)
+}
+
+/// A host's block coordinates for an array: its mesh coordinate along each
+/// axis the spec shards over, 0 along replicated axes — so replicas of the
+/// same block project to the same name and exactly one (the owner) writes.
+pub fn block_coords(spec: &PartitionSpec, mesh: &Mesh, host: usize) -> (usize, usize) {
+    let proj = |axis| {
+        if spec.dim_for(axis).is_some() {
+            mesh.coord(host, axis)
+        } else {
+            0
+        }
+    };
+    (proj(MeshAxis::Data), proj(MeshAxis::Model))
+}
+
+/// On-disk layout of one checkpoint array.
+pub enum ArrayLayout {
+    /// A single tstore array (replicated saves, legacy v1 checkpoints, and
+    /// "rows" saves where owners wrote disjoint chunk-aligned row slices).
+    Plain(tstore::ArrayMeta),
+    /// A `layout.json` grid of per-block sub-arrays (sharding touching a
+    /// non-0 dimension).
+    Blocks {
+        shape: Vec<usize>,
+        /// Per tensor dimension: `Some((axis, shards))` or None.
+        dims: Vec<Option<(MeshAxis, usize)>>,
+    },
+    /// Topology-local per-host blocks (factored optimizer stats).
+    Local { mesh: (usize, usize) },
+}
+
+impl ArrayLayout {
+    pub fn shape(&self) -> Vec<usize> {
+        match self {
+            ArrayLayout::Plain(m) => m.shape.clone(),
+            ArrayLayout::Blocks { shape, .. } => shape.clone(),
+            ArrayLayout::Local { .. } => Vec::new(),
+        }
+    }
+}
+
+/// Open an array's layout: `layout.json` if present, else a plain tstore
+/// array.
+pub fn open_layout(root: &Path, name: &str) -> anyhow::Result<ArrayLayout> {
+    let lpath = root.join(name).join("layout.json");
+    if !lpath.exists() {
+        return Ok(ArrayLayout::Plain(tstore::open_array(root, name)?));
+    }
+    let j = Json::parse_file(&lpath)?;
+    match j.get("mode").and_then(|v| v.as_str()) {
+        Some("blocks") => {
+            let shape: Vec<usize> = j
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default();
+            let mut dims = Vec::with_capacity(shape.len());
+            for d in j.get("dims").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                dims.push(match d.as_arr() {
+                    Some(pair) if pair.len() == 2 => {
+                        let axis = axis_from_tag(pair[0].as_str().unwrap_or(""))?;
+                        let n = pair[1]
+                            .as_usize()
+                            .ok_or_else(|| anyhow::anyhow!("bad shard count in layout.json"))?;
+                        Some((axis, n))
+                    }
+                    _ => None,
+                });
+            }
+            anyhow::ensure!(dims.len() == shape.len(), "layout.json dims/shape mismatch for {name}");
+            Ok(ArrayLayout::Blocks { shape, dims })
+        }
+        Some("local") => {
+            let mesh = j
+                .get("mesh")
+                .and_then(|v| v.as_arr())
+                .and_then(|a| {
+                    Some((a.first()?.as_usize()?, a.get(1)?.as_usize()?))
+                })
+                .ok_or_else(|| anyhow::anyhow!("local layout.json missing mesh for {name}"))?;
+            Ok(ArrayLayout::Local { mesh })
+        }
+        other => anyhow::bail!("unknown layout mode {other:?} for array {name}"),
+    }
+}
+
+/// Read the whole array, reassembling block layouts. Local layouts concat
+/// their blocks in coordinate order (diagnostic use only).
+pub fn read_array_full(root: &Path, name: &str) -> anyhow::Result<HostTensor> {
+    match open_layout(root, name)? {
+        ArrayLayout::Plain(_) => Ok(tstore::read_full(root, name)?),
+        ArrayLayout::Blocks { shape, .. } => {
+            let ranges: Vec<(usize, usize)> = shape.iter().map(|&d| (0, d)).collect();
+            read_array_range(root, name, &ranges)
+        }
+        ArrayLayout::Local { mesh } => {
+            let mut data = Vec::new();
+            for d in 0..mesh.0 {
+                for m in 0..mesh.1 {
+                    let bname = format!("{name}/{}", block_dir((d, m)));
+                    if root.join(&bname).join("meta.json").exists() {
+                        data.extend_from_slice(tstore::read_full(root, &bname)?.as_f32());
+                    }
+                }
+            }
+            Ok(HostTensor::f32(vec![data.len()], data))
+        }
+    }
+}
+
+/// Read an arbitrary per-dimension `(start, len)` block range — THE
+/// read-with-resharding primitive. Plain arrays use sliced row IO plus
+/// in-memory column slicing; block arrays read only the overlapping
+/// blocks.
+pub fn read_array_range(
+    root: &Path,
+    name: &str,
+    ranges: &[(usize, usize)],
+) -> anyhow::Result<HostTensor> {
+    match open_layout(root, name)? {
+        ArrayLayout::Plain(meta) => {
+            anyhow::ensure!(
+                ranges.len() == meta.shape.len(),
+                "range rank {} vs array rank {} for {name}",
+                ranges.len(),
+                meta.shape.len()
+            );
+            if meta.shape.is_empty() {
+                return Ok(tstore::read_full(root, name)?);
+            }
+            let (r0, rl) = ranges[0];
+            let rows = tstore::read_slice(root, name, &meta, r0, rl)?;
+            let mut shape = meta.shape.clone();
+            shape[0] = rl;
+            let t = HostTensor::f32(shape, rows);
+            let mut rel = ranges.to_vec();
+            rel[0] = (0, rl);
+            Ok(t.slice_ranges(&rel))
+        }
+        ArrayLayout::Blocks { shape, dims } => {
+            anyhow::ensure!(ranges.len() == shape.len(), "range rank mismatch for {name}");
+            // Needed block-index range per mesh axis (0..=0 when the axis
+            // does not shard this array).
+            let info = |axis: MeshAxis| -> (Option<usize>, usize, usize, usize) {
+                // (dim, block_size, lo_block, hi_block)
+                for (dim, d) in dims.iter().enumerate() {
+                    if let Some((a, n)) = d {
+                        if *a == axis {
+                            let bsz = shape[dim] / n;
+                            let (s, l) = ranges[dim];
+                            return (Some(dim), bsz, s / bsz, (s + l - 1) / bsz);
+                        }
+                    }
+                }
+                (None, 0, 0, 0)
+            };
+            let (d_dim, d_bsz, d_lo, d_hi) = info(MeshAxis::Data);
+            let (m_dim, m_bsz, m_lo, m_hi) = info(MeshAxis::Model);
+            let mut data_parts = Vec::with_capacity(d_hi - d_lo + 1);
+            for di in d_lo..=d_hi {
+                let mut model_parts = Vec::with_capacity(m_hi - m_lo + 1);
+                for mi in m_lo..=m_hi {
+                    let bname = format!("{name}/{}", block_dir((di, mi)));
+                    model_parts.push(tstore::read_full(root, &bname)?);
+                }
+                data_parts.push(match m_dim {
+                    Some(dim) => HostTensor::concat_axis(&model_parts, dim),
+                    None => model_parts.remove(0),
+                });
+            }
+            let assembled = match d_dim {
+                Some(dim) => HostTensor::concat_axis(&data_parts, dim),
+                None => data_parts.remove(0),
+            };
+            // Slice to the requested range, relative to the assembled
+            // region's origin.
+            let rel: Vec<(usize, usize)> = ranges
+                .iter()
+                .enumerate()
+                .map(|(dim, &(s, l))| {
+                    let off = if Some(dim) == d_dim {
+                        d_lo * d_bsz
+                    } else if Some(dim) == m_dim {
+                        m_lo * m_bsz
+                    } else {
+                        0
+                    };
+                    (s - off, l)
+                })
+                .collect();
+            Ok(assembled.slice_ranges(&rel))
+        }
+        ArrayLayout::Local { .. } => anyhow::bail!(
+            "array {name} has topology-local layout (factored optimizer stats) and cannot \
+             be range-read; restore on the saving mesh"
+        ),
+    }
+}
+
+/// Per-array writer used during a distributed sharded save.
+pub struct ShardedWriter {
+    pub tmp: PathBuf,
+    chunk_rows: usize,
+}
+
+impl ShardedWriter {
+    fn is_rows_mode(spec: &PartitionSpec) -> bool {
+        spec.is_sharded()
+            && spec
+                .dims
+                .iter()
+                .enumerate()
+                .all(|(i, d)| d.is_none() || i == 0)
+    }
+
+    /// Phase 1 (coordinator): create array metadata. Replicated specs get
+    /// a plain array; axis-0-only sharding gets a plain array whose
+    /// chunking aligns with the writers' row slices; anything else gets a
+    /// block grid.
+    pub fn declare(
+        &self,
+        name: &str,
+        shape: &[usize],
+        spec: &PartitionSpec,
+    ) -> anyhow::Result<()> {
+        if !spec.is_sharded() {
+            tstore::create_array(&self.tmp, name, shape, self.chunk_rows)?;
+        } else if Self::is_rows_mode(spec) {
+            let shards = spec.dims[0].expect("rows mode shards dim 0").1;
+            let shard_rows = shape[0] / shards;
+            tstore::create_array(&self.tmp, name, shape, shard_rows.max(1))?;
+        } else {
+            let dir = self.tmp.join(name);
+            std::fs::create_dir_all(&dir)?;
+            let dims = Json::Arr(
+                spec.dims
+                    .iter()
+                    .map(|d| match d {
+                        Some((a, n)) => Json::Arr(vec![
+                            Json::str(axis_tag(*a)),
+                            Json::num(*n as f64),
+                        ]),
+                        None => Json::Null,
+                    })
+                    .collect(),
+            );
+            let j = Json::obj(vec![
+                ("mode", Json::str("blocks")),
+                ("shape", Json::arr_usize(shape)),
+                ("dims", dims),
+            ]);
+            std::fs::write(dir.join("layout.json"), j.to_string())?;
+        }
+        Ok(())
+    }
+
+    /// Phase 2 (every owner, concurrently): write this host's block.
+    /// Caller must ensure `spec.owns(mesh, host)` — replicas skip.
+    pub fn write_block(
+        &self,
+        name: &str,
+        spec: &PartitionSpec,
+        mesh: &Mesh,
+        host: usize,
+        block: &HostTensor,
+    ) -> anyhow::Result<()> {
+        if !spec.is_sharded() {
+            let meta = tstore::open_array(&self.tmp, name)?;
+            tstore::write_slice(&self.tmp, name, &meta, 0, block.as_f32())?;
+        } else if Self::is_rows_mode(spec) {
+            let meta = tstore::open_array(&self.tmp, name)?;
+            let start_row = spec.host_ranges(mesh, host, &meta.shape)[0].0;
+            tstore::write_slice(&self.tmp, name, &meta, start_row, block.as_f32())?;
+        } else {
+            let bname = format!("{name}/{}", block_dir(block_coords(spec, mesh, host)));
+            tstore::write_full(&self.tmp, &bname, block, self.chunk_rows)?;
+        }
+        Ok(())
+    }
+
+    /// Phase 1 (coordinator): declare a topology-local array (factored
+    /// optimizer stats, restorable only on the same mesh).
+    pub fn declare_local(&self, name: &str, mesh: &Mesh) -> anyhow::Result<()> {
+        let dir = self.tmp.join(name);
+        std::fs::create_dir_all(&dir)?;
+        let j = Json::obj(vec![
+            ("mode", Json::str("local")),
+            ("mesh", Json::arr_usize(&[mesh.data, mesh.model])),
+        ]);
+        std::fs::write(dir.join("layout.json"), j.to_string())?;
+        Ok(())
+    }
+
+    /// Phase 2 (owners): write a local block keyed by the host's projected
+    /// block coordinates.
+    pub fn write_local(
+        &self,
+        name: &str,
+        spec: &PartitionSpec,
+        mesh: &Mesh,
+        host: usize,
+        data: &[f32],
+    ) -> anyhow::Result<()> {
+        let bname = format!("{name}/{}", block_dir(block_coords(spec, mesh, host)));
+        let t = HostTensor::f32(vec![data.len()], data.to_vec());
+        tstore::write_full(&self.tmp, &bname, &t, self.chunk_rows)?;
+        Ok(())
     }
 }
 
 /// Array names under a tstore root, including nested (slash-joined) names.
+/// A directory holding `meta.json` (plain array) or `layout.json` (block /
+/// local array) is one array — its contents are not descended into.
 fn collect_array_names(root: &Path) -> anyhow::Result<Vec<String>> {
     fn walk(dir: &Path, prefix: String, out: &mut Vec<String>) -> anyhow::Result<()> {
-        if dir.join("meta.json").exists() {
+        if dir.join("meta.json").exists() || dir.join("layout.json").exists() {
             out.push(prefix);
             return Ok(());
         }
@@ -342,5 +832,119 @@ mod tests {
         let dir = tmp("missing");
         let mgr = CheckpointManager::new(&dir);
         assert!(mgr.restore(99).is_err());
+    }
+
+    #[test]
+    fn sharded_save_rows_and_blocks_roundtrip() {
+        use crate::partitioning::{ParamStrategy, Partitioner};
+        use crate::runtime::artifacts::ParamSpec;
+
+        let dir = tmp("sharded");
+        let mgr = CheckpointManager::new(&dir);
+        let mesh = Mesh::new(2, 2);
+        let part = Partitioner::new(mesh, ParamStrategy::TwoD);
+
+        // w: model-shards dim 1, data-shards dim 0 -> blocks layout
+        let w_spec = part.spec_for(&ParamSpec {
+            name: "w".into(),
+            shape: vec![8, 12],
+            logical_axes: vec!["embed".into(), "mlp".into()],
+            init: "const:0".into(),
+        });
+        // v: data-shards dim 0 only -> rows layout (sliced writes)
+        let v_spec = part.spec_for(&ParamSpec {
+            name: "v".into(),
+            shape: vec![8],
+            logical_axes: vec!["embed".into()],
+            init: "const:0".into(),
+        });
+        // s: indivisible -> replicated, plain array from the coordinator
+        let s_spec = PartitionSpec::replicated(1);
+
+        let w_full = HostTensor::f32(vec![8, 12], (0..96).map(|i| i as f32).collect());
+        let v_full = HostTensor::f32(vec![8], (0..8).map(|i| i as f32).collect());
+        let s_full = HostTensor::f32(vec![3], vec![7.0, 8.0, 9.0]);
+
+        // phase 1: coordinator declares
+        let writer = mgr.begin_sharded(5).unwrap();
+        writer.declare("params/w", &w_full.shape, &w_spec).unwrap();
+        writer.declare("params/v", &v_full.shape, &v_spec).unwrap();
+        writer.declare("params/s", &s_full.shape, &s_spec).unwrap();
+        // phase 2: each owner writes its disjoint block (serial here; the
+        // trainer does this from all host threads concurrently)
+        for host in 0..4 {
+            for (name, full, spec) in [
+                ("params/w", &w_full, &w_spec),
+                ("params/v", &v_full, &v_spec),
+                ("params/s", &s_full, &s_spec),
+            ] {
+                if spec.owns(&mesh, host) {
+                    let block = full.slice_ranges(&spec.host_ranges(&mesh, host, &full.shape));
+                    writer.write_block(name, spec, &mesh, host, &block).unwrap();
+                }
+            }
+        }
+        // phase 3: commit
+        mgr.commit_sharded(5, 3, mesh, None).unwrap();
+        assert_eq!(mgr.saved_mesh(5).unwrap(), Some(mesh));
+
+        // full restore reassembles every layout
+        let (params, _) = mgr.restore(5).unwrap();
+        assert_eq!(params["w"], w_full);
+        assert_eq!(params["v"], v_full);
+        assert_eq!(params["s"], s_full);
+
+        // read-with-resharding: a 1x2-mesh host's block of w (full rows,
+        // model-half of columns) straddles two saved blocks
+        let got = mgr.restore_param_range(5, "w", &[(0, 8), (6, 6)]).unwrap();
+        assert_eq!(got, w_full.slice_ranges(&[(0, 8), (6, 6)]));
+        // row-sliced read of the rows-layout array
+        assert_eq!(
+            mgr.restore_param_slice(5, "v", 2, 4).unwrap(),
+            (2..6).map(|i| i as f32).collect::<Vec<_>>()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn local_layout_guards_topology() {
+        let dir = tmp("local");
+        let mgr = CheckpointManager::new(&dir);
+        let mesh = Mesh::new(2, 1);
+        let spec = PartitionSpec { dims: vec![Some((MeshAxis::Data, 2))] };
+        let writer = mgr.begin_sharded(1).unwrap();
+        writer.declare_local("optstate/w/vr", &mesh).unwrap();
+        for host in 0..2 {
+            writer
+                .write_local("optstate/w/vr", &spec, &mesh, host, &[host as f32; 4])
+                .unwrap();
+        }
+        // params must exist for restore(); give it one
+        writer
+            .declare("params/p", &[2], &PartitionSpec::replicated(1))
+            .unwrap();
+        writer
+            .write_block(
+                "params/p",
+                &PartitionSpec::replicated(1),
+                &mesh,
+                0,
+                &HostTensor::f32(vec![2], vec![1.0, 2.0]),
+            )
+            .unwrap();
+        mgr.commit_sharded(1, 1, mesh, None).unwrap();
+
+        // same-mesh restore reads the host's own block
+        let got = mgr.restore_optstate_local(1, "w/vr", &mesh, (1, 0)).unwrap();
+        assert_eq!(got, vec![1.0; 4]);
+        // a different mesh is rejected with a clear error
+        let err = mgr
+            .restore_optstate_local(1, "w/vr", &Mesh::new(4, 1), (0, 0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("topology-local"), "{err}");
+        // and range reads refuse local arrays
+        assert!(read_array_range(&dir.join("ckpt-00000001/optstate"), "w/vr", &[(0, 4)]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

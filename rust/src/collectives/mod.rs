@@ -8,10 +8,30 @@
 //! same wire complexity as NCCL/TPU-ICI rings, so measured byte counts match
 //! the analytic model in [`crate::partitioning::cost`]. All ranks must call
 //! the same ops in the same order (the usual collective contract).
+//!
+//! ## Axis subgroups ([`MeshCollectives`])
+//!
+//! A `data × model` [`Mesh`] does not communicate over one flat ring: each
+//! collective runs inside a *subgroup* of hosts that share a mesh
+//! coordinate — model-axis subgroups (hosts of one data row) carry
+//! parameter all-gathers and batch broadcasts, data-axis subgroups (hosts
+//! of one model column) carry gradient all-reduce / reduce-scatter.
+//! [`MeshCollectives`] owns one [`CollectiveGroup`] ring per subgroup plus
+//! a global group for barriers, and accounts bytes/ops *per mesh axis* —
+//! the measured counterpart of the per-axis terms in
+//! [`crate::partitioning::cost`].
+//!
+//! The `*_axis` helpers ([`all_gather_axis`], [`reduce_scatter_axis`])
+//! lift the flat ring primitives to tensor dimensions: rank `r`'s chunk is
+//! its slice along a tensor axis, so a `PartitionSpec`-sharded block can
+//! be gathered/reduced along the dimension it is actually sharded on.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
+
+use crate::partitioning::{Mesh, MeshAxis};
+use crate::runtime::HostTensor;
 
 /// Per-group transport + accounting shared by all ranks.
 pub struct CollectiveGroup {
@@ -207,6 +227,206 @@ pub fn run_ranks<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
     crate::util::threads::parallel_map(n, n, f)
 }
 
+// ---------------------------------------------------------------------------
+// Tensor-axis collectives (the shard-level primitives)
+// ---------------------------------------------------------------------------
+
+/// Reorder `full` as the concatenation of its `n` equal slices along
+/// `axis` (rank r's slice at chunk r) — the payload layout under which the
+/// flat ring chunks coincide with tensor-axis slices.
+fn axis_major_payload(full: &HostTensor, axis: usize, n: usize) -> Vec<f32> {
+    if axis == 0 || n == 1 {
+        return full.as_f32().to_vec(); // axis-0 slices are already contiguous
+    }
+    let size = full.shape[axis] / n;
+    let mut out = Vec::with_capacity(full.elements());
+    for r in 0..n {
+        out.extend_from_slice(full.slice_axis(axis, r * size, size).as_f32());
+    }
+    out
+}
+
+/// All-gather shards along a tensor `axis`: every rank contributes its
+/// slice, every rank returns the full tensor. Pure data movement — the
+/// reconstruction is bit-exact.
+pub fn all_gather_axis(
+    g: &CollectiveGroup,
+    rank: usize,
+    shard: &HostTensor,
+    axis: usize,
+) -> HostTensor {
+    let n = g.num_ranks();
+    if n == 1 {
+        return shard.clone();
+    }
+    let chunk_len = shard.elements();
+    let flat = g.all_gather(rank, shard.as_f32().to_vec(), chunk_len * n);
+    let mut full_shape = shard.shape.clone();
+    full_shape[axis] *= n;
+    if axis == 0 {
+        return HostTensor::f32(full_shape, flat);
+    }
+    let slices: Vec<HostTensor> = (0..n)
+        .map(|r| {
+            HostTensor::f32(shard.shape.clone(), flat[r * chunk_len..(r + 1) * chunk_len].to_vec())
+        })
+        .collect();
+    HostTensor::concat_axis(&slices, axis)
+}
+
+/// Reduce-scatter along a tensor `axis`: every rank contributes its local
+/// copy of the full tensor; rank r returns the elementwise sum of slice r.
+/// For 2 ranks the sum is a single commutative f32 add, so results are
+/// bit-identical to any other 2-way summation of the same values.
+pub fn reduce_scatter_axis(
+    g: &CollectiveGroup,
+    rank: usize,
+    full: &HostTensor,
+    axis: usize,
+) -> HostTensor {
+    let n = g.num_ranks();
+    if n == 1 {
+        return full.clone();
+    }
+    let payload = axis_major_payload(full, axis, n);
+    let chunk = g.reduce_scatter(rank, payload);
+    let mut shape = full.shape.clone();
+    shape[axis] /= n;
+    HostTensor::f32(shape, chunk)
+}
+
+/// Elementwise-sum all-reduce of a whole tensor (replicated blocks).
+pub fn all_reduce_tensor(g: &CollectiveGroup, rank: usize, t: &HostTensor) -> HostTensor {
+    if g.num_ranks() == 1 {
+        return t.clone();
+    }
+    let out = g.all_reduce(rank, t.as_f32().to_vec());
+    HostTensor::f32(t.shape.clone(), out)
+}
+
+/// Broadcast a batch (mixed i32/f32 tensors) from subgroup rank 0 — how a
+/// data row's infeed leader shares its batch with its model-axis peers.
+/// Non-root ranks pass `None` and learn the shapes from `template`
+/// (manifest batch features). Token ids fit f32 exactly (vocab « 2^24),
+/// so the i32 round-trip is lossless.
+pub fn broadcast_batch(
+    g: &CollectiveGroup,
+    rank: usize,
+    batch: Option<Vec<HostTensor>>,
+    template: &[(Vec<usize>, bool)],
+) -> Option<Vec<HostTensor>> {
+    if g.num_ranks() == 1 {
+        return batch;
+    }
+    // presence flag first so exhaustion propagates to the whole row
+    let flag = g.broadcast(
+        rank,
+        if rank == 0 { Some(vec![batch.is_some() as u8 as f32]) } else { None },
+    );
+    if flag[0] == 0.0 {
+        return None;
+    }
+    let batch = batch.map(|b| {
+        assert_eq!(b.len(), template.len(), "batch/template feature count");
+        b
+    });
+    let mut out = Vec::with_capacity(template.len());
+    for (i, (shape, is_int)) in template.iter().enumerate() {
+        let payload = batch.as_ref().map(|b| {
+            let t = &b[i];
+            if *is_int {
+                t.as_i32().iter().map(|&x| x as f32).collect()
+            } else {
+                t.as_f32().to_vec()
+            }
+        });
+        let data = g.broadcast(rank, payload);
+        out.push(if *is_int {
+            HostTensor::i32(shape.clone(), data.into_iter().map(|x| x as i32).collect())
+        } else {
+            HostTensor::f32(shape.clone(), data)
+        });
+    }
+    Some(out)
+}
+
+// ---------------------------------------------------------------------------
+// MeshCollectives: per-axis subgroups + per-axis accounting
+// ---------------------------------------------------------------------------
+
+/// The communication fabric of a 2-D mesh: one ring per mesh-axis
+/// subgroup, plus a global group for barriers. Byte/op counters aggregate
+/// per axis, so benches can attribute traffic to data-parallel gradient
+/// sync vs model-parallel parameter movement.
+pub struct MeshCollectives {
+    pub mesh: Mesh,
+    global: Arc<CollectiveGroup>,
+    /// Indexed by model coordinate: the `data`-sized ring of one model
+    /// column (gradient sync).
+    data_groups: Vec<Arc<CollectiveGroup>>,
+    /// Indexed by data coordinate: the `model`-sized ring of one data row
+    /// (parameter gathers, batch broadcast).
+    model_groups: Vec<Arc<CollectiveGroup>>,
+}
+
+impl MeshCollectives {
+    pub fn new(mesh: Mesh) -> Arc<MeshCollectives> {
+        Arc::new(MeshCollectives {
+            mesh,
+            global: CollectiveGroup::new(mesh.num_hosts()),
+            data_groups: (0..mesh.model).map(|_| CollectiveGroup::new(mesh.data)).collect(),
+            model_groups: (0..mesh.data).map(|_| CollectiveGroup::new(mesh.model)).collect(),
+        })
+    }
+
+    pub fn global(&self) -> &CollectiveGroup {
+        &self.global
+    }
+
+    /// Host's data-axis subgroup and its rank within it (= data coord).
+    pub fn data_group(&self, host: usize) -> (&CollectiveGroup, usize) {
+        let (d, m) = self.mesh.coords(host);
+        (&self.data_groups[m], d)
+    }
+
+    /// Host's model-axis subgroup and its rank within it (= model coord).
+    pub fn model_group(&self, host: usize) -> (&CollectiveGroup, usize) {
+        let (d, m) = self.mesh.coords(host);
+        (&self.model_groups[d], m)
+    }
+
+    pub fn barrier(&self, _host: usize) {
+        self.global.barrier(0);
+    }
+
+    pub fn axis_bytes(&self, axis: MeshAxis) -> u64 {
+        self.groups(axis).iter().map(|g| g.bytes_sent()).sum()
+    }
+
+    pub fn axis_ops(&self, axis: MeshAxis) -> u64 {
+        self.groups(axis).iter().map(|g| g.ops()).sum()
+    }
+
+    fn groups(&self, axis: MeshAxis) -> &[Arc<CollectiveGroup>] {
+        match axis {
+            MeshAxis::Data => &self.data_groups,
+            MeshAxis::Model => &self.model_groups,
+        }
+    }
+
+    /// Total bytes sent over all subgroups (global-group traffic included).
+    pub fn bytes_sent(&self) -> u64 {
+        self.axis_bytes(MeshAxis::Data) + self.axis_bytes(MeshAxis::Model) + self.global.bytes_sent()
+    }
+
+    pub fn reset_stats(&self) {
+        self.global.reset_stats();
+        for g in self.data_groups.iter().chain(&self.model_groups) {
+            g.reset_stats();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -308,6 +528,79 @@ mod tests {
             "got {got}, expected ~{expected_approx}"
         );
         assert_eq!(g.ops(), n as u64);
+    }
+
+    #[test]
+    fn axis_collectives_roundtrip_nonzero_axis() {
+        // shard a [4, 8] tensor along axis 1 over 4 ranks, gather it back
+        let n = 4;
+        let g = CollectiveGroup::new(n);
+        let full = HostTensor::f32(vec![4, 8], (0..32).map(|i| i as f32).collect());
+        let outs = run_ranks(n, |r| {
+            let shard = full.slice_axis(1, r * 2, 2);
+            all_gather_axis(&g, r, &shard, 1)
+        });
+        for out in outs {
+            assert_eq!(out, full);
+        }
+        // reduce-scatter along axis 1: rank r gets the summed slice r
+        let g2 = CollectiveGroup::new(n);
+        let outs = run_ranks(n, |r| {
+            let mine = HostTensor::f32(vec![4, 8], vec![(r + 1) as f32; 32]);
+            reduce_scatter_axis(&g2, r, &mine, 1)
+        });
+        for (r, out) in outs.iter().enumerate() {
+            assert_eq!(out.shape, vec![4, 2], "rank {r}");
+            assert!(out.as_f32().iter().all(|&x| x == 10.0)); // 1+2+3+4
+        }
+    }
+
+    #[test]
+    fn mesh_collectives_account_per_axis() {
+        let mesh = Mesh::new(2, 2);
+        let mc = MeshCollectives::new(mesh);
+        run_ranks(4, |h| {
+            let (dg, dr) = mc.data_group(h);
+            let a = dg.all_reduce(dr, vec![1.0; 64]);
+            let (mg, mr) = mc.model_group(h);
+            let t = HostTensor::f32(vec![2, 4], vec![h as f32; 8]);
+            let shard = t.slice_axis(1, mr * 2, 2);
+            let _ = all_gather_axis(mg, mr, &shard, 1);
+            a[0]
+        });
+        assert!(mc.axis_bytes(MeshAxis::Data) > 0);
+        assert!(mc.axis_bytes(MeshAxis::Model) > 0);
+        assert_eq!(mc.axis_ops(MeshAxis::Data), 4); // one all_reduce per host
+        assert_eq!(mc.axis_ops(MeshAxis::Model), 4);
+        assert_eq!(
+            mc.bytes_sent(),
+            mc.axis_bytes(MeshAxis::Data) + mc.axis_bytes(MeshAxis::Model)
+        );
+        mc.reset_stats();
+        assert_eq!(mc.bytes_sent(), 0);
+    }
+
+    #[test]
+    fn broadcast_batch_shares_row_batch() {
+        let n = 3;
+        let g = CollectiveGroup::new(n);
+        let template = vec![(vec![2, 4], true), (vec![2, 4], false)];
+        let ints = HostTensor::i32(vec![2, 4], (0..8).collect());
+        let floats = HostTensor::f32(vec![2, 4], (0..8).map(|i| i as f32).collect());
+        let src = vec![ints.clone(), floats.clone()];
+        let outs = run_ranks(n, |r| {
+            let b = if r == 0 { Some(src.clone()) } else { None };
+            broadcast_batch(&g, r, b, &template)
+        });
+        for out in outs {
+            let out = out.expect("batch present");
+            assert_eq!(out[0], ints);
+            assert_eq!(out[1], floats);
+        }
+        // exhaustion propagates
+        let g2 = CollectiveGroup::new(n);
+        let outs = run_ranks(n, |r| broadcast_batch(&g2, r, None, &template));
+        assert!(outs.iter().all(|o| o.is_none()));
     }
 
     #[test]

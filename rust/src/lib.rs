@@ -20,6 +20,36 @@
 //! Python never runs on the training path: after `make artifacts` the
 //! `t5x` binary and all examples are self-contained.
 //!
+//! ## Sharded parameters end-to-end (§2.2)
+//!
+//! The `Partitioner`'s `PartitionSpec`s *drive execution*, not just the
+//! cost model. On a `data × model` [`partitioning::Mesh`]
+//! (`t5x train --mesh 4x2 --strategy 2d`, gin `trainer.mesh = '4x2'`):
+//!
+//! * each host's resident state is one spec block per parameter plus the
+//!   matching optimizer block — ~`total/(data·model)` floats
+//!   ([`trainer::Trainer::resident_param_floats`]); initialization is
+//!   init-then-slice, so numerics match the replicated baseline
+//!   bit-for-bit (2-way ring sums are commutative; see
+//!   `tests/integration_sharded.rs`);
+//! * collectives run in per-axis subgroup rings
+//!   ([`collectives::MeshCollectives`]): model-axis subgroups carry
+//!   parameter all-gathers and the data row's batch broadcast, data-axis
+//!   subgroups carry gradient reduce-scatter / all-reduce — with per-axis
+//!   byte/op accounting surfaced in `TrainSummary`, the trainer's
+//!   `CounterSet` (`train/{data,model}_axis_bytes`), its
+//!   `TimingBreakdown` (`collectives/data` vs `collectives/model`), and
+//!   validated against [`partitioning::cost`]'s per-axis terms by
+//!   `bench_partitioning`;
+//! * `Trainer::params()` gathers on demand — there is no free full copy;
+//! * checkpoints are *distributed*: owning hosts concurrently write
+//!   disjoint `tstore` slices (chunk-aligned row writes or block grids),
+//!   no host-0 gather, and restore range-reads each host's block so a
+//!   `4x2` save resumes on `2x2` or `8x1` (params + elementwise optimizer
+//!   state; factored Adafactor stats are topology-local). Eval, infer and
+//!   `inspect-ckpt` reassemble full tensors through the same layout-aware
+//!   readers.
+//!
 //! ## One data entry point: `seqio::get_dataset` (§3.1)
 //!
 //! Every data scenario resolves through
@@ -29,8 +59,12 @@
 //! [`seqio::task::Task`]s, weighted [`seqio::mixture::Mixture`]s, and
 //! [`seqio::CachedTask`] (an offline §3.2 deterministic cache) — plus a
 //! single [`seqio::ProviderRegistry`] namespace where duplicate
-//! registration is an error. `get_dataset` validates the split, the
-//! task-vs-converter feature declaration, and the stream head; applies
+//! registration is an error. Caches hold *every* split of their task in
+//! per-split subdirectories (`t5x cache` writes them;
+//! `seqio::cache::cache_task_splits`), so `--use-cached` works for any
+//! split. `get_dataset` validates the split and the task-vs-converter
+//! feature declaration eagerly, audits the stream head in-stream through
+//! a state-transparent passthrough op (no second pipeline); applies
 //! the [`seqio::feature_converters`] registry entry for the requested
 //! converter/model arch; and returns a model-ready, checkpoint-resumable
 //! stream. The trainer, evaluator, and cache CLI all select data by name:

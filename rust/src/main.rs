@@ -8,7 +8,7 @@
 //! ```bash
 //! t5x list-tasks
 //! t5x cache  --task c4_lm --out /tmp/cache --shards 16 [--seed 0]
-//! t5x train  --model t5-micro-dec --steps 100 --hosts 2 --strategy 2d \
+//! t5x train  --model t5-micro-dec --steps 100 --mesh 4x2 --strategy 2d \
 //!            [--task c4_span] [--split train] [--use-cached] [--cache DIR] \
 //!            [--config run.gin] [--gin.trainer.lr=1e-3]
 //! t5x eval   --model t5-micro-dec [--task <registry-name>] [--ckpt DIR]
@@ -72,9 +72,20 @@ fn trainer_config(args: &Args, gin: &Config) -> anyhow::Result<TrainerConfig> {
         Some(_) => args.get_usize("steps", 0)? as u64,
         None => gin.usize_or("trainer", "steps", 50) as u64,
     };
-    let hosts = match args.get("hosts") {
-        Some(_) => args.get_usize("hosts", 1)?,
-        None => gin.usize_or("trainer", "num_hosts", 1),
+    // --mesh DxM > gin trainer.mesh > legacy --hosts / trainer.num_hosts
+    // (which mean a data-only Nx1 mesh).
+    let mesh = match args.get("mesh") {
+        Some(s) => Mesh::parse(s)?,
+        None => match gin.get("trainer", "mesh").and_then(|v| v.as_str()) {
+            Some(s) => Mesh::parse(s)?,
+            None => {
+                let hosts = match args.get("hosts") {
+                    Some(_) => args.get_usize("hosts", 1)?,
+                    None => gin.usize_or("trainer", "num_hosts", 1),
+                };
+                Mesh::new(hosts, 1)
+            }
+        },
     };
     let strategy = match args
         .get("strategy")
@@ -98,7 +109,7 @@ fn trainer_config(args: &Args, gin: &Config) -> anyhow::Result<TrainerConfig> {
     let warmup = gin.usize_or("trainer", "warmup_steps", 20) as u64;
     Ok(TrainerConfig {
         model,
-        num_hosts: hosts,
+        mesh,
         strategy,
         optimizer,
         schedule: Schedule::RsqrtWithWarmup { peak, warmup },
@@ -219,10 +230,12 @@ fn cmd_cache(args: &Args) -> anyhow::Result<()> {
     };
     let meta = recipes::ensure_cached(&task, &out, shards, seed)?;
     println!(
-        "cached task '{}': {} examples in {} shards at {}",
+        "cached task '{}': {} examples in {} shards x {} split(s) [{}] at {}",
         meta.task,
         meta.num_examples,
         meta.num_shards,
+        meta.splits.as_ref().map(|s| s.len()).unwrap_or(1),
+        meta.splits.as_ref().map(|s| s.join(", ")).unwrap_or_else(|| "train".into()),
         out.display()
     );
     Ok(())
@@ -309,7 +322,7 @@ fn train_source(
                         // Tool-owned (or absent) directory: (re)build as
                         // needed; ensure_cached is idempotent and rebuilds
                         // on a task/seed/shard mismatch.
-                        recipes::ensure_cached(&task, &dir, 8 * cfg.num_hosts, data_seed)?;
+                        recipes::ensure_cached(&task, &dir, 8 * cfg.mesh.data, data_seed)?;
                         println!(
                             "training '{name}' from deterministic cache at {}",
                             dir.display()
@@ -325,7 +338,7 @@ fn train_source(
                 m,
                 provider,
                 &split,
-                cfg.num_hosts,
+                cfg.mesh.data,
                 trainer.start_step,
                 data_seed,
                 resume,
@@ -335,7 +348,7 @@ fn train_source(
         (None, Some(dir)) => BatchSource::Infeed(recipes::cached_infeed(
             m,
             &dir,
-            cfg.num_hosts,
+            cfg.mesh.data,
             trainer.start_step,
             resume,
         )?),
@@ -350,11 +363,11 @@ fn cmd_train(args: &Args, gin: &Config) -> anyhow::Result<()> {
     let device = DeviceHandle::spawn()?;
     let m = arts.model(&cfg.model)?;
     println!(
-        "training {} ({:.2}M params) for {} steps on {} hosts ({:?})",
+        "training {} ({:.2}M params) for {} steps on a {} mesh ({:?})",
         cfg.model,
         m.total_params() as f64 / 1e6,
         cfg.steps,
-        cfg.num_hosts,
+        cfg.mesh,
         cfg.strategy
     );
     let logger = t5x::metrics::MetricsLogger::new()
@@ -537,6 +550,10 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
     println!("checkpoints: {steps:?}");
     if let Some(&latest) = steps.last() {
         let (params, extra) = mgr.restore(latest)?;
+        match mgr.saved_mesh(latest) {
+            Ok(Some(mesh)) => println!("step {latest}: saved on a {mesh} mesh"),
+            _ => println!("step {latest}: host-0 (v1) save"),
+        }
         println!("step {latest}: {} params", params.len());
         let mut total = 0usize;
         for (name, t) in &params {

@@ -3,11 +3,22 @@
 //! (truncated normal per the manifest init specs, like t5x's default
 //! initializers), or with the cross-language deterministic "pattern" init
 //! used by the golden tests.
+//!
+//! ## Shard-local init ([`shard_params`])
+//!
+//! Under the shard-resident trainer every host materializes only its
+//! `PartitionSpec` block of each parameter. Initialization is
+//! *init-then-slice*: the full set is generated once, exactly as in the
+//! replicated baseline (same RNG stream, same element order), then each
+//! host's blocks are sliced out with [`shard_params`] — so
+//! sharded-vs-replicated numerics match bit-for-bit regardless of mesh
+//! shape. (The full set exists only transiently, during construction.)
 
 pub mod golden;
 
 use std::collections::BTreeMap;
 
+use crate::partitioning::ShardPlan;
 use crate::runtime::artifacts::{ModelManifest, ParamSpec};
 use crate::runtime::HostTensor;
 use crate::util::rng::{pattern_init, Pcg64};
@@ -45,6 +56,20 @@ pub fn init_param(p: &ParamSpec, seed: u64) -> HostTensor {
         other => panic!("unknown init spec '{other}' for {}", p.name),
     };
     HostTensor::f32(p.shape.clone(), data)
+}
+
+/// Slice host `host`'s resident blocks out of a full parameter set, in
+/// `plan` (= manifest) order — the slice half of init-then-slice (see
+/// module docs). The trainer initializes the full set once with
+/// [`init_params`] and carves every host's blocks from it, so sharded
+/// values equal the replicated baseline's bit-for-bit.
+pub fn shard_params(params: &Params, plan: &ShardPlan, host: usize) -> Vec<HostTensor> {
+    plan.entries
+        .iter()
+        .map(|e| {
+            params[&e.name].slice_ranges(&e.spec.host_ranges(&plan.mesh, host, &e.shape))
+        })
+        .collect()
 }
 
 /// The deterministic cross-language init (matches `model.pattern_params`).
@@ -107,6 +132,24 @@ mod tests {
         assert_eq!(params["token_embed"], again["token_embed"]);
         let other = init_params(m, 43);
         assert_ne!(params["token_embed"], other["token_embed"]);
+    }
+
+    #[test]
+    fn shard_params_equals_partitioner_shard() {
+        use crate::partitioning::{Mesh, ParamStrategy, Partitioner, ShardPlan};
+        let arts = Artifacts::load_default().unwrap();
+        let m = arts.model("t5-nano-dec").unwrap();
+        let mesh = Mesh::new(2, 2);
+        let part = Partitioner::new(mesh, ParamStrategy::TwoD);
+        let plan = ShardPlan::new(&part, &m.params);
+        let full = init_params(m, 7);
+        for host in 0..mesh.num_hosts() {
+            let shards = shard_params(&full, &plan, host);
+            for (e, shard) in plan.entries.iter().zip(&shards) {
+                let expect = part.shard(&full[&e.name], &e.spec, host);
+                assert_eq!(shard, &expect, "host {host} param {}", e.name);
+            }
+        }
     }
 
     #[test]

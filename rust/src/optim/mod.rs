@@ -221,6 +221,30 @@ impl Optimizer {
         self.states.get(name)
     }
 
+    /// Borrowed `(slot, data)` views of a parameter's state — the
+    /// checkpoint write path, which must not clone the whole optimizer
+    /// state just to stream it to disk.
+    pub fn state_slices(&self, name: &str) -> Vec<(&'static str, &[f32])> {
+        match self.states.get(name) {
+            Some(ParamState::Sgd { velocity }) => vec![("velocity", velocity.as_slice())],
+            Some(ParamState::Adam { m, v }) => vec![("m", m), ("v", v)],
+            Some(ParamState::AdafactorFactored { row, col }) => {
+                vec![("vr", row), ("vc", col)]
+            }
+            Some(ParamState::AdafactorDiag { v }) => vec![("v", v)],
+            None => vec![],
+        }
+    }
+
+    /// `(slot, len)` pairs without touching the data — layout decisions
+    /// (elementwise vs factored) and restore-time slot enumeration.
+    pub fn state_slot_lens(&self, name: &str) -> Vec<(&'static str, usize)> {
+        self.state_slices(name)
+            .into_iter()
+            .map(|(slot, data)| (slot, data.len()))
+            .collect()
+    }
+
     pub fn state_vectors(&self, name: &str) -> Vec<(String, Vec<f32>)> {
         match self.states.get(name) {
             Some(ParamState::Sgd { velocity }) => vec![("velocity".into(), velocity.clone())],

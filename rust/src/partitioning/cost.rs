@@ -20,8 +20,17 @@ pub struct CostEstimate {
     pub optim_bytes_per_host: u64,
     /// Per-host peak activation bytes for one microbatch.
     pub activation_bytes_per_host: u64,
-    /// Per-step collective bytes *sent per host* for gradient sync +
-    /// (2D) parameter gather.
+    /// Per-step bytes sent per host over *data-axis* subgroups: gradient
+    /// reduce-scatter/all-reduce + (2D) data-axis parameter gather. The
+    /// measured counterpart is
+    /// `MeshCollectives::axis_bytes(MeshAxis::Data)`.
+    pub comm_bytes_data_axis: u64,
+    /// Per-step bytes sent per host over *model-axis* subgroups:
+    /// parameter all-gather, batch broadcast, and per-layer activation
+    /// all-reduces. Measured counterpart:
+    /// `MeshCollectives::axis_bytes(MeshAxis::Model)`.
+    pub comm_bytes_model_axis: u64,
+    /// Per-step collective bytes *sent per host* (both axes).
     pub comm_bytes_per_host: u64,
     /// Estimated per-step communication seconds on the link model.
     pub comm_seconds: f64,
@@ -117,37 +126,57 @@ pub fn estimate(
     // data parallel batch split
     act_bytes /= mesh.data.max(1) as u64;
 
-    // Communication per step (per host):
-    // grads have the size of the host's param shard * model-axis... grads
-    // are produced at the 1D sharding (each host computes grads for the
-    // params it holds along the model axis) and must be summed over the
-    // data axis.
-    let grad_bytes = param_bytes;
-    let comm = match params {
-        ParamStrategy::OneD => {
-            // all-reduce grads over the data axis
-            ring_all_reduce_bytes(grad_bytes, mesh.data as u64)
+    // Communication per step (per host), matching the shard-resident
+    // runtime: per parameter, the step-start gather reconstructs the full
+    // tensor (data-axis all-gather of the host's block to the model-shard
+    // size, then model-axis all-gather to full size), and gradient sync
+    // runs over the data axis at the model-shard size (reduce-scatter for
+    // data-sharded blocks, all-reduce for data-replicated ones).
+    let mut comm_data: u64 = 0;
+    let mut comm_model: u64 = 0;
+    let mut n_collectives: u64 = 0;
+    for p in &m.params {
+        let spec = partitioner.spec_for(p);
+        let full_bytes = p.elements() as u64 * 4;
+        let model_sharded = spec.dim_for(super::MeshAxis::Model).is_some();
+        let data_sharded = spec.dim_for(super::MeshAxis::Data).is_some();
+        let model_shard_bytes = if model_sharded {
+            full_bytes / mesh.model as u64
+        } else {
+            full_bytes
+        };
+        if data_sharded {
+            comm_data += ring_all_gather_bytes(model_shard_bytes, mesh.data as u64); // gather
+            comm_data += ring_reduce_scatter_bytes(model_shard_bytes, mesh.data as u64); // sync
+            n_collectives += 2;
+        } else {
+            comm_data += ring_all_reduce_bytes(model_shard_bytes, mesh.data as u64); // sync
+            n_collectives += 1;
         }
-        ParamStrategy::TwoD => {
-            // reduce-scatter grads + all-gather updated params over data axis
-            // (grad/param "full" size along the data axis is data * shard)
-            let full = grad_bytes * mesh.data as u64;
-            ring_reduce_scatter_bytes(full, mesh.data as u64)
-                + ring_all_gather_bytes(full, mesh.data as u64)
+        if model_sharded {
+            comm_model += ring_all_gather_bytes(full_bytes, mesh.model as u64); // gather
+            n_collectives += 1;
         }
-    };
+    }
+    // batch broadcast from each data row's leader to its model peers
+    // (ring forward: ~full payload per non-terminal host).
+    if mesh.model > 1 {
+        let batch_bytes: u64 = m
+            .batch_features
+            .iter()
+            .map(|f| f.shape.iter().product::<usize>() as u64 * 4)
+            .sum();
+        comm_model += batch_bytes * (mesh.model as u64 - 1) / mesh.model as u64;
+        n_collectives += 1;
+    }
     // model-parallel activation all-reduces: 2 per layer (attn + mlp outs),
     // payload = residual stream per microbatch.
-    let mp_comm = if mesh.model > 1 {
-        2 * layers * ring_all_reduce_bytes(b * l * d * 4 / mesh.data as u64, mesh.model as u64)
-    } else {
-        0
-    };
-    let comm_total = comm + mp_comm;
-    let n_collectives = match params {
-        ParamStrategy::OneD => 1,
-        ParamStrategy::TwoD => 2,
-    } + if mesh.model > 1 { 2 * layers } else { 0 };
+    if mesh.model > 1 {
+        comm_model +=
+            2 * layers * ring_all_reduce_bytes(b * l * d * 4 / mesh.data as u64, mesh.model as u64);
+        n_collectives += 2 * layers;
+    }
+    let comm_total = comm_data + comm_model;
     let comm_seconds = n_collectives as f64 * link.alpha + comm_total as f64 * link.beta;
 
     CostEstimate {
@@ -157,6 +186,8 @@ pub fn estimate(
         param_bytes_per_host: param_bytes,
         optim_bytes_per_host: optim_bytes,
         activation_bytes_per_host: act_bytes,
+        comm_bytes_data_axis: comm_data,
+        comm_bytes_model_axis: comm_model,
         comm_bytes_per_host: comm_total,
         comm_seconds,
     }
@@ -231,6 +262,28 @@ mod tests {
         assert!(a2.activation_bytes_per_host < a1.activation_bytes_per_host);
         // model parallelism costs per-layer all-reduces
         assert!(a1.comm_bytes_per_host > 0);
+    }
+
+    #[test]
+    fn per_axis_terms_split_by_mesh_axis() {
+        let arts = Artifacts::load_default().unwrap();
+        let m = arts.model("t5-micro-dec").unwrap();
+        let link = LinkModel::default();
+        // pure data parallel: all traffic on the data axis
+        let dp = estimate(m, Mesh::new(4, 1), ParamStrategy::TwoD, ActivationStrategy::OneD, link);
+        assert!(dp.comm_bytes_data_axis > 0);
+        assert_eq!(dp.comm_bytes_model_axis, 0);
+        // pure model parallel: all traffic on the model axis
+        let mp = estimate(m, Mesh::new(1, 4), ParamStrategy::OneD, ActivationStrategy::OneD, link);
+        assert_eq!(mp.comm_bytes_data_axis, 0);
+        assert!(mp.comm_bytes_model_axis > 0);
+        // 2-D: both, and the total is the sum
+        let td = estimate(m, Mesh::new(2, 2), ParamStrategy::TwoD, ActivationStrategy::OneD, link);
+        assert!(td.comm_bytes_data_axis > 0 && td.comm_bytes_model_axis > 0);
+        assert_eq!(
+            td.comm_bytes_per_host,
+            td.comm_bytes_data_axis + td.comm_bytes_model_axis
+        );
     }
 
     #[test]

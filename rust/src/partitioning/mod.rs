@@ -8,8 +8,37 @@
 //! * [`Partitioner`] — computes a [`PartitionSpec`] per parameter, slices /
 //!   reassembles host shards of [`HostTensor`]s, and implements the
 //!   paper's strategy matrix (1D vs 2D parameter partitioning).
+//! * [`ShardPlan`] — the manifest-wide materialization of those specs that
+//!   the trainer *executes*: which block of each parameter a host keeps
+//!   resident, which hosts own (vs replicate) a block, and the per-host
+//!   memory accounting behind the §2.2 claims.
 //! * [`cost`] — the analytic GSPMD memory/communication model that
-//!   regenerates the §2.2 trade-off discussion as a table (E3).
+//!   regenerates the §2.2 trade-off discussion as a table (E3), now with
+//!   per-mesh-axis communication terms validated against the measured
+//!   per-axis byte counters of [`crate::collectives::MeshCollectives`].
+//!
+//! ## Shard-resident execution (the runtime model since the 2-D refactor)
+//!
+//! Parameter state is *shard-resident end-to-end*: a host materializes
+//! only the `PartitionSpec` block of each parameter (and the matching
+//! optimizer-state block), so per-host resident memory is
+//! ~`total/(data·model)` plus the small replicated residue. Full tensors
+//! exist only transiently:
+//!
+//! * at **step start**, each host reconstructs full parameters with
+//!   data-axis then model-axis all-gathers over
+//!   [`crate::collectives::MeshCollectives`] subgroups (the unpartitioned
+//!   HLO substrate needs full inputs — on a real TPU pod XLA would keep
+//!   even execution sharded);
+//! * after the backward pass, each host keeps its model-axis slice of the
+//!   gradient and syncs it over the data axis (reduce-scatter for
+//!   data-sharded blocks, all-reduce for data-replicated ones), updating
+//!   only its resident block — parameters are never re-gathered after the
+//!   update;
+//! * **checkpoints** are written by block owners directly as disjoint
+//!   tstore slices (no host-0 gather), and restore reads each host's
+//!   block range regardless of the saving topology
+//!   (read-with-resharding).
 
 pub mod cost;
 
@@ -51,6 +80,39 @@ impl Mesh {
             MeshAxis::Data => self.data,
             MeshAxis::Model => self.model,
         }
+    }
+
+    /// Host coordinate along `axis`.
+    pub fn coord(&self, host: usize, axis: MeshAxis) -> usize {
+        let (d, m) = self.coords(host);
+        match axis {
+            MeshAxis::Data => d,
+            MeshAxis::Model => m,
+        }
+    }
+
+    /// Parse `"DxM"` (e.g. "4x2") or a bare host count `"N"` (= Nx1).
+    pub fn parse(s: &str) -> anyhow::Result<Mesh> {
+        let s = s.trim();
+        let (d, m) = match s.split_once(['x', 'X']) {
+            Some((d, m)) => (
+                d.trim().parse::<usize>().map_err(|_| bad_mesh(s))?,
+                m.trim().parse::<usize>().map_err(|_| bad_mesh(s))?,
+            ),
+            None => (s.parse::<usize>().map_err(|_| bad_mesh(s))?, 1),
+        };
+        anyhow::ensure!(d >= 1 && m >= 1, "mesh axes must be >= 1, got {s}");
+        Ok(Mesh { data: d, model: m })
+    }
+}
+
+fn bad_mesh(s: &str) -> anyhow::Error {
+    anyhow::anyhow!("bad mesh spec '{s}' (expected 'DATAxMODEL', e.g. '4x2', or a host count)")
+}
+
+impl std::fmt::Display for Mesh {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.data, self.model)
     }
 }
 
@@ -101,6 +163,49 @@ impl PartitionSpec {
                 None => d,
             })
             .collect()
+    }
+
+    /// The tensor dimension sharded over `axis` (at most one per axis by
+    /// construction), as `(dim_index, num_shards)`.
+    pub fn dim_for(&self, axis: MeshAxis) -> Option<(usize, usize)> {
+        self.dims
+            .iter()
+            .enumerate()
+            .find_map(|(i, d)| match d {
+                Some((a, n)) if *a == axis => Some((i, *n)),
+                _ => None,
+            })
+    }
+
+    pub fn is_sharded(&self) -> bool {
+        self.dims.iter().any(|d| d.is_some())
+    }
+
+    /// Host `host`'s `(start, len)` range per tensor dimension under this
+    /// spec on `mesh` — the block of the full tensor the host keeps
+    /// resident (full dim for replicated dimensions).
+    pub fn host_ranges(&self, mesh: &Mesh, host: usize, shape: &[usize]) -> Vec<(usize, usize)> {
+        shape
+            .iter()
+            .zip(&self.dims)
+            .map(|(&full, d)| match d {
+                Some((axis, n)) => {
+                    let size = full / n;
+                    (mesh.coord(host, *axis) * size, size)
+                }
+                None => (0, full),
+            })
+            .collect()
+    }
+
+    /// True if `host` is the designated *owner* of its block: its
+    /// coordinate is 0 along every mesh axis this spec does NOT shard
+    /// over. Exactly one host owns each distinct block — the host that
+    /// writes it to checkpoints and counts it in global accounting.
+    pub fn owns(&self, mesh: &Mesh, host: usize) -> bool {
+        [MeshAxis::Data, MeshAxis::Model]
+            .into_iter()
+            .all(|axis| self.dim_for(axis).is_some() || mesh.coord(host, axis) == 0)
     }
 }
 
@@ -233,6 +338,80 @@ impl Partitioner {
     }
 }
 
+// ---------------------------------------------------------------------------
+// ShardPlan: the manifest-wide sharding the trainer executes
+// ---------------------------------------------------------------------------
+
+/// One parameter's entry in a [`ShardPlan`].
+#[derive(Debug, Clone)]
+pub struct ShardEntry {
+    pub name: String,
+    /// Full tensor shape.
+    pub shape: Vec<usize>,
+    pub spec: PartitionSpec,
+    /// Shape of the per-host resident block.
+    pub shard_shape: Vec<usize>,
+}
+
+impl ShardEntry {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn shard_elems(&self) -> usize {
+        self.shard_shape.iter().product()
+    }
+}
+
+/// The concrete sharding of a whole parameter set over a mesh — what
+/// [`crate::trainer::Trainer`] keeps resident, gathers, syncs, and
+/// checkpoints. Built once per run from the manifest's [`ParamSpec`]s.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub mesh: Mesh,
+    pub strategy: ParamStrategy,
+    pub entries: Vec<ShardEntry>,
+}
+
+impl ShardPlan {
+    pub fn new(partitioner: &Partitioner, params: &[ParamSpec]) -> ShardPlan {
+        let entries = params
+            .iter()
+            .map(|p| {
+                let spec = partitioner.spec_for(p);
+                ShardEntry {
+                    name: p.name.clone(),
+                    shard_shape: spec.shard_shape(&p.shape),
+                    shape: p.shape.clone(),
+                    spec,
+                }
+            })
+            .collect();
+        ShardPlan { mesh: partitioner.mesh, strategy: partitioner.strategy, entries }
+    }
+
+    /// Total parameter elements across the full (unsharded) set.
+    pub fn total_elems(&self) -> usize {
+        self.entries.iter().map(|e| e.elems()).sum()
+    }
+
+    /// Parameter elements resident per host (identical for all hosts:
+    /// every host holds exactly one block per parameter).
+    pub fn resident_elems_per_host(&self) -> usize {
+        self.entries.iter().map(|e| e.shard_elems()).sum()
+    }
+
+    /// Elements of the largest single parameter — the transient gather
+    /// allowance in the §2.2 per-host memory claim.
+    pub fn largest_param_elems(&self) -> usize {
+        self.entries.iter().map(|e| e.elems()).max().unwrap_or(0)
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ShardEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -323,5 +502,68 @@ mod tests {
         for h in 0..4 {
             assert_eq!(p.shard(&full, &spec, h).shape, spec.shard_shape(&param.shape));
         }
+    }
+
+    #[test]
+    fn mesh_parse_and_display() {
+        assert_eq!(Mesh::parse("4x2").unwrap(), Mesh::new(4, 2));
+        assert_eq!(Mesh::parse(" 2X2 ").unwrap(), Mesh::new(2, 2));
+        assert_eq!(Mesh::parse("8").unwrap(), Mesh::new(8, 1));
+        assert!(Mesh::parse("0x2").is_err());
+        assert!(Mesh::parse("axb").is_err());
+        assert_eq!(Mesh::new(4, 2).to_string(), "4x2");
+    }
+
+    #[test]
+    fn host_ranges_match_shard_slices() {
+        let mesh = Mesh::new(2, 2);
+        let p = Partitioner::new(mesh, ParamStrategy::TwoD);
+        let param = pspec("w", vec![8, 12], vec!["embed", "mlp"]);
+        let spec = p.spec_for(&param);
+        let full = HostTensor::f32(vec![8, 12], (0..96).map(|i| i as f32).collect());
+        for h in 0..4 {
+            let ranges = spec.host_ranges(&mesh, h, &param.shape);
+            let mut t = full.clone();
+            for (axis, &(start, len)) in ranges.iter().enumerate() {
+                t = t.slice_axis(axis, start, len);
+            }
+            assert_eq!(t, p.shard(&full, &spec, h), "host {h}");
+        }
+    }
+
+    #[test]
+    fn ownership_unique_per_block() {
+        let mesh = Mesh::new(2, 2);
+        // replicated: only host (0,0) owns
+        let rep = PartitionSpec::replicated(2);
+        let owners: Vec<usize> = (0..4).filter(|&h| rep.owns(&mesh, h)).collect();
+        assert_eq!(owners, vec![0]);
+        // model-sharded only: one owner per model coordinate (data row 0)
+        let ms = PartitionSpec {
+            dims: vec![None, Some((MeshAxis::Model, 2))],
+        };
+        let owners: Vec<usize> = (0..4).filter(|&h| ms.owns(&mesh, h)).collect();
+        assert_eq!(owners, vec![0, 1]);
+        // fully sharded: every host owns its distinct block
+        let fs = PartitionSpec {
+            dims: vec![Some((MeshAxis::Data, 2)), Some((MeshAxis::Model, 2))],
+        };
+        assert!((0..4).all(|h| fs.owns(&mesh, h)));
+    }
+
+    #[test]
+    fn shard_plan_accounting() {
+        let mesh = Mesh::new(2, 2);
+        let p = Partitioner::new(mesh, ParamStrategy::TwoD);
+        let params = vec![
+            pspec("w", vec![8, 8], vec!["embed", "mlp"]),
+            pspec("scale", vec![8], vec!["embed"]),
+        ];
+        let plan = ShardPlan::new(&p, &params);
+        assert_eq!(plan.total_elems(), 72);
+        // w: 8x8 / 4 hosts = 16; scale: data-sharded 8/2 = 4
+        assert_eq!(plan.resident_elems_per_host(), 20);
+        assert_eq!(plan.largest_param_elems(), 64);
+        assert_eq!(plan.entry("scale").unwrap().shard_shape, vec![4]);
     }
 }

@@ -137,6 +137,20 @@ impl HostTensor {
         }
     }
 
+    /// Slice a block: `ranges[i] = (start, len)` per dimension (the
+    /// partitioner's host-block extraction; see
+    /// `PartitionSpec::host_ranges`).
+    pub fn slice_ranges(&self, ranges: &[(usize, usize)]) -> HostTensor {
+        assert_eq!(ranges.len(), self.shape.len(), "rank mismatch");
+        let mut out = self.clone();
+        for (axis, &(start, len)) in ranges.iter().enumerate() {
+            if (start, len) != (0, out.shape[axis]) {
+                out = out.slice_axis(axis, start, len);
+            }
+        }
+        out
+    }
+
     /// Concatenate tensors along `axis` (all other dims must match).
     pub fn concat_axis(parts: &[HostTensor], axis: usize) -> HostTensor {
         assert!(!parts.is_empty());
@@ -225,6 +239,18 @@ mod tests {
         assert_eq!(b.as_f32(), &[2., 3., 6., 7.]);
         let back = HostTensor::concat_axis(&[a, b], 1);
         assert_eq!(back, t);
+    }
+
+    #[test]
+    fn slice_ranges_extracts_block() {
+        let t = HostTensor::f32(vec![4, 4], (0..16).map(|i| i as f32).collect());
+        let b = t.slice_ranges(&[(2, 2), (0, 2)]);
+        assert_eq!(b.shape, vec![2, 2]);
+        assert_eq!(b.as_f32(), &[8., 9., 12., 13.]);
+        // full ranges are an O(1) clone
+        let full = t.slice_ranges(&[(0, 4), (0, 4)]);
+        assert_eq!(full, t);
+        assert!(t.is_shared());
     }
 
     #[test]

@@ -7,9 +7,20 @@
 //! This is the Apache-Beam substitute: multi-threaded over shard writers,
 //! one pass, deterministic given the seed. The resulting layout is read by
 //! [`super::deterministic`].
+//!
+//! Two directory layouts exist:
+//!
+//! * **single-split** ([`cache_task`], the original layout): shard files +
+//!   `cache_meta.json` at the root, holding one split (train);
+//! * **multi-split** ([`cache_task_splits`]): every split of the task
+//!   cached under `splits/<name>/` (each subdirectory is itself a valid
+//!   single-split cache), with a root `cache_meta.json` listing the split
+//!   names. [`crate::seqio::provider::CachedTask`] opens either layout and
+//!   serves each cached split through `get_dataset`.
 
 use std::path::{Path, PathBuf};
 
+use super::provider::DatasetProvider;
 use super::records::RecordWriter;
 use super::serialize_example;
 use super::task::Task;
@@ -40,11 +51,21 @@ pub struct CacheMeta {
     pub num_examples: usize,
     pub num_shards: usize,
     pub seed: u64,
+    /// The split this directory holds ("train" for legacy roots).
+    pub split: String,
+    /// Multi-split root: names cached under `splits/<name>/`. None for a
+    /// single-split directory (shard files at this level).
+    pub splits: Option<Vec<String>>,
 }
 
 impl CacheMeta {
     pub fn shard_file(dir: &Path, shard: usize) -> PathBuf {
         dir.join(format!("shard-{shard:05}.rec"))
+    }
+
+    /// Subdirectory of a multi-split cache holding one split.
+    pub fn split_dir(dir: &Path, split: &str) -> PathBuf {
+        dir.join("splits").join(split)
     }
 
     pub fn load(dir: &Path) -> anyhow::Result<CacheMeta> {
@@ -60,39 +81,55 @@ impl CacheMeta {
                 .and_then(|v| v.as_usize())
                 .ok_or_else(|| anyhow::anyhow!("cache_meta missing num_shards"))?,
             seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            split: j
+                .get("split")
+                .and_then(|v| v.as_str())
+                .unwrap_or("train")
+                .to_string(),
+            splits: j.get("splits").and_then(|v| v.as_arr()).map(|a| {
+                a.iter()
+                    .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                    .collect()
+            }),
         })
     }
 
     fn save(&self, dir: &Path) -> anyhow::Result<()> {
-        let j = Json::obj(vec![
+        let mut pairs = vec![
             ("task", Json::str(self.task.clone())),
             ("num_examples", Json::num(self.num_examples as f64)),
             ("num_shards", Json::num(self.num_shards as f64)),
             ("seed", Json::num(self.seed as f64)),
-        ]);
-        std::fs::write(dir.join("cache_meta.json"), j.to_string())?;
+            ("split", Json::str(self.split.clone())),
+        ];
+        if let Some(splits) = &self.splits {
+            pairs.push((
+                "splits",
+                Json::Arr(splits.iter().map(|s| Json::str(s.clone())).collect()),
+            ));
+        }
+        std::fs::write(dir.join("cache_meta.json"), Json::obj(pairs).to_string())?;
         Ok(())
     }
 }
 
-/// Run the cache job: preprocess -> global shuffle -> index -> shard by
-/// `index % num_shards`. Returns the metadata. Atomic: writes into a
-/// `.tmp` directory then renames.
-pub fn cache_task(
+/// Cache one split of a task into `dir` (shard files + per-dir metadata;
+/// no atomicity — callers stage into a tmp root and rename).
+fn write_split(
     task: &Task,
-    out_dir: impl AsRef<Path>,
+    split: &str,
+    dir: &Path,
     cfg: &CacheConfig,
 ) -> anyhow::Result<CacheMeta> {
-    let out_dir = out_dir.as_ref();
-    let tmp_dir = out_dir.with_extension("tmp");
-    if tmp_dir.exists() {
-        std::fs::remove_dir_all(&tmp_dir)?;
-    }
-    std::fs::create_dir_all(&tmp_dir)?;
+    std::fs::create_dir_all(dir)?;
 
-    // 1. materialize the preprocessed dataset (the "Beam" load+preprocess).
-    let mut examples = task.dataset(cfg.seed, 0, 1).collect_vec();
-    anyhow::ensure!(!examples.is_empty(), "task '{}' produced no examples", task.name);
+    // 1. materialize the preprocessed split (the "Beam" load+preprocess).
+    let mut examples = task.dataset_split(split, cfg.seed, 0, 1)?.collect_vec();
+    anyhow::ensure!(
+        !examples.is_empty(),
+        "task '{}' split '{split}' produced no examples",
+        task.name
+    );
     for ex in examples.iter().take(8) {
         task.validate_example(ex)?;
     }
@@ -107,8 +144,8 @@ pub fn cache_task(
     let shards = cfg.num_shards.max(1);
     let examples = std::sync::Arc::new(examples);
     let counts = parallel_map(shards, cfg.workers.max(1), |s| {
-        let mut w = RecordWriter::create(CacheMeta::shard_file(&tmp_dir, s))
-            .expect("create shard");
+        let mut w =
+            RecordWriter::create(CacheMeta::shard_file(dir, s)).expect("create shard");
         let mut i = s;
         while i < n {
             w.write(&serialize_example(&examples[i])).expect("write record");
@@ -123,15 +160,73 @@ pub fn cache_task(
         num_examples: n,
         num_shards: shards,
         seed: cfg.seed,
+        split: split.to_string(),
+        splits: None,
     };
-    meta.save(&tmp_dir)?;
+    meta.save(dir)?;
+    Ok(meta)
+}
 
-    // Atomic commit.
+/// Atomically replace `out_dir` with `tmp_dir`.
+fn commit(tmp_dir: &Path, out_dir: &Path) -> anyhow::Result<()> {
     if out_dir.exists() {
         std::fs::remove_dir_all(out_dir)?;
     }
-    std::fs::rename(&tmp_dir, out_dir)?;
+    std::fs::rename(tmp_dir, out_dir)?;
+    Ok(())
+}
+
+/// Run the single-split cache job (train split at the directory root —
+/// the original layout): preprocess -> global shuffle -> index -> shard by
+/// `index % num_shards`. Returns the metadata. Atomic: writes into a
+/// `.tmp` directory then renames.
+pub fn cache_task(
+    task: &Task,
+    out_dir: impl AsRef<Path>,
+    cfg: &CacheConfig,
+) -> anyhow::Result<CacheMeta> {
+    let out_dir = out_dir.as_ref();
+    let tmp_dir = out_dir.with_extension("tmp");
+    if tmp_dir.exists() {
+        std::fs::remove_dir_all(&tmp_dir)?;
+    }
+    let meta = write_split(task, "train", &tmp_dir, cfg)?;
+    commit(&tmp_dir, out_dir)?;
     Ok(meta)
+}
+
+/// Cache *every* split the task declares, each under `splits/<name>/`
+/// (per-split subdirectories), with a root metadata file listing them.
+/// Returns the root metadata (`num_examples` = total over splits). Atomic
+/// at the root: a reader never observes a partially cached split set.
+pub fn cache_task_splits(
+    task: &Task,
+    out_dir: impl AsRef<Path>,
+    cfg: &CacheConfig,
+) -> anyhow::Result<CacheMeta> {
+    let out_dir = out_dir.as_ref();
+    let tmp_dir = out_dir.with_extension("tmp");
+    if tmp_dir.exists() {
+        std::fs::remove_dir_all(&tmp_dir)?;
+    }
+    std::fs::create_dir_all(&tmp_dir)?;
+    let split_names = DatasetProvider::splits(task);
+    let mut total = 0usize;
+    for split in &split_names {
+        let m = write_split(task, split, &CacheMeta::split_dir(&tmp_dir, split), cfg)?;
+        total += m.num_examples;
+    }
+    let root = CacheMeta {
+        task: task.name.clone(),
+        num_examples: total,
+        num_shards: cfg.num_shards.max(1),
+        seed: cfg.seed,
+        split: "train".to_string(),
+        splits: Some(split_names),
+    };
+    root.save(&tmp_dir)?;
+    commit(&tmp_dir, out_dir)?;
+    Ok(root)
 }
 
 #[cfg(test)]
@@ -179,6 +274,38 @@ mod tests {
         let mut r = RecordReader::open(CacheMeta::shard_file(&dir, 1)).unwrap();
         let ex = deserialize_example(&r.read_at(0).unwrap()).unwrap();
         assert!(ex.contains_key("targets"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn multi_split_cache_layout() {
+        let dir = std::env::temp_dir().join(format!("cache_ms_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let vocab: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(16));
+        let task = Task::builder("cache_ms_task")
+            .source(Arc::new(SyntheticTextSource::new(3, 20)))
+            .split_source("validation", Arc::new(SyntheticTextSource::new(99, 8)))
+            .preprocessor(Arc::new(Tokenize::new(vocab.clone(), &[("text", "targets")])))
+            .output_feature("targets", vocab, true)
+            .build();
+        let cfg = CacheConfig { num_shards: 4, seed: 2, workers: 2 };
+        let root = cache_task_splits(&task, &dir, &cfg).unwrap();
+        assert_eq!(
+            root.splits.as_deref(),
+            Some(["train".to_string(), "validation".to_string()].as_slice())
+        );
+        assert_eq!(root.num_examples, 28);
+        // root meta loads and records the split list
+        let loaded = CacheMeta::load(&dir).unwrap();
+        assert_eq!(loaded.splits, root.splits);
+        // each split subdirectory is itself a valid single-split cache
+        for (split, n) in [("train", 20), ("validation", 8)] {
+            let sub = CacheMeta::load(&CacheMeta::split_dir(&dir, split)).unwrap();
+            assert_eq!(sub.num_examples, n, "{split}");
+            assert_eq!(sub.split, split);
+            assert!(sub.splits.is_none());
+            assert!(CacheMeta::shard_file(&CacheMeta::split_dir(&dir, split), 0).exists());
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -30,12 +30,14 @@ use std::sync::{Arc, Mutex};
 
 use once_cell::sync::Lazy;
 
-use super::dataset::{Dataset, DatasetFactory, PipelineState};
+use super::dataset::{Dataset, DatasetFactory, PipelineOp, PipelineState};
 use super::deterministic::{strip_index, DeterministicPipeline};
 use super::evaluation::Metric;
 use super::feature_converters::{resolve_converter, FeatureConverter, FeatureLengths};
 use super::mixture::Mixture;
 use super::task::{OutputFeature, Task};
+use super::Example;
+use crate::util::json::Json;
 
 /// Which data shard of a split this reader owns (seqio.ShardInfo).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -187,65 +189,112 @@ impl DatasetProvider for Mixture {
 // CachedTask: an offline deterministic cache as a provider (§3.2)
 // ---------------------------------------------------------------------------
 
-/// A [`DeterministicPipeline`] cache directory wrapped as a provider, so
+/// A deterministic cache directory wrapped as a provider, so
 /// offline-preprocessed data is interchangeable with its live task behind
 /// [`get_dataset`]. Examples arrive in global index order and carry the
 /// `_index` audit feature (stripped before feature conversion).
+///
+/// Both cache layouts are served: a legacy single-split root (train at
+/// the directory root) and the multi-split layout of
+/// [`crate::seqio::cache::cache_task_splits`], where every split of the
+/// task lives in its own `splits/<name>/` subdirectory and is addressable
+/// through `get_dataset(.., split, ..)` like any live split.
 pub struct CachedTask {
     name: String,
-    pipeline: DeterministicPipeline,
+    dir: std::path::PathBuf,
+    build_seed: u64,
+    /// Split name -> its deterministic reader (BTreeMap: "train" sorts
+    /// before "validation", keeping split listings stable).
+    pipelines: BTreeMap<String, DeterministicPipeline>,
     output_features: Vec<OutputFeature>,
     metrics: Vec<Metric>,
 }
 
 impl CachedTask {
-    /// Open a cache directory. `live` supplies the feature/metric
-    /// declarations (a cache stores only examples); pass `None` for raw
-    /// access — [`get_dataset`] then validates features against the
-    /// stream head instead of the declaration.
+    /// Open a cache directory (either layout). `live` supplies the
+    /// feature/metric declarations (a cache stores only examples); pass
+    /// `None` for raw access — [`get_dataset`] then validates features
+    /// against the stream head instead of the declaration.
     pub fn open(dir: impl AsRef<Path>, live: Option<&Task>) -> anyhow::Result<CachedTask> {
         let dir = dir.as_ref();
-        let pipeline = DeterministicPipeline::open(dir)?;
+        let root = crate::seqio::cache::CacheMeta::load(dir)?;
+        let mut pipelines = BTreeMap::new();
+        match &root.splits {
+            Some(names) => {
+                for split in names {
+                    let sub = crate::seqio::cache::CacheMeta::split_dir(dir, split);
+                    pipelines.insert(split.clone(), DeterministicPipeline::open(&sub)?);
+                }
+                anyhow::ensure!(
+                    pipelines.contains_key("train"),
+                    "multi-split cache at {} has no 'train' split",
+                    dir.display()
+                );
+            }
+            None => {
+                pipelines.insert("train".to_string(), DeterministicPipeline::open(dir)?);
+            }
+        }
         let name = if let Some(t) = live {
             anyhow::ensure!(
-                pipeline.meta.task.is_empty() || pipeline.meta.task == t.name,
+                root.task.is_empty() || root.task == t.name,
                 "cache at {} was built from task '{}', not '{}'",
                 dir.display(),
-                pipeline.meta.task,
+                root.task,
                 t.name
             );
             t.name.clone()
-        } else if !pipeline.meta.task.is_empty() {
-            pipeline.meta.task.clone()
+        } else if !root.task.is_empty() {
+            root.task.clone()
         } else {
             dir.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default()
         };
         Ok(CachedTask {
             name,
-            pipeline,
+            dir: dir.to_path_buf(),
+            build_seed: root.seed,
+            pipelines,
             output_features: live.map(|t| t.output_features.clone()).unwrap_or_default(),
             metrics: live.map(|t| t.metrics.clone()).unwrap_or_default(),
         })
     }
 
     pub fn dir(&self) -> &Path {
-        &self.pipeline.dir
+        &self.dir
     }
 
+    /// Examples in the train split (see [`CachedTask::num_input_examples`]
+    /// for other splits).
     pub fn num_examples(&self) -> usize {
-        self.pipeline.meta.num_examples
+        self.pipelines["train"].meta.num_examples
     }
 
     /// The preprocessing/shuffle seed the cache was built with — the seed
     /// that pins this provider's data (runtime seeds are ignored).
     pub fn build_seed(&self) -> u64 {
-        self.pipeline.meta.seed
+        self.build_seed
+    }
+
+    fn pipeline(&self, split: &str) -> anyhow::Result<&DeterministicPipeline> {
+        self.pipelines.get(split).ok_or_else(|| {
+            anyhow::anyhow!(
+                "cached task '{}' has no split '{split}' (cached: [{}]); re-cache with \
+                 `t5x cache` to pick up new splits",
+                self.name,
+                DatasetProvider::splits(self).join(", ")
+            )
+        })
     }
 }
 
 impl DatasetProvider for CachedTask {
     fn name(&self) -> &str {
         &self.name
+    }
+
+    /// Every cached split ("train" first; BTreeMap order).
+    fn splits(&self) -> Vec<String> {
+        self.pipelines.keys().cloned().collect()
     }
 
     fn output_features(&self) -> Vec<OutputFeature> {
@@ -277,25 +326,20 @@ impl DatasetProvider for CachedTask {
         start: usize,
         repeat: bool,
     ) -> anyhow::Result<Option<Dataset>> {
+        let pipeline = self.pipeline(split)?;
         anyhow::ensure!(
-            split == "train",
-            "cached task '{}' holds a single 'train' split (got '{split}'); \
-             cache each split separately",
-            self.name
-        );
-        anyhow::ensure!(
-            self.pipeline.meta.num_shards % shard.num_shards == 0,
-            "cache '{}' has {} files, not divisible by {} shards (re-cache with a \
-             shard count that is a multiple of every host count)",
+            pipeline.meta.num_shards % shard.num_shards == 0,
+            "cache '{}' split '{split}' has {} files, not divisible by {} shards \
+             (re-cache with a shard count that is a multiple of every host count)",
             self.name,
-            self.pipeline.meta.num_shards,
+            pipeline.meta.num_shards,
             shard.num_shards
         );
-        Ok(Some(self.pipeline.try_host_stream(shard.index, shard.num_shards, start, repeat)?))
+        Ok(Some(pipeline.try_host_stream(shard.index, shard.num_shards, start, repeat)?))
     }
 
-    fn num_input_examples(&self, _split: &str) -> Option<usize> {
-        Some(self.pipeline.meta.num_examples)
+    fn num_input_examples(&self, split: &str) -> Option<usize> {
+        Some(self.pipelines.get(split)?.meta.num_examples)
     }
 }
 
@@ -543,35 +587,6 @@ pub fn get_dataset(
         }
     }
 
-    // -- stream-head validation on a fresh probe --------------------------
-    // (leaves the returned stream's position untouched)
-    if opts.validate {
-        let mut probe = provider.dataset(&opts.split, opts.shard, opts.seed)?;
-        if let Some(head) = probe.next() {
-            for f in features.iter().filter(|f| f.required) {
-                anyhow::ensure!(
-                    head.contains_key(&f.name),
-                    "task '{}', split '{}': stream head is missing required feature '{}'",
-                    provider.name(),
-                    opts.split,
-                    f.name
-                );
-            }
-            if let Some(c) = &conv {
-                for feat in c.task_features() {
-                    anyhow::ensure!(
-                        head.contains_key(*feat),
-                        "task '{}', split '{}': stream head is missing task feature \
-                         '{feat}' required by converter '{}'",
-                        provider.name(),
-                        opts.split,
-                        c.name()
-                    );
-                }
-            }
-        }
-    }
-
     // -- build the positioned raw stream ----------------------------------
     let start = if opts.resume.is_some() { 0 } else { opts.start };
     let native =
@@ -580,12 +595,10 @@ pub fn get_dataset(
         Some(ds) => ds,
         None => {
             let mut ds = if opts.repeat {
-                // Surface construction errors eagerly (the factory closure
-                // below can only panic) — unless the validation probe above
-                // already built this pipeline once and proved it constructs.
-                if !opts.validate {
-                    drop(provider.dataset(&opts.split, opts.shard, opts.seed)?);
-                }
+                // Surface construction errors eagerly — the factory
+                // closure below can only panic (construction only: no
+                // element is pulled, no preprocessing runs).
+                drop(provider.dataset(&opts.split, opts.shard, opts.seed)?);
                 let (p, split, shard, seed) =
                     (provider.clone(), opts.split.clone(), opts.shard, opts.seed);
                 Arc::new(DatasetFactory::new(move || {
@@ -602,6 +615,48 @@ pub fn get_dataset(
             }
             ds
         }
+    };
+
+    // -- stream-head validation, in-stream --------------------------------
+    // A state-transparent passthrough op audits the first element actually
+    // produced (no second pipeline is built or consumed, unlike the old
+    // probe). Schema-level errors (missing split, undeclared features,
+    // missing lengths) still fail eagerly above; a head that contradicts
+    // the declaration is a data bug and panics with the full context.
+    let raw = if opts.validate {
+        let required: Vec<String> = features
+            .iter()
+            .filter(|f| f.required)
+            .map(|f| f.name.clone())
+            .collect();
+        let conv_feats: Vec<String> = conv
+            .as_ref()
+            .map(|c| c.task_features().iter().map(|f| f.to_string()).collect())
+            .unwrap_or_default();
+        let conv_name = conv.as_ref().map(|c| c.name().to_string());
+        let ctx = format!("task '{}', split '{}'", provider.name(), opts.split);
+        Dataset::from_op(ValidateHeadOp {
+            inner: raw.into_op(),
+            check: Some(Box::new(move |head: &Example| {
+                for f in &required {
+                    anyhow::ensure!(
+                        head.contains_key(f),
+                        "{ctx}: stream head is missing required feature '{f}'"
+                    );
+                }
+                for feat in &conv_feats {
+                    anyhow::ensure!(
+                        head.contains_key(feat),
+                        "{ctx}: stream head is missing task feature '{feat}' required \
+                         by converter '{}'",
+                        conv_name.as_deref().unwrap_or("?")
+                    );
+                }
+                Ok(())
+            })),
+        })
+    } else {
+        raw
     };
 
     // -- feature conversion ------------------------------------------------
@@ -626,6 +681,41 @@ pub fn get_dataset(
         })?;
     }
     Ok(ds)
+}
+
+/// Validating passthrough: audits the first element flowing through the
+/// stream, then becomes a no-op forwarder. State-transparent — `state()`
+/// and `restore()` delegate to the inner op, so the pipeline-state payload
+/// is byte-identical to an unvalidated stream (checkpoints from validated
+/// and unvalidated builds interchange). A failed check panics: by the time
+/// an element exists, schema-level errors have already been rejected
+/// eagerly, so a bad head means the data itself contradicts the task
+/// declaration.
+struct ValidateHeadOp {
+    inner: Box<dyn PipelineOp>,
+    check: Option<Box<dyn FnOnce(&Example) -> anyhow::Result<()> + Send>>,
+}
+
+impl PipelineOp for ValidateHeadOp {
+    fn next(&mut self) -> Option<Example> {
+        let e = self.inner.next();
+        if let Some(ex) = &e {
+            if let Some(check) = self.check.take() {
+                if let Err(err) = check(ex) {
+                    panic!("get_dataset stream validation failed: {err:#}");
+                }
+            }
+        }
+        e
+    }
+
+    fn state(&mut self) -> Json {
+        self.inner.state()
+    }
+
+    fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
+        self.inner.restore(s)
+    }
 }
 
 #[cfg(test)]
@@ -707,6 +797,69 @@ mod tests {
         .unwrap()
         .collect_vec();
         assert_eq!(from_5.as_slice(), &one_pass[5..]);
+    }
+
+    #[test]
+    fn cached_task_serves_every_split() {
+        use crate::seqio::cache::{cache_task_splits, CacheConfig};
+        let dir = std::env::temp_dir()
+            .join(format!("prov_ms_cache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let task = toy_task("prov_unit_ms_cache");
+        cache_task_splits(&task, &dir, &CacheConfig { num_shards: 2, seed: 0, workers: 2 })
+            .unwrap();
+        let cached = Arc::new(CachedTask::open(&dir, Some(&task)).unwrap());
+        assert_eq!(
+            DatasetProvider::splits(cached.as_ref()),
+            vec!["train".to_string(), "validation".to_string()]
+        );
+        assert_eq!(cached.num_input_examples("train"), Some(12));
+        assert_eq!(cached.num_input_examples("validation"), Some(6));
+        let val = get_dataset(
+            cached.clone(),
+            &GetDatasetOptions { split: "validation".into(), ..Default::default() },
+        )
+        .unwrap()
+        .collect_vec();
+        assert_eq!(val.len(), 6);
+        // unknown split still errors eagerly with the cached split list
+        let err = get_dataset(
+            cached,
+            &GetDatasetOptions { split: "test".into(), ..Default::default() },
+        )
+        .err()
+        .expect("must error")
+        .to_string();
+        assert!(err.contains("test"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn head_validation_is_in_stream_and_state_transparent() {
+        let task = toy_task("prov_unit_head_validate");
+        // validated and unvalidated streams produce byte-identical
+        // pipeline states (the op is transparent)
+        let mut v = get_dataset(task.clone(), &GetDatasetOptions::default()).unwrap();
+        let mut u = get_dataset(
+            task.clone(),
+            &GetDatasetOptions { validate: false, ..Default::default() },
+        )
+        .unwrap();
+        v.next();
+        u.next();
+        assert_eq!(v.state(), u.state());
+        // a head contradicting the declaration panics on the first pull,
+        // not at build time
+        let vocab: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(16));
+        let lying = Task::builder("prov_unit_lying")
+            .source(Arc::new(SyntheticTextSource::new(1, 4)))
+            // no Tokenize: "targets" is declared but never produced
+            .output_feature("targets", vocab, true)
+            .build();
+        let mut ds = get_dataset(lying, &GetDatasetOptions::default())
+            .expect("schema checks pass; the data lies");
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| ds.next()));
+        assert!(r.is_err(), "bad head must panic in-stream");
     }
 
     #[test]

@@ -72,11 +72,23 @@ pub fn assemble_batch(m: &ModelManifest, examples: &[Example]) -> Vec<HostTensor
 /// Multi-host prefetching infeed. One background thread per host converts
 /// its stream into ready batches through a bounded pipe, pairing each
 /// batch with the pipeline state that follows it.
+///
+/// On a 2-D `data × model` mesh, spawn one stream per *data row*
+/// (`num_hosts = mesh.data`): hosts in the same row consume the same
+/// batch — the row leader (`model` coordinate 0) pulls from its stream
+/// and broadcasts to its model-axis peers
+/// ([`crate::collectives::broadcast_batch`]), so pipeline state stays
+/// per-row and checkpoints reshard across model-axis changes for free.
 pub struct Infeed {
     receivers: Vec<Mutex<PipeReceiver<(Vec<HostTensor>, Json)>>>,
     /// Per host: pipeline state after the last batch *delivered* by
     /// [`Infeed::next`] (initially the stream's starting state).
     states: Vec<Mutex<Json>>,
+    /// Set when a producer thread panicked (e.g. the in-stream head
+    /// validation of `get_dataset`): [`Infeed::next`] then re-raises
+    /// instead of reporting a clean end-of-stream, so a data bug fails the
+    /// run loudly rather than producing a silent zero-step "success".
+    failed: std::sync::Arc<std::sync::atomic::AtomicBool>,
 }
 
 impl Infeed {
@@ -115,6 +127,7 @@ impl Infeed {
         let mut receivers = Vec::with_capacity(num_hosts);
         let mut states_out = Vec::with_capacity(num_hosts);
         let batch = m.batch();
+        let failed = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
         for host in 0..num_hosts {
             let (tx, rx) = Pipe::bounded(prefetch.max(1));
             let mut stream = make_stream(host)
@@ -127,32 +140,48 @@ impl Infeed {
             let start_state = stream.state().0;
             states_out.push(Mutex::new(start_state));
             let manifest = m.clone();
+            let failed_flag = failed.clone();
             std::thread::Builder::new()
                 .name(format!("infeed-{host}"))
                 .spawn(move || {
-                    let mut buf = Vec::with_capacity(batch);
-                    while let Some(ex) = stream.next() {
-                        buf.push(ex);
-                        if buf.len() == batch {
-                            let assembled = assemble_batch(&manifest, &buf);
-                            buf.clear();
-                            // Snapshot at the batch boundary: the state a
-                            // consumer resumes from after this batch.
-                            let state = stream.state().0;
-                            if !tx.send((assembled, state)) {
-                                return; // trainer hung up
+                    // `tx` stays owned by this outer scope: the failure
+                    // flag is set BEFORE the sender drops, so a consumer
+                    // observing the disconnect always sees the flag.
+                    let tx_ref = &tx;
+                    let produce = std::panic::AssertUnwindSafe(move || {
+                        let mut buf = Vec::with_capacity(batch);
+                        while let Some(ex) = stream.next() {
+                            buf.push(ex);
+                            if buf.len() == batch {
+                                let assembled = assemble_batch(&manifest, &buf);
+                                buf.clear();
+                                // Snapshot at the batch boundary: the state
+                                // a consumer resumes from after this batch.
+                                let state = stream.state().0;
+                                if !tx_ref.send((assembled, state)) {
+                                    return; // trainer hung up
+                                }
                             }
                         }
+                        // drop partial tail batch (seqio drop_remainder=True)
+                    });
+                    if std::panic::catch_unwind(produce).is_err() {
+                        failed_flag.store(true, std::sync::atomic::Ordering::SeqCst);
                     }
-                    // drop partial tail batch (seqio drop_remainder=True)
+                    drop(tx);
                 })
                 .expect("spawn infeed thread");
             receivers.push(Mutex::new(rx));
         }
-        Ok(Infeed { receivers, states: states_out })
+        Ok(Infeed { receivers, states: states_out, failed })
     }
 
-    /// Blocking fetch of host `h`'s next batch; None when the stream ends.
+    /// Blocking fetch of host `h`'s next batch; None when the stream ends
+    /// — including when the producer died abnormally, so that every mesh
+    /// rank winds down through the ordinary exhaustion path (panicking
+    /// here would strand peers mid-collective). Callers must check
+    /// [`Infeed::failed`] after the loop; the trainer turns it into an
+    /// error instead of a silent zero-step "success".
     pub fn next(&self, host: usize) -> Option<Vec<HostTensor>> {
         let item = self.receivers[host].lock().unwrap().recv();
         match item {
@@ -162,6 +191,12 @@ impl Infeed {
             }
             None => None,
         }
+    }
+
+    /// True if any producer thread panicked (e.g. the in-stream head
+    /// validation of `get_dataset`) rather than ending cleanly.
+    pub fn failed(&self) -> bool {
+        self.failed.load(std::sync::atomic::Ordering::SeqCst)
     }
 
     /// Pipeline state of host `h` as of its last consumed batch. Saved in

@@ -1,22 +1,51 @@
-//! The t5x training loop (S7): data-parallel simulated hosts, explicit
-//! gradient synchronization, ZeRO-style sharded optimizer updates, metric
-//! logging, checkpointing hooks, and exact resume.
+//! The t5x training loop (S7): a 2-D `data × model` mesh of simulated
+//! hosts executing the `Partitioner`'s sharding plan — shard-resident
+//! parameters, axis-subgroup collectives, ZeRO-style sharded optimizer
+//! updates, metric logging, distributed checkpointing, and exact resume.
 //!
-//! Strategy semantics (paper §2.2) at runtime:
+//! ## Shard-resident execution (paper §2.2 at runtime)
 //!
-//! * [`ParamStrategy::OneD`] — every host holds full parameters and full
-//!   optimizer state; per-step: grads are *ring all-reduced* over the data
-//!   axis and every host applies the same update ("1D parameter
-//!   partitioning": params replicated over the data axis).
-//! * [`ParamStrategy::TwoD`] — ZeRO-3/FSDP: per-step grads are
-//!   *reduce-scattered*, each host updates only its 1/D contiguous shard
-//!   of the flat parameter vector (and owns only that shard's optimizer
-//!   state), then the updated shards are *all-gathered*. Numerics are
-//!   identical to OneD for elementwise optimizers (verified by E4).
+//! Every host keeps exactly one [`PartitionSpec`] block of each parameter
+//! (and the matching optimizer-state block) resident — per-host memory is
+//! ~`total/(data·model)` plus the replicated residue, for any mesh shape.
+//! One step, for host `(d, m)`:
 //!
-//! Model parallelism at runtime is exercised by the Megatron FFN demo
-//! (examples/partitioning_demo.rs); the exported whole-model HLOs are
-//! data-parallel per host (mesh.model == 1 in the trainer).
+//! 1. **infeed** — data-axis replica groups share batches: the row leader
+//!    (`m == 0`) pulls the row's batch and broadcasts it over the
+//!    model-axis subgroup (synthetic sources are recomputed locally, keyed
+//!    by the data coordinate).
+//! 2. **gather** — full parameters are reconstructed transiently with a
+//!    data-axis then model-axis all-gather per sharded dimension (the
+//!    unpartitioned HLO substrate needs full inputs; real GSPMD would keep
+//!    execution sharded too, so resident-state accounting deliberately
+//!    excludes this buffer).
+//! 3. **execute** — forward/backward on the device.
+//! 4. **sync** — each host slices the gradient to its model-axis block
+//!    (free: the values are already local) and syncs over the data-axis
+//!    subgroup: reduce-scatter for data-sharded blocks, all-reduce for
+//!    data-replicated ones. Parameters are *not* re-gathered after the
+//!    update — they live sharded until the next step's gather.
+//! 5. **update** — the optimizer updates only the resident block.
+//!
+//! Strategy semantics: [`ParamStrategy::OneD`] shards parameters over the
+//! model axis only (replicated over data — Megatron-style); with
+//! `model == 1` this is the fully replicated baseline.
+//! [`ParamStrategy::TwoD`] additionally shards over the data axis
+//! (ZeRO-3/FSDP). Initialization is init-then-slice
+//! ([`crate::model::shard_params`]) and 2-rank ring sums are
+//! commutative, so a `d×m` TwoD run is bit-identical to the `d×1`
+//! replicated baseline for elementwise optimizers when `d == 2` (asserted
+//! by `tests/integration_sharded.rs`; wider data axes agree to summation
+//! order).
+//!
+//! ## Distributed checkpoints
+//!
+//! Each owning host writes its disjoint block directly to the shared
+//! `tstore` arrays (chunk-aligned sliced writes along axis 0, block grids
+//! elsewhere) — no host ever gathers the full parameter set. Restore
+//! range-reads each host's block regardless of the saving topology, so a
+//! run saved on `4x2` resumes on `2x2` or `8x1`
+//! (see [`crate::checkpoint`]).
 
 pub mod eval;
 pub mod infeed;
@@ -27,17 +56,22 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::checkpoint::{CheckpointManager, ExtraState};
-use crate::collectives::{chunk_bounds, run_ranks, CollectiveGroup};
-use crate::seqio::dataset::PipelineState;
-use crate::metrics::MetricsLogger;
+use crate::checkpoint::{block_coords, CheckpointManager};
+use crate::collectives::{
+    all_gather_axis, all_reduce_tensor, broadcast_batch, reduce_scatter_axis, run_ranks,
+    MeshCollectives,
+};
+use crate::metrics::{CounterSet, MetricsLogger};
 use crate::model::Params;
 use crate::optim::{Optimizer, OptimizerKind, Schedule};
-use crate::partitioning::ParamStrategy;
+use crate::partitioning::{Mesh, MeshAxis, ParamStrategy, PartitionSpec, Partitioner, ShardPlan};
 use crate::runtime::artifacts::ModelManifest;
 use crate::runtime::{Artifacts, DeviceHandle, Executable, HostTensor};
+use crate::seqio::dataset::PipelineState;
 
-/// Flat parameter layout: manifest order, contiguous f32.
+/// Flat parameter layout: manifest order, contiguous f32. Retained as a
+/// utility for tests/tools that want whole-model views; the trainer's
+/// resident state is per-parameter blocks, not this flat vector.
 #[derive(Debug, Clone)]
 pub struct FlatLayout {
     /// (name, offset, len, shape) per parameter.
@@ -89,30 +123,24 @@ impl FlatLayout {
 
 /// Where batches come from.
 pub enum BatchSource {
-    /// Deterministic random tokens (tests/benches).
+    /// Deterministic random tokens (tests/benches), keyed by the *data
+    /// row* — model-axis peers recompute the same batch locally.
     Synthetic { seed: u64 },
-    /// A spawned seqio infeed (one prefetching stream per host).
+    /// A spawned seqio infeed: one prefetching stream per data row
+    /// (spawn it with `num_hosts = mesh.data`); row leaders broadcast to
+    /// their model-axis peers.
     Infeed(infeed::Infeed),
 }
 
 impl BatchSource {
-    fn next(&self, m: &ModelManifest, host: usize, step: u64) -> Option<Vec<HostTensor>> {
-        match self {
-            BatchSource::Synthetic { seed } => {
-                Some(infeed::synthetic_batch(m, *seed, host, step))
-            }
-            BatchSource::Infeed(inf) => inf.next(host),
-        }
-    }
-
-    /// Per-host pipeline states as of the last consumed batch (None for
+    /// Per-row pipeline states as of the last consumed batch (None for
     /// stateless synthetic sources). Persisted with each checkpoint so the
     /// data stream resumes exactly where the params/optimizer do.
-    fn pipeline_states(&self, num_hosts: usize) -> Option<Vec<PipelineState>> {
+    fn pipeline_states(&self, num_rows: usize) -> Option<Vec<PipelineState>> {
         match self {
             BatchSource::Synthetic { .. } => None,
             BatchSource::Infeed(inf) => {
-                Some((0..num_hosts).map(|h| inf.pipeline_state(h)).collect())
+                Some((0..num_rows).map(|h| inf.pipeline_state(h)).collect())
             }
         }
     }
@@ -121,8 +149,8 @@ impl BatchSource {
 #[derive(Clone, Debug)]
 pub struct TrainerConfig {
     pub model: String,
-    /// Data-parallel host count (runtime model axis is 1; see module docs).
-    pub num_hosts: usize,
+    /// The 2-D host mesh: `data` replica rows × `model` shards per row.
+    pub mesh: Mesh,
     pub strategy: ParamStrategy,
     pub optimizer: OptimizerKind,
     pub schedule: Schedule,
@@ -142,7 +170,7 @@ impl TrainerConfig {
     pub fn quick(model: &str, steps: u64) -> TrainerConfig {
         TrainerConfig {
             model: model.to_string(),
-            num_hosts: 1,
+            mesh: Mesh::new(1, 1),
             strategy: ParamStrategy::OneD,
             optimizer: OptimizerKind::adam(),
             schedule: Schedule::RsqrtWithWarmup { peak: 3e-3, warmup: 20 },
@@ -154,6 +182,10 @@ impl TrainerConfig {
             grad_clip_norm: None,
             weight_decay: None,
         }
+    }
+
+    pub fn num_hosts(&self) -> usize {
+        self.mesh.num_hosts()
     }
 }
 
@@ -170,7 +202,13 @@ pub struct StepMetrics {
 pub struct TrainSummary {
     pub history: Vec<StepMetrics>,
     pub final_step: u64,
+    /// Total bytes moved over all collectives (both axes + global group).
     pub comm_bytes: u64,
+    /// Bytes moved over data-axis subgroups (gradient sync).
+    pub data_axis_bytes: u64,
+    /// Bytes moved over model-axis subgroups (parameter gathers, batch
+    /// broadcast).
+    pub model_axis_bytes: u64,
     pub wall_seconds: f64,
 }
 
@@ -184,9 +222,11 @@ impl TrainSummary {
     }
 }
 
-/// Per-host training state.
+/// Per-host training state: one resident block per parameter (manifest
+/// order, shapes from the [`ShardPlan`]) and the optimizer state for
+/// exactly those blocks.
 struct HostState {
-    flat_params: Vec<f32>,
+    shards: Vec<HostTensor>,
     optimizer: Optimizer,
 }
 
@@ -209,22 +249,24 @@ impl PhaseTimer {
     }
 }
 
-/// Per-phase timing across the training loop.
+/// Per-phase timing across the training loop. Collective time is split by
+/// mesh axis so bench output distinguishes data-axis (gradient sync) from
+/// model-axis (parameter gather / batch broadcast) communication.
 #[derive(Default)]
 pub struct TimingBreakdown {
     pub infeed: PhaseTimer,
-    pub tensorize: PhaseTimer,
     pub execute: PhaseTimer,
-    pub collectives: PhaseTimer,
+    pub collectives_data: PhaseTimer,
+    pub collectives_model: PhaseTimer,
     pub optimizer: PhaseTimer,
 }
 
 impl TimingBreakdown {
     pub fn reset(&self) {
         self.infeed.reset();
-        self.tensorize.reset();
         self.execute.reset();
-        self.collectives.reset();
+        self.collectives_data.reset();
+        self.collectives_model.reset();
         self.optimizer.reset();
     }
 
@@ -232,25 +274,13 @@ impl TimingBreakdown {
     pub fn rows(&self) -> Vec<(&'static str, f64)> {
         let mut rows = vec![
             ("infeed", self.infeed.seconds()),
-            ("tensorize", self.tensorize.seconds()),
             ("execute", self.execute.seconds()),
-            ("collectives", self.collectives.seconds()),
+            ("collectives/data", self.collectives_data.seconds()),
+            ("collectives/model", self.collectives_model.seconds()),
             ("optimizer", self.optimizer.seconds()),
         ];
         rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         rows
-    }
-}
-
-/// Gradient scale factor implementing global-norm clipping: 1 when the
-/// norm is within `clip`, else clip/norm.
-fn clip_scale(clip: Option<f64>, grads: impl Iterator<Item = f64>) -> f32 {
-    match clip {
-        None => 1.0,
-        Some(c) => {
-            let norm = grads.map(|g| g * g).sum::<f64>().sqrt();
-            clip_scale_from_norm(Some(c), norm)
-        }
     }
 }
 
@@ -265,18 +295,25 @@ pub struct Trainer {
     pub manifest: ModelManifest,
     pub layout: FlatLayout,
     pub config: TrainerConfig,
+    /// The executed sharding: per-parameter specs + block shapes.
+    pub plan: ShardPlan,
+    pub partitioner: Partitioner,
     exe: Executable,
-    group: Arc<CollectiveGroup>,
+    colls: Arc<MeshCollectives>,
     hosts: Vec<Mutex<HostState>>,
     pub start_step: u64,
-    /// Per-host data pipeline states recovered by [`Trainer::restore_latest`]
-    /// (None when the checkpoint predates pipeline checkpointing or the run
-    /// used a synthetic source). Pass to
+    /// Per-row data pipeline states recovered by [`Trainer::restore_latest`]
+    /// (None when the checkpoint predates pipeline checkpointing, the run
+    /// used a synthetic source, or the data-row count changed — the coarse
+    /// `start_step` positioning then applies). Pass to
     /// [`infeed::Infeed::spawn_resumable`] to resume the exact stream.
     pub restored_pipeline: Option<Vec<PipelineState>>,
     pub logger: Arc<MetricsLogger>,
     /// Per-phase wall-time accounting (summed over hosts); reset per train().
     pub timing: TimingBreakdown,
+    /// Cumulative training counters, including per-axis collective traffic
+    /// (`train/data_axis_bytes`, `train/model_axis_bytes`, `.../ops`).
+    pub counters: CounterSet,
 }
 
 impl Trainer {
@@ -288,16 +325,19 @@ impl Trainer {
         let manifest = arts.model(&config.model)?.clone();
         let layout = FlatLayout::from_manifest(&manifest);
         let (exe, _) = device.compile(&manifest.entrypoint("train_step")?.hlo)?;
-        let group = CollectiveGroup::new(config.num_hosts);
+        let partitioner = Partitioner::new(config.mesh, config.strategy);
+        let plan = ShardPlan::new(&partitioner, &manifest.params);
+        let colls = MeshCollectives::new(config.mesh);
 
-        // init params once, replicate to hosts (t5x broadcasts from host 0)
+        // Init-then-slice: generate the full set once with the exact
+        // replicated-baseline RNG stream, keep only the per-host blocks
+        // (the full set exists only during construction).
         let init = crate::model::init_params(&manifest, config.seed);
-        let flat0 = layout.flatten(&init);
-        let hosts = (0..config.num_hosts)
+        let hosts = (0..config.mesh.num_hosts())
             .map(|h| {
                 Mutex::new(HostState {
-                    flat_params: flat0.clone(),
-                    optimizer: Self::build_optimizer(&config, &layout, h),
+                    shards: crate::model::shard_params(&init, &plan, h),
+                    optimizer: Self::build_optimizer(&config, &plan),
                 })
             })
             .collect();
@@ -305,13 +345,16 @@ impl Trainer {
             manifest,
             layout,
             config,
+            plan,
+            partitioner,
             exe,
-            group,
+            colls,
             hosts,
             start_step: 0,
             restored_pipeline: None,
             logger: Arc::new(MetricsLogger::new()),
             timing: TimingBreakdown::default(),
+            counters: CounterSet::new(),
         })
     }
 
@@ -320,26 +363,19 @@ impl Trainer {
         self
     }
 
-    fn build_optimizer(config: &TrainerConfig, layout: &FlatLayout, host: usize) -> Optimizer {
+    /// Register one optimizer entry per parameter *block*. Factoring
+    /// (Adafactor) applies to the block's matrix shape — factored stats
+    /// are therefore functions of the saving topology and checkpoint as
+    /// topology-local arrays.
+    fn build_optimizer(config: &TrainerConfig, plan: &ShardPlan) -> Optimizer {
         let mut opt = Optimizer::new(config.optimizer, config.schedule);
-        match config.strategy {
-            ParamStrategy::OneD => {
-                // full per-param states; factoring allowed
-                for (name, _, len, shape) in &layout.entries {
-                    let mat = if shape.len() >= 2 {
-                        Some((shape[0], shape[1..].iter().product()))
-                    } else {
-                        None
-                    };
-                    opt.register(name, *len, mat);
-                }
-            }
-            ParamStrategy::TwoD => {
-                // ZeRO: one flat contiguous shard per host
-                let bounds = chunk_bounds(layout.total, config.num_hosts);
-                let (lo, hi) = bounds[host];
-                opt.register("zero_shard", hi - lo, None);
-            }
+        for e in &plan.entries {
+            let mat = if e.shard_shape.len() >= 2 {
+                Some((e.shard_shape[0], e.shard_shape[1..].iter().product()))
+            } else {
+                None
+            };
+            opt.register(&e.name, e.shard_elems(), mat);
         }
         opt
     }
@@ -349,18 +385,56 @@ impl Trainer {
         self.hosts[host].lock().unwrap().optimizer.state_floats()
     }
 
-    /// Current parameters (host 0's copy).
+    /// Parameter floats resident on `host` — the per-host memory claim of
+    /// §2.2 (transient gather buffers excluded; see module docs).
+    pub fn resident_param_floats(&self, host: usize) -> usize {
+        self.hosts[host]
+            .lock()
+            .unwrap()
+            .shards
+            .iter()
+            .map(|t| t.elements())
+            .sum()
+    }
+
+    /// Diagnostic: one optimizer slot vector of `host`'s resident block
+    /// (tests use it to verify checkpoint resharding of optimizer state).
+    pub fn optimizer_slot(&self, host: usize, name: &str, slot: &str) -> Option<Vec<f32>> {
+        self.hosts[host]
+            .lock()
+            .unwrap()
+            .optimizer
+            .state_vectors(name)
+            .into_iter()
+            .find(|(s, _)| s == slot)
+            .map(|(_, v)| v)
+    }
+
+    /// Current parameters, gathered on demand from every host's resident
+    /// blocks (there is no free full copy anywhere).
     pub fn params(&self) -> Params {
-        self.layout.unflatten(&self.hosts[0].lock().unwrap().flat_params)
+        // one lock per host; the per-shard clones are O(1) Arc bumps
+        let per_host: Vec<Vec<HostTensor>> = self
+            .hosts
+            .iter()
+            .map(|h| h.lock().unwrap().shards.clone())
+            .collect();
+        let mut out = Params::new();
+        for (i, e) in self.plan.entries.iter().enumerate() {
+            let shards: Vec<HostTensor> =
+                per_host.iter().map(|s| s[i].clone()).collect();
+            out.insert(e.name.clone(), self.partitioner.unshard(&shards, &e.spec));
+        }
+        out
     }
 
     /// Run the training loop over `source`, returning per-step metrics.
     pub fn train(&self, source: &BatchSource) -> anyhow::Result<TrainSummary> {
-        let n = self.config.num_hosts;
+        let n = self.config.mesh.num_hosts();
         let history = Mutex::new(Vec::<StepMetrics>::new());
         let stop_step = AtomicU64::new(u64::MAX);
         let t0 = Instant::now();
-        self.group.reset_stats();
+        self.colls.reset_stats();
         self.timing.reset();
 
         let errors: Vec<Option<String>> = run_ranks(n, |rank| {
@@ -372,14 +446,33 @@ impl Trainer {
         for e in errors.into_iter().flatten() {
             anyhow::bail!("{e}");
         }
+        // A dead producer drains like exhaustion (so no rank strands a
+        // peer mid-collective), then surfaces here as a hard error.
+        if let BatchSource::Infeed(inf) = source {
+            anyhow::ensure!(
+                !inf.failed(),
+                "infeed producer thread panicked (e.g. get_dataset stream validation \
+                 failed — see stderr); refusing to report the dead stream as a \
+                 completed run"
+            );
+        }
         let mut history = history.into_inner().unwrap();
         history.sort_by_key(|h| h.step);
         let final_step = history.last().map(|h| h.step + 1).unwrap_or(self.start_step);
+        let data_axis_bytes = self.colls.axis_bytes(MeshAxis::Data);
+        let model_axis_bytes = self.colls.axis_bytes(MeshAxis::Model);
+        self.counters.add("train/data_axis_bytes", data_axis_bytes);
+        self.counters.add("train/model_axis_bytes", model_axis_bytes);
+        self.counters.add("train/data_axis_ops", self.colls.axis_ops(MeshAxis::Data));
+        self.counters.add("train/model_axis_ops", self.colls.axis_ops(MeshAxis::Model));
+        self.counters.log_to(&self.logger, final_step);
         self.logger.flush();
         Ok(TrainSummary {
             history,
             final_step,
-            comm_bytes: self.group.bytes_sent(),
+            comm_bytes: self.colls.bytes_sent(),
+            data_axis_bytes,
+            model_axis_bytes,
             wall_seconds: t0.elapsed().as_secs_f64(),
         })
     }
@@ -392,32 +485,71 @@ impl Trainer {
         stop_step: &AtomicU64,
     ) -> anyhow::Result<()> {
         let m = &self.manifest;
-        let n = self.config.num_hosts;
-        let bounds = chunk_bounds(self.layout.total, n);
+        let mesh = self.config.mesh;
+        let (d_coord, m_coord) = mesh.coords(rank);
+        let (dg, dr) = self.colls.data_group(rank);
+        let (mg, mr) = self.colls.model_group(rank);
+        let template: Vec<(Vec<usize>, bool)> = m
+            .batch_features
+            .iter()
+            .map(|f| (f.shape.clone(), f.is_int))
+            .collect();
         let end = self.start_step + self.config.steps;
         for step in self.start_step..end {
             if step >= stop_step.load(Ordering::Acquire) {
                 break;
             }
             let t_step = Instant::now();
-            // ---- infeed ----
-            let Some(batch) = source.next(m, rank, step) else {
-                // data exhausted: all hosts exhaust simultaneously because
+            // ---- infeed: the data row's batch, shared across the row.
+            // The pull/wait counts as infeed; the row broadcast counts as
+            // model-axis collective time (no overlap between phases). ----
+            let batch = match source {
+                BatchSource::Synthetic { seed } => {
+                    let b = Some(infeed::synthetic_batch(m, *seed, d_coord, step));
+                    self.timing.infeed.add_since(t_step);
+                    b
+                }
+                BatchSource::Infeed(inf) => {
+                    let leader = if m_coord == 0 { inf.next(d_coord) } else { None };
+                    self.timing.infeed.add_since(t_step);
+                    if mesh.model == 1 {
+                        leader
+                    } else {
+                        let t_b = Instant::now();
+                        let out = broadcast_batch(mg, mr, leader, &template);
+                        self.timing.collectives_model.add_since(t_b);
+                        out
+                    }
+                }
+            };
+            let Some(batch) = batch else {
+                // data exhausted: all rows exhaust simultaneously because
                 // shards are balanced; signal and stop.
                 stop_step.fetch_min(step, Ordering::AcqRel);
-                // unblock peers mid-collective is unnecessary: all ranks
-                // exhaust at the same step by construction.
                 break;
             };
-            self.timing.infeed.add_since(t_step);
-            // ---- forward/backward on the device ----
-            let t_tensorize = Instant::now();
-            let mut inputs = {
+
+            // ---- gather full params (transient) + execute ----
+            let shards: Vec<HostTensor> = {
                 let host = self.hosts[rank].lock().unwrap();
-                self.layout.tensors(&host.flat_params)
+                host.shards.clone() // O(1) Arc bumps
             };
+            let mut inputs = Vec::with_capacity(self.plan.entries.len() + batch.len());
+            for (e, shard) in self.plan.entries.iter().zip(&shards) {
+                let mut t = shard.clone();
+                if let Some((dim, _)) = e.spec.dim_for(MeshAxis::Data) {
+                    let t0 = Instant::now();
+                    t = all_gather_axis(dg, dr, &t, dim);
+                    self.timing.collectives_data.add_since(t0);
+                }
+                if let Some((dim, _)) = e.spec.dim_for(MeshAxis::Model) {
+                    let t0 = Instant::now();
+                    t = all_gather_axis(mg, mr, &t, dim);
+                    self.timing.collectives_model.add_since(t0);
+                }
+                inputs.push(t);
+            }
             inputs.extend(batch);
-            self.timing.tensorize.add_since(t_tensorize);
             let t_exec = Instant::now();
             let outs = self.exe.run(inputs)?;
             self.timing.execute.add_since(t_exec);
@@ -426,100 +558,76 @@ impl Trainer {
             let correct_sum = outs[2].first_f32();
             anyhow::ensure!(loss_sum.is_finite(), "non-finite loss at step {step}");
 
-            // flatten grads (manifest order == layout order)
-            let mut flat_grad = vec![0.0f32; self.layout.total];
-            for (i, (_, off, len, _)) in self.layout.entries.iter().enumerate() {
-                flat_grad[*off..off + len].copy_from_slice(outs[3 + i].as_f32());
+            // ---- gradient sync: model-axis slice is local, data axis
+            // sums across replica rows ----
+            let t_sc = Instant::now();
+            let scalars = dg.all_reduce(dr, vec![loss_sum, weight_sum, correct_sum]);
+            self.timing.collectives_data.add_since(t_sc);
+            let w_total = scalars[1].max(1e-9);
+            let mut grad_shards: Vec<HostTensor> = Vec::with_capacity(self.plan.entries.len());
+            for (i, e) in self.plan.entries.iter().enumerate() {
+                let mut g = outs[3 + i].clone();
+                if let Some((dim, n_m)) = e.spec.dim_for(MeshAxis::Model) {
+                    let size = e.shape[dim] / n_m;
+                    g = g.slice_axis(dim, m_coord * size, size);
+                }
+                let t0 = Instant::now();
+                g = match e.spec.dim_for(MeshAxis::Data) {
+                    Some((dim, _)) => reduce_scatter_axis(dg, dr, &g, dim),
+                    None => all_reduce_tensor(dg, dr, &g),
+                };
+                self.timing.collectives_data.add_since(t0);
+                grad_shards.push(g);
             }
 
-            // ---- gradient sync + update ----
-            let t_comm = Instant::now();
-            let scalars =
-                self.group
-                    .all_reduce(rank, vec![loss_sum, weight_sum, correct_sum]);
-            let w_total = scalars[1].max(1e-9);
+            // ---- global-norm clip scale (norm over owned blocks only, so
+            // replicas are not double counted) ----
             let clip = self.config.grad_clip_norm;
+            let scale = if clip.is_some() {
+                let local_sq: f64 = self
+                    .plan
+                    .entries
+                    .iter()
+                    .zip(&grad_shards)
+                    .filter(|(e, _)| e.spec.owns(&mesh, rank))
+                    .flat_map(|(_, g)| g.as_f32())
+                    .map(|&x| {
+                        let v = (x / w_total) as f64;
+                        v * v
+                    })
+                    .sum();
+                let t0 = Instant::now();
+                let total_sq =
+                    self.colls.global().all_reduce(rank, vec![local_sq as f32])[0] as f64;
+                self.timing.collectives_data.add_since(t0);
+                clip_scale_from_norm(clip, total_sq.sqrt()) / w_total
+            } else {
+                1.0 / w_total
+            };
+
+            // ---- optimizer update on resident blocks only ----
+            let t_opt = Instant::now();
             let decay = self.config.weight_decay.map(|d| d as f32);
             let lr_now = self.config.schedule.lr(step) as f32;
-            match self.config.strategy {
-                ParamStrategy::OneD => {
-                    let summed = self.group.all_reduce(rank, flat_grad);
-                    self.timing.collectives.add_since(t_comm);
-                    let t_opt = Instant::now();
-                    // global-norm clip scale on the normalized gradient
-                    let scale = clip_scale(
-                        clip,
-                        summed.iter().map(|&x| (x / w_total) as f64),
-                    ) / w_total;
-                    let mut host = self.hosts[rank].lock().unwrap();
-                    let HostState { flat_params, optimizer } = &mut *host;
-                    for (name, off, len, _) in &self.layout.entries {
-                        let g: Vec<f32> = summed[*off..off + len]
-                            .iter()
-                            .map(|&x| x * scale)
-                            .collect();
-                        if let Some(d) = decay {
-                            for p in flat_params[*off..off + len].iter_mut() {
-                                *p -= lr_now * d * *p;
-                            }
+            {
+                let mut host = self.hosts[rank].lock().unwrap();
+                let HostState { shards, optimizer } = &mut *host;
+                for ((e, shard), g) in
+                    self.plan.entries.iter().zip(shards.iter_mut()).zip(&grad_shards)
+                {
+                    let gv: Vec<f32> = g.as_f32().iter().map(|&x| x * scale).collect();
+                    let pv = shard.as_f32_mut();
+                    if let Some(dcy) = decay {
+                        for p in pv.iter_mut() {
+                            *p -= lr_now * dcy * *p;
                         }
-                        optimizer.update(
-                            name,
-                            step,
-                            &mut flat_params[*off..off + len],
-                            &g,
-                        );
                     }
-                    self.timing.optimizer.add_since(t_opt);
-                }
-                ParamStrategy::TwoD => {
-                    let chunk = self.group.reduce_scatter(rank, flat_grad);
-                    // global-norm clip needs the norm over ALL shards:
-                    // all-reduce the local squared sum (tiny payload).
-                    let local_sq: f64 = chunk
-                        .iter()
-                        .map(|&x| {
-                            let g = (x / w_total) as f64;
-                            g * g
-                        })
-                        .sum();
-                    let scale = if clip.is_some() {
-                        let total_sq =
-                            self.group.all_reduce(rank, vec![local_sq as f32])[0] as f64;
-                        clip_scale_from_norm(clip, total_sq.sqrt()) / w_total
-                    } else {
-                        1.0 / w_total
-                    };
-                    self.timing.collectives.add_since(t_comm);
-                    let t_opt = Instant::now();
-                    let (lo, hi) = bounds[rank];
-                    let g: Vec<f32> = chunk.iter().map(|&x| x * scale).collect();
-                    let updated_chunk = {
-                        let mut host = self.hosts[rank].lock().unwrap();
-                        let HostState { flat_params, optimizer } = &mut *host;
-                        if let Some(d) = decay {
-                            for p in flat_params[lo..hi].iter_mut() {
-                                *p -= lr_now * d * *p;
-                            }
-                        }
-                        optimizer.update(
-                            "zero_shard",
-                            step,
-                            &mut flat_params[lo..hi],
-                            &g,
-                        );
-                        flat_params[lo..hi].to_vec()
-                    };
-                    self.timing.optimizer.add_since(t_opt);
-                    let t_ag = Instant::now();
-                    let full =
-                        self.group.all_gather(rank, updated_chunk, self.layout.total);
-                    self.hosts[rank].lock().unwrap().flat_params = full;
-                    self.timing.collectives.add_since(t_ag);
+                    optimizer.update(&e.name, step, pv, &gv);
                 }
             }
+            self.timing.optimizer.add_since(t_opt);
 
-            // ---- metrics (host 0) ----
+            // ---- metrics (host (0,0)) ----
             if rank == 0 {
                 let loss = (scalars[0] / scalars[1]) as f64;
                 let acc = (scalars[2] / scalars[1]) as f64;
@@ -533,7 +641,7 @@ impl Trainer {
                 };
                 if step % self.config.log_every == 0 || step + 1 == end {
                     let tokens =
-                        (m.tokens_per_step() * n) as f64 / rec.step_seconds;
+                        (m.tokens_per_step() * mesh.data) as f64 / rec.step_seconds;
                     self.logger.log(
                         step,
                         &[
@@ -559,10 +667,11 @@ impl Trainer {
         Ok(())
     }
 
-    /// Synchronized checkpoint: all hosts contribute optimizer shards
-    /// (2D) / host 0 saves (1D has replicated state). Host 0 additionally
-    /// persists every host's data-pipeline state (all ranks are at the
-    /// same step boundary here, so the snapshot is globally consistent).
+    /// Distributed synchronized checkpoint: the coordinator declares the
+    /// array layouts, then every owning host concurrently writes its
+    /// disjoint `tstore` slice/block (all ranks are at the same step
+    /// boundary, so the snapshot is globally consistent), then the
+    /// coordinator commits atomically. No host gathers the full model.
     fn checkpoint_barrier(
         &self,
         rank: usize,
@@ -570,89 +679,168 @@ impl Trainer {
         dir: &PathBuf,
         source: &BatchSource,
     ) -> anyhow::Result<()> {
-        let extra: ExtraState = match self.config.strategy {
-            ParamStrategy::OneD => {
-                if rank == 0 {
-                    let host = self.hosts[0].lock().unwrap();
-                    let mut extra = Vec::new();
-                    for (name, _, _, _) in &self.layout.entries {
-                        for (slot, vec) in host.optimizer.state_vectors(name) {
-                            extra.push((format!("{name}/{slot}"), vec));
-                        }
-                    }
-                    extra
-                } else {
-                    Vec::new()
-                }
-            }
-            ParamStrategy::TwoD => {
-                // gather each slot's flat shards to every host (cheap at
-                // these sizes); host 0 persists.
-                let my = {
-                    let host = self.hosts[rank].lock().unwrap();
-                    host.optimizer.state_vectors("zero_shard")
-                };
-                let mut extra = Vec::new();
-                for (slot, vec) in my {
-                    let full = self.group.all_gather(rank, vec, self.layout.total);
-                    if rank == 0 {
-                        extra.push((format!("flat/{slot}"), full));
-                    }
-                }
-                extra
-            }
-        };
-        self.group.barrier(rank);
+        let mgr = CheckpointManager::new(dir.clone());
+        let mesh = self.config.mesh;
+        let scalar_spec = PartitionSpec::replicated(1);
+        // Phase 1: coordinator declares every array.
         if rank == 0 {
-            let mgr = CheckpointManager::new(dir.clone());
-            let params = self.layout.unflatten(&self.hosts[0].lock().unwrap().flat_params);
-            let mut meta_extra = extra;
-            meta_extra.push(("trainstate/step".into(), vec![step as f32]));
-            let pipeline = source.pipeline_states(self.config.num_hosts);
-            mgr.save_with_pipeline(step, &params, &meta_extra, pipeline.as_deref())?;
+            let writer = mgr.begin_sharded(step)?;
+            let host0 = self.hosts[0].lock().unwrap();
+            for e in &self.plan.entries {
+                writer.declare(&format!("params/{}", e.name), &e.shape, &e.spec)?;
+                for (slot, len) in host0.optimizer.state_slot_lens(&e.name) {
+                    let name = format!("optstate/{}/{slot}", e.name);
+                    if len == e.shard_elems() {
+                        // elementwise slot: sharded exactly like the param
+                        writer.declare(&name, &e.shape, &e.spec)?;
+                    } else {
+                        // factored stats: topology-local
+                        writer.declare_local(&name, &mesh)?;
+                    }
+                }
+            }
+            writer.declare("optstate/trainstate/step", &[1], &scalar_spec)?;
         }
-        self.group.barrier(rank);
+        self.colls.barrier(rank);
+        // Phase 2: every owner writes its blocks, concurrently.
+        let writer = mgr.sharded_writer(step);
+        {
+            let host = self.hosts[rank].lock().unwrap();
+            for (e, shard) in self.plan.entries.iter().zip(&host.shards) {
+                if !e.spec.owns(&mesh, rank) {
+                    continue;
+                }
+                writer.write_block(&format!("params/{}", e.name), &e.spec, &mesh, rank, shard)?;
+                for (slot, data) in host.optimizer.state_slices(&e.name) {
+                    let name = format!("optstate/{}/{slot}", e.name);
+                    if data.len() == e.shard_elems() {
+                        let t = HostTensor::f32(e.shard_shape.clone(), data.to_vec());
+                        writer.write_block(&name, &e.spec, &mesh, rank, &t)?;
+                    } else {
+                        writer.write_local(&name, &e.spec, &mesh, rank, data)?;
+                    }
+                }
+            }
+            if rank == 0 {
+                writer.write_block(
+                    "optstate/trainstate/step",
+                    &scalar_spec,
+                    &mesh,
+                    0,
+                    &HostTensor::f32(vec![1], vec![step as f32]),
+                )?;
+            }
+        }
+        self.colls.barrier(rank);
+        // Phase 3: coordinator commits (pipeline states + metadata + rename).
+        if rank == 0 {
+            let pipeline = source.pipeline_states(mesh.data);
+            mgr.commit_sharded(step, self.plan.entries.len(), mesh, pipeline.as_deref())?;
+        }
+        self.colls.barrier(rank);
         Ok(())
     }
 
     /// Restore params + optimizer state + step + data-pipeline position
-    /// from the latest checkpoint.
+    /// from the latest checkpoint — with resharding: every host range-reads
+    /// exactly its own blocks, whatever mesh the checkpoint was saved on.
     pub fn restore_latest(&mut self, dir: &PathBuf) -> anyhow::Result<u64> {
         let mgr = CheckpointManager::new(dir.clone());
         let step = mgr
             .latest()
             .ok_or_else(|| anyhow::anyhow!("no checkpoint in {}", dir.display()))?;
-        let (params, extra) = mgr.restore(step)?;
-        self.restored_pipeline = mgr.restore_pipeline(step)?;
-        let flat = self.layout.flatten(&params);
-        let n = self.config.num_hosts;
-        let bounds = chunk_bounds(self.layout.total, n);
+        let mesh = self.config.mesh;
+        // Pre-refactor TwoD checkpoints stored optimizer moments as one
+        // flat chunked vector ('optstate/flat/<slot>'), which does not map
+        // onto per-parameter blocks — warn once instead of restoring
+        // silently-zeroed moments without notice.
+        for slot in ["m", "v", "velocity"] {
+            if mgr.has_optstate(step, &format!("flat/{slot}")) {
+                eprintln!(
+                    "warning: checkpoint at step {step} carries pre-refactor flat \
+                     optimizer state (optstate/flat/*), which the sharded trainer \
+                     does not restore; optimizer moments start fresh"
+                );
+                break;
+            }
+        }
         for (h, hs) in self.hosts.iter().enumerate() {
             let mut host = hs.lock().unwrap();
-            host.flat_params = flat.clone();
-            for (key, vec) in &extra {
-                if key == "trainstate/step" {
-                    continue;
-                }
-                match self.config.strategy {
-                    ParamStrategy::OneD => {
-                        if let Some((name, slot)) = key.rsplit_once('/') {
-                            host.optimizer.restore_state_vector(name, slot, vec.clone());
-                        }
+            let HostState { shards, optimizer } = &mut *host;
+            for (i, e) in self.plan.entries.iter().enumerate() {
+                let ranges = e.spec.host_ranges(&mesh, h, &e.shape);
+                shards[i] = mgr
+                    .restore_param_range(step, &e.name, &ranges)
+                    .map_err(|err| anyhow::anyhow!("restoring param {}: {err}", e.name))?;
+                for (slot, cur_len) in optimizer.state_slot_lens(&e.name) {
+                    let name = format!("{}/{slot}", e.name);
+                    if !mgr.has_optstate(step, &name) {
+                        continue; // params-only checkpoint (e.g. legacy-converted)
                     }
-                    ParamStrategy::TwoD => {
-                        if let Some(slot) = key.strip_prefix("flat/") {
-                            let (lo, hi) = bounds[h];
-                            host.optimizer.restore_state_vector(
-                                "zero_shard",
-                                slot,
-                                vec[lo..hi].to_vec(),
-                            );
+                    let data = if cur_len == e.shard_elems() {
+                        // elementwise slot: range-read at this host's block
+                        // (degrade with a warning on alien layouts, e.g. a
+                        // legacy flat 1-D array for a rank-2 parameter)
+                        match mgr.restore_optstate_range(step, &name, &ranges) {
+                            Ok(t) => Some(t.as_f32().to_vec()),
+                            Err(err) => {
+                                if h == 0 {
+                                    eprintln!(
+                                        "warning: optimizer state '{name}' not \
+                                         restorable at this sharding ({err:#}); \
+                                         slot starts fresh"
+                                    );
+                                }
+                                None
+                            }
                         }
+                    } else {
+                        // factored stats: only the topology-local layout can
+                        // hold them. A mesh mismatch on that layout is a
+                        // hard, documented error; any other layout is a
+                        // legacy format we reset with a warning.
+                        match mgr.optstate_layout(step, &name)? {
+                            crate::checkpoint::ArrayLayout::Local { .. } => {
+                                Some(mgr.restore_optstate_local(
+                                    step,
+                                    &name,
+                                    &mesh,
+                                    block_coords(&e.spec, &mesh, h),
+                                )?)
+                            }
+                            _ => {
+                                if h == 0 {
+                                    eprintln!(
+                                        "warning: factored optimizer state '{name}' \
+                                         has a pre-refactor layout; slot starts fresh"
+                                    );
+                                }
+                                None
+                            }
+                        }
+                    };
+                    if let Some(data) = data {
+                        optimizer.restore_state_vector(&e.name, slot, data);
                     }
                 }
             }
         }
+        // Pipeline state is per data row; a changed row count falls back to
+        // the coarse `start_step * batch` positioning (exact for caches).
+        self.restored_pipeline = match mgr.restore_pipeline(step)? {
+            Some(states) if states.len() == mesh.data => Some(states),
+            Some(states) => {
+                eprintln!(
+                    "note: checkpoint has {} data-row pipeline states, mesh {} has {} rows; \
+                     using coarse stream positioning",
+                    states.len(),
+                    mesh,
+                    mesh.data
+                );
+                None
+            }
+            None => None,
+        };
         self.start_step = step;
         Ok(step)
     }
@@ -686,17 +874,18 @@ mod tests {
 
     #[test]
     fn multi_host_1d_matches_single_host_global_batch() {
-        // 2 hosts with the same per-host batch == global batch 2x; loss at
-        // step 0 should equal the average of both hosts' losses and grads
-        // must sync (smoke: just ensure it runs and improves).
+        // 2 data rows with the same per-host batch == global batch 2x; loss
+        // must sync over the data axis (smoke: runs and improves).
         let arts = Artifacts::load_default().unwrap();
         let dev = device();
         let mut cfg = TrainerConfig::quick("t5-nano-dec", 6);
-        cfg.num_hosts = 2;
+        cfg.mesh = Mesh::new(2, 1);
         let trainer = Trainer::new(&arts, &dev, cfg).unwrap();
         let summary = trainer.train(&BatchSource::Synthetic { seed: 3 }).unwrap();
         assert!(summary.final_loss() < summary.first_loss());
         assert!(summary.comm_bytes > 0);
+        assert!(summary.data_axis_bytes > 0);
+        assert_eq!(summary.model_axis_bytes, 0, "model axis is size 1");
         dev.shutdown();
     }
 
@@ -708,7 +897,7 @@ mod tests {
         let dev = device();
         let mk = |strategy| {
             let mut cfg = TrainerConfig::quick("t5-nano-dec", 5);
-            cfg.num_hosts = 2;
+            cfg.mesh = Mesh::new(2, 1);
             cfg.strategy = strategy;
             cfg.seed = 11;
             Trainer::new(&arts, &dev, cfg).unwrap()
@@ -728,11 +917,15 @@ mod tests {
                 b.loss
             );
         }
-        // and ZeRO holds ~1/2 the optimizer state per host
+        // and ZeRO holds ~1/2 the optimizer state AND parameters per host
         let t1 = mk(ParamStrategy::OneD);
         let t2 = mk(ParamStrategy::TwoD);
         assert!(
             t2.optimizer_state_floats(0) * 2 <= t1.optimizer_state_floats(0) + 16
+        );
+        assert!(
+            t2.resident_param_floats(0) * 2
+                <= t1.resident_param_floats(0) + t2.plan.largest_param_elems()
         );
         dev.shutdown();
     }
@@ -819,7 +1012,7 @@ mod feature_tests {
         let dev = DeviceHandle::spawn().unwrap();
         let mk = |strategy| {
             let mut cfg = TrainerConfig::quick("t5-nano-dec", 4);
-            cfg.num_hosts = 2;
+            cfg.mesh = Mesh::new(2, 1);
             cfg.strategy = strategy;
             cfg.grad_clip_norm = Some(0.1);
             cfg.schedule = Schedule::Constant(1e-3);
@@ -883,6 +1076,35 @@ mod feature_tests {
         );
         // execute dominates on this workload
         assert_eq!(rows[0].0, "execute");
+        dev.shutdown();
+    }
+
+    #[test]
+    fn per_axis_traffic_counters_populated() {
+        // 2x2 mesh: gradient sync moves data-axis bytes, parameter
+        // gathers + batch broadcast move model-axis bytes, and the
+        // CounterSet surfaces both.
+        let arts = Artifacts::load_default().unwrap();
+        let dev = DeviceHandle::spawn().unwrap();
+        let mut cfg = TrainerConfig::quick("t5-nano-dec", 2);
+        cfg.mesh = Mesh::new(2, 2);
+        cfg.strategy = ParamStrategy::TwoD;
+        let trainer = Trainer::new(&arts, &dev, cfg).unwrap();
+        let summary = trainer.train(&BatchSource::Synthetic { seed: 1 }).unwrap();
+        assert!(summary.data_axis_bytes > 0);
+        assert!(summary.model_axis_bytes > 0);
+        assert_eq!(
+            trainer.counters.get("train/data_axis_bytes"),
+            summary.data_axis_bytes
+        );
+        assert_eq!(
+            trainer.counters.get("train/model_axis_bytes"),
+            summary.model_axis_bytes
+        );
+        assert!(trainer.counters.get("train/data_axis_ops") > 0);
+        // timing attributes both axes (real collectives took real time)
+        assert!(trainer.timing.collectives_data.seconds() > 0.0);
+        assert!(trainer.timing.collectives_model.seconds() > 0.0);
         dev.shutdown();
     }
 }

@@ -19,7 +19,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::runtime::artifacts::ModelManifest;
-use crate::seqio::cache::{cache_task, CacheConfig, CacheMeta};
+use crate::seqio::cache::{cache_task_splits, CacheConfig, CacheMeta};
 use crate::seqio::dataset::{Dataset, PipelineState};
 use crate::seqio::feature_converters::{
     converter_for_arch, default_task_lengths, lengths, EncDecConverter, FeatureConverter,
@@ -193,7 +193,10 @@ impl crate::seqio::preprocessors::Preprocessor for MapReverse {
     }
 }
 
-/// Cache a task if not already cached (idempotent `make`-style).
+/// Cache every split of a task if not already cached (idempotent
+/// `make`-style). A stale cache — different task, seed, shard count, or a
+/// split set that no longer matches the task's declaration (including
+/// legacy single-split roots) — is rebuilt in the per-split layout.
 pub fn ensure_cached(
     task: &Task,
     dir: &Path,
@@ -202,12 +205,16 @@ pub fn ensure_cached(
 ) -> anyhow::Result<CacheMeta> {
     if dir.join("cache_meta.json").exists() {
         let meta = CacheMeta::load(dir)?;
-        // a stale cache built from a *different task* must not be reused
-        if meta.num_shards == num_shards && meta.seed == seed && meta.task == task.name {
+        let want = DatasetProvider::splits(task);
+        if meta.num_shards == num_shards
+            && meta.seed == seed
+            && meta.task == task.name
+            && meta.splits.as_deref() == Some(want.as_slice())
+        {
             return Ok(meta);
         }
     }
-    cache_task(task, dir, &CacheConfig { num_shards, seed, workers: 4 })
+    cache_task_splits(task, dir, &CacheConfig { num_shards, seed, workers: 4 })
 }
 
 /// Model-ready multi-host infeed over any [`DatasetProvider`] — THE
@@ -271,9 +278,12 @@ pub fn provider_infeed(
                     start,
                     repeat: true,
                     resume: None, // per-host restore is applied by spawn_resumable
-                    // The split/converter/feature checks are identical
-                    // across hosts; probe the stream head once, not N times.
-                    validate: host == 0,
+                    // In-stream head validation is near-free, and running
+                    // it on EVERY host keeps failure symmetric: a schema
+                    // bug kills all rows' streams at the same step, so the
+                    // mesh drains through the exhaustion path instead of
+                    // stranding live rows in collectives.
+                    validate: true,
                 },
             )
         },

@@ -3,7 +3,7 @@
 
 use t5x::checkpoint::{legacy, CheckpointManager};
 use t5x::optim::{OptimizerKind, Schedule};
-use t5x::partitioning::ParamStrategy;
+use t5x::partitioning::{Mesh, ParamStrategy};
 use t5x::runtime::{Artifacts, DeviceHandle};
 use t5x::trainer::{BatchSource, Trainer, TrainerConfig};
 
@@ -22,7 +22,7 @@ fn restore_across_topologies() {
     let dir = tmpdir("topo");
 
     let mut cfg = TrainerConfig::quick("t5-nano-dec", 4);
-    cfg.num_hosts = 2;
+    cfg.mesh = Mesh::new(2, 1);
     cfg.strategy = ParamStrategy::TwoD;
     cfg.schedule = Schedule::Constant(1e-3);
     cfg.checkpoint_every = Some(4);
@@ -33,7 +33,7 @@ fn restore_across_topologies() {
 
     // 4-host ZeRO restore
     let mut cfg4 = cfg.clone();
-    cfg4.num_hosts = 4;
+    cfg4.mesh = Mesh::new(4, 1);
     cfg4.checkpoint_every = None;
     cfg4.checkpoint_dir = None;
     let mut t4 = Trainer::new(&arts, &device, cfg4).unwrap();
@@ -42,7 +42,7 @@ fn restore_across_topologies() {
 
     // single-host 1D restore
     let mut cfg1 = cfg;
-    cfg1.num_hosts = 1;
+    cfg1.mesh = Mesh::new(1, 1);
     cfg1.strategy = ParamStrategy::OneD;
     cfg1.checkpoint_every = None;
     cfg1.checkpoint_dir = None;
