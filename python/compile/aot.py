@@ -100,7 +100,35 @@ def export_model(cfg: M.ModelConfig, out_dir: str, entry: dict):
         f"{out_dir}/{cfg.name}/decode_logits.hlo.txt",
         to_hlo_text(jax.jit(dec_fn).lower(*(param_shapes + tok_shapes))),
     )
+    # KV-cached incremental decoding (decoder-only): prefill scores the
+    # prompt buffer once and materializes the cache; decode_step extends it
+    # by one position per row — the O(L) serving hot path.
+    kv = cfg.arch == "decoder"
+    if kv:
+        pf_fn, _ = M.prefill_fn(cfg)
+        _write(
+            f"{out_dir}/{cfg.name}/prefill.hlo.txt",
+            to_hlo_text(jax.jit(pf_fn).lower(*(param_shapes + tok_shapes))),
+        )
+        ds_fn, _ = M.decode_step_fn(cfg)
+        step_args = (
+            param_shapes
+            + M.kv_cache_shapes(cfg)
+            + [
+                jax.ShapeDtypeStruct((cfg.batch, 1), jnp.int32),
+                jax.ShapeDtypeStruct((cfg.batch,), jnp.int32),
+            ]
+        )
+        _write(
+            f"{out_dir}/{cfg.name}/decode_step.hlo.txt",
+            to_hlo_text(jax.jit(ds_fn).lower(*step_args)),
+        )
     print(f"  {cfg.name}: exported in {time.time() - t0:.1f}s")
+    cache_names = [
+        f"cache:decoder.layers_{i}.{t}"
+        for i in range(cfg.num_layers)
+        for t in ("k", "v")
+    ]
 
     entry[cfg.name] = {
         "arch": cfg.arch,
@@ -144,6 +172,27 @@ def export_model(cfg: M.ModelConfig, out_dir: str, entry: dict):
             },
         },
     }
+    if kv:
+        entry[cfg.name]["entrypoints"]["prefill"] = {
+            "hlo": f"{cfg.name}/prefill.hlo.txt",
+            "inputs": ["decoder_input_tokens"],
+            "outputs": ["logits"] + cache_names,
+        }
+        entry[cfg.name]["entrypoints"]["decode_step"] = {
+            "hlo": f"{cfg.name}/decode_step.hlo.txt",
+            "inputs": cache_names + ["token", "pos"],
+            "outputs": ["logits"] + cache_names,
+        }
+        # The cache contract consumed by the Rust engine: per-layer k/v
+        # tensors, [B, H, L, head_dim] f32, batch-major so one request's
+        # cache is a contiguous row slice (slot recycling on refill).
+        entry[cfg.name]["kv_cache"] = {
+            "layout": ["batch", "heads", "seq", "head_dim"],
+            "shape": [cfg.batch, cfg.num_heads, cfg.seq_len, cfg.head_dim],
+            "dtype": "f32",
+            "num_layers": cfg.num_layers,
+            "per_layer": ["k", "v"],
+        }
 
 
 def export_golden(cfg: M.ModelConfig, goldens: dict):
@@ -171,6 +220,65 @@ def export_golden(cfg: M.ModelConfig, goldens: dict):
         f"  golden {cfg.name}: loss_sum={loss_sum:.4f} weight_sum={weight_sum}"
         f" correct_sum={correct_sum}"
     )
+
+
+def export_kv_golden(cfg: M.ModelConfig, goldens: dict):
+    """KV-cache consistency golden: prefill + N x decode_step logits must
+    match full `logits_fn` rescoring position-by-position (the O(L) path is
+    a re-lowering, not a re-definition, of the model). Fails the export on
+    divergence and records the max absolute logits gap plus the greedy
+    continuation of a deterministic prompt (pattern-init params).
+
+    The prompt fills half the buffer so the single-query relpos-bias path
+    is exercised at long distances (the log-bucket branch that L=128
+    serving leans on), not just the near-diagonal L=32 regime.
+    """
+    assert cfg.arch == "decoder"
+    params = M.pattern_params(cfg)
+    b, l, v = cfg.batch, cfg.seq_len, cfg.vocab
+    prompt_len = max(4, min(l // 2, l - 8))
+    steps = min(6, l - 1 - prompt_len)
+    # Shifted-right buffer: BOS(0) at position 0, prompt at 1..=prompt_len.
+    dec = np.zeros((b, l), np.int32)
+    for i in range(b):
+        for j in range(prompt_len):
+            dec[i, 1 + j] = (i * 131 + j * 17 + 5) % (v - 2) + 2
+    lens = np.full((b,), prompt_len + 1, np.int32)  # filled positions/row
+
+    logits_ref = jax.jit(lambda p, t: M.logits_fn(p, cfg, t))
+    step_jit = jax.jit(lambda p, c, t, s: M.decoder_decode_step(p, cfg, c, t, s))
+    full_logits, cache_pairs = jax.jit(
+        lambda p, t: M.decoder_prefill(p, cfg, t)
+    )(params, jnp.asarray(dec))
+    caches = [t for kv_pair in cache_pairs for t in kv_pair]
+    # Next-token logits for every row (prefill == decode_logits rescoring).
+    rows = np.asarray(full_logits)[np.arange(b), lens - 1]
+    max_gap = 0.0
+    tokens = [[] for _ in range(b)]
+    for _ in range(steps):
+        nxt = rows.argmax(-1).astype(np.int32)  # ties -> lowest id, as Rust
+        for i in range(b):
+            tokens[i].append(int(nxt[i]))
+            dec[i, lens[i]] = nxt[i]
+        lens = lens + 1
+        outs = step_jit(
+            params,
+            caches,
+            jnp.asarray(dec[np.arange(b), lens - 1][:, None]),
+            jnp.asarray(lens - 1),
+        )
+        rows, caches = np.asarray(outs[0]), list(outs[1:])
+        full = np.asarray(logits_ref(params, jnp.asarray(dec)))
+        gap = float(np.abs(rows - full[np.arange(b), lens - 1]).max())
+        max_gap = max(max_gap, gap)
+        assert gap < 2e-3, f"{cfg.name}: kv decode diverged from rescoring: {gap}"
+    goldens.setdefault(cfg.name, {})["kv_decode"] = {
+        "prompt_len": prompt_len,
+        "steps": steps,
+        "max_abs_logits_gap": max_gap,
+        "greedy_tokens": tokens,
+    }
+    print(f"  kv golden {cfg.name}: max |logits gap| {max_gap:.2e}")
 
 
 def export_bench(out_dir: str, manifest: dict):
@@ -239,8 +347,8 @@ def main():
     ap.add_argument("--out", default="../artifacts")
     ap.add_argument(
         "--models",
-        default="t5-nano-dec,t5-nano-encdec,t5-micro-dec,t5-micro-encdec,"
-        "t5-small-dec,t5-100m-dec",
+        default="t5-nano-dec,t5-nano-dec-l128,t5-nano-encdec,t5-micro-dec,"
+        "t5-micro-encdec,t5-small-dec,t5-100m-dec",
     )
     args = ap.parse_args()
     out = args.out
@@ -256,6 +364,14 @@ def main():
     for name in ("t5-nano-dec", "t5-nano-encdec"):
         if name in manifest["models"]:
             export_golden(M.CONFIGS[name], goldens)
+    # Every small decoder export gets the kv-consistency gate — crucially
+    # including the long-sequence L=128 config whose serving path leans on
+    # the far relpos buckets. (t5-small/t5-100m are skipped only because
+    # pattern_params is a per-element python loop; their decode_step HLO
+    # is the same lowering checked here at three sizes.)
+    for name in ("t5-nano-dec", "t5-nano-dec-l128", "t5-micro-dec"):
+        if name in manifest["models"]:
+            export_kv_golden(M.CONFIGS[name], goldens)
     _write(f"{out}/golden.json", json.dumps(goldens, indent=1))
     _write(f"{out}/manifest.json", json.dumps(manifest, indent=1))
     print(f"artifacts written to {out} in {time.time() - t0:.1f}s")

@@ -233,7 +233,9 @@ def relpos_bias(rel_embedding, lq, lk, bidirectional, cfg: ModelConfig):
     return jnp.transpose(values, (2, 0, 1))
 
 
-def _attention(p, prefix, x_q, x_kv, bias, causal, cfg: ModelConfig):
+def _attention_kv(p, prefix, x_q, x_kv, bias, causal, cfg: ModelConfig):
+    """Attention block that also returns the per-head K/V projections
+    ([B, H, Lk, head_dim]) — the tensors `prefill` exports as the KV cache."""
     b, lq, d = x_q.shape
     lk = x_kv.shape[1]
     h, hd = cfg.num_heads, cfg.head_dim
@@ -247,7 +249,11 @@ def _attention(p, prefix, x_q, x_kv, bias, causal, cfg: ModelConfig):
     else:
         o = ref.attention_ref(q, k, v, bias, causal=causal)
     o = o.transpose(0, 2, 1, 3).reshape(b, lq, h * hd)
-    return o @ p[f"{prefix}.wo"]
+    return o @ p[f"{prefix}.wo"], k, v
+
+
+def _attention(p, prefix, x_q, x_kv, bias, causal, cfg: ModelConfig):
+    return _attention_kv(p, prefix, x_q, x_kv, bias, causal, cfg)[0]
 
 
 def _mlp(p, prefix, x, cfg: ModelConfig):
@@ -378,6 +384,149 @@ def decode_logits_fn(cfg: ModelConfig):
         return (logits_fn(p, cfg, dec_tokens),)
 
     return fn, names
+
+
+# ---------------------------------------------------------------------------
+# KV-cached incremental decoding (prefill + decode_step).
+#
+# `decode_logits` re-scores the full [B, L] prefix every step — O(L^2) work
+# per sequence. The incremental pair below is the t5x `decoding` cache
+# counterpart: `prefill` scores a prompt buffer once and materializes the
+# per-layer K/V projections; `decode_step` extends the cache by ONE position
+# per row ([B, 1] token input) and returns [B, V] next-token logits — O(L)
+# total work per sequence. Decoder-only models only (the serving engine's
+# scope); cache layout is [B, num_heads, L, head_dim], k then v per layer,
+# recorded in the manifest as `kv_cache`.
+# ---------------------------------------------------------------------------
+
+
+def decoder_prefill(p, cfg: ModelConfig, dec_tokens):
+    """Full-prefix decoder pass that also returns the per-layer K/V cache.
+
+    The logits computation is the exact `logits_fn` decoder path (same
+    kernels, same order of operations) — capturing K/V adds outputs, not
+    different math — so `prefill` logits match `decode_logits` on the same
+    buffer. Positions holding padding produce garbage cache rows; they are
+    masked (`key_pos <= pos`) and later overwritten by `decode_step`.
+
+    Returns (logits [B, L, V], [(k, v)] per layer, each [B, H, L, Hd]).
+    """
+    embed = p["token_embed"]
+    x = embed[dec_tokens]
+    l = dec_tokens.shape[1]
+    bias = relpos_bias(p["decoder.relpos_bias"], l, l, False, cfg)
+    caches = []
+    for i in range(cfg.num_layers):
+        lp = f"decoder.layers_{i}"
+        h = rms_norm(x, p[f"{lp}.pre_attn_norm.scale"])
+        att, k, v = _attention_kv(p, f"{lp}.self_attn", h, h, bias, True, cfg)
+        x = x + att
+        h = rms_norm(x, p[f"{lp}.pre_mlp_norm.scale"])
+        x = x + _mlp(p, f"{lp}.mlp", h, cfg)
+        caches.append((k, v))
+    x = rms_norm(x, p["decoder.final_norm.scale"])
+    return (x / np.sqrt(cfg.d_model)) @ embed.T, caches
+
+
+def decoder_decode_step(p, cfg: ModelConfig, caches, token, pos):
+    """One incremental decode step against a KV cache.
+
+    Args:
+      caches: flat [k0, v0, k1, v1, ...], each [B, H, L, head_dim].
+      token: [B, 1] int32 — the most recently *written* decoder token.
+      pos: [B] int32 — its position in the length-L decoder buffer
+        (per-row: continuous batching packs rows at different lengths).
+
+    Writes `token`'s K/V into the cache at `pos`, attends the single query
+    over key positions `<= pos` (future cache rows are stale), and returns
+    ([B, V] logits for the *next* position, updated caches). Attention is
+    the `ref.attention_ref` formula specialized to Lq=1 with a per-row
+    visibility mask instead of the triangular causal mask.
+    """
+    b = token.shape[0]
+    l = cfg.seq_len
+    nh, hd = cfg.num_heads, cfg.head_dim
+    embed = p["token_embed"]
+    x = embed[token]  # [B, 1, d]
+    mem = jnp.arange(l)[None, :]  # [1, L] key positions
+    buckets = relative_position_bucket(
+        mem - pos[:, None], False, cfg.relpos_buckets, cfg.relpos_max_distance
+    )  # [B, L]
+    # [B, L, H] -> [B, H, 1, L]: per-row bias for the one query at `pos`.
+    bias = jnp.transpose(p["decoder.relpos_bias"][buckets], (0, 2, 1))[:, :, None, :]
+    visible = (mem <= pos[:, None])[:, None, None, :]  # [B, 1, 1, L]
+    new_caches = []
+    for i in range(cfg.num_layers):
+        lp = f"decoder.layers_{i}"
+        kc, vc = caches[2 * i], caches[2 * i + 1]
+        h = rms_norm(x, p[f"{lp}.pre_attn_norm.scale"])
+        q = (h @ p[f"{lp}.self_attn.wq"]).reshape(b, 1, nh, hd).transpose(0, 2, 1, 3)
+        k1 = (h @ p[f"{lp}.self_attn.wk"]).reshape(b, 1, nh, hd).transpose(0, 2, 1, 3)
+        v1 = (h @ p[f"{lp}.self_attn.wv"]).reshape(b, 1, nh, hd).transpose(0, 2, 1, 3)
+        upd = lambda c, u, s: jax.lax.dynamic_update_slice(c, u, (0, s, 0))
+        kc = jax.vmap(upd)(kc, k1, pos)
+        vc = jax.vmap(upd)(vc, v1, pos)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, kc) / jnp.sqrt(
+            jnp.asarray(hd, q.dtype)
+        )
+        logits = logits + bias.astype(logits.dtype)
+        logits = jnp.where(visible, logits, ref.NEG_INF)
+        weights = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+        o = jnp.einsum("bhqk,bhkd->bhqd", weights, vc)
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, nh * hd)
+        x = x + o @ p[f"{lp}.self_attn.wo"]
+        h = rms_norm(x, p[f"{lp}.pre_mlp_norm.scale"])
+        x = x + ref.gated_ffn_ref(
+            h.reshape(b, cfg.d_model),
+            p[f"{lp}.mlp.wi_0"],
+            p[f"{lp}.mlp.wi_1"],
+            p[f"{lp}.mlp.wo"],
+        ).reshape(b, 1, cfg.d_model)
+        new_caches += [kc, vc]
+    x = rms_norm(x, p["decoder.final_norm.scale"])
+    return ((x[:, 0, :] / np.sqrt(cfg.d_model)) @ embed.T,) + tuple(new_caches)
+
+
+def prefill_fn(cfg: ModelConfig):
+    """(params..., dec_tokens) -> (logits [B, L, V], k0, v0, k1, v1, ...)."""
+    assert cfg.arch == "decoder", "KV-cached decoding exports are decoder-only"
+    names = [s[0] for s in param_specs(cfg)]
+
+    def fn(*args):
+        p = dict(zip(names, args[: len(names)]))
+        (dec_tokens,) = args[len(names):]
+        logits, caches = decoder_prefill(p, cfg, dec_tokens)
+        return (logits,) + tuple(t for kv in caches for t in kv)
+
+    return fn, names
+
+
+def decode_step_fn(cfg: ModelConfig):
+    """(params..., k0, v0, ..., token [B,1], pos [B]) -> (logits [B, V],
+    k0', v0', ...)."""
+    assert cfg.arch == "decoder", "KV-cached decoding exports are decoder-only"
+    names = [s[0] for s in param_specs(cfg)]
+    n_cache = 2 * cfg.num_layers
+
+    def fn(*args):
+        p = dict(zip(names, args[: len(names)]))
+        rest = args[len(names):]
+        caches = list(rest[:n_cache])
+        token, pos = rest[n_cache], rest[n_cache + 1]
+        return decoder_decode_step(p, cfg, caches, token, pos)
+
+    return fn, names
+
+
+def kv_cache_shapes(cfg: ModelConfig):
+    """ShapeDtypeStructs of the per-layer cache tensors, export order
+    (k then v per layer) — the `kv_cache` manifest contract."""
+    shape = (cfg.batch, cfg.num_heads, cfg.seq_len, cfg.head_dim)
+    return [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _ in range(cfg.num_layers)
+        for _ in ("k", "v")
+    ]
 
 
 def batch_feature_names(cfg: ModelConfig) -> List[str]:
@@ -527,6 +676,12 @@ CONFIGS = {
     "t5-nano-encdec": ModelConfig(
         name="t5-nano-encdec", arch="encdec", num_layers=2, d_model=64, num_heads=4,
         head_dim=16, d_ff=128, vocab=512, batch=8, seq_len=32,
+    ),
+    # Long-sequence nano variant: small weights, L=128 — the serving bench
+    # case where O(L^2) rescoring visibly loses to O(L) KV-cached decode.
+    "t5-nano-dec-l128": ModelConfig(
+        name="t5-nano-dec-l128", arch="decoder", num_layers=2, d_model=64,
+        num_heads=4, head_dim=16, d_ff=128, vocab=512, batch=4, seq_len=128,
     ),
     "t5-micro-dec": ModelConfig(
         name="t5-micro-dec", arch="decoder", num_layers=4, d_model=128, num_heads=8,

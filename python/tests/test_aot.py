@@ -43,6 +43,28 @@ def test_manifest_structure(manifest):
         outs = eps["train_step"]["outputs"]
         assert outs[:3] == ["loss_sum", "weight_sum", "correct_sum"]
         assert outs[3:] == [f"grad:{n}" for n in names]
+        # KV-cached incremental decoding: decoder models export
+        # prefill/decode_step and declare the cache contract.
+        if m["arch"] == "decoder":
+            for ep in ("prefill", "decode_step"):
+                assert ep in eps, f"{name}: missing {ep}"
+                assert os.path.exists(os.path.join(ART, eps[ep]["hlo"]))
+            kv = m["kv_cache"]
+            cfg = m["config"]
+            assert kv["shape"] == [
+                cfg["batch"],
+                cfg["num_heads"],
+                cfg["seq_len"],
+                cfg["head_dim"],
+            ]
+            assert kv["num_layers"] == cfg["num_layers"]
+            assert kv["per_layer"] == ["k", "v"]
+            n_cache = 2 * kv["num_layers"]
+            assert len(eps["prefill"]["outputs"]) == 1 + n_cache
+            assert len(eps["decode_step"]["outputs"]) == 1 + n_cache
+            assert eps["decode_step"]["inputs"][-2:] == ["token", "pos"]
+        else:
+            assert "prefill" not in eps and "kv_cache" not in m
 
 
 def test_hlo_text_is_parseable_hlo(manifest):
@@ -73,6 +95,19 @@ def test_golden_values_consistent(manifest):
         import math
 
         assert abs(per_tok - math.log(m["config"]["vocab"])) < 1.0
+    # KV-decode goldens: the exporter asserts prefill + N x decode_step
+    # logits match full rescoring (incl. the long-range L=128 config) and
+    # records the residual gap.
+    for name in ("t5-nano-dec", "t5-nano-dec-l128", "t5-micro-dec"):
+        if name not in manifest["models"]:
+            continue
+        kv = golden[name]["kv_decode"]
+        assert kv["max_abs_logits_gap"] < 2e-3, name
+        b = manifest["models"][name]["config"]["batch"]
+        assert len(kv["greedy_tokens"]) == b, name
+        assert all(len(t) == kv["steps"] for t in kv["greedy_tokens"]), name
+        l = manifest["models"][name]["config"]["seq_len"]
+        assert kv["prompt_len"] >= min(l // 2, l - 8), f"{name}: short prompt"
 
 
 def test_bench_and_partdemo_artifacts(manifest):

@@ -153,6 +153,102 @@ def test_pattern_init_is_deterministic_and_bounded():
     assert np.abs(a - c).max() > 0  # name-salted
 
 
+# KV tests run on the ref kernels: the incremental-decode contract is
+# kernel-independent, and pallas/ref agreement has its own test above.
+NANO_REF = dataclasses.replace(NANO_DEC, use_pallas=False)
+
+
+def test_prefill_logits_match_full_rescoring():
+    """`prefill` is the decode_logits computation plus cache outputs — its
+    logits must equal `logits_fn` on the same buffer (same kernels/order)."""
+    cfg = NANO_REF
+    params, batch = _params_and_batch(cfg)
+    toks = batch["decoder_input_tokens"]
+    full = M.logits_fn(params, cfg, toks)
+    pre, caches = M.decoder_prefill(params, cfg, toks)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full), atol=1e-5)
+    assert len(caches) == cfg.num_layers
+    for k, v in caches:
+        assert k.shape == (cfg.batch, cfg.num_heads, cfg.seq_len, cfg.head_dim)
+        assert v.shape == k.shape
+
+
+L128_REF = dataclasses.replace(M.CONFIGS["t5-nano-dec-l128"], use_pallas=False)
+
+
+@pytest.mark.parametrize("ragged", [False, True], ids=["aligned", "ragged"])
+@pytest.mark.parametrize("cfg", [NANO_REF, L128_REF], ids=lambda c: c.name)
+def test_prefill_plus_decode_steps_match_rescoring(cfg, ragged):
+    """The tentpole numerical contract: prefill + N x decode_step next-token
+    logits == full logits_fn rescoring at every step, including rows packed
+    at different lengths (continuous batching) and — in the L=128 config —
+    queries attending across long-distance relpos buckets."""
+    params, _ = _params_and_batch(cfg)
+    b, l, v = cfg.batch, cfg.seq_len, cfg.vocab
+    rng = np.random.RandomState(7)
+    dec = np.zeros((b, l), np.int32)
+    lens = np.zeros((b,), np.int32)
+    for i in range(b):
+        plen = l // 2 + (i % 5 if ragged else 3)
+        dec[i, 1 : 1 + plen] = rng.randint(2, v, plen)
+        lens[i] = plen + 1
+    full_logits, cache_pairs = M.decoder_prefill(params, cfg, jnp.asarray(dec))
+    caches = [t for kv in cache_pairs for t in kv]
+    rows = np.asarray(full_logits)[np.arange(b), lens - 1]
+    for _ in range(5):
+        nxt = rows.argmax(-1).astype(np.int32)
+        dec[np.arange(b), lens] = nxt
+        lens = lens + 1
+        outs = M.decoder_decode_step(
+            params,
+            cfg,
+            caches,
+            jnp.asarray(dec[np.arange(b), lens - 1][:, None]),
+            jnp.asarray(lens - 1),
+        )
+        rows, caches = np.asarray(outs[0]), list(outs[1:])
+        assert rows.shape == (b, v)
+        ref_logits = np.asarray(M.logits_fn(params, cfg, jnp.asarray(dec)))
+        np.testing.assert_allclose(
+            rows, ref_logits[np.arange(b), lens - 1], atol=2e-3, rtol=1e-3
+        )
+
+
+def test_decode_step_rows_are_independent():
+    """A row's decode_step logits must not depend on other rows' caches or
+    tokens — the engine's packing-independence contract."""
+    cfg = NANO_REF
+    params, _ = _params_and_batch(cfg)
+    b, l, v = cfg.batch, cfg.seq_len, cfg.vocab
+    dec = np.zeros((b, l), np.int32)
+    dec[:, 1:4] = np.arange(2, 2 + 3)[None, :]
+    full_logits, cache_pairs = M.decoder_prefill(params, cfg, jnp.asarray(dec))
+    caches = [t for kv in cache_pairs for t in kv]
+    token = np.full((b, 1), 9, np.int32)
+    pos = np.full((b,), 4, np.int32)
+    base = np.asarray(
+        M.decoder_decode_step(params, cfg, caches, jnp.asarray(token), jnp.asarray(pos))[0]
+    )
+    # Corrupt every row but 0 (tokens, positions, and cache contents).
+    token2 = token.copy()
+    token2[1:] = 55
+    pos2 = pos.copy()
+    pos2[1:] = 9
+    caches2 = [np.asarray(c).copy() for c in caches]
+    for c in caches2:
+        c[1:] += 0.37
+    out = np.asarray(
+        M.decoder_decode_step(
+            params,
+            cfg,
+            [jnp.asarray(c) for c in caches2],
+            jnp.asarray(token2),
+            jnp.asarray(pos2),
+        )[0]
+    )
+    np.testing.assert_array_equal(base[0], out[0])
+
+
 def test_z_loss_increases_loss():
     cfg = NANO_DEC
     params, batch = _params_and_batch(cfg)

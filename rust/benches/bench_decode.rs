@@ -1,79 +1,143 @@
-//! Serving throughput: naive one-request-per-batch decoding vs the
-//! continuous-batching engine at 1/4/8 concurrent requests.
+//! Serving throughput: three-way naive / engine-rescore / engine-kv
+//! comparison at several prompt+generation lengths.
 //!
-//! The naive row reproduces the pre-engine `cmd_infer` behavior: every
-//! request runs its own full-batch `decode_logits` loop (useful work =
-//! one row, the other B-1 slots decode wasted duplicates). The engine
-//! rows pack the same requests into one batch and refill freed slots
-//! mid-flight. Throughput counts *useful* tokens (requested tokens only),
-//! so the gap is exactly the slot-utilization win; utilization itself is
-//! printed from the engine counters.
+//! * **naive** reproduces the pre-engine `cmd_infer` shape: one request at
+//!   a time through a full-batch rescore loop (useful work = one row, the
+//!   other B-1 slots decode wasted duplicates, every step re-scores the
+//!   whole prefix).
+//! * **engine rescore** packs requests into the batch slots with
+//!   mid-flight refills, but still drives the O(L^2) `decode_logits` HLO.
+//! * **engine kv** is the same scheduler on the O(L) `prefill` /
+//!   `decode_step` entrypoints ([B, 1] token input per step).
+//!
+//! Throughput counts *useful* tokens (requested tokens only), so
+//! naive->rescore isolates the slot-utilization win and rescore->kv the
+//! per-step compute win. Per-step decode seconds come from the engine
+//! counters. The L=128 case asserts kv-mode throughput >= rescore-mode —
+//! the ISSUE-5 acceptance bar (the gap widens with L; at L=32 the fixed
+//! per-call overhead can still hide it).
 
 use t5x::bench::Bench;
-use t5x::infer::{DecodeMethod, InferEngine, InferRequest};
+use t5x::infer::{DecodeMethod, DecodeMode, InferEngine, InferRequest};
 use t5x::runtime::{Artifacts, DeviceHandle};
-use t5x::trainer::eval::EvalRunner;
+
+fn submit_all(engine: &mut InferEngine, prompts: &[Vec<i32>], gen: usize) {
+    for (i, p) in prompts.iter().enumerate() {
+        engine
+            .submit(InferRequest {
+                id: i as u64,
+                prompt: p.clone(),
+                max_tokens: gen,
+                method: DecodeMethod::Greedy,
+            })
+            .unwrap();
+    }
+}
 
 fn main() {
     let arts = Artifacts::load_default().expect("make artifacts first");
     let device = DeviceHandle::spawn().unwrap();
-    let model = "t5-nano-dec";
-    let m = arts.model(model).unwrap().clone();
     let mut bench = Bench::new("decode serving (infer)");
-    let decode_len = if bench.is_quick() { 4 } else { 8 };
-    // eos -1 never fires: every request decodes exactly decode_len tokens,
-    // so naive and engine rows do identical useful work.
+    // eos -1 never fires: every request decodes exactly `gen` tokens, so
+    // all three rows do identical useful work.
     let eos = -1;
-    let params = t5x::model::init_params(&m, 0);
-    let runner = EvalRunner::new(&arts, &device, model).unwrap();
-    let b = m.batch();
-
-    for &n in &[1usize, 4, 8] {
-        // fresh engine per concurrency level so the printed counters are
-        // this configuration's, not an accumulation across rows
-        let mut engine =
-            InferEngine::new(&arts, &device, model, &params, eos).unwrap();
-        let prompts: Vec<Vec<i32>> =
-            (0..n).map(|i| vec![5 + i as i32, 9, 11]).collect();
-        bench.measure_with_throughput(
-            &format!("naive per-prompt full-batch loop ({n} reqs)"),
-            Some(((n * decode_len) as f64, "tok")),
-            || {
-                for p in &prompts {
-                    let batch = vec![p.clone(); b];
-                    let outs = runner
-                        .greedy_decode(&params, None, &batch, decode_len, eos)
-                        .unwrap();
-                    std::hint::black_box(&outs);
-                }
-            },
-        );
-        bench.measure_with_throughput(
-            &format!("continuous-batching engine ({n} reqs)"),
-            Some(((n * decode_len) as f64, "tok")),
-            || {
-                for (i, p) in prompts.iter().enumerate() {
-                    engine
-                        .submit(InferRequest {
-                            id: i as u64,
-                            prompt: p.clone(),
-                            max_tokens: decode_len,
-                            method: DecodeMethod::Greedy,
-                        })
-                        .unwrap();
-                }
-                let res = engine.run_until_idle().unwrap();
-                assert_eq!(res.len(), n);
-                std::hint::black_box(&res);
-            },
-        );
-        println!(
-            "  engine counters after {n}-req rows: slot utilization {:.1}%, \
-             {} refills, {} steps",
-            engine.slot_utilization() * 100.0,
-            engine.counters().get("infer/refills"),
-            engine.counters().get("infer/steps"),
-        );
+    let quick = bench.is_quick();
+    // (model, prompt_len, gen_len): nano-dec is the short-sequence case
+    // (L=32); nano-dec-l128 stretches the prefix to where O(L^2)
+    // rescoring visibly loses (L=128).
+    let cases = [
+        ("t5-nano-dec", 3usize, if quick { 4usize } else { 8 }),
+        ("t5-nano-dec-l128", 8, if quick { 32 } else { 96 }),
+    ];
+    for (model, plen, gen) in cases {
+        let Some(m) = arts.models.get(model) else {
+            println!("  SKIP {model}: not in this artifact dir (re-export)");
+            continue;
+        };
+        let m = m.clone();
+        let l = m.seq_len();
+        let params = t5x::model::init_params(&m, 0);
+        for &n in &[1usize, 4, 8] {
+            let prompts: Vec<Vec<i32>> = (0..n)
+                .map(|i| {
+                    (0..plen).map(|j| ((5 + i * 7 + j * 3) % 400 + 2) as i32).collect()
+                })
+                .collect();
+            let useful = (n * gen) as f64;
+            let mut naive = InferEngine::with_mode(
+                &arts, &device, model, &params, eos, Some(DecodeMode::Rescore),
+            )
+            .unwrap();
+            bench.measure_with_throughput(
+                &format!("{model} naive serial rescore ({n} reqs x {gen} tok)"),
+                Some((useful, "tok")),
+                || {
+                    for p in &prompts {
+                        naive
+                            .submit(InferRequest {
+                                id: 0,
+                                prompt: p.clone(),
+                                max_tokens: gen,
+                                method: DecodeMethod::Greedy,
+                            })
+                            .unwrap();
+                        let r = naive.run_until_idle().unwrap();
+                        assert_eq!(r[0].tokens.len(), gen);
+                    }
+                },
+            );
+            let mut rescore = InferEngine::with_mode(
+                &arts, &device, model, &params, eos, Some(DecodeMode::Rescore),
+            )
+            .unwrap();
+            let rescore_tps = bench
+                .measure_with_throughput(
+                    &format!("{model} engine rescore ({n} reqs x {gen} tok)"),
+                    Some((useful, "tok")),
+                    || {
+                        submit_all(&mut rescore, &prompts, gen);
+                        let r = rescore.run_until_idle().unwrap();
+                        assert_eq!(r.len(), n);
+                    },
+                )
+                .throughput_per_sec()
+                .unwrap();
+            let mut kv = InferEngine::with_mode(
+                &arts, &device, model, &params, eos, Some(DecodeMode::Kv),
+            )
+            .expect("kv mode needs prefill/decode_step (re-export artifacts)");
+            let kv_tps = bench
+                .measure_with_throughput(
+                    &format!("{model} engine kv ({n} reqs x {gen} tok)"),
+                    Some((useful, "tok")),
+                    || {
+                        submit_all(&mut kv, &prompts, gen);
+                        let r = kv.run_until_idle().unwrap();
+                        assert_eq!(r.len(), n);
+                    },
+                )
+                .throughput_per_sec()
+                .unwrap();
+            let (rs, ks) = (rescore.summary(), kv.summary());
+            println!(
+                "  {model} n={n}: per-step decode {:.3} ms (rescore) vs {:.3} ms \
+                 (kv steady-state; {} prefills/{} kv_steps), utilization {:.1}%, \
+                 kv/rescore tokens/s = {:.2}x",
+                rs.seconds_per_step * 1e3,
+                ks.seconds_per_step * 1e3,
+                ks.prefills,
+                kv.counters().get("infer/kv_steps"),
+                ks.slot_utilization * 100.0,
+                kv_tps / rescore_tps.max(1e-12),
+            );
+            if l >= 128 {
+                assert!(
+                    kv_tps >= rescore_tps,
+                    "{model} n={n}: kv tokens/s ({kv_tps:.1}) must be >= \
+                     rescore ({rescore_tps:.1}) at L={l}"
+                );
+            }
+        }
     }
     bench.write_jsonl("bench_results.jsonl").unwrap();
     device.shutdown();

@@ -1,10 +1,10 @@
 //! Continuous-batching inference engine (the serving half of t5x's
 //! `InferTask` path, grown into a real scheduler).
 //!
-//! The model's `decode_logits` HLO has a fixed batch `B` baked in; naive
-//! serving runs one request per full-batch call (1/B slot utilization) or
-//! waits for the slowest row of a batch to finish (head-of-line blocking).
-//! This engine instead treats the `B` rows as *slots*:
+//! The model's decode HLOs have a fixed batch `B` baked in; naive serving
+//! runs one request per full-batch call (1/B slot utilization) or waits
+//! for the slowest row of a batch to finish (head-of-line blocking). This
+//! engine instead treats the `B` rows as *slots*:
 //!
 //! * a FIFO queue holds submitted [`InferRequest`]s;
 //! * before every decode step, free slots are refilled from the queue —
@@ -14,10 +14,48 @@
 //!   freeing its slot for the next queued request at the *next* step, not
 //!   at the end of the batch.
 //!
+//! ## Decode modes: KV-cached vs full rescoring
+//!
+//! [`DecodeMode::Rescore`] drives the original `decode_logits` HLO: every
+//! step re-scores the full `[B, L]` prefix — O(L^2) work per sequence.
+//! [`DecodeMode::Kv`] is the O(L) hot path over the `prefill` /
+//! `decode_step` entrypoints:
+//!
+//! * **admit** — freshly admitted slots run `prefill` once: it scores the
+//!   whole token buffer and materializes per-layer K/V tensors
+//!   (`[B, H, L, head_dim]`, see the manifest `kv_cache` contract). Only
+//!   the *fresh* slots' cache rows are copied out of the prefill result
+//!   (batch-major layout makes each row one contiguous `copy_from_slice`)
+//!   — mid-flight neighbors keep their incrementally built rows, so their
+//!   logits stream is bit-identical to an unpacked run;
+//! * **step** — continuing slots advance through `decode_step` with a
+//!   `[B, 1]` token input (each row's last written token and its
+//!   position): one position of attention work per row, the cache row
+//!   extended in place;
+//! * **retire** — the slot's cache rows go stale and are simply
+//!   overwritten by the `prefill` of the next request admitted to that
+//!   slot (cache-row recycling; nothing is zeroed).
+//!
+//! Mode selection: `InferEngine::new` auto-selects Kv when the manifest
+//! [`supports_kv_decode`](crate::runtime::artifacts::ModelManifest::supports_kv_decode),
+//! falling back to Rescore for stale artifact dirs; `with_mode` (CLI
+//! `--decode-mode kv|rescore`) forces either. Both modes produce
+//! byte-identical per-request *schedules* (admissions, retirements, step
+//! numbering) by construction. Token identity is enforced one level
+//! down: `decode_step` is a different lowering of the same math (single-
+//! query attention over the cache vs full-prefix rescoring, reference
+//! kernels vs the fused ones), and the exporter FAILS unless its logits
+//! match full rescoring within a bound (`export_kv_golden`, incl. the
+//! long-range relpos buckets at L=128) that sits orders of magnitude
+//! below typical argmax margins — so per-slot outputs match rescore
+//! mode byte-for-byte (asserted across greedy/sampling/refill schedules
+//! by `tests/integration_infer.rs`; a checkpoint whose top-2 logits tie
+//! within the kernel gap could in principle flip a token).
+//!
 //! ## Determinism contract
 //!
-//! Per-row logits from `decode_logits` are independent of the other rows'
-//! contents, greedy tokens come from [`decoding::argmax`] (shared with
+//! Per-row logits are independent of the other rows' contents (in both
+//! modes), greedy tokens come from [`decoding::argmax`] (shared with
 //! `EvalRunner::greedy_decode`), and sampling draws exactly one RNG value
 //! per token from a per-request [`Pcg64`] — so a request's output is
 //! byte-identical whether it ran alone or packed with arbitrary neighbors
@@ -25,8 +63,9 @@
 //!
 //! Metrics flow through [`crate::metrics::CounterSet`]: `infer/steps`,
 //! `infer/tokens`, `infer/requests_completed`, `infer/slot_steps_busy`
-//! (utilization = busy / (steps * B)), and `infer/refills` (admissions
-//! that happened while other requests were mid-flight).
+//! (utilization = busy / (steps * B)), `infer/refills` (admissions that
+//! happened while other requests were mid-flight), and in Kv mode
+//! `infer/prefills` / `infer/kv_steps` (device calls per kind).
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -37,6 +76,36 @@ use crate::model::Params;
 use crate::runtime::artifacts::ModelManifest;
 use crate::runtime::{Artifacts, DeviceHandle, Executable, HostTensor};
 use crate::util::rng::Pcg64;
+
+/// How the engine drives the model: the O(L) KV-cached incremental path
+/// or the original full-rescore path (also the stale-artifact fallback).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// `prefill` on admit + `decode_step` per token ([B, 1] input).
+    Kv,
+    /// `decode_logits` over the full [B, L] prefix every step.
+    Rescore,
+}
+
+impl DecodeMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecodeMode::Kv => "kv",
+            DecodeMode::Rescore => "rescore",
+        }
+    }
+
+    /// Parse a CLI `--decode-mode` value; `auto` (None) lets the engine
+    /// pick by manifest capability.
+    pub fn parse(s: &str) -> anyhow::Result<Option<DecodeMode>> {
+        match s {
+            "auto" => Ok(None),
+            "kv" => Ok(Some(DecodeMode::Kv)),
+            "rescore" => Ok(Some(DecodeMode::Rescore)),
+            other => anyhow::bail!("unknown decode mode '{other}' (auto|kv|rescore)"),
+        }
+    }
+}
 
 /// One inference request. `id` is caller-assigned and echoed on the result.
 #[derive(Debug, Clone)]
@@ -76,25 +145,46 @@ struct ActiveSlot {
     submitted: Instant,
     admitted: Instant,
     started_step: u64,
+    /// Admitted this step and not yet prefilled (Kv mode: first token
+    /// comes from `prefill` logits, after which the slot rides
+    /// `decode_step`). Cleared on the slot's first advance in any mode.
+    fresh: bool,
 }
 
 /// Aggregate serving statistics derived from the engine counters.
 #[derive(Debug, Clone)]
 pub struct EngineSummary {
+    /// Resolved decode mode ("kv" | "rescore").
+    pub mode: &'static str,
     pub steps: u64,
     pub tokens: u64,
     pub completed: u64,
     pub refills: u64,
+    /// Kv mode: prefill calls (== admission steps) so far.
+    pub prefills: u64,
     /// Mean fraction of batch slots occupied per decode step.
     pub slot_utilization: f64,
     /// Wall time spent inside decode steps.
     pub decode_seconds: f64,
     pub tokens_per_sec: f64,
+    /// Mean decode wall time per engine step.
+    pub seconds_per_step: f64,
 }
 
 pub struct InferEngine {
     pub manifest: ModelManifest,
+    mode: DecodeMode,
+    /// `decode_logits`: the Rescore driver, and the beam-search adapter's
+    /// substrate in either mode.
     exe: Executable,
+    /// Kv mode only: the `prefill` / `decode_step` executables.
+    prefill_exe: Option<Executable>,
+    step_exe: Option<Executable>,
+    /// Kv mode only: per-layer K/V tensors (`kv_cache` manifest contract,
+    /// k then v per layer), batch-major so slot `i`'s cache is row `i` of
+    /// every tensor. Rows are recycled: a retired slot's rows sit stale
+    /// until the next admission's prefill overwrites them.
+    cache: Vec<HostTensor>,
     /// Parameter tensors in manifest order. Arc-backed `HostTensor` makes
     /// the per-step `ordered.clone()` O(num_params) pointer bumps, not a
     /// deep copy of the parameter bytes.
@@ -102,7 +192,8 @@ pub struct InferEngine {
     eos_id: i32,
     queue: VecDeque<(InferRequest, Instant)>,
     slots: Vec<Option<ActiveSlot>>,
-    /// The shared `[B, L]` decoder token buffer, row per slot.
+    /// The shared `[B, L]` decoder token buffer, row per slot. Kept fully
+    /// written in both modes (Kv prefill reads it on every admission).
     dec: Vec<i32>,
     steps: u64,
     decode_seconds: f64,
@@ -111,12 +202,28 @@ pub struct InferEngine {
 }
 
 impl InferEngine {
+    /// Auto-mode constructor: KV-cached decoding when the artifact dir
+    /// exports it, full rescoring otherwise (stale dirs keep working).
     pub fn new(
         arts: &Artifacts,
         device: &DeviceHandle,
         model: &str,
         params: &Params,
         eos_id: i32,
+    ) -> anyhow::Result<InferEngine> {
+        Self::with_mode(arts, device, model, params, eos_id, None)
+    }
+
+    /// Construct with an explicit decode mode (`--decode-mode kv|rescore`);
+    /// `None` auto-selects by manifest capability. Requesting `Kv` against
+    /// an artifact dir without the incremental entrypoints is an error.
+    pub fn with_mode(
+        arts: &Artifacts,
+        device: &DeviceHandle,
+        model: &str,
+        params: &Params,
+        eos_id: i32,
+        mode: Option<DecodeMode>,
     ) -> anyhow::Result<InferEngine> {
         let manifest = arts.model(model)?.clone();
         anyhow::ensure!(
@@ -125,13 +232,42 @@ impl InferEngine {
             model,
             manifest.arch
         );
+        let mode = match mode {
+            Some(DecodeMode::Kv) => {
+                anyhow::ensure!(
+                    manifest.supports_kv_decode(),
+                    "model {} has no prefill/decode_step entrypoints (stale \
+                     artifact dir? re-export, or use --decode-mode rescore)",
+                    model
+                );
+                DecodeMode::Kv
+            }
+            Some(DecodeMode::Rescore) => DecodeMode::Rescore,
+            None if manifest.supports_kv_decode() => DecodeMode::Kv,
+            None => DecodeMode::Rescore,
+        };
         let (exe, _) = device.compile(&manifest.entrypoint("decode_logits")?.hlo)?;
+        let (prefill_exe, step_exe, cache) = if mode == DecodeMode::Kv {
+            let (pf, _) = device.compile(&manifest.entrypoint("prefill")?.hlo)?;
+            let (st, _) = device.compile(&manifest.entrypoint("decode_step")?.hlo)?;
+            let kv = manifest.kv_cache.as_ref().unwrap();
+            let cache = (0..kv.num_tensors())
+                .map(|_| HostTensor::zeros(kv.shape.clone()))
+                .collect();
+            (Some(pf), Some(st), cache)
+        } else {
+            (None, None, Vec::new())
+        };
         let ordered = crate::model::params_in_order(&manifest, params);
         let b = manifest.batch();
         let l = manifest.seq_len();
         Ok(InferEngine {
             manifest,
+            mode,
             exe,
+            prefill_exe,
+            step_exe,
+            cache,
             ordered,
             eos_id,
             queue: VecDeque::new(),
@@ -144,20 +280,35 @@ impl InferEngine {
         })
     }
 
+    /// The resolved decode mode this engine runs with.
+    pub fn mode(&self) -> DecodeMode {
+        self.mode
+    }
+
     pub fn eos_id(&self) -> i32 {
         self.eos_id
     }
 
     /// Enqueue a request. `max_tokens` is clamped to the sequence budget
-    /// (`seq_len - 1 - prompt_len`); over-long prompts are rejected.
+    /// (`seq_len - 1 - prompt_len`); over-long prompts and out-of-vocab
+    /// token ids are rejected *here* — the serve loop turns the error into
+    /// a per-request response instead of crashing mid-decode.
     pub fn submit(&mut self, req: InferRequest) -> anyhow::Result<()> {
         let l = self.manifest.seq_len();
         anyhow::ensure!(
             req.prompt.len() + 2 <= l,
-            "prompt of {} tokens leaves no room to decode (seq_len {})",
+            "prompt of {} tokens leaves no room to decode (model seq_len {l} \
+             needs BOS + prompt + at least one generated position)",
             req.prompt.len(),
-            l
         );
+        let v = self.manifest.vocab();
+        if let Some(&bad) =
+            req.prompt.iter().find(|&&t| t < 0 || t as usize >= v)
+        {
+            anyhow::bail!(
+                "prompt token id {bad} outside the model vocabulary 0..{v}"
+            );
+        }
         anyhow::ensure!(req.max_tokens >= 1, "max_tokens must be >= 1");
         anyhow::ensure!(
             matches!(req.method, DecodeMethod::Greedy | DecodeMethod::Sample { .. }),
@@ -219,20 +370,69 @@ impl InferEngine {
                 submitted,
                 admitted: Instant::now(),
                 started_step: self.steps,
+                fresh: true,
             });
         }
     }
 
     /// Run one decode step over all occupied slots: admit from the queue,
-    /// execute `decode_logits` once, extend every active row by one token,
-    /// and retire rows that hit EOS / their budget / the sequence end.
-    /// Returns the number of rows that decoded (0 = engine idle).
+    /// execute the mode's decode computation(s), extend every active row
+    /// by one token, and retire rows that hit EOS / their budget / the
+    /// sequence end. Returns the number of rows that decoded (0 = idle).
+    ///
+    /// The scheduling contract (admission points, one token per active
+    /// slot per step, retirement timing) is identical in both modes, so
+    /// `started_step`/`finished_step` — and the produced tokens — do not
+    /// depend on the decode mode.
     pub fn step(&mut self) -> anyhow::Result<usize> {
         self.admit();
         let active = self.active();
         if active == 0 {
             return Ok(0);
         }
+        match self.mode {
+            DecodeMode::Rescore => self.step_rescore(active),
+            DecodeMode::Kv => self.step_kv(active),
+        }
+    }
+
+    /// Extend slot `i` by one token chosen from `row` (`[V]` next-token
+    /// logits) and retire it if finished — the mode-independent half of a
+    /// decode step (token selection, budget math, bookkeeping).
+    fn advance_slot(&mut self, i: usize, row: &[f32]) {
+        let l = self.manifest.seq_len();
+        let Some(slot) = self.slots[i].as_mut() else {
+            return;
+        };
+        slot.fresh = false;
+        let tok = decoding::next_token(&slot.method, row, slot.rng.as_mut()) as i32;
+        slot.produced.push(tok);
+        self.counters.inc("infer/tokens");
+        let done =
+            tok == self.eos_id || slot.len + 1 >= l || slot.produced.len() >= slot.max_tokens;
+        if done {
+            let slot = self.slots[i].take().unwrap();
+            self.dec[i * l..(i + 1) * l].fill(0);
+            let now = Instant::now();
+            self.counters.inc("infer/requests_completed");
+            self.finished.push(InferResult {
+                id: slot.id,
+                prompt_len: slot.prompt_len,
+                tokens: slot.produced,
+                started_step: slot.started_step,
+                finished_step: self.steps,
+                queue_seconds: (slot.admitted - slot.submitted).as_secs_f64(),
+                latency_seconds: (now - slot.submitted).as_secs_f64(),
+            });
+        } else {
+            self.dec[i * l + slot.len] = tok;
+            slot.len += 1;
+        }
+    }
+
+    /// Full-rescore step: one `decode_logits` call over the `[B, L]`
+    /// buffer; every row reads its logits at the last filled position.
+    fn step_rescore(&mut self, active: usize) -> anyhow::Result<usize> {
         let b = self.manifest.batch();
         let l = self.manifest.seq_len();
         let v = self.manifest.vocab();
@@ -241,39 +441,98 @@ impl InferEngine {
         inputs.push(HostTensor::i32(vec![b, l], self.dec.clone()));
         let outs = self.exe.run(inputs)?;
         self.decode_seconds += t0.elapsed().as_secs_f64();
+        self.steps += 1;
+        self.counters.inc("infer/steps");
+        self.counters.add("infer/slot_steps_busy", active as u64);
         let lf = outs[0].as_f32(); // [B, L, V]
+        for i in 0..b {
+            // logits at the last filled position predict the next token
+            let pos = match self.slots[i].as_ref() {
+                Some(slot) => slot.len - 1,
+                None => continue,
+            };
+            self.advance_slot(i, &lf[(i * l + pos) * v..(i * l + pos + 1) * v]);
+        }
+        Ok(active)
+    }
+
+    /// KV-cached step: continuing slots ride `decode_step` ([B, 1] token
+    /// input, one position of attention work per row); freshly admitted
+    /// slots run `prefill` once and take their first token from its
+    /// logits, with ONLY their cache rows merged out of the prefill
+    /// result — mid-flight neighbors keep their incrementally built rows,
+    /// so packing/refill schedules cannot perturb a request's logits.
+    fn step_kv(&mut self, active: usize) -> anyhow::Result<usize> {
+        let b = self.manifest.batch();
+        let l = self.manifest.seq_len();
+        let v = self.manifest.vocab();
+        let cont: Vec<usize> = (0..b)
+            .filter(|&i| matches!(self.slots[i].as_ref(), Some(s) if !s.fresh))
+            .collect();
+        let fresh: Vec<usize> = (0..b)
+            .filter(|&i| matches!(self.slots[i].as_ref(), Some(s) if s.fresh))
+            .collect();
+        let t0 = Instant::now();
+        // Continuing rows: the O(1)-per-token hot path. Inactive/fresh
+        // rows ride along as (token 0, pos 0); their cache writes are
+        // garbage but either unused (empty slots, recycled on the next
+        // admission) or overwritten by the prefill merge below.
+        let mut step_logits: Option<HostTensor> = None; // [B, V]
+        if !cont.is_empty() {
+            let mut tok = vec![0i32; b];
+            let mut pos = vec![0i32; b];
+            for &i in &cont {
+                let s = self.slots[i].as_ref().unwrap();
+                tok[i] = self.dec[i * l + s.len - 1];
+                pos[i] = (s.len - 1) as i32;
+            }
+            let mut inputs = self.ordered.clone();
+            inputs.extend(self.cache.iter().cloned());
+            inputs.push(HostTensor::i32(vec![b, 1], tok));
+            inputs.push(HostTensor::i32(vec![b], pos));
+            let mut outs = self.step_exe.as_ref().unwrap().run(inputs)?;
+            self.cache = outs.split_off(1);
+            step_logits = outs.pop();
+            self.counters.inc("infer/kv_steps");
+        }
+        // Fresh rows: one prefill over the shared token buffer, merging
+        // only their (contiguous, batch-major) cache rows.
+        let mut prefill_logits: Option<HostTensor> = None; // [B, L, V]
+        if !fresh.is_empty() {
+            let mut inputs = self.ordered.clone();
+            inputs.push(HostTensor::i32(vec![b, l], self.dec.clone()));
+            let mut outs = self.prefill_exe.as_ref().unwrap().run(inputs)?;
+            let new_cache = outs.split_off(1);
+            let row = self.manifest.kv_cache.as_ref().unwrap().row_elements();
+            for (dst, src) in self.cache.iter_mut().zip(&new_cache) {
+                let d = dst.as_f32_mut();
+                let s = src.as_f32();
+                for &i in &fresh {
+                    d[i * row..(i + 1) * row].copy_from_slice(&s[i * row..(i + 1) * row]);
+                }
+            }
+            prefill_logits = outs.pop();
+            self.counters.inc("infer/prefills");
+        }
+        self.decode_seconds += t0.elapsed().as_secs_f64();
         self.steps += 1;
         self.counters.inc("infer/steps");
         self.counters.add("infer/slot_steps_busy", active as u64);
         for i in 0..b {
-            let Some(slot) = self.slots[i].as_mut() else {
-                continue;
+            let (was_fresh, pos) = match self.slots[i].as_ref() {
+                Some(slot) => (slot.fresh, slot.len - 1),
+                None => continue,
             };
-            // logits at the last filled position predict the next token
-            let pos = slot.len - 1;
-            let row = &lf[(i * l + pos) * v..(i * l + pos + 1) * v];
-            let tok = decoding::next_token(&slot.method, row, slot.rng.as_mut()) as i32;
-            slot.produced.push(tok);
-            self.counters.inc("infer/tokens");
-            let done =
-                tok == self.eos_id || slot.len + 1 >= l || slot.produced.len() >= slot.max_tokens;
-            if done {
-                let slot = self.slots[i].take().unwrap();
-                self.dec[i * l..(i + 1) * l].fill(0);
-                let now = Instant::now();
-                self.counters.inc("infer/requests_completed");
-                self.finished.push(InferResult {
-                    id: slot.id,
-                    prompt_len: slot.prompt_len,
-                    tokens: slot.produced,
-                    started_step: slot.started_step,
-                    finished_step: self.steps,
-                    queue_seconds: (slot.admitted - slot.submitted).as_secs_f64(),
-                    latency_seconds: (now - slot.submitted).as_secs_f64(),
-                });
+            if was_fresh {
+                let lf =
+                    prefill_logits.as_ref().expect("fresh slot without prefill").as_f32();
+                self.advance_slot(i, &lf[(i * l + pos) * v..(i * l + pos + 1) * v]);
             } else {
-                self.dec[i * l + slot.len] = tok;
-                slot.len += 1;
+                let lf = step_logits
+                    .as_ref()
+                    .expect("continuing slot without decode_step")
+                    .as_f32();
+                self.advance_slot(i, &lf[i * v..(i + 1) * v]);
             }
         }
         Ok(active)
@@ -295,7 +554,10 @@ impl InferEngine {
 
     /// Beam search for a single request, using the batch rows as beam
     /// slots. Requires an idle engine (beams borrow the whole batch) and
-    /// `beams <= B`.
+    /// `beams <= B`. Always drives the full-rescore `decode_logits`
+    /// executable — beams fork/reorder prefixes every round, which has no
+    /// per-slot cache locality — so it works identically in either decode
+    /// mode (the "beam fallback").
     pub fn beam_decode(
         &mut self,
         prompt: &[i32],
@@ -358,15 +620,23 @@ impl InferEngine {
 
     pub fn summary(&self) -> EngineSummary {
         let tokens = self.counters.get("infer/tokens");
+        let steps = self.counters.get("infer/steps");
         EngineSummary {
-            steps: self.counters.get("infer/steps"),
+            mode: self.mode.name(),
+            steps,
             tokens,
             completed: self.counters.get("infer/requests_completed"),
             refills: self.counters.get("infer/refills"),
+            prefills: self.counters.get("infer/prefills"),
             slot_utilization: self.slot_utilization(),
             decode_seconds: self.decode_seconds,
             tokens_per_sec: if self.decode_seconds > 0.0 {
                 tokens as f64 / self.decode_seconds
+            } else {
+                0.0
+            },
+            seconds_per_step: if steps > 0 {
+                self.decode_seconds / steps as f64
             } else {
                 0.0
             },

@@ -6,21 +6,49 @@
 //!   and beam search with length penalty, plus a brute-force exhaustive
 //!   reference used by golden tests.
 //! * [`engine`] — the continuous-batching engine: packs independent
-//!   requests into the fixed `B` batch slots of the `decode_logits` HLO,
-//!   retires rows at EOS, and refills freed slots from the queue
-//!   mid-flight. Reports latency/throughput/utilization through
+//!   requests into the fixed `B` batch slots of the decode HLOs, retires
+//!   rows at EOS, and refills freed slots from the queue mid-flight.
+//!   Reports latency/throughput/utilization through
 //!   [`crate::metrics::CounterSet`].
 //! * [`server`] — a JSONL request/response loop (`t5x serve`) with a
 //!   background reader so requests join the running batch.
 //!
+//! ## KV-cache slot lifecycle (Kv decode mode)
+//!
+//! Each of the `B` slots owns row `i` of every per-layer K/V cache tensor
+//! (`[B, H, L, head_dim]`, the manifest `kv_cache` contract):
+//!
+//! 1. **admit** — the request's prompt is written into the shared token
+//!    buffer and one `prefill` call scores it, materializing the slot's
+//!    cache rows (merged out of the batch-wide prefill result; mid-flight
+//!    neighbors keep their incrementally built rows untouched) and its
+//!    first next-token logits;
+//! 2. **decode** — every subsequent token costs one `decode_step` row:
+//!    `[B, 1]` token input, the cache row extended at the row's own
+//!    position (slots sit at different lengths under continuous batching);
+//! 3. **retire** — at EOS / budget / end-of-sequence the slot frees
+//!    immediately; its cache rows go stale and are *recycled* — the next
+//!    request admitted to the slot overwrites them via its prefill merge,
+//!    so refills need no cache zeroing and cost one prefill regardless of
+//!    what ran in the slot before.
+//!
+//! **Decode-mode selection rule:** `--decode-mode auto` (the default)
+//! uses Kv iff the manifest has `prefill` + `decode_step` + `kv_cache`
+//! ([`ModelManifest::supports_kv_decode`](crate::runtime::artifacts::ModelManifest::supports_kv_decode));
+//! artifact dirs exported before the KV entrypoints automatically serve
+//! via `decode_logits` full rescoring. `--decode-mode kv` errors on such
+//! dirs; `--decode-mode rescore` forces the O(L^2) path (debugging /
+//! byte-identity diffing). Beam search always rides rescoring (beams
+//! fork/reorder prefixes; no per-slot cache locality).
+//!
 //! The subsystem's determinism contract (engine output byte-identical to
-//! single-request decoding, seeded sampling reproducible per request) is
-//! documented in [`decoding`] and [`engine`] and enforced by
-//! `tests/integration_infer.rs`.
+//! single-request decoding AND across decode modes, seeded sampling
+//! reproducible per request) is documented in [`decoding`] and [`engine`]
+//! and enforced by `tests/integration_infer.rs`.
 
 pub mod decoding;
 pub mod engine;
 pub mod server;
 
 pub use decoding::{DecodeMethod, Hypothesis};
-pub use engine::{EngineSummary, InferEngine, InferRequest, InferResult};
+pub use engine::{DecodeMode, EngineSummary, InferEngine, InferRequest, InferResult};

@@ -101,8 +101,12 @@
 //! `parallel_map`, `packed_lm`) embed their buffered examples as hex of
 //! the binary record encoding; RNG-bearing ops store the raw generator
 //! lanes as hex strings (JSON numbers are f64 and would truncate them).
-//! Restore validates the `"op"` tag at every level and fails loudly on a
-//! structurally different pipeline.
+//! `prefetch` snapshots **on request only** (zero steady-state
+//! serialization): `state()` asks the producer thread for the upstream
+//! position and serializes the in-transit elements as `"parked"`, which
+//! restore replays first — exact at every batch boundary without the old
+//! per-element JSON build. Restore validates the `"op"` tag at every
+//! level and fails loudly on a structurally different pipeline.
 //!
 //! ### `parallel_map` determinism contract
 //!
@@ -119,20 +123,45 @@
 //!
 //! The serving stack mirrors `t5x.decoding` + `InferTask`: a pure
 //! host-side decoding library (greedy / temperature / top-k / top-p
-//! sampling / beam search with length penalty) over the `[B, L, V]`
-//! logits of the `decode_logits` HLO, and a continuous-batching engine
-//! that packs independent requests into the fixed `B` batch slots,
-//! retires rows at EOS, and refills freed slots from the request queue
-//! mid-flight (`t5x serve` speaks JSONL over stdin/stdout).
+//! sampling / beam search with length penalty) and a continuous-batching
+//! engine that packs independent requests into the fixed `B` batch
+//! slots, retires rows at EOS, and refills freed slots from the request
+//! queue mid-flight (`t5x serve` speaks JSONL over stdin/stdout).
+//!
+//! ### KV-cached incremental decoding (the serving hot path)
+//!
+//! Decoder models export two entrypoints beyond `decode_logits`:
+//! `prefill(params, tokens) -> (logits, kv_cache)` scores a prompt buffer
+//! once and materializes per-layer K/V tensors (`[B, H, L, head_dim]`,
+//! the manifest `kv_cache` contract), and `decode_step(params, kv_cache,
+//! token, pos) -> (logits, kv_cache')` extends each row's cache by one
+//! position from a `[B, 1]` token input — O(L) total work per sequence
+//! instead of the O(L^2) full-prefix rescore. The engine prefills a slot
+//! on admission (merging only that slot's cache rows, so mid-flight
+//! neighbors are untouched), rides `decode_step` thereafter, and recycles
+//! a retired slot's cache rows at the next admission; the KV slot
+//! lifecycle and the `--decode-mode auto|kv|rescore` selection rule
+//! (auto = kv iff the manifest supports it, so pre-KV artifact dirs keep
+//! serving via rescore) are documented in [`infer`]. `EvalRunner`'s
+//! greedy decode rides the same entrypoints; beam search stays on the
+//! rescore substrate (beams fork/reorder prefixes).
 //!
 //! ### Inference determinism contract
 //!
 //! * Greedy ties break toward the lowest token id everywhere
 //!   ([`infer::decoding::argmax`] is shared by the engine and
-//!   `EvalRunner::greedy_decode`), and per-row `decode_logits` outputs do
-//!   not depend on other rows — so a request's greedy output is
-//!   byte-identical whether it ran alone or packed with arbitrary
-//!   neighbors (asserted by `tests/integration_infer.rs`).
+//!   `EvalRunner::greedy_decode`), and per-row decode outputs do not
+//!   depend on other rows (in either decode mode) — so a request's
+//!   greedy output is byte-identical whether it ran alone or packed with
+//!   arbitrary neighbors (asserted by `tests/integration_infer.rs`).
+//! * Kv and Rescore modes share one scheduling contract (admissions, one
+//!   token per active slot per step, retirement timing) by construction,
+//!   and the incremental entrypoints are golden-checked against full
+//!   rescoring at export time (the exporter fails on drift; the residual
+//!   kernel-lowering gap sits far below typical argmax margins) — per-
+//!   slot outputs match between modes byte-for-byte, including under
+//!   mid-flight refills and seeded sampling, as asserted by
+//!   `tests/integration_infer.rs`.
 //! * Sampling is seeded per request and draws exactly one RNG value per
 //!   emitted token, so (prompt, seed) fully determines the continuation
 //!   regardless of batch packing or scheduler interleaving.

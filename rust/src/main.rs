@@ -14,8 +14,15 @@
 //! t5x eval   --model t5-micro-dec [--task <registry-name>] [--ckpt DIR]
 //! t5x infer  --model t5-nano-dec --prompt "5 9 11" --len 8 \
 //!            [--decode greedy|sample|beam] [--temperature 0.8] [--top-k 20] \
-//!            [--top-p 0.95] [--seed 7] [--beam 4] [--alpha 0.6]
-//! t5x serve  --model t5-nano-dec [--len 16]   # JSONL requests on stdin
+//!            [--top-p 0.95] [--seed 7] [--beam 4] [--alpha 0.6] \
+//!            [--decode-mode auto|kv|rescore]
+//! t5x serve  --model t5-nano-dec [--len 16] [--decode-mode auto|kv|rescore]
+//!            # JSONL requests on stdin
+//!
+//! `--decode-mode` picks the serving hot path: `kv` drives the O(L)
+//! `prefill`/`decode_step` entrypoints, `rescore` the O(L^2) full
+//! `decode_logits` loop; `auto` (default) uses kv iff the artifact dir
+//! exports it, so stale artifact dirs keep serving.
 //! t5x inspect-ckpt --dir DIR
 //! t5x cost-table --model t5-100m-dec
 //! ```
@@ -35,7 +42,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use t5x::gin::Config;
-use t5x::infer::{DecodeMethod, InferEngine, InferRequest};
+use t5x::infer::{DecodeMethod, DecodeMode, InferEngine, InferRequest};
 use t5x::optim::{OptimizerKind, Schedule};
 use t5x::partitioning::{cost, Mesh, ParamStrategy};
 use t5x::runtime::{Artifacts, DeviceHandle};
@@ -457,13 +464,19 @@ fn load_infer_params(
     })
 }
 
+/// `--decode-mode auto|kv|rescore` (None = auto-select by manifest).
+fn decode_mode_flag(args: &Args) -> anyhow::Result<Option<DecodeMode>> {
+    DecodeMode::parse(&args.get_or("decode-mode", "auto"))
+}
+
 fn cmd_infer(args: &Args) -> anyhow::Result<()> {
     let model = args.get_or("model", "t5-nano-dec");
     let arts = Artifacts::load_default()?;
     let device = DeviceHandle::spawn()?;
     let m = arts.model(&model)?;
     let params = load_infer_params(args, m)?;
-    let mut engine = InferEngine::new(&arts, &device, &model, &params, 1)?;
+    let mut engine =
+        InferEngine::with_mode(&arts, &device, &model, &params, 1, decode_mode_flag(args)?)?;
     let prompt: Vec<i32> = args
         .get_or("prompt", "5 9 11")
         .split_whitespace()
@@ -501,9 +514,12 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
     let s = engine.summary();
     println!("generated ids: {:?}", results[0].tokens);
     println!(
-        "latency {:.2} ms, {:.1} tok/s, slot utilization {:.1}%",
+        "decode mode {}, latency {:.2} ms, {:.1} tok/s ({:.2} ms/step), \
+         slot utilization {:.1}%",
+        s.mode,
         results[0].latency_seconds * 1e3,
         s.tokens_per_sec,
+        s.seconds_per_step * 1e3,
         s.slot_utilization * 100.0
     );
     Ok(())
@@ -515,12 +531,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let device = DeviceHandle::spawn()?;
     let m = arts.model(&model)?;
     let params = load_infer_params(args, m)?;
-    let mut engine = InferEngine::new(&arts, &device, &model, &params, 1)?;
+    let mut engine =
+        InferEngine::with_mode(&arts, &device, &model, &params, 1, decode_mode_flag(args)?)?;
     let default_max = args.get_usize("len", 16)?;
     eprintln!(
-        "serving {model} (batch {} slots): one JSON request per stdin line, \
-         e.g. {{\"prompt\": [5, 9, 11], \"max_tokens\": 8}}; EOF to stop",
-        m.batch()
+        "serving {model} (batch {} slots, {} decode mode): one JSON request \
+         per stdin line, e.g. {{\"prompt\": [5, 9, 11], \"max_tokens\": 8}}; \
+         EOF to stop",
+        m.batch(),
+        engine.mode().name()
     );
     let served = t5x::infer::server::serve(
         &mut engine,
@@ -530,11 +549,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     )?;
     let s = engine.summary();
     eprintln!(
-        "served {} requests ({} malformed): {} decode steps, {} tokens, \
-         {:.1} tok/s, slot utilization {:.1}%, {} mid-flight refills",
+        "served {} requests ({} rejected): {} decode steps ({} prefills, \
+         {} mode), {} tokens, {:.1} tok/s, slot utilization {:.1}%, \
+         {} mid-flight refills",
         served.requests,
         served.errors,
         s.steps,
+        s.prefills,
+        s.mode,
         s.tokens,
         s.tokens_per_sec,
         s.slot_utilization * 100.0,

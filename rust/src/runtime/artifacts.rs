@@ -37,6 +37,37 @@ pub struct Entrypoint {
     pub outputs: Vec<String>,
 }
 
+/// The KV-cache contract exported next to `prefill`/`decode_step`
+/// (decoder-only models): per-layer k/v tensors of `shape`
+/// (`[batch, heads, seq, head_dim]`, f32, batch-major so one request's
+/// cache rows are contiguous — the engine recycles them on slot refill).
+#[derive(Debug, Clone)]
+pub struct KvCacheSpec {
+    /// Axis names, e.g. ["batch", "heads", "seq", "head_dim"].
+    pub layout: Vec<String>,
+    pub shape: Vec<usize>,
+    pub num_layers: usize,
+    /// Tensors per layer in entrypoint order, e.g. ["k", "v"].
+    pub per_layer: Vec<String>,
+}
+
+impl KvCacheSpec {
+    /// Number of cache tensors flowing through the entrypoints.
+    pub fn num_tensors(&self) -> usize {
+        self.num_layers * self.per_layer.len()
+    }
+
+    /// Elements per cache tensor.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Elements of one batch row of one cache tensor (batch-major layout).
+    pub fn row_elements(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+}
+
 /// Everything the coordinator knows about one exported model.
 #[derive(Debug, Clone)]
 pub struct ModelManifest {
@@ -46,6 +77,10 @@ pub struct ModelManifest {
     pub params: Vec<ParamSpec>,
     pub batch_features: Vec<FeatureSpec>,
     pub entrypoints: BTreeMap<String, Entrypoint>,
+    /// KV-cache contract, present when `prefill`/`decode_step` exist.
+    /// Older artifact dirs (exported before the incremental-decode
+    /// entrypoints) simply lack it and serve via full rescoring.
+    pub kv_cache: Option<KvCacheSpec>,
 }
 
 impl ModelManifest {
@@ -83,6 +118,16 @@ impl ModelManifest {
     /// Tokens contributing to a train step on one host.
     pub fn tokens_per_step(&self) -> usize {
         self.batch() * self.seq_len()
+    }
+
+    /// True when this artifact dir carries the O(L) incremental-decode
+    /// capability: `prefill` + `decode_step` entrypoints plus the
+    /// `kv_cache` contract. Drives the serving stack's auto mode
+    /// selection; stale dirs fall back to `decode_logits` rescoring.
+    pub fn supports_kv_decode(&self) -> bool {
+        self.kv_cache.is_some()
+            && self.entrypoints.contains_key("prefill")
+            && self.entrypoints.contains_key("decode_step")
     }
 }
 
@@ -230,7 +275,37 @@ fn parse_model(name: &str, j: &Json, dir: &Path) -> anyhow::Result<ModelManifest
             );
         }
     }
-    Ok(ModelManifest { name: name.to_string(), arch, config, params, batch_features, entrypoints })
+    let kv_cache = j.get("kv_cache").map(|kv| {
+        let strings = |key: &str| -> Vec<String> {
+            kv.get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        KvCacheSpec {
+            layout: strings("layout"),
+            shape: kv
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+            num_layers: kv.get("num_layers").and_then(|v| v.as_usize()).unwrap_or(0),
+            per_layer: strings("per_layer"),
+        }
+    });
+    Ok(ModelManifest {
+        name: name.to_string(),
+        arch,
+        config,
+        params,
+        batch_features,
+        entrypoints,
+        kv_cache,
+    })
 }
 
 #[cfg(test)]
@@ -257,6 +332,37 @@ mod tests {
         // bench + partdemo artifacts present
         assert!(a.bench.contains_key("scan_L4"));
         assert!(a.partdemo.as_ref().unwrap().hlos.contains_key("ffn_full"));
+    }
+
+    #[test]
+    fn decoder_manifests_carry_kv_decode_contract() {
+        let a = Artifacts::load_default().unwrap();
+        let m = a.model("t5-nano-dec").unwrap();
+        assert!(m.supports_kv_decode(), "re-export artifacts (make artifacts)");
+        let kv = m.kv_cache.as_ref().unwrap();
+        assert_eq!(
+            kv.shape,
+            vec![
+                m.batch(),
+                m.cfg_usize("num_heads"),
+                m.seq_len(),
+                m.cfg_usize("head_dim")
+            ]
+        );
+        assert_eq!(kv.num_layers, m.cfg_usize("num_layers"));
+        assert_eq!(kv.per_layer, vec!["k", "v"]);
+        assert_eq!(kv.row_elements() * m.batch(), kv.elements());
+        // one output per cache tensor plus the logits
+        let pf = m.entrypoint("prefill").unwrap();
+        assert_eq!(pf.outputs.len(), 1 + kv.num_tensors());
+        assert!(pf.hlo.exists());
+        let ds = m.entrypoint("decode_step").unwrap();
+        assert_eq!(ds.outputs.len(), 1 + kv.num_tensors());
+        assert!(ds.hlo.exists());
+        // encdec models serve via rescoring only
+        let ed = a.model("t5-nano-encdec").unwrap();
+        assert!(!ed.supports_kv_decode());
+        assert!(ed.kv_cache.is_none());
     }
 
     #[test]

@@ -303,23 +303,30 @@ impl Dataset {
     }
 
     /// Move production to a background thread with a bounded buffer —
-    /// the infeed prefetch that hides data-pipeline latency (E9). The
-    /// producer pairs every element with the upstream state that follows
-    /// it, so `state()` reflects *delivered* (not merely produced)
-    /// elements; elements still in the buffer are re-produced on restore.
+    /// the infeed prefetch that hides data-pipeline latency (E9).
     ///
-    /// Cost note: the per-element upstream snapshot serializes buffering
-    /// ops' buffers and quiesces `parallel_map` in-flight work on every
-    /// element, so do NOT place `prefetch` directly downstream of
-    /// `parallel_map` or a huge `shuffle_window` — `parallel_map` already
-    /// provides its own lookahead (see the ROADMAP incremental-snapshot
-    /// item).
+    /// Snapshots are **on-request**: steady-state production does zero
+    /// state serialization (the old per-element upstream snapshot — one
+    /// JSON build per element, quiescing an upstream `parallel_map` per
+    /// element — was a documented anti-pattern). `state()` posts a
+    /// snapshot request to the producer and drains in-transit elements
+    /// into a parked queue until the reply arrives through the same
+    /// channel, so the captured state is the upstream position after
+    /// every parked/delivered element and the snapshot serializes those
+    /// parked elements (at most `buffer` of them) alongside it. Restore
+    /// repositions the upstream and replays the parked elements first —
+    /// state is exact wherever it is taken (the infeed takes it at batch
+    /// boundaries), and `prefetch` may now sit directly downstream of
+    /// `parallel_map` or a large `shuffle_window`.
     pub fn prefetch(self, buffer: usize) -> Dataset {
         Dataset::from_op(PrefetchOp {
             pending: Some(self.op),
             buffer: buffer.max(1),
             rx: None,
-            last_state: None,
+            snap_tx: None,
+            parked: VecDeque::new(),
+            final_state: None,
+            done: false,
         })
     }
 
@@ -693,56 +700,141 @@ impl PipelineOp for InterleaveOp {
     }
 }
 
+/// Producer-to-consumer message. Elements and snapshot replies travel
+/// through ONE channel, so a `State` reply is ordered after exactly the
+/// elements produced before it — the invariant that makes on-request
+/// snapshots exact without any per-element state capture.
+enum PrefetchMsg {
+    Elem(Example),
+    /// Reply to a snapshot request: upstream state at the producer's
+    /// current position (follows every element sent before it).
+    State(Json),
+    /// Upstream exhausted; carries the final upstream state.
+    End(Json),
+}
+
 struct PrefetchOp {
     /// The upstream op; present until the producer thread starts.
     pending: Option<Box<dyn PipelineOp>>,
     buffer: usize,
-    rx: Option<PipeReceiver<(Example, Json)>>,
-    /// Upstream state immediately after the last *delivered* element.
-    last_state: Option<Json>,
+    rx: Option<PipeReceiver<PrefetchMsg>>,
+    /// Snapshot-request line to the producer (unit per request).
+    snap_tx: Option<PipeSender<()>>,
+    /// Elements drained off the channel while waiting for a snapshot
+    /// reply; delivered (in order) before reading the channel again.
+    parked: VecDeque<Example>,
+    /// Upstream state after the last produced element, once `End` is seen.
+    final_state: Option<Json>,
+    done: bool,
 }
 
 impl PrefetchOp {
     fn start(&mut self) {
         let mut inner = self.pending.take().expect("prefetch already started");
-        self.last_state = Some(inner.state());
         let (tx, rx) = Pipe::bounded(self.buffer);
+        let (snap_tx, snap_rx) = Pipe::<()>::bounded(1);
         std::thread::Builder::new()
             .name("seqio-prefetch".into())
             .spawn(move || {
-                while let Some(e) = inner.next() {
-                    let st = inner.state();
-                    if !tx.send((e, st)) {
-                        break; // consumer hung up
+                loop {
+                    // Serve snapshot requests between elements: the reply
+                    // rides the element channel, so its position in the
+                    // stream pins exactly which elements it follows.
+                    while snap_rx.try_recv().is_some() {
+                        if !tx.send(PrefetchMsg::State(inner.state())) {
+                            return; // consumer hung up
+                        }
+                    }
+                    match inner.next() {
+                        Some(e) => {
+                            if !tx.send(PrefetchMsg::Elem(e)) {
+                                return;
+                            }
+                        }
+                        None => break,
                     }
                 }
+                let _ = tx.send(PrefetchMsg::End(inner.state()));
             })
             .expect("spawn prefetch thread");
         self.rx = Some(rx);
+        self.snap_tx = Some(snap_tx);
+    }
+
+    /// Exact upstream state at the delivered-plus-parked position: ask the
+    /// producer, park every element that was already in transit, and take
+    /// the reply (or the final state if the upstream ended first).
+    fn request_snapshot(&mut self) -> Json {
+        let requested =
+            self.snap_tx.as_ref().map(|t| t.send(())).unwrap_or(false);
+        // Even if the request could not be delivered (producer exited
+        // after End), the channel must be drained to End so `parked` +
+        // `final_state` describe the full stream.
+        if requested || !self.done {
+            while let Some(msg) = self.rx.as_ref().and_then(|rx| rx.recv()) {
+                match msg {
+                    PrefetchMsg::Elem(e) => self.parked.push_back(e),
+                    PrefetchMsg::State(st) => return st,
+                    PrefetchMsg::End(st) => {
+                        self.done = true;
+                        self.final_state = Some(st.clone());
+                        return st;
+                    }
+                }
+            }
+            // Channel closed without a reply: the producer died mid-
+            // stream (upstream panic). There is no exact state to report.
+            self.done = true;
+        }
+        self.final_state.clone().unwrap_or(Json::Null)
     }
 }
 
 impl PipelineOp for PrefetchOp {
     fn next(&mut self) -> Option<Example> {
-        if self.rx.is_none() {
+        if self.pending.is_some() {
             self.start();
         }
-        match self.rx.as_ref().and_then(|rx| rx.recv()) {
-            Some((e, st)) => {
-                self.last_state = Some(st);
-                Some(e)
+        if let Some(e) = self.parked.pop_front() {
+            return Some(e);
+        }
+        if self.done {
+            return None;
+        }
+        loop {
+            match self.rx.as_ref().and_then(|rx| rx.recv()) {
+                Some(PrefetchMsg::Elem(e)) => return Some(e),
+                // A snapshot reply can only appear here if a caller
+                // abandoned `state()`'s drain, which never happens —
+                // but skipping one is harmless (it is just a position).
+                Some(PrefetchMsg::State(_)) => continue,
+                Some(PrefetchMsg::End(st)) => {
+                    self.done = true;
+                    self.final_state = Some(st);
+                    return None;
+                }
+                None => {
+                    self.done = true;
+                    return None;
+                }
             }
-            None => None,
         }
     }
 
     fn state(&mut self) -> Json {
-        let inner = match (&mut self.pending, &self.last_state) {
-            (Some(p), _) => p.state(),
-            (None, Some(st)) => st.clone(),
-            (None, None) => Json::Null,
+        let inner = match self.pending.as_mut() {
+            // Not started: `parked` may still hold restored elements.
+            Some(p) => p.state(),
+            None => self.request_snapshot(),
         };
-        Json::obj(vec![("op", Json::str("prefetch")), ("inner", inner)])
+        let parked = examples_to_json(self.parked.iter());
+        Json::obj(vec![
+            ("op", Json::str("prefetch")),
+            ("inner", inner),
+            // In-transit elements at snapshot time (bounded by `buffer`):
+            // serialized here, replayed first after restore.
+            ("parked", parked),
+        ])
     }
 
     fn restore(&mut self, s: &Json) -> anyhow::Result<()> {
@@ -751,7 +843,19 @@ impl PipelineOp for PrefetchOp {
             .pending
             .as_mut()
             .ok_or_else(|| anyhow::anyhow!("cannot restore a running prefetch"))?;
-        p.restore(field(s, "inner")?)
+        p.restore(field(s, "inner")?)?;
+        // Pre-PR5 snapshots carried no parked elements (state was taken
+        // per delivered element); treat a missing field as empty.
+        self.parked = match s.get("parked") {
+            Some(v) => {
+                let arr = v.as_arr().ok_or_else(|| {
+                    anyhow::anyhow!("prefetch state field 'parked' is not an array")
+                })?;
+                examples_from_json(arr)?.into()
+            }
+            None => VecDeque::new(),
+        };
+        Ok(())
     }
 }
 
@@ -1267,6 +1371,110 @@ mod tests {
         let tail: Vec<i32> =
             (&mut resumed).map(|e| e["x"].as_ints().unwrap()[0]).collect();
         assert_eq!(tail, (9..30).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prefetch_snapshot_is_exact_at_every_boundary() {
+        // The on-request snapshot contract: wherever state is taken (the
+        // infeed takes it at batch boundaries), restore + drain yields
+        // exactly the not-yet-delivered suffix — including elements that
+        // were in transit in the prefetch buffer (serialized as 'parked').
+        let build = || Dataset::from_vec(nums(24)).prefetch(3);
+        for cut in [0usize, 1, 3, 7, 23, 24] {
+            let mut first = build();
+            let head: Vec<i32> = (&mut first)
+                .take(cut)
+                .map(|e| e["x"].as_ints().unwrap()[0])
+                .collect();
+            assert_eq!(head, (0..cut as i32).collect::<Vec<_>>());
+            let snap = first.state();
+            let mut resumed = build();
+            resumed.restore(&snap).unwrap();
+            let tail: Vec<i32> =
+                (&mut resumed).map(|e| e["x"].as_ints().unwrap()[0]).collect();
+            assert_eq!(tail, (cut as i32..24).collect::<Vec<_>>(), "cut={cut}");
+            // the original stream is NOT disturbed by the snapshot
+            let rest: Vec<i32> =
+                (&mut first).map(|e| e["x"].as_ints().unwrap()[0]).collect();
+            assert_eq!(rest, (cut as i32..24).collect::<Vec<_>>(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn prefetch_repeated_snapshots_and_parked_carryover() {
+        // Two snapshots with no consumption in between must agree, and a
+        // snapshot taken right after restore (parked elements pending)
+        // must carry them.
+        let build = || Dataset::from_vec(nums(20)).prefetch(4);
+        let mut d = build();
+        let _ = (&mut d).take(6).count();
+        let s1 = d.state();
+        let s2 = d.state();
+        // both snapshots restore to the same continuation
+        for s in [&s1, &s2] {
+            let mut r = build();
+            r.restore(s).unwrap();
+            let tail: Vec<i32> =
+                (&mut r).map(|e| e["x"].as_ints().unwrap()[0]).collect();
+            assert_eq!(tail, (6..20).collect::<Vec<_>>());
+        }
+        // snapshot-of-a-restore (before consuming) preserves parked rows
+        let mut r = build();
+        r.restore(&s1).unwrap();
+        let s3 = r.state();
+        let mut r2 = build();
+        r2.restore(&s3).unwrap();
+        let tail: Vec<i32> =
+            (&mut r2).map(|e| e["x"].as_ints().unwrap()[0]).collect();
+        assert_eq!(tail, (6..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prefetch_restores_legacy_state_without_parked_field() {
+        // Pre-PR5 snapshots paired state with every delivered element and
+        // carried no 'parked' array — they must still restore.
+        let build = || Dataset::from_vec(nums(10)).prefetch(2);
+        let mut d = build();
+        let _ = (&mut d).take(4).count();
+        let snap = d.state();
+        let legacy = PipelineState(match snap.0 {
+            Json::Obj(fields) => Json::Obj(
+                fields.into_iter().filter(|(k, _)| k.as_str() != "parked").collect(),
+            ),
+            _ => panic!("prefetch state must be an object"),
+        });
+        let mut r = build();
+        r.restore(&legacy).unwrap();
+        let tail: Vec<i32> =
+            (&mut r).map(|e| e["x"].as_ints().unwrap()[0]).collect();
+        assert_eq!(tail, (4..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prefetch_downstream_of_parallel_map_snapshots_cheaply() {
+        // The documented anti-pattern is gone: prefetch may sit right
+        // after parallel_map; steady-state production does no state
+        // serialization and snapshots stay exact.
+        let build = || {
+            Dataset::from_vec(nums(40))
+                .parallel_map(
+                    |mut e| {
+                        let x = e["x"].as_ints().unwrap()[0];
+                        e.insert("y".into(), Feature::Ints(vec![x * 2]));
+                        e
+                    },
+                    2,
+                )
+                .prefetch(4)
+        };
+        let mut d = build();
+        let _ = (&mut d).take(11).count();
+        let snap = d.state();
+        let mut r = build();
+        r.restore(&snap).unwrap();
+        let tail: Vec<i32> =
+            (&mut r).map(|e| e["y"].as_ints().unwrap()[0]).collect();
+        assert_eq!(tail, (11..40).map(|x| x * 2).collect::<Vec<_>>());
     }
 
     #[test]

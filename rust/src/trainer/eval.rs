@@ -17,6 +17,11 @@ pub struct EvalRunner {
     pub manifest: ModelManifest,
     eval_exe: Executable,
     decode_exe: Executable,
+    /// KV-cached incremental decode pair, compiled when the artifact dir
+    /// exports it (decoder models); `greedy_decode` rides it, falling
+    /// back to full rescoring for encdec models and stale artifact dirs.
+    prefill_exe: Option<Executable>,
+    step_exe: Option<Executable>,
 }
 
 #[derive(Debug, Clone)]
@@ -36,7 +41,20 @@ impl EvalRunner {
         let manifest = arts.model(model)?.clone();
         let (eval_exe, _) = device.compile(&manifest.entrypoint("eval_step")?.hlo)?;
         let (decode_exe, _) = device.compile(&manifest.entrypoint("decode_logits")?.hlo)?;
-        Ok(EvalRunner { manifest, eval_exe, decode_exe })
+        let (prefill_exe, step_exe) = if manifest.supports_kv_decode() {
+            let (pf, _) = device.compile(&manifest.entrypoint("prefill")?.hlo)?;
+            let (st, _) = device.compile(&manifest.entrypoint("decode_step")?.hlo)?;
+            (Some(pf), Some(st))
+        } else {
+            (None, None)
+        };
+        Ok(EvalRunner { manifest, eval_exe, decode_exe, prefill_exe, step_exe })
+    }
+
+    /// True when `greedy_decode` (decoder-only calls) uses the KV-cached
+    /// incremental path rather than per-step full rescoring.
+    pub fn decodes_with_kv(&self) -> bool {
+        self.prefill_exe.is_some()
     }
 
     /// Average loss/accuracy over a set of batches.
@@ -68,13 +86,32 @@ impl EvalRunner {
         })
     }
 
-    /// Greedy decode: iteratively feed the prefix, take argmax of the next
-    /// position. `prompts` holds per-row prompt token ids (<= seq_len).
-    /// For enc-dec models `encoder_tokens` must hold the full [B, L]
-    /// encoder batch; for decoder-only pass None.
+    /// Greedy decode: `prompts` holds per-row prompt token ids
+    /// (<= seq_len). For enc-dec models `encoder_tokens` must hold the
+    /// full [B, L] encoder batch; for decoder-only pass None.
+    ///
+    /// Decoder-only calls ride the KV-cached path when the artifact dir
+    /// exports it (`prefill` once, then one `decode_step` per token);
+    /// otherwise each step re-feeds the prefix through `decode_logits`.
+    /// Token selection is [`decoding::argmax`] either way.
     ///
     /// Returns [B][decode_len] generated ids (prompt not included).
     pub fn greedy_decode(
+        &self,
+        params: &Params,
+        encoder_tokens: Option<&HostTensor>,
+        prompts: &[Vec<i32>],
+        decode_len: usize,
+        eos_id: i32,
+    ) -> anyhow::Result<Vec<Vec<i32>>> {
+        if encoder_tokens.is_none() && self.prefill_exe.is_some() {
+            return self.greedy_decode_kv(params, prompts, decode_len, eos_id);
+        }
+        self.greedy_decode_rescore(params, encoder_tokens, prompts, decode_len, eos_id)
+    }
+
+    /// The historical full-rescore loop (encdec models, stale artifacts).
+    fn greedy_decode_rescore(
         &self,
         params: &Params,
         encoder_tokens: Option<&HostTensor>,
@@ -129,6 +166,91 @@ impl EvalRunner {
             }
             if done.iter().all(|&d| d) {
                 break;
+            }
+        }
+        Ok(outputs)
+    }
+
+    /// KV-cached greedy decode: one `prefill` scores every prompt row and
+    /// materializes the cache; each further token costs one `decode_step`
+    /// ([B, 1] token input) — O(L) total instead of O(L^2).
+    fn greedy_decode_kv(
+        &self,
+        params: &Params,
+        prompts: &[Vec<i32>],
+        decode_len: usize,
+        eos_id: i32,
+    ) -> anyhow::Result<Vec<Vec<i32>>> {
+        let b = self.manifest.batch();
+        let l = self.manifest.seq_len();
+        let v = self.manifest.vocab();
+        anyhow::ensure!(prompts.len() == b, "need exactly {b} prompt rows");
+        let ordered = crate::model::params_in_order(&self.manifest, params);
+        let mut dec = vec![0i32; b * l];
+        let mut lens = Vec::with_capacity(b);
+        for (i, p) in prompts.iter().enumerate() {
+            anyhow::ensure!(p.len() + decode_len < l, "prompt+decode exceeds seq_len");
+            for (j, &t) in p.iter().enumerate() {
+                dec[i * l + 1 + j] = t;
+            }
+            lens.push(p.len() + 1); // next position to fill
+        }
+        let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); b];
+        let mut done = vec![false; b];
+        if decode_len == 0 {
+            return Ok(outputs);
+        }
+        // First token: prefill the prompt buffer and build the cache.
+        let mut inputs = ordered.clone();
+        inputs.push(HostTensor::i32(vec![b, l], dec.clone()));
+        let mut outs = self.prefill_exe.as_ref().unwrap().run(inputs)?;
+        let mut cache = outs.split_off(1);
+        {
+            let lf = outs[0].as_f32(); // [B, L, V]
+            for i in 0..b {
+                let pos = lens[i] - 1;
+                let tok = decoding::argmax(&lf[(i * l + pos) * v..(i * l + pos + 1) * v]) as i32;
+                outputs[i].push(tok);
+                if tok == eos_id || lens[i] + 1 >= l {
+                    done[i] = true;
+                } else {
+                    dec[i * l + lens[i]] = tok;
+                    lens[i] += 1;
+                }
+            }
+        }
+        // Remaining tokens: one decode_step per position. Finished rows
+        // ride along re-feeding their last token (idempotent cache write,
+        // output ignored) — exactly the rescore loop's skip semantics.
+        for _ in 1..decode_len {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let mut tok = vec![0i32; b];
+            let mut pos = vec![0i32; b];
+            for i in 0..b {
+                tok[i] = dec[i * l + lens[i] - 1];
+                pos[i] = (lens[i] - 1) as i32;
+            }
+            let mut inputs = ordered.clone();
+            inputs.extend(cache.iter().cloned());
+            inputs.push(HostTensor::i32(vec![b, 1], tok));
+            inputs.push(HostTensor::i32(vec![b], pos));
+            let mut outs = self.step_exe.as_ref().unwrap().run(inputs)?;
+            cache = outs.split_off(1);
+            let lf = outs[0].as_f32(); // [B, V]
+            for i in 0..b {
+                if done[i] {
+                    continue;
+                }
+                let tok = decoding::argmax(&lf[i * v..(i + 1) * v]) as i32;
+                outputs[i].push(tok);
+                if tok == eos_id || lens[i] + 1 >= l {
+                    done[i] = true;
+                } else {
+                    dec[i * l + lens[i]] = tok;
+                    lens[i] += 1;
+                }
             }
         }
         Ok(outputs)
@@ -235,6 +357,24 @@ mod tests {
         // determinism
         let outs2 = runner.greedy_decode(&params, None, &prompts, 6, 1).unwrap();
         assert_eq!(outs, outs2);
+        dev.shutdown();
+    }
+
+    #[test]
+    fn greedy_decode_kv_matches_rescore_loop() {
+        let arts = Artifacts::load_default().unwrap();
+        let dev = DeviceHandle::spawn().unwrap();
+        let runner = EvalRunner::new(&arts, &dev, "t5-nano-dec").unwrap();
+        assert!(runner.decodes_with_kv(), "re-export artifacts for kv entrypoints");
+        let params = crate::model::init_params(&runner.manifest, 5);
+        let b = runner.manifest.batch();
+        // ragged prompts + a live EOS so rows finish at different steps
+        let prompts: Vec<Vec<i32>> =
+            (0..b).map(|i| (0..=(i % 3) as i32).map(|j| 7 + 3 * j + i as i32).collect()).collect();
+        let kv = runner.greedy_decode(&params, None, &prompts, 8, 1).unwrap();
+        let rescore =
+            runner.greedy_decode_rescore(&params, None, &prompts, 8, 1).unwrap();
+        assert_eq!(kv, rescore, "kv greedy decode must match the rescore loop");
         dev.shutdown();
     }
 }

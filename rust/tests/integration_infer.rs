@@ -1,9 +1,11 @@
 //! Integration: the inference serving subsystem — continuous-batching
-//! engine vs single-request decoding (byte-identity), mid-flight slot
-//! refill, seeded sampling under arbitrary packing, the JSONL serve loop,
-//! and the predict-based Evaluator path.
+//! engine vs single-request decoding (byte-identity), KV-cached vs
+//! full-rescore decode modes (byte-identity under mid-flight refills,
+//! seeded sampling, and the beam fallback), stale-artifact fallback,
+//! mid-flight slot refill, the JSONL serve loop, and the predict-based
+//! Evaluator path.
 
-use t5x::infer::{DecodeMethod, InferEngine, InferRequest};
+use t5x::infer::{DecodeMethod, DecodeMode, InferEngine, InferRequest, InferResult};
 use t5x::model::Params;
 use t5x::runtime::{Artifacts, DeviceHandle};
 use t5x::seqio::evaluation::Metric;
@@ -301,6 +303,221 @@ fn predict_and_evaluate_streams_engine_outputs() {
     assert!(report.result.get("edit_similarity").is_some());
     // engine must have decoded all three requests
     assert_eq!(engine.counters().get("infer/requests_completed"), 3);
+    dev.shutdown();
+}
+
+/// Submit `prompts[i]` with budget `budget(i)` and method `method(i)`,
+/// drain the engine, and return the results sorted by request id.
+fn run_requests(
+    engine: &mut InferEngine,
+    prompts: &[Vec<i32>],
+    budget: impl Fn(usize) -> usize,
+    method: impl Fn(usize) -> DecodeMethod,
+) -> Vec<InferResult> {
+    for (i, p) in prompts.iter().enumerate() {
+        engine
+            .submit(InferRequest {
+                id: i as u64,
+                prompt: p.clone(),
+                max_tokens: budget(i),
+                method: method(i),
+            })
+            .unwrap();
+    }
+    let mut results = engine.run_until_idle().unwrap();
+    results.sort_by_key(|r| r.id);
+    results
+}
+
+#[test]
+fn kv_and_rescore_modes_are_byte_identical_under_refills() {
+    // The tentpole acceptance test (L=32 model): see
+    // kv_vs_rescore_byte_identity for the shared body.
+    let (arts, dev, params) = setup();
+    kv_vs_rescore_byte_identity(&arts, &dev, MODEL, &params, 2);
+    dev.shutdown();
+}
+
+#[test]
+fn kv_and_rescore_modes_are_byte_identical_at_l128() {
+    // Same contract on the long-sequence config: deep prompts make the
+    // single-query relpos-bias path cross the far (log-bucket) distance
+    // buckets that L=32 barely touches.
+    let arts = Artifacts::load_default().unwrap();
+    if !arts.models.contains_key("t5-nano-dec-l128") {
+        eprintln!("SKIP: t5-nano-dec-l128 not in this artifact dir (re-export)");
+        return;
+    }
+    let dev = DeviceHandle::spawn().unwrap();
+    let params = t5x::model::init_params(arts.model("t5-nano-dec-l128").unwrap(), 3);
+    kv_vs_rescore_byte_identity(&arts, &dev, "t5-nano-dec-l128", &params, 40);
+    dev.shutdown();
+}
+
+/// Shared body: the O(L) kv path (prefill on admit + [B, 1] decode_step)
+/// must reproduce the O(L^2) rescore path byte-for-byte — tokens AND
+/// schedule — across N > B requests with staggered budgets (mid-flight
+/// refills), for greedy and seeded sampling.
+fn kv_vs_rescore_byte_identity(
+    arts: &Artifacts,
+    dev: &DeviceHandle,
+    model: &str,
+    params: &Params,
+    base_budget: usize,
+) {
+    let m = arts.model(model).unwrap();
+    let (b, l) = (m.batch(), m.seq_len());
+    let eos = -1; // budgets drive retirement -> deterministic refills
+    let n = b + 5;
+    // Prompts reach half the sequence so kv steps attend across long
+    // distances; budgets stagger so slots free at different steps.
+    let plen = l / 2;
+    let prompts: Vec<Vec<i32>> = (0..n)
+        .map(|i| {
+            (0..plen as i32 + (i % 3) as i32).map(|j| 5 + i as i32 + 3 * j % 400).collect()
+        })
+        .collect();
+    let budget = move |i: usize| base_budget + (i % 5);
+    let methods: Vec<(&str, Box<dyn Fn(usize) -> DecodeMethod>)> = vec![
+        ("greedy", Box::new(|_| DecodeMethod::Greedy)),
+        (
+            "sample",
+            Box::new(|i| DecodeMethod::Sample {
+                temperature: 0.8,
+                top_k: 16,
+                top_p: 0.95,
+                seed: 1000 + i as u64,
+            }),
+        ),
+    ];
+    for (label, method) in &methods {
+        let mut kv =
+            InferEngine::with_mode(arts, dev, model, params, eos, Some(DecodeMode::Kv))
+                .unwrap();
+        let mut rescore =
+            InferEngine::with_mode(arts, dev, model, params, eos, Some(DecodeMode::Rescore))
+                .unwrap();
+        assert_eq!(kv.mode(), DecodeMode::Kv);
+        assert_eq!(rescore.mode(), DecodeMode::Rescore);
+        let r_kv = run_requests(&mut kv, &prompts, budget, method);
+        let r_rs = run_requests(&mut rescore, &prompts, budget, method);
+        assert_eq!(r_kv.len(), n);
+        assert_eq!(r_rs.len(), n);
+        for (a, b_) in r_kv.iter().zip(&r_rs) {
+            assert_eq!(
+                a.tokens, b_.tokens,
+                "{label} request {}: kv-mode tokens diverged from rescore",
+                a.id
+            );
+            assert_eq!(a.started_step, b_.started_step, "{label} request {}", a.id);
+            assert_eq!(a.finished_step, b_.finished_step, "{label} request {}", a.id);
+        }
+        // both schedules actually exercised continuous batching...
+        assert!(kv.counters().get("infer/refills") > 0, "{label}: no refills");
+        assert_eq!(
+            kv.counters().get("infer/refills"),
+            rescore.counters().get("infer/refills")
+        );
+        // ...and the kv engine really ran the incremental hot path:
+        // refill admissions prefill again, continuing rows ride
+        // decode_step, and rescore mode never prefills.
+        assert!(kv.counters().get("infer/prefills") >= 2, "{label}");
+        assert!(kv.counters().get("infer/kv_steps") > 0, "{label}");
+        assert_eq!(rescore.counters().get("infer/prefills"), 0);
+    }
+}
+
+#[test]
+fn beam_fallback_is_mode_independent() {
+    // Beam search always drives decode_logits; a kv-mode engine must
+    // produce exactly the rescore engine's hypotheses.
+    let (arts, dev, params) = setup();
+    let prompt = vec![6, 2, 9];
+    let mut kv =
+        InferEngine::with_mode(&arts, &dev, MODEL, &params, -1, Some(DecodeMode::Kv))
+            .unwrap();
+    let mut rescore =
+        InferEngine::with_mode(&arts, &dev, MODEL, &params, -1, Some(DecodeMode::Rescore))
+            .unwrap();
+    let beams = kv.manifest.batch().min(2);
+    let h_kv = kv.beam_decode(&prompt, beams, 0.6, 5).unwrap();
+    let h_rs = rescore.beam_decode(&prompt, beams, 0.6, 5).unwrap();
+    assert_eq!(h_kv, h_rs, "beam fallback must not depend on the decode mode");
+    dev.shutdown();
+}
+
+#[test]
+fn stale_artifact_dirs_serve_via_rescore_fallback() {
+    // An artifact dir exported before the kv entrypoints: auto mode must
+    // resolve to rescore and keep serving; forcing kv is a clear error.
+    let (arts, dev, params) = setup();
+    let mut stale = arts.clone();
+    {
+        let m = stale.models.get_mut(MODEL).unwrap();
+        m.entrypoints.remove("prefill");
+        m.entrypoints.remove("decode_step");
+        m.kv_cache = None;
+        assert!(!m.supports_kv_decode());
+    }
+    let req = || InferRequest {
+        id: 0,
+        prompt: vec![5, 9, 11],
+        max_tokens: 4,
+        method: DecodeMethod::Greedy,
+    };
+    let mut engine = InferEngine::new(&stale, &dev, MODEL, &params, -1).unwrap();
+    assert_eq!(engine.mode(), DecodeMode::Rescore, "auto must fall back");
+    engine.submit(req()).unwrap();
+    let out = engine.run_until_idle().unwrap();
+    assert_eq!(out[0].tokens.len(), 4);
+    // the fresh manifest auto-selects kv and agrees on the output
+    let mut kv = InferEngine::new(&arts, &dev, MODEL, &params, -1).unwrap();
+    assert_eq!(kv.mode(), DecodeMode::Kv, "re-export artifacts (make artifacts)");
+    kv.submit(req()).unwrap();
+    assert_eq!(kv.run_until_idle().unwrap()[0].tokens, out[0].tokens);
+    // explicit --decode-mode kv against the stale dir errors loudly
+    let err =
+        InferEngine::with_mode(&stale, &dev, MODEL, &params, -1, Some(DecodeMode::Kv));
+    assert!(err.is_err());
+    assert!(
+        format!("{:#}", err.err().unwrap()).contains("decode-mode rescore"),
+        "the error must point at the fallback flag"
+    );
+    dev.shutdown();
+}
+
+#[test]
+fn serve_rejects_impossible_prompts_per_request_and_continues() {
+    // An over-long prompt (>= seq_len) or an out-of-vocab token id must
+    // produce a per-request {"id", "error"} response — never crash the
+    // serve loop — and later requests must still decode.
+    use t5x::util::json::Json;
+    let (arts, dev, params) = setup();
+    let l = arts.model(MODEL).unwrap().seq_len();
+    let mut engine = InferEngine::new(&arts, &dev, MODEL, &params, 1).unwrap();
+    let long: Vec<String> = (0..l).map(|_| "3".to_string()).collect();
+    let input = std::io::Cursor::new(format!(
+        "{{\"id\": 7, \"prompt\": [{}], \"max_tokens\": 4}}\n\
+         {{\"id\": 9, \"prompt\": [500000], \"max_tokens\": 3}}\n\
+         {{\"id\": 8, \"prompt\": [5, 9], \"max_tokens\": 3}}\n",
+        long.join(", ")
+    ));
+    let mut out: Vec<u8> = Vec::new();
+    let summary = t5x::infer::server::serve(&mut engine, input, &mut out, 8).unwrap();
+    assert_eq!(summary.requests, 1);
+    assert_eq!(summary.errors, 2);
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    let by_id = |id: i64| {
+        lines
+            .iter()
+            .find(|v| v.get("id").and_then(|x| x.as_i64()) == Some(id))
+            .unwrap_or_else(|| panic!("no response for id {id}: {text}"))
+    };
+    assert!(by_id(7).get("error").is_some(), "over-long prompt must error");
+    assert!(by_id(9).get("error").is_some(), "out-of-vocab id must error");
+    let tokens = by_id(8).get("tokens").expect("valid request must decode");
+    assert_eq!(tokens.as_arr().unwrap().len(), 3);
     dev.shutdown();
 }
 
