@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
         checkpoint_dir: None,
         grad_clip_norm: None,
         weight_decay: None,
+        exec_mode: t5x::partitioning::ExecMode::Auto,
     };
     let trainer = Trainer::new(&arts, &device, cfg)?
         .with_logger(t5x::metrics::MetricsLogger::new().with_terminal());

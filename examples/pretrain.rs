@@ -69,6 +69,7 @@ fn main() -> anyhow::Result<()> {
         checkpoint_dir: Some(ckpt_dir.clone()),
         grad_clip_norm: None,
         weight_decay: None,
+        exec_mode: t5x::partitioning::ExecMode::Auto,
     };
     let trainer = Trainer::new(&arts, &device, cfg)?.with_logger(
         t5x::metrics::MetricsLogger::new()

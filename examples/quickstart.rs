@@ -64,6 +64,9 @@ fn main() -> anyhow::Result<()> {
         checkpoint_dir: None,
         grad_clip_norm: None,
         weight_decay: None,
+        // Auto picks block-sharded execution when the artifacts carry a
+        // block contract for the model axis (no full-param gathers)
+        exec_mode: t5x::partitioning::ExecMode::Auto,
     };
     let trainer = Trainer::new(&arts, &device, cfg)?
         .with_logger(t5x::metrics::MetricsLogger::new().with_terminal());

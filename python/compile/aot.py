@@ -13,6 +13,8 @@ Exports, per model config in ``model.CONFIGS``:
   <model>/eval_step.hlo.txt    (params.., batch..) -> (loss_sum, weight_sum,
                                 correct_sum)
   <model>/decode_logits.hlo.txt (params.., tokens..) -> (logits,)
+  <model>/block_m<n>/<segment>.hlo.txt — model-parallel train-step segments
+                                per model-axis degree n (block_exec contract)
 plus:
   bench/{scan,unroll}_L{2,4,8}.hlo.txt   — Scalable T5 compile-time claim (E12)
   partdemo/ffn_{full,shard2,shard4}.hlo.txt — Megatron MLP sharding demo (E3)
@@ -195,6 +197,104 @@ def export_model(cfg: M.ModelConfig, out_dir: str, entry: dict):
         }
 
 
+# Model-parallel block execution exports (§2.2). Degrees per model: every
+# listed degree whose sharded dims divide (see model.supports_block_degree).
+BLOCK_DEGREES = {
+    "t5-nano-dec": (2, 4),
+    "t5-micro-dec": (2, 4),
+}
+
+
+def export_block(cfg: M.ModelConfig, out_dir: str, entry: dict, degrees):
+    """Export the block train-step segments + `block_exec` manifest contract.
+
+    Per degree n: 12 segment HLOs under <model>/block_m<n>/ (layer weights
+    are segment INPUTS, so depth does not multiply the HLO count), the
+    per-parameter block shapes, the ordered model-axis collective schedule
+    (op/dtype/elems/bytes), and the fused replicated-grad name list. The
+    Rust trainer replays exactly this schedule between segment executions.
+    """
+    fns = M.block_segment_fns(cfg)
+    block = {}
+    for n in degrees:
+        if not M.supports_block_degree(cfg, n):
+            print(f"  {cfg.name}: degree {n} not divisible, skipped")
+            continue
+        t0 = time.time()
+        shapes = M.block_segment_shapes(cfg, n)
+        segments = {}
+        for seg in M.BLOCK_SEGMENT_NAMES:
+            path = f"{cfg.name}/block_m{n}/{seg}.hlo.txt"
+            _write(
+                f"{out_dir}/{path}",
+                to_hlo_text(jax.jit(fns[seg]).lower(*shapes[seg])),
+            )
+            segments[seg] = {"hlo": path}
+        block[str(n)] = {
+            "params": M.model_block_specs(cfg, n),
+            "segments": segments,
+            "collectives": [
+                {
+                    "point": point,
+                    "op": op,
+                    "dtype": "f32",
+                    "elems": elems,
+                    "bytes": elems * 4,
+                    "axis": "model",
+                }
+                for (point, op, elems) in M.block_collective_schedule(cfg, n)
+            ],
+            "replicated_grads": M.block_replicated_params(cfg, n),
+        }
+        print(f"  {cfg.name}: block degree {n} exported in {time.time() - t0:.1f}s")
+    if block:
+        entry[cfg.name]["block_exec"] = {"degrees": block}
+
+
+def export_block_golden(cfg: M.ModelConfig, degrees, goldens: dict):
+    """Export gate: the simulated block schedule (the exact segment +
+    collective sequence Rust replays) must match the monolithic train_step
+    on pattern params + golden batch. Sums are reordered across the model
+    axis (row-parallel K-splits reduce via AR instead of inside one matmul),
+    so agreement is close-but-not-bitwise; the measured gaps are recorded
+    for the Rust tests' tolerances. correct_sum can legitimately differ at
+    exact logit ties and is compared at weight granularity."""
+    params = M.pattern_params(cfg)
+    batch = golden_batch(cfg)
+    train_fn, names = M.train_step_fn(cfg)
+    args = [params[n] for n in names] + [
+        jnp.asarray(batch[f]) for f in M.batch_feature_names(cfg)
+    ]
+    outs = jax.jit(train_fn)(*args)
+    ref_loss = float(outs[0])
+    ref_grads = dict(zip(names, outs[3:]))
+    entry = goldens.setdefault(cfg.name, {}).setdefault("block_exec", {})
+    for n in degrees:
+        if not M.supports_block_degree(cfg, n):
+            continue
+        ls, ws, cs, grads = M.block_reference_step(cfg, n, params, batch)
+        loss_gap = abs(float(ls) - ref_loss) / max(1.0, abs(ref_loss))
+        assert loss_gap < 1e-5, f"{cfg.name} m={n}: block loss diverged: {loss_gap}"
+        assert float(ws) == float(outs[1])
+        assert abs(float(cs) - float(outs[2])) < 1.5, "argmax claim broken"
+        max_grad_gap = 0.0
+        for name in names:
+            a = np.asarray(ref_grads[name], np.float32)
+            b = np.asarray(grads[name], np.float32)
+            denom = max(1e-6, float(np.abs(a).max()))
+            gap = float(np.abs(a - b).max()) / denom
+            assert gap < 1e-3, f"{cfg.name} m={n}: grad {name} diverged: {gap}"
+            max_grad_gap = max(max_grad_gap, gap)
+        entry[str(n)] = {
+            "rel_loss_gap": loss_gap,
+            "max_rel_grad_gap": max_grad_gap,
+        }
+        print(
+            f"  block golden {cfg.name} m={n}: rel loss gap {loss_gap:.2e},"
+            f" max rel grad gap {max_grad_gap:.2e}"
+        )
+
+
 def export_golden(cfg: M.ModelConfig, goldens: dict):
     """Loss + grad-norm goldens for pattern-init params on the golden batch."""
     params = M.pattern_params(cfg)
@@ -357,6 +457,11 @@ def main():
     t0 = time.time()
     for name in args.models.split(","):
         export_model(M.CONFIGS[name], out, manifest["models"])
+    # Model-parallel block entrypoints (§2.2): per-degree segment HLOs +
+    # the block_exec collective-schedule contract.
+    for name, degrees in BLOCK_DEGREES.items():
+        if name in manifest["models"]:
+            export_block(M.CONFIGS[name], out, manifest["models"], degrees)
     export_bench(out, manifest)
     export_partdemo(out, manifest)
 
@@ -364,6 +469,11 @@ def main():
     for name in ("t5-nano-dec", "t5-nano-encdec"):
         if name in manifest["models"]:
             export_golden(M.CONFIGS[name], goldens)
+    # Block-vs-monolithic agreement gate (t5-micro is the same lowering at
+    # a second size; pattern_params' python-loop init makes it the cutoff).
+    for name in ("t5-nano-dec", "t5-micro-dec"):
+        if name in manifest["models"] and name in BLOCK_DEGREES:
+            export_block_golden(M.CONFIGS[name], BLOCK_DEGREES[name], goldens)
     # Every small decoder export gets the kv-consistency gate — crucially
     # including the long-sequence L=128 config whose serving path leans on
     # the far relpos buckets. (t5-small/t5-100m are skipped only because

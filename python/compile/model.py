@@ -554,6 +554,432 @@ def batch_shapes(cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# Model-parallel block execution (§2.2): Megatron-style f/g decomposition.
+#
+# The train step is re-expressed as a sequence of HLO *segments* that take
+# each weight as its `[.., dim/n, ..]` model-axis block plus the shard
+# coordinate (a traced i32 scalar, so ONE HLO serves all shards of a degree).
+# Column-parallel matmuls (wq/wk/wv on joined_kv, wi_0/wi_1 on mlp, the
+# vocab-sharded embedding/output head) need no communication; row-parallel
+# matmuls (attn wo, mlp wo) produce partial sums, so each segment ends right
+# before a Megatron g-point and the host inserts the model-axis all-reduce
+# between segments. The softmax/loss reduction is split the same way
+# (block max -> AR-max, block sum-exp / target-logit -> AR-sum, argmax claim
+# -> AR-min). Backward segments are the jax.vjp of the forward closures
+# (rematerialized from the saved segment inputs — no residual-tensor
+# contract); residual adds happen on the HOST so the replicated identity
+# path is never double-counted by the per-shard vjps.
+#
+# Per layer the segments share one HLO (layer weights are inputs), so a
+# degree exports exactly the 12 segments below regardless of depth. The
+# ordered collective schedule (`block_collective_schedule`) is recorded in
+# the manifest `block_exec` contract and replayed by the Rust trainer.
+# ---------------------------------------------------------------------------
+
+#: Logical axes the partitioner maps to the model mesh axis
+#: (mirrors rust `LogicalAxisRules::standard()`).
+MODEL_AXIS_NAMES = ("vocab", "heads", "mlp", "joined_kv")
+
+#: Claim value meaning "my vocab block does not hold the global argmax";
+#: larger than any token id, dropped by the AR-min.
+BLOCK_CLAIM_NONE = 1.0e9
+
+#: Segment export order (also the manifest order).
+BLOCK_SEGMENT_NAMES = [
+    "fwd_embed",
+    "fwd_attn",
+    "fwd_mlp",
+    "fwd_loss_logits",
+    "fwd_loss_finalize",
+    "fwd_loss_final",
+    "bwd_loss_final",
+    "bwd_loss_finalize",
+    "bwd_loss_logits",
+    "bwd_attn",
+    "bwd_mlp",
+    "bwd_embed",
+]
+
+
+def supports_block_degree(cfg: ModelConfig, degree: int) -> bool:
+    """A degree is exportable iff every model-sharded dimension divides:
+    vocab (embedding/logits), heads (relpos table + joined_kv), d_ff."""
+    return (
+        cfg.arch == "decoder"
+        and degree >= 2
+        and cfg.vocab % degree == 0
+        and cfg.num_heads % degree == 0
+        and cfg.d_ff % degree == 0
+    )
+
+
+def model_block_specs(cfg: ModelConfig, degree: int):
+    """Per-parameter model-axis block shapes at `degree` shards.
+
+    Mirrors rust `Partitioner::spec_for`: the FIRST dimension whose logical
+    axis maps to the model mesh axis and is divisible by `degree` is
+    sharded; parameters with no such dimension are replicated
+    (``model_dim`` None — the 2L+1 norm scales for a decoder stack).
+    """
+    out = []
+    for name, shape, axes, _ in param_specs(cfg):
+        bshape, mdim = list(shape), None
+        if degree > 1:
+            for i, ax in enumerate(axes):
+                if ax in MODEL_AXIS_NAMES and shape[i] % degree == 0:
+                    mdim = i
+                    bshape[i] = shape[i] // degree
+                    break
+        out.append({"name": name, "block_shape": bshape, "model_dim": mdim})
+    return out
+
+
+def block_replicated_params(cfg: ModelConfig, degree: int):
+    """Names of model-replicated params (manifest order) whose grads are
+    summed over the model axis in ONE fused all-reduce at schedule end."""
+    return [s["name"] for s in model_block_specs(cfg, degree) if s["model_dim"] is None]
+
+
+def _embed_block_fwd(emb_b, tokens, shard):
+    """Vocab-sharded embedding lookup: exact — each token id falls in exactly
+    one shard's row range, the rest contribute zeros to the AR-sum."""
+    vb = emb_b.shape[0]
+    local = tokens - shard * vb
+    ok = (local >= 0) & (local < vb)
+    x = emb_b[jnp.clip(local, 0, vb - 1)]
+    return jnp.where(ok[..., None], x, 0.0)
+
+
+def _attn_block_fwd(cfg: ModelConfig, x, n1, wq, wk, wv, wo, rp):
+    """Self-attention on a heads block: wq/wk/wv column-parallel, wo
+    row-parallel -> returns the PARTIAL output (pre all-reduce). The heads
+    block count is derived from the relpos table block ([buckets, H/n])."""
+    b, l, d = x.shape
+    hm, hd = rp.shape[1], cfg.head_dim
+    h = rms_norm(x, n1)
+    q = (h @ wq).reshape(b, l, hm, hd).transpose(0, 2, 1, 3)
+    k = (h @ wk).reshape(b, l, hm, hd).transpose(0, 2, 1, 3)
+    v = (h @ wv).reshape(b, l, hm, hd).transpose(0, 2, 1, 3)
+    bias = relpos_bias(rp, l, l, False, cfg)
+    if cfg.use_pallas:
+        o = flash_attention(q, k, v, bias, True, cfg.block_q, cfg.block_k)
+    else:
+        o = ref.attention_ref(q, k, v, bias, causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(b, l, hm * hd)
+    return o @ wo
+
+
+def _mlp_block_fwd(cfg: ModelConfig, x, n2, wi0, wi1, wo2):
+    """Gated MLP on a d_ff block: wi_0/wi_1 column-parallel, wo
+    row-parallel -> PARTIAL output (pre all-reduce)."""
+    b, l, d = x.shape
+    flat = rms_norm(x, n2).reshape(b * l, d)
+    if cfg.use_pallas:
+        y = fused_ffn(flat, wi0, wi1, wo2, cfg.block_m, cfg.block_f)
+    else:
+        y = ref.gated_ffn_ref(flat, wi0, wi1, wo2)
+    return y.reshape(b, l, d)
+
+
+def _partial_loss_terms(z, gmax, targets, shard):
+    """(sum_exp_part, target_logit_part) over one vocab block — the
+    differentiable core of fwd_loss_finalize and its vjp. `gmax` is the
+    global logit max; treating it as a constant is exact (logsumexp shift
+    invariance)."""
+    vb = z.shape[-1]
+    se = jnp.sum(jnp.exp(z - gmax[..., None]), axis=-1)
+    local_t = targets - shard * vb
+    ok = (local_t >= 0) & (local_t < vb)
+    zt = jnp.take_along_axis(z, jnp.clip(local_t, 0, vb - 1)[..., None], axis=-1)
+    tl = jnp.where(ok, zt[..., 0], 0.0)
+    return se, tl
+
+
+def block_segment_fns(cfg: ModelConfig):
+    """The 12 block-step segment functions, name -> fn (tuple outputs).
+
+    All segments are pure functions of (activations, weight blocks, shard
+    coordinate); backward segments rematerialize via jax.vjp of the matching
+    forward closure, so the host only carries segment INPUTS between calls.
+    """
+    sqrt_d = np.sqrt(cfg.d_model)
+    zl = cfg.z_loss
+
+    def fwd_embed(emb_b, tokens, shard):
+        return (_embed_block_fwd(emb_b, tokens, shard),)
+
+    def fwd_attn(x, n1, wq, wk, wv, wo, rp):
+        return (_attn_block_fwd(cfg, x, n1, wq, wk, wv, wo, rp),)
+
+    def fwd_mlp(x, n2, wi0, wi1, wo2):
+        return (_mlp_block_fwd(cfg, x, n2, wi0, wi1, wo2),)
+
+    def fwd_loss_logits(x, fnorm, emb_b):
+        z = ((rms_norm(x, fnorm) / sqrt_d) @ emb_b.T).astype(jnp.float32)
+        return z, jnp.max(z, axis=-1)
+
+    def fwd_loss_finalize(z, gmax, targets, weights, shard):
+        se, tl = _partial_loss_terms(z, gmax, targets, shard)
+        vb = z.shape[-1]
+        claim = jnp.where(
+            jnp.max(z, axis=-1) == gmax,
+            (shard * vb + jnp.argmax(z, axis=-1)).astype(jnp.float32),
+            jnp.float32(BLOCK_CLAIM_NONE),
+        )
+        return se, tl, claim
+
+    def fwd_loss_final(se, tl, claim, gmax, targets, weights):
+        logz = jnp.log(se) + gmax
+        loss_sum = jnp.sum((logz - tl + zl * jnp.square(logz)) * weights)
+        correct = (claim == targets.astype(jnp.float32)).astype(jnp.float32)
+        return loss_sum, jnp.sum(weights), jnp.sum(correct * weights)
+
+    def bwd_loss_final(se, tl, gmax, targets, weights):
+        def f(se_, tl_):
+            logz = jnp.log(se_) + gmax
+            return jnp.sum((logz - tl_ + zl * jnp.square(logz)) * weights)
+
+        _, vjp = jax.vjp(f, se, tl)
+        return vjp(jnp.float32(1.0))
+
+    def bwd_loss_finalize(z, gmax, targets, weights, shard, d_se, d_tl):
+        _, vjp = jax.vjp(lambda z_: _partial_loss_terms(z_, gmax, targets, shard), z)
+        return vjp((d_se, d_tl))
+
+    def bwd_loss_logits(x, fnorm, emb_b, d_z):
+        def f(x_, fn_, em_):
+            return ((rms_norm(x_, fn_) / sqrt_d) @ em_.T).astype(jnp.float32)
+
+        _, vjp = jax.vjp(f, x, fnorm, emb_b)
+        return vjp(d_z)
+
+    def bwd_attn(x, n1, wq, wk, wv, wo, rp, d_out):
+        _, vjp = jax.vjp(
+            lambda *ws: _attn_block_fwd(cfg, *ws), x, n1, wq, wk, wv, wo, rp
+        )
+        return vjp(d_out)
+
+    def bwd_mlp(x, n2, wi0, wi1, wo2, d_out):
+        _, vjp = jax.vjp(lambda *ws: _mlp_block_fwd(cfg, *ws), x, n2, wi0, wi1, wo2)
+        return vjp(d_out)
+
+    def bwd_embed(emb_b, tokens, shard, d_x):
+        _, vjp = jax.vjp(lambda e: _embed_block_fwd(e, tokens, shard), emb_b)
+        return vjp(d_x)
+
+    fns = dict(
+        fwd_embed=fwd_embed,
+        fwd_attn=fwd_attn,
+        fwd_mlp=fwd_mlp,
+        fwd_loss_logits=fwd_loss_logits,
+        fwd_loss_finalize=fwd_loss_finalize,
+        fwd_loss_final=fwd_loss_final,
+        bwd_loss_final=bwd_loss_final,
+        bwd_loss_finalize=bwd_loss_finalize,
+        bwd_loss_logits=bwd_loss_logits,
+        bwd_attn=bwd_attn,
+        bwd_mlp=bwd_mlp,
+        bwd_embed=bwd_embed,
+    )
+    assert list(fns) == BLOCK_SEGMENT_NAMES
+    return fns
+
+
+def block_segment_shapes(cfg: ModelConfig, degree: int):
+    """Input ShapeDtypeStructs per segment at `degree` (export lowering)."""
+    b, l, d = cfg.batch, cfg.seq_len, cfg.d_model
+    vb, jm, fm = cfg.vocab // degree, cfg.joined_kv // degree, cfg.d_ff // degree
+    hm = cfg.num_heads // degree
+    f32 = lambda *s: jax.ShapeDtypeStruct(tuple(s), jnp.float32)
+    i32 = lambda *s: jax.ShapeDtypeStruct(tuple(s), jnp.int32)
+    x, bl = f32(b, l, d), f32(b, l)
+    emb, tok, shard = f32(vb, d), i32(b, l), i32()
+    norm = f32(d)
+    wq, wo, rp = f32(d, jm), f32(jm, d), f32(cfg.relpos_buckets, hm)
+    wi, wo2, z = f32(d, fm), f32(fm, d), f32(b, l, vb)
+    return {
+        "fwd_embed": [emb, tok, shard],
+        "fwd_attn": [x, norm, wq, wq, wq, wo, rp],
+        "fwd_mlp": [x, norm, wi, wi, wo2],
+        "fwd_loss_logits": [x, norm, emb],
+        "fwd_loss_finalize": [z, bl, tok, bl, shard],
+        "fwd_loss_final": [bl, bl, bl, bl, tok, bl],
+        "bwd_loss_final": [bl, bl, bl, tok, bl],
+        "bwd_loss_finalize": [z, bl, tok, bl, shard, bl, bl],
+        "bwd_loss_logits": [x, norm, emb, z],
+        "bwd_attn": [x, norm, wq, wq, wq, wo, rp, x],
+        "bwd_mlp": [x, norm, wi, wi, wo2, x],
+        "bwd_embed": [emb, tok, shard, x],
+    }
+
+
+def block_collective_schedule(cfg: ModelConfig, degree: int):
+    """Ordered model-axis collective schedule: [(point, op, elems)].
+
+    This IS the manifest contract the Rust trainer replays: one entry per
+    host-inserted collective, in execution order. All payloads are f32.
+    """
+    b, l, d = cfg.batch, cfg.seq_len, cfg.d_model
+    bld, bl_ = b * l * d, b * l
+    sched = [("embed_out", "all_reduce_sum", bld)]
+    for i in range(cfg.num_layers):
+        sched.append((f"layer_{i}.attn_out", "all_reduce_sum", bld))
+        sched.append((f"layer_{i}.mlp_out", "all_reduce_sum", bld))
+    sched += [
+        ("logits_max", "all_reduce_max", bl_),
+        ("softmax_sum", "all_reduce_sum", bl_),
+        ("target_logit", "all_reduce_sum", bl_),
+        ("argmax_claim", "all_reduce_min", bl_),
+        ("d_final", "all_reduce_sum", bld),
+    ]
+    for i in reversed(range(cfg.num_layers)):
+        sched.append((f"layer_{i}.d_mlp", "all_reduce_sum", bld))
+        sched.append((f"layer_{i}.d_attn", "all_reduce_sum", bld))
+    sched.append(
+        ("replicated_grads", "all_reduce_sum", (2 * cfg.num_layers + 1) * d)
+    )
+    return sched
+
+
+def block_reference_step(cfg: ModelConfig, degree: int, params, batch):
+    """Host-simulated block train step: the exact segment + collective
+    schedule the Rust trainer runs, with collectives as float32 reductions
+    over the per-shard partials. Returns (loss_sum, weight_sum, correct_sum,
+    grads dict with FULL shapes) for comparison against `train_step_fn`.
+
+    Used by the aot.py export-time assertion and python tests; it is the
+    single source of truth for the host-side schedule (mirrored by
+    `Trainer`'s block executor in rust)."""
+    fns = block_segment_fns(cfg)
+    specs = {s["name"]: (s["block_shape"], s["model_dim"]) for s in
+             model_block_specs(cfg, degree)}
+
+    def blk(name, m):
+        w, (_, mdim) = np.asarray(params[name]), specs[name]
+        if mdim is None:
+            return jnp.asarray(w)
+        size = w.shape[mdim] // degree
+        idx = [slice(None)] * w.ndim
+        idx[mdim] = slice(m * size, (m + 1) * size)
+        return jnp.asarray(w[tuple(idx)])
+
+    def ar(parts, op=np.add):
+        acc = np.asarray(parts[0], np.float32)
+        for p_ in parts[1:]:
+            acc = op(acc, np.asarray(p_, np.float32))
+        return jnp.asarray(acc)
+
+    tokens = jnp.asarray(batch["decoder_input_tokens"])
+    targets = jnp.asarray(batch["decoder_target_tokens"])
+    weights = jnp.asarray(batch["decoder_loss_weights"], jnp.float32)
+    shards = [jnp.int32(m) for m in range(degree)]
+    nl = cfg.num_layers
+    layer = lambda i, s: f"decoder.layers_{i}.{s}"
+
+    # ---- forward ----
+    x = ar([fns["fwd_embed"](blk("token_embed", m), tokens, shards[m])[0]
+            for m in range(degree)])
+    x_attn_in, x_mlp_in = [], []
+    for i in range(nl):
+        x_attn_in.append(x)
+        x = x + ar([
+            fns["fwd_attn"](
+                x, blk(layer(i, "pre_attn_norm.scale"), m),
+                blk(layer(i, "self_attn.wq"), m), blk(layer(i, "self_attn.wk"), m),
+                blk(layer(i, "self_attn.wv"), m), blk(layer(i, "self_attn.wo"), m),
+                blk("decoder.relpos_bias", m),
+            )[0]
+            for m in range(degree)
+        ])
+        x_mlp_in.append(x)
+        x = x + ar([
+            fns["fwd_mlp"](
+                x, blk(layer(i, "pre_mlp_norm.scale"), m),
+                blk(layer(i, "mlp.wi_0"), m), blk(layer(i, "mlp.wi_1"), m),
+                blk(layer(i, "mlp.wo"), m),
+            )[0]
+            for m in range(degree)
+        ])
+    fnorm = blk("decoder.final_norm.scale", 0)
+    heads = [fns["fwd_loss_logits"](x, fnorm, blk("token_embed", m))
+             for m in range(degree)]
+    gmax = ar([h[1] for h in heads], np.maximum)
+    fin = [fns["fwd_loss_finalize"](heads[m][0], gmax, targets, weights, shards[m])
+           for m in range(degree)]
+    se, tl = ar([f[0] for f in fin]), ar([f[1] for f in fin])
+    claim = ar([f[2] for f in fin], np.minimum)
+    loss_sum, weight_sum, correct_sum = fns["fwd_loss_final"](
+        se, tl, claim, gmax, targets, weights
+    )
+
+    # ---- backward ----
+    d_se, d_tl = fns["bwd_loss_final"](se, tl, gmax, targets, weights)
+    grads = {m: {} for m in range(degree)}
+    d_x_parts = []
+    for m in range(degree):
+        (d_z,) = fns["bwd_loss_finalize"](
+            heads[m][0], gmax, targets, weights, shards[m], d_se, d_tl
+        )
+        dx, dfn, demb = fns["bwd_loss_logits"](x, fnorm, blk("token_embed", m), d_z)
+        grads[m]["decoder.final_norm.scale"] = dfn
+        grads[m]["token_embed"] = demb
+        d_x_parts.append(dx)
+    d_x = ar(d_x_parts)
+    for i in reversed(range(nl)):
+        parts = []
+        for m in range(degree):
+            dx, dn2, dwi0, dwi1, dwo2 = fns["bwd_mlp"](
+                x_mlp_in[i], blk(layer(i, "pre_mlp_norm.scale"), m),
+                blk(layer(i, "mlp.wi_0"), m), blk(layer(i, "mlp.wi_1"), m),
+                blk(layer(i, "mlp.wo"), m), d_x,
+            )
+            grads[m][layer(i, "pre_mlp_norm.scale")] = dn2
+            grads[m][layer(i, "mlp.wi_0")] = dwi0
+            grads[m][layer(i, "mlp.wi_1")] = dwi1
+            grads[m][layer(i, "mlp.wo")] = dwo2
+            parts.append(dx)
+        d_x = d_x + ar(parts)
+        parts = []
+        for m in range(degree):
+            dx, dn1, dwq, dwk, dwv, dwo, drp = fns["bwd_attn"](
+                x_attn_in[i], blk(layer(i, "pre_attn_norm.scale"), m),
+                blk(layer(i, "self_attn.wq"), m), blk(layer(i, "self_attn.wk"), m),
+                blk(layer(i, "self_attn.wv"), m), blk(layer(i, "self_attn.wo"), m),
+                blk("decoder.relpos_bias", m), d_x,
+            )
+            grads[m][layer(i, "pre_attn_norm.scale")] = dn1
+            grads[m][layer(i, "self_attn.wq")] = dwq
+            grads[m][layer(i, "self_attn.wk")] = dwk
+            grads[m][layer(i, "self_attn.wv")] = dwv
+            grads[m][layer(i, "self_attn.wo")] = dwo
+            # relpos table is shared across layers: host-sum of per-layer blocks
+            prev = grads[m].get("decoder.relpos_bias")
+            grads[m]["decoder.relpos_bias"] = drp if prev is None else prev + drp
+            parts.append(dx)
+        d_x = d_x + ar(parts)
+    for m in range(degree):
+        (demb,) = fns["bwd_embed"](blk("token_embed", m), tokens, shards[m], d_x)
+        grads[m]["token_embed"] = grads[m]["token_embed"] + demb
+
+    # fused model-axis all-reduce of the replicated (norm-scale) grads
+    for name in block_replicated_params(cfg, degree):
+        g = ar([grads[m][name] for m in range(degree)])
+        for m in range(degree):
+            grads[m][name] = g
+
+    # reassemble full-shape grads (concat model blocks) for comparison
+    full = {}
+    for name, (_, mdim) in specs.items():
+        if mdim is None:
+            full[name] = grads[0][name]
+        else:
+            full[name] = jnp.concatenate(
+                [grads[m][name] for m in range(degree)], axis=mdim
+            )
+    return loss_sum, weight_sum, correct_sum, full
+
+
+# ---------------------------------------------------------------------------
 # Scan variant (Scalable T5, §4): layers stacked, lax.scan over depth.
 # Used by the compile-time benchmark (E12); numerics match the unrolled model.
 # ---------------------------------------------------------------------------

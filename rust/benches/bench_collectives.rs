@@ -6,7 +6,7 @@
 
 use t5x::bench::Bench;
 use t5x::collectives::{
-    all_gather_axis, reduce_scatter_axis, run_ranks, CollectiveGroup, MeshCollectives,
+    all_gather_axis, reduce_scatter_axis, run_ranks, CollectiveGroup, MeshCollectives, ReduceOp,
 };
 use t5x::partitioning::cost::{ring_all_gather_bytes, ring_all_reduce_bytes, ring_reduce_scatter_bytes};
 use t5x::partitioning::{Mesh, MeshAxis};
@@ -63,7 +63,57 @@ fn main() {
                     });
                 },
             );
+            // non-sum reductions (block-execution g-points: logit max,
+            // argmax-claim min) — same ring, different combiner
+            for op in [ReduceOp::Max, ReduceOp::Min] {
+                bench.measure_with_throughput(
+                    &format!("all_reduce_{op:?} n={n} {mib:.0}MiB"),
+                    Some(((len * 4) as f64, "B")),
+                    || {
+                        run_ranks(n, |r| {
+                            std::hint::black_box(group.all_reduce_op(
+                                r,
+                                vec![r as f32; len],
+                                op,
+                            ))
+                        });
+                    },
+                );
+            }
         }
+    }
+
+    // ---- gather vs block model-axis pattern (per §2.2 block execution) ----
+    // Gather mode moves parameter-sized all-gathers over the model axis;
+    // block mode replaces them with activation-sized all-reduces. Measure
+    // both patterns at a representative size ratio (params 16x activations).
+    {
+        let n = 2;
+        let param_len = 1 << 20; // "full parameter" payload per gather
+        let act_len = 1 << 16; // one activation-reduction payload
+        let g = CollectiveGroup::new(n);
+        bench.measure_with_throughput(
+            "model-axis gather pattern n=2 (param all-gather)",
+            Some(((param_len * 4) as f64, "B")),
+            || {
+                run_ranks(n, |r| {
+                    std::hint::black_box(g.all_gather(
+                        r,
+                        vec![1.0; param_len / n],
+                        param_len,
+                    ))
+                });
+            },
+        );
+        bench.measure_with_throughput(
+            "model-axis block pattern n=2 (activation all-reduce)",
+            Some(((act_len * 4) as f64, "B")),
+            || {
+                run_ranks(n, |r| {
+                    std::hint::black_box(g.all_reduce(r, vec![1.0; act_len]))
+                });
+            },
+        );
     }
     // ---- mesh axis subgroups: the trainer's per-step pattern ----
     // Each host reduce-scatters a "gradient" over its data-axis ring and

@@ -52,6 +52,7 @@ fn main() {
                 checkpoint_dir: None,
                 grad_clip_norm: None,
                 weight_decay: None,
+                exec_mode: t5x::partitioning::ExecMode::Gather,
             };
             let trainer = Trainer::new(&arts, &device, cfg).unwrap();
             let opt_floats = trainer.optimizer_state_floats(0);

@@ -1,10 +1,11 @@
 //! E16: end-to-end train-step throughput — tokens/sec across model sizes
-//! and host counts, 1D vs 2D, on the full Rust-coordinated path
-//! (infeed-synthetic -> PJRT fwd/bwd -> ring collectives -> optimizer).
+//! and host counts, 1D vs 2D, gather vs block execution, on the full
+//! Rust-coordinated path (infeed-synthetic -> PJRT fwd/bwd -> ring
+//! collectives -> optimizer).
 
 use t5x::bench::Bench;
 use t5x::optim::{OptimizerKind, Schedule};
-use t5x::partitioning::{Mesh, ParamStrategy};
+use t5x::partitioning::{ExecMode, Mesh, ParamStrategy};
 use t5x::runtime::{Artifacts, DeviceHandle};
 use t5x::trainer::{BatchSource, Trainer, TrainerConfig};
 
@@ -21,12 +22,19 @@ fn main() {
 
     for model in models {
         let m = arts.model(model).unwrap();
-        for (mesh, strategy) in [
-            (Mesh::new(1, 1), ParamStrategy::OneD),
-            (Mesh::new(2, 1), ParamStrategy::OneD),
-            (Mesh::new(2, 1), ParamStrategy::TwoD),
-            (Mesh::new(2, 2), ParamStrategy::TwoD),
+        for (mesh, strategy, exec_mode) in [
+            (Mesh::new(1, 1), ParamStrategy::OneD, ExecMode::Gather),
+            (Mesh::new(2, 1), ParamStrategy::OneD, ExecMode::Gather),
+            (Mesh::new(2, 1), ParamStrategy::TwoD, ExecMode::Gather),
+            (Mesh::new(2, 2), ParamStrategy::TwoD, ExecMode::Gather),
+            // gather-vs-block head-to-head on model-parallel meshes
+            (Mesh::new(1, 2), ParamStrategy::OneD, ExecMode::Gather),
+            (Mesh::new(1, 2), ParamStrategy::OneD, ExecMode::Block),
+            (Mesh::new(2, 2), ParamStrategy::TwoD, ExecMode::Block),
         ] {
+            if exec_mode == ExecMode::Block && !m.supports_block_exec(mesh.model) {
+                continue; // artifacts carry no block contract for this model
+            }
             let cfg = TrainerConfig {
                 model: model.to_string(),
                 mesh,
@@ -38,20 +46,21 @@ fn main() {
                 log_every: 1000,
                 checkpoint_every: None,
                 checkpoint_dir: None,
-        grad_clip_norm: None,
-        weight_decay: None,
+                grad_clip_norm: None,
+                weight_decay: None,
+                exec_mode,
             };
             let trainer = Trainer::new(&arts, &device, cfg).unwrap();
             let tokens = (m.tokens_per_step() * mesh.data * steps as usize) as f64;
             bench.measure_with_throughput(
-                &format!("{model} mesh={mesh} {strategy:?} ({steps} steps)"),
+                &format!("{model} mesh={mesh} {strategy:?} {exec_mode} ({steps} steps)"),
                 Some((tokens, "tok")),
                 || {
                     let s = trainer.train(&BatchSource::Synthetic { seed: 1 }).unwrap();
                     assert!(s.final_loss().is_finite());
                 },
             );
-            // §Perf: phase breakdown of the last run
+            // §Perf: phase breakdown + per-host peak param memory
             let rows = trainer.timing.rows();
             let total: f64 = rows.iter().map(|(_, s)| s).sum();
             let pct: Vec<String> = rows
@@ -59,6 +68,11 @@ fn main() {
                 .map(|(n, s)| format!("{n} {:.0}%", 100.0 * s / total.max(1e-9)))
                 .collect();
             println!("      breakdown: {}", pct.join(", "));
+            println!(
+                "      peak param/grad tensor: {} floats ({} mode)",
+                trainer.peak_param_floats(),
+                trainer.exec_mode
+            );
         }
     }
 
@@ -77,8 +91,9 @@ fn main() {
             log_every: 1000,
             checkpoint_every: None,
             checkpoint_dir: None,
-        grad_clip_norm: None,
-        weight_decay: None,
+            grad_clip_norm: None,
+            weight_decay: None,
+            exec_mode: ExecMode::Gather,
         };
         let trainer = Trainer::new(&arts, &device, cfg).unwrap();
         let tokens = m.tokens_per_step() as f64;

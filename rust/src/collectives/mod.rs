@@ -33,6 +33,28 @@ use std::sync::{Arc, Barrier, Mutex};
 use crate::partitioning::{Mesh, MeshAxis};
 use crate::runtime::HostTensor;
 
+/// Reduction operator for [`CollectiveGroup::all_reduce_op`]. The block
+/// execution schedule (§2.2) needs `Max` (global logit max) and `Min`
+/// (argmax claim) besides `Sum`; both are order-independent, so they are
+/// exact under any ring schedule, while `Sum` is the usual f32 ring sum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Min,
+}
+
+impl ReduceOp {
+    #[inline]
+    fn apply(self, d: &mut f32, x: f32) {
+        match self {
+            ReduceOp::Sum => *d += x,
+            ReduceOp::Max => *d = d.max(x),
+            ReduceOp::Min => *d = d.min(x),
+        }
+    }
+}
+
 /// Per-group transport + accounting shared by all ranks.
 pub struct CollectiveGroup {
     n: usize,
@@ -103,7 +125,13 @@ impl CollectiveGroup {
 
     /// Elementwise-sum all-reduce (ring: reduce-scatter + all-gather).
     /// Every rank receives the full reduced vector.
-    pub fn all_reduce(&self, rank: usize, mut data: Vec<f32>) -> Vec<f32> {
+    pub fn all_reduce(&self, rank: usize, data: Vec<f32>) -> Vec<f32> {
+        self.all_reduce_op(rank, data, ReduceOp::Sum)
+    }
+
+    /// All-reduce under an arbitrary [`ReduceOp`] (same ring schedule as
+    /// [`Self::all_reduce`]; only the elementwise combiner changes).
+    pub fn all_reduce_op(&self, rank: usize, mut data: Vec<f32>, op: ReduceOp) -> Vec<f32> {
         self.ops.fetch_add(1, Ordering::Relaxed);
         if self.n == 1 {
             return data;
@@ -120,7 +148,7 @@ impl CollectiveGroup {
             let incoming = self.recv_prev(rank);
             let (lo, hi) = bounds[recv_c];
             for (d, x) in data[lo..hi].iter_mut().zip(incoming) {
-                *d += x;
+                op.apply(d, x);
             }
         }
         // Phase 2: all-gather of owned chunks.
@@ -297,10 +325,21 @@ pub fn reduce_scatter_axis(
 
 /// Elementwise-sum all-reduce of a whole tensor (replicated blocks).
 pub fn all_reduce_tensor(g: &CollectiveGroup, rank: usize, t: &HostTensor) -> HostTensor {
+    all_reduce_tensor_op(g, rank, t, ReduceOp::Sum)
+}
+
+/// Tensor all-reduce under an arbitrary [`ReduceOp`] — the host-side g-point
+/// primitive of the block execution schedule.
+pub fn all_reduce_tensor_op(
+    g: &CollectiveGroup,
+    rank: usize,
+    t: &HostTensor,
+    op: ReduceOp,
+) -> HostTensor {
     if g.num_ranks() == 1 {
         return t.clone();
     }
-    let out = g.all_reduce(rank, t.as_f32().to_vec());
+    let out = g.all_reduce_op(rank, t.as_f32().to_vec(), op);
     HostTensor::f32(t.shape.clone(), out)
 }
 
@@ -371,11 +410,25 @@ pub struct MeshCollectives {
 
 impl MeshCollectives {
     pub fn new(mesh: Mesh) -> Arc<MeshCollectives> {
+        // Fast-path: a 1-wide axis needs no subgroup machinery — all its
+        // "subgroups" are one shared degenerate ring (no per-row channel or
+        // barrier allocation; every call on it early-returns). `data_group`
+        // / `model_group` index accordingly.
+        let data_groups = if mesh.data == 1 {
+            vec![CollectiveGroup::new(1)]
+        } else {
+            (0..mesh.model).map(|_| CollectiveGroup::new(mesh.data)).collect()
+        };
+        let model_groups = if mesh.model == 1 {
+            vec![CollectiveGroup::new(1)]
+        } else {
+            (0..mesh.data).map(|_| CollectiveGroup::new(mesh.model)).collect()
+        };
         Arc::new(MeshCollectives {
             mesh,
             global: CollectiveGroup::new(mesh.num_hosts()),
-            data_groups: (0..mesh.model).map(|_| CollectiveGroup::new(mesh.data)).collect(),
-            model_groups: (0..mesh.data).map(|_| CollectiveGroup::new(mesh.model)).collect(),
+            data_groups,
+            model_groups,
         })
     }
 
@@ -386,13 +439,13 @@ impl MeshCollectives {
     /// Host's data-axis subgroup and its rank within it (= data coord).
     pub fn data_group(&self, host: usize) -> (&CollectiveGroup, usize) {
         let (d, m) = self.mesh.coords(host);
-        (&self.data_groups[m], d)
+        (&self.data_groups[if self.mesh.data == 1 { 0 } else { m }], d)
     }
 
     /// Host's model-axis subgroup and its rank within it (= model coord).
     pub fn model_group(&self, host: usize) -> (&CollectiveGroup, usize) {
         let (d, m) = self.mesh.coords(host);
-        (&self.model_groups[d], m)
+        (&self.model_groups[if self.mesh.model == 1 { 0 } else { d }], m)
     }
 
     pub fn barrier(&self, _host: usize) {
@@ -447,6 +500,57 @@ mod tests {
                 assert_eq!(out, &expect, "n={n} rank={r}");
             }
         }
+    }
+
+    #[test]
+    fn all_reduce_op_max_min_are_exact() {
+        for n in [2, 3, 4] {
+            for (op, pick) in [
+                (ReduceOp::Max, f32::max as fn(f32, f32) -> f32),
+                (ReduceOp::Min, f32::min as fn(f32, f32) -> f32),
+            ] {
+                let g = CollectiveGroup::new(n);
+                let len = 37; // ragged
+                let outs = run_ranks(n, |r| {
+                    let data: Vec<f32> =
+                        (0..len).map(|i| ((i * 13 + r * 7) % 19) as f32 - 9.0).collect();
+                    g.all_reduce_op(r, data, op)
+                });
+                let expect: Vec<f32> = (0..len)
+                    .map(|i| {
+                        (0..n)
+                            .map(|r| ((i * 13 + r * 7) % 19) as f32 - 9.0)
+                            .fold(if op == ReduceOp::Max { f32::MIN } else { f32::MAX }, pick)
+                    })
+                    .collect();
+                for (r, out) in outs.iter().enumerate() {
+                    assert_eq!(out, &expect, "n={n} rank={r} op={op:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_wide_axis_shares_degenerate_group() {
+        // mesh.model == 1: all hosts' model "subgroups" are one shared
+        // 1-rank ring; calls early-return and move no bytes (fast-path).
+        let mc = MeshCollectives::new(Mesh::new(2, 1));
+        run_ranks(2, |h| {
+            let (mg, mr) = mc.model_group(h);
+            assert_eq!(mg.num_ranks(), 1);
+            assert_eq!(mr, 0);
+            let out = mg.all_reduce(mr, vec![h as f32]);
+            assert_eq!(out[0], h as f32);
+        });
+        assert_eq!(mc.axis_bytes(MeshAxis::Model), 0);
+        // and the symmetric case for a 1-wide data axis
+        let mc = MeshCollectives::new(Mesh::new(1, 2));
+        run_ranks(2, |h| {
+            let (dg, dr) = mc.data_group(h);
+            assert_eq!(dg.num_ranks(), 1);
+            assert_eq!(dr, 0);
+        });
+        assert_eq!(mc.axis_bytes(MeshAxis::Data), 0);
     }
 
     #[test]

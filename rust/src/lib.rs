@@ -30,23 +30,49 @@
 //!   matching optimizer block — ~`total/(data·model)` floats
 //!   ([`trainer::Trainer::resident_param_floats`]); initialization is
 //!   init-then-slice, so numerics match the replicated baseline
-//!   bit-for-bit (2-way ring sums are commutative; see
-//!   `tests/integration_sharded.rs`);
+//!   (see `tests/integration_sharded.rs`);
+//! * the train step itself runs in one of two
+//!   [`partitioning::ExecMode`]s (`t5x train --exec-mode
+//!   auto|gather|block`, gin `trainer.exec_mode`):
+//!   - **Gather** materializes each full parameter on demand via a
+//!     model-axis all-gather, runs the monolithic step HLO, and
+//!     discards the copy — simple, but per-host peak memory is
+//!     O(largest full parameter);
+//!   - **Block** never materializes a full parameter. The exporter
+//!     emits twelve *segment* HLOs per model-axis degree (embed /
+//!     attention / MLP / vocab-parallel loss, forward and backward)
+//!     plus an ordered host-side collective schedule (`block_exec` in
+//!     the manifest), and the trainer feeds resident shards straight
+//!     into the segments, replaying the schedule's model-axis
+//!     all-reduces — the Megatron f/g points, the three loss
+//!     reductions, and one fused all-reduce for replicated-parameter
+//!     grads — through [`collectives::MeshCollectives`] at the exact
+//!     recorded cursor positions. Gradients come out block-shaped, so
+//!     per-host peak step memory drops from O(total params) to
+//!     O(parameter block + activations)
+//!     (`train/peak_param_floats` counts it);
+//!   - **Auto** (the default) picks Block iff the manifest carries a
+//!     `block_exec` contract for the mesh's model degree, so pre-block
+//!     artifact dirs keep training via Gather; forcing `--exec-mode
+//!     block` without the contract fails loudly.
 //! * collectives run in per-axis subgroup rings
 //!   ([`collectives::MeshCollectives`]): model-axis subgroups carry
-//!   parameter all-gathers and the data row's batch broadcast, data-axis
+//!   the schedule's activation/loss all-reduces (Block) or parameter
+//!   all-gathers (Gather) plus the data row's batch broadcast, data-axis
 //!   subgroups carry gradient reduce-scatter / all-reduce — with per-axis
 //!   byte/op accounting surfaced in `TrainSummary`, the trainer's
 //!   `CounterSet` (`train/{data,model}_axis_bytes`), its
 //!   `TimingBreakdown` (`collectives/data` vs `collectives/model`), and
-//!   validated against [`partitioning::cost`]'s per-axis terms by
-//!   `bench_partitioning`;
+//!   validated against [`partitioning::cost`]'s exec-mode-aware per-axis
+//!   terms by `bench_partitioning` and `tests/integration_sharded.rs`;
 //! * `Trainer::params()` gathers on demand — there is no free full copy;
 //! * checkpoints are *distributed*: owning hosts concurrently write
 //!   disjoint `tstore` slices (chunk-aligned row writes or block grids),
 //!   no host-0 gather, and restore range-reads each host's block so a
 //!   `4x2` save resumes on `2x2` or `8x1` (params + elementwise optimizer
-//!   state; factored Adafactor stats are topology-local). Eval, infer and
+//!   state; factored Adafactor stats are topology-local) — and a
+//!   gather-mode save resumes under `--exec-mode block` (both modes
+//!   share the resident block layout). Eval, infer and
 //!   `inspect-ckpt` reassemble full tensors through the same layout-aware
 //!   readers.
 //!

@@ -9,6 +9,7 @@
 //! t5x list-tasks
 //! t5x cache  --task c4_lm --out /tmp/cache --shards 16 [--seed 0]
 //! t5x train  --model t5-micro-dec --steps 100 --mesh 4x2 --strategy 2d \
+//!            [--exec-mode auto|gather|block] \
 //!            [--task c4_span] [--split train] [--use-cached] [--cache DIR] \
 //!            [--config run.gin] [--gin.trainer.lr=1e-3]
 //! t5x eval   --model t5-micro-dec [--task <registry-name>] [--ckpt DIR]
@@ -23,6 +24,13 @@
 //! `prefill`/`decode_step` entrypoints, `rescore` the O(L^2) full
 //! `decode_logits` loop; `auto` (default) uses kv iff the artifact dir
 //! exports it, so stale artifact dirs keep serving.
+//!
+//! `--exec-mode` (gin `trainer.exec_mode`) picks the train-step path on a
+//! model-parallel mesh: `block` runs the per-shard segment programs with
+//! the manifest's collective schedule (no per-step full-parameter
+//! all-gather), `gather` transiently reconstructs full params; `auto`
+//! (default) uses block iff the artifact dir exports a contract at the
+//! mesh's model degree, so pre-block artifact dirs keep training.
 //! t5x inspect-ckpt --dir DIR
 //! t5x cost-table --model t5-100m-dec
 //! ```
@@ -44,7 +52,7 @@ use std::sync::Arc;
 use t5x::gin::Config;
 use t5x::infer::{DecodeMethod, DecodeMode, InferEngine, InferRequest};
 use t5x::optim::{OptimizerKind, Schedule};
-use t5x::partitioning::{cost, Mesh, ParamStrategy};
+use t5x::partitioning::{cost, ExecMode, Mesh, ParamStrategy};
 use t5x::runtime::{Artifacts, DeviceHandle};
 use t5x::seqio::provider::{CachedTask, DatasetProvider, ProviderRegistry};
 use t5x::trainer::recipes;
@@ -114,6 +122,12 @@ fn trainer_config(args: &Args, gin: &Config) -> anyhow::Result<TrainerConfig> {
         None => gin.f64_or("trainer", "lr", 2e-3),
     };
     let warmup = gin.usize_or("trainer", "warmup_steps", 20) as u64;
+    let exec_mode = ExecMode::parse(
+        &args
+            .get("exec-mode")
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| gin.str_or("trainer", "exec_mode", "auto")),
+    )?;
     Ok(TrainerConfig {
         model,
         mesh,
@@ -140,6 +154,7 @@ fn trainer_config(args: &Args, gin: &Config) -> anyhow::Result<TrainerConfig> {
             .get("weight-decay")
             .and_then(|v| v.parse().ok())
             .or_else(|| gin.get("trainer", "weight_decay").and_then(|v| v.as_f64())),
+        exec_mode,
     })
 }
 
@@ -259,6 +274,11 @@ fn train_source(
     trainer: &Trainer,
 ) -> anyhow::Result<BatchSource> {
     recipes::register_defaults();
+    // gin-defined mixture (mixture.name/tasks[/rates]), lazily bound so
+    // the config may name tasks registered at any point above
+    if let Some(name) = recipes::register_gin_mixture(gin)? {
+        println!("gin mixture '{name}' registered");
+    }
     let task_name = args
         .get("task")
         .map(|s| s.to_string())
@@ -381,6 +401,12 @@ fn cmd_train(args: &Args, gin: &Config) -> anyhow::Result<()> {
         .with_terminal()
         .with_jsonl(args.get_or("log", "train_log.jsonl"));
     let mut trainer = Trainer::new(&arts, &device, cfg.clone())?.with_logger(logger);
+    if cfg.mesh.model > 1 {
+        println!(
+            "execution mode: {} (requested '{}')",
+            trainer.exec_mode, cfg.exec_mode
+        );
+    }
     if args.has_flag("resume") {
         if let Some(dir) = &cfg.checkpoint_dir {
             let step = trainer.restore_latest(dir)?;
@@ -424,6 +450,7 @@ fn cmd_eval(args: &Args, gin: &Config) -> anyhow::Result<()> {
     // (get_dataset errors on a feature mismatch instead of silently
     // evaluating on empty encoder rows).
     recipes::register_defaults();
+    recipes::register_gin_mixture(gin)?;
     let task_name = args
         .get("task")
         .map(|s| s.to_string())

@@ -178,6 +178,14 @@ impl CounterSet {
         self.add(name, 1);
     }
 
+    /// Raise `name` to `n` if larger (high-water-mark counters, e.g.
+    /// `train/peak_param_floats`).
+    pub fn set_max(&self, name: &str, n: u64) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(name.to_string()).or_insert(0);
+        *e = (*e).max(n);
+    }
+
     pub fn get(&self, name: &str) -> u64 {
         self.inner.lock().unwrap().get(name).copied().unwrap_or(0)
     }

@@ -4,8 +4,14 @@
 //! mesh. This regenerates the trade-off table the paper describes in prose,
 //! and its communication terms are validated against the *measured* byte
 //! counters of [`crate::collectives`] by `bench_partitioning`.
+//!
+//! The model is execution-mode aware ([`estimate_exec`]): gather mode pays
+//! a full-parameter all-gather per model-sharded param every step, block
+//! mode replaces that with the activation-sized collective schedule of the
+//! block contract — whose per-axis bytes are validated against the
+//! *measured* trainer counters by `integration_sharded`.
 
-use super::{ActivationStrategy, Mesh, ParamStrategy};
+use super::{ActivationStrategy, ExecMode, Mesh, ParamStrategy};
 use crate::runtime::ModelManifest;
 
 /// Memory + communication estimate for one (strategy, mesh) point.
@@ -77,11 +83,49 @@ pub fn ring_reduce_scatter_bytes(n: u64, ranks: u64) -> u64 {
     }
 }
 
-/// Estimate costs for one model/strategy/mesh point.
-///
-/// Model-axis sharding divides parameter storage by `model` (for the
-/// shardable fraction; norm scales and small tables stay replicated — we
-/// approximate with the exact shardable bytes from the manifest specs).
+/// Per-host model-axis bytes/step of the block-execution collective
+/// schedule: every host-inserted ring reduction the runtime replays (the
+/// Megatron f/g activation all-reduces, the four distributed-loss
+/// reductions, and the fused replicated-grad sum), with payloads taken
+/// from the manifest's per-degree contract — the exact elems the trainer
+/// validates its cursor against. `Some(0)` on a 1-wide model axis; `None`
+/// when `mesh.model > 1` but the artifacts carry no contract there.
+pub fn block_schedule_bytes_per_host(m: &ModelManifest, mesh: Mesh) -> Option<u64> {
+    if mesh.model <= 1 {
+        return Some(0);
+    }
+    let spec = m.block_exec(mesh.model)?;
+    Some(
+        spec.collectives
+            .iter()
+            .map(|c| ring_all_reduce_bytes(c.elems as u64 * 4, mesh.model as u64))
+            .sum(),
+    )
+}
+
+/// Analytic counterpart of [`block_schedule_bytes_per_host`], derived from
+/// the model config alone (no contract needed): `4L+2` residual-stream
+/// all-reduces of `B*L*D`, four loss reductions of `B*L`, and one fused
+/// `(2L+1)*D` replicated-grad sum. Must agree with the contract payloads
+/// exactly (asserted in tests) — this is what extends the cost table to
+/// degrees the artifacts were not exported for.
+pub fn block_schedule_bytes_analytic(m: &ModelManifest, mesh: Mesh) -> u64 {
+    if mesh.model <= 1 {
+        return 0;
+    }
+    let b = m.cfg_usize("batch") as u64;
+    let l = m.cfg_usize("seq_len") as u64;
+    let d = m.cfg_usize("d_model") as u64;
+    let layers = m.cfg_usize("num_layers") as u64;
+    let nm = mesh.model as u64;
+    let act = (4 * layers + 2) * ring_all_reduce_bytes(b * l * d * 4, nm);
+    let loss = 4 * ring_all_reduce_bytes(b * l * 4, nm);
+    let repl = ring_all_reduce_bytes((2 * layers + 1) * d * 4, nm);
+    act + loss + repl
+}
+
+/// Estimate costs for one model/strategy/mesh point at the default
+/// (gather) execution mode. See [`estimate_exec`].
 pub fn estimate(
     m: &ModelManifest,
     mesh: Mesh,
@@ -89,6 +133,33 @@ pub fn estimate(
     activations: ActivationStrategy,
     link: LinkModel,
 ) -> CostEstimate {
+    estimate_exec(m, mesh, params, activations, link, ExecMode::Gather)
+}
+
+/// Estimate costs for one model/strategy/mesh point.
+///
+/// Model-axis sharding divides parameter storage by `model` (for the
+/// shardable fraction; norm scales and small tables stay replicated — we
+/// approximate with the exact shardable bytes from the manifest specs).
+///
+/// `exec` selects the model-axis traffic pattern: `Gather` pays a
+/// full-parameter all-gather per model-sharded param every step; `Block`
+/// drops those entirely and pays the activation-sized collective schedule
+/// instead (`Auto` resolves like the trainer: block iff the manifest
+/// carries a contract at `mesh.model`).
+pub fn estimate_exec(
+    m: &ModelManifest,
+    mesh: Mesh,
+    params: ParamStrategy,
+    activations: ActivationStrategy,
+    link: LinkModel,
+    exec: ExecMode,
+) -> CostEstimate {
+    let block = match exec {
+        ExecMode::Gather => false,
+        ExecMode::Block => true,
+        ExecMode::Auto => mesh.model > 1 && m.supports_block_exec(mesh.model),
+    };
     let partitioner = super::Partitioner::new(mesh, params);
     // Exact per-host parameter bytes from the per-param specs.
     let mut param_bytes: u64 = 0;
@@ -153,7 +224,7 @@ pub fn estimate(
             comm_data += ring_all_reduce_bytes(model_shard_bytes, mesh.data as u64); // sync
             n_collectives += 1;
         }
-        if model_sharded {
+        if model_sharded && !block {
             comm_model += ring_all_gather_bytes(full_bytes, mesh.model as u64); // gather
             n_collectives += 1;
         }
@@ -169,12 +240,25 @@ pub fn estimate(
         comm_model += batch_bytes * (mesh.model as u64 - 1) / mesh.model as u64;
         n_collectives += 1;
     }
-    // model-parallel activation all-reduces: 2 per layer (attn + mlp outs),
-    // payload = residual stream per microbatch.
+    // model-parallel activation collectives. Block mode executes the full
+    // ordered schedule (contract payloads when exported, the exact
+    // analytic formula otherwise); gather mode models the hypothetical
+    // GSPMD 2-per-layer all-reduces (the testbed's gather path does not
+    // execute these — bench_partitioning only checks direction there).
     if mesh.model > 1 {
-        comm_model +=
-            2 * layers * ring_all_reduce_bytes(b * l * d * 4 / mesh.data as u64, mesh.model as u64);
-        n_collectives += 2 * layers;
+        if block {
+            comm_model += block_schedule_bytes_per_host(m, mesh)
+                .unwrap_or_else(|| block_schedule_bytes_analytic(m, mesh));
+            n_collectives += m
+                .block_exec(mesh.model)
+                .map(|s| s.collectives.len() as u64)
+                .unwrap_or(4 * layers + 7);
+        } else {
+            comm_model += 2
+                * layers
+                * ring_all_reduce_bytes(b * l * d * 4 / mesh.data as u64, mesh.model as u64);
+            n_collectives += 2 * layers;
+        }
     }
     let comm_total = comm_data + comm_model;
     let comm_seconds = n_collectives as f64 * link.alpha + comm_total as f64 * link.beta;
@@ -284,6 +368,64 @@ mod tests {
             td.comm_bytes_per_host,
             td.comm_bytes_data_axis + td.comm_bytes_model_axis
         );
+    }
+
+    #[test]
+    fn block_mode_drops_param_gather_pays_schedule() {
+        let arts = Artifacts::load_default().unwrap();
+        let m = arts.model("t5-nano-dec").unwrap();
+        let link = LinkModel::default();
+        let mesh = Mesh::new(1, 2);
+        let g = estimate(m, mesh, ParamStrategy::OneD, ActivationStrategy::OneD, link);
+        let b = estimate_exec(
+            m,
+            mesh,
+            ParamStrategy::OneD,
+            ActivationStrategy::OneD,
+            link,
+            ExecMode::Block,
+        );
+        // identical memory; only the model-axis traffic pattern changes
+        assert_eq!(b.param_bytes_per_host, g.param_bytes_per_host);
+        assert_eq!(b.comm_bytes_data_axis, g.comm_bytes_data_axis);
+        // block = batch broadcast + the exact collective schedule, with no
+        // full-parameter all-gather term
+        let batch_bytes: u64 = m
+            .batch_features
+            .iter()
+            .map(|f| f.shape.iter().product::<usize>() as u64 * 4)
+            .sum();
+        let broadcast = batch_bytes * (mesh.model as u64 - 1) / mesh.model as u64;
+        assert_eq!(
+            b.comm_bytes_model_axis,
+            broadcast + block_schedule_bytes_per_host(m, mesh).unwrap()
+        );
+        // Auto resolves to block exactly when the contract exists
+        let a = estimate_exec(
+            m,
+            mesh,
+            ParamStrategy::OneD,
+            ActivationStrategy::OneD,
+            link,
+            ExecMode::Auto,
+        );
+        assert_eq!(a.comm_bytes_model_axis, b.comm_bytes_model_axis);
+    }
+
+    #[test]
+    fn analytic_schedule_matches_exported_contract() {
+        let arts = Artifacts::load_default().unwrap();
+        let m = arts.model("t5-nano-dec").unwrap();
+        for degree in [2usize, 4] {
+            let mesh = Mesh::new(1, degree);
+            assert_eq!(
+                block_schedule_bytes_per_host(m, mesh).unwrap(),
+                block_schedule_bytes_analytic(m, mesh),
+                "degree {degree}"
+            );
+        }
+        assert_eq!(block_schedule_bytes_per_host(m, Mesh::new(4, 1)), Some(0));
+        assert!(block_schedule_bytes_per_host(m, Mesh::new(1, 3)).is_none());
     }
 
     #[test]

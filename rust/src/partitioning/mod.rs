@@ -17,28 +17,43 @@
 //!   per-mesh-axis communication terms validated against the measured
 //!   per-axis byte counters of [`crate::collectives::MeshCollectives`].
 //!
-//! ## Shard-resident execution (the runtime model since the 2-D refactor)
+//! ## Shard-resident storage, block-sharded execution (§2.2)
 //!
 //! Parameter state is *shard-resident end-to-end*: a host materializes
 //! only the `PartitionSpec` block of each parameter (and the matching
 //! optimizer-state block), so per-host resident memory is
-//! ~`total/(data·model)` plus the small replicated residue. Full tensors
-//! exist only transiently:
+//! ~`total/(data·model)` plus the small replicated residue. Execution
+//! comes in two [`ExecMode`]s:
 //!
-//! * at **step start**, each host reconstructs full parameters with
-//!   data-axis then model-axis all-gathers over
-//!   [`crate::collectives::MeshCollectives`] subgroups (the unpartitioned
-//!   HLO substrate needs full inputs — on a real TPU pod XLA would keep
-//!   even execution sharded);
-//! * after the backward pass, each host keeps its model-axis slice of the
-//!   gradient and syncs it over the data axis (reduce-scatter for
-//!   data-sharded blocks, all-reduce for data-replicated ones), updating
-//!   only its resident block — parameters are never re-gathered after the
-//!   update;
-//! * **checkpoints** are written by block owners directly as disjoint
-//!   tstore slices (no host-0 gather), and restore reads each host's
-//!   block range regardless of the saving topology
-//!   (read-with-resharding).
+//! * **Block** (the Megatron f/g decomposition, auto-selected when the
+//!   artifact manifest carries a `block_exec` contract for the mesh's
+//!   model degree): the step feeds each host's resident model-axis block
+//!   straight into per-segment HLOs — column-parallel matmuls run locally,
+//!   and at every row-parallel boundary (attention `wo`, MLP `wo`, the
+//!   vocab-sharded softmax) the trainer replays the manifest's ordered
+//!   collective schedule over the model subgroup (all-reduce sum/max/min).
+//!   No full parameter tensor is ever materialized: per-host peak step
+//!   memory is O(block + activations) and model-axis traffic is
+//!   *activation*-sized reductions, not parameter-sized gathers. Grads
+//!   come out block-shaped, so the slice-then-sync path collapses to the
+//!   data-axis sync alone.
+//! * **Gather** (the fallback for pre-block artifact dirs and the
+//!   reference for agreement tests): at step start each host reconstructs
+//!   full parameters with data-axis then model-axis all-gathers over
+//!   [`crate::collectives::MeshCollectives`] subgroups and runs the
+//!   monolithic `train_step` HLO; after the backward pass it keeps its
+//!   model-axis gradient slice and syncs it over the data axis
+//!   (reduce-scatter for data-sharded blocks, all-reduce for
+//!   data-replicated ones).
+//!
+//! Selection rule: `ExecMode::Auto` resolves to `Block` iff
+//! `mesh.model > 1` and `manifest.supports_block_exec(mesh.model)`;
+//! forcing `Block` on an unsupported mesh/manifest is a hard error naming
+//! `--exec-mode gather`. In both modes **checkpoints** are written by
+//! block owners directly as disjoint tstore slices (no host-0 gather),
+//! and restore reads each host's block range regardless of the saving
+//! topology (read-with-resharding) — a gather-mode checkpoint resumes in
+//! block mode and vice versa.
 
 pub mod cost;
 
@@ -51,6 +66,42 @@ use crate::runtime::HostTensor;
 pub enum MeshAxis {
     Data,
     Model,
+}
+
+/// How a train step executes against sharded parameters (module docs above).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// `Block` iff the manifest supports the mesh's model degree, else
+    /// `Gather`.
+    #[default]
+    Auto,
+    /// Gather full parameters at step start, run the monolithic HLO.
+    Gather,
+    /// Run the block-segment schedule on resident model-axis blocks; hard
+    /// error if the manifest has no contract for the mesh's model degree.
+    Block,
+}
+
+impl ExecMode {
+    /// Parse a `--exec-mode` / gin value.
+    pub fn parse(s: &str) -> anyhow::Result<ExecMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(ExecMode::Auto),
+            "gather" => Ok(ExecMode::Gather),
+            "block" => Ok(ExecMode::Block),
+            other => anyhow::bail!("bad exec mode '{other}' (expected auto|gather|block)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ExecMode::Auto => "auto",
+            ExecMode::Gather => "gather",
+            ExecMode::Block => "block",
+        })
+    }
 }
 
 /// The device mesh: `data * model` simulated hosts. Host h has coordinates

@@ -68,6 +68,64 @@ impl KvCacheSpec {
     }
 }
 
+/// One parameter's model-axis block in the block-execution contract:
+/// shape of the `[.., dim/n, ..]` block a shard holds and feeds straight
+/// into the block train step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockParamSpec {
+    pub name: String,
+    pub block_shape: Vec<usize>,
+    /// The model-sharded dimension; `None` for model-replicated params
+    /// (the norm scales), whose grads ride the fused trailing all-reduce.
+    pub model_dim: Option<usize>,
+}
+
+impl BlockParamSpec {
+    pub fn elements(&self) -> usize {
+        self.block_shape.iter().product()
+    }
+}
+
+/// One host-inserted model-axis collective in the ordered block schedule
+/// (a Megatron f/g point surfaced as a host callback between segments).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CollectiveStep {
+    /// Schedule point label, e.g. "layer_0.attn_out", "logits_max".
+    pub point: String,
+    /// "all_reduce_sum" | "all_reduce_max" | "all_reduce_min".
+    pub op: String,
+    /// f32 payload elements (bytes = elems * 4).
+    pub elems: usize,
+}
+
+/// The per-degree block-execution contract (§2.2): segment HLOs, per-param
+/// block shapes, and the ordered collective schedule the trainer replays
+/// between segment executions.
+#[derive(Debug, Clone)]
+pub struct BlockExecDegree {
+    pub degree: usize,
+    pub params: Vec<BlockParamSpec>,
+    /// Segment name -> HLO path (the 12 block-step segments; per-layer
+    /// segments share one HLO since layer weights are inputs).
+    pub segments: BTreeMap<String, PathBuf>,
+    pub collectives: Vec<CollectiveStep>,
+    /// Model-replicated param names (manifest order) summed in the fused
+    /// `replicated_grads` all-reduce at schedule end.
+    pub replicated_grads: Vec<String>,
+}
+
+impl BlockExecDegree {
+    pub fn param(&self, name: &str) -> Option<&BlockParamSpec> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Model-axis payload bytes of one full step's collective schedule
+    /// (per participating host pair-wise ring; see cost model).
+    pub fn schedule_elems(&self) -> usize {
+        self.collectives.iter().map(|c| c.elems).sum()
+    }
+}
+
 /// Everything the coordinator knows about one exported model.
 #[derive(Debug, Clone)]
 pub struct ModelManifest {
@@ -81,6 +139,9 @@ pub struct ModelManifest {
     /// Older artifact dirs (exported before the incremental-decode
     /// entrypoints) simply lack it and serve via full rescoring.
     pub kv_cache: Option<KvCacheSpec>,
+    /// Block-execution contracts by model-axis degree. Empty for pre-block
+    /// artifact dirs (which keep training via `ExecMode::Gather`).
+    pub block_exec: BTreeMap<usize, BlockExecDegree>,
 }
 
 impl ModelManifest {
@@ -128,6 +189,19 @@ impl ModelManifest {
         self.kv_cache.is_some()
             && self.entrypoints.contains_key("prefill")
             && self.entrypoints.contains_key("decode_step")
+    }
+
+    /// True when this artifact dir carries a block-execution contract for
+    /// the given model-axis degree. Drives `ExecMode::Auto`: supported →
+    /// block execution, stale/absent → gather fallback.
+    pub fn supports_block_exec(&self, degree: usize) -> bool {
+        self.block_exec
+            .get(&degree)
+            .is_some_and(|b| !b.segments.is_empty())
+    }
+
+    pub fn block_exec(&self, degree: usize) -> Option<&BlockExecDegree> {
+        self.block_exec.get(&degree)
     }
 }
 
@@ -297,6 +371,62 @@ fn parse_model(name: &str, j: &Json, dir: &Path) -> anyhow::Result<ModelManifest
             per_layer: strings("per_layer"),
         }
     });
+    let mut block_exec = BTreeMap::new();
+    if let Some(Json::Obj(degrees)) = j.get("block_exec").and_then(|b| b.get("degrees")) {
+        for (deg_str, jd) in degrees {
+            let degree: usize = match deg_str.parse() {
+                Ok(d) => d,
+                Err(_) => continue,
+            };
+            let mut bparams = Vec::new();
+            for p in jd.get("params").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                bparams.push(BlockParamSpec {
+                    name: p.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                    block_shape: p
+                        .get("block_shape")
+                        .and_then(|v| v.as_arr())
+                        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default(),
+                    model_dim: p.get("model_dim").and_then(|v| v.as_usize()),
+                });
+            }
+            let mut segments = BTreeMap::new();
+            if let Some(Json::Obj(segs)) = jd.get("segments") {
+                for (seg_name, seg) in segs {
+                    if let Some(p) = seg.get("hlo").and_then(|v| v.as_str()) {
+                        segments.insert(seg_name.clone(), dir.join(p));
+                    }
+                }
+            }
+            let mut collectives = Vec::new();
+            for c in jd.get("collectives").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                collectives.push(CollectiveStep {
+                    point: c.get("point").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                    op: c.get("op").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                    elems: c.get("elems").and_then(|v| v.as_usize()).unwrap_or(0),
+                });
+            }
+            let replicated_grads = jd
+                .get("replicated_grads")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                        .collect()
+                })
+                .unwrap_or_default();
+            block_exec.insert(
+                degree,
+                BlockExecDegree {
+                    degree,
+                    params: bparams,
+                    segments,
+                    collectives,
+                    replicated_grads,
+                },
+            );
+        }
+    }
     Ok(ModelManifest {
         name: name.to_string(),
         arch,
@@ -305,6 +435,7 @@ fn parse_model(name: &str, j: &Json, dir: &Path) -> anyhow::Result<ModelManifest
         batch_features,
         entrypoints,
         kv_cache,
+        block_exec,
     })
 }
 
@@ -363,6 +494,43 @@ mod tests {
         let ed = a.model("t5-nano-encdec").unwrap();
         assert!(!ed.supports_kv_decode());
         assert!(ed.kv_cache.is_none());
+    }
+
+    #[test]
+    fn block_exec_contract_parsed() {
+        let a = Artifacts::load_default().unwrap();
+        let m = a.model("t5-nano-dec").unwrap();
+        assert!(m.supports_block_exec(2), "re-export artifacts (make artifacts)");
+        assert!(m.supports_block_exec(4));
+        assert!(!m.supports_block_exec(3)); // heads=4 not divisible
+        assert!(!m.supports_block_exec(1)); // degenerate degree never exported
+        let b = m.block_exec(2).unwrap();
+        assert_eq!(b.degree, 2);
+        // block shapes divide the model-sharded dim only
+        let emb = b.param("token_embed").unwrap();
+        assert_eq!(emb.model_dim, Some(0));
+        assert_eq!(emb.block_shape, vec![m.vocab() / 2, 64]);
+        let norm = b.param("decoder.final_norm.scale").unwrap();
+        assert_eq!(norm.model_dim, None);
+        assert_eq!(norm.block_shape, vec![64]);
+        assert!(b.replicated_grads.contains(&"decoder.final_norm.scale".to_string()));
+        // the 12 segments exist on disk
+        assert_eq!(b.segments.len(), 12);
+        for (seg, path) in &b.segments {
+            assert!(path.exists(), "missing block segment HLO {seg}");
+        }
+        // ordered schedule: starts at the embed g-point, ends at the fused
+        // replicated-grad AR, length 4*layers + 7
+        let l = m.cfg_usize("num_layers");
+        assert_eq!(b.collectives.len(), 4 * l + 7);
+        assert_eq!(b.collectives[0].point, "embed_out");
+        assert_eq!(b.collectives.last().unwrap().point, "replicated_grads");
+        assert!(b.collectives.iter().any(|c| c.op == "all_reduce_max"));
+        assert!(b.collectives.iter().any(|c| c.op == "all_reduce_min"));
+        assert!(b.schedule_elems() > 0);
+        // encdec models carry no block contract
+        let ed = a.model("t5-nano-encdec").unwrap();
+        assert!(ed.block_exec.is_empty());
     }
 
     #[test]

@@ -9,6 +9,8 @@ pub mod artifacts;
 pub mod service;
 pub mod tensor;
 
-pub use artifacts::{Artifacts, ModelManifest, ParamSpec};
+pub use artifacts::{
+    Artifacts, BlockExecDegree, BlockParamSpec, CollectiveStep, ModelManifest, ParamSpec,
+};
 pub use service::{DeviceHandle, Executable};
 pub use tensor::{HostTensor, TensorData};

@@ -106,6 +106,19 @@ impl HostTensor {
         self.as_f32().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }
 
+    /// Elementwise sum of two same-shape f32 tensors — the host-side
+    /// residual add / gradient accumulation of the block execution path.
+    pub fn add(&self, other: &HostTensor) -> HostTensor {
+        assert_eq!(self.shape, other.shape, "add shape mismatch");
+        let out = self
+            .as_f32()
+            .iter()
+            .zip(other.as_f32())
+            .map(|(a, b)| a + b)
+            .collect();
+        HostTensor::f32(self.shape.clone(), out)
+    }
+
     // ---- slicing / concatenation (partitioning primitives) --------------
 
     /// Slice `count` elements starting at `start` along `axis`.
@@ -264,6 +277,13 @@ mod tests {
     #[should_panic(expected = "shape/data mismatch")]
     fn shape_mismatch_panics() {
         HostTensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn add_elementwise() {
+        let a = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostTensor::f32(vec![2, 2], vec![0.5, -2.0, 1.0, 0.0]);
+        assert_eq!(a.add(&b).as_f32(), &[1.5, 0.0, 4.0, 4.0]);
     }
 
     #[test]

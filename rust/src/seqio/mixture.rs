@@ -1,8 +1,15 @@
 //! Mixtures (paper §3.1): combine multiple Tasks with user-provided mixing
 //! rates for multi-task training. Sampling is deterministic given a seed;
 //! the empirical rate converges to the requested rate (tested, E10).
+//!
+//! Members bind either eagerly ([`Mixture::new`] / [`Mixture::from_names`])
+//! or lazily by *name* ([`Mixture::lazy`]): a lazy mixture records member
+//! names at construction and resolves them from the unified registry at
+//! first use — so a gin file can define a mixture before the tasks it
+//! names are registered, exactly like seqio's `MixtureRegistry.add`.
 
 use std::sync::Arc;
+use std::sync::OnceLock;
 
 use super::dataset::{
     check_tag, field, field_arr, rng_from_json, rng_to_json, Dataset, PipelineOp,
@@ -16,18 +23,21 @@ use crate::util::rng::Pcg64;
 /// A weighted collection of tasks.
 pub struct Mixture {
     pub name: String,
-    pub tasks: Vec<(Arc<Task>, f64)>,
+    /// Lazily-bound member names + rates; `None` once constructed eagerly.
+    pending: Option<Vec<(String, f64)>>,
+    /// Resolved member tasks (set at construction for eager mixtures, at
+    /// first [`Mixture::members`] call for lazy ones).
+    resolved: OnceLock<Vec<(Arc<Task>, f64)>>,
 }
 
 impl Mixture {
-    /// Construct a mixture. Errors (instead of panicking) on an empty
-    /// task list or non-positive rates — construction problems surface as
-    /// `anyhow::Result` like every other registry operation.
-    pub fn new(name: &str, tasks: Vec<(Arc<Task>, f64)>) -> anyhow::Result<Mixture> {
+    /// Validate a member set: non-empty, positive finite rates, and a
+    /// shared output-feature schema. Schema fingerprint: feature name +
+    /// vocab size + required flag — mixing tasks that tokenize into
+    /// different id spaces corrupts training data silently, so it must
+    /// fail before any example is drawn.
+    fn validate(name: &str, tasks: &[(Arc<Task>, f64)]) -> anyhow::Result<()> {
         anyhow::ensure!(!tasks.is_empty(), "mixture '{name}' needs at least one task");
-        // schema fingerprint: feature name + vocab size + required flag —
-        // mixing tasks that tokenize into different id spaces corrupts
-        // training data silently, so it must fail at construction.
         fn feature_names(t: &Task) -> Vec<String> {
             let mut v: Vec<String> = t
                 .output_features
@@ -38,7 +48,7 @@ impl Mixture {
             v
         }
         let schema = feature_names(&tasks[0].0);
-        for (task, rate) in &tasks {
+        for (task, rate) in tasks {
             anyhow::ensure!(
                 rate.is_finite() && *rate > 0.0,
                 "mixture '{name}': task '{}' has non-positive rate {rate}",
@@ -58,11 +68,21 @@ impl Mixture {
                 schema.join(", ")
             );
         }
-        Ok(Self { name: name.to_string(), tasks })
+        Ok(())
     }
 
-    /// Construct a mixture from *registered task names* (the gin/CLI
-    /// path: `MixtureRegistry.add(name, [(task, rate), ...])` in seqio).
+    /// Construct a mixture. Errors (instead of panicking) on an empty
+    /// task list or non-positive rates — construction problems surface as
+    /// `anyhow::Result` like every other registry operation.
+    pub fn new(name: &str, tasks: Vec<(Arc<Task>, f64)>) -> anyhow::Result<Mixture> {
+        Self::validate(name, &tasks)?;
+        let resolved = OnceLock::new();
+        let _ = resolved.set(tasks);
+        Ok(Self { name: name.to_string(), pending: None, resolved })
+    }
+
+    /// Construct a mixture from *registered task names*, resolved eagerly
+    /// (every member must already be in the registry).
     pub fn from_names(name: &str, members: &[(&str, f64)]) -> anyhow::Result<Mixture> {
         let mut tasks = Vec::with_capacity(members.len());
         for (task_name, rate) in members {
@@ -72,6 +92,46 @@ impl Mixture {
             tasks.push((t, *rate));
         }
         Mixture::new(name, tasks)
+    }
+
+    /// Construct a mixture whose member *names* bind lazily: resolution
+    /// against the unified registry happens at the first
+    /// [`Mixture::members`] / `dataset()` call, so the mixture can be
+    /// defined (and registered) before its member tasks are — the gin
+    /// path, where binding order is the config file's business, not the
+    /// registration code's (seqio `MixtureRegistry.add` semantics).
+    pub fn lazy(name: &str, members: &[(&str, f64)]) -> Mixture {
+        Self {
+            name: name.to_string(),
+            pending: Some(members.iter().map(|(n, r)| (n.to_string(), *r)).collect()),
+            resolved: OnceLock::new(),
+        }
+    }
+
+    /// The member tasks + rates, resolving lazily-bound names on first
+    /// call (and validating the member set exactly like eager
+    /// construction). Errors if a named member is still unregistered.
+    pub fn members(&self) -> anyhow::Result<&[(Arc<Task>, f64)]> {
+        if let Some(t) = self.resolved.get() {
+            return Ok(t);
+        }
+        let names =
+            self.pending.as_ref().expect("eagerly-constructed mixtures are always resolved");
+        let mut tasks = Vec::with_capacity(names.len());
+        for (task_name, rate) in names {
+            let t = super::task::TaskRegistry::get(task_name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "mixture '{}': lazy member '{task_name}' is not a registered task \
+                     (lazy members resolve at first use — register the task first)",
+                    self.name
+                )
+            })?;
+            tasks.push((t, *rate));
+        }
+        Self::validate(&self.name, &tasks)?;
+        // a concurrent resolver may have won the race; both computed the
+        // same member set from the same registry
+        Ok(self.resolved.get_or_init(|| tasks))
     }
 
     /// Register into the unified provider namespace (shared with tasks);
@@ -85,15 +145,16 @@ impl Mixture {
     }
 
     pub fn rates(&self) -> Vec<f64> {
-        let total: f64 = self.tasks.iter().map(|(_, r)| r).sum();
-        self.tasks.iter().map(|(_, r)| r / total).collect()
+        let tasks = self.members().expect("mixture members must resolve before rates()");
+        let total: f64 = tasks.iter().map(|(_, r)| r).sum();
+        tasks.iter().map(|(_, r)| r / total).collect()
     }
 
     /// Sample-based interleave of the member task "train" streams; see
     /// [`Mixture::dataset_split`].
     pub fn dataset(&self, seed: u64, shard_id: usize, num_shards: usize) -> Dataset {
         self.dataset_split("train", seed, shard_id, num_shards)
-            .expect("the train split always exists")
+            .expect("the train split always exists (lazy members must be registered)")
     }
 
     /// Sample-based interleave of the member task datasets for one split.
@@ -113,7 +174,7 @@ impl Mixture {
     ) -> anyhow::Result<Dataset> {
         let mut streams: Vec<(String, Box<dyn PipelineOp>)> = Vec::new();
         let mut weights = Vec::new();
-        for (task, rate) in &self.tasks {
+        for (task, rate) in self.members()? {
             let ds = task.dataset_split(split, seed, shard_id, num_shards)?;
             streams.push((task.name.clone(), ds.into_op()));
             weights.push(*rate);
@@ -353,6 +414,53 @@ mod tests {
             vec![(const_task("schema_a", 1, 3), 1.0), (other, 1.0)],
         );
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn lazy_mixture_resolves_members_at_first_use() {
+        use crate::seqio::task::TaskRegistry;
+        // the mixture is defined before its member tasks exist anywhere
+        let m = Mixture::lazy("m_lazy", &[("lazy_a_mem", 1.0), ("lazy_b_mem", 3.0)]);
+        let err = m.members().unwrap_err().to_string();
+        assert!(err.contains("lazy_a_mem"), "{err}");
+        // a failed resolution must not poison the mixture: register the
+        // members, then the same instance resolves and serves data
+        TaskRegistry::add(const_task("lazy_a_mem", 1, 40)).unwrap();
+        TaskRegistry::add(const_task("lazy_b_mem", 2, 40)).unwrap();
+        assert_eq!(m.members().unwrap().len(), 2);
+        let r = m.rates();
+        assert!((r[0] - 0.25).abs() < 1e-12);
+        let vals: Vec<i32> = m
+            .dataset(4, 0, 1)
+            .take(20)
+            .collect_vec()
+            .iter()
+            .map(|e| e["targets"].as_ints().unwrap()[0])
+            .collect();
+        assert_eq!(vals.len(), 20);
+        assert!(vals.contains(&1) && vals.contains(&2));
+        TaskRegistry::remove("lazy_a_mem");
+        TaskRegistry::remove("lazy_b_mem");
+    }
+
+    #[test]
+    fn lazy_mixture_validates_schema_at_resolution() {
+        use crate::seqio::task::TaskRegistry;
+        let vocab: Arc<dyn Vocabulary> = Arc::new(ByteVocabulary::new(4));
+        let other = Task::builder("lazy_schema_other")
+            .source(Arc::new(FunctionSource::new(|_, _| Dataset::from_vec(vec![]))))
+            .output_feature("inputs", vocab, true)
+            .build();
+        TaskRegistry::add(const_task("lazy_schema_a", 1, 3)).unwrap();
+        TaskRegistry::add(other).unwrap();
+        let m = Mixture::lazy(
+            "m_lazy_schema",
+            &[("lazy_schema_a", 1.0), ("lazy_schema_other", 1.0)],
+        );
+        let err = m.members().unwrap_err().to_string();
+        assert!(err.contains("output-feature schema"), "{err}");
+        TaskRegistry::remove("lazy_schema_a");
+        TaskRegistry::remove("lazy_schema_other");
     }
 
     #[test]

@@ -162,22 +162,25 @@ impl DatasetProvider for Mixture {
     }
 
     /// Splits every member task can serve (order of the first task).
+    /// Lazily-bound members resolve here; an unresolvable member is a
+    /// configuration error surfaced before any data is drawn.
     fn splits(&self) -> Vec<String> {
-        let mut out = DatasetProvider::splits(self.tasks[0].0.as_ref());
-        out.retain(|s| {
-            self.tasks.iter().all(|(t, _)| t.source_for(s).is_ok())
-        });
+        let tasks = self.members().expect("mixture members must be registered before use");
+        let mut out = DatasetProvider::splits(tasks[0].0.as_ref());
+        out.retain(|s| tasks.iter().all(|(t, _)| t.source_for(s).is_ok()));
         out
     }
 
     /// seqio requires member tasks to share an output-feature schema; the
     /// first task's declaration speaks for the mixture.
     fn output_features(&self) -> Vec<OutputFeature> {
-        self.tasks[0].0.output_features.clone()
+        let tasks = self.members().expect("mixture members must be registered before use");
+        tasks[0].0.output_features.clone()
     }
 
     fn metrics(&self) -> Vec<Metric> {
-        self.tasks[0].0.metrics.clone()
+        let tasks = self.members().expect("mixture members must be registered before use");
+        tasks[0].0.metrics.clone()
     }
 
     fn dataset(&self, split: &str, shard: ShardInfo, seed: u64) -> anyhow::Result<Dataset> {

@@ -8,7 +8,21 @@
 //! Every host keeps exactly one [`PartitionSpec`] block of each parameter
 //! (and the matching optimizer-state block) resident — per-host memory is
 //! ~`total/(data·model)` plus the replicated residue, for any mesh shape.
-//! One step, for host `(d, m)`:
+//! The step itself runs in one of two [`ExecMode`]s:
+//!
+//! **`ExecMode::Block`** (auto-selected when `mesh.model > 1` and the
+//! artifacts carry a `block_exec` contract for that degree): the step feeds
+//! resident model-axis blocks *straight into* per-segment HLOs and replays
+//! the manifest's ordered collective schedule between them — an all-reduce
+//! after each row-parallel matmul (the Megatron g-points) plus the four
+//! vocab-parallel loss reductions. No full parameter is ever materialized:
+//! per-host peak step memory drops from O(total params) to
+//! O(block + activations), and model-axis traffic becomes activation-sized
+//! reductions instead of parameter gathers. Gradients come out
+//! block-shaped, so the slice-then-sync path collapses to sync-only.
+//!
+//! **`ExecMode::Gather`** (fallback + reference): one step, for host
+//! `(d, m)`:
 //!
 //! 1. **infeed** — data-axis replica groups share batches: the row leader
 //!    (`m == 0`) pulls the row's batch and broadcasts it over the
@@ -16,9 +30,8 @@
 //!    by the data coordinate).
 //! 2. **gather** — full parameters are reconstructed transiently with a
 //!    data-axis then model-axis all-gather per sharded dimension (the
-//!    unpartitioned HLO substrate needs full inputs; real GSPMD would keep
-//!    execution sharded too, so resident-state accounting deliberately
-//!    excludes this buffer).
+//!    unpartitioned HLO substrate needs full inputs; with `mesh.model == 1`
+//!    the model-axis machinery is skipped entirely).
 //! 3. **execute** — forward/backward on the device.
 //! 4. **sync** — each host slices the gradient to its model-axis block
 //!    (free: the values are already local) and syncs over the data-axis
@@ -26,6 +39,13 @@
 //!    data-replicated ones. Parameters are *not* re-gathered after the
 //!    update — they live sharded until the next step's gather.
 //! 5. **update** — the optimizer updates only the resident block.
+//!
+//! Both modes produce the same resident-block gradients (Block is
+//! bit-compatible on the loss at 2-rank rings and agrees to f32 reduction
+//! order otherwise), so checkpoints written in one mode resume in the
+//! other. `train/peak_param_floats` records the largest parameter or
+//! gradient tensor a host materialized during the step — the measured
+//! counterpart of the O(total) → O(block) claim.
 //!
 //! Strategy semantics: [`ParamStrategy::OneD`] shards parameters over the
 //! model axis only (replicated over data — Megatron-style); with
@@ -51,6 +71,8 @@ pub mod eval;
 pub mod infeed;
 pub mod recipes;
 
+use std::cell::Cell;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -58,15 +80,17 @@ use std::time::Instant;
 
 use crate::checkpoint::{block_coords, CheckpointManager};
 use crate::collectives::{
-    all_gather_axis, all_reduce_tensor, broadcast_batch, reduce_scatter_axis, run_ranks,
-    MeshCollectives,
+    all_gather_axis, all_reduce_tensor, all_reduce_tensor_op, broadcast_batch,
+    reduce_scatter_axis, run_ranks, MeshCollectives, ReduceOp,
 };
 use crate::metrics::{CounterSet, MetricsLogger};
 use crate::model::Params;
 use crate::optim::{Optimizer, OptimizerKind, Schedule};
-use crate::partitioning::{Mesh, MeshAxis, ParamStrategy, PartitionSpec, Partitioner, ShardPlan};
+use crate::partitioning::{
+    ExecMode, Mesh, MeshAxis, ParamStrategy, PartitionSpec, Partitioner, ShardPlan,
+};
 use crate::runtime::artifacts::ModelManifest;
-use crate::runtime::{Artifacts, DeviceHandle, Executable, HostTensor};
+use crate::runtime::{Artifacts, BlockExecDegree, DeviceHandle, Executable, HostTensor};
 use crate::seqio::dataset::PipelineState;
 
 /// Flat parameter layout: manifest order, contiguous f32. Retained as a
@@ -164,6 +188,11 @@ pub struct TrainerConfig {
     pub grad_clip_norm: Option<f64>,
     /// Decoupled (AdamW-style) weight decay per step (None = off).
     pub weight_decay: Option<f64>,
+    /// How the step executes (see [`ExecMode`] and the module docs). The
+    /// library default is `Gather` (the reference path); the CLI defaults
+    /// to `Auto`, which upgrades to `Block` whenever the artifacts support
+    /// the mesh's model degree.
+    pub exec_mode: ExecMode,
 }
 
 impl TrainerConfig {
@@ -181,6 +210,7 @@ impl TrainerConfig {
             checkpoint_dir: None,
             grad_clip_norm: None,
             weight_decay: None,
+            exec_mode: ExecMode::Gather,
         }
     }
 
@@ -291,6 +321,41 @@ fn clip_scale_from_norm(clip: Option<f64>, norm: f64) -> f32 {
     }
 }
 
+/// The compiled step: one monolithic HLO (Gather) or the block-segment
+/// programs plus the manifest contract they replay (Block).
+enum StepProgram {
+    Gather(Executable),
+    Block(BlockProgram),
+}
+
+/// Block-execution state resolved at [`Trainer::new`]: the per-degree
+/// contract from the manifest, one compiled executable per segment, and a
+/// name → plan-entry index for O(1) block lookups in the hot loop.
+struct BlockProgram {
+    spec: BlockExecDegree,
+    segments: BTreeMap<String, Executable>,
+    param_index: BTreeMap<String, usize>,
+}
+
+impl BlockProgram {
+    fn index(&self, name: &str) -> anyhow::Result<usize> {
+        self.param_index
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("block step references unknown param '{name}'"))
+    }
+}
+
+/// Map a manifest collective-op string to the ring reduction it names.
+fn parse_reduce_op(op: &str) -> anyhow::Result<ReduceOp> {
+    match op {
+        "all_reduce_sum" => Ok(ReduceOp::Sum),
+        "all_reduce_max" => Ok(ReduceOp::Max),
+        "all_reduce_min" => Ok(ReduceOp::Min),
+        other => anyhow::bail!("unknown block collective op '{other}'"),
+    }
+}
+
 pub struct Trainer {
     pub manifest: ModelManifest,
     pub layout: FlatLayout,
@@ -298,8 +363,13 @@ pub struct Trainer {
     /// The executed sharding: per-parameter specs + block shapes.
     pub plan: ShardPlan,
     pub partitioner: Partitioner,
-    exe: Executable,
+    /// The resolved execution mode (`Auto` never survives construction).
+    pub exec_mode: ExecMode,
+    program: StepProgram,
     colls: Arc<MeshCollectives>,
+    /// Largest parameter/gradient tensor (elements) any host materialized
+    /// inside a train step — the measured O(total) vs O(block) claim.
+    peak_param_floats: AtomicU64,
     hosts: Vec<Mutex<HostState>>,
     pub start_step: u64,
     /// Per-row data pipeline states recovered by [`Trainer::restore_latest`]
@@ -324,10 +394,71 @@ impl Trainer {
     ) -> anyhow::Result<Trainer> {
         let manifest = arts.model(&config.model)?.clone();
         let layout = FlatLayout::from_manifest(&manifest);
-        let (exe, _) = device.compile(&manifest.entrypoint("train_step")?.hlo)?;
         let partitioner = Partitioner::new(config.mesh, config.strategy);
         let plan = ShardPlan::new(&partitioner, &manifest.params);
         let colls = MeshCollectives::new(config.mesh);
+
+        // ---- resolve the execution mode against the artifact contract ----
+        let degree = config.mesh.model;
+        let exec_mode = match config.exec_mode {
+            ExecMode::Gather => ExecMode::Gather,
+            ExecMode::Auto => {
+                if degree > 1 && manifest.supports_block_exec(degree) {
+                    ExecMode::Block
+                } else {
+                    ExecMode::Gather
+                }
+            }
+            ExecMode::Block => {
+                anyhow::ensure!(
+                    manifest.supports_block_exec(degree),
+                    "exec mode 'block' was forced, but the artifacts carry no block_exec \
+                     contract for model '{}' at model-axis degree {degree}; re-export \
+                     artifacts (make artifacts) or run with --exec-mode gather",
+                    config.model
+                );
+                ExecMode::Block
+            }
+        };
+        let program = match exec_mode {
+            ExecMode::Block => {
+                let spec = manifest
+                    .block_exec(degree)
+                    .expect("supports_block_exec checked above")
+                    .clone();
+                let mut segments = BTreeMap::new();
+                for (seg, hlo) in &spec.segments {
+                    let (exe, _) = device.compile(hlo)?;
+                    segments.insert(seg.clone(), exe);
+                }
+                let mut param_index = BTreeMap::new();
+                for (i, e) in plan.entries.iter().enumerate() {
+                    param_index.insert(e.name.clone(), i);
+                    // cross-validate: the manifest's block shape must equal
+                    // the plan's model-axis block (the data-gathered shard)
+                    let b = spec.param(&e.name).ok_or_else(|| {
+                        anyhow::anyhow!("block_exec contract misses param '{}'", e.name)
+                    })?;
+                    let mut expect = e.shape.clone();
+                    if let Some((dim, n_m)) = e.spec.dim_for(MeshAxis::Model) {
+                        expect[dim] /= n_m;
+                    }
+                    anyhow::ensure!(
+                        b.block_shape == expect,
+                        "block_exec contract for '{}' declares block {:?}, \
+                         but the partitioner produces {:?}",
+                        e.name,
+                        b.block_shape,
+                        expect
+                    );
+                }
+                StepProgram::Block(BlockProgram { spec, segments, param_index })
+            }
+            _ => {
+                let (exe, _) = device.compile(&manifest.entrypoint("train_step")?.hlo)?;
+                StepProgram::Gather(exe)
+            }
+        };
 
         // Init-then-slice: generate the full set once with the exact
         // replicated-baseline RNG stream, keep only the per-host blocks
@@ -347,8 +478,10 @@ impl Trainer {
             config,
             plan,
             partitioner,
-            exe,
+            exec_mode,
+            program,
             colls,
+            peak_param_floats: AtomicU64::new(0),
             hosts,
             start_step: 0,
             restored_pipeline: None,
@@ -356,6 +489,18 @@ impl Trainer {
             timing: TimingBreakdown::default(),
             counters: CounterSet::new(),
         })
+    }
+
+    /// Largest parameter/gradient tensor (elements) any host materialized
+    /// during training so far. In `Gather` mode this is the largest *full*
+    /// parameter; in `Block` mode it stays at the largest model-axis block
+    /// — the per-host peak-memory headline of block execution.
+    pub fn peak_param_floats(&self) -> usize {
+        self.peak_param_floats.load(Ordering::Relaxed) as usize
+    }
+
+    fn note_param_peak(&self, elements: usize) {
+        self.peak_param_floats.fetch_max(elements as u64, Ordering::Relaxed);
     }
 
     pub fn with_logger(mut self, logger: MetricsLogger) -> Self {
@@ -465,6 +610,8 @@ impl Trainer {
         self.counters.add("train/model_axis_bytes", model_axis_bytes);
         self.counters.add("train/data_axis_ops", self.colls.axis_ops(MeshAxis::Data));
         self.counters.add("train/model_axis_ops", self.colls.axis_ops(MeshAxis::Model));
+        self.counters
+            .set_max("train/peak_param_floats", self.peak_param_floats.load(Ordering::Relaxed));
         self.counters.log_to(&self.logger, final_step);
         self.logger.flush();
         Ok(TrainSummary {
@@ -529,50 +676,28 @@ impl Trainer {
                 break;
             };
 
-            // ---- gather full params (transient) + execute ----
+            // ---- step program: forward/backward → loss scalars + grads
+            // shaped as the host's model-axis block ----
             let shards: Vec<HostTensor> = {
                 let host = self.hosts[rank].lock().unwrap();
                 host.shards.clone() // O(1) Arc bumps
             };
-            let mut inputs = Vec::with_capacity(self.plan.entries.len() + batch.len());
-            for (e, shard) in self.plan.entries.iter().zip(&shards) {
-                let mut t = shard.clone();
-                if let Some((dim, _)) = e.spec.dim_for(MeshAxis::Data) {
-                    let t0 = Instant::now();
-                    t = all_gather_axis(dg, dr, &t, dim);
-                    self.timing.collectives_data.add_since(t0);
-                }
-                if let Some((dim, _)) = e.spec.dim_for(MeshAxis::Model) {
-                    let t0 = Instant::now();
-                    t = all_gather_axis(mg, mr, &t, dim);
-                    self.timing.collectives_model.add_since(t0);
-                }
-                inputs.push(t);
-            }
-            inputs.extend(batch);
-            let t_exec = Instant::now();
-            let outs = self.exe.run(inputs)?;
-            self.timing.execute.add_since(t_exec);
-            let loss_sum = outs[0].first_f32();
-            let weight_sum = outs[1].first_f32();
-            let correct_sum = outs[2].first_f32();
+            let (loss_sum, weight_sum, correct_sum, block_grads) = match &self.program {
+                StepProgram::Gather(exe) => self.gather_step(exe, rank, &shards, batch)?,
+                StepProgram::Block(bp) => self.block_step(bp, rank, &shards, batch)?,
+            };
             anyhow::ensure!(loss_sum.is_finite(), "non-finite loss at step {step}");
 
-            // ---- gradient sync: model-axis slice is local, data axis
-            // sums across replica rows ----
+            // ---- gradient sync over the data-axis subgroup (the
+            // model-axis part already happened inside the step program) ----
             let t_sc = Instant::now();
             let scalars = dg.all_reduce(dr, vec![loss_sum, weight_sum, correct_sum]);
             self.timing.collectives_data.add_since(t_sc);
             let w_total = scalars[1].max(1e-9);
             let mut grad_shards: Vec<HostTensor> = Vec::with_capacity(self.plan.entries.len());
-            for (i, e) in self.plan.entries.iter().enumerate() {
-                let mut g = outs[3 + i].clone();
-                if let Some((dim, n_m)) = e.spec.dim_for(MeshAxis::Model) {
-                    let size = e.shape[dim] / n_m;
-                    g = g.slice_axis(dim, m_coord * size, size);
-                }
+            for (e, g) in self.plan.entries.iter().zip(block_grads) {
                 let t0 = Instant::now();
-                g = match e.spec.dim_for(MeshAxis::Data) {
+                let g = match e.spec.dim_for(MeshAxis::Data) {
                     Some((dim, _)) => reduce_scatter_axis(dg, dr, &g, dim),
                     None => all_reduce_tensor(dg, dr, &g),
                 };
@@ -665,6 +790,323 @@ impl Trainer {
             }
         }
         Ok(())
+    }
+
+    /// `ExecMode::Gather` step: transiently reconstruct full parameters
+    /// (data-axis then model-axis all-gather), run the monolithic
+    /// `train_step` HLO, slice each gradient back to this host's
+    /// model-axis block. With `mesh.model == 1` the model-axis machinery
+    /// is skipped entirely (no degenerate 1-rank calls, no timing probes).
+    fn gather_step(
+        &self,
+        exe: &Executable,
+        rank: usize,
+        shards: &[HostTensor],
+        batch: Vec<HostTensor>,
+    ) -> anyhow::Result<(f32, f32, f32, Vec<HostTensor>)> {
+        let mesh = self.config.mesh;
+        let (_, m_coord) = mesh.coords(rank);
+        let (dg, dr) = self.colls.data_group(rank);
+        let (mg, mr) = self.colls.model_group(rank);
+        let mut inputs = Vec::with_capacity(self.plan.entries.len() + batch.len());
+        for (e, shard) in self.plan.entries.iter().zip(shards) {
+            let mut t = shard.clone();
+            if let Some((dim, _)) = e.spec.dim_for(MeshAxis::Data) {
+                let t0 = Instant::now();
+                t = all_gather_axis(dg, dr, &t, dim);
+                self.timing.collectives_data.add_since(t0);
+            }
+            if mesh.model > 1 {
+                if let Some((dim, _)) = e.spec.dim_for(MeshAxis::Model) {
+                    let t0 = Instant::now();
+                    t = all_gather_axis(mg, mr, &t, dim);
+                    self.timing.collectives_model.add_since(t0);
+                }
+            }
+            self.note_param_peak(t.elements());
+            inputs.push(t);
+        }
+        inputs.extend(batch);
+        let t_exec = Instant::now();
+        let outs = exe.run(inputs)?;
+        self.timing.execute.add_since(t_exec);
+        let (loss_sum, weight_sum, correct_sum) =
+            (outs[0].first_f32(), outs[1].first_f32(), outs[2].first_f32());
+        let mut grads = Vec::with_capacity(self.plan.entries.len());
+        for (i, e) in self.plan.entries.iter().enumerate() {
+            let mut g = outs[3 + i].clone();
+            self.note_param_peak(g.elements());
+            if mesh.model > 1 {
+                if let Some((dim, n_m)) = e.spec.dim_for(MeshAxis::Model) {
+                    let size = e.shape[dim] / n_m;
+                    g = g.slice_axis(dim, m_coord * size, size);
+                }
+            }
+            grads.push(g);
+        }
+        Ok((loss_sum, weight_sum, correct_sum, grads))
+    }
+
+    /// `ExecMode::Block` step: run the 12 block segments on resident
+    /// model-axis blocks, replaying the manifest's ordered collective
+    /// schedule at every Megatron f/g point. Mirrors
+    /// `python/compile/model.py::block_reference_step` exactly — that
+    /// simulation is the contract's source of truth, asserted against the
+    /// monolithic step at export time. No full parameter (or full-vocab
+    /// logit gather) is ever materialized.
+    fn block_step(
+        &self,
+        bp: &BlockProgram,
+        rank: usize,
+        shards: &[HostTensor],
+        batch: Vec<HostTensor>,
+    ) -> anyhow::Result<(f32, f32, f32, Vec<HostTensor>)> {
+        let mesh = self.config.mesh;
+        let (_, m_coord) = mesh.coords(rank);
+        let (dg, dr) = self.colls.data_group(rank);
+        let (mg, mr) = self.colls.model_group(rank);
+        let nl = self.manifest.cfg_usize("num_layers");
+        let feature = |name: &str| -> anyhow::Result<HostTensor> {
+            self.manifest
+                .batch_features
+                .iter()
+                .position(|f| f.name == name)
+                .map(|i| batch[i].clone())
+                .ok_or_else(|| anyhow::anyhow!("batch misses feature '{name}'"))
+        };
+        let tokens = feature("decoder_input_tokens")?;
+        let targets = feature("decoder_target_tokens")?;
+        let weights = feature("decoder_loss_weights")?;
+        let shard_t = HostTensor::i32(vec![], vec![m_coord as i32]);
+        let layer = |i: usize, s: &str| format!("decoder.layers_{i}.{s}");
+
+        // Resident model-axis block of a param: for TwoD sharding the
+        // resident shard is additionally data-sliced, so a data-axis
+        // all-gather reconstructs the *block* (never the full param).
+        let blk = |name: &str| -> anyhow::Result<HostTensor> {
+            let i = bp.index(name)?;
+            let e = &self.plan.entries[i];
+            let mut t = shards[i].clone();
+            if let Some((dim, _)) = e.spec.dim_for(MeshAxis::Data) {
+                let t0 = Instant::now();
+                t = all_gather_axis(dg, dr, &t, dim);
+                self.timing.collectives_data.add_since(t0);
+            }
+            self.note_param_peak(t.elements());
+            Ok(t)
+        };
+        let run = |seg: &str, inputs: Vec<HostTensor>| -> anyhow::Result<Vec<HostTensor>> {
+            let exe = bp
+                .segments
+                .get(seg)
+                .ok_or_else(|| anyhow::anyhow!("missing block segment '{seg}'"))?;
+            let t0 = Instant::now();
+            let outs = exe.run(inputs)?;
+            self.timing.execute.add_since(t0);
+            Ok(outs)
+        };
+        // The ordered collective schedule: every host-inserted model-axis
+        // reduction advances a cursor through the manifest contract, and
+        // point/op/payload must match — a stale or hand-edited contract
+        // fails loudly instead of silently diverging.
+        let sched = &bp.spec.collectives;
+        let cursor = Cell::new(0usize);
+        let ar = |point: &str, t: &HostTensor| -> anyhow::Result<HostTensor> {
+            let c = sched.get(cursor.get()).ok_or_else(|| {
+                anyhow::anyhow!("block schedule exhausted at point '{point}'")
+            })?;
+            anyhow::ensure!(
+                c.point == point && c.elems == t.elements(),
+                "block schedule mismatch at index {}: manifest ({}, {} elems) vs \
+                 executor ({point}, {} elems)",
+                cursor.get(),
+                c.point,
+                c.elems,
+                t.elements()
+            );
+            cursor.set(cursor.get() + 1);
+            let t0 = Instant::now();
+            let out = all_reduce_tensor_op(mg, mr, t, parse_reduce_op(&c.op)?);
+            self.timing.collectives_model.add_since(t0);
+            Ok(out)
+        };
+
+        // ---- forward ----
+        let emb = blk("token_embed")?;
+        let rp = blk("decoder.relpos_bias")?;
+        let fwd = run("fwd_embed", vec![emb.clone(), tokens.clone(), shard_t.clone()])?;
+        let mut x = ar("embed_out", &fwd[0])?;
+        let mut x_attn_in = Vec::with_capacity(nl);
+        let mut x_mlp_in = Vec::with_capacity(nl);
+        for i in 0..nl {
+            x_attn_in.push(x.clone());
+            let outs = run(
+                "fwd_attn",
+                vec![
+                    x.clone(),
+                    blk(&layer(i, "pre_attn_norm.scale"))?,
+                    blk(&layer(i, "self_attn.wq"))?,
+                    blk(&layer(i, "self_attn.wk"))?,
+                    blk(&layer(i, "self_attn.wv"))?,
+                    blk(&layer(i, "self_attn.wo"))?,
+                    rp.clone(),
+                ],
+            )?;
+            x = x.add(&ar(&format!("layer_{i}.attn_out"), &outs[0])?);
+            x_mlp_in.push(x.clone());
+            let outs = run(
+                "fwd_mlp",
+                vec![
+                    x.clone(),
+                    blk(&layer(i, "pre_mlp_norm.scale"))?,
+                    blk(&layer(i, "mlp.wi_0"))?,
+                    blk(&layer(i, "mlp.wi_1"))?,
+                    blk(&layer(i, "mlp.wo"))?,
+                ],
+            )?;
+            x = x.add(&ar(&format!("layer_{i}.mlp_out"), &outs[0])?);
+        }
+        let fnorm = blk("decoder.final_norm.scale")?;
+        let lout = run("fwd_loss_logits", vec![x.clone(), fnorm.clone(), emb.clone()])?;
+        let (z, lmax) = (lout[0].clone(), lout[1].clone());
+        let gmax = ar("logits_max", &lmax)?;
+        let fin = run(
+            "fwd_loss_finalize",
+            vec![z.clone(), gmax.clone(), targets.clone(), weights.clone(), shard_t.clone()],
+        )?;
+        let se = ar("softmax_sum", &fin[0])?;
+        let tl = ar("target_logit", &fin[1])?;
+        let claim = ar("argmax_claim", &fin[2])?;
+        let sc = run(
+            "fwd_loss_final",
+            vec![se.clone(), tl.clone(), claim, gmax.clone(), targets.clone(), weights.clone()],
+        )?;
+        let (loss_sum, weight_sum, correct_sum) =
+            (sc[0].first_f32(), sc[1].first_f32(), sc[2].first_f32());
+
+        // ---- backward (rematerializes from saved segment inputs) ----
+        let mut grads: Vec<Option<HostTensor>> = vec![None; self.plan.entries.len()];
+        let db = run(
+            "bwd_loss_final",
+            vec![se, tl, gmax.clone(), targets.clone(), weights.clone()],
+        )?;
+        let dz = run(
+            "bwd_loss_finalize",
+            vec![
+                z,
+                gmax,
+                targets,
+                weights,
+                shard_t.clone(),
+                db[0].clone(),
+                db[1].clone(),
+            ],
+        )?;
+        let dl = run("bwd_loss_logits", vec![x, fnorm, emb.clone(), dz[0].clone()])?;
+        grads[bp.index("decoder.final_norm.scale")?] = Some(dl[1].clone());
+        grads[bp.index("token_embed")?] = Some(dl[2].clone());
+        let mut d_x = ar("d_final", &dl[0])?;
+        let rp_i = bp.index("decoder.relpos_bias")?;
+        for i in (0..nl).rev() {
+            let outs = run(
+                "bwd_mlp",
+                vec![
+                    x_mlp_in[i].clone(),
+                    blk(&layer(i, "pre_mlp_norm.scale"))?,
+                    blk(&layer(i, "mlp.wi_0"))?,
+                    blk(&layer(i, "mlp.wi_1"))?,
+                    blk(&layer(i, "mlp.wo"))?,
+                    d_x.clone(),
+                ],
+            )?;
+            grads[bp.index(&layer(i, "pre_mlp_norm.scale"))?] = Some(outs[1].clone());
+            grads[bp.index(&layer(i, "mlp.wi_0"))?] = Some(outs[2].clone());
+            grads[bp.index(&layer(i, "mlp.wi_1"))?] = Some(outs[3].clone());
+            grads[bp.index(&layer(i, "mlp.wo"))?] = Some(outs[4].clone());
+            d_x = d_x.add(&ar(&format!("layer_{i}.d_mlp"), &outs[0])?);
+            let outs = run(
+                "bwd_attn",
+                vec![
+                    x_attn_in[i].clone(),
+                    blk(&layer(i, "pre_attn_norm.scale"))?,
+                    blk(&layer(i, "self_attn.wq"))?,
+                    blk(&layer(i, "self_attn.wk"))?,
+                    blk(&layer(i, "self_attn.wv"))?,
+                    blk(&layer(i, "self_attn.wo"))?,
+                    rp.clone(),
+                    d_x.clone(),
+                ],
+            )?;
+            grads[bp.index(&layer(i, "pre_attn_norm.scale"))?] = Some(outs[1].clone());
+            grads[bp.index(&layer(i, "self_attn.wq"))?] = Some(outs[2].clone());
+            grads[bp.index(&layer(i, "self_attn.wk"))?] = Some(outs[3].clone());
+            grads[bp.index(&layer(i, "self_attn.wv"))?] = Some(outs[4].clone());
+            grads[bp.index(&layer(i, "self_attn.wo"))?] = Some(outs[5].clone());
+            // the relpos table is shared across layers: host-sum the blocks
+            grads[rp_i] = Some(match grads[rp_i].take() {
+                Some(prev) => prev.add(&outs[6]),
+                None => outs[6].clone(),
+            });
+            d_x = d_x.add(&ar(&format!("layer_{i}.d_attn"), &outs[0])?);
+        }
+        let de = run("bwd_embed", vec![emb, tokens, shard_t, d_x])?;
+        let emb_i = bp.index("token_embed")?;
+        grads[emb_i] = Some(grads[emb_i].take().unwrap().add(&de[0]));
+
+        // ---- fused trailing AR of the model-replicated (norm-scale)
+        // grads: one flat payload, split back after the reduction ----
+        {
+            let c = sched.get(cursor.get()).ok_or_else(|| {
+                anyhow::anyhow!("block schedule exhausted before 'replicated_grads'")
+            })?;
+            anyhow::ensure!(
+                c.point == "replicated_grads" && parse_reduce_op(&c.op)? == ReduceOp::Sum,
+                "block schedule must end with a summed 'replicated_grads', got '{}'",
+                c.point
+            );
+            cursor.set(cursor.get() + 1);
+            let mut flat = Vec::with_capacity(c.elems);
+            for name in &bp.spec.replicated_grads {
+                flat.extend_from_slice(grads[bp.index(name)?].as_ref().unwrap().as_f32());
+            }
+            anyhow::ensure!(
+                flat.len() == c.elems,
+                "replicated_grads payload: manifest {} elems, executor {}",
+                c.elems,
+                flat.len()
+            );
+            let t0 = Instant::now();
+            let red = mg.all_reduce(mr, flat);
+            self.timing.collectives_model.add_since(t0);
+            let mut off = 0;
+            for name in &bp.spec.replicated_grads {
+                let i = bp.index(name)?;
+                let g = grads[i].take().unwrap();
+                let n = g.elements();
+                grads[i] = Some(HostTensor::f32(g.shape.clone(), red[off..off + n].to_vec()));
+                off += n;
+            }
+        }
+        anyhow::ensure!(
+            cursor.get() == sched.len(),
+            "block collective schedule not fully consumed: {}/{} points",
+            cursor.get(),
+            sched.len()
+        );
+        let grads = grads
+            .into_iter()
+            .enumerate()
+            .map(|(i, g)| {
+                g.ok_or_else(|| {
+                    let name = &self.plan.entries[i].name;
+                    anyhow::anyhow!("block step produced no grad for '{name}'")
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        for g in &grads {
+            self.note_param_peak(g.elements());
+        }
+        Ok((loss_sum, weight_sum, correct_sum, grads))
     }
 
     /// Distributed synchronized checkpoint: the coordinator declares the

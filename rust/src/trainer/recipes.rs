@@ -143,6 +143,63 @@ pub fn register_defaults() {
     }
 }
 
+/// Register a gin-defined mixture into the unified namespace:
+///
+/// ```text
+/// mixture.name = 'my_mix'
+/// mixture.tasks = ['c4_span', 'reverse_words']
+/// mixture.rates = [0.7, 0.3]        # optional; uniform when omitted
+/// ```
+///
+/// Members are bound *lazily by name* ([`Mixture::lazy`]) — the gin file
+/// may name tasks that are registered later in process setup; resolution
+/// happens at the mixture's first `dataset()` use. Returns the mixture
+/// name, or `Ok(None)` when the config defines no mixture. Idempotent:
+/// an already-registered name is left untouched.
+pub fn register_gin_mixture(gin: &crate::gin::Config) -> anyhow::Result<Option<String>> {
+    use crate::seqio::provider::ProviderRegistry;
+    let Some(name) = gin.get("mixture", "name").and_then(|v| v.as_str()).map(String::from)
+    else {
+        return Ok(None);
+    };
+    if ProviderRegistry::get(&name).is_some() {
+        return Ok(Some(name));
+    }
+    let tasks = gin.get("mixture", "tasks").and_then(|v| v.as_list()).ok_or_else(|| {
+        anyhow::anyhow!("gin mixture '{name}' needs `mixture.tasks = ['a', 'b', ...]`")
+    })?;
+    let task_names: Vec<String> = tasks
+        .iter()
+        .map(|v| {
+            v.as_str().map(String::from).ok_or_else(|| {
+                anyhow::anyhow!("gin mixture '{name}': mixture.tasks entries must be strings")
+            })
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let rates: Vec<f64> = match gin.get("mixture", "rates").and_then(|v| v.as_list()) {
+        Some(rs) => {
+            anyhow::ensure!(
+                rs.len() == task_names.len(),
+                "gin mixture '{name}': {} tasks but {} rates",
+                task_names.len(),
+                rs.len()
+            );
+            rs.iter()
+                .map(|v| {
+                    v.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("gin mixture '{name}': rates must be numbers")
+                    })
+                })
+                .collect::<anyhow::Result<_>>()?
+        }
+        None => vec![1.0; task_names.len()],
+    };
+    let members: Vec<(&str, f64)> =
+        task_names.iter().map(String::as_str).zip(rates).collect();
+    Mixture::lazy(&name, &members).register()?;
+    Ok(Some(name))
+}
+
 /// Default registry task for a model architecture: an arch must get a
 /// task whose output features its converter can consume (an encdec model
 /// needs "inputs"; the old hardcoded `lm_task` fed it empty encoder rows).
@@ -398,6 +455,37 @@ mod tests {
         assert!(span.splits().contains(&"validation".to_string()));
         assert_eq!(default_task_for_arch("encdec"), "c4_span");
         assert_eq!(default_task_for_arch("decoder"), "c4_lm");
+    }
+
+    #[test]
+    fn gin_mixture_registers_and_binds_lazily() {
+        // the gin file names member tasks that do not exist yet
+        let gin = crate::gin::Config::parse(
+            "mixture.name = 'gin_mix_test'\n\
+             mixture.tasks = ['gin_mix_member_a', 'gin_mix_member_b']\n\
+             mixture.rates = [0.7, 0.3]\n",
+        )
+        .unwrap();
+        assert_eq!(register_gin_mixture(&gin).unwrap().as_deref(), Some("gin_mix_test"));
+        let entry = ProviderRegistry::get("gin_mix_test").expect("mixture registered");
+        assert_eq!(entry.kind(), "mixture");
+        // members resolve at first dataset() use — register them now,
+        // after the mixture
+        use crate::seqio::task::TaskRegistry;
+        TaskRegistry::add(lm_task("gin_mix_member_a", 40, 32, 1)).unwrap();
+        TaskRegistry::add(lm_task("gin_mix_member_b", 40, 32, 2)).unwrap();
+        let p = entry.provider();
+        let ds = p
+            .dataset("train", crate::seqio::provider::ShardInfo { index: 0, num_shards: 1 }, 0)
+            .unwrap();
+        assert!(!ds.take(5).collect_vec().is_empty());
+        // second registration attempt is an idempotent no-op
+        assert_eq!(register_gin_mixture(&gin).unwrap().as_deref(), Some("gin_mix_test"));
+        // a config with no mixture section is a clean None
+        assert_eq!(register_gin_mixture(&crate::gin::Config::new()).unwrap(), None);
+        for n in ["gin_mix_test", "gin_mix_member_a", "gin_mix_member_b"] {
+            ProviderRegistry::remove(n);
+        }
     }
 
     #[test]

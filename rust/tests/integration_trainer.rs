@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use t5x::optim::{OptimizerKind, Schedule};
-use t5x::partitioning::{Mesh, ParamStrategy};
+use t5x::partitioning::{ExecMode, Mesh, ParamStrategy};
 use t5x::runtime::{Artifacts, DeviceHandle};
 use t5x::seqio::cache::{cache_task, CacheConfig};
 use t5x::seqio::dataset::{Dataset, PipelineState};
@@ -83,6 +83,7 @@ fn figure1_full_stack_loss_decreases() {
         checkpoint_dir: None,
         grad_clip_norm: None,
         weight_decay: None,
+        exec_mode: ExecMode::Gather,
     };
     let trainer = Trainer::new(&arts, &device, cfg).unwrap();
     let source = BatchSource::Infeed(build_infeed(&arts, &dir, 2, 0, None));
@@ -294,6 +295,7 @@ trainer.lr = 1e-3
         checkpoint_dir: None,
         grad_clip_norm: None,
         weight_decay: None,
+        exec_mode: ExecMode::parse(&cfg.str_or("trainer", "exec_mode", "auto")).unwrap(),
     };
     assert_eq!(tc.steps, 2);
     assert_eq!(tc.strategy, ParamStrategy::TwoD);

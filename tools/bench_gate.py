@@ -1,0 +1,134 @@
+#!/usr/bin/env python3
+"""Bench trajectory snapshot + regression gate (stdlib only).
+
+Reads the ``bench_results.jsonl`` that ``cargo bench`` appends (one JSON
+object per measurement, see ``rust/src/bench/mod.rs::write_jsonl``),
+writes a compact ``BENCH_<pr>.json`` snapshot for the committed
+``benchmarks/`` trajectory, and gates on the PR-6 headline: on any
+model-parallel mesh (model degree >= 2), block execution must not be
+slower than gather execution of the same (model, mesh, strategy) case.
+
+Usage (CI smoke job):
+
+    python tools/bench_gate.py --input rust/bench_results.jsonl \
+        --output benchmarks/BENCH_6.json [--tolerance 0.10]
+
+Exit status is non-zero if the gate fails or if the input contains no
+gather-vs-block pair to compare (so a silently-skipped comparison cannot
+read as a pass). ``--tolerance`` is the allowed fractional shortfall —
+quick-mode CI medians come from 2-5 iterations and are noisy; the
+committed trajectory still records the exact ratios.
+"""
+
+import argparse
+import json
+import re
+import sys
+
+# "t5-nano-dec mesh=1x2 OneD block (2 steps)" — see bench_train_step.rs
+TRAIN_ROW = re.compile(
+    r"^(?P<model>\S+) mesh=(?P<data>\d+)x(?P<mdeg>\d+) "
+    r"(?P<strategy>\w+) (?P<exec>gather|block) \(\d+ steps\)$"
+)
+TRAIN_GROUP = "train step (E16)"
+
+
+def load_rows(path):
+    rows = []
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+def gate(rows, tolerance):
+    """Return (pairs, failures) for the block-vs-gather comparison."""
+    cases = {}
+    for r in rows:
+        if r.get("group") != TRAIN_GROUP:
+            continue
+        m = TRAIN_ROW.match(r.get("name", ""))
+        if not m or int(m.group("mdeg")) < 2:
+            continue
+        key = (m.group("model"), m.group("data"), m.group("mdeg"),
+               m.group("strategy"))
+        cases.setdefault(key, {})[m.group("exec")] = r.get("throughput_per_s")
+    pairs, failures = [], []
+    for key, by_exec in sorted(cases.items()):
+        if "gather" not in by_exec or "block" not in by_exec:
+            continue
+        g, b = by_exec["gather"], by_exec["block"]
+        pair = {
+            "model": key[0],
+            "mesh": f"{key[1]}x{key[2]}",
+            "strategy": key[3],
+            "gather_tok_per_s": g,
+            "block_tok_per_s": b,
+            "block_over_gather": (b / g) if g else None,
+        }
+        pairs.append(pair)
+        if g and b < g * (1.0 - tolerance):
+            failures.append(
+                f"{pair['model']} mesh={pair['mesh']} {pair['strategy']}: "
+                f"block {b:.1f} tok/s < gather {g:.1f} tok/s "
+                f"(ratio {b / g:.3f}, tolerance {tolerance:.2f})"
+            )
+    return pairs, failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--input", required=True, help="bench_results.jsonl path")
+    ap.add_argument("--output", required=True, help="BENCH_<pr>.json path")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional block-vs-gather shortfall")
+    args = ap.parse_args()
+
+    rows = load_rows(args.input)
+    pairs, failures = gate(rows, args.tolerance)
+
+    snapshot = {
+        "schema": "t5x-bench-trajectory-v1",
+        "source": args.input,
+        "gate": {
+            "rule": "block tok/s >= gather tok/s at model degree >= 2",
+            "tolerance": args.tolerance,
+            "pairs": pairs,
+            "failures": failures,
+        },
+        "measurements": [
+            {
+                "group": r.get("group"),
+                "name": r.get("name"),
+                "median_s": r.get("median_s"),
+                "throughput_per_s": r.get("throughput_per_s"),
+                "throughput_unit": r.get("throughput_unit"),
+            }
+            for r in rows
+        ],
+    }
+    with open(args.output, "w", encoding="utf-8") as f:
+        json.dump(snapshot, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.output}: {len(rows)} measurements, "
+          f"{len(pairs)} gather-vs-block pair(s)")
+
+    if not pairs:
+        print("gate: FAIL — no gather-vs-block pair found in "
+              f"group '{TRAIN_GROUP}' (bench_train_step did not run?)",
+              file=sys.stderr)
+        return 1
+    if failures:
+        for f_ in failures:
+            print(f"gate: FAIL — {f_}", file=sys.stderr)
+        return 1
+    for p in pairs:
+        print(f"gate: ok — {p['model']} mesh={p['mesh']} {p['strategy']} "
+              f"block/gather = {p['block_over_gather']:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
