@@ -73,6 +73,8 @@ fn main() -> anyhow::Result<()> {
         grad_clip_norm: None,
         weight_decay: None,
         exec_mode: t5x::partitioning::ExecMode::Auto,
+        trace_out: None,
+        profile_steps: None,
     };
     let trainer = Trainer::new(&arts, &device, cfg)?
         .with_logger(t5x::metrics::MetricsLogger::new().with_terminal());

@@ -17,6 +17,18 @@
 //! t5x eval  --model t5-nano-dec --task c4_lm   # reads its validation split
 //! t5x list-tasks                               # the registry namespace
 //! ```
+//!
+//! Profiling a run (works on `train`, `infer`, and `serve`): add
+//! `--trace-out trace.json` (gin: `trainer.trace_out`), optionally
+//! narrowed with `--profile-steps N..M`, then either open
+//! <https://ui.perfetto.dev> and drag the JSON in — one track per host
+//! thread, spans for step phases, block segments, collectives, infeed
+//! and serving — or stay in the terminal:
+//!
+//! ```bash
+//! t5x train --task c4_lm --steps 20 --model t5-nano-dec --trace-out trace.json
+//! t5x trace-summary trace.json   # top spans by self-time + bottleneck verdict
+//! ```
 
 use std::sync::Arc;
 
@@ -67,6 +79,11 @@ fn main() -> anyhow::Result<()> {
         // Auto picks block-sharded execution when the artifacts carry a
         // block contract for the model axis (no full-param gathers)
         exec_mode: t5x::partitioning::ExecMode::Auto,
+        // Set to Some(path) to dump a Chrome/Perfetto trace of the run:
+        // open ui.perfetto.dev and drag the JSON in (or use
+        // `t5x trace-summary <path>` for a terminal breakdown).
+        trace_out: None,
+        profile_steps: None,
     };
     let trainer = Trainer::new(&arts, &device, cfg)?
         .with_logger(t5x::metrics::MetricsLogger::new().with_terminal());

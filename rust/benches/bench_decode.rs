@@ -20,6 +20,19 @@
 use t5x::bench::Bench;
 use t5x::infer::{DecodeMethod, DecodeMode, InferEngine, InferRequest};
 use t5x::runtime::{Artifacts, DeviceHandle};
+use t5x::util::json::Json;
+
+/// Append one extra JSONL row to the shared bench log (serve latency
+/// percentiles for the BENCH_<pr>.json trajectory).
+fn append_row(path: &str, row: &Json) {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .expect("open bench log");
+    writeln!(f, "{row}").expect("append bench row");
+}
 
 fn submit_all(engine: &mut InferEngine, prompts: &[Vec<i32>], gen: usize) {
     for (i, p) in prompts.iter().enumerate() {
@@ -137,6 +150,19 @@ fn main() {
                      rescore ({rescore_tps:.1}) at L={l}"
                 );
             }
+            // §Obs: request-latency percentiles (accumulated over every
+            // bench iteration) for the BENCH_<pr>.json serve-p99 section
+            append_row(
+                "bench_results.jsonl",
+                &Json::obj(vec![
+                    ("group", Json::str("serve latency (obs)")),
+                    ("name", Json::str(format!("{model} kv ({n} reqs x {gen} tok)"))),
+                    ("ttft_ms_p50", Json::num(ks.ttft_ms_p50)),
+                    ("ttft_ms_p99", Json::num(ks.ttft_ms_p99)),
+                    ("latency_ms_p50", Json::num(ks.latency_ms_p50)),
+                    ("latency_ms_p99", Json::num(ks.latency_ms_p99)),
+                ]),
+            );
         }
     }
     bench.write_jsonl("bench_results.jsonl").unwrap();

@@ -53,6 +53,8 @@ fn main() {
                 grad_clip_norm: None,
                 weight_decay: None,
                 exec_mode: t5x::partitioning::ExecMode::Gather,
+                trace_out: None,
+                profile_steps: None,
             };
             let trainer = Trainer::new(&arts, &device, cfg).unwrap();
             let opt_floats = trainer.optimizer_state_floats(0);

@@ -8,6 +8,19 @@ use t5x::optim::{OptimizerKind, Schedule};
 use t5x::partitioning::{ExecMode, Mesh, ParamStrategy};
 use t5x::runtime::{Artifacts, DeviceHandle};
 use t5x::trainer::{BatchSource, Trainer, TrainerConfig};
+use t5x::util::json::Json;
+
+/// Append one extra JSONL row to the shared bench log (rows the harness
+/// doesn't model, e.g. the per-phase step breakdown for BENCH_<pr>.json).
+fn append_row(path: &str, row: &Json) {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .expect("open bench log");
+    writeln!(f, "{row}").expect("append bench row");
+}
 
 fn main() {
     let arts = Artifacts::load_default().expect("make artifacts first");
@@ -49,7 +62,10 @@ fn main() {
                 grad_clip_norm: None,
                 weight_decay: None,
                 exec_mode,
+                trace_out: None,
+                profile_steps: None,
             };
+            let cfg_traced = cfg.clone();
             let trainer = Trainer::new(&arts, &device, cfg).unwrap();
             let tokens = (m.tokens_per_step() * mesh.data * steps as usize) as f64;
             bench.measure_with_throughput(
@@ -73,6 +89,43 @@ fn main() {
                 trainer.peak_param_floats(),
                 trainer.exec_mode
             );
+            // §Obs: same case with an armed tracer (spans recorded, no
+            // export) — the CI gate holds traced tok/s within a few % of
+            // the untraced row above.
+            let traced = Trainer::new(&arts, &device, cfg_traced)
+                .unwrap()
+                .with_tracer(t5x::obs::Tracer::new());
+            bench.measure_with_throughput(
+                &format!(
+                    "{model} mesh={mesh} {strategy:?} {exec_mode} traced ({steps} steps)"
+                ),
+                Some((tokens, "tok")),
+                || {
+                    let s = traced.train(&BatchSource::Synthetic { seed: 1 }).unwrap();
+                    assert!(s.final_loss().is_finite());
+                },
+            );
+            // step-phase ms breakdown (rank-0 wall-clock deltas, averaged
+            // over every traced step) for the BENCH_<pr>.json trajectory
+            let ph = &traced.phase_hist;
+            append_row(
+                "bench_results.jsonl",
+                &Json::obj(vec![
+                    ("group", Json::str("train phase breakdown (obs)")),
+                    (
+                        "name",
+                        Json::str(format!("{model} mesh={mesh} {strategy:?} {exec_mode}")),
+                    ),
+                    ("infeed_ms", Json::num(ph.infeed.mean_ms())),
+                    ("execute_ms", Json::num(ph.execute.mean_ms())),
+                    ("coll_data_ms", Json::num(ph.collectives_data.mean_ms())),
+                    ("coll_model_ms", Json::num(ph.collectives_model.mean_ms())),
+                    ("optimizer_ms", Json::num(ph.optimizer.mean_ms())),
+                    ("step_ms_p50", Json::num(ph.step_ms.p50())),
+                    ("step_ms_p99", Json::num(ph.step_ms.p99())),
+                    ("steps", Json::num(ph.step_ms.count() as f64)),
+                ]),
+            );
         }
     }
 
@@ -94,6 +147,8 @@ fn main() {
             grad_clip_norm: None,
             weight_decay: None,
             exec_mode: ExecMode::Gather,
+            trace_out: None,
+            profile_steps: None,
         };
         let trainer = Trainer::new(&arts, &device, cfg).unwrap();
         let tokens = m.tokens_per_step() as f64;

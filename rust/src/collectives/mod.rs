@@ -65,6 +65,9 @@ pub struct CollectiveGroup {
     barrier: Barrier,
     bytes_sent: AtomicU64,
     ops: AtomicU64,
+    /// Optional span tracer; when attached (and enabled), every multi-rank
+    /// ring op records a `coll/*` span with elems/bytes attributes.
+    tracer: std::sync::OnceLock<Arc<crate::obs::Tracer>>,
 }
 
 impl CollectiveGroup {
@@ -89,7 +92,24 @@ impl CollectiveGroup {
             barrier: Barrier::new(n),
             bytes_sent: AtomicU64::new(0),
             ops: AtomicU64::new(0),
+            tracer: std::sync::OnceLock::new(),
         })
+    }
+
+    /// Attach a tracer; first writer wins (later calls are no-ops, so
+    /// re-attaching the same shared tracer from every host is safe).
+    pub fn set_tracer(&self, t: Arc<crate::obs::Tracer>) {
+        let _ = self.tracer.set(t);
+    }
+
+    /// Per-op span, or None when no tracer is attached/enabled (the
+    /// untraced cost is one lock-free `OnceLock::get`).
+    fn op_span(&self, name: &'static str, elems: usize) -> Option<crate::obs::Span<'_>> {
+        let t = self.tracer.get()?;
+        if !t.is_enabled() {
+            return None;
+        }
+        Some(t.span(name).arg("elems", elems).arg("bytes", elems * 4))
     }
 
     pub fn num_ranks(&self) -> usize {
@@ -136,6 +156,7 @@ impl CollectiveGroup {
         if self.n == 1 {
             return data;
         }
+        let _sp = self.op_span("coll/all_reduce", data.len());
         let n = self.n;
         let bounds = chunk_bounds(data.len(), n);
         // Phase 1: reduce-scatter. After n-1 steps rank r owns the fully
@@ -173,6 +194,7 @@ impl CollectiveGroup {
         if n == 1 {
             return data;
         }
+        let _sp = self.op_span("coll/reduce_scatter", data.len());
         // After n-1 steps of the standard schedule rank r owns chunk
         // (r+1)%n; shift by one so rank r ends owning chunk r.
         for s in 0..n - 1 {
@@ -203,6 +225,7 @@ impl CollectiveGroup {
         if n == 1 {
             return full;
         }
+        let _sp = self.op_span("coll/all_gather", full_len);
         for s in 0..n - 1 {
             let send_c = (rank + n - s) % n;
             let (lo, hi) = bounds[send_c];
@@ -221,6 +244,8 @@ impl CollectiveGroup {
         if self.n == 1 {
             return data.expect("root must provide data");
         }
+        let _sp =
+            self.op_span("coll/broadcast", data.as_ref().map(|d| d.len()).unwrap_or(0));
         if rank == 0 {
             let d = data.expect("root must provide data");
             self.send_next(rank, d.clone());
@@ -476,6 +501,15 @@ impl MeshCollectives {
         self.global.reset_stats();
         for g in self.data_groups.iter().chain(&self.model_groups) {
             g.reset_stats();
+        }
+    }
+
+    /// Attach one shared tracer to every subgroup (and the global group),
+    /// so per-op `coll/*` spans land on whichever host thread runs them.
+    pub fn set_tracer(&self, t: &Arc<crate::obs::Tracer>) {
+        self.global.set_tracer(t.clone());
+        for g in self.data_groups.iter().chain(&self.model_groups) {
+            g.set_tracer(t.clone());
         }
     }
 }

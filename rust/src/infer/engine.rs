@@ -131,6 +131,9 @@ pub struct InferResult {
     pub queue_seconds: f64,
     /// Submit-to-completion wall time in seconds.
     pub latency_seconds: f64,
+    /// Submit-to-first-token wall time in seconds (None if the request
+    /// produced no tokens).
+    pub ttft_seconds: Option<f64>,
 }
 
 struct ActiveSlot {
@@ -145,6 +148,8 @@ struct ActiveSlot {
     submitted: Instant,
     admitted: Instant,
     started_step: u64,
+    /// Submit-to-first-token latency, set when the first token lands.
+    ttft_seconds: Option<f64>,
     /// Admitted this step and not yet prefilled (Kv mode: first token
     /// comes from `prefill` logits, after which the slot rides
     /// `decode_step`). Cleared on the slot's first advance in any mode.
@@ -169,6 +174,14 @@ pub struct EngineSummary {
     pub tokens_per_sec: f64,
     /// Mean decode wall time per engine step.
     pub seconds_per_step: f64,
+    /// Submit-to-first-token latency percentiles over completed requests
+    /// (ms; 0 until any request finishes). Percentiles, not means — the
+    /// serving headline is the tail, and a mean hides it.
+    pub ttft_ms_p50: f64,
+    pub ttft_ms_p99: f64,
+    /// Submit-to-completion latency percentiles (ms).
+    pub latency_ms_p50: f64,
+    pub latency_ms_p99: f64,
 }
 
 pub struct InferEngine {
@@ -199,6 +212,15 @@ pub struct InferEngine {
     decode_seconds: f64,
     finished: Vec<InferResult>,
     counters: CounterSet,
+    /// Span tracer (`serve/*` taxonomy); `Tracer::off()` unless armed via
+    /// [`InferEngine::set_tracer`] — the off path is a no-op.
+    tracer: std::sync::Arc<crate::obs::Tracer>,
+    /// Record spans only for engine steps in `[a, b)` (`--profile-steps`).
+    profile_steps: Option<(u64, u64)>,
+    /// Submit-to-first-token / submit-to-completion latency histograms
+    /// over completed requests.
+    ttft_hist: crate::obs::Histogram,
+    latency_hist: crate::obs::Histogram,
 }
 
 impl InferEngine {
@@ -277,7 +299,26 @@ impl InferEngine {
             decode_seconds: 0.0,
             finished: Vec::new(),
             counters: CounterSet::new(),
+            tracer: crate::obs::Tracer::off(),
+            profile_steps: None,
+            ttft_hist: crate::obs::Histogram::new(),
+            latency_hist: crate::obs::Histogram::new(),
         })
+    }
+
+    /// Arm span recording (`serve/*` spans, per-request tracks, queue/slot
+    /// counters). The engine holds `Tracer::off()` otherwise.
+    pub fn set_tracer(&mut self, tracer: std::sync::Arc<crate::obs::Tracer>) {
+        self.tracer = tracer;
+    }
+
+    /// Limit span recording to engine steps in `[a, b)`.
+    pub fn set_profile_steps(&mut self, window: Option<(u64, u64)>) {
+        self.profile_steps = window;
+    }
+
+    pub fn tracer(&self) -> &std::sync::Arc<crate::obs::Tracer> {
+        &self.tracer
     }
 
     /// The resolved decode mode this engine runs with.
@@ -370,6 +411,7 @@ impl InferEngine {
                 submitted,
                 admitted: Instant::now(),
                 started_step: self.steps,
+                ttft_seconds: None,
                 fresh: true,
             });
         }
@@ -385,8 +427,17 @@ impl InferEngine {
     /// `started_step`/`finished_step` — and the produced tokens — do not
     /// depend on the decode mode.
     pub fn step(&mut self) -> anyhow::Result<usize> {
+        if let Some((a, b)) = self.profile_steps {
+            if self.tracer.is_armed() {
+                self.tracer.set_enabled(self.steps >= a && self.steps < b);
+            }
+        }
         self.admit();
         let active = self.active();
+        if self.tracer.is_enabled() {
+            self.tracer.counter("serve/queue_depth", self.queue.len() as f64);
+            self.tracer.counter("serve/active_slots", active as f64);
+        }
         if active == 0 {
             return Ok(0);
         }
@@ -407,6 +458,11 @@ impl InferEngine {
         slot.fresh = false;
         let tok = decoding::next_token(&slot.method, row, slot.rng.as_mut()) as i32;
         slot.produced.push(tok);
+        if slot.produced.len() == 1 {
+            let t = slot.submitted.elapsed().as_secs_f64();
+            slot.ttft_seconds = Some(t);
+            self.ttft_hist.record_seconds(t);
+        }
         self.counters.inc("infer/tokens");
         let done =
             tok == self.eos_id || slot.len + 1 >= l || slot.produced.len() >= slot.max_tokens;
@@ -415,6 +471,31 @@ impl InferEngine {
             self.dec[i * l..(i + 1) * l].fill(0);
             let now = Instant::now();
             self.counters.inc("infer/requests_completed");
+            let latency = (now - slot.submitted).as_secs_f64();
+            self.latency_hist.record_seconds(latency);
+            if self.tracer.is_enabled() {
+                use crate::obs::ArgValue;
+                // Request lifecycle as two complete events on virtual
+                // tracks: the queue wait, then the slot residency.
+                self.tracer.complete(
+                    "serve/queue",
+                    format!("req {} queued", slot.id),
+                    slot.submitted,
+                    slot.admitted,
+                    vec![("id", ArgValue::Num(slot.id as f64))],
+                );
+                self.tracer.complete(
+                    &format!("serve/slot{i}"),
+                    format!("req {}", slot.id),
+                    slot.admitted,
+                    now,
+                    vec![
+                        ("id", ArgValue::Num(slot.id as f64)),
+                        ("prompt_len", ArgValue::Num(slot.prompt_len as f64)),
+                        ("tokens", ArgValue::Num(slot.produced.len() as f64)),
+                    ],
+                );
+            }
             self.finished.push(InferResult {
                 id: slot.id,
                 prompt_len: slot.prompt_len,
@@ -422,7 +503,8 @@ impl InferEngine {
                 started_step: slot.started_step,
                 finished_step: self.steps,
                 queue_seconds: (slot.admitted - slot.submitted).as_secs_f64(),
-                latency_seconds: (now - slot.submitted).as_secs_f64(),
+                latency_seconds: latency,
+                ttft_seconds: slot.ttft_seconds,
             });
         } else {
             self.dec[i * l + slot.len] = tok;
@@ -437,9 +519,11 @@ impl InferEngine {
         let l = self.manifest.seq_len();
         let v = self.manifest.vocab();
         let t0 = Instant::now();
+        let sp = self.tracer.span("serve/rescore_step").arg("rows", active);
         let mut inputs = self.ordered.clone();
         inputs.push(HostTensor::i32(vec![b, l], self.dec.clone()));
         let outs = self.exe.run(inputs)?;
+        drop(sp); // span must end before advance_slot re-borrows self
         self.decode_seconds += t0.elapsed().as_secs_f64();
         self.steps += 1;
         self.counters.inc("infer/steps");
@@ -479,6 +563,7 @@ impl InferEngine {
         // admission) or overwritten by the prefill merge below.
         let mut step_logits: Option<HostTensor> = None; // [B, V]
         if !cont.is_empty() {
+            let _sp = self.tracer.span("serve/decode_step").arg("rows", cont.len());
             let mut tok = vec![0i32; b];
             let mut pos = vec![0i32; b];
             for &i in &cont {
@@ -499,6 +584,7 @@ impl InferEngine {
         // only their (contiguous, batch-major) cache rows.
         let mut prefill_logits: Option<HostTensor> = None; // [B, L, V]
         if !fresh.is_empty() {
+            let _sp = self.tracer.span("serve/prefill").arg("rows", fresh.len());
             let mut inputs = self.ordered.clone();
             inputs.push(HostTensor::i32(vec![b, l], self.dec.clone()));
             let mut outs = self.prefill_exe.as_ref().unwrap().run(inputs)?;
@@ -640,6 +726,17 @@ impl InferEngine {
             } else {
                 0.0
             },
+            ttft_ms_p50: self.ttft_hist.p50(),
+            ttft_ms_p99: self.ttft_hist.p99(),
+            latency_ms_p50: self.latency_hist.p50(),
+            latency_ms_p99: self.latency_hist.p99(),
         }
+    }
+
+    /// Flush serving latency histograms as metric points (`serve/ttft_ms_*`,
+    /// `serve/latency_ms_*` p50/p95/p99/mean/count).
+    pub fn log_latency_to(&self, logger: &crate::metrics::MetricsLogger, step: u64) {
+        self.ttft_hist.log_to(logger, step, "serve/ttft_ms");
+        self.latency_hist.log_to(logger, step, "serve/latency_ms");
     }
 }

@@ -80,7 +80,7 @@ pub fn parse_request(
 
 /// Render one completed request as a response line.
 pub fn result_to_json(r: &InferResult) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("id", Json::num(r.id as f64)),
         (
             "tokens",
@@ -89,7 +89,11 @@ pub fn result_to_json(r: &InferResult) -> Json {
         ("steps", Json::num(r.tokens.len() as f64)),
         ("queue_ms", Json::num(r.queue_seconds * 1e3)),
         ("latency_ms", Json::num(r.latency_seconds * 1e3)),
-    ])
+    ];
+    if let Some(t) = r.ttft_seconds {
+        pairs.push(("ttft_ms", Json::num(t * 1e3)));
+    }
+    Json::obj(pairs)
 }
 
 /// Totals reported when the input stream closes.
@@ -251,10 +255,13 @@ mod tests {
             finished_step: 3,
             queue_seconds: 0.001,
             latency_seconds: 0.01,
+            ttft_seconds: Some(0.004),
         };
         let v = Json::parse(&result_to_json(&r).to_string()).unwrap();
         assert_eq!(v.get("id").unwrap().as_i64(), Some(9));
         assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 3);
         assert_eq!(v.get("steps").unwrap().as_i64(), Some(3));
+        let ttft = v.get("ttft_ms").unwrap().as_f64().unwrap();
+        assert!((ttft - 4.0).abs() < 1e-9);
     }
 }

@@ -11,6 +11,7 @@
 //! t5x train  --model t5-micro-dec --steps 100 --mesh 4x2 --strategy 2d \
 //!            [--exec-mode auto|gather|block] \
 //!            [--task c4_span] [--split train] [--use-cached] [--cache DIR] \
+//!            [--trace-out trace.json] [--profile-steps 2..8] \
 //!            [--config run.gin] [--gin.trainer.lr=1e-3]
 //! t5x eval   --model t5-micro-dec [--task <registry-name>] [--ckpt DIR]
 //! t5x infer  --model t5-nano-dec --prompt "5 9 11" --len 8 \
@@ -18,7 +19,14 @@
 //!            [--top-p 0.95] [--seed 7] [--beam 4] [--alpha 0.6] \
 //!            [--decode-mode auto|kv|rescore]
 //! t5x serve  --model t5-nano-dec [--len 16] [--decode-mode auto|kv|rescore]
-//!            # JSONL requests on stdin
+//!            [--trace-out trace.json]  # JSONL requests on stdin
+//! t5x trace-summary trace.json [--top 15]
+//!            # top spans by self-time + infeed/compute/comm-bound verdict
+//!
+//! `--trace-out` (gin `trainer.trace_out` / `serve.trace_out`) writes a
+//! Chrome trace-event JSON — load it at ui.perfetto.dev or feed it to
+//! `t5x trace-summary`. `--profile-steps N..M` (or a single step `N`)
+//! narrows recording to that step window; `infer` takes the same flags.
 //!
 //! `--decode-mode` picks the serving hot path: `kv` drives the O(L)
 //! `prefill`/`decode_step` entrypoints, `rescore` the O(L^2) full
@@ -155,6 +163,23 @@ fn trainer_config(args: &Args, gin: &Config) -> anyhow::Result<TrainerConfig> {
             .and_then(|v| v.parse().ok())
             .or_else(|| gin.get("trainer", "weight_decay").and_then(|v| v.as_f64())),
         exec_mode,
+        trace_out: args
+            .get("trace-out")
+            .map(PathBuf::from)
+            .or_else(|| {
+                gin.get("trainer", "trace_out")
+                    .and_then(|v| v.as_str().map(PathBuf::from))
+            }),
+        profile_steps: match args
+            .get("profile-steps")
+            .map(|s| s.to_string())
+            .or_else(|| {
+                gin.get("trainer", "profile_steps")
+                    .and_then(|v| v.as_str().map(|s| s.to_string()))
+            }) {
+            Some(s) => Some(t5x::obs::parse_profile_steps(&s)?),
+            None => None,
+        },
     })
 }
 
@@ -166,10 +191,11 @@ fn run() -> anyhow::Result<()> {
         Some("train") => cmd_train(&args, &gin),
         Some("eval") => cmd_eval(&args, &gin),
         Some("infer") => cmd_infer(&args),
-        Some("serve") => cmd_serve(&args),
+        Some("serve") => cmd_serve(&args, &gin),
         Some("inspect-ckpt") => cmd_inspect(&args),
         Some("cost-table") => cmd_cost_table(&args),
         Some("bench-report") => cmd_bench_report(&args),
+        Some("trace-summary") => cmd_trace_summary(&args),
         Some("list-models") => cmd_list_models(),
         Some("list-tasks") => cmd_list_tasks(),
         other => {
@@ -178,7 +204,7 @@ fn run() -> anyhow::Result<()> {
             }
             println!(
                 "usage: t5x <cache|train|eval|infer|serve|inspect-ckpt|cost-table|\
-                 bench-report|list-models|list-tasks> [flags]"
+                 bench-report|trace-summary|list-models|list-tasks> [flags]"
             );
             println!("  see rust/src/main.rs docs for per-command flags");
             Ok(())
@@ -422,6 +448,14 @@ fn cmd_train(args: &Args, gin: &Config) -> anyhow::Result<()> {
         summary.wall_seconds,
         summary.comm_bytes as f64 / (1 << 20) as f64
     );
+    if let Some(path) = &cfg.trace_out {
+        println!(
+            "trace written to {} (load at ui.perfetto.dev or run \
+             `t5x trace-summary {}`)",
+            path.display(),
+            path.display()
+        );
+    }
     // dump the operative gin config (the t5x reproducibility artifact)
     let op = gin.operative();
     if !op.is_empty() {
@@ -496,6 +530,30 @@ fn decode_mode_flag(args: &Args) -> anyhow::Result<Option<DecodeMode>> {
     DecodeMode::parse(&args.get_or("decode-mode", "auto"))
 }
 
+/// `--trace-out` (or gin `serve.trace_out`): arm the engine's span tracer,
+/// returning it with the export path so the caller can write the Chrome
+/// trace once serving finishes. `--profile-steps N..M` narrows recording
+/// to that engine-step window.
+fn arm_engine_tracer(
+    args: &Args,
+    gin: Option<&Config>,
+    engine: &mut InferEngine,
+) -> anyhow::Result<Option<(Arc<t5x::obs::Tracer>, PathBuf)>> {
+    let path = args.get("trace-out").map(PathBuf::from).or_else(|| {
+        gin.and_then(|g| {
+            g.get("serve", "trace_out").and_then(|v| v.as_str().map(PathBuf::from))
+        })
+    });
+    let Some(path) = path else { return Ok(None) };
+    let tracer = t5x::obs::Tracer::new();
+    tracer.name_track("serve-engine");
+    engine.set_tracer(tracer.clone());
+    if let Some(s) = args.get("profile-steps") {
+        engine.set_profile_steps(Some(t5x::obs::parse_profile_steps(s)?));
+    }
+    Ok(Some((tracer, path)))
+}
+
 fn cmd_infer(args: &Args) -> anyhow::Result<()> {
     let model = args.get_or("model", "t5-nano-dec");
     let arts = Artifacts::load_default()?;
@@ -504,6 +562,7 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
     let params = load_infer_params(args, m)?;
     let mut engine =
         InferEngine::with_mode(&arts, &device, &model, &params, 1, decode_mode_flag(args)?)?;
+    let trace = arm_engine_tracer(args, None, &mut engine)?;
     let prompt: Vec<i32> = args
         .get_or("prompt", "5 9 11")
         .split_whitespace()
@@ -523,6 +582,9 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
                 "beam {i}: score {:.4} (logp {:.4}) ids {:?}",
                 h.score, h.log_prob, h.tokens
             );
+        }
+        if let Some((tracer, path)) = &trace {
+            tracer.export_or_warn(path);
         }
         return Ok(());
     }
@@ -549,10 +611,13 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
         s.seconds_per_step * 1e3,
         s.slot_utilization * 100.0
     );
+    if let Some((tracer, path)) = &trace {
+        tracer.export_or_warn(path);
+    }
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+fn cmd_serve(args: &Args, gin: &Config) -> anyhow::Result<()> {
     let model = args.get_or("model", "t5-nano-dec");
     let arts = Artifacts::load_default()?;
     let device = DeviceHandle::spawn()?;
@@ -560,6 +625,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let params = load_infer_params(args, m)?;
     let mut engine =
         InferEngine::with_mode(&arts, &device, &model, &params, 1, decode_mode_flag(args)?)?;
+    let trace = arm_engine_tracer(args, Some(gin), &mut engine)?;
     let default_max = args.get_usize("len", 16)?;
     eprintln!(
         "serving {model} (batch {} slots, {} decode mode): one JSON request \
@@ -589,6 +655,31 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         s.slot_utilization * 100.0,
         s.refills
     );
+    eprintln!(
+        "latency: ttft p50 {:.2} ms / p99 {:.2} ms, request p50 {:.2} ms / \
+         p99 {:.2} ms",
+        s.ttft_ms_p50, s.ttft_ms_p99, s.latency_ms_p50, s.latency_ms_p99
+    );
+    if let Some((tracer, path)) = &trace {
+        tracer.export_or_warn(path);
+    }
+    Ok(())
+}
+
+/// Print the top spans by self-time and the bottleneck verdict
+/// (infeed-bound / compute-bound / comm-bound) for a Chrome trace written
+/// by `--trace-out`.
+fn cmd_trace_summary(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.get("file").map(|s| s.to_string()))
+        .ok_or_else(|| {
+            anyhow::anyhow!("usage: t5x trace-summary <trace.json> [--top K]")
+        })?;
+    let summary = t5x::obs::summarize_file(&path)?;
+    summary.print(args.get_usize("top", 15)?);
     Ok(())
 }
 

@@ -11,6 +11,11 @@ use std::time::Instant;
 
 use crate::util::json::Json;
 
+// The observability layer (spans, histograms, gauges) lives in
+// `crate::obs` and is re-exported here so metrics consumers see one
+// surface.
+pub use crate::obs::{GaugeSet, Histogram, Span, Tracer};
+
 /// One scalar observation at a training step.
 #[derive(Debug, Clone)]
 pub struct MetricPoint {
@@ -65,11 +70,13 @@ impl MetricWriter for TerminalWriter {
 pub struct JsonlWriter {
     path: PathBuf,
     buf: String,
+    warned_dup: bool,
+    warned_io: bool,
 }
 
 impl JsonlWriter {
     pub fn new(path: impl Into<PathBuf>) -> Self {
-        Self { path: path.into(), buf: String::new() }
+        Self { path: path.into(), buf: String::new(), warned_dup: false, warned_io: false }
     }
 }
 
@@ -80,7 +87,21 @@ impl MetricWriter for JsonlWriter {
         }
         let mut pairs = vec![("step", Json::num(points[0].step as f64))];
         for p in points {
-            pairs.push((p.name.as_str(), Json::num(p.value)));
+            // Two points with one name at the same step would serialize as
+            // duplicate JSON keys; dedup last-write-wins, warning once.
+            if let Some(existing) = pairs.iter_mut().find(|(k, _)| *k == p.name) {
+                if !self.warned_dup {
+                    self.warned_dup = true;
+                    eprintln!(
+                        "warning: duplicate metric '{}' at step {}; keeping the last \
+                         value (further duplicates silently deduped)",
+                        p.name, p.step
+                    );
+                }
+                existing.1 = Json::num(p.value);
+            } else {
+                pairs.push((p.name.as_str(), Json::num(p.value)));
+            }
         }
         self.buf.push_str(&Json::obj(pairs).to_string());
         self.buf.push('\n');
@@ -93,13 +114,29 @@ impl MetricWriter for JsonlWriter {
         if self.buf.is_empty() {
             return;
         }
-        if let Some(dir) = self.path.parent() {
-            let _ = std::fs::create_dir_all(dir);
-        }
-        if let Ok(mut f) =
-            std::fs::OpenOptions::new().create(true).append(true).open(&self.path)
-        {
-            let _ = f.write_all(self.buf.as_bytes());
+        let res = (|| -> std::io::Result<()> {
+            if let Some(dir) = self.path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&self.path)?;
+            f.write_all(self.buf.as_bytes())
+        })();
+        if let Err(e) = res {
+            // A broken sink must never take down the run, but it also must
+            // not fail silently: warn once, then keep dropping quietly.
+            if !self.warned_io {
+                self.warned_io = true;
+                eprintln!(
+                    "warning: failed to write metrics to {}: {e}; buffered metrics \
+                     are being dropped",
+                    self.path.display()
+                );
+            }
         }
         self.buf.clear();
     }
@@ -250,5 +287,37 @@ mod tests {
         assert_eq!(v.get("step").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(v.get("loss").unwrap().as_f64().unwrap(), 3.5);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn jsonl_writer_dedups_duplicate_keys_last_wins() {
+        let path = std::env::temp_dir().join(format!("dup_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let logger = MetricsLogger::new().with_jsonl(&path);
+            logger.log(1, &[("loss", 1.0), ("lr", 0.5), ("loss", 2.0)]);
+            logger.flush();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let line = text.lines().next().unwrap();
+        assert_eq!(line.matches("\"loss\"").count(), 1, "duplicate key emitted: {line}");
+        let v = Json::parse(line).unwrap();
+        assert_eq!(v.get("loss").unwrap().as_f64().unwrap(), 2.0, "last write wins");
+        assert_eq!(v.get("lr").unwrap().as_f64().unwrap(), 0.5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn jsonl_writer_survives_unwritable_path() {
+        // Point the writer at a directory: open() fails, the writer warns
+        // (once) and drops the buffer instead of erroring or growing.
+        let mut w = JsonlWriter::new(std::env::temp_dir());
+        w.write(&[MetricPoint { step: 1, name: "loss".into(), value: 1.0 }]);
+        w.flush();
+        assert!(w.buf.is_empty());
+        assert!(w.warned_io);
+        w.write(&[MetricPoint { step: 2, name: "loss".into(), value: 2.0 }]);
+        w.flush(); // second failure stays quiet but still clears
+        assert!(w.buf.is_empty());
     }
 }

@@ -1,0 +1,785 @@
+//! Observability substrate: structured span tracing, log-bucket latency
+//! histograms, and gauges.
+//!
+//! The [`Tracer`] records RAII spans into per-thread buffers (one
+//! uncontended `Mutex<Vec<_>>` per thread, found through a thread-local
+//! cache) and exports standard Chrome trace-event JSON, loadable in
+//! Perfetto / `chrome://tracing`. The overhead contract:
+//!
+//! * tracing **off** ([`Tracer::off`] or outside the `--profile-steps`
+//!   window): creating a span is a single relaxed atomic load — no
+//!   allocation, no clock read, no lock;
+//! * tracing **on**: one `Instant::now()` pair plus one `Vec` push under
+//!   an uncontended per-thread mutex per span.
+//!
+//! [`Histogram`] is a fixed log-bucket (growth 1.5×, 64 buckets from
+//! 1 µs) latency histogram with lock-free recording and p50/p95/p99
+//! readout; percentiles report the *upper bound* of the bucket holding
+//! the rank (so quoted percentiles never understate latency, and the top
+//! occupied bucket reports the exact observed max). [`GaugeSet`] holds
+//! last-write-wins scalar gauges (infeed queue depth, engine slot
+//! occupancy). All three export through the existing
+//! [`crate::metrics::MetricsLogger`] JSONL path.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::metrics::MetricsLogger;
+use crate::util::json::Json;
+
+pub mod summary;
+pub use summary::{summarize_file, TraceSummary};
+
+// ---------------------------------------------------------------------------
+// Trace events
+
+/// A span/gauge attribute value.
+#[derive(Debug, Clone)]
+pub enum ArgValue {
+    Num(f64),
+    Str(String),
+}
+
+impl From<f64> for ArgValue {
+    fn from(v: f64) -> Self {
+        ArgValue::Num(v)
+    }
+}
+impl From<u64> for ArgValue {
+    fn from(v: u64) -> Self {
+        ArgValue::Num(v as f64)
+    }
+}
+impl From<usize> for ArgValue {
+    fn from(v: usize) -> Self {
+        ArgValue::Num(v as f64)
+    }
+}
+impl From<u32> for ArgValue {
+    fn from(v: u32) -> Self {
+        ArgValue::Num(v as f64)
+    }
+}
+impl From<&str> for ArgValue {
+    fn from(v: &str) -> Self {
+        ArgValue::Str(v.to_string())
+    }
+}
+impl From<String> for ArgValue {
+    fn from(v: String) -> Self {
+        ArgValue::Str(v)
+    }
+}
+
+impl ArgValue {
+    fn to_json(&self) -> Json {
+        match self {
+            ArgValue::Num(n) => Json::num(*n),
+            ArgValue::Str(s) => Json::str(s.clone()),
+        }
+    }
+}
+
+/// One recorded trace event (Chrome trace-event model).
+#[derive(Debug, Clone)]
+enum EventKind {
+    /// Complete span (`ph: "X"`), duration in microseconds.
+    Complete { dur_us: f64 },
+    /// Counter sample (`ph: "C"`).
+    Counter { value: f64 },
+}
+
+#[derive(Debug, Clone)]
+struct TraceEvent {
+    name: String,
+    ts_us: f64,
+    kind: EventKind,
+    args: Vec<(&'static str, ArgValue)>,
+}
+
+/// One timeline row in the exported trace (a thread or a virtual track
+/// such as `serve/queue`).
+struct Track {
+    tid: u64,
+    name: Mutex<String>,
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+impl Track {
+    fn push(&self, ev: TraceEvent) {
+        self.events.lock().unwrap().push(ev);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tracer
+
+static NEXT_TRACER_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Per-thread cache of (tracer id -> this thread's track), so the hot
+    /// path skips the tracer-wide registry lock after the first span.
+    static THREAD_TRACKS: RefCell<Vec<(u64, Arc<Track>)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Low-overhead span tracer exporting Chrome trace-event JSON.
+///
+/// Shared as `Arc<Tracer>`; span recording goes to per-thread tracks.
+/// [`Tracer::off`] builds a permanently disarmed tracer whose every
+/// operation is a no-op (this is the default everywhere, so untraced runs
+/// pay one atomic load per would-be span).
+pub struct Tracer {
+    /// False for [`Tracer::off`]: permanently disabled, never allocates.
+    armed: bool,
+    /// Profile-window toggle (`--profile-steps N..M` flips this at step
+    /// boundaries). Meaningless when `armed` is false.
+    enabled: AtomicBool,
+    /// ts=0 reference for every exported event.
+    epoch: Instant,
+    id: u64,
+    tracks: Mutex<Vec<Arc<Track>>>,
+    /// Virtual tracks addressed by name (request timelines, counters).
+    named: Mutex<BTreeMap<String, Arc<Track>>>,
+    export_warned: AtomicBool,
+}
+
+impl Tracer {
+    /// An armed tracer, recording from the start.
+    pub fn new() -> Arc<Tracer> {
+        Arc::new(Tracer {
+            armed: true,
+            enabled: AtomicBool::new(true),
+            epoch: Instant::now(),
+            id: NEXT_TRACER_ID.fetch_add(1, Ordering::Relaxed),
+            tracks: Mutex::new(Vec::new()),
+            named: Mutex::new(BTreeMap::new()),
+            export_warned: AtomicBool::new(false),
+        })
+    }
+
+    /// The no-op tracer: every span/counter call returns immediately
+    /// without allocating. This is the default wired into the trainer and
+    /// serving engine.
+    pub fn off() -> Arc<Tracer> {
+        Arc::new(Tracer {
+            armed: false,
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            id: NEXT_TRACER_ID.fetch_add(1, Ordering::Relaxed),
+            tracks: Mutex::new(Vec::new()),
+            named: Mutex::new(BTreeMap::new()),
+            export_warned: AtomicBool::new(false),
+        })
+    }
+
+    /// True when this tracer was built with [`Tracer::new`] (a trace was
+    /// requested), regardless of the current profile window.
+    pub fn is_armed(&self) -> bool {
+        self.armed
+    }
+
+    /// True when spans are currently being recorded.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.armed && self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Toggle recording (the `--profile-steps` window). No-op on a
+    /// disarmed tracer.
+    pub fn set_enabled(&self, on: bool) {
+        if self.armed {
+            self.enabled.store(on, Ordering::Relaxed);
+        }
+    }
+
+    fn ts_us(&self, t: Instant) -> f64 {
+        t.saturating_duration_since(self.epoch).as_secs_f64() * 1e6
+    }
+
+    /// This thread's track, registering (and caching) it on first use.
+    fn thread_track(&self) -> Arc<Track> {
+        let hit = THREAD_TRACKS.with(|c| {
+            c.borrow().iter().find(|(id, _)| *id == self.id).map(|(_, t)| t.clone())
+        });
+        if let Some(t) = hit {
+            return t;
+        }
+        let name = std::thread::current()
+            .name()
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| "main".to_string());
+        let track = self.register_track(name);
+        THREAD_TRACKS.with(|c| c.borrow_mut().push((self.id, track.clone())));
+        track
+    }
+
+    fn register_track(&self, name: String) -> Arc<Track> {
+        let mut tracks = self.tracks.lock().unwrap();
+        // tid 0 is reserved for the counters track.
+        let track = Arc::new(Track {
+            tid: tracks.len() as u64 + 1,
+            name: Mutex::new(name),
+            events: Mutex::new(Vec::new()),
+        });
+        tracks.push(track.clone());
+        track
+    }
+
+    /// A virtual track addressed by name (request/counter timelines that
+    /// don't correspond to a thread).
+    fn named_track(&self, name: &str) -> Arc<Track> {
+        if let Some(t) = self.named.lock().unwrap().get(name) {
+            return t.clone();
+        }
+        let track = self.register_track(name.to_string());
+        self.named.lock().unwrap().insert(name.to_string(), track.clone());
+        track
+    }
+
+    /// Rename the calling thread's track (e.g. `host0 (d0,m1)`); threads
+    /// otherwise inherit their OS thread name. No-op when disarmed.
+    pub fn name_track(&self, name: impl Into<String>) {
+        if !self.armed {
+            return;
+        }
+        *self.thread_track().name.lock().unwrap() = name.into();
+    }
+
+    /// Open a RAII span; it records a complete (`X`) event on this
+    /// thread's track when dropped. Prefer the [`crate::span!`] macro.
+    #[inline]
+    pub fn span(&self, name: &str) -> Span<'_> {
+        if !self.is_enabled() {
+            return Span { inner: None };
+        }
+        Span {
+            inner: Some(SpanInner {
+                tracer: self,
+                name: name.to_string(),
+                start: Instant::now(),
+                args: Vec::new(),
+            }),
+        }
+    }
+
+    /// Record a complete span retroactively from a pair of instants onto
+    /// a named virtual track (per-request timelines).
+    pub fn complete(
+        &self,
+        track: &str,
+        name: impl Into<String>,
+        start: Instant,
+        end: Instant,
+        args: Vec<(&'static str, ArgValue)>,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        let ts = self.ts_us(start);
+        let dur = (self.ts_us(end) - ts).max(0.0);
+        self.named_track(track).push(TraceEvent {
+            name: name.into(),
+            ts_us: ts,
+            kind: EventKind::Complete { dur_us: dur },
+            args,
+        });
+    }
+
+    /// Record a counter (`C`) sample — gauges over time (queue depth,
+    /// slot occupancy) render as area charts in Perfetto.
+    pub fn counter(&self, name: &str, value: f64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.named_track("counters").push(TraceEvent {
+            name: name.to_string(),
+            ts_us: self.ts_us(Instant::now()),
+            kind: EventKind::Counter { value },
+            args: Vec::new(),
+        });
+    }
+
+    /// Total recorded events across all tracks.
+    pub fn event_count(&self) -> usize {
+        self.tracks.lock().unwrap().iter().map(|t| t.events.lock().unwrap().len()).sum()
+    }
+
+    /// Render the trace as a Chrome trace-event JSON value.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        let tracks = self.tracks.lock().unwrap().clone();
+        for track in &tracks {
+            let tname = track.name.lock().unwrap().clone();
+            events.push(Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num(track.tid as f64)),
+                ("args", Json::obj(vec![("name", Json::str(tname))])),
+            ]));
+            for ev in track.events.lock().unwrap().iter() {
+                let mut pairs = vec![
+                    ("name", Json::str(ev.name.clone())),
+                    ("pid", Json::num(0.0)),
+                    ("tid", Json::num(track.tid as f64)),
+                    ("ts", Json::num(ev.ts_us)),
+                ];
+                match &ev.kind {
+                    EventKind::Complete { dur_us } => {
+                        pairs.push(("ph", Json::str("X")));
+                        pairs.push(("dur", Json::num(*dur_us)));
+                        if !ev.args.is_empty() {
+                            let apairs: Vec<(&str, Json)> =
+                                ev.args.iter().map(|(k, v)| (*k, v.to_json())).collect();
+                            pairs.push(("args", Json::obj(apairs)));
+                        }
+                    }
+                    EventKind::Counter { value } => {
+                        pairs.push(("ph", Json::str("C")));
+                        pairs.push(("args", Json::obj(vec![("value", Json::num(*value))])));
+                    }
+                }
+                events.push(Json::obj(pairs));
+            }
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+        ])
+    }
+
+    /// Write the Chrome trace JSON to `path`.
+    pub fn export_chrome(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_chrome_json().to_string().as_bytes())?;
+        f.write_all(b"\n")
+    }
+
+    /// [`Self::export_chrome`], but on failure warn once to stderr
+    /// instead of erroring (mirrors the `JsonlWriter` contract: a broken
+    /// sink must never take down a training run).
+    pub fn export_or_warn(&self, path: impl AsRef<Path>) {
+        let path = path.as_ref();
+        if let Err(e) = self.export_chrome(path) {
+            if !self.export_warned.swap(true, Ordering::Relaxed) {
+                eprintln!("warning: failed to write trace to {}: {e}", path.display());
+            }
+        }
+    }
+}
+
+/// RAII span guard returned by [`Tracer::span`] / [`crate::span!`].
+/// Records a complete event on drop; a disabled tracer returns an inert
+/// guard that allocates nothing.
+pub struct Span<'a> {
+    inner: Option<SpanInner<'a>>,
+}
+
+struct SpanInner<'a> {
+    tracer: &'a Tracer,
+    name: String,
+    start: Instant,
+    args: Vec<(&'static str, ArgValue)>,
+}
+
+impl Span<'_> {
+    /// Attach a key/value attribute. The value conversion only runs when
+    /// the span is live, so `&str` args don't allocate while tracing is
+    /// off.
+    pub fn arg(mut self, key: &'static str, value: impl Into<ArgValue>) -> Self {
+        if let Some(inner) = &mut self.inner {
+            inner.args.push((key, value.into()));
+        }
+        self
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        let Some(inner) = self.inner.take() else { return };
+        let ts = inner.tracer.ts_us(inner.start);
+        let dur = (inner.tracer.ts_us(Instant::now()) - ts).max(0.0);
+        inner.tracer.thread_track().push(TraceEvent {
+            name: inner.name,
+            ts_us: ts,
+            kind: EventKind::Complete { dur_us: dur },
+            args: inner.args,
+        });
+    }
+}
+
+/// Open a RAII span on a [`Tracer`]:
+/// `span!(tracer, "train/step")` or
+/// `span!(tracer, "coll/all_reduce", { "elems" => n, "op" => "sum" })`.
+#[macro_export]
+macro_rules! span {
+    ($tracer:expr, $name:expr) => {
+        $tracer.span($name)
+    };
+    ($tracer:expr, $name:expr, { $($k:literal => $v:expr),* $(,)? }) => {
+        $tracer.span($name)$(.arg($k, $v))*
+    };
+}
+
+/// Parse a `--profile-steps` window: `N..M` traces steps `N <= s < M`;
+/// a bare `N` traces just that step.
+pub fn parse_profile_steps(s: &str) -> anyhow::Result<(u64, u64)> {
+    let parse =
+        |t: &str| t.trim().parse::<u64>().map_err(|_| anyhow::anyhow!("bad step '{t}'"));
+    if let Some((a, b)) = s.split_once("..") {
+        let (a, b) = (parse(a)?, parse(b)?);
+        anyhow::ensure!(b > a, "--profile-steps expects N..M with M > N, got '{s}'");
+        Ok((a, b))
+    } else {
+        let a = parse(s)?;
+        Ok((a, a + 1))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histogram
+
+const HIST_BUCKETS: usize = 64;
+const HIST_GROWTH: f64 = 1.5;
+/// Lower edge of bucket 0, in milliseconds (1 µs).
+const HIST_FLOOR_MS: f64 = 1e-3;
+
+/// Fixed log-bucket latency histogram (growth 1.5×, 64 buckets from 1 µs
+/// to ~5×10^7 s — far past anything a step or request can take).
+///
+/// Recording is lock-free (one atomic add per sample); clones share
+/// storage. `percentile` returns the upper bound of the bucket containing
+/// the requested rank, except in the histogram's top occupied bucket where
+/// the exact observed max is returned (so p99 never exceeds max).
+#[derive(Clone)]
+pub struct Histogram {
+    inner: Arc<HistInner>,
+}
+
+struct HistInner {
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            inner: Arc::new(HistInner {
+                counts: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+                count: AtomicU64::new(0),
+                sum_us: AtomicU64::new(0),
+                max_us: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    fn bucket_index(v_ms: f64) -> usize {
+        if v_ms <= HIST_FLOOR_MS {
+            return 0;
+        }
+        let idx = ((v_ms / HIST_FLOOR_MS).ln() / HIST_GROWTH.ln()).floor() as usize;
+        idx.min(HIST_BUCKETS - 1)
+    }
+
+    /// Upper bound of bucket `i`, in milliseconds.
+    fn bucket_upper_ms(i: usize) -> f64 {
+        HIST_FLOOR_MS * HIST_GROWTH.powi(i as i32 + 1)
+    }
+
+    pub fn record_ms(&self, v_ms: f64) {
+        if !v_ms.is_finite() || v_ms < 0.0 {
+            return;
+        }
+        let i = Self::bucket_index(v_ms);
+        self.inner.counts[i].fetch_add(1, Ordering::Relaxed);
+        self.inner.count.fetch_add(1, Ordering::Relaxed);
+        let us = (v_ms * 1e3) as u64;
+        self.inner.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.inner.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn record_seconds(&self, v_s: f64) {
+        self.record_ms(v_s * 1e3);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.inner.sum_us.load(Ordering::Relaxed) as f64 / 1e3 / n as f64
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.inner.max_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Value (ms) at quantile `q` in [0, 1]: the upper bound of the
+    /// bucket holding the rank, clamped to the observed max.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for i in 0..HIST_BUCKETS {
+            seen += self.inner.counts[i].load(Ordering::Relaxed);
+            if seen >= rank {
+                return Self::bucket_upper_ms(i).min(self.max_ms());
+            }
+        }
+        self.max_ms()
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    /// Emit `{prefix}_p50/_p95/_p99/_mean_ms/_count` at `step`.
+    pub fn log_to(&self, logger: &MetricsLogger, step: u64, prefix: &str) {
+        if self.count() == 0 {
+            return;
+        }
+        let names = [
+            format!("{prefix}_p50"),
+            format!("{prefix}_p95"),
+            format!("{prefix}_p99"),
+            format!("{prefix}_mean_ms"),
+            format!("{prefix}_count"),
+        ];
+        let values =
+            [self.p50(), self.p95(), self.p99(), self.mean_ms(), self.count() as f64];
+        let pairs: Vec<(&str, f64)> =
+            names.iter().map(|n| n.as_str()).zip(values).collect();
+        logger.log(step, &pairs);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gauges
+
+/// Last-write-wins named scalar gauges (queue depth, slot occupancy).
+/// Arc-backed: clones share storage, like [`crate::metrics::CounterSet`].
+#[derive(Clone, Default)]
+pub struct GaugeSet {
+    inner: Arc<Mutex<BTreeMap<String, f64>>>,
+}
+
+impl GaugeSet {
+    pub fn new() -> GaugeSet {
+        GaugeSet::default()
+    }
+
+    pub fn set(&self, name: &str, v: f64) {
+        self.inner.lock().unwrap().insert(name.to_string(), v);
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().get(name).copied()
+    }
+
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        self.inner.lock().unwrap().iter().map(|(k, &v)| (k.clone(), v)).collect()
+    }
+
+    /// Emit every gauge as a metric point at `step`.
+    pub fn log_to(&self, logger: &MetricsLogger, step: u64) {
+        let snap = self.snapshot();
+        if snap.is_empty() {
+            return;
+        }
+        let values: Vec<(&str, f64)> =
+            snap.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        logger.log(step, &values);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::threads::parallel_map;
+
+    #[test]
+    fn histogram_percentile_bounds() {
+        let h = Histogram::new();
+        for v in 1..=100 {
+            h.record_ms(v as f64);
+        }
+        assert_eq!(h.count(), 100);
+        // Upper-bound contract: true_pXX <= reported <= true_pXX * growth.
+        let p50 = h.p50();
+        assert!((50.0..=50.0 * HIST_GROWTH).contains(&p50), "p50={p50}");
+        let p95 = h.p95();
+        assert!((95.0..=95.0 * HIST_GROWTH).contains(&p95), "p95={p95}");
+        let p99 = h.p99();
+        assert!((99.0..=100.0).contains(&p99), "p99={p99} (clamped to max)");
+        assert_eq!(h.max_ms(), 100.0);
+        assert!((h.mean_ms() - 50.5).abs() < 0.01, "mean={}", h.mean_ms());
+        // Percentiles never exceed the observed max.
+        assert!(h.percentile(1.0) <= h.max_ms());
+    }
+
+    #[test]
+    fn histogram_empty_and_tiny_values() {
+        let h = Histogram::new();
+        assert_eq!(h.p99(), 0.0);
+        h.record_ms(0.0);
+        h.record_ms(1e-9);
+        assert_eq!(h.count(), 2);
+        assert!(h.p50() <= Histogram::bucket_upper_ms(0));
+    }
+
+    #[test]
+    fn histogram_concurrent_recording() {
+        let h = Histogram::new();
+        let hc = h.clone();
+        parallel_map(8, 8, move |i| {
+            for k in 0..250 {
+                hc.record_ms((1 + (i * 250 + k) % 40) as f64);
+            }
+        });
+        assert_eq!(h.count(), 2000);
+        assert!(h.p99() >= 39.0);
+    }
+
+    #[test]
+    fn tracer_off_records_nothing() {
+        let t = Tracer::off();
+        {
+            let _s = span!(t, "work", { "k" => 1u64 });
+        }
+        t.counter("g", 1.0);
+        assert!(!t.is_enabled());
+        assert_eq!(t.event_count(), 0);
+        t.set_enabled(true); // no-op on a disarmed tracer
+        assert!(!t.is_enabled());
+    }
+
+    #[test]
+    fn tracer_records_and_exports_chrome_json() {
+        let t = Tracer::new();
+        t.name_track("test-main");
+        {
+            let _outer = span!(t, "outer", { "step" => 3u64 });
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            {
+                let _inner = span!(t, "inner", { "op" => "sum", "elems" => 128usize });
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        t.counter("queue_depth", 4.0);
+        let now = Instant::now();
+        t.complete("virtual", "req 1", now, now, vec![("id", ArgValue::Num(1.0))]);
+        assert_eq!(t.event_count(), 4);
+
+        let path = std::env::temp_dir().join(format!("trace_{}.json", std::process::id()));
+        t.export_chrome(&path).unwrap();
+        let v = Json::parse_file(&path).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // 4 events + >= 2 thread_name metadata records
+        assert!(evs.len() >= 6, "got {} events", evs.len());
+        let mut saw_inner = false;
+        for e in evs {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            match ph {
+                "X" => {
+                    assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+                    assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+                    if e.get("name").unwrap().as_str() == Some("inner") {
+                        saw_inner = true;
+                        let args = e.get("args").unwrap();
+                        assert_eq!(args.get("op").unwrap().as_str(), Some("sum"));
+                        assert_eq!(args.get("elems").unwrap().as_f64(), Some(128.0));
+                    }
+                }
+                "C" => {
+                    assert_eq!(e.get("args").unwrap().get("value").unwrap().as_f64(), Some(4.0));
+                }
+                "M" => {}
+                other => panic!("unexpected phase {other}"),
+            }
+        }
+        assert!(saw_inner);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tracer_concurrent_span_recording() {
+        let t = Tracer::new();
+        let tc = t.clone();
+        parallel_map(8, 8, move |i| {
+            for k in 0..100 {
+                let _s = span!(tc, "work", { "host" => i, "k" => k });
+            }
+        });
+        assert_eq!(t.event_count(), 800);
+        // 8 worker tracks, each with 100 spans; export stays parseable.
+        let v = t.to_chrome_json();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.iter().filter(|e| e.get("ph").unwrap().as_str() == Some("X")).count(), 800);
+    }
+
+    #[test]
+    fn profile_window_gates_recording() {
+        let t = Tracer::new();
+        t.set_enabled(false);
+        {
+            let _s = span!(t, "hidden");
+        }
+        assert_eq!(t.event_count(), 0);
+        t.set_enabled(true);
+        {
+            let _s = span!(t, "visible");
+        }
+        assert_eq!(t.event_count(), 1);
+    }
+
+    #[test]
+    fn parse_profile_steps_forms() {
+        assert_eq!(parse_profile_steps("2..5").unwrap(), (2, 5));
+        assert_eq!(parse_profile_steps("7").unwrap(), (7, 8));
+        assert!(parse_profile_steps("5..2").is_err());
+        assert!(parse_profile_steps("x..y").is_err());
+    }
+
+    #[test]
+    fn gauges_last_write_wins() {
+        let g = GaugeSet::new();
+        g.set("depth", 3.0);
+        g.set("depth", 1.0);
+        assert_eq!(g.get("depth"), Some(1.0));
+        assert_eq!(g.snapshot(), vec![("depth".to_string(), 1.0)]);
+    }
+}

@@ -1,0 +1,333 @@
+//! Bottleneck attribution over exported Chrome traces: per-span
+//! self-time aggregation plus an infeed-bound / compute-bound /
+//! comm-bound verdict. Backs the `t5x trace-summary` subcommand.
+//!
+//! Self-time is wall duration minus the duration of directly nested
+//! child spans on the same track, so a `train/grad_sync` wrapper that
+//! spends 95% of its time inside `coll/all_reduce` children contributes
+//! only its host-side overhead — the collective time is attributed to
+//! the collective spans themselves.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Aggregated statistics for one span name.
+#[derive(Debug, Clone)]
+pub struct SpanAgg {
+    pub name: String,
+    pub count: u64,
+    pub total_ms: f64,
+    pub self_ms: f64,
+}
+
+/// Result of analysing one trace file.
+#[derive(Debug)]
+pub struct TraceSummary {
+    /// Per-name aggregates, sorted by self-time descending.
+    pub spans: Vec<SpanAgg>,
+    /// Final sample per counter name (`C` events).
+    pub counters: BTreeMap<String, f64>,
+    pub total_events: usize,
+    /// Self-time totals per bottleneck category, in ms.
+    pub infeed_ms: f64,
+    pub compute_ms: f64,
+    pub comm_ms: f64,
+    pub other_ms: f64,
+    /// `infeed-bound`, `comm-bound`, or `compute-bound`.
+    pub verdict: &'static str,
+}
+
+/// Map a span name onto a bottleneck category. The taxonomy matches the
+/// instrumentation in trainer/infeed/collectives/engine (see the
+/// "Observability" section in lib.rs).
+fn category(name: &str) -> &'static str {
+    if name.contains("infeed") {
+        "infeed"
+    } else if name.starts_with("coll/")
+        || name.starts_with("train/grad_sync")
+        || name.starts_with("train/broadcast")
+    {
+        "comm"
+    } else if name.starts_with("seg/")
+        || name.starts_with("train/execute")
+        || name.starts_with("train/optimizer")
+        || name.starts_with("serve/prefill")
+        || name.starts_with("serve/decode")
+        || name.starts_with("serve/rescore")
+        || name.starts_with("eval/")
+    {
+        "compute"
+    } else {
+        "other"
+    }
+}
+
+/// One complete span, normalized from either `X` events or matched
+/// `B`/`E` pairs.
+struct FlatSpan {
+    name: String,
+    ts: f64,
+    dur: f64,
+}
+
+/// Analyse a Chrome trace-event JSON file.
+pub fn summarize_file(path: impl AsRef<Path>) -> anyhow::Result<TraceSummary> {
+    let v = Json::parse_file(path.as_ref())?;
+    summarize(&v)
+}
+
+/// Analyse a parsed Chrome trace-event JSON value. Accepts either the
+/// `{"traceEvents": [...]}` envelope or a bare event array.
+pub fn summarize(trace: &Json) -> anyhow::Result<TraceSummary> {
+    let events = match trace.get("traceEvents") {
+        Some(e) => e.as_arr(),
+        None => trace.as_arr(),
+    }
+    .ok_or_else(|| anyhow::anyhow!("not a Chrome trace: no traceEvents array"))?;
+
+    // Bucket complete spans per (pid, tid) track; match B/E pairs with a
+    // per-track stack for traces from other producers.
+    let mut tracks: BTreeMap<(i64, i64), Vec<FlatSpan>> = BTreeMap::new();
+    let mut open: BTreeMap<(i64, i64), Vec<FlatSpan>> = BTreeMap::new();
+    let mut counters: BTreeMap<String, (f64, f64)> = BTreeMap::new(); // name -> (ts, value)
+    let mut total_events = 0usize;
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        let name = ev.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string();
+        let ts = ev.get("ts").and_then(|t| t.as_f64()).unwrap_or(0.0);
+        let key = (
+            ev.get("pid").and_then(|p| p.as_i64()).unwrap_or(0),
+            ev.get("tid").and_then(|t| t.as_i64()).unwrap_or(0),
+        );
+        match ph {
+            "X" => {
+                let dur = ev.get("dur").and_then(|d| d.as_f64()).unwrap_or(0.0);
+                tracks.entry(key).or_default().push(FlatSpan { name, ts, dur });
+                total_events += 1;
+            }
+            "B" => {
+                open.entry(key).or_default().push(FlatSpan { name, ts, dur: 0.0 });
+                total_events += 1;
+            }
+            "E" => {
+                if let Some(mut s) = open.get_mut(&key).and_then(|st| st.pop()) {
+                    s.dur = (ts - s.ts).max(0.0);
+                    tracks.entry(key).or_default().push(s);
+                }
+            }
+            "C" => {
+                let value = ev
+                    .get("args")
+                    .and_then(|a| a.get("value"))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0);
+                let e = counters.entry(name).or_insert((f64::MIN, 0.0));
+                if ts >= e.0 {
+                    *e = (ts, value);
+                }
+                total_events += 1;
+            }
+            _ => {}
+        }
+    }
+
+    // Self-time: per track, sweep spans in (ts asc, dur desc) order with
+    // an enclosing-span stack; each span's duration is subtracted from
+    // its direct parent's self-time.
+    let mut agg: BTreeMap<String, SpanAgg> = BTreeMap::new();
+    for spans in tracks.values_mut() {
+        spans.sort_by(|a, b| {
+            a.ts.partial_cmp(&b.ts)
+                .unwrap()
+                .then(b.dur.partial_cmp(&a.dur).unwrap())
+        });
+        let mut self_us: Vec<f64> = spans.iter().map(|s| s.dur).collect();
+        let mut stack: Vec<(f64, usize)> = Vec::new(); // (end_ts, index)
+        for (i, s) in spans.iter().enumerate() {
+            while let Some(&(end, _)) = stack.last() {
+                if end <= s.ts {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&(_, parent)) = stack.last() {
+                self_us[parent] -= s.dur;
+            }
+            stack.push((s.ts + s.dur, i));
+        }
+        for (s, self_dur) in spans.iter().zip(&self_us) {
+            let e = agg.entry(s.name.clone()).or_insert_with(|| SpanAgg {
+                name: s.name.clone(),
+                count: 0,
+                total_ms: 0.0,
+                self_ms: 0.0,
+            });
+            e.count += 1;
+            e.total_ms += s.dur / 1e3;
+            e.self_ms += self_dur.max(0.0) / 1e3;
+        }
+    }
+
+    let mut spans: Vec<SpanAgg> = agg.into_values().collect();
+    spans.sort_by(|a, b| b.self_ms.partial_cmp(&a.self_ms).unwrap());
+
+    let (mut infeed_ms, mut compute_ms, mut comm_ms, mut other_ms) = (0.0, 0.0, 0.0, 0.0);
+    for s in &spans {
+        match category(&s.name) {
+            "infeed" => infeed_ms += s.self_ms,
+            "compute" => compute_ms += s.self_ms,
+            "comm" => comm_ms += s.self_ms,
+            _ => other_ms += s.self_ms,
+        }
+    }
+    let counters: BTreeMap<String, f64> =
+        counters.into_iter().map(|(k, (_, v))| (k, v)).collect();
+    let starved = counters.get("train/infeed_starved_steps").copied().unwrap_or(0.0);
+    let verdict = if starved > 0.0 || infeed_ms > compute_ms.max(comm_ms) {
+        "infeed-bound"
+    } else if comm_ms > compute_ms {
+        "comm-bound"
+    } else {
+        "compute-bound"
+    };
+    Ok(TraceSummary {
+        spans,
+        counters,
+        total_events,
+        infeed_ms,
+        compute_ms,
+        comm_ms,
+        other_ms,
+        verdict,
+    })
+}
+
+impl TraceSummary {
+    /// Print the top-k spans by self-time plus the category totals and
+    /// the bottleneck verdict.
+    pub fn print(&self, top_k: usize) {
+        println!("{} events, {} distinct span names", self.total_events, self.spans.len());
+        println!(
+            "{:<36} {:>8} {:>12} {:>12}",
+            "span (top by self-time)", "count", "total ms", "self ms"
+        );
+        for s in self.spans.iter().take(top_k) {
+            println!(
+                "{:<36} {:>8} {:>12.3} {:>12.3}",
+                s.name, s.count, s.total_ms, s.self_ms
+            );
+        }
+        println!(
+            "category self-time: infeed={:.3}ms compute={:.3}ms comm={:.3}ms other={:.3}ms",
+            self.infeed_ms, self.compute_ms, self.comm_ms, self.other_ms
+        );
+        if let Some(starved) =
+            self.counters.get("train/infeed_starved_steps").filter(|v| **v > 0.0)
+        {
+            println!("infeed starved steps: {starved}");
+        }
+        println!("verdict: {}", self.verdict);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn x(name: &str, ts: f64, dur: f64, tid: f64) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(name)),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(ts)),
+            ("dur", Json::num(dur)),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(tid)),
+        ])
+    }
+
+    fn counter(name: &str, ts: f64, value: f64) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(name)),
+            ("ph", Json::str("C")),
+            ("ts", Json::num(ts)),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(0.0)),
+            ("args", Json::obj(vec![("value", Json::num(value))])),
+        ])
+    }
+
+    fn envelope(evs: Vec<Json>) -> Json {
+        Json::obj(vec![("traceEvents", Json::Arr(evs))])
+    }
+
+    #[test]
+    fn self_time_subtracts_nested_children() {
+        // step [0, 1000) containing execute [100, 700) containing
+        // coll/all_reduce [200, 600).
+        let t = envelope(vec![
+            x("train/step", 0.0, 1000.0, 1.0),
+            x("train/execute", 100.0, 600.0, 1.0),
+            x("coll/all_reduce", 200.0, 400.0, 1.0),
+        ]);
+        let s = summarize(&t).unwrap();
+        let by: BTreeMap<&str, &SpanAgg> =
+            s.spans.iter().map(|a| (a.name.as_str(), a)).collect();
+        assert!((by["train/step"].self_ms - 0.4).abs() < 1e-9); // 1000-600 us
+        assert!((by["train/execute"].self_ms - 0.2).abs() < 1e-9); // 600-400 us
+        assert!((by["coll/all_reduce"].self_ms - 0.4).abs() < 1e-9);
+        assert!((by["coll/all_reduce"].total_ms - 0.4).abs() < 1e-9);
+        assert_eq!(s.verdict, "comm-bound"); // comm 0.4 > compute 0.2
+    }
+
+    #[test]
+    fn verdict_compute_vs_infeed() {
+        let normal = envelope(vec![
+            x("train/infeed", 0.0, 10.0, 1.0),
+            x("train/execute", 10.0, 900.0, 1.0),
+            x("coll/all_reduce", 910.0, 50.0, 1.0),
+        ]);
+        assert_eq!(summarize(&normal).unwrap().verdict, "compute-bound");
+
+        // Starvation counter forces the infeed verdict even if span time
+        // is dominated elsewhere (blocked recv time hides in train/infeed).
+        let starved = envelope(vec![
+            x("train/execute", 10.0, 900.0, 1.0),
+            counter("train/infeed_starved_steps", 950.0, 3.0),
+        ]);
+        assert_eq!(summarize(&starved).unwrap().verdict, "infeed-bound");
+    }
+
+    #[test]
+    fn counters_take_last_sample_and_be_pairs_match() {
+        let t = envelope(vec![
+            counter("serve/queue_depth", 10.0, 5.0),
+            counter("serve/queue_depth", 20.0, 2.0),
+            Json::obj(vec![
+                ("name", Json::str("legacy")),
+                ("ph", Json::str("B")),
+                ("ts", Json::num(0.0)),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num(7.0)),
+            ]),
+            Json::obj(vec![
+                ("name", Json::str("legacy")),
+                ("ph", Json::str("E")),
+                ("ts", Json::num(500.0)),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num(7.0)),
+            ]),
+        ]);
+        let s = summarize(&t).unwrap();
+        assert_eq!(s.counters.get("serve/queue_depth"), Some(&2.0));
+        let legacy = s.spans.iter().find(|a| a.name == "legacy").unwrap();
+        assert!((legacy.total_ms - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_non_trace_json() {
+        assert!(summarize(&Json::num(3.0)).is_err());
+    }
+}

@@ -89,6 +89,13 @@ pub struct Infeed {
     /// instead of reporting a clean end-of-stream, so a data bug fails the
     /// run loudly rather than producing a silent zero-step "success".
     failed: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    /// Tracer slot shared with the (already running) producer threads;
+    /// [`Infeed::attach_tracer`] arms per-batch `infeed/batch` spans.
+    tracer: std::sync::Arc<std::sync::OnceLock<std::sync::Arc<crate::obs::Tracer>>>,
+    /// Per host: batches currently sitting in the prefetch pipe
+    /// (producer increments after send, consumer decrements on recv) —
+    /// the `train/infeed_queue_depth` gauge.
+    depths: Vec<std::sync::Arc<std::sync::atomic::AtomicI64>>,
 }
 
 impl Infeed {
@@ -128,6 +135,9 @@ impl Infeed {
         let mut states_out = Vec::with_capacity(num_hosts);
         let batch = m.batch();
         let failed = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let tracer: std::sync::Arc<std::sync::OnceLock<std::sync::Arc<crate::obs::Tracer>>> =
+            std::sync::Arc::new(std::sync::OnceLock::new());
+        let mut depths = Vec::with_capacity(num_hosts);
         for host in 0..num_hosts {
             let (tx, rx) = Pipe::bounded(prefetch.max(1));
             let mut stream = make_stream(host)
@@ -141,6 +151,9 @@ impl Infeed {
             states_out.push(Mutex::new(start_state));
             let manifest = m.clone();
             let failed_flag = failed.clone();
+            let tracer_slot = tracer.clone();
+            let depth = std::sync::Arc::new(std::sync::atomic::AtomicI64::new(0));
+            depths.push(depth.clone());
             std::thread::Builder::new()
                 .name(format!("infeed-{host}"))
                 .spawn(move || {
@@ -149,7 +162,12 @@ impl Infeed {
                     // observing the disconnect always sees the flag.
                     let tx_ref = &tx;
                     let produce = std::panic::AssertUnwindSafe(move || {
+                        let track = format!("infeed-{host}");
                         let mut buf = Vec::with_capacity(batch);
+                        // Per-batch span window: stream pulls + assembly +
+                        // state snapshot (send-side backpressure excluded,
+                        // so span time is real producer work).
+                        let mut batch_t0 = std::time::Instant::now();
                         while let Some(ex) = stream.next() {
                             buf.push(ex);
                             if buf.len() == batch {
@@ -158,9 +176,20 @@ impl Infeed {
                                 // Snapshot at the batch boundary: the state
                                 // a consumer resumes from after this batch.
                                 let state = stream.state().0;
+                                if let Some(t) = tracer_slot.get() {
+                                    t.complete(
+                                        &track,
+                                        "infeed/batch",
+                                        batch_t0,
+                                        std::time::Instant::now(),
+                                        vec![("host", crate::obs::ArgValue::Num(host as f64))],
+                                    );
+                                }
                                 if !tx_ref.send((assembled, state)) {
                                     return; // trainer hung up
                                 }
+                                depth.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                                batch_t0 = std::time::Instant::now();
                             }
                         }
                         // drop partial tail batch (seqio drop_remainder=True)
@@ -173,7 +202,20 @@ impl Infeed {
                 .expect("spawn infeed thread");
             receivers.push(Mutex::new(rx));
         }
-        Ok(Infeed { receivers, states: states_out, failed })
+        Ok(Infeed { receivers, states: states_out, failed, tracer, depths })
+    }
+
+    /// Arm per-batch producer spans. Callable after the producer threads
+    /// are already running (the trainer attaches its tracer at train
+    /// start); first writer wins.
+    pub fn attach_tracer(&self, t: std::sync::Arc<crate::obs::Tracer>) {
+        let _ = self.tracer.set(t);
+    }
+
+    /// Batches currently buffered in host `h`'s prefetch pipe (the
+    /// `train/infeed_queue_depth` gauge; approximate during handoff).
+    pub fn queue_depth(&self, host: usize) -> i64 {
+        self.depths[host].load(std::sync::atomic::Ordering::Relaxed).max(0)
     }
 
     /// Blocking fetch of host `h`'s next batch; None when the stream ends
@@ -183,9 +225,46 @@ impl Infeed {
     /// [`Infeed::failed`] after the loop; the trainer turns it into an
     /// error instead of a silent zero-step "success".
     pub fn next(&self, host: usize) -> Option<Vec<HostTensor>> {
-        let item = self.receivers[host].lock().unwrap().recv();
+        self.next_inner(host, None)
+    }
+
+    /// [`Infeed::next`], counting consumer stalls: whenever the prefetch
+    /// pipe is empty and this call has to block for a producer (the
+    /// "infeed-bound" signature), `train/infeed_starved_steps` is
+    /// incremented on `counters`. End-of-stream blocking is not counted.
+    pub fn next_counted(
+        &self,
+        host: usize,
+        counters: &crate::metrics::CounterSet,
+    ) -> Option<Vec<HostTensor>> {
+        self.next_inner(host, Some(counters))
+    }
+
+    fn next_inner(
+        &self,
+        host: usize,
+        counters: Option<&crate::metrics::CounterSet>,
+    ) -> Option<Vec<HostTensor>> {
+        let rx = self.receivers[host].lock().unwrap();
+        let item = match rx.try_recv() {
+            Some(it) => Some(it),
+            None => {
+                // Pipe empty: block on the producer. Only count it as a
+                // starved step if a batch eventually arrives (a clean
+                // end-of-stream wait is not starvation).
+                let it = rx.recv();
+                if it.is_some() {
+                    if let Some(c) = counters {
+                        c.inc("train/infeed_starved_steps");
+                    }
+                }
+                it
+            }
+        };
+        drop(rx);
         match item {
             Some((batch, state)) => {
+                self.depths[host].fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
                 *self.states[host].lock().unwrap() = state;
                 Some(batch)
             }
@@ -285,6 +364,32 @@ mod tests {
             }
             assert!(infeed.next(host).is_none());
         }
+    }
+
+    #[test]
+    fn starvation_counter_counts_blocking_pulls() {
+        let arts = Artifacts::load_default().unwrap();
+        let m = arts.model("t5-nano-dec").unwrap();
+        let b = m.batch();
+        // Deliberately slow source: every example costs 5ms, so the
+        // consumer always drains the pipe and blocks.
+        let infeed = Infeed::spawn(m, 1, 1, |_| {
+            let m2 = m.clone();
+            Dataset::new((0..(b * 2) as i32).map(move |i| {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                converted_example(&m2, i)
+            }))
+        });
+        let c = crate::metrics::CounterSet::new();
+        assert!(infeed.next_counted(0, &c).is_some());
+        assert!(infeed.next_counted(0, &c).is_some());
+        assert!(infeed.next_counted(0, &c).is_none(), "stream ends after 2 batches");
+        assert!(
+            c.get("train/infeed_starved_steps") >= 1,
+            "slow producer must register starvation, got {}",
+            c.get("train/infeed_starved_steps")
+        );
+        assert_eq!(infeed.queue_depth(0), 0);
     }
 
     #[test]

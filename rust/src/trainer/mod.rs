@@ -193,6 +193,14 @@ pub struct TrainerConfig {
     /// to `Auto`, which upgrades to `Block` whenever the artifacts support
     /// the mesh's model degree.
     pub exec_mode: ExecMode,
+    /// Write a Chrome trace-event JSON profile here after training
+    /// (`--trace-out`, gin `trainer.trace_out`). None = tracing disarmed
+    /// (the no-op tracer: no allocation on the hot path).
+    pub trace_out: Option<PathBuf>,
+    /// Only record spans for steps in `[N, M)` (`--profile-steps N..M`);
+    /// None = trace every step. Ignored unless `trace_out` is set (or a
+    /// tracer was attached via [`Trainer::with_tracer`]).
+    pub profile_steps: Option<(u64, u64)>,
 }
 
 impl TrainerConfig {
@@ -211,6 +219,8 @@ impl TrainerConfig {
             grad_clip_norm: None,
             weight_decay: None,
             exec_mode: ExecMode::Gather,
+            trace_out: None,
+            profile_steps: None,
         }
     }
 
@@ -274,6 +284,10 @@ impl PhaseTimer {
         self.0.load(Ordering::Relaxed) as f64 / 1e6
     }
 
+    pub fn micros(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
     fn reset(&self) {
         self.0.store(0, Ordering::Relaxed);
     }
@@ -311,6 +325,55 @@ impl TimingBreakdown {
         ];
         rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         rows
+    }
+
+    /// Raw cumulative micros per phase (infeed, execute, coll-data,
+    /// coll-model, optimizer) — deltas of consecutive snapshots give the
+    /// per-step phase breakdown.
+    pub fn snapshot_micros(&self) -> [u64; 5] {
+        [
+            self.infeed.micros(),
+            self.execute.micros(),
+            self.collectives_data.micros(),
+            self.collectives_model.micros(),
+            self.optimizer.micros(),
+        ]
+    }
+}
+
+/// Per-step phase-duration histograms, in milliseconds. Samples are
+/// deltas of the shared [`TimingBreakdown`] observed by rank 0 at its
+/// step boundaries — i.e. *summed over hosts* (on a 1×1 mesh they are
+/// exact per-step durations). Cumulative across `train()` calls.
+#[derive(Default, Clone)]
+pub struct PhaseHistograms {
+    pub infeed: crate::obs::Histogram,
+    pub execute: crate::obs::Histogram,
+    pub collectives_data: crate::obs::Histogram,
+    pub collectives_model: crate::obs::Histogram,
+    pub optimizer: crate::obs::Histogram,
+    /// Rank-0 wall time per full step.
+    pub step_ms: crate::obs::Histogram,
+}
+
+impl PhaseHistograms {
+    fn record_deltas_ms(&self, d: &[f64; 5]) {
+        self.infeed.record_ms(d[0]);
+        self.execute.record_ms(d[1]);
+        self.collectives_data.record_ms(d[2]);
+        self.collectives_model.record_ms(d[3]);
+        self.optimizer.record_ms(d[4]);
+    }
+
+    /// Emit p50/p95/p99/mean/count for every phase at `step` (the
+    /// end-of-run `train/phase_*_ms` percentile block).
+    pub fn log_to(&self, logger: &MetricsLogger, step: u64) {
+        self.infeed.log_to(logger, step, "train/phase_infeed_ms");
+        self.execute.log_to(logger, step, "train/phase_execute_ms");
+        self.collectives_data.log_to(logger, step, "train/phase_coll_data_ms");
+        self.collectives_model.log_to(logger, step, "train/phase_coll_model_ms");
+        self.optimizer.log_to(logger, step, "train/phase_optimizer_ms");
+        self.step_ms.log_to(logger, step, "train/step_ms");
     }
 }
 
@@ -384,6 +447,12 @@ pub struct Trainer {
     /// Cumulative training counters, including per-axis collective traffic
     /// (`train/data_axis_bytes`, `train/model_axis_bytes`, `.../ops`).
     pub counters: CounterSet,
+    /// Span tracer: armed iff `config.trace_out` is set or a tracer was
+    /// attached via [`Trainer::with_tracer`]; the disarmed default is a
+    /// no-op (see the lib.rs Observability overhead contract).
+    pub tracer: Arc<crate::obs::Tracer>,
+    /// Per-step phase-duration histograms (`train/phase_*_ms` p50/p99).
+    pub phase_hist: PhaseHistograms,
 }
 
 impl Trainer {
@@ -472,6 +541,13 @@ impl Trainer {
                 })
             })
             .collect();
+        let tracer = if config.trace_out.is_some() {
+            let t = crate::obs::Tracer::new();
+            colls.set_tracer(&t);
+            t
+        } else {
+            crate::obs::Tracer::off()
+        };
         Ok(Trainer {
             manifest,
             layout,
@@ -488,6 +564,8 @@ impl Trainer {
             logger: Arc::new(MetricsLogger::new()),
             timing: TimingBreakdown::default(),
             counters: CounterSet::new(),
+            tracer,
+            phase_hist: PhaseHistograms::default(),
         })
     }
 
@@ -505,6 +583,15 @@ impl Trainer {
 
     pub fn with_logger(mut self, logger: MetricsLogger) -> Self {
         self.logger = Arc::new(logger);
+        self
+    }
+
+    /// Attach an externally owned tracer (benches/tests that want spans
+    /// without a `trace_out` file); also wires it into the collective
+    /// groups.
+    pub fn with_tracer(mut self, tracer: Arc<crate::obs::Tracer>) -> Self {
+        self.colls.set_tracer(&tracer);
+        self.tracer = tracer;
         self
     }
 
@@ -581,6 +668,13 @@ impl Trainer {
         let t0 = Instant::now();
         self.colls.reset_stats();
         self.timing.reset();
+        if self.tracer.is_armed() {
+            // Default-enabled unless a profile window narrows it per step.
+            self.tracer.set_enabled(self.config.profile_steps.is_none());
+            if let BatchSource::Infeed(inf) = source {
+                inf.attach_tracer(self.tracer.clone());
+            }
+        }
 
         let errors: Vec<Option<String>> = run_ranks(n, |rank| {
             match self.host_loop(rank, source, &history, &stop_step) {
@@ -613,7 +707,20 @@ impl Trainer {
         self.counters
             .set_max("train/peak_param_floats", self.peak_param_floats.load(Ordering::Relaxed));
         self.counters.log_to(&self.logger, final_step);
+        self.phase_hist.log_to(&self.logger, final_step);
         self.logger.flush();
+        if self.tracer.is_armed() {
+            // Trace-summary reads the starvation verdict off the trace
+            // itself, so mirror the counter there before export.
+            self.tracer.set_enabled(true);
+            self.tracer.counter(
+                "train/infeed_starved_steps",
+                self.counters.get("train/infeed_starved_steps") as f64,
+            );
+            if let Some(path) = &self.config.trace_out {
+                self.tracer.export_or_warn(path);
+            }
+        }
         Ok(TrainSummary {
             history,
             final_step,
@@ -641,12 +748,23 @@ impl Trainer {
             .iter()
             .map(|f| (f.shape.clone(), f.is_int))
             .collect();
+        if self.tracer.is_armed() {
+            self.tracer.name_track(&format!("host{rank} (d{d_coord},m{m_coord})"));
+        }
         let end = self.start_step + self.config.steps;
         for step in self.start_step..end {
             if step >= stop_step.load(Ordering::Acquire) {
                 break;
             }
+            if let Some((a, b)) = self.config.profile_steps {
+                if self.tracer.is_armed() {
+                    self.tracer.set_enabled(step >= a && step < b);
+                }
+            }
             let t_step = Instant::now();
+            let _step_span = self.tracer.span("train/step").arg("step", step);
+            let phase0 =
+                if rank == 0 { Some(self.timing.snapshot_micros()) } else { None };
             // ---- infeed: the data row's batch, shared across the row.
             // The pull/wait counts as infeed; the row broadcast counts as
             // model-axis collective time (no overlap between phases). ----
@@ -657,12 +775,18 @@ impl Trainer {
                     b
                 }
                 BatchSource::Infeed(inf) => {
-                    let leader = if m_coord == 0 { inf.next(d_coord) } else { None };
+                    let leader = if m_coord == 0 {
+                        let _sp = self.tracer.span("train/infeed");
+                        inf.next_counted(d_coord, &self.counters)
+                    } else {
+                        None
+                    };
                     self.timing.infeed.add_since(t_step);
                     if mesh.model == 1 {
                         leader
                     } else {
                         let t_b = Instant::now();
+                        let _sp = self.tracer.span("train/broadcast_batch");
                         let out = broadcast_batch(mg, mr, leader, &template);
                         self.timing.collectives_model.add_since(t_b);
                         out
@@ -690,6 +814,7 @@ impl Trainer {
 
             // ---- gradient sync over the data-axis subgroup (the
             // model-axis part already happened inside the step program) ----
+            let grad_sync_span = self.tracer.span("train/grad_sync");
             let t_sc = Instant::now();
             let scalars = dg.all_reduce(dr, vec![loss_sum, weight_sum, correct_sum]);
             self.timing.collectives_data.add_since(t_sc);
@@ -729,8 +854,10 @@ impl Trainer {
             } else {
                 1.0 / w_total
             };
+            drop(grad_sync_span);
 
             // ---- optimizer update on resident blocks only ----
+            let opt_span = self.tracer.span("train/optimizer");
             let t_opt = Instant::now();
             let decay = self.config.weight_decay.map(|d| d as f32);
             let lr_now = self.config.schedule.lr(step) as f32;
@@ -751,6 +878,7 @@ impl Trainer {
                 }
             }
             self.timing.optimizer.add_since(t_opt);
+            drop(opt_span);
 
             // ---- metrics (host (0,0)) ----
             if rank == 0 {
@@ -764,18 +892,35 @@ impl Trainer {
                     lr,
                     step_seconds: t_step.elapsed().as_secs_f64(),
                 };
+                // Per-step phase deltas off the shared timing breakdown
+                // (summed over all hosts this step; exact on a 1x1 mesh).
+                if let Some(p0) = phase0 {
+                    let p1 = self.timing.snapshot_micros();
+                    let mut d = [0f64; 5];
+                    for i in 0..5 {
+                        d[i] = p1[i].saturating_sub(p0[i]) as f64 / 1000.0;
+                    }
+                    self.phase_hist.record_deltas_ms(&d);
+                    self.phase_hist.step_ms.record_ms(rec.step_seconds * 1e3);
+                }
                 if step % self.config.log_every == 0 || step + 1 == end {
                     let tokens =
                         (m.tokens_per_step() * mesh.data) as f64 / rec.step_seconds;
-                    self.logger.log(
-                        step,
-                        &[
-                            ("loss", loss),
-                            ("accuracy", acc),
-                            ("lr", lr),
-                            ("tokens_per_sec", tokens),
-                        ],
-                    );
+                    let mut vals = vec![
+                        ("loss", loss),
+                        ("accuracy", acc),
+                        ("lr", lr),
+                        ("tokens_per_sec", tokens),
+                    ];
+                    let depth = match source {
+                        BatchSource::Infeed(inf) => Some(inf.queue_depth(d_coord)),
+                        _ => None,
+                    };
+                    if let Some(depth) = depth {
+                        vals.push(("train/infeed_queue_depth", depth as f64));
+                        self.tracer.counter("train/infeed_queue_depth", depth as f64);
+                    }
+                    self.logger.log(step, &vals);
                 }
                 history.lock().unwrap().push(rec);
             }
@@ -827,6 +972,7 @@ impl Trainer {
             inputs.push(t);
         }
         inputs.extend(batch);
+        let _exec_span = self.tracer.span("train/execute");
         let t_exec = Instant::now();
         let outs = exe.run(inputs)?;
         self.timing.execute.add_since(t_exec);
@@ -900,6 +1046,12 @@ impl Trainer {
                 .segments
                 .get(seg)
                 .ok_or_else(|| anyhow::anyhow!("missing block segment '{seg}'"))?;
+            // format! only when recording — the off path stays alloc-free
+            let _sp = if self.tracer.is_enabled() {
+                Some(self.tracer.span(&format!("seg/{seg}")))
+            } else {
+                None
+            };
             let t0 = Instant::now();
             let outs = exe.run(inputs)?;
             self.timing.execute.add_since(t0);
@@ -925,6 +1077,17 @@ impl Trainer {
                 t.elements()
             );
             cursor.set(cursor.get() + 1);
+            let _sp = if self.tracer.is_enabled() {
+                Some(
+                    self.tracer
+                        .span(&format!("coll/{}", c.point))
+                        .arg("axis", "model")
+                        .arg("op", c.op.as_str())
+                        .arg("bytes", c.elems * 4),
+                )
+            } else {
+                None
+            };
             let t0 = Instant::now();
             let out = all_reduce_tensor_op(mg, mr, t, parse_reduce_op(&c.op)?);
             self.timing.collectives_model.add_since(t0);
@@ -1075,6 +1238,17 @@ impl Trainer {
                 c.elems,
                 flat.len()
             );
+            let _sp = if self.tracer.is_enabled() {
+                Some(
+                    self.tracer
+                        .span("coll/replicated_grads")
+                        .arg("axis", "model")
+                        .arg("op", c.op.as_str())
+                        .arg("bytes", c.elems * 4),
+                )
+            } else {
+                None
+            };
             let t0 = Instant::now();
             let red = mg.all_reduce(mr, flat);
             self.timing.collectives_model.add_since(t0);
@@ -1121,6 +1295,7 @@ impl Trainer {
         dir: &PathBuf,
         source: &BatchSource,
     ) -> anyhow::Result<()> {
+        let _sp = self.tracer.span("checkpoint/save").arg("step", step);
         let mgr = CheckpointManager::new(dir.clone());
         let mesh = self.config.mesh;
         let scalar_spec = PartitionSpec::replicated(1);
@@ -1187,6 +1362,7 @@ impl Trainer {
     /// from the latest checkpoint — with resharding: every host range-reads
     /// exactly its own blocks, whatever mesh the checkpoint was saved on.
     pub fn restore_latest(&mut self, dir: &PathBuf) -> anyhow::Result<u64> {
+        let _sp = self.tracer.span("checkpoint/restore");
         let mgr = CheckpointManager::new(dir.clone());
         let step = mgr
             .latest()

@@ -1,0 +1,215 @@
+//! Integration: observability layer (PR 7) — a 2-step block-mode train
+//! with `trace_out` set must emit parseable Chrome-trace JSON containing
+//! one `coll/<point>` span per manifest [`CollectiveStep`]; a trainer fed
+//! by a deliberately slow infeed must register
+//! `train/infeed_starved_steps` and classify as infeed-bound in
+//! `trace-summary`; a healthy single-host synthetic run must classify as
+//! compute-bound.
+
+use t5x::partitioning::{ExecMode, Mesh};
+use t5x::runtime::{Artifacts, DeviceHandle};
+use t5x::seqio::dataset::Dataset;
+use t5x::seqio::{ints_example, Example, Feature};
+use t5x::trainer::infeed::Infeed;
+use t5x::trainer::{BatchSource, Trainer, TrainerConfig};
+use t5x::util::json::Json;
+
+fn trace_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("obs_{tag}_{}.json", std::process::id()))
+}
+
+/// Load a trace file and return its event array, checking the envelope
+/// shape and that every complete event is well-formed (ph present,
+/// `X` events carry a non-negative duration).
+fn load_events(path: &std::path::Path) -> Vec<Json> {
+    let v = Json::parse_file(path).expect("trace file must be parseable JSON");
+    let events = v
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("trace must be a {\"traceEvents\": [...]} envelope")
+        .clone();
+    let mut begins: i64 = 0;
+    for ev in &events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).expect("event without ph");
+        match ph {
+            "X" => {
+                let dur = ev.get("dur").and_then(|d| d.as_f64()).expect("X without dur");
+                assert!(dur >= 0.0, "negative span duration: {ev}");
+                assert!(ev.get("name").and_then(|n| n.as_str()).is_some());
+            }
+            "B" => begins += 1,
+            "E" => begins -= 1,
+            // counters and metadata
+            "C" | "M" => {}
+            other => panic!("unexpected event phase {other:?}"),
+        }
+        assert!(begins >= 0, "E event without matching B");
+    }
+    assert_eq!(begins, 0, "unbalanced B/E events");
+    events
+}
+
+fn span_names(events: &[Json]) -> Vec<String> {
+    events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .filter_map(|e| e.get("name").and_then(|n| n.as_str()).map(str::to_string))
+        .collect()
+}
+
+#[test]
+fn block_mode_trace_has_span_per_manifest_collective() {
+    let arts = Artifacts::load_default().unwrap();
+    let m = arts.model("t5-nano-dec").unwrap();
+    if !m.supports_block_exec(2) {
+        eprintln!("skipping: artifacts carry no block contract for model=2");
+        return;
+    }
+    let device = DeviceHandle::spawn().unwrap();
+    let path = trace_path("block");
+    let steps = 2u64;
+    let mut cfg = TrainerConfig::quick("t5-nano-dec", steps);
+    cfg.mesh = Mesh::new(1, 2);
+    cfg.exec_mode = ExecMode::Block;
+    cfg.trace_out = Some(path.clone());
+    let trainer = Trainer::new(&arts, &device, cfg).unwrap();
+    let summary = trainer.train(&BatchSource::Synthetic { seed: 3 }).unwrap();
+    assert_eq!(summary.history.len(), steps as usize);
+
+    let events = load_events(&path);
+    let names = span_names(&events);
+
+    // one coll/<point> span per manifest CollectiveStep, for every rank
+    // and every step (the block executor replays the ordered schedule)
+    let sched = &m.block_exec(2).unwrap().collectives;
+    assert!(!sched.is_empty());
+    for c in sched {
+        let want = format!("coll/{}", c.point);
+        let got = names.iter().filter(|n| **n == want).count();
+        assert!(
+            got >= steps as usize,
+            "manifest collective {want}: {got} spans < {steps} steps"
+        );
+    }
+    let coll_total = names.iter().filter(|n| n.starts_with("coll/")).count();
+    // 2 ranks x 2 steps x full schedule
+    assert!(
+        coll_total >= 2 * steps as usize * sched.len(),
+        "coll spans {coll_total} < ranks*steps*schedule {}",
+        2 * steps as usize * sched.len()
+    );
+
+    // per-segment compute spans and the step umbrella span
+    assert!(names.iter().any(|n| n.starts_with("seg/")), "no seg/ spans");
+    assert_eq!(
+        names.iter().filter(|n| *n == "train/step").count(),
+        2 * steps as usize,
+        "expected one train/step span per rank per step"
+    );
+
+    // the analyzer must load it and must not blame the (absent) infeed
+    let ts = t5x::obs::summarize_file(&path).unwrap();
+    assert_ne!(ts.verdict, "infeed-bound", "synthetic source cannot be infeed-bound");
+    assert!(ts.spans.iter().any(|s| s.name == "train/step"));
+
+    let _ = std::fs::remove_file(&path);
+    device.shutdown();
+}
+
+fn slow_converted_example(m: &t5x::runtime::artifacts::ModelManifest, val: i32) -> Example {
+    let l = m.seq_len();
+    let mut ex = ints_example(&[
+        ("decoder_input_tokens", vec![val.rem_euclid(13) + 2; l]),
+        ("decoder_target_tokens", vec![val.rem_euclid(13) + 2; l]),
+    ]);
+    ex.insert("decoder_loss_weights".into(), Feature::Floats(vec![1.0; l]));
+    ex
+}
+
+#[test]
+fn slow_source_trace_is_infeed_bound() {
+    let arts = Artifacts::load_default().unwrap();
+    let m = arts.model("t5-nano-dec").unwrap();
+    let device = DeviceHandle::spawn().unwrap();
+    let path = trace_path("starved");
+    let steps = 3u64;
+    let mut cfg = TrainerConfig::quick("t5-nano-dec", steps);
+    cfg.trace_out = Some(path.clone());
+    let trainer = Trainer::new(&arts, &device, cfg).unwrap();
+
+    // Every example costs 5ms, so each batch takes batch*5ms to produce
+    // while a nano train step is far cheaper: the consumer drains the
+    // prefetch pipe and blocks — the infeed-bound signature.
+    let b = m.batch();
+    let m2 = m.clone();
+    let infeed = Infeed::spawn(m, 1, 1, move |_| {
+        let m3 = m2.clone();
+        Dataset::new((0..(b as u64 * steps) as i32).map(move |i| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            slow_converted_example(&m3, i)
+        }))
+    });
+    let summary = trainer.train(&BatchSource::Infeed(infeed)).unwrap();
+    assert_eq!(summary.history.len(), steps as usize);
+    assert!(
+        trainer.counters.get("train/infeed_starved_steps") >= 1,
+        "slow producer must starve the trainer, counter = {}",
+        trainer.counters.get("train/infeed_starved_steps")
+    );
+
+    let events = load_events(&path);
+    let names = span_names(&events);
+    assert!(names.iter().any(|n| n == "infeed/batch"), "producer spans missing");
+    assert!(names.iter().any(|n| n == "train/infeed"), "consumer wait spans missing");
+
+    let ts = t5x::obs::summarize_file(&path).unwrap();
+    assert_eq!(ts.verdict, "infeed-bound", "summary: {ts:?}");
+    assert!(ts.counters.get("train/infeed_starved_steps").copied().unwrap_or(0.0) >= 1.0);
+
+    let _ = std::fs::remove_file(&path);
+    device.shutdown();
+}
+
+#[test]
+fn healthy_synthetic_trace_is_compute_bound() {
+    let arts = Artifacts::load_default().unwrap();
+    let device = DeviceHandle::spawn().unwrap();
+    let path = trace_path("healthy");
+    let mut cfg = TrainerConfig::quick("t5-nano-dec", 4);
+    cfg.trace_out = Some(path.clone());
+    let trainer = Trainer::new(&arts, &device, cfg).unwrap();
+    trainer.train(&BatchSource::Synthetic { seed: 9 }).unwrap();
+
+    let ts = t5x::obs::summarize_file(&path).unwrap();
+    assert_eq!(ts.verdict, "compute-bound", "summary: {ts:?}");
+    // phase percentiles also land in the logger-facing histograms
+    assert!(trainer.phase_hist.step_ms.count() >= 4);
+    assert!(trainer.phase_hist.step_ms.p99() >= trainer.phase_hist.step_ms.p50());
+
+    let _ = std::fs::remove_file(&path);
+    device.shutdown();
+}
+
+#[test]
+fn profile_window_limits_trace_to_requested_steps() {
+    let arts = Artifacts::load_default().unwrap();
+    let device = DeviceHandle::spawn().unwrap();
+    let path = trace_path("window");
+    let mut cfg = TrainerConfig::quick("t5-nano-dec", 6);
+    cfg.trace_out = Some(path.clone());
+    cfg.profile_steps = Some((3, 5)); // trace steps 3 and 4 only
+    let trainer = Trainer::new(&arts, &device, cfg).unwrap();
+    trainer.train(&BatchSource::Synthetic { seed: 5 }).unwrap();
+
+    let events = load_events(&path);
+    let steps: Vec<f64> = events
+        .iter()
+        .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("train/step"))
+        .filter_map(|e| e.get("args").and_then(|a| a.get("step")).and_then(|s| s.as_f64()))
+        .collect();
+    assert_eq!(steps.len(), 2, "profile window 3..5 must trace exactly 2 steps: {steps:?}");
+    assert!(steps.iter().all(|&s| (3.0..5.0).contains(&s)), "steps outside window: {steps:?}");
+
+    let _ = std::fs::remove_file(&path);
+    device.shutdown();
+}

@@ -84,6 +84,8 @@ fn figure1_full_stack_loss_decreases() {
         grad_clip_norm: None,
         weight_decay: None,
         exec_mode: ExecMode::Gather,
+        trace_out: None,
+        profile_steps: None,
     };
     let trainer = Trainer::new(&arts, &device, cfg).unwrap();
     let source = BatchSource::Infeed(build_infeed(&arts, &dir, 2, 0, None));
@@ -296,6 +298,10 @@ trainer.lr = 1e-3
         grad_clip_norm: None,
         weight_decay: None,
         exec_mode: ExecMode::parse(&cfg.str_or("trainer", "exec_mode", "auto")).unwrap(),
+        trace_out: cfg
+            .get("trainer", "trace_out")
+            .and_then(|v| v.as_str().map(std::path::PathBuf::from)),
+        profile_steps: None,
     };
     assert_eq!(tc.steps, 2);
     assert_eq!(tc.strategy, ParamStrategy::TwoD);

@@ -4,20 +4,29 @@
 Reads the ``bench_results.jsonl`` that ``cargo bench`` appends (one JSON
 object per measurement, see ``rust/src/bench/mod.rs::write_jsonl``),
 writes a compact ``BENCH_<pr>.json`` snapshot for the committed
-``benchmarks/`` trajectory, and gates on the PR-6 headline: on any
-model-parallel mesh (model degree >= 2), block execution must not be
-slower than gather execution of the same (model, mesh, strategy) case.
+``benchmarks/`` trajectory, and gates two headlines:
+
+* **PR 6** — on any model-parallel mesh (model degree >= 2), block
+  execution must not be slower than gather execution of the same
+  (model, mesh, strategy) case (``--tolerance``).
+* **PR 7** — an armed tracer must not slow the train step: each
+  ``... traced (N steps)`` row must hold tok/s within
+  ``--trace-tolerance`` of its untraced twin. The nominal contract is
+  3%; quick-mode CI medians are noisy, so CI passes a looser value and
+  the snapshot records the exact ratios either way.
+
+The snapshot also distills the PR-7 observability rows: the per-phase
+step-time breakdown (``train phase breakdown (obs)``) and the serve
+latency percentiles (``serve latency (obs)``).
 
 Usage (CI smoke job):
 
     python tools/bench_gate.py --input rust/bench_results.jsonl \
-        --output benchmarks/BENCH_6.json [--tolerance 0.10]
+        --output benchmarks/BENCH_7.json [--tolerance 0.10] \
+        [--trace-tolerance 0.10]
 
-Exit status is non-zero if the gate fails or if the input contains no
-gather-vs-block pair to compare (so a silently-skipped comparison cannot
-read as a pass). ``--tolerance`` is the allowed fractional shortfall —
-quick-mode CI medians come from 2-5 iterations and are noisy; the
-committed trajectory still records the exact ratios.
+Exit status is non-zero if a gate fails or if the input contains no pair
+to compare (so a silently-skipped comparison cannot read as a pass).
 """
 
 import argparse
@@ -30,7 +39,14 @@ TRAIN_ROW = re.compile(
     r"^(?P<model>\S+) mesh=(?P<data>\d+)x(?P<mdeg>\d+) "
     r"(?P<strategy>\w+) (?P<exec>gather|block) \(\d+ steps\)$"
 )
+# "t5-nano-dec mesh=1x2 OneD block traced (2 steps)"
+TRACED_ROW = re.compile(
+    r"^(?P<model>\S+) mesh=(?P<data>\d+)x(?P<mdeg>\d+) "
+    r"(?P<strategy>\w+) (?P<exec>gather|block) traced \(\d+ steps\)$"
+)
 TRAIN_GROUP = "train step (E16)"
+PHASE_GROUP = "train phase breakdown (obs)"
+SERVE_GROUP = "serve latency (obs)"
 
 
 def load_rows(path):
@@ -43,7 +59,7 @@ def load_rows(path):
     return rows
 
 
-def gate(rows, tolerance):
+def gate_block(rows, tolerance):
     """Return (pairs, failures) for the block-vs-gather comparison."""
     cases = {}
     for r in rows:
@@ -78,16 +94,60 @@ def gate(rows, tolerance):
     return pairs, failures
 
 
+def gate_tracing(rows, tolerance):
+    """Return (pairs, failures) for the traced-vs-untraced comparison."""
+    plain, traced = {}, {}
+    for r in rows:
+        if r.get("group") != TRAIN_GROUP:
+            continue
+        name = r.get("name", "")
+        m = TRACED_ROW.match(name)
+        if m:
+            bucket = traced
+        else:
+            m = TRAIN_ROW.match(name)
+            bucket = plain
+        if not m:
+            continue
+        key = (m.group("model"), m.group("data"), m.group("mdeg"),
+               m.group("strategy"), m.group("exec"))
+        bucket[key] = r.get("throughput_per_s")
+    pairs, failures = [], []
+    for key in sorted(set(plain) & set(traced)):
+        p, t = plain[key], traced[key]
+        pair = {
+            "model": key[0],
+            "mesh": f"{key[1]}x{key[2]}",
+            "strategy": key[3],
+            "exec": key[4],
+            "untraced_tok_per_s": p,
+            "traced_tok_per_s": t,
+            "traced_over_untraced": (t / p) if p else None,
+        }
+        pairs.append(pair)
+        if p and t < p * (1.0 - tolerance):
+            failures.append(
+                f"{pair['model']} mesh={pair['mesh']} {pair['strategy']} "
+                f"{pair['exec']}: traced {t:.1f} tok/s < untraced {p:.1f} "
+                f"tok/s (ratio {t / p:.3f}, tolerance {tolerance:.2f})"
+            )
+    return pairs, failures
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--input", required=True, help="bench_results.jsonl path")
     ap.add_argument("--output", required=True, help="BENCH_<pr>.json path")
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed fractional block-vs-gather shortfall")
+    ap.add_argument("--trace-tolerance", type=float, default=0.03,
+                    help="allowed fractional traced-vs-untraced shortfall "
+                         "(3%% nominal contract)")
     args = ap.parse_args()
 
     rows = load_rows(args.input)
-    pairs, failures = gate(rows, args.tolerance)
+    block_pairs, block_failures = gate_block(rows, args.tolerance)
+    trace_pairs, trace_failures = gate_tracing(rows, args.trace_tolerance)
 
     snapshot = {
         "schema": "t5x-bench-trajectory-v1",
@@ -95,9 +155,23 @@ def main():
         "gate": {
             "rule": "block tok/s >= gather tok/s at model degree >= 2",
             "tolerance": args.tolerance,
-            "pairs": pairs,
-            "failures": failures,
+            "pairs": block_pairs,
+            "failures": block_failures,
         },
+        "trace_gate": {
+            "rule": "traced tok/s >= untraced tok/s per train-step case",
+            "tolerance": args.trace_tolerance,
+            "pairs": trace_pairs,
+            "failures": trace_failures,
+        },
+        "phase_breakdown": [
+            {k: v for k, v in r.items() if k != "group"}
+            for r in rows if r.get("group") == PHASE_GROUP
+        ],
+        "serve_latency": [
+            {k: v for k, v in r.items() if k != "group"}
+            for r in rows if r.get("group") == SERVE_GROUP
+        ],
         "measurements": [
             {
                 "group": r.get("group"),
@@ -106,27 +180,42 @@ def main():
                 "throughput_per_s": r.get("throughput_per_s"),
                 "throughput_unit": r.get("throughput_unit"),
             }
-            for r in rows
+            for r in rows if "median_s" in r
         ],
     }
     with open(args.output, "w", encoding="utf-8") as f:
         json.dump(snapshot, f, indent=2, sort_keys=True)
         f.write("\n")
-    print(f"wrote {args.output}: {len(rows)} measurements, "
-          f"{len(pairs)} gather-vs-block pair(s)")
+    print(f"wrote {args.output}: {len(rows)} rows, "
+          f"{len(block_pairs)} gather-vs-block pair(s), "
+          f"{len(trace_pairs)} traced-vs-untraced pair(s)")
 
-    if not pairs:
+    status = 0
+    if not block_pairs:
         print("gate: FAIL — no gather-vs-block pair found in "
               f"group '{TRAIN_GROUP}' (bench_train_step did not run?)",
               file=sys.stderr)
-        return 1
-    if failures:
-        for f_ in failures:
-            print(f"gate: FAIL — {f_}", file=sys.stderr)
-        return 1
-    for p in pairs:
+        status = 1
+    if not trace_pairs:
+        print("trace gate: FAIL — no traced-vs-untraced pair found in "
+              f"group '{TRAIN_GROUP}' (bench_train_step did not run?)",
+              file=sys.stderr)
+        status = 1
+    for f_ in block_failures:
+        print(f"gate: FAIL — {f_}", file=sys.stderr)
+        status = 1
+    for f_ in trace_failures:
+        print(f"trace gate: FAIL — {f_}", file=sys.stderr)
+        status = 1
+    if status:
+        return status
+    for p in block_pairs:
         print(f"gate: ok — {p['model']} mesh={p['mesh']} {p['strategy']} "
               f"block/gather = {p['block_over_gather']:.3f}")
+    for p in trace_pairs:
+        print(f"trace gate: ok — {p['model']} mesh={p['mesh']} "
+              f"{p['strategy']} {p['exec']} traced/untraced = "
+              f"{p['traced_over_untraced']:.3f}")
     return 0
 
 

@@ -1,0 +1,134 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file written by ``--trace-out``
+(stdlib only; the CI smoke job's trace oracle).
+
+Checks:
+
+* the file parses and is either a ``{"traceEvents": [...]}`` envelope or
+  a bare event array;
+* every event carries a ``ph`` phase; ``X`` (complete) events carry a
+  ``name``, numeric ``ts`` and a non-negative ``dur``;
+* ``B``/``E`` duration events balance per ``(pid, tid)`` track;
+* each ``--require SUBSTR`` matches at least one span name (use it to
+  assert instrumentation coverage, e.g. ``--require coll/``).
+
+Usage:
+
+    python tools/check_trace.py trace.json \
+        --require coll/ --require seg/ --require train/step
+
+Exit status is non-zero on any violation, with one line per problem on
+stderr.
+"""
+
+import argparse
+import collections
+import json
+import sys
+
+
+def load_events(path):
+    with open(path, "r", encoding="utf-8") as f:
+        v = json.load(f)
+    if isinstance(v, dict):
+        events = v.get("traceEvents")
+        if not isinstance(events, list):
+            raise ValueError("envelope has no 'traceEvents' array")
+        return events
+    if isinstance(v, list):
+        return v
+    raise ValueError("trace must be an object or an array")
+
+
+def check(events, require):
+    errors = []
+    names = collections.Counter()
+    counters = set()
+    open_begins = collections.Counter()  # (pid, tid) -> B depth
+    phases = collections.Counter()
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event {i}: not an object")
+            continue
+        ph = ev.get("ph")
+        if not isinstance(ph, str):
+            errors.append(f"event {i}: missing 'ph'")
+            continue
+        phases[ph] += 1
+        track = (ev.get("pid"), ev.get("tid"))
+        if ph == "X":
+            name = ev.get("name")
+            if not isinstance(name, str):
+                errors.append(f"event {i}: X event without a name")
+                continue
+            names[name] += 1
+            if not isinstance(ev.get("ts"), (int, float)):
+                errors.append(f"event {i} ({name}): X event without numeric ts")
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"event {i} ({name}): bad dur {dur!r}")
+        elif ph == "B":
+            open_begins[track] += 1
+        elif ph == "E":
+            open_begins[track] -= 1
+            if open_begins[track] < 0:
+                errors.append(f"event {i}: E without matching B on {track}")
+                open_begins[track] = 0
+        elif ph == "C":
+            counters.add(ev.get("name"))
+        elif ph == "M":
+            pass
+        else:
+            errors.append(f"event {i}: unexpected phase {ph!r}")
+    for track, depth in open_begins.items():
+        if depth != 0:
+            errors.append(f"track {track}: {depth} unclosed B event(s)")
+    for sub in require:
+        if not any(sub in n for n in names):
+            errors.append(
+                f"--require {sub!r}: no span name contains it "
+                f"(spans: {sorted(names)[:20]})"
+            )
+    return errors, names, counters, phases
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace-event JSON path")
+    ap.add_argument(
+        "--require",
+        action="append",
+        default=[],
+        metavar="SUBSTR",
+        help="fail unless some span name contains SUBSTR (repeatable)",
+    )
+    args = ap.parse_args()
+
+    try:
+        events = load_events(args.trace)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"check_trace: FAIL — {args.trace}: {e}", file=sys.stderr)
+        return 1
+
+    errors, names, counters, phases = check(events, args.require)
+    spans = sum(names.values())
+    print(
+        f"{args.trace}: {len(events)} events "
+        f"({spans} spans, {len(names)} distinct names, "
+        f"{len(counters)} counters; phases {dict(sorted(phases.items()))})"
+    )
+    for name, n in names.most_common(10):
+        print(f"  {n:>6}  {name}")
+    if errors:
+        for e in errors:
+            print(f"check_trace: FAIL — {e}", file=sys.stderr)
+        return 1
+    if spans == 0:
+        print("check_trace: FAIL — trace contains no spans", file=sys.stderr)
+        return 1
+    print(f"check_trace: ok ({len(args.require)} required name(s) present)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
