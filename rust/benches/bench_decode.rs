@@ -47,6 +47,144 @@ fn submit_all(engine: &mut InferEngine, prompts: &[Vec<i32>], gen: usize) {
     }
 }
 
+/// Nearest-rank percentile over an unsorted sample (0 when empty).
+fn pct(v: &mut [f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Open-loop Poisson traffic through the serving gateway (§serve):
+/// requests arrive on a seeded exponential clock at ~1.2x the calibrated
+/// closed-loop engine throughput, so a queue actually forms and the
+/// queue-wait / TTFT tails mean something. One pjrt device thread
+/// serializes HLO executions, so extra replicas buy scheduling headroom
+/// rather than raw FLOPs — the BENCH_8 gate asserts 2-replica throughput
+/// holds the single-engine line (ratio >= 0.9), not a 2x.
+fn poisson_gateway_bench(arts: &Artifacts, device: &DeviceHandle, quick: bool) {
+    use std::sync::mpsc;
+    use std::time::{Duration, Instant};
+    use t5x::serve::{Gateway, GatewayConfig, ServeOutcome, SubmitOpts};
+    use t5x::util::rng::Pcg64;
+
+    let model = "t5-nano-dec";
+    if !arts.models.contains_key(model) {
+        println!("  SKIP gateway poisson: {model} not in this artifact dir");
+        return;
+    }
+    let m = arts.models.get(model).unwrap().clone();
+    let params = t5x::model::init_params(&m, 0);
+    let (gen, total) = if quick { (4usize, 24usize) } else { (8, 96) };
+    let plen = 3usize;
+    let prompts: Vec<Vec<i32>> = (0..total)
+        .map(|i| (0..plen).map(|j| ((5 + i * 7 + j * 3) % 400 + 2) as i32).collect())
+        .collect();
+
+    // Closed-loop calibration: a full-batch engine sets the service
+    // ceiling; the open-loop arrival rate runs 20% hotter than it.
+    let mut cal =
+        InferEngine::with_mode(arts, device, model, &params, -1, None).unwrap();
+    let t0 = Instant::now();
+    submit_all(&mut cal, &prompts, gen);
+    let done = cal.run_until_idle().unwrap();
+    assert_eq!(done.len(), total);
+    let cal_tps = (total * gen) as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    let lambda = 1.2 * cal_tps / gen as f64; // arrivals per second
+    println!(
+        "  gateway poisson: calibrated {cal_tps:.1} tok/s closed-loop -> \
+         lambda {lambda:.1} req/s"
+    );
+
+    for &n in &[1usize, 2, 4] {
+        let mut engines = Vec::with_capacity(n);
+        engines
+            .push(InferEngine::with_mode(arts, device, model, &params, -1, None).unwrap());
+        for _ in 1..n {
+            let r = engines[0].replica();
+            engines.push(r);
+        }
+        let gw = Gateway::launch(
+            engines,
+            GatewayConfig { queue_depth: total.max(1), shed_watermark: None },
+        );
+        let (tx, rx) = mpsc::channel();
+        let mut rng = Pcg64::new(42);
+        let mut shed = 0u64;
+        let start = Instant::now();
+        let mut next_at = 0.0f64;
+        for (i, p) in prompts.iter().enumerate() {
+            let u = rng.next_f64();
+            next_at += -(1.0 - u).ln() / lambda;
+            let target = start + Duration::from_secs_f64(next_at);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            let req = InferRequest {
+                id: i as u64,
+                prompt: p.clone(),
+                max_tokens: gen,
+                method: DecodeMethod::Greedy,
+            };
+            // Open loop: an admission rejection is a shed, never a retry.
+            if gw.submit(req, SubmitOpts::default(), tx.clone()).is_err() {
+                shed += 1;
+            }
+        }
+        drop(tx);
+        let mut tokens = 0u64;
+        let (mut ttft, mut queue) = (Vec::new(), Vec::new());
+        while let Ok(o) = rx.recv() {
+            match o {
+                ServeOutcome::Done { result, queue_ms, ttft_ms, .. } => {
+                    tokens += result.tokens.len() as u64;
+                    queue.push(queue_ms);
+                    if let Some(t) = ttft_ms {
+                        ttft.push(t);
+                    }
+                }
+                _ => shed += 1,
+            }
+        }
+        let report = gw.shutdown();
+        assert_eq!(report.completed + shed, total as u64);
+        let wall = start.elapsed().as_secs_f64().max(1e-9);
+        let tps = tokens as f64 / wall;
+        let shed_rate = shed as f64 / total as f64;
+        let ttft_p50 = pct(&mut ttft, 50.0);
+        let ttft_p99 = pct(&mut ttft, 99.0);
+        let queue_p99 = pct(&mut queue, 99.0);
+        println!(
+            "  gateway poisson x{n}: {tps:.1} tok/s, ttft p50 {ttft_p50:.2} / \
+             p99 {ttft_p99:.2} ms, queue p99 {queue_p99:.2} ms, shed \
+             {:.1}% ({} completed)",
+            shed_rate * 100.0,
+            report.completed,
+        );
+        append_row(
+            "bench_results.jsonl",
+            &Json::obj(vec![
+                ("group", Json::str("serve gateway (poisson)")),
+                (
+                    "name",
+                    Json::str(format!("{model} poisson x{n} ({total} reqs x {gen} tok)")),
+                ),
+                ("replicas", Json::num(n as f64)),
+                ("requests", Json::num(total as f64)),
+                ("tok_per_s", Json::num(tps)),
+                ("closed_loop_tok_per_s", Json::num(cal_tps)),
+                ("ttft_ms_p50", Json::num(ttft_p50)),
+                ("ttft_ms_p99", Json::num(ttft_p99)),
+                ("queue_ms_p99", Json::num(queue_p99)),
+                ("shed_rate", Json::num(shed_rate)),
+            ]),
+        );
+    }
+}
+
 fn main() {
     let arts = Artifacts::load_default().expect("make artifacts first");
     let device = DeviceHandle::spawn().unwrap();
@@ -165,6 +303,9 @@ fn main() {
             );
         }
     }
+    // §serve: open-loop Poisson traffic through the replica gateway
+    // (1/2/4 replicas; rows feed the BENCH_8 gateway gate).
+    poisson_gateway_bench(&arts, &device, quick);
     bench.write_jsonl("bench_results.jsonl").unwrap();
     device.shutdown();
 }

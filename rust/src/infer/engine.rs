@@ -116,6 +116,34 @@ pub struct InferRequest {
     pub method: DecodeMethod,
 }
 
+/// Validate a request against a model manifest — the checks
+/// [`InferEngine::submit`] enforces, exposed standalone so the serving
+/// gateway can reject bad requests at admission (HTTP 400) without
+/// routing them to a replica first.
+pub fn validate_request(
+    manifest: &ModelManifest,
+    req: &InferRequest,
+) -> anyhow::Result<()> {
+    let l = manifest.seq_len();
+    anyhow::ensure!(
+        req.prompt.len() + 2 <= l,
+        "prompt of {} tokens leaves no room to decode (model seq_len {l} \
+         needs BOS + prompt + at least one generated position)",
+        req.prompt.len(),
+    );
+    let v = manifest.vocab();
+    if let Some(&bad) = req.prompt.iter().find(|&&t| t < 0 || t as usize >= v) {
+        anyhow::bail!("prompt token id {bad} outside the model vocabulary 0..{v}");
+    }
+    anyhow::ensure!(req.max_tokens >= 1, "max_tokens must be >= 1");
+    anyhow::ensure!(
+        matches!(req.method, DecodeMethod::Greedy | DecodeMethod::Sample { .. }),
+        "the continuous-batching engine decodes greedy/sample requests; \
+         use beam_decode() for beam search"
+    );
+    Ok(())
+}
+
 /// A completed request.
 #[derive(Debug, Clone)]
 pub struct InferResult {
@@ -182,6 +210,10 @@ pub struct EngineSummary {
     /// Submit-to-completion latency percentiles (ms).
     pub latency_ms_p50: f64,
     pub latency_ms_p99: f64,
+    /// Queue-wait (submit → slot admission) percentiles (ms) — the
+    /// admission cost the serving gateway adds on top of decode time.
+    pub queue_ms_p50: f64,
+    pub queue_ms_p99: f64,
 }
 
 pub struct InferEngine {
@@ -218,9 +250,16 @@ pub struct InferEngine {
     /// Record spans only for engine steps in `[a, b)` (`--profile-steps`).
     profile_steps: Option<(u64, u64)>,
     /// Submit-to-first-token / submit-to-completion latency histograms
-    /// over completed requests.
+    /// over completed requests, and queue wait (submit → admission) over
+    /// admitted requests. Arc-backed: clones handed out by the
+    /// `*_histogram()` getters observe live recording.
     ttft_hist: crate::obs::Histogram,
     latency_hist: crate::obs::Histogram,
+    queue_hist: crate::obs::Histogram,
+    /// Namespace for this engine's trace tracks/counters (`serve` solo;
+    /// `serve/replica<i>` under the gateway so N replicas sharing one
+    /// tracer don't interleave their queue/slot timelines).
+    trace_label: String,
 }
 
 impl InferEngine {
@@ -303,7 +342,57 @@ impl InferEngine {
             profile_steps: None,
             ttft_hist: crate::obs::Histogram::new(),
             latency_hist: crate::obs::Histogram::new(),
+            queue_hist: crate::obs::Histogram::new(),
+            trace_label: "serve".to_string(),
         })
+    }
+
+    /// A replica of this engine for the multi-engine gateway: shares the
+    /// compiled executables and Arc-backed parameter tensors (clone =
+    /// pointer bumps, not a copy of the weights) but owns private slots,
+    /// token buffer, KV cache rows, queue, counters, and histograms — so
+    /// N replicas decode concurrently against one set of artifacts with
+    /// independent stats. The tracer is shared (one trace shows every
+    /// replica); call [`InferEngine::set_trace_label`] to namespace this
+    /// replica's tracks.
+    pub fn replica(&self) -> InferEngine {
+        let b = self.manifest.batch();
+        let l = self.manifest.seq_len();
+        let cache = match (self.mode, self.manifest.kv_cache.as_ref()) {
+            (DecodeMode::Kv, Some(kv)) => (0..kv.num_tensors())
+                .map(|_| HostTensor::zeros(kv.shape.clone()))
+                .collect(),
+            _ => Vec::new(),
+        };
+        InferEngine {
+            manifest: self.manifest.clone(),
+            mode: self.mode,
+            exe: self.exe.clone(),
+            prefill_exe: self.prefill_exe.clone(),
+            step_exe: self.step_exe.clone(),
+            cache,
+            ordered: self.ordered.clone(),
+            eos_id: self.eos_id,
+            queue: VecDeque::new(),
+            slots: (0..b).map(|_| None).collect(),
+            dec: vec![0i32; b * l],
+            steps: 0,
+            decode_seconds: 0.0,
+            finished: Vec::new(),
+            counters: CounterSet::new(),
+            tracer: self.tracer.clone(),
+            profile_steps: self.profile_steps,
+            ttft_hist: crate::obs::Histogram::new(),
+            latency_hist: crate::obs::Histogram::new(),
+            queue_hist: crate::obs::Histogram::new(),
+            trace_label: self.trace_label.clone(),
+        }
+    }
+
+    /// Namespace this engine's trace tracks and counters (the gateway
+    /// sets `serve/replica<i>`; default `serve`).
+    pub fn set_trace_label(&mut self, label: impl Into<String>) {
+        self.trace_label = label.into();
     }
 
     /// Arm span recording (`serve/*` spans, per-request tracks, queue/slot
@@ -335,27 +424,7 @@ impl InferEngine {
     /// token ids are rejected *here* — the serve loop turns the error into
     /// a per-request response instead of crashing mid-decode.
     pub fn submit(&mut self, req: InferRequest) -> anyhow::Result<()> {
-        let l = self.manifest.seq_len();
-        anyhow::ensure!(
-            req.prompt.len() + 2 <= l,
-            "prompt of {} tokens leaves no room to decode (model seq_len {l} \
-             needs BOS + prompt + at least one generated position)",
-            req.prompt.len(),
-        );
-        let v = self.manifest.vocab();
-        if let Some(&bad) =
-            req.prompt.iter().find(|&&t| t < 0 || t as usize >= v)
-        {
-            anyhow::bail!(
-                "prompt token id {bad} outside the model vocabulary 0..{v}"
-            );
-        }
-        anyhow::ensure!(req.max_tokens >= 1, "max_tokens must be >= 1");
-        anyhow::ensure!(
-            matches!(req.method, DecodeMethod::Greedy | DecodeMethod::Sample { .. }),
-            "the continuous-batching engine decodes greedy/sample requests; \
-             use beam_decode() for beam search"
-        );
+        validate_request(&self.manifest, &req)?;
         self.counters.inc("infer/requests_submitted");
         self.queue.push_back((req, Instant::now()));
         Ok(())
@@ -400,6 +469,8 @@ impl InferEngine {
                 DecodeMethod::Sample { seed, .. } => Some(Pcg64::new(*seed)),
                 _ => None,
             };
+            let admitted = Instant::now();
+            self.queue_hist.record_seconds((admitted - submitted).as_secs_f64());
             self.slots[i] = Some(ActiveSlot {
                 id: req.id,
                 prompt_len: plen,
@@ -409,7 +480,7 @@ impl InferEngine {
                 method: req.method,
                 rng,
                 submitted,
-                admitted: Instant::now(),
+                admitted,
                 started_step: self.steps,
                 ttft_seconds: None,
                 fresh: true,
@@ -435,8 +506,14 @@ impl InferEngine {
         self.admit();
         let active = self.active();
         if self.tracer.is_enabled() {
-            self.tracer.counter("serve/queue_depth", self.queue.len() as f64);
-            self.tracer.counter("serve/active_slots", active as f64);
+            self.tracer.counter(
+                &format!("{}/queue_depth", self.trace_label),
+                self.queue.len() as f64,
+            );
+            self.tracer.counter(
+                &format!("{}/active_slots", self.trace_label),
+                active as f64,
+            );
         }
         if active == 0 {
             return Ok(0);
@@ -478,14 +555,14 @@ impl InferEngine {
                 // Request lifecycle as two complete events on virtual
                 // tracks: the queue wait, then the slot residency.
                 self.tracer.complete(
-                    "serve/queue",
+                    &format!("{}/queue", self.trace_label),
                     format!("req {} queued", slot.id),
                     slot.submitted,
                     slot.admitted,
                     vec![("id", ArgValue::Num(slot.id as f64))],
                 );
                 self.tracer.complete(
-                    &format!("serve/slot{i}"),
+                    &format!("{}/slot{i}", self.trace_label),
                     format!("req {}", slot.id),
                     slot.admitted,
                     now,
@@ -730,13 +807,33 @@ impl InferEngine {
             ttft_ms_p99: self.ttft_hist.p99(),
             latency_ms_p50: self.latency_hist.p50(),
             latency_ms_p99: self.latency_hist.p99(),
+            queue_ms_p50: self.queue_hist.p50(),
+            queue_ms_p99: self.queue_hist.p99(),
         }
     }
 
+    /// Live submit-to-first-token histogram (Arc-backed clone observes
+    /// ongoing recording — the gateway's `/metrics` reads it while this
+    /// engine steps on its replica thread).
+    pub fn ttft_histogram(&self) -> &crate::obs::Histogram {
+        &self.ttft_hist
+    }
+
+    /// Live submit-to-completion latency histogram.
+    pub fn latency_histogram(&self) -> &crate::obs::Histogram {
+        &self.latency_hist
+    }
+
+    /// Live queue-wait (submit → slot admission) histogram.
+    pub fn queue_histogram(&self) -> &crate::obs::Histogram {
+        &self.queue_hist
+    }
+
     /// Flush serving latency histograms as metric points (`serve/ttft_ms_*`,
-    /// `serve/latency_ms_*` p50/p95/p99/mean/count).
+    /// `serve/latency_ms_*`, `serve/queue_ms_*` p50/p95/p99/mean/count).
     pub fn log_latency_to(&self, logger: &crate::metrics::MetricsLogger, step: u64) {
         self.ttft_hist.log_to(logger, step, "serve/ttft_ms");
         self.latency_hist.log_to(logger, step, "serve/latency_ms");
+        self.queue_hist.log_to(logger, step, "serve/queue_ms");
     }
 }

@@ -10,8 +10,12 @@
 //!   rows at EOS, and refills freed slots from the queue mid-flight.
 //!   Reports latency/throughput/utilization through
 //!   [`crate::metrics::CounterSet`].
-//! * [`server`] — a JSONL request/response loop (`t5x serve`) with a
-//!   background reader so requests join the running batch.
+//! * [`server`] — the JSONL request/response transport (`t5x serve`'s
+//!   stdin mode) with a background reader so requests join running
+//!   batches. Since PR 8 it is a thin client of the
+//!   [`crate::serve::Gateway`] admission queue + replica router — the
+//!   same scheduling path the HTTP front end uses; see
+//!   [`crate::serve`] for the admission/shedding/replica contract.
 //!
 //! ## KV-cache slot lifecycle (Kv decode mode)
 //!
@@ -51,4 +55,7 @@ pub mod engine;
 pub mod server;
 
 pub use decoding::{DecodeMethod, Hypothesis};
-pub use engine::{DecodeMode, EngineSummary, InferEngine, InferRequest, InferResult};
+pub use engine::{
+    validate_request, DecodeMode, EngineSummary, InferEngine, InferRequest,
+    InferResult,
+};

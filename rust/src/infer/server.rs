@@ -1,43 +1,52 @@
-//! JSONL request/response serving loop over the continuous-batching
-//! engine (the `t5x serve` subcommand).
+//! JSONL request/response serving loop (the `t5x serve` subcommand's
+//! stdin transport), riding the same [`Gateway`] admission queue and
+//! replica router as the HTTP front end.
 //!
 //! Protocol: one JSON object per input line —
 //!
 //! ```json
 //! {"id": 1, "prompt": [5, 9, 11], "max_tokens": 8,
 //!  "method": "sample", "temperature": 0.8, "top_k": 20, "top_p": 0.95,
-//!  "seed": 7}
+//!  "seed": 7, "priority": 1, "deadline_ms": 250}
 //! ```
 //!
 //! Only `prompt` is required: `id` defaults to an auto-incremented
-//! counter, `method` to `"greedy"`, `max_tokens` to the server default.
-//! Responses are emitted *as requests complete* (not in submission
-//! order):
+//! counter, `method` to `"greedy"`, `max_tokens` to the server default,
+//! `priority` to 0, `deadline_ms` to none. Responses are emitted *as
+//! requests complete* (not in submission order):
 //!
 //! ```json
-//! {"id": 1, "tokens": [12, 4, 1], "steps": 3,
-//!  "queue_ms": 0.1, "latency_ms": 5.2}
+//! {"id": 1, "tokens": [12, 4, 1], "steps": 3, "replica": 0,
+//!  "queue_ms": 0.1, "ttft_ms": 2.0, "latency_ms": 5.2}
 //! ```
 //!
-//! A background thread reads the input while the engine decodes, so new
-//! requests join the running batch mid-flight — the same continuous
-//! batching the engine gives programmatic callers. Malformed lines
-//! produce `{"error": ...}` responses and do not stop the loop.
+//! A background thread reads the input while the replicas decode, so new
+//! requests join running batches mid-flight. Malformed lines produce
+//! `{"error": ...}` responses and do not stop the loop. Gateway
+//! backpressure ([`AdmitError::QueueFull`]) is handled by *holding* the
+//! request and retrying as outcomes drain — the stdin transport blocks
+//! instead of dropping, so piping a large request file through `serve`
+//! never loses work, while HTTP clients doing the same get 429s.
 
 use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 use super::decoding::DecodeMethod;
-use super::engine::{InferEngine, InferRequest, InferResult};
+use super::engine::{InferRequest, InferResult};
+use crate::serve::{AdmitError, Gateway, ServeOutcome, SubmitOpts};
 use crate::util::json::Json;
 use crate::util::threads::Pipe;
 
-/// Parse one request line. `auto_id` is used when the line carries no
-/// `"id"`; `default_max_tokens` when it carries no `"max_tokens"`.
+/// Parse one request line/body (shared by the JSONL and HTTP
+/// transports). `auto_id` is used when the payload carries no `"id"`;
+/// `default_max_tokens` when it carries no `"max_tokens"`.
 pub fn parse_request(
     line: &str,
     auto_id: u64,
     default_max_tokens: usize,
-) -> anyhow::Result<InferRequest> {
+) -> anyhow::Result<(InferRequest, SubmitOpts)> {
     let v = Json::parse(line.trim())?;
     let prompt: Vec<i32> = v
         .get("prompt")
@@ -75,10 +84,30 @@ pub fn parse_request(
         },
         other => anyhow::bail!("unknown method '{other}' (greedy|sample)"),
     };
-    Ok(InferRequest { id, prompt, max_tokens, method })
+    let priority = match v.get("priority") {
+        None => 0,
+        Some(x) => x
+            .as_i64()
+            .ok_or_else(|| anyhow::anyhow!("\"priority\" must be an integer"))?,
+    };
+    let deadline = match v.get("deadline_ms") {
+        None => None,
+        Some(x) => {
+            let ms = x
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("\"deadline_ms\" must be a number"))?;
+            anyhow::ensure!(ms >= 0.0, "\"deadline_ms\" must be >= 0");
+            Some(Duration::from_secs_f64(ms / 1e3))
+        }
+    };
+    Ok((
+        InferRequest { id, prompt, max_tokens, method },
+        SubmitOpts { priority, deadline },
+    ))
 }
 
-/// Render one completed request as a response line.
+/// Render one completed request as a response line (engine-internal
+/// timing; used when driving an [`super::InferEngine`] directly).
 pub fn result_to_json(r: &InferResult) -> Json {
     let mut pairs = vec![
         ("id", Json::num(r.id as f64)),
@@ -96,30 +125,89 @@ pub fn result_to_json(r: &InferResult) -> Json {
     Json::obj(pairs)
 }
 
-/// Totals reported when the input stream closes.
-#[derive(Debug, Clone)]
-pub struct ServeSummary {
-    /// Requests accepted into the engine queue.
-    pub requests: u64,
-    /// Lines rejected at parse time or by `submit` validation.
-    pub errors: u64,
+/// Render a gateway outcome as a response line. Timing fields here are
+/// client-true (they include gateway queue wait); `id` is the client's.
+pub fn outcome_to_json(o: &ServeOutcome) -> Json {
+    match o {
+        ServeOutcome::Done {
+            client_id,
+            result,
+            replica,
+            queue_ms,
+            ttft_ms,
+            latency_ms,
+        } => {
+            let mut pairs = vec![
+                ("id", Json::num(*client_id as f64)),
+                (
+                    "tokens",
+                    Json::Arr(
+                        result.tokens.iter().map(|&t| Json::num(t as f64)).collect(),
+                    ),
+                ),
+                ("steps", Json::num(result.tokens.len() as f64)),
+                ("replica", Json::num(*replica as f64)),
+                ("queue_ms", Json::num(*queue_ms)),
+                ("latency_ms", Json::num(*latency_ms)),
+            ];
+            if let Some(t) = ttft_ms {
+                pairs.push(("ttft_ms", Json::num(*t)));
+            }
+            Json::obj(pairs)
+        }
+        ServeOutcome::Shed { client_id, reason, waited_ms } => Json::obj(vec![
+            ("id", Json::num(*client_id as f64)),
+            ("error", Json::str(format!("request shed: {}", reason.as_str()))),
+            ("shed", Json::str(reason.as_str())),
+            ("waited_ms", Json::num(*waited_ms)),
+        ]),
+        ServeOutcome::Failed { client_id, error } => Json::obj(vec![
+            ("id", Json::num(*client_id as f64)),
+            ("error", Json::str(error.clone())),
+        ]),
+    }
 }
 
-/// Drive the engine from a line-oriented reader until EOF, writing one
-/// response line per completed request to `output`. The reader runs on a
-/// background thread so requests arriving mid-decode join the running
-/// batch (continuous batching at the I/O boundary too).
+/// Totals reported when the input stream closes (or a drain stops the
+/// loop).
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    /// Requests accepted into the gateway admission queue.
+    pub requests: u64,
+    /// Lines rejected at parse time or by admission validation.
+    pub errors: u64,
+    /// Requests that completed with tokens.
+    pub completed: u64,
+    /// Requests shed from the queue (deadline expiry / draining).
+    pub shed: u64,
+    /// Client-true queue-wait percentiles over completed requests (ms).
+    pub queue_ms_p50: f64,
+    pub queue_ms_p99: f64,
+}
+
+/// How often the loop re-polls input/stop while waiting for outcomes.
+const POLL: Duration = Duration::from_millis(50);
+
+/// Drive the gateway from a line-oriented reader until EOF (or `stop`),
+/// writing one response line per outcome to `output`. The reader runs on
+/// a background thread so requests arriving mid-decode join running
+/// batches; admission backpressure blocks the reader (held-request
+/// retry) instead of dropping lines. Setting `stop` (SIGINT / drain)
+/// stops admitting, waits for in-flight requests, and returns.
 pub fn serve<R, W>(
-    engine: &mut InferEngine,
+    gateway: &Gateway,
     input: R,
     mut output: W,
     default_max_tokens: usize,
+    stop: Option<Arc<AtomicBool>>,
 ) -> anyhow::Result<ServeSummary>
 where
     R: BufRead + Send + 'static,
     W: Write,
 {
-    let (tx, rx) = Pipe::<String>::bounded(256);
+    let (line_tx, line_rx) = Pipe::<String>::bounded(256);
+    let eof = Arc::new(AtomicBool::new(false));
+    let eof_w = eof.clone();
     std::thread::Builder::new()
         .name("serve-reader".into())
         .spawn(move || {
@@ -128,83 +216,151 @@ where
                 if line.trim().is_empty() {
                     continue;
                 }
-                if !tx.send(line) {
+                if !line_tx.send(line) {
                     break; // server hung up
                 }
             }
+            eof_w.store(true, Ordering::Relaxed);
         })?;
-    let mut summary = ServeSummary { requests: 0, errors: 0 };
+    let (otx, orx) = mpsc::channel::<ServeOutcome>();
+    let mut summary = ServeSummary {
+        requests: 0,
+        errors: 0,
+        completed: 0,
+        shed: 0,
+        queue_ms_p50: 0.0,
+        queue_ms_p99: 0.0,
+    };
+    let queue_hist = crate::obs::Histogram::new();
     let mut next_auto_id = 0u64;
-    let mut input_open = true;
-    // Stop draining input once this many requests are queued: lines then
-    // back up in the bounded pipe and the reader thread blocks, so a
-    // client streaming faster than the engine decodes hits backpressure
-    // instead of growing the queue without limit.
-    let max_backlog = 4 * engine.manifest.batch().max(1);
-    while input_open || engine.has_work() {
-        // Drain lines already available without blocking (up to the
-        // backlog cap), so queued requests are admitted before the next
-        // decode step; block only when the engine would otherwise spin
-        // idle.
-        loop {
-            let line: String = if engine.has_work() {
-                if engine.queued() >= max_backlog {
+    let mut outstanding = 0u64;
+    // A request the gateway bounced with QueueFull: held and retried as
+    // outcomes drain, pausing input consumption (backpressure all the
+    // way to the pipe → the reader thread → the OS pipe buffer).
+    let mut held: Option<(InferRequest, SubmitOpts)> = None;
+    let submit = |req: InferRequest,
+                      opts: SubmitOpts,
+                      summary: &mut ServeSummary,
+                      outstanding: &mut u64,
+                      held: &mut Option<(InferRequest, SubmitOpts)>,
+                      output: &mut W|
+     -> anyhow::Result<()> {
+        let id = req.id;
+        match gateway.submit(req.clone(), opts.clone(), otx.clone()) {
+            Ok(()) => {
+                summary.requests += 1;
+                *outstanding += 1;
+            }
+            Err(
+                AdmitError::QueueFull { .. } | AdmitError::ShedLowPriority { .. },
+            ) => {
+                *held = Some((req, opts));
+            }
+            Err(e) => {
+                summary.errors += 1;
+                writeln!(
+                    output,
+                    "{}",
+                    Json::obj(vec![
+                        ("id", Json::num(id as f64)),
+                        ("error", Json::str(format!("{e:#}"))),
+                    ])
+                )?;
+            }
+        }
+        Ok(())
+    };
+    loop {
+        let stopped = stop.as_ref().is_some_and(|s| s.load(Ordering::Relaxed));
+        // Sample EOF *before* draining the pipe: if it was already set,
+        // every line the reader will ever send is in the pipe, so an
+        // empty pipe after the drain really means end of input (sampling
+        // after would race a reader that sends its last line, then sets
+        // the flag).
+        let eof_seen = eof.load(Ordering::Relaxed);
+        let mut input_drained = false;
+        if stopped {
+            if let Some((req, _)) = held.take() {
+                summary.errors += 1;
+                writeln!(
+                    output,
+                    "{}",
+                    Json::obj(vec![
+                        ("id", Json::num(req.id as f64)),
+                        ("error", Json::str("gateway draining")),
+                    ])
+                )?;
+            }
+        } else {
+            if let Some((req, opts)) = held.take() {
+                submit(req, opts, &mut summary, &mut outstanding, &mut held, &mut output)?;
+            }
+            while held.is_none() {
+                let Some(line) = line_rx.try_recv() else {
+                    input_drained = true;
                     break;
-                }
-                match rx.try_recv() {
-                    Some(l) => l,
-                    None => break,
-                }
-            } else {
-                // about to block for input: any responses/errors already
-                // written must reach the client first, or a request/reply
-                // client deadlocks against a buffering writer
-                output.flush()?;
-                match rx.recv() {
-                    Some(l) => l,
-                    None => {
-                        input_open = false;
-                        break;
+                };
+                match parse_request(&line, next_auto_id, default_max_tokens) {
+                    Ok((req, opts)) => {
+                        next_auto_id = next_auto_id.max(req.id).saturating_add(1);
+                        submit(
+                            req,
+                            opts,
+                            &mut summary,
+                            &mut outstanding,
+                            &mut held,
+                            &mut output,
+                        )?;
                     }
-                }
-            };
-            match parse_request(&line, next_auto_id, default_max_tokens) {
-                Ok(req) => {
-                    next_auto_id = next_auto_id.max(req.id).saturating_add(1);
-                    let id = req.id;
-                    match engine.submit(req) {
-                        Ok(()) => summary.requests += 1,
-                        Err(e) => {
-                            summary.errors += 1;
-                            // echo the id so the client can correlate the
-                            // rejection with its in-flight request
-                            writeln!(
-                                output,
-                                "{}",
-                                Json::obj(vec![
-                                    ("id", Json::num(id as f64)),
-                                    ("error", Json::str(format!("{e:#}"))),
-                                ])
-                            )?;
-                        }
+                    Err(e) => {
+                        summary.errors += 1;
+                        writeln!(
+                            output,
+                            "{}",
+                            Json::obj(vec![("error", Json::str(format!("{e:#}")))])
+                        )?;
                     }
-                }
-                Err(e) => {
-                    summary.errors += 1;
-                    writeln!(
-                        output,
-                        "{}",
-                        Json::obj(vec![("error", Json::str(format!("{e:#}")))])
-                    )?;
                 }
             }
         }
-        engine.step()?;
-        for r in engine.drain_finished() {
-            writeln!(output, "{}", result_to_json(&r))?;
+        let input_done = stopped || (eof_seen && input_drained && held.is_none());
+        if input_done && outstanding == 0 {
+            break;
+        }
+        // Responses must reach a request/reply client before we block,
+        // or it deadlocks against a buffering writer.
+        output.flush()?;
+        let mut handle = |o: ServeOutcome,
+                          summary: &mut ServeSummary,
+                          output: &mut W|
+         -> anyhow::Result<()> {
+            outstanding = outstanding.saturating_sub(1);
+            match &o {
+                ServeOutcome::Done { queue_ms, .. } => {
+                    summary.completed += 1;
+                    queue_hist.record_ms(*queue_ms);
+                }
+                ServeOutcome::Shed { .. } => summary.shed += 1,
+                ServeOutcome::Failed { .. } => summary.errors += 1,
+            }
+            writeln!(output, "{}", outcome_to_json(&o))?;
+            Ok(())
+        };
+        match orx.recv_timeout(POLL) {
+            Ok(o) => {
+                handle(o, &mut summary, &mut output)?;
+                while let Ok(o) = orx.try_recv() {
+                    handle(o, &mut summary, &mut output)?;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => unreachable!("otx held"),
         }
         output.flush()?;
     }
+    output.flush()?;
+    summary.queue_ms_p50 = queue_hist.p50();
+    summary.queue_ms_p99 = queue_hist.p99();
     Ok(summary)
 }
 
@@ -214,15 +370,18 @@ mod tests {
 
     #[test]
     fn parses_minimal_and_full_requests() {
-        let r = parse_request(r#"{"prompt": [5, 9]}"#, 7, 16).unwrap();
+        let (r, o) = parse_request(r#"{"prompt": [5, 9]}"#, 7, 16).unwrap();
         assert_eq!(r.id, 7);
         assert_eq!(r.prompt, vec![5, 9]);
         assert_eq!(r.max_tokens, 16);
         assert_eq!(r.method, DecodeMethod::Greedy);
+        assert_eq!(o.priority, 0);
+        assert_eq!(o.deadline, None);
 
-        let r = parse_request(
+        let (r, o) = parse_request(
             r#"{"id": 3, "prompt": [1], "max_tokens": 4, "method": "sample",
-               "temperature": 0.5, "top_k": 8, "top_p": 0.9, "seed": 11}"#,
+               "temperature": 0.5, "top_k": 8, "top_p": 0.9, "seed": 11,
+               "priority": 2, "deadline_ms": 250}"#,
             0,
             16,
         )
@@ -232,6 +391,8 @@ mod tests {
             r.method,
             DecodeMethod::Sample { temperature: 0.5, top_k: 8, top_p: 0.9, seed: 11 }
         );
+        assert_eq!(o.priority, 2);
+        assert_eq!(o.deadline, Some(Duration::from_millis(250)));
     }
 
     #[test]
@@ -243,6 +404,8 @@ mod tests {
         // out-of-range numbers must be rejected, not silently wrapped
         assert!(parse_request(r#"{"prompt": [4294967301]}"#, 0, 8).is_err());
         assert!(parse_request(r#"{"id": -1, "prompt": [1]}"#, 0, 8).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "deadline_ms": -5}"#, 0, 8).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "priority": "high"}"#, 0, 8).is_err());
     }
 
     #[test]
@@ -263,5 +426,41 @@ mod tests {
         assert_eq!(v.get("steps").unwrap().as_i64(), Some(3));
         let ttft = v.get("ttft_ms").unwrap().as_f64().unwrap();
         assert!((ttft - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn outcome_lines_are_json() {
+        let done = ServeOutcome::Done {
+            client_id: 42,
+            result: InferResult {
+                id: 7, // internal id: must NOT leak into the response
+                prompt_len: 2,
+                tokens: vec![4, 1],
+                started_step: 0,
+                finished_step: 2,
+                queue_seconds: 0.0,
+                latency_seconds: 0.01,
+                ttft_seconds: Some(0.005),
+            },
+            replica: 1,
+            queue_ms: 0.4,
+            ttft_ms: Some(5.4),
+            latency_ms: 10.4,
+        };
+        let v = Json::parse(&outcome_to_json(&done).to_string()).unwrap();
+        assert_eq!(v.get("id").unwrap().as_i64(), Some(42));
+        assert_eq!(v.get("replica").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert!(v.get("queue_ms").unwrap().as_f64().unwrap() > 0.0);
+
+        let shed = ServeOutcome::Shed {
+            client_id: 9,
+            reason: crate::serve::ShedReason::DeadlineExpired,
+            waited_ms: 125.0,
+        };
+        let v = Json::parse(&outcome_to_json(&shed).to_string()).unwrap();
+        assert_eq!(v.get("id").unwrap().as_i64(), Some(9));
+        assert_eq!(v.get("shed").unwrap().as_str(), Some("deadline_expired"));
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("deadline"));
     }
 }

@@ -152,7 +152,8 @@
 //! sampling / beam search with length penalty) and a continuous-batching
 //! engine that packs independent requests into the fixed `B` batch
 //! slots, retires rows at EOS, and refills freed slots from the request
-//! queue mid-flight (`t5x serve` speaks JSONL over stdin/stdout).
+//! queue mid-flight (`t5x serve` speaks JSONL over stdin/stdout, or
+//! HTTP — see *Serving at scale* below).
 //!
 //! ### KV-cached incremental decoding (the serving hot path)
 //!
@@ -195,6 +196,50 @@
 //!   deterministic tie-breaks and is golden-tested against a brute-force
 //!   exhaustive reference.
 //!
+//! ## Serving at scale ([`serve`])
+//!
+//! `t5x serve` is fronted by a production-style gateway: one bounded,
+//! priority-ordered **admission queue** feeding N **engine replicas**
+//! (`--replicas N`; [`infer::InferEngine::replica`] clones share the
+//! compiled executables and Arc-backed weights, each replica owns
+//! private slots/KV cache and steps on its own thread), with an
+//! optional stdlib-only **HTTP/1.1 front end** (`--http-port`). Both
+//! transports — HTTP and the JSONL stdin loop — submit through the same
+//! [`serve::Gateway`], so scheduling, shedding, and metrics live in one
+//! place.
+//!
+//! **Request lifecycle:** submit → validate (HTTP `400` on bad
+//! requests) → admission queue (bounded `--queue-depth`; full ⇒ `429` +
+//! `Retry-After`, and past `--shed-watermark` all `priority <= 0` work
+//! is shed early with `429` while urgent work still gets in) → a
+//! replica with free slots pulls it (least-loaded by construction: each
+//! replica pulls at most its free-slot count) → continuous-batching
+//! decode → outcome routed back to the submitter. A request whose
+//! `deadline_ms` expires while queued is shed *before* occupying a slot
+//! (`serve/shed_deadline`, HTTP `504`); once dispatched it always runs
+//! to completion. Replica routing never changes tokens: per-row decode
+//! is independent of batch neighbors and replicas share weights, so
+//! outputs are byte-identical to a solo engine run
+//! (`tests/integration_serve.rs`).
+//!
+//! **Graceful shutdown:** SIGINT or `POST /admin/drain` stops
+//! admission, lets replicas finish queued + in-flight requests, flushes
+//! trace/metrics files, and prints per-replica summaries.
+//!
+//! Quickstart:
+//!
+//! ```text
+//! t5x serve --model t5-nano-dec --replicas 2 --http-port 8077 \
+//!           --queue-depth 32 --shed-watermark 24
+//! curl -s localhost:8077/v1/generate -d \
+//!   '{"prompt": [5, 9, 11], "max_tokens": 8, "priority": 1, "deadline_ms": 500}'
+//! # => {"id": ..., "tokens": [...], "text": "...", "steps": 8,
+//! #     "replica": 0, "queue_ms": 0.2, "ttft_ms": 1.9, "latency_ms": 14.8}
+//! curl -s localhost:8077/metrics   # counters + p50/p95/p99 + per-replica
+//! curl -s localhost:8077/healthz
+//! curl -s -X POST localhost:8077/admin/drain
+//! ```
+//!
 //! ## Observability ([`obs`], re-exported through [`metrics`])
 //!
 //! The paper's operational claims ("prevent bottlenecks when infeeding
@@ -225,7 +270,10 @@
 //!   batch steps; per-request `req <id> queued` / `req <id>` spans land on
 //!   `serve/queue` and `serve/slot<i>` virtual tracks, and
 //!   `serve/queue_depth` / `serve/active_slots` counter samples chart
-//!   occupancy.
+//!   occupancy. Under the gateway each replica's engine tracks are
+//!   namespaced `serve/replica<i>/...` and its thread track carries
+//!   `serve/replica<i>/step` spans, so an N-replica trace shows every
+//!   replica's timeline side by side.
 //!
 //! **Overhead contract:** tracing off (the default, or outside the
 //! `--profile-steps N..M` window) ⇒ a span is one relaxed atomic load —
@@ -254,6 +302,7 @@ pub mod optim;
 pub mod partitioning;
 pub mod runtime;
 pub mod seqio;
+pub mod serve;
 pub mod testing;
 pub mod trainer;
 pub mod util;

@@ -19,7 +19,13 @@
 //!            [--top-p 0.95] [--seed 7] [--beam 4] [--alpha 0.6] \
 //!            [--decode-mode auto|kv|rescore]
 //! t5x serve  --model t5-nano-dec [--len 16] [--decode-mode auto|kv|rescore]
-//!            [--trace-out trace.json]  # JSONL requests on stdin
+//!            [--replicas N] [--queue-depth D] [--shed-watermark W]
+//!            [--http-port P] [--http-addr A] [--http-threads T]
+//!            [--trace-out trace.json]
+//!            # default: JSONL requests on stdin; --http-port (or gin
+//!            # serve.http_port) switches to the HTTP front end
+//!            # (POST /v1/generate, GET /healthz, GET /metrics,
+//!            #  POST /admin/drain); ctrl-C drains gracefully either way
 //! t5x trace-summary trace.json [--top 15]
 //!            # top spans by self-time + infeed/compute/comm-bound verdict
 //!
@@ -617,7 +623,28 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Resolve a `serve.*` gateway knob: CLI flag > gin binding > None.
+fn serve_opt_usize(
+    args: &Args,
+    gin: &Config,
+    flag: &str,
+    key: &str,
+) -> anyhow::Result<Option<usize>> {
+    match args.get(flag) {
+        Some(s) => Ok(Some(s.parse::<usize>().map_err(|e| {
+            anyhow::anyhow!("--{flag} '{s}': {e}")
+        })?)),
+        None => Ok(gin
+            .get("serve", key)
+            .and_then(|v| v.as_i64())
+            .map(|v| v.max(0) as usize)),
+    }
+}
+
 fn cmd_serve(args: &Args, gin: &Config) -> anyhow::Result<()> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use t5x::serve::{Gateway, GatewayConfig, HttpConfig, HttpServer};
+
     let model = args.get_or("model", "t5-nano-dec");
     let arts = Artifacts::load_default()?;
     let device = DeviceHandle::spawn()?;
@@ -626,40 +653,144 @@ fn cmd_serve(args: &Args, gin: &Config) -> anyhow::Result<()> {
     let mut engine =
         InferEngine::with_mode(&arts, &device, &model, &params, 1, decode_mode_flag(args)?)?;
     let trace = arm_engine_tracer(args, Some(gin), &mut engine)?;
-    let default_max = args.get_usize("len", 16)?;
+    let default_max = match args.get("len") {
+        Some(_) => args.get_usize("len", 16)?,
+        None => gin.usize_or("serve", "default_max_tokens", 16),
+    };
+    // Gateway knobs: CLI flag > gin serve.* > default. HTTP mode engages
+    // iff a port is named on either side; otherwise JSONL-on-stdin.
+    let replicas = serve_opt_usize(args, gin, "replicas", "replicas")?
+        .unwrap_or(1)
+        .max(1);
+    let queue_depth = serve_opt_usize(args, gin, "queue-depth", "queue_depth")?.unwrap_or(64);
+    let shed_watermark = serve_opt_usize(args, gin, "shed-watermark", "shed_watermark")?;
+    let http_port = match serve_opt_usize(args, gin, "http-port", "http_port")? {
+        Some(p) => Some(u16::try_from(p).map_err(|_| {
+            anyhow::anyhow!("http port {p} out of range (0..=65535; 0 = ephemeral)")
+        })?),
+        None => None,
+    };
+    let http_addr = args
+        .get("http-addr")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| gin.str_or("serve", "http_addr", "127.0.0.1"));
+    let http_threads = serve_opt_usize(args, gin, "http-threads", "http_threads")?.unwrap_or(8);
+
+    let batch = m.batch();
+    let mode_name = engine.mode().name();
+    engine.set_trace_label("serve/replica0");
+    let mut engines = Vec::with_capacity(replicas);
+    engines.push(engine);
+    for i in 1..replicas {
+        let mut r = engines[0].replica();
+        r.set_trace_label(format!("serve/replica{i}"));
+        engines.push(r);
+    }
+    let gw = Gateway::launch(engines, GatewayConfig { queue_depth, shed_watermark });
+
+    // SIGINT → drain: stop admission, let in-flight requests finish, then
+    // fall through to the normal summary/trace-export path. A second
+    // ctrl-C exits immediately (the handler re-arms the default).
+    let stop = Arc::new(AtomicBool::new(false));
+    t5x::serve::signal::install_sigint();
+    {
+        let stop = stop.clone();
+        let gwc = gw.clone();
+        std::thread::Builder::new()
+            .name("sigint-watch".into())
+            .spawn(move || loop {
+                if t5x::serve::signal::sigint_triggered() {
+                    eprintln!("SIGINT: draining (ctrl-C again to exit immediately)");
+                    stop.store(true, Ordering::Relaxed);
+                    gwc.drain();
+                    return;
+                }
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            })?;
+    }
+
+    if let Some(port) = http_port {
+        let server = HttpServer::start(
+            gw.clone(),
+            HttpConfig {
+                addr: http_addr.clone(),
+                port,
+                threads: http_threads,
+                default_max_tokens: default_max,
+            },
+            stop.clone(),
+        )?;
+        eprintln!(
+            "serving {model} over HTTP at {http_addr}:{} — {replicas} replica(s) x \
+             {batch} slots ({mode_name} decode), queue depth {queue_depth}{}; \
+             POST /v1/generate, GET /healthz, GET /metrics, POST /admin/drain \
+             (or ctrl-C) to stop",
+            server.port(),
+            match shed_watermark {
+                Some(w) => format!(", shed watermark {w}"),
+                None => String::new(),
+            }
+        );
+        while !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        gw.drain();
+        server.join();
+    } else {
+        eprintln!(
+            "serving {model} — {replicas} replica(s) x {batch} slots ({mode_name} \
+             decode), queue depth {queue_depth}: one JSON request per stdin line, \
+             e.g. {{\"prompt\": [5, 9, 11], \"max_tokens\": 8, \"priority\": 1}}; \
+             EOF (or ctrl-C) to stop",
+        );
+        let served = t5x::infer::server::serve(
+            &gw,
+            std::io::BufReader::new(std::io::stdin()),
+            std::io::stdout(),
+            default_max,
+            Some(stop.clone()),
+        )?;
+        eprintln!(
+            "accepted {} requests ({} rejected, {} shed): queue wait p50 {:.2} ms / \
+             p99 {:.2} ms",
+            served.requests, served.errors, served.shed, served.queue_ms_p50,
+            served.queue_ms_p99
+        );
+    }
+    stop.store(true, Ordering::Relaxed);
+    let report = gw.shutdown();
     eprintln!(
-        "serving {model} (batch {} slots, {} decode mode): one JSON request \
-         per stdin line, e.g. {{\"prompt\": [5, 9, 11], \"max_tokens\": 8}}; \
-         EOF to stop",
-        m.batch(),
-        engine.mode().name()
+        "gateway: {} completed, {} tokens, {:.1} tok/s over {:.1}s; queue p50 \
+         {:.2} ms / p99 {:.2} ms, ttft p50 {:.2} ms / p99 {:.2} ms, latency p50 \
+         {:.2} ms / p99 {:.2} ms",
+        report.completed,
+        report.tokens,
+        report.tokens_per_sec,
+        report.wall_seconds,
+        report.queue_ms_p50,
+        report.queue_ms_p99,
+        report.ttft_ms_p50,
+        report.ttft_ms_p99,
+        report.latency_ms_p50,
+        report.latency_ms_p99
     );
-    let served = t5x::infer::server::serve(
-        &mut engine,
-        std::io::BufReader::new(std::io::stdin()),
-        std::io::stdout(),
-        default_max,
-    )?;
-    let s = engine.summary();
-    eprintln!(
-        "served {} requests ({} rejected): {} decode steps ({} prefills, \
-         {} mode), {} tokens, {:.1} tok/s, slot utilization {:.1}%, \
-         {} mid-flight refills",
-        served.requests,
-        served.errors,
-        s.steps,
-        s.prefills,
-        s.mode,
-        s.tokens,
-        s.tokens_per_sec,
-        s.slot_utilization * 100.0,
-        s.refills
-    );
-    eprintln!(
-        "latency: ttft p50 {:.2} ms / p99 {:.2} ms, request p50 {:.2} ms / \
-         p99 {:.2} ms",
-        s.ttft_ms_p50, s.ttft_ms_p99, s.latency_ms_p50, s.latency_ms_p99
-    );
+    for (i, s) in report.replicas.iter().enumerate() {
+        eprintln!(
+            "  replica {i}: {} completed, {} steps ({} prefills, {} mode), {} \
+             tokens, {:.1} tok/s, slot utilization {:.1}%, {} mid-flight refills",
+            s.completed,
+            s.steps,
+            s.prefills,
+            s.mode,
+            s.tokens,
+            s.tokens_per_sec,
+            s.slot_utilization * 100.0,
+            s.refills
+        );
+    }
     if let Some((tracer, path)) = &trace {
         tracer.export_or_warn(path);
     }

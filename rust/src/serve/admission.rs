@@ -1,0 +1,419 @@
+//! Deadline-aware admission queue with bounded depth and load shedding.
+//!
+//! One [`AdmissionQueue`] sits between every transport (HTTP, JSONL) and
+//! the replica pool. It enforces three pressure-relief valves, each with
+//! its own counter so `/metrics` can tell them apart:
+//!
+//! 1. **Bounded depth** — a submit past `capacity` fails immediately with
+//!    [`AdmitError::QueueFull`] (`serve/rejected_full`), which the HTTP
+//!    layer renders as `429` + `Retry-After`. The queue never grows
+//!    without bound and a slow engine surfaces as backpressure, not as
+//!    unbounded memory.
+//! 2. **Load-shedding watermark** — once depth reaches `watermark`,
+//!    submits with `priority <= 0` are rejected
+//!    ([`AdmitError::ShedLowPriority`], `serve/shed_lowpri`) while
+//!    higher-priority work is still admitted until depth hits capacity.
+//! 3. **Deadline shedding** — a request whose `deadline_ms` elapsed while
+//!    it waited is dropped at *pop* time, before it ever occupies an
+//!    engine slot (`serve/shed_deadline`); its submitter receives
+//!    [`ServeOutcome::Shed`] instead of silently timing out.
+//!
+//! Ordering is priority-descending, FIFO within a priority level (a
+//! submission sequence number breaks ties), implemented as a
+//! `BinaryHeap` under one mutex with a condvar for blocking pops.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::{OutcomeSender, ServeOutcome, ShedReason, SubmitOpts};
+use crate::infer::InferRequest;
+use crate::metrics::CounterSet;
+use crate::obs::Histogram;
+
+/// Suggested client back-off rendered into `Retry-After` (seconds).
+pub const RETRY_AFTER_SECS: u64 = 1;
+
+/// Why a submit was rejected synchronously (never enters the queue).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmitError {
+    /// Queue depth is at capacity.
+    QueueFull { depth: usize, retry_after_secs: u64 },
+    /// Depth crossed the shed watermark and the request's priority is not
+    /// above the default (0).
+    ShedLowPriority { depth: usize, watermark: usize, retry_after_secs: u64 },
+    /// The gateway is draining; no new work is admitted.
+    Draining,
+    /// The request failed validation (bad prompt, bad method, ...).
+    Invalid(String),
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull { depth, .. } => {
+                write!(f, "admission queue full (depth {depth})")
+            }
+            AdmitError::ShedLowPriority { depth, watermark, .. } => write!(
+                f,
+                "load shedding: queue depth {depth} >= watermark {watermark} \
+                 and request priority is not above 0"
+            ),
+            AdmitError::Draining => write!(f, "gateway is draining"),
+            AdmitError::Invalid(msg) => write!(f, "invalid request: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// An admitted request waiting for a replica: the validated engine
+/// request plus everything needed to route its outcome back.
+pub struct Pending {
+    /// Engine-facing request. Its `id` is the gateway-internal id (unique
+    /// across clients); the client's original id travels in `client_id`.
+    pub req: InferRequest,
+    pub opts: SubmitOpts,
+    /// The id the submitting client used (echoed in responses).
+    pub client_id: u64,
+    /// When the gateway accepted the request (queue-wait clock).
+    pub submitted: Instant,
+    pub reply: OutcomeSender,
+}
+
+impl Pending {
+    /// True once the request's deadline elapsed while queued.
+    fn expired(&self) -> bool {
+        match self.opts.deadline {
+            Some(dl) => self.submitted.elapsed() >= dl,
+            None => false,
+        }
+    }
+}
+
+struct Entry {
+    priority: i64,
+    /// Submission sequence number; later submissions sort after earlier
+    /// ones at equal priority (FIFO within a level).
+    seq: u64,
+    pending: Pending,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Max-heap: highest priority first, then lowest seq (oldest).
+        self.priority.cmp(&other.priority).then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct State {
+    heap: BinaryHeap<Entry>,
+    next_seq: u64,
+    /// False once draining: submits fail, pops return what's left then
+    /// [`Popped::Closed`].
+    open: bool,
+}
+
+/// Result of [`AdmissionQueue::pop`].
+pub enum Popped {
+    /// Up to `max` requests in dispatch order (possibly empty when
+    /// non-blocking or when `max == 0`).
+    Batch(Vec<Pending>),
+    /// The queue is closed and empty; no more work will ever arrive.
+    Closed,
+}
+
+/// The bounded, priority-ordered, deadline-shedding admission queue.
+/// Thread-safe; shared as a plain reference from within [`super::Gateway`].
+pub struct AdmissionQueue {
+    state: Mutex<State>,
+    cv: Condvar,
+    capacity: usize,
+    watermark: usize,
+    counters: CounterSet,
+    /// Gateway queue wait (submit → dispatch) of dispatched requests, ms.
+    queue_wait: Histogram,
+    next_internal_id: AtomicU64,
+}
+
+impl AdmissionQueue {
+    /// `capacity` bounds queue depth; `watermark <= capacity` arms early
+    /// shedding of `priority <= 0` work (pass `capacity` to disable).
+    pub fn new(capacity: usize, watermark: usize, counters: CounterSet) -> AdmissionQueue {
+        AdmissionQueue {
+            state: Mutex::new(State {
+                heap: BinaryHeap::new(),
+                next_seq: 0,
+                open: true,
+            }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+            watermark: watermark.max(1),
+            counters,
+            queue_wait: Histogram::new(),
+            next_internal_id: AtomicU64::new(1),
+        }
+    }
+
+    /// A fresh gateway-internal request id (clients may reuse ids freely;
+    /// the engine sees only these).
+    pub fn next_internal_id(&self) -> u64 {
+        self.next_internal_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Admit `pending` or reject it with explicit backpressure.
+    pub fn submit(&self, pending: Pending) -> Result<(), AdmitError> {
+        let mut st = self.state.lock().unwrap();
+        if !st.open {
+            self.counters.inc("serve/rejected_draining");
+            return Err(AdmitError::Draining);
+        }
+        let depth = st.heap.len();
+        if depth >= self.capacity {
+            self.counters.inc("serve/rejected_full");
+            return Err(AdmitError::QueueFull {
+                depth,
+                retry_after_secs: RETRY_AFTER_SECS,
+            });
+        }
+        if depth >= self.watermark && pending.opts.priority <= 0 {
+            self.counters.inc("serve/shed_lowpri");
+            return Err(AdmitError::ShedLowPriority {
+                depth,
+                watermark: self.watermark,
+                retry_after_secs: RETRY_AFTER_SECS,
+            });
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.heap.push(Entry { priority: pending.opts.priority, seq, pending });
+        self.counters.inc("serve/admitted");
+        self.counters.set_max("serve/queue_depth_peak", st.heap.len() as u64);
+        drop(st);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Current queue depth (for `/metrics` and trace counters).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().heap.len()
+    }
+
+    /// False once [`Self::close`] was called (the gateway is draining).
+    pub fn is_open(&self) -> bool {
+        self.state.lock().unwrap().open
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn watermark(&self) -> usize {
+        self.watermark
+    }
+
+    /// Pop up to `max` requests in dispatch order, shedding any whose
+    /// deadline expired while queued (their submitters are notified with
+    /// [`ServeOutcome::Shed`] and they never count toward `max`). With
+    /// `block`, waits until at least one request is available or the
+    /// queue closes; otherwise returns an empty batch immediately.
+    pub fn pop(&self, max: usize, block: bool) -> Popped {
+        if max == 0 {
+            return Popped::Batch(Vec::new());
+        }
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let mut batch = Vec::new();
+            while batch.len() < max {
+                let Some(entry) = st.heap.pop() else { break };
+                let p = entry.pending;
+                if p.expired() {
+                    self.counters.inc("serve/shed_deadline");
+                    let waited_ms = p.submitted.elapsed().as_secs_f64() * 1e3;
+                    let _ = p.reply.send(ServeOutcome::Shed {
+                        client_id: p.client_id,
+                        reason: ShedReason::DeadlineExpired,
+                        waited_ms,
+                    });
+                    continue;
+                }
+                self.counters.inc("serve/dispatched");
+                self.queue_wait.record_seconds(p.submitted.elapsed().as_secs_f64());
+                batch.push(p);
+            }
+            if !batch.is_empty() {
+                return Popped::Batch(batch);
+            }
+            if !st.open && st.heap.is_empty() {
+                return Popped::Closed;
+            }
+            if !block {
+                return Popped::Batch(batch);
+            }
+            // Re-check periodically: deadlines expire without a notify.
+            let (guard, _) =
+                self.cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Stop admitting; blocked pops drain what's left, then see
+    /// [`Popped::Closed`].
+    pub fn close(&self) {
+        self.state.lock().unwrap().open = false;
+        self.cv.notify_all();
+    }
+
+    /// Remove and return everything still queued (shutdown path when no
+    /// replica will drain it).
+    pub fn drain_remaining(&self) -> Vec<Pending> {
+        let mut st = self.state.lock().unwrap();
+        let mut out: Vec<Entry> = st.heap.drain().collect();
+        // Heap drain order is arbitrary; restore dispatch order.
+        out.sort_by(|a, b| b.cmp(a));
+        out.into_iter().map(|e| e.pending).collect()
+    }
+
+    pub fn counters(&self) -> &CounterSet {
+        &self.counters
+    }
+
+    /// Gateway queue-wait histogram (submit → dispatch) of dispatched
+    /// requests.
+    pub fn queue_wait(&self) -> &Histogram {
+        &self.queue_wait
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::DecodeMethod;
+    use std::sync::mpsc;
+
+    fn pending(
+        q: &AdmissionQueue,
+        client_id: u64,
+        opts: SubmitOpts,
+    ) -> (Pending, mpsc::Receiver<ServeOutcome>) {
+        let (tx, rx) = mpsc::channel();
+        let p = Pending {
+            req: InferRequest {
+                id: q.next_internal_id(),
+                prompt: vec![5, 9],
+                max_tokens: 4,
+                method: DecodeMethod::Greedy,
+            },
+            opts,
+            client_id,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        (p, rx)
+    }
+
+    fn queue(cap: usize, watermark: usize) -> AdmissionQueue {
+        AdmissionQueue::new(cap, watermark, CounterSet::new())
+    }
+
+    #[test]
+    fn pops_by_priority_then_fifo() {
+        let q = queue(8, 8);
+        for (cid, pri) in [(1u64, 0i64), (2, 5), (3, 0), (4, 5)] {
+            let (p, _rx) = pending(&q, cid, SubmitOpts { priority: pri, deadline: None });
+            q.submit(p).unwrap();
+        }
+        let Popped::Batch(batch) = q.pop(8, false) else { panic!("closed") };
+        let order: Vec<u64> = batch.iter().map(|p| p.client_id).collect();
+        // priority 5 first (FIFO within level), then priority 0 FIFO.
+        assert_eq!(order, vec![2, 4, 1, 3]);
+    }
+
+    #[test]
+    fn rejects_past_capacity_and_watermark() {
+        let q = queue(3, 2);
+        let (p, _r1) = pending(&q, 1, SubmitOpts::default());
+        q.submit(p).unwrap();
+        let (p, _r2) = pending(&q, 2, SubmitOpts::default());
+        q.submit(p).unwrap();
+        // depth 2 == watermark: default priority is shed...
+        let (p, _r3) = pending(&q, 3, SubmitOpts::default());
+        match q.submit(p) {
+            Err(AdmitError::ShedLowPriority { depth: 2, watermark: 2, .. }) => {}
+            other => panic!("expected watermark shed, got {other:?}"),
+        }
+        assert_eq!(q.counters().get("serve/shed_lowpri"), 1);
+        // ...but priority > 0 still gets in until capacity.
+        let (p, _r4) = pending(&q, 4, SubmitOpts { priority: 1, deadline: None });
+        q.submit(p).unwrap();
+        let (p, _r5) = pending(&q, 5, SubmitOpts { priority: 9, deadline: None });
+        match q.submit(p) {
+            Err(AdmitError::QueueFull { depth: 3, .. }) => {}
+            other => panic!("expected queue full, got {other:?}"),
+        }
+        assert_eq!(q.counters().get("serve/rejected_full"), 1);
+        assert_eq!(q.depth(), 3);
+    }
+
+    #[test]
+    fn sheds_expired_deadlines_at_pop() {
+        let q = queue(8, 8);
+        let (p, rx) = pending(
+            &q,
+            7,
+            SubmitOpts { priority: 0, deadline: Some(Duration::ZERO) },
+        );
+        q.submit(p).unwrap();
+        let (p, _rx2) = pending(&q, 8, SubmitOpts::default());
+        q.submit(p).unwrap();
+        let Popped::Batch(batch) = q.pop(8, false) else { panic!("closed") };
+        // Only the live request dispatches; the expired one was shed.
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].client_id, 8);
+        assert_eq!(q.counters().get("serve/shed_deadline"), 1);
+        match rx.try_recv().unwrap() {
+            ServeOutcome::Shed { client_id: 7, reason, .. } => {
+                assert_eq!(reason, ShedReason::DeadlineExpired);
+            }
+            other => panic!("expected shed outcome, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q = queue(4, 4);
+        let (p, _rx) = pending(&q, 1, SubmitOpts::default());
+        q.submit(p).unwrap();
+        q.close();
+        let (p, _rx2) = pending(&q, 2, SubmitOpts::default());
+        assert_eq!(q.submit(p), Err(AdmitError::Draining));
+        let Popped::Batch(batch) = q.pop(4, true) else { panic!("closed early") };
+        assert_eq!(batch.len(), 1);
+        assert!(matches!(q.pop(4, true), Popped::Closed));
+    }
+
+    #[test]
+    fn drain_remaining_returns_dispatch_order() {
+        let q = queue(8, 8);
+        for (cid, pri) in [(1u64, 0i64), (2, 3), (3, 0)] {
+            let (p, _rx) = pending(&q, cid, SubmitOpts { priority: pri, deadline: None });
+            q.submit(p).unwrap();
+        }
+        let order: Vec<u64> =
+            q.drain_remaining().iter().map(|p| p.client_id).collect();
+        assert_eq!(order, vec![2, 1, 3]);
+        assert_eq!(q.depth(), 0);
+    }
+}

@@ -1,0 +1,389 @@
+//! Stdlib-only HTTP/1.1 front end over the [`Gateway`].
+//!
+//! Routes:
+//!
+//! * `POST /v1/generate` — body is the same JSON schema as the JSONL
+//!   transport (`prompt` required; `id`, `max_tokens`, `method`,
+//!   `temperature`/`top_k`/`top_p`/`seed`, `priority`, `deadline_ms`
+//!   optional). `200` carries `tokens`/`text`/`steps`/`replica`/
+//!   `queue_ms`/`ttft_ms`/`latency_ms`. Admission rejections map to
+//!   status codes: queue full / low-priority shed → `429` with
+//!   `Retry-After`, draining → `503`, invalid request → `400`, deadline
+//!   expired in queue → `504`.
+//! * `GET /healthz` — liveness + replica count + queue depth.
+//! * `GET /metrics` — gateway counters, histogram percentiles, queue
+//!   state, per-replica utilization (JSON; see
+//!   [`Gateway::metrics_json`]).
+//! * `POST /admin/drain` — stop admission and begin graceful shutdown
+//!   (same path as SIGINT).
+//!
+//! Mechanics: one nonblocking accept loop feeds a fixed pool of worker
+//! threads over a channel; each worker speaks HTTP/1.1 with keep-alive
+//! on its connection and blocks on the gateway outcome channel while its
+//! request decodes. Concurrency is bounded by the pool size — a slow
+//! client can hold one worker, never the engine.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::admission::AdmitError;
+use super::router::Gateway;
+use super::{ServeOutcome, ShedReason};
+use crate::infer::server::{outcome_to_json, parse_request};
+use crate::seqio::vocab::{ByteVocabulary, Vocabulary};
+use crate::util::json::Json;
+
+/// Auto-assigned ids for bodies without `"id"` (process-global so two
+/// anonymous HTTP clients never collide).
+static NEXT_HTTP_ID: AtomicU64 = AtomicU64::new(1_000_000);
+
+/// Front-end knobs (`serve.http_port` etc. in gin, `--http-*` CLI flags).
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    pub addr: String,
+    /// 0 binds an ephemeral port (tests); read it back via
+    /// [`HttpServer::port`].
+    pub port: u16,
+    /// Worker-thread pool size (max concurrently-served connections).
+    pub threads: usize,
+    /// `max_tokens` when the body doesn't set one.
+    pub default_max_tokens: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1".to_string(),
+            port: 0,
+            threads: 8,
+            default_max_tokens: 16,
+        }
+    }
+}
+
+/// A running HTTP front end; dropping it does NOT stop it — set the
+/// shared `stop` flag (or POST `/admin/drain`) and call
+/// [`HttpServer::join`].
+pub struct HttpServer {
+    port: u16,
+    accept: JoinHandle<()>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind and start serving. The accept loop polls `stop` (~25 ms) and
+    /// exits once it's set; workers drain queued connections, then exit.
+    pub fn start(
+        gateway: Arc<Gateway>,
+        cfg: HttpConfig,
+        stop: Arc<AtomicBool>,
+    ) -> anyhow::Result<HttpServer> {
+        let listener = TcpListener::bind((cfg.addr.as_str(), cfg.port))
+            .map_err(|e| anyhow::anyhow!("binding {}:{}: {e}", cfg.addr, cfg.port))?;
+        let port = listener.local_addr()?.port();
+        listener.set_nonblocking(true)?;
+        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut workers = Vec::new();
+        for w in 0..cfg.threads.max(1) {
+            let rx = conn_rx.clone();
+            let gw = gateway.clone();
+            let stopc = stop.clone();
+            let max_tokens = cfg.default_max_tokens;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("http-worker{w}"))
+                    .spawn(move || loop {
+                        // Holding the lock only for the recv keeps the
+                        // other workers runnable.
+                        let conn = rx.lock().unwrap().recv();
+                        match conn {
+                            Ok(stream) => {
+                                handle_connection(&gw, stream, max_tokens, &stopc)
+                            }
+                            Err(_) => break, // accept loop gone
+                        }
+                    })?,
+            );
+        }
+        let accept = std::thread::Builder::new().name("http-accept".into()).spawn(
+            move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if conn_tx.send(stream).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(25)),
+                    }
+                }
+                // Dropping conn_tx here unblocks every idle worker.
+            },
+        )?;
+        Ok(HttpServer { port, accept, workers })
+    }
+
+    /// The bound port (differs from the config's when it asked for 0).
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    /// Join the accept loop and worker pool (call after setting the stop
+    /// flag; in-flight connections finish first).
+    pub fn join(self) {
+        let _ = self.accept.join();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+struct Request {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    body: Vec<u8>,
+}
+
+/// Read one HTTP/1.1 request; `Ok(None)` on clean EOF (client closed a
+/// keep-alive connection between requests).
+fn read_request(reader: &mut BufReader<TcpStream>) -> std::io::Result<Option<Request>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let path = parts.next().unwrap_or("/").to_string();
+    let mut content_length = 0usize;
+    let mut keep_alive = true; // HTTP/1.1 default
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            return Ok(None);
+        }
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let v = v.trim();
+            match k.to_ascii_lowercase().as_str() {
+                "content-length" => content_length = v.parse().unwrap_or(0),
+                "connection" => keep_alive = !v.eq_ignore_ascii_case("close"),
+                _ => {}
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Some(Request { method, path, keep_alive, body }))
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    extra_headers: &[(&str, String)],
+    body: &Json,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let body = format!("{body}\n");
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn err_body(msg: impl Into<String>) -> Json {
+    Json::obj(vec![("error", Json::str(msg.into()))])
+}
+
+/// Serve requests on one connection until it closes (keep-alive loop).
+fn handle_connection(
+    gw: &Arc<Gateway>,
+    stream: TcpStream,
+    default_max_tokens: usize,
+    stop: &Arc<AtomicBool>,
+) {
+    // Bound header/body reads so an idle keep-alive connection frees its
+    // worker; blocking on a decode outcome is not affected.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut stream = stream;
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) | Err(_) => return, // EOF / timeout / bad peer
+        };
+        let mut keep = req.keep_alive && !stop.load(Ordering::Relaxed);
+        let res = match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/v1/generate") => handle_generate(gw, &req.body, default_max_tokens),
+            ("GET", "/healthz") => (200, "OK", Vec::new(), gw.healthz_json()),
+            ("GET", "/metrics") => (200, "OK", Vec::new(), gw.metrics_json()),
+            ("POST", "/admin/drain") => {
+                stop.store(true, Ordering::Relaxed);
+                gw.drain();
+                keep = false;
+                (200, "OK", Vec::new(), Json::obj(vec![("status", Json::str("draining"))]))
+            }
+            (_, path) => {
+                (404, "Not Found", Vec::new(), err_body(format!("no route for {path}")))
+            }
+        };
+        let (status, reason, headers, body) = res;
+        if write_response(&mut stream, status, reason, &headers, &body, keep).is_err() {
+            return;
+        }
+        if !keep {
+            return;
+        }
+    }
+}
+
+type Response = (u16, &'static str, Vec<(&'static str, String)>, Json);
+
+/// `POST /v1/generate`: parse, submit, block for the outcome, map it to
+/// a status code + JSON body.
+fn handle_generate(gw: &Arc<Gateway>, body: &[u8], default_max_tokens: usize) -> Response {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return (400, "Bad Request", Vec::new(), err_body("body is not UTF-8")),
+    };
+    let auto_id = NEXT_HTTP_ID.fetch_add(1, Ordering::Relaxed);
+    let (req, opts) = match parse_request(text, auto_id, default_max_tokens) {
+        Ok(p) => p,
+        Err(e) => return (400, "Bad Request", Vec::new(), err_body(format!("{e:#}"))),
+    };
+    let (tx, rx) = mpsc::channel();
+    if let Err(e) = gw.submit(req, opts, tx) {
+        return match e {
+            AdmitError::QueueFull { retry_after_secs, .. }
+            | AdmitError::ShedLowPriority { retry_after_secs, .. } => (
+                429,
+                "Too Many Requests",
+                vec![("Retry-After", retry_after_secs.to_string())],
+                err_body(e.to_string()),
+            ),
+            AdmitError::Draining => {
+                (503, "Service Unavailable", Vec::new(), err_body(e.to_string()))
+            }
+            AdmitError::Invalid(_) => {
+                (400, "Bad Request", Vec::new(), err_body(e.to_string()))
+            }
+        };
+    }
+    // Exactly one outcome per admitted request (a dead gateway drops the
+    // sender, surfacing as RecvError → 500 instead of a hang).
+    let outcome = match rx.recv() {
+        Ok(o) => o,
+        Err(_) => {
+            return (
+                500,
+                "Internal Server Error",
+                Vec::new(),
+                err_body("gateway dropped the request"),
+            )
+        }
+    };
+    match &outcome {
+        ServeOutcome::Done { result, .. } => {
+            let mut json = outcome_to_json(&outcome);
+            if let Json::Obj(pairs) = &mut json {
+                let vocab = ByteVocabulary::new(0);
+                pairs.push(("text".to_string(), Json::str(vocab.decode(&result.tokens))));
+            }
+            (200, "OK", Vec::new(), json)
+        }
+        ServeOutcome::Shed { reason, .. } => {
+            let body = outcome_to_json(&outcome);
+            match reason {
+                ShedReason::DeadlineExpired => (504, "Gateway Timeout", Vec::new(), body),
+                ShedReason::Draining => (503, "Service Unavailable", Vec::new(), body),
+            }
+        }
+        ServeOutcome::Failed { .. } => {
+            (500, "Internal Server Error", Vec::new(), outcome_to_json(&outcome))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn http_config_defaults() {
+        let c = HttpConfig::default();
+        assert_eq!(c.addr, "127.0.0.1");
+        assert_eq!(c.port, 0);
+        assert!(c.threads >= 1);
+    }
+
+    #[test]
+    fn request_parsing_reads_headers_and_body() {
+        // Loopback socket pair: write a raw request, read it back through
+        // read_request.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        client
+            .write_all(
+                b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 15\r\n\
+                  Connection: close\r\n\r\n{\"prompt\": [5]}",
+            )
+            .unwrap();
+        client.flush().unwrap();
+        let mut reader = BufReader::new(server);
+        let req = read_request(&mut reader).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert!(!req.keep_alive);
+        assert_eq!(req.body, b"{\"prompt\": [5]}");
+    }
+
+    #[test]
+    fn response_writing_is_parseable() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (mut server, _) = listener.accept().unwrap();
+        write_response(
+            &mut server,
+            429,
+            "Too Many Requests",
+            &[("Retry-After", "1".to_string())],
+            &err_body("full"),
+            false,
+        )
+        .unwrap();
+        drop(server);
+        let mut text = String::new();
+        BufReader::new(client).read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        let body = text.split("\r\n\r\n").nth(1).unwrap();
+        let v = Json::parse(body.trim()).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some("full"));
+    }
+}

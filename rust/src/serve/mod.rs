@@ -1,0 +1,148 @@
+//! Production serving gateway (S8→S9): HTTP front end, deadline-aware
+//! admission, and a multi-engine replica router.
+//!
+//! The continuous-batching [`crate::infer::InferEngine`] packs requests
+//! into one model's `B` batch slots; this module grows it into something
+//! that can face real traffic:
+//!
+//! ```text
+//!   clients ──HTTP──▶ ┌───────────┐    pop (≤ free slots)   ┌──────────┐
+//!   (POST /v1/...)    │ admission │ ◀──────────────────────▶ │ replica 0│
+//!   stdin  ──JSONL──▶ │   queue   │ ◀──────────────────────▶ │ replica 1│
+//!                     └───────────┘        ...               └──────────┘
+//!                      bounded depth,                   each an InferEngine
+//!                      priority order,                  stepping on its own
+//!                      deadline shedding                thread (shared Arcs)
+//! ```
+//!
+//! * [`admission`] — one bounded, priority-ordered queue decoupled from
+//!   engine slots. Over-capacity submits are rejected with explicit
+//!   backpressure (HTTP 429 + `Retry-After`); a configurable watermark
+//!   sheds low-priority work early; requests whose `deadline_ms` expires
+//!   while queued are shed *before* they ever occupy a slot (counted as
+//!   `serve/shed_deadline`).
+//! * [`router`] — the [`router::Gateway`]: N engine replicas (built via
+//!   [`crate::infer::InferEngine::replica`], sharing compiled executables
+//!   and Arc-backed parameter tensors) each stepping on its own thread,
+//!   fed from the single admission queue with least-loaded (capacity-
+//!   driven) dispatch: a replica pulls at most as many requests as it has
+//!   free slots, so work flows to whichever replica has room and a busy
+//!   replica can never hoard the queue.
+//! * [`http`] — a stdlib-only HTTP/1.1 front end (`POST /v1/generate`,
+//!   `GET /healthz`, `GET /metrics`, `POST /admin/drain`) on a connection
+//!   thread pool.
+//! * [`signal`] — a raw `signal(2)` SIGINT hook (no external crates) so
+//!   ctrl-C drains instead of dropping mid-flight requests.
+//!
+//! Both transports (HTTP and the JSONL stdin loop in
+//! [`crate::infer::server`]) submit through the same [`router::Gateway`],
+//! so scheduling, shedding and metrics live in exactly one place.
+//!
+//! ## Priority / deadline contract
+//!
+//! * `priority` (default 0, higher runs earlier): the queue pops the
+//!   highest priority first, FIFO within a priority level. Once queue
+//!   depth reaches the shed watermark, submits with `priority <= 0` are
+//!   rejected (`serve/shed_lowpri`, HTTP 429) — under pressure only work
+//!   marked urgent is admitted, until depth hits capacity and everyone
+//!   gets 429.
+//! * `deadline_ms` (optional): a request that has waited past its
+//!   deadline when a replica would dispatch it is shed from the queue
+//!   (`serve/shed_deadline`, HTTP 504) — a slot is never spent decoding
+//!   an answer nobody is waiting for. Once dispatched, a request always
+//!   runs to completion (the deadline bounds *queueing*, not decoding).
+//!
+//! ## Determinism
+//!
+//! Routing does not affect outputs: per-row engine decoding is
+//! independent of batch neighbors and replicas share parameter tensors,
+//! so a request's tokens are byte-identical whichever replica serves it
+//! and whatever else is in flight (asserted by
+//! `tests/integration_serve.rs` against solo-engine decode).
+
+pub mod admission;
+pub mod http;
+pub mod router;
+pub mod signal;
+
+use std::time::Duration;
+
+use crate::infer::InferResult;
+
+pub use admission::{AdmissionQueue, AdmitError, Popped};
+pub use http::{HttpConfig, HttpServer};
+pub use router::{Gateway, GatewayConfig, GatewayReport};
+
+/// Per-request scheduling options carried alongside the
+/// [`crate::infer::InferRequest`] (JSON fields `priority` / `deadline_ms`
+/// on both transports).
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOpts {
+    /// Higher runs earlier; `<= 0` (the default) is sheddable once queue
+    /// depth crosses the watermark.
+    pub priority: i64,
+    /// Maximum time the request may wait in the admission queue before it
+    /// is shed instead of dispatched.
+    pub deadline: Option<Duration>,
+}
+
+/// Why a queued request was shed without occupying a slot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShedReason {
+    /// `deadline_ms` elapsed while the request waited in the queue.
+    DeadlineExpired,
+    /// The gateway shut down with the request still queued (possible only
+    /// when no replica drained it, e.g. a replica died or none exist).
+    Draining,
+}
+
+impl ShedReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShedReason::DeadlineExpired => "deadline_expired",
+            ShedReason::Draining => "draining",
+        }
+    }
+}
+
+/// Terminal outcome of an accepted request, delivered on the submitter's
+/// channel. Submit-time rejections (queue full, watermark shed, draining,
+/// validation) are returned synchronously as [`AdmitError`] instead.
+#[derive(Debug, Clone)]
+pub enum ServeOutcome {
+    /// Completed on a replica. Latency fields are *client-true*: they
+    /// include gateway queue time, unlike the engine-internal numbers in
+    /// `result` (whose clock starts at engine admission).
+    Done {
+        /// The id the client supplied (echoed in responses).
+        client_id: u64,
+        result: InferResult,
+        /// Which replica decoded it.
+        replica: usize,
+        /// Gateway queue wait + engine queue wait, ms.
+        queue_ms: f64,
+        /// Submit-to-first-token including gateway queue wait, ms.
+        ttft_ms: Option<f64>,
+        /// Submit-to-completion including gateway queue wait, ms.
+        latency_ms: f64,
+    },
+    /// Shed from the queue without occupying a slot.
+    Shed { client_id: u64, reason: ShedReason, waited_ms: f64 },
+    /// Dispatch failed after admission (engine rejected the request or
+    /// the replica died mid-flight); `error` is the rendered cause.
+    Failed { client_id: u64, error: String },
+}
+
+impl ServeOutcome {
+    pub fn client_id(&self) -> u64 {
+        match self {
+            ServeOutcome::Done { client_id, .. }
+            | ServeOutcome::Shed { client_id, .. }
+            | ServeOutcome::Failed { client_id, .. } => *client_id,
+        }
+    }
+}
+
+/// Channel end a submitter hands to [`Gateway::submit`]; the matching
+/// receiver gets exactly one [`ServeOutcome`] per accepted request.
+pub type OutcomeSender = std::sync::mpsc::Sender<ServeOutcome>;

@@ -1,0 +1,528 @@
+//! Multi-engine replica router: N [`InferEngine`]s, one admission queue.
+//!
+//! [`Gateway::launch`] takes pre-built engine replicas (see
+//! [`InferEngine::replica`] — clones share compiled executables and
+//! Arc-backed parameter tensors, each gets private slots/KV cache) and
+//! runs each on its own thread. Dispatch is **least-loaded by
+//! construction**: a replica pulls at most `free_slots` requests from the
+//! queue per step, so work flows to whichever replica has capacity and a
+//! saturated replica cannot hoard the queue. There is no separate router
+//! thread to become a bottleneck — the queue *is* the router.
+//!
+//! Timing is **client-true** at this layer: `latency_ms`/`ttft_ms`/
+//! `queue_ms` on a [`ServeOutcome::Done`] start at gateway submit, so the
+//! admission queue wait that the engine never sees is included (the
+//! engine-internal numbers remain available on the embedded
+//! [`InferResult`]).
+//!
+//! Each replica runs its engine steps inside `serve/replica<i>/step`
+//! spans on a thread track named `serve/replica<i>`, with the engine's
+//! own queue/slot trace events namespaced per replica via
+//! [`InferEngine::set_trace_label`] — one trace shows every replica's
+//! timeline side by side.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::admission::{AdmissionQueue, AdmitError, Pending, Popped};
+use super::{OutcomeSender, ServeOutcome, ShedReason, SubmitOpts};
+use crate::infer::{validate_request, EngineSummary, InferEngine, InferRequest};
+use crate::metrics::CounterSet;
+use crate::obs::Histogram;
+use crate::runtime::artifacts::ModelManifest;
+use crate::util::json::Json;
+
+/// Gateway tuning knobs (`serve.queue_depth` / `serve.shed_watermark` in
+/// gin, `--queue-depth` / `--shed-watermark` on the CLI).
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Admission queue capacity (submits past it get 429).
+    pub queue_depth: usize,
+    /// Depth at which `priority <= 0` work is shed; `None` disables
+    /// (watermark = capacity), so plain batch workloads see no shedding.
+    pub shed_watermark: Option<usize>,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig { queue_depth: 64, shed_watermark: None }
+    }
+}
+
+/// Live, shared view of one replica's engine stats (histograms and
+/// counters share storage with the engine via Arc-backed clones, so
+/// `/metrics` reads them while the replica thread steps).
+struct ReplicaStats {
+    batch: usize,
+    counters: CounterSet,
+    ttft: Histogram,
+    latency: Histogram,
+    queue: Histogram,
+}
+
+/// Final shutdown report: per-replica engine summaries plus the
+/// gateway-level (client-true) aggregates.
+#[derive(Debug, Clone)]
+pub struct GatewayReport {
+    pub replicas: Vec<EngineSummary>,
+    pub completed: u64,
+    pub tokens: u64,
+    pub wall_seconds: f64,
+    pub tokens_per_sec: f64,
+    /// Client-true percentiles (gateway submit → event), ms.
+    pub queue_ms_p50: f64,
+    pub queue_ms_p99: f64,
+    pub ttft_ms_p50: f64,
+    pub ttft_ms_p99: f64,
+    pub latency_ms_p50: f64,
+    pub latency_ms_p99: f64,
+    /// Gateway counter snapshot (`serve/*`).
+    pub counters: Vec<(String, u64)>,
+}
+
+/// One admission queue feeding N engine replica threads; the single
+/// scheduling path shared by the HTTP front end and the JSONL loop.
+pub struct Gateway {
+    queue: AdmissionQueue,
+    counters: CounterSet,
+    manifest: Option<ModelManifest>,
+    stats: Vec<ReplicaStats>,
+    /// Client-true (gateway submit → event) histograms, ms.
+    ttft: Histogram,
+    latency: Histogram,
+    queue_total: Histogram,
+    handles: Mutex<Vec<JoinHandle<anyhow::Result<EngineSummary>>>>,
+    started: Instant,
+}
+
+/// Routing bookkeeping for an in-flight request: keyed by the
+/// gateway-internal id the engine decodes under.
+struct InFlight {
+    client_id: u64,
+    submitted: Instant,
+    reply: OutcomeSender,
+}
+
+impl Gateway {
+    /// Spawn one stepping thread per engine and return the shared
+    /// gateway handle. An empty `engines` vec is allowed (admission-only
+    /// mode, used by tests — queued work is flushed as shed on
+    /// [`Gateway::shutdown`]).
+    pub fn launch(engines: Vec<InferEngine>, cfg: GatewayConfig) -> Arc<Gateway> {
+        let counters = CounterSet::new();
+        let watermark = cfg.shed_watermark.unwrap_or(cfg.queue_depth);
+        let queue =
+            AdmissionQueue::new(cfg.queue_depth, watermark, counters.clone());
+        let manifest = engines.first().map(|e| e.manifest.clone());
+        let stats = engines
+            .iter()
+            .map(|e| ReplicaStats {
+                batch: e.manifest.batch(),
+                counters: e.counters().clone(),
+                ttft: e.ttft_histogram().clone(),
+                latency: e.latency_histogram().clone(),
+                queue: e.queue_histogram().clone(),
+            })
+            .collect();
+        let gw = Arc::new(Gateway {
+            queue,
+            counters,
+            manifest,
+            stats,
+            ttft: Histogram::new(),
+            latency: Histogram::new(),
+            queue_total: Histogram::new(),
+            handles: Mutex::new(Vec::new()),
+            started: Instant::now(),
+        });
+        let mut handles = Vec::new();
+        for (i, engine) in engines.into_iter().enumerate() {
+            let gwc = gw.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("serve-replica{i}"))
+                .spawn(move || replica_loop(gwc, engine, i))
+                .expect("spawn replica thread");
+            handles.push(h);
+        }
+        *gw.handles.lock().unwrap() = handles;
+        gw
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.stats.len()
+    }
+
+    /// True once [`Gateway::drain`]/[`Gateway::shutdown`] stopped
+    /// admission.
+    pub fn draining(&self) -> bool {
+        !self.queue.is_open()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    pub fn counters(&self) -> &CounterSet {
+        &self.counters
+    }
+
+    /// Validate and enqueue a request; exactly one [`ServeOutcome`] will
+    /// arrive on `reply` if this returns `Ok`. The request's `id` is the
+    /// client's and is echoed back; internally the gateway re-keys it so
+    /// concurrent clients may reuse ids freely.
+    pub fn submit(
+        &self,
+        mut req: InferRequest,
+        opts: SubmitOpts,
+        reply: OutcomeSender,
+    ) -> Result<(), AdmitError> {
+        if let Some(m) = &self.manifest {
+            validate_request(m, &req).map_err(|e| {
+                self.counters.inc("serve/rejected_invalid");
+                AdmitError::Invalid(e.to_string())
+            })?;
+        }
+        let client_id = req.id;
+        req.id = self.queue.next_internal_id();
+        self.counters.inc("serve/submitted");
+        self.queue.submit(Pending {
+            req,
+            opts,
+            client_id,
+            submitted: Instant::now(),
+            reply,
+        })
+    }
+
+    /// Stop admission; replicas finish the queue and in-flight slots,
+    /// then exit. Call [`Gateway::shutdown`] to join them.
+    pub fn drain(&self) {
+        self.queue.close();
+    }
+
+    /// Drain, join every replica thread, flush anything still queued as
+    /// [`ServeOutcome::Shed`] (possible only with zero live replicas),
+    /// and return the final report.
+    pub fn shutdown(&self) -> GatewayReport {
+        self.queue.close();
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        let mut replicas = Vec::new();
+        for h in handles {
+            match h.join() {
+                Ok(Ok(summary)) => replicas.push(summary),
+                Ok(Err(e)) => {
+                    self.counters.inc("serve/replica_errors");
+                    eprintln!("serve: replica thread failed: {e:#}");
+                }
+                Err(_) => {
+                    self.counters.inc("serve/replica_errors");
+                    eprintln!("serve: replica thread panicked");
+                }
+            }
+        }
+        for p in self.queue.drain_remaining() {
+            self.counters.inc("serve/shed_draining");
+            let waited_ms = p.submitted.elapsed().as_secs_f64() * 1e3;
+            let _ = p.reply.send(ServeOutcome::Shed {
+                client_id: p.client_id,
+                reason: ShedReason::Draining,
+                waited_ms,
+            });
+        }
+        let tokens = self.counters.get("serve/tokens");
+        let wall = self.started.elapsed().as_secs_f64();
+        GatewayReport {
+            replicas,
+            completed: self.counters.get("serve/completed"),
+            tokens,
+            wall_seconds: wall,
+            tokens_per_sec: if wall > 0.0 { tokens as f64 / wall } else { 0.0 },
+            queue_ms_p50: self.queue_total.p50(),
+            queue_ms_p99: self.queue_total.p99(),
+            ttft_ms_p50: self.ttft.p50(),
+            ttft_ms_p99: self.ttft.p99(),
+            latency_ms_p50: self.latency.p50(),
+            latency_ms_p99: self.latency.p99(),
+            counters: self.counters.snapshot(),
+        }
+    }
+
+    fn hist_json(h: &Histogram) -> Json {
+        Json::obj(vec![
+            ("p50", Json::num(h.p50())),
+            ("p95", Json::num(h.p95())),
+            ("p99", Json::num(h.p99())),
+            ("mean_ms", Json::num(h.mean_ms())),
+            ("count", Json::num(h.count() as f64)),
+        ])
+    }
+
+    /// The `GET /metrics` document: gateway counters, client-true
+    /// histogram percentiles, queue state, and per-replica utilization.
+    pub fn metrics_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .snapshot()
+                .into_iter()
+                .map(|(k, v)| (k, Json::num(v as f64)))
+                .collect(),
+        );
+        let replicas: Vec<Json> = self
+            .stats
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let steps = s.counters.get("infer/steps");
+                let busy = s.counters.get("infer/slot_steps_busy");
+                let util = if steps > 0 {
+                    busy as f64 / (steps * s.batch as u64) as f64
+                } else {
+                    0.0
+                };
+                Json::obj(vec![
+                    ("replica", Json::num(i as f64)),
+                    ("completed", Json::num(s.counters.get("infer/requests_completed") as f64)),
+                    ("tokens", Json::num(s.counters.get("infer/tokens") as f64)),
+                    ("steps", Json::num(steps as f64)),
+                    ("slot_utilization", Json::num(util)),
+                    ("ttft_ms_p50", Json::num(s.ttft.p50())),
+                    ("ttft_ms_p99", Json::num(s.ttft.p99())),
+                    ("latency_ms_p99", Json::num(s.latency.p99())),
+                    ("queue_ms_p99", Json::num(s.queue.p99())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("counters", counters),
+            (
+                "histograms_ms",
+                Json::obj(vec![
+                    ("queue_wait", Self::hist_json(self.queue.queue_wait())),
+                    ("queue_total", Self::hist_json(&self.queue_total)),
+                    ("ttft", Self::hist_json(&self.ttft)),
+                    ("latency", Self::hist_json(&self.latency)),
+                ]),
+            ),
+            (
+                "queue",
+                Json::obj(vec![
+                    ("depth", Json::num(self.queue.depth() as f64)),
+                    ("capacity", Json::num(self.queue.capacity() as f64)),
+                    ("watermark", Json::num(self.queue.watermark() as f64)),
+                    ("draining", Json::Bool(self.draining())),
+                ]),
+            ),
+            ("replicas", Json::Arr(replicas)),
+        ])
+    }
+
+    /// The `GET /healthz` document.
+    pub fn healthz_json(&self) -> Json {
+        Json::obj(vec![
+            ("status", Json::str(if self.draining() { "draining" } else { "ok" })),
+            ("replicas", Json::num(self.replicas() as f64)),
+            ("queue_depth", Json::num(self.queue.depth() as f64)),
+        ])
+    }
+}
+
+/// One replica's stepping loop: pull up to `free_slots` requests, step
+/// the engine, route completions back. Exits when the queue closes and
+/// all local work is done.
+fn replica_loop(
+    gw: Arc<Gateway>,
+    mut engine: InferEngine,
+    idx: usize,
+) -> anyhow::Result<EngineSummary> {
+    let tracer = engine.tracer().clone();
+    tracer.name_track(format!("serve/replica{idx}"));
+    let step_span = format!("serve/replica{idx}/step");
+    let batch = engine.manifest.batch();
+    let mut inflight: HashMap<u64, InFlight> = HashMap::new();
+    loop {
+        let free = batch.saturating_sub(engine.active() + engine.queued());
+        let mut closed = false;
+        match gw.queue.pop(free, !engine.has_work()) {
+            Popped::Closed => closed = true,
+            Popped::Batch(batch_in) => {
+                for p in batch_in {
+                    let internal_id = p.req.id;
+                    match engine.submit(p.req.clone()) {
+                        Ok(()) => {
+                            inflight.insert(
+                                internal_id,
+                                InFlight {
+                                    client_id: p.client_id,
+                                    submitted: p.submitted,
+                                    reply: p.reply,
+                                },
+                            );
+                        }
+                        Err(e) => {
+                            // validate_request should have caught this at
+                            // submit; engines can still reject (e.g. a
+                            // manifest-less test gateway).
+                            gw.counters.inc("serve/failed");
+                            let _ = p.reply.send(ServeOutcome::Failed {
+                                client_id: p.client_id,
+                                error: format!("{e:#}"),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        if engine.has_work() {
+            let step_res = {
+                let _sp = tracer.span(&step_span);
+                engine.step()
+            };
+            if let Err(e) = step_res {
+                // Clients blocked on recv must hear about the failure or
+                // they hang forever; flush every in-flight request.
+                let msg = format!("replica {idx} step failed: {e:#}");
+                for (_, m) in inflight.drain() {
+                    gw.counters.inc("serve/failed");
+                    let _ = m.reply.send(ServeOutcome::Failed {
+                        client_id: m.client_id,
+                        error: msg.clone(),
+                    });
+                }
+                return Err(e);
+            }
+            for r in engine.drain_finished() {
+                let Some(m) = inflight.remove(&r.id) else {
+                    continue; // unreachable: every submit records an entry
+                };
+                let latency_s = m.submitted.elapsed().as_secs_f64();
+                // Gateway wait = client-true latency minus the engine's
+                // own submit-to-completion clock.
+                let gw_wait_s = (latency_s - r.latency_seconds).max(0.0);
+                let queue_s = gw_wait_s + r.queue_seconds;
+                let ttft_s = r.ttft_seconds.map(|t| gw_wait_s + t);
+                gw.latency.record_seconds(latency_s);
+                gw.queue_total.record_seconds(queue_s);
+                if let Some(t) = ttft_s {
+                    gw.ttft.record_seconds(t);
+                }
+                gw.counters.inc("serve/completed");
+                gw.counters.add("serve/tokens", r.tokens.len() as u64);
+                gw.counters.inc(&format!("serve/replica{idx}/completed"));
+                let _ = m.reply.send(ServeOutcome::Done {
+                    client_id: m.client_id,
+                    result: r,
+                    replica: idx,
+                    queue_ms: queue_s * 1e3,
+                    ttft_ms: ttft_s.map(|t| t * 1e3),
+                    latency_ms: latency_s * 1e3,
+                });
+            }
+        } else if closed {
+            break;
+        }
+    }
+    Ok(engine.summary())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::DecodeMethod;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    fn req(id: u64) -> InferRequest {
+        InferRequest {
+            id,
+            prompt: vec![5, 9],
+            max_tokens: 4,
+            method: DecodeMethod::Greedy,
+        }
+    }
+
+    // Admission semantics are fully testable with zero replicas: the
+    // queue accepts/rejects, and shutdown sheds whatever is left.
+    #[test]
+    fn admission_only_gateway_backpressure_and_shed() {
+        let gw = Gateway::launch(
+            Vec::new(),
+            GatewayConfig { queue_depth: 2, shed_watermark: Some(1) },
+        );
+        let (tx, rx) = mpsc::channel();
+        gw.submit(req(1), SubmitOpts { priority: 1, deadline: None }, tx.clone())
+            .unwrap();
+        // depth 1 == watermark: default priority is shed early...
+        match gw.submit(req(2), SubmitOpts::default(), tx.clone()) {
+            Err(AdmitError::ShedLowPriority { .. }) => {}
+            other => panic!("expected watermark shed, got {other:?}"),
+        }
+        // ...high priority still admitted until capacity...
+        gw.submit(req(3), SubmitOpts { priority: 5, deadline: None }, tx.clone())
+            .unwrap();
+        // ...and past capacity everyone gets backpressure.
+        match gw.submit(req(4), SubmitOpts { priority: 9, deadline: None }, tx.clone()) {
+            Err(AdmitError::QueueFull { depth: 2, .. }) => {}
+            other => panic!("expected queue full, got {other:?}"),
+        }
+        assert_eq!(gw.queue_depth(), 2);
+        let report = gw.shutdown();
+        // No replicas: both admitted requests flush as draining sheds.
+        drop(tx);
+        let mut shed = 0;
+        while let Ok(o) = rx.try_recv() {
+            match o {
+                ServeOutcome::Shed { reason: ShedReason::Draining, .. } => shed += 1,
+                other => panic!("expected draining shed, got {other:?}"),
+            }
+        }
+        assert_eq!(shed, 2);
+        assert_eq!(report.completed, 0);
+        assert_eq!(gw.counters().get("serve/shed_draining"), 2);
+        assert_eq!(gw.counters().get("serve/rejected_full"), 1);
+        assert_eq!(gw.counters().get("serve/shed_lowpri"), 1);
+    }
+
+    #[test]
+    fn submit_after_drain_is_rejected() {
+        let gw = Gateway::launch(Vec::new(), GatewayConfig::default());
+        gw.drain();
+        assert!(gw.draining());
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(
+            gw.submit(req(1), SubmitOpts::default(), tx),
+            Err(AdmitError::Draining)
+        );
+        gw.shutdown();
+    }
+
+    #[test]
+    fn metrics_and_healthz_render_without_replicas() {
+        let gw = Gateway::launch(
+            Vec::new(),
+            GatewayConfig { queue_depth: 4, shed_watermark: None },
+        );
+        let (tx, _rx) = mpsc::channel();
+        gw.submit(
+            req(1),
+            SubmitOpts { priority: 0, deadline: Some(Duration::from_secs(5)) },
+            tx,
+        )
+        .unwrap();
+        let m = gw.metrics_json();
+        assert_eq!(m.get("queue").unwrap().get("depth").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            m.get("queue").unwrap().get("capacity").unwrap().as_f64(),
+            Some(4.0)
+        );
+        assert_eq!(
+            m.get("counters").unwrap().get("serve/submitted").unwrap().as_f64(),
+            Some(1.0)
+        );
+        let h = gw.healthz_json();
+        assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
+        gw.shutdown();
+        assert_eq!(gw.healthz_json().get("status").unwrap().as_str(), Some("draining"));
+    }
+}

@@ -1,0 +1,89 @@
+//! Minimal SIGINT hook (stdlib-only, raw `signal(2)` FFI) so ctrl-C
+//! triggers a graceful drain instead of killing mid-flight requests.
+//!
+//! The handler does the only async-signal-safe thing possible: one
+//! relaxed atomic store. The serve loop polls [`sigint_triggered`] and
+//! runs the ordinary drain path (stop admission → finish in-flight →
+//! flush trace/metrics → print the summary). A second ctrl-C during the
+//! drain falls back to the default disposition (immediate exit), so a
+//! wedged drain can still be interrupted.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SIGINT_FLAG: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod imp {
+    use super::SIGINT_FLAG;
+    use std::os::raw::c_int;
+    use std::sync::atomic::Ordering;
+
+    const SIGINT: c_int = 2;
+    /// `SIG_DFL` — restore the default disposition from inside the
+    /// handler so the *next* ctrl-C terminates immediately.
+    const SIG_DFL: usize = 0;
+
+    extern "C" {
+        // Typing the handler as a fn pointer (not usize) keeps the
+        // install below cast-free; libc's signature is compatible.
+        fn signal(signum: c_int, handler: extern "C" fn(c_int)) -> usize;
+        // Same libc symbol, usize-handler view for passing SIG_DFL.
+        #[link_name = "signal"]
+        fn signal_dfl(signum: c_int, handler: usize) -> usize;
+    }
+
+    extern "C" fn on_sigint(_sig: c_int) {
+        SIGINT_FLAG.store(true, Ordering::Relaxed);
+        // Re-arm to default: second ctrl-C exits without waiting.
+        unsafe {
+            signal_dfl(SIGINT, SIG_DFL);
+        }
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, on_sigint);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    pub fn install() {}
+}
+
+/// Install the SIGINT → drain-flag handler (idempotent; no-op off Unix).
+pub fn install_sigint() {
+    imp::install();
+}
+
+/// True once SIGINT arrived (sticky until [`reset_sigint`]).
+pub fn sigint_triggered() -> bool {
+    SIGINT_FLAG.load(Ordering::Relaxed)
+}
+
+/// Clear the flag (tests, or re-entering a serve loop).
+pub fn reset_sigint() {
+    SIGINT_FLAG.store(false, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_round_trips() {
+        reset_sigint();
+        assert!(!sigint_triggered());
+        SIGINT_FLAG.store(true, Ordering::Relaxed);
+        assert!(sigint_triggered());
+        reset_sigint();
+        assert!(!sigint_triggered());
+    }
+
+    #[test]
+    fn install_is_idempotent() {
+        install_sigint();
+        install_sigint();
+    }
+}

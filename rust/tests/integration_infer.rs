@@ -240,7 +240,9 @@ fn serve_loop_round_trips_jsonl() {
     let (arts, dev, params) = setup();
     let runner = EvalRunner::new(&arts, &dev, MODEL).unwrap();
     let expected = single_request_greedy(&runner, &params, &[5, 9, 11], 4, 1);
-    let mut engine = InferEngine::new(&arts, &dev, MODEL, &params, 1).unwrap();
+    let engine = InferEngine::new(&arts, &dev, MODEL, &params, 1).unwrap();
+    let gateway =
+        t5x::serve::Gateway::launch(vec![engine], t5x::serve::GatewayConfig::default());
     let input = std::io::Cursor::new(
         [
             r#"{"id": 1, "prompt": [5, 9, 11], "max_tokens": 4}"#,
@@ -251,9 +253,10 @@ fn serve_loop_round_trips_jsonl() {
     );
     let mut out: Vec<u8> = Vec::new();
     let summary =
-        t5x::infer::server::serve(&mut engine, input, &mut out, 16).unwrap();
+        t5x::infer::server::serve(&gateway, input, &mut out, 16, None).unwrap();
     assert_eq!(summary.requests, 2);
     assert_eq!(summary.errors, 1);
+    assert_eq!(summary.completed, 2);
     let text = String::from_utf8(out).unwrap();
     let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
     assert_eq!(lines.len(), 3, "2 responses + 1 error, got: {text}");
@@ -273,6 +276,8 @@ fn serve_loop_round_trips_jsonl() {
         .collect();
     assert_eq!(tokens, expected, "served greedy output must match solo decode");
     assert!(lines.iter().any(|v| v.get("id").and_then(|x| x.as_i64()) == Some(2)));
+    let report = gateway.shutdown();
+    assert_eq!(report.completed, 2);
     dev.shutdown();
 }
 
@@ -494,7 +499,9 @@ fn serve_rejects_impossible_prompts_per_request_and_continues() {
     use t5x::util::json::Json;
     let (arts, dev, params) = setup();
     let l = arts.model(MODEL).unwrap().seq_len();
-    let mut engine = InferEngine::new(&arts, &dev, MODEL, &params, 1).unwrap();
+    let engine = InferEngine::new(&arts, &dev, MODEL, &params, 1).unwrap();
+    let gateway =
+        t5x::serve::Gateway::launch(vec![engine], t5x::serve::GatewayConfig::default());
     let long: Vec<String> = (0..l).map(|_| "3".to_string()).collect();
     let input = std::io::Cursor::new(format!(
         "{{\"id\": 7, \"prompt\": [{}], \"max_tokens\": 4}}\n\
@@ -503,7 +510,8 @@ fn serve_rejects_impossible_prompts_per_request_and_continues() {
         long.join(", ")
     ));
     let mut out: Vec<u8> = Vec::new();
-    let summary = t5x::infer::server::serve(&mut engine, input, &mut out, 8).unwrap();
+    let summary =
+        t5x::infer::server::serve(&gateway, input, &mut out, 8, None).unwrap();
     assert_eq!(summary.requests, 1);
     assert_eq!(summary.errors, 2);
     let text = String::from_utf8(out).unwrap();
@@ -518,6 +526,12 @@ fn serve_rejects_impossible_prompts_per_request_and_continues() {
     assert!(by_id(9).get("error").is_some(), "out-of-vocab id must error");
     let tokens = by_id(8).get("tokens").expect("valid request must decode");
     assert_eq!(tokens.as_arr().unwrap().len(), 3);
+    assert_eq!(
+        gateway.counters().get("serve/rejected_invalid"),
+        2,
+        "both impossible requests must be rejected at admission"
+    );
+    gateway.shutdown();
     dev.shutdown();
 }
 

@@ -1,0 +1,275 @@
+//! Integration: the serving gateway (ISSUE 8) — multi-replica HTTP
+//! serving byte-identical to solo-engine decode, health/metrics under
+//! load, explicit 429 backpressure on a full admission queue, graceful
+//! drain, and deterministic deadline shedding.
+
+use std::io::{Read, Write};
+use std::sync::atomic::AtomicBool;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use t5x::infer::{DecodeMethod, InferEngine, InferRequest};
+use t5x::runtime::{Artifacts, DeviceHandle};
+use t5x::serve::{
+    Gateway, GatewayConfig, HttpConfig, HttpServer, ServeOutcome, ShedReason,
+    SubmitOpts,
+};
+use t5x::util::json::Json;
+
+const MODEL: &str = "t5-nano-dec";
+
+/// One blocking HTTP/1.1 round-trip with `Connection: close`; returns
+/// (status, raw headers, body).
+fn http_call(port: u16, method: &str, path: &str, body: &str) -> (u16, String, String) {
+    let mut s = std::net::TcpStream::connect(("127.0.0.1", port)).expect("connect");
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    s.flush().unwrap();
+    let mut resp = Vec::new();
+    s.read_to_end(&mut resp).unwrap();
+    let text = String::from_utf8_lossy(&resp).to_string();
+    let (head, payload) =
+        text.split_once("\r\n\r\n").unwrap_or_else(|| panic!("no header split: {text}"));
+    let status: u16 = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line: {head}"));
+    (status, head.to_string(), payload.to_string())
+}
+
+/// The ISSUE-8 acceptance test: N concurrent HTTP clients against a
+/// 2-replica gateway get byte-identical tokens to solo-engine decoding
+/// of the same requests, while /healthz and /metrics answer mid-load and
+/// /admin/drain shuts the whole stack down cleanly.
+#[test]
+fn two_replica_http_serving_is_byte_identical_to_solo_engine() {
+    let arts = Artifacts::load_default().unwrap();
+    let dev = DeviceHandle::spawn().unwrap();
+    let params = t5x::model::init_params(arts.model(MODEL).unwrap(), 3);
+    let b = arts.model(MODEL).unwrap().batch();
+    let eos = -1; // budgets drive retirement: deterministic lengths
+    let n = b + 4;
+    let prompts: Vec<Vec<i32>> = (0..n).map(|i| vec![5 + i as i32, 9, 11]).collect();
+    let budget = |i: usize| 3 + (i % 4);
+
+    // Reference: every request decoded solo, one engine, one at a time.
+    let mut solo = InferEngine::new(&arts, &dev, MODEL, &params, eos).unwrap();
+    let expected: Vec<Vec<i32>> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            solo.submit(InferRequest {
+                id: 0,
+                prompt: p.clone(),
+                max_tokens: budget(i),
+                method: DecodeMethod::Greedy,
+            })
+            .unwrap();
+            solo.run_until_idle().unwrap()[0].tokens.clone()
+        })
+        .collect();
+
+    let engine0 = InferEngine::new(&arts, &dev, MODEL, &params, eos).unwrap();
+    let engine1 = engine0.replica();
+    let gw = Gateway::launch(
+        vec![engine0, engine1],
+        GatewayConfig { queue_depth: 64, shed_watermark: None },
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    let server =
+        HttpServer::start(gw.clone(), HttpConfig::default(), stop.clone()).unwrap();
+    let port = server.port();
+
+    let clients: Vec<_> = (0..n)
+        .map(|i| {
+            let body = format!(
+                "{{\"id\": {}, \"prompt\": [{}], \"max_tokens\": {}}}",
+                i + 1,
+                prompts[i].iter().map(|t| t.to_string()).collect::<Vec<_>>().join(", "),
+                budget(i)
+            );
+            std::thread::spawn(move || http_call(port, "POST", "/v1/generate", &body))
+        })
+        .collect();
+
+    // Health and metrics must answer while the generate load is in
+    // flight (workers busy, replicas stepping).
+    let (hs, _, hb) = http_call(port, "GET", "/healthz", "");
+    assert_eq!(hs, 200, "healthz under load: {hb}");
+    assert_eq!(Json::parse(&hb).unwrap().get("status").unwrap().as_str(), Some("ok"));
+    let (ms, _, mb) = http_call(port, "GET", "/metrics", "");
+    assert_eq!(ms, 200, "metrics under load: {mb}");
+    let metrics = Json::parse(&mb).unwrap();
+    assert_eq!(metrics.get("replicas").unwrap().as_arr().unwrap().len(), 2);
+    assert!(metrics.get("counters").is_some() && metrics.get("queue").is_some());
+
+    for (i, c) in clients.into_iter().enumerate() {
+        let (status, head, body) = c.join().unwrap();
+        assert_eq!(status, 200, "request {i}: {body}");
+        assert!(
+            head.to_ascii_lowercase().contains("content-type: application/json"),
+            "request {i}: {head}"
+        );
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.get("id").unwrap().as_i64(), Some((i + 1) as i64));
+        let tokens: Vec<i32> = v
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap() as i32)
+            .collect();
+        assert_eq!(
+            tokens, expected[i],
+            "request {i}: routed decode diverged from solo engine"
+        );
+        let replica = v.get("replica").unwrap().as_i64().unwrap();
+        assert!((0..2).contains(&replica), "replica {replica}");
+        assert!(v.get("queue_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(v.get("latency_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.get("text").unwrap().as_str().is_some(), "decoded text missing");
+    }
+
+    let (ds, _, db) = http_call(port, "POST", "/admin/drain", "");
+    assert_eq!(ds, 200);
+    assert_eq!(Json::parse(&db).unwrap().get("status").unwrap().as_str(), Some("draining"));
+    server.join();
+    let report = gw.shutdown();
+    assert_eq!(report.completed, n as u64);
+    assert_eq!(report.replicas.len(), 2);
+    assert_eq!(
+        report.replicas.iter().map(|r| r.completed).sum::<u64>(),
+        n as u64,
+        "per-replica completions must add up"
+    );
+    assert!(report.latency_ms_p99 > 0.0);
+    dev.shutdown();
+}
+
+/// Admission semantics over HTTP, made deterministic with a zero-replica
+/// gateway: queue depth 1 means the first request parks in the queue,
+/// the second gets an explicit 429 + Retry-After (never a hang), and the
+/// drain flushes the parked request as a 503.
+#[test]
+fn http_backpressure_is_explicit_and_drain_flushes_queued_work() {
+    let gw = Gateway::launch(
+        Vec::new(),
+        GatewayConfig { queue_depth: 1, shed_watermark: None },
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    let server =
+        HttpServer::start(gw.clone(), HttpConfig::default(), stop.clone()).unwrap();
+    let port = server.port();
+
+    // Client 1 occupies the whole queue and blocks awaiting an outcome.
+    let parked = std::thread::spawn(move || {
+        http_call(port, "POST", "/v1/generate", r#"{"id": 1, "prompt": [5, 9]}"#)
+    });
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while gw.queue_depth() < 1 {
+        assert!(std::time::Instant::now() < deadline, "request 1 never queued");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Client 2: the queue is full — explicit backpressure, with the
+    // retry hint, and a JSON error body.
+    let (status, head, body) =
+        http_call(port, "POST", "/v1/generate", r#"{"id": 2, "prompt": [7]}"#);
+    assert_eq!(status, 429, "expected backpressure: {body}");
+    assert!(head.to_ascii_lowercase().contains("retry-after:"), "no Retry-After: {head}");
+    assert!(Json::parse(&body).unwrap().get("error").is_some());
+
+    // Malformed body: 400, not a hang or a 500.
+    let (status, _, body) = http_call(port, "POST", "/v1/generate", r#"{"max_tokens": 3}"#);
+    assert_eq!(status, 400, "{body}");
+
+    // Health stays responsive with a wedged queue; unknown paths 404.
+    let (status, _, _) = http_call(port, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    let (status, _, _) = http_call(port, "GET", "/nope", "");
+    assert_eq!(status, 404);
+
+    let (status, _, body) = http_call(port, "POST", "/admin/drain", "");
+    assert_eq!(status, 200, "{body}");
+    // Shutdown flushes the parked request as a draining shed -> 503.
+    let report = gw.shutdown();
+    let (status, _, body) = parked.join().unwrap();
+    assert_eq!(status, 503, "parked request must be flushed on drain: {body}");
+    assert!(body.contains("draining"), "{body}");
+    server.join();
+    assert_eq!(report.completed, 0);
+    assert_eq!(gw.counters().get("serve/rejected_full"), 1);
+    assert_eq!(gw.counters().get("serve/shed_draining"), 1);
+    // Submits after the drain are rejected outright (503 path).
+    let (tx, _rx) = mpsc::channel();
+    assert!(gw
+        .submit(
+            InferRequest {
+                id: 3,
+                prompt: vec![4],
+                max_tokens: 2,
+                method: DecodeMethod::Greedy
+            },
+            SubmitOpts::default(),
+            tx
+        )
+        .is_err());
+}
+
+/// A request whose deadline has already expired when a replica would
+/// dispatch it is shed before ever occupying a slot — deterministically
+/// forced with a zero deadline — while later work still decodes.
+#[test]
+fn deadline_expired_requests_are_shed_before_decoding() {
+    let arts = Artifacts::load_default().unwrap();
+    let dev = DeviceHandle::spawn().unwrap();
+    let params = t5x::model::init_params(arts.model(MODEL).unwrap(), 3);
+    let engine = InferEngine::new(&arts, &dev, MODEL, &params, -1).unwrap();
+    let gw = Gateway::launch(vec![engine], GatewayConfig::default());
+
+    let (tx, rx) = mpsc::channel();
+    gw.submit(
+        InferRequest { id: 1, prompt: vec![5, 9], max_tokens: 4, method: DecodeMethod::Greedy },
+        SubmitOpts { priority: 0, deadline: Some(Duration::ZERO) },
+        tx.clone(),
+    )
+    .unwrap();
+    match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+        ServeOutcome::Shed { client_id: 1, reason: ShedReason::DeadlineExpired, waited_ms } => {
+            assert!(waited_ms >= 0.0);
+        }
+        other => panic!("expected deadline shed, got {other:?}"),
+    }
+    assert_eq!(gw.counters().get("serve/shed_deadline"), 1);
+
+    // The gateway keeps serving: an undeadlined request completes.
+    gw.submit(
+        InferRequest { id: 2, prompt: vec![5, 9], max_tokens: 4, method: DecodeMethod::Greedy },
+        SubmitOpts::default(),
+        tx,
+    )
+    .unwrap();
+    match rx.recv_timeout(Duration::from_secs(60)).unwrap() {
+        ServeOutcome::Done { client_id: 2, result, .. } => {
+            assert_eq!(result.tokens.len(), 4);
+        }
+        other => panic!("expected completion, got {other:?}"),
+    }
+    let report = gw.shutdown();
+    assert_eq!(report.completed, 1);
+    let shed = report
+        .counters
+        .iter()
+        .find(|(k, _)| k.as_str() == "serve/shed_deadline")
+        .expect("shed counter in report");
+    assert_eq!(shed.1, 1);
+    dev.shutdown();
+}

@@ -14,6 +14,11 @@ writes a compact ``BENCH_<pr>.json`` snapshot for the committed
   ``--trace-tolerance`` of its untraced twin. The nominal contract is
   3%; quick-mode CI medians are noisy, so CI passes a looser value and
   the snapshot records the exact ratios either way.
+* **PR 8** — the serving gateway must not tax throughput: under the
+  open-loop Poisson workload (``serve gateway (poisson)``), 2-replica
+  tok/s must hold the 1-replica line within ``--gateway-tolerance``.
+  (One device thread serializes HLO executions, so the gate is
+  "replicas are free", not "replicas are 2x".)
 
 The snapshot also distills the PR-7 observability rows: the per-phase
 step-time breakdown (``train phase breakdown (obs)``) and the serve
@@ -22,8 +27,8 @@ latency percentiles (``serve latency (obs)``).
 Usage (CI smoke job):
 
     python tools/bench_gate.py --input rust/bench_results.jsonl \
-        --output benchmarks/BENCH_7.json [--tolerance 0.10] \
-        [--trace-tolerance 0.10]
+        --output benchmarks/BENCH_8.json [--tolerance 0.10] \
+        [--trace-tolerance 0.10] [--gateway-tolerance 0.10]
 
 Exit status is non-zero if a gate fails or if the input contains no pair
 to compare (so a silently-skipped comparison cannot read as a pass).
@@ -47,6 +52,7 @@ TRACED_ROW = re.compile(
 TRAIN_GROUP = "train step (E16)"
 PHASE_GROUP = "train phase breakdown (obs)"
 SERVE_GROUP = "serve latency (obs)"
+GATEWAY_GROUP = "serve gateway (poisson)"
 
 
 def load_rows(path):
@@ -134,6 +140,30 @@ def gate_tracing(rows, tolerance):
     return pairs, failures
 
 
+def gate_gateway(rows, tolerance):
+    """Return (rows, failures) for the replica-scaling comparison."""
+    by_replicas = {}
+    gateway_rows = []
+    for r in rows:
+        if r.get("group") != GATEWAY_GROUP:
+            continue
+        gateway_rows.append({k: v for k, v in r.items() if k != "group"})
+        n = r.get("replicas")
+        if n is not None:
+            by_replicas[int(n)] = r.get("tok_per_s")
+    failures = []
+    one, two = by_replicas.get(1), by_replicas.get(2)
+    if one is None or two is None:
+        return gateway_rows, None, failures
+    ratio = (two / one) if one else None
+    if one and two < one * (1.0 - tolerance):
+        failures.append(
+            f"gateway poisson: 2-replica {two:.1f} tok/s < 1-replica "
+            f"{one:.1f} tok/s (ratio {ratio:.3f}, tolerance {tolerance:.2f})"
+        )
+    return gateway_rows, ratio, failures
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--input", required=True, help="bench_results.jsonl path")
@@ -143,11 +173,16 @@ def main():
     ap.add_argument("--trace-tolerance", type=float, default=0.03,
                     help="allowed fractional traced-vs-untraced shortfall "
                          "(3%% nominal contract)")
+    ap.add_argument("--gateway-tolerance", type=float, default=0.10,
+                    help="allowed fractional 2-replica-vs-1-replica "
+                         "gateway throughput shortfall")
     args = ap.parse_args()
 
     rows = load_rows(args.input)
     block_pairs, block_failures = gate_block(rows, args.tolerance)
     trace_pairs, trace_failures = gate_tracing(rows, args.trace_tolerance)
+    gateway_rows, gateway_ratio, gateway_failures = gate_gateway(
+        rows, args.gateway_tolerance)
 
     snapshot = {
         "schema": "t5x-bench-trajectory-v1",
@@ -163,6 +198,13 @@ def main():
             "tolerance": args.trace_tolerance,
             "pairs": trace_pairs,
             "failures": trace_failures,
+        },
+        "gateway": {
+            "rule": "2-replica poisson tok/s >= 1-replica tok/s",
+            "tolerance": args.gateway_tolerance,
+            "two_over_one": gateway_ratio,
+            "rows": gateway_rows,
+            "failures": gateway_failures,
         },
         "phase_breakdown": [
             {k: v for k, v in r.items() if k != "group"}
@@ -188,7 +230,8 @@ def main():
         f.write("\n")
     print(f"wrote {args.output}: {len(rows)} rows, "
           f"{len(block_pairs)} gather-vs-block pair(s), "
-          f"{len(trace_pairs)} traced-vs-untraced pair(s)")
+          f"{len(trace_pairs)} traced-vs-untraced pair(s), "
+          f"{len(gateway_rows)} gateway row(s)")
 
     status = 0
     if not block_pairs:
@@ -207,6 +250,14 @@ def main():
     for f_ in trace_failures:
         print(f"trace gate: FAIL — {f_}", file=sys.stderr)
         status = 1
+    if gateway_ratio is None:
+        print("gateway gate: FAIL — no 1-vs-2 replica pair found in "
+              f"group '{GATEWAY_GROUP}' (bench_decode did not run?)",
+              file=sys.stderr)
+        status = 1
+    for f_ in gateway_failures:
+        print(f"gateway gate: FAIL — {f_}", file=sys.stderr)
+        status = 1
     if status:
         return status
     for p in block_pairs:
@@ -216,6 +267,8 @@ def main():
         print(f"trace gate: ok — {p['model']} mesh={p['mesh']} "
               f"{p['strategy']} {p['exec']} traced/untraced = "
               f"{p['traced_over_untraced']:.3f}")
+    print(f"gateway gate: ok — 2-replica/1-replica tok/s = "
+          f"{gateway_ratio:.3f}")
     return 0
 
 

@@ -1,0 +1,257 @@
+#!/usr/bin/env python3
+"""Smoke-test the ``t5x serve`` HTTP gateway (stdlib only; the CI
+oracle for the PR-8 serving front end).
+
+Drives a live server through its whole surface:
+
+* polls ``GET /healthz`` until the server is up (``--startup-timeout``);
+* fires ``--requests`` concurrent ``POST /v1/generate`` bodies and
+  validates every 200 response's JSON schema (``id`` echoed, non-empty
+  ``tokens`` list of ints, ``text`` string, numeric ``queue_ms`` /
+  ``latency_ms``, and ``ttft_ms`` when present);
+* hits ``/healthz`` and ``/metrics`` *during* the load and checks the
+  metrics document's shape (counters / histograms_ms / queue / replicas);
+* with ``--expect-429``, sends the burst without staggering against a
+  tiny admission queue and requires at least one 429 carrying a
+  ``Retry-After`` header (backpressure must be explicit, never a hang);
+* with ``--drain``, finishes by POSTing ``/admin/drain`` and expects
+  the server to answer 200 ``{"status": "draining"}``.
+
+Usage (CI):
+
+    python tools/check_http_serve.py --port 8077 --requests 8 --drain
+    python tools/check_http_serve.py --port 8078 --burst 16 --gen 24 \
+        --expect-429 --drain
+
+Exit status is non-zero on any violation, one line per problem on
+stderr.
+"""
+
+import argparse
+import http.client
+import json
+import sys
+import threading
+import time
+
+
+def request(host, port, method, path, body=None, timeout=30.0):
+    """One HTTP round-trip; returns (status, headers_dict, parsed_json)."""
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    try:
+        payload = None
+        headers = {}
+        if body is not None:
+            payload = json.dumps(body).encode("utf-8")
+            headers["Content-Type"] = "application/json"
+        conn.request(method, path, body=payload, headers=headers)
+        resp = conn.getresponse()
+        raw = resp.read()
+        try:
+            doc = json.loads(raw.decode("utf-8")) if raw else None
+        except (ValueError, UnicodeDecodeError):
+            doc = None
+        return resp.status, dict(resp.getheaders()), doc
+    finally:
+        conn.close()
+
+
+def wait_healthy(host, port, timeout_s):
+    deadline = time.monotonic() + timeout_s
+    last = None
+    while time.monotonic() < deadline:
+        try:
+            status, _, doc = request(host, port, "GET", "/healthz", timeout=2.0)
+            if status == 200 and isinstance(doc, dict):
+                return doc
+            last = f"status {status}"
+        except OSError as e:
+            last = str(e)
+        time.sleep(0.2)
+    raise RuntimeError(f"server on {host}:{port} never became healthy ({last})")
+
+
+def check_generate_response(errors, i, status, headers, doc, expect_id):
+    if status != 200:
+        errors.append(f"request {i}: expected 200, got {status} ({doc})")
+        return
+    if not isinstance(doc, dict):
+        errors.append(f"request {i}: 200 with non-JSON body")
+        return
+    if doc.get("id") != expect_id:
+        errors.append(f"request {i}: id {doc.get('id')!r} != sent {expect_id}")
+    tokens = doc.get("tokens")
+    if (not isinstance(tokens, list) or not tokens
+            or not all(isinstance(t, (int, float)) for t in tokens)):
+        errors.append(f"request {i}: bad 'tokens' {tokens!r}")
+    if not isinstance(doc.get("text"), str):
+        errors.append(f"request {i}: missing 'text' string")
+    for field in ("queue_ms", "latency_ms"):
+        if not isinstance(doc.get(field), (int, float)):
+            errors.append(f"request {i}: missing numeric '{field}'")
+    if "ttft_ms" in doc and not isinstance(doc["ttft_ms"], (int, float)):
+        errors.append(f"request {i}: non-numeric 'ttft_ms'")
+    ctype = {k.lower(): v for k, v in headers.items()}.get("content-type", "")
+    if "application/json" not in ctype:
+        errors.append(f"request {i}: Content-Type {ctype!r}")
+
+
+def run_concurrent(host, port, n, gen, errors):
+    """n staggered concurrent generate calls; every one must return 200.
+
+    The stagger (25 ms apart) keeps this phase meaningful against a tiny
+    admission queue too: the router drains a submitted request into a
+    free engine slot within microseconds, so spaced arrivals never trip
+    backpressure — the unstaggered collision test is ``run_burst``.
+    """
+    results = [None] * n
+
+    def one(i):
+        time.sleep(0.025 * i)
+        body = {"id": i + 1, "prompt": [5 + i, 9, 11], "max_tokens": gen}
+        try:
+            results[i] = request(host, port, "POST", "/v1/generate", body)
+        except OSError as e:
+            results[i] = e
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    # Health + metrics must answer while generate load is in flight.
+    try:
+        status, _, doc = request(host, port, "GET", "/healthz", timeout=10.0)
+        if status != 200 or not isinstance(doc, dict) or "status" not in doc:
+            errors.append(f"/healthz under load: status {status}, {doc}")
+        status, _, doc = request(host, port, "GET", "/metrics", timeout=10.0)
+        if status != 200 or not isinstance(doc, dict):
+            errors.append(f"/metrics under load: status {status}")
+        else:
+            for section in ("counters", "histograms_ms", "queue", "replicas"):
+                if section not in doc:
+                    errors.append(f"/metrics missing '{section}'")
+    except OSError as e:
+        errors.append(f"health/metrics under load: {e}")
+    for t in threads:
+        t.join()
+    for i, r in enumerate(results):
+        if isinstance(r, Exception) or r is None:
+            errors.append(f"request {i}: transport error {r!r}")
+        else:
+            status, headers, doc = r
+            check_generate_response(errors, i, status, headers, doc, i + 1)
+
+
+def run_burst(host, port, n, gen, errors):
+    """Unstaggered burst against a tiny queue: some 200s, some 429s —
+    and every 429 must carry Retry-After. Zero 429s means admission
+    control never engaged (gate failure)."""
+    results = [None] * n
+
+    def one(i):
+        body = {"id": 100 + i, "prompt": [7, 3, i % 32 + 2], "max_tokens": gen}
+        try:
+            results[i] = request(host, port, "POST", "/v1/generate", body)
+        except OSError as e:
+            results[i] = e
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    seen = {"ok": 0, "rejected": 0}
+    for i, r in enumerate(results):
+        if isinstance(r, Exception) or r is None:
+            errors.append(f"burst {i}: transport error {r!r}")
+            continue
+        status, headers, doc = r
+        if status == 200:
+            seen["ok"] += 1
+            check_generate_response(errors, i, status, headers, doc, 100 + i)
+        elif status == 429:
+            seen["rejected"] += 1
+            retry = {k.lower(): v for k, v in headers.items()}.get("retry-after")
+            if retry is None:
+                errors.append(f"burst {i}: 429 without Retry-After")
+            if not isinstance(doc, dict) or "error" not in doc:
+                errors.append(f"burst {i}: 429 without JSON error body")
+        else:
+            errors.append(f"burst {i}: unexpected status {status} ({doc})")
+    if seen["rejected"] == 0:
+        errors.append(
+            f"burst of {n}: no 429 seen ({seen['ok']} x 200) — "
+            "admission backpressure never engaged"
+        )
+    return seen
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="concurrent generate calls that must all return 200")
+    ap.add_argument("--burst", type=int, default=0,
+                    help="extra unstaggered burst size (use with --expect-429)")
+    ap.add_argument("--gen", type=int, default=8, help="max_tokens per request")
+    ap.add_argument("--expect-429", action="store_true",
+                    help="require at least one 429 (+Retry-After) in the burst")
+    ap.add_argument("--drain", action="store_true",
+                    help="POST /admin/drain at the end")
+    ap.add_argument("--startup-timeout", type=float, default=60.0)
+    args = ap.parse_args()
+
+    errors = []
+    try:
+        health = wait_healthy(args.host, args.port, args.startup_timeout)
+    except RuntimeError as e:
+        print(f"check_http_serve: FAIL — {e}", file=sys.stderr)
+        return 1
+    print(f"healthy: {health}")
+
+    if args.requests > 0:
+        run_concurrent(args.host, args.port, args.requests, args.gen, errors)
+        print(f"{args.requests} concurrent generate call(s) done")
+
+    if args.burst > 0:
+        seen = run_burst(args.host, args.port, args.burst, args.gen, errors)
+        print(f"burst of {args.burst}: {seen['ok']} x 200, "
+              f"{seen['rejected']} x 429")
+        if not args.expect_429:
+            # Burst without --expect-429: drop the zero-429 complaint.
+            errors[:] = [e for e in errors
+                         if "backpressure never engaged" not in e]
+
+    # Malformed body must be a 400, not a hang or a 500.
+    try:
+        status, _, doc = request(args.host, args.port, "POST", "/v1/generate",
+                                 {"max_tokens": 4})
+        if status != 400:
+            errors.append(f"missing-prompt body: expected 400, got {status}")
+        elif not isinstance(doc, dict) or "error" not in doc:
+            errors.append("missing-prompt 400 without JSON error body")
+    except OSError as e:
+        errors.append(f"malformed-body probe: {e}")
+
+    if args.drain:
+        try:
+            status, _, doc = request(args.host, args.port, "POST",
+                                     "/admin/drain")
+            if status != 200 or not isinstance(doc, dict) \
+                    or doc.get("status") != "draining":
+                errors.append(f"/admin/drain: status {status}, {doc}")
+            else:
+                print("drain requested")
+        except OSError as e:
+            errors.append(f"/admin/drain: {e}")
+
+    if errors:
+        for e in errors:
+            print(f"check_http_serve: FAIL — {e}", file=sys.stderr)
+        return 1
+    print("check_http_serve: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
