@@ -55,6 +55,9 @@ fn main() {
                 exec_mode: t5x::partitioning::ExecMode::Gather,
                 trace_out: None,
                 profile_steps: None,
+                microbatches: 1,
+                overlap: false,
+                infeed_depth: 2,
             };
             let trainer = Trainer::new(&arts, &device, cfg).unwrap();
             let opt_floats = trainer.optimizer_state_floats(0);

@@ -64,6 +64,9 @@ fn main() {
                 exec_mode,
                 trace_out: None,
                 profile_steps: None,
+                microbatches: 1,
+                overlap: false,
+                infeed_depth: 2,
             };
             let cfg_traced = cfg.clone();
             let trainer = Trainer::new(&arts, &device, cfg).unwrap();
@@ -129,6 +132,102 @@ fn main() {
         }
     }
 
+    // §Overlap: serial vs overlapped comm at microbatches 1/2/4 on
+    // multi-rank meshes. The two modes are bit-identical in numerics; the
+    // only difference is whether microbatch j's data-axis gradient reduce
+    // rides under microbatch j+1's forward/backward on the comm lane.
+    let overlap_meshes: &[(Mesh, ParamStrategy)] = if bench.is_quick() {
+        &[(Mesh::new(2, 1), ParamStrategy::OneD)]
+    } else {
+        &[
+            (Mesh::new(2, 1), ParamStrategy::OneD),
+            (Mesh::new(2, 2), ParamStrategy::TwoD),
+        ]
+    };
+    for model in models {
+        let m = arts.model(model).unwrap();
+        for &(mesh, strategy) in overlap_meshes {
+            for k in [1usize, 2, 4] {
+                // (tok/s, per-step ms, exposed-comm µs, overlapped-comm µs)
+                let mut rows: Vec<(f64, f64, u64, u64)> = Vec::new();
+                for overlap in [false, true] {
+                    let cfg = TrainerConfig {
+                        model: model.to_string(),
+                        mesh,
+                        strategy,
+                        optimizer: OptimizerKind::adam(),
+                        schedule: Schedule::Constant(1e-4),
+                        steps,
+                        seed: 0,
+                        log_every: 1000,
+                        checkpoint_every: None,
+                        checkpoint_dir: None,
+                        grad_clip_norm: None,
+                        weight_decay: None,
+                        exec_mode: ExecMode::Gather,
+                        trace_out: None,
+                        profile_steps: None,
+                        microbatches: k,
+                        overlap,
+                        infeed_depth: 2,
+                    };
+                    let trainer = Trainer::new(&arts, &device, cfg).unwrap();
+                    let tokens =
+                        (m.tokens_per_step() * mesh.data * steps as usize * k) as f64;
+                    let mode = if overlap { "overlap" } else { "serial" };
+                    let mut comm = (0u64, 0u64);
+                    let meas = bench.measure_with_throughput(
+                        &format!("{model} mesh={mesh} mb={k} {mode} ({steps} steps)"),
+                        Some((tokens, "tok")),
+                        || {
+                            let s = trainer
+                                .train(&BatchSource::Synthetic { seed: 1 })
+                                .unwrap();
+                            assert!(s.final_loss().is_finite());
+                            comm = (s.exposed_comm_micros, s.overlapped_comm_micros);
+                        },
+                    );
+                    rows.push((
+                        meas.throughput_per_sec().unwrap_or(0.0),
+                        meas.median_s * 1e3 / steps as f64,
+                        comm.0,
+                        comm.1,
+                    ));
+                }
+                let (serial_tok_s, serial_step_ms, serial_exposed, _) = rows[0];
+                let (overlap_tok_s, overlap_step_ms, overlap_exposed, overlapped) =
+                    rows[1];
+                println!(
+                    "      mb={k}: exposed comm {:.2} -> {:.2} ms, overlapped {:.2} ms",
+                    serial_exposed as f64 / 1e3,
+                    overlap_exposed as f64 / 1e3,
+                    overlapped as f64 / 1e3,
+                );
+                append_row(
+                    "bench_results.jsonl",
+                    &Json::obj(vec![
+                        ("group", Json::str("train overlap (serial vs overlapped)")),
+                        ("name", Json::str(format!("{model} mesh={mesh} mb={k}"))),
+                        ("microbatches", Json::num(k as f64)),
+                        ("serial_tok_s", Json::num(serial_tok_s)),
+                        ("overlap_tok_s", Json::num(overlap_tok_s)),
+                        ("serial_step_ms", Json::num(serial_step_ms)),
+                        ("overlap_step_ms", Json::num(overlap_step_ms)),
+                        (
+                            "serial_exposed_comm_ms",
+                            Json::num(serial_exposed as f64 / 1e3),
+                        ),
+                        (
+                            "overlap_exposed_comm_ms",
+                            Json::num(overlap_exposed as f64 / 1e3),
+                        ),
+                        ("overlapped_comm_ms", Json::num(overlapped as f64 / 1e3)),
+                    ]),
+                );
+            }
+        }
+    }
+
     // the 100M config: a few steps to prove the path + measure step time
     if !bench.is_quick() {
         let model = "t5-100m-dec";
@@ -149,6 +248,9 @@ fn main() {
             exec_mode: ExecMode::Gather,
             trace_out: None,
             profile_steps: None,
+            microbatches: 1,
+            overlap: false,
+            infeed_depth: 2,
         };
         let trainer = Trainer::new(&arts, &device, cfg).unwrap();
         let tokens = m.tokens_per_step() as f64;

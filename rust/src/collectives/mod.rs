@@ -25,10 +25,31 @@
 //! lift the flat ring primitives to tensor dimensions: rank `r`'s chunk is
 //! its slice along a tensor axis, so a `PartitionSpec`-sharded block can
 //! be gathered/reduced along the dimension it is actually sharded on.
+//!
+//! ## Async collectives ([`CommLane`])
+//!
+//! Every host owns one [`CommLane`]: a dedicated communication thread that
+//! executes submitted ring ops FIFO. [`CollectiveGroup::all_reduce_async`] /
+//! [`CollectiveGroup::reduce_scatter_async`] (and the tensor-level
+//! [`reduce_scatter_axis_async`] / [`all_reduce_tensor_async`]) enqueue the
+//! op and return a [`PendingCollective`] handle immediately, so the host
+//! thread keeps computing while the ring steps run on the lane;
+//! [`PendingCollective::wait`] joins the result. Because each rank's lane
+//! drains in submission order and all ranks submit group ops in the same
+//! program order, lane-routed ops keep the usual collective contract.
+//!
+//! Failure is loud, not a hang: every group created by one
+//! [`MeshCollectives`] shares an abort flag. A panicking lane op (or a host
+//! thread that unwinds while its lane still holds in-flight ops) sets the
+//! flag, and every peer blocked in a ring `recv` notices it and panics
+//! (`collective aborted`) instead of waiting forever — so `run_ranks`
+//! surfaces the original failure.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::partitioning::{Mesh, MeshAxis};
 use crate::runtime::HostTensor;
@@ -65,6 +86,9 @@ pub struct CollectiveGroup {
     barrier: Barrier,
     bytes_sent: AtomicU64,
     ops: AtomicU64,
+    /// Shared abort flag (see [`CommLane`]): set when any participant's
+    /// comm-lane op panics, checked by every blocked ring `recv`.
+    abort: Arc<AtomicBool>,
     /// Optional span tracer; when attached (and enabled), every multi-rank
     /// ring op records a `coll/*` span with elems/bytes attributes.
     tracer: std::sync::OnceLock<Arc<crate::obs::Tracer>>,
@@ -72,6 +96,13 @@ pub struct CollectiveGroup {
 
 impl CollectiveGroup {
     pub fn new(n: usize) -> Arc<CollectiveGroup> {
+        Self::new_with_abort(n, Arc::new(AtomicBool::new(false)))
+    }
+
+    /// Like [`Self::new`], but sharing an abort flag with sibling groups
+    /// (all groups of one [`MeshCollectives`] share one flag, so a failure
+    /// on any axis aborts every blocked ring in the mesh).
+    pub fn new_with_abort(n: usize, abort: Arc<AtomicBool>) -> Arc<CollectiveGroup> {
         assert!(n >= 1);
         let mut senders = Vec::with_capacity(n);
         let mut receivers_raw: Vec<Option<Receiver<Vec<f32>>>> =
@@ -92,8 +123,15 @@ impl CollectiveGroup {
             barrier: Barrier::new(n),
             bytes_sent: AtomicU64::new(0),
             ops: AtomicU64::new(0),
+            abort,
             tracer: std::sync::OnceLock::new(),
         })
+    }
+
+    /// The group's shared abort flag — hand this to the [`CommLane`]s of
+    /// the ranks that use the group.
+    pub fn abort_handle(&self) -> Arc<AtomicBool> {
+        self.abort.clone()
     }
 
     /// Attach a tracer; first writer wins (later calls are no-ops, so
@@ -140,7 +178,17 @@ impl CollectiveGroup {
     }
 
     fn recv_prev(&self, rank: usize) -> Vec<f32> {
-        self.receivers[rank].lock().unwrap().recv().expect("ring recv")
+        let rx = self.receivers[rank].lock().unwrap();
+        loop {
+            if self.abort.load(Ordering::SeqCst) {
+                panic!("collective aborted: a peer's comm op failed");
+            }
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(v) => return v,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => panic!("ring recv: peer hung up"),
+            }
+        }
     }
 
     /// Elementwise-sum all-reduce (ring: reduce-scatter + all-gather).
@@ -258,6 +306,178 @@ impl CollectiveGroup {
             d
         }
     }
+
+    /// Nonblocking [`Self::all_reduce`]: the ring runs on `lane`, the
+    /// handle joins it. All ranks must submit group ops in the same order.
+    pub fn all_reduce_async(
+        self: &Arc<Self>,
+        lane: &CommLane,
+        rank: usize,
+        data: Vec<f32>,
+    ) -> PendingCollective<Vec<f32>> {
+        let g = self.clone();
+        lane.submit("lane/all_reduce", move || g.all_reduce(rank, data))
+    }
+
+    /// Nonblocking [`Self::reduce_scatter`].
+    pub fn reduce_scatter_async(
+        self: &Arc<Self>,
+        lane: &CommLane,
+        rank: usize,
+        data: Vec<f32>,
+    ) -> PendingCollective<Vec<f32>> {
+        let g = self.clone();
+        lane.submit("lane/reduce_scatter", move || g.reduce_scatter(rank, data))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CommLane: the per-host dedicated communication thread
+// ---------------------------------------------------------------------------
+
+type LaneJob = Box<dyn FnOnce() + Send>;
+
+/// Per-host communication lane: one worker thread executing submitted ops
+/// in FIFO order while the host thread computes. Submission order *is* the
+/// rank's collective program order, so routing every concurrently-live
+/// group op of a host through its lane preserves the ring contract.
+pub struct CommLane {
+    tx: Option<Sender<LaneJob>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    abort: Arc<AtomicBool>,
+    tracer: Arc<std::sync::OnceLock<Arc<crate::obs::Tracer>>>,
+}
+
+/// Handle to an op running on a [`CommLane`]. [`Self::wait`] joins it;
+/// if the op panicked, `wait` re-panics on the host thread (and the shared
+/// abort flag has already unstuck every blocked peer).
+pub struct PendingCollective<T> {
+    rx: Receiver<Result<(T, u64), String>>,
+    label: &'static str,
+}
+
+/// Timing of one lane-executed op, as observed by [`PendingCollective::wait_stats`]:
+/// `exec_micros` is the op's run time on the lane, `blocked_micros` how long
+/// the host thread actually sat in `wait` — the *exposed* part. Their
+/// difference is communication hidden behind compute.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneStats {
+    pub exec_micros: u64,
+    pub blocked_micros: u64,
+}
+
+impl<T> PendingCollective<T> {
+    pub fn wait(self) -> T {
+        self.wait_stats().0
+    }
+
+    pub fn wait_stats(self) -> (T, LaneStats) {
+        let t0 = Instant::now();
+        match self.rx.recv() {
+            Ok(Ok((v, exec_micros))) => (
+                v,
+                LaneStats { exec_micros, blocked_micros: t0.elapsed().as_micros() as u64 },
+            ),
+            Ok(Err(msg)) => panic!("comm-lane op {} panicked: {msg}", self.label),
+            Err(_) => panic!("comm-lane op {} lost: lane worker died", self.label),
+        }
+    }
+}
+
+fn panic_text(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+impl CommLane {
+    /// Spawn a lane whose failures poison `abort` (use the
+    /// [`MeshCollectives::abort_handle`] / [`CollectiveGroup::abort_handle`]
+    /// of the groups whose ops will run on this lane).
+    pub fn new(abort: Arc<AtomicBool>) -> CommLane {
+        let (tx, rx) = channel::<LaneJob>();
+        let worker = std::thread::Builder::new()
+            .name("comm-lane".to_string())
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    job();
+                }
+            })
+            .expect("spawn comm lane");
+        CommLane {
+            tx: Some(tx),
+            worker: Some(worker),
+            abort,
+            tracer: Arc::new(std::sync::OnceLock::new()),
+        }
+    }
+
+    /// Attach a tracer: every submitted op then records a `lane/*` span on
+    /// the lane thread (first writer wins, like [`CollectiveGroup::set_tracer`]).
+    pub fn set_tracer(&self, t: Arc<crate::obs::Tracer>) {
+        let _ = self.tracer.set(t);
+    }
+
+    /// Enqueue `f` on the lane; returns immediately. A panic inside `f` is
+    /// caught, poisons the shared abort flag (unsticking every peer's ring
+    /// recv), and resurfaces when the handle is waited.
+    pub fn submit<T: Send + 'static>(
+        &self,
+        label: &'static str,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> PendingCollective<T> {
+        let (rtx, rrx) = channel();
+        let abort = self.abort.clone();
+        let tracer = self.tracer.clone();
+        let job: LaneJob = Box::new(move || {
+            let sp = tracer.get().filter(|t| t.is_enabled()).map(|t| t.span(label));
+            let t0 = Instant::now();
+            let out = std::panic::catch_unwind(AssertUnwindSafe(f));
+            let exec_micros = t0.elapsed().as_micros() as u64;
+            drop(sp);
+            match out {
+                Ok(v) => {
+                    let _ = rtx.send(Ok((v, exec_micros)));
+                }
+                Err(p) => {
+                    abort.store(true, Ordering::SeqCst);
+                    let _ = rtx.send(Err(panic_text(p)));
+                }
+            }
+        });
+        self.tx.as_ref().expect("lane closed").send(job).expect("lane worker alive");
+        PendingCollective { rx: rrx, label }
+    }
+
+    /// Run `f` on the lane and wait for it — same thread routing (and FIFO
+    /// position) as an async op, but synchronous to the caller. Returns the
+    /// result plus its [`LaneStats`] (here `blocked ≈ exec`).
+    pub fn run<T: Send + 'static>(
+        &self,
+        label: &'static str,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> (T, LaneStats) {
+        self.submit(label, f).wait_stats()
+    }
+}
+
+impl Drop for CommLane {
+    fn drop(&mut self) {
+        // A host thread unwinding with ops still in flight must not leave
+        // peers blocked in ring recvs: poison first, then join the worker
+        // (whose in-flight op either completes or aborts loudly).
+        if std::thread::panicking() {
+            self.abort.store(true, Ordering::SeqCst);
+        }
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
 }
 
 /// Split `len` into `n` near-equal contiguous chunks.
@@ -368,6 +588,45 @@ pub fn all_reduce_tensor_op(
     HostTensor::f32(t.shape.clone(), out)
 }
 
+/// Nonblocking [`reduce_scatter_axis`]: the gradient-sync primitive the
+/// trainer overlaps with the next microbatch's compute.
+pub fn reduce_scatter_axis_async(
+    g: &Arc<CollectiveGroup>,
+    lane: &CommLane,
+    rank: usize,
+    full: HostTensor,
+    axis: usize,
+) -> PendingCollective<HostTensor> {
+    let g = g.clone();
+    lane.submit("lane/reduce_scatter", move || reduce_scatter_axis(&g, rank, &full, axis))
+}
+
+/// Nonblocking [`all_reduce_tensor`] (replicated-block gradient sync).
+pub fn all_reduce_tensor_async(
+    g: &Arc<CollectiveGroup>,
+    lane: &CommLane,
+    rank: usize,
+    t: HostTensor,
+) -> PendingCollective<HostTensor> {
+    let g = g.clone();
+    lane.submit("lane/all_reduce", move || all_reduce_tensor(&g, rank, &t))
+}
+
+/// [`all_gather_axis`] routed through the lane *synchronously* — used by
+/// block execution so its data-axis shard gathers hold the same FIFO
+/// ordering as the in-flight async grad reduces they queue behind.
+pub fn all_gather_axis_lane(
+    g: &Arc<CollectiveGroup>,
+    lane: &CommLane,
+    rank: usize,
+    shard: &HostTensor,
+    axis: usize,
+) -> (HostTensor, LaneStats) {
+    let g = g.clone();
+    let shard = shard.clone();
+    lane.run("lane/all_gather", move || all_gather_axis(&g, rank, &shard, axis))
+}
+
 /// Broadcast a batch (mixed i32/f32 tensors) from subgroup rank 0 — how a
 /// data row's infeed leader shares its batch with its model-axis peers.
 /// Non-root ranks pass `None` and learn the shapes from `template`
@@ -431,30 +690,44 @@ pub struct MeshCollectives {
     /// Indexed by data coordinate: the `model`-sized ring of one data row
     /// (parameter gathers, batch broadcast).
     model_groups: Vec<Arc<CollectiveGroup>>,
+    /// One abort flag shared by every group above (and by the hosts'
+    /// [`CommLane`]s): any comm failure anywhere aborts the whole mesh.
+    abort: Arc<AtomicBool>,
 }
 
 impl MeshCollectives {
     pub fn new(mesh: Mesh) -> Arc<MeshCollectives> {
+        let abort = Arc::new(AtomicBool::new(false));
         // Fast-path: a 1-wide axis needs no subgroup machinery — all its
         // "subgroups" are one shared degenerate ring (no per-row channel or
         // barrier allocation; every call on it early-returns). `data_group`
         // / `model_group` index accordingly.
         let data_groups = if mesh.data == 1 {
-            vec![CollectiveGroup::new(1)]
+            vec![CollectiveGroup::new_with_abort(1, abort.clone())]
         } else {
-            (0..mesh.model).map(|_| CollectiveGroup::new(mesh.data)).collect()
+            (0..mesh.model)
+                .map(|_| CollectiveGroup::new_with_abort(mesh.data, abort.clone()))
+                .collect()
         };
         let model_groups = if mesh.model == 1 {
-            vec![CollectiveGroup::new(1)]
+            vec![CollectiveGroup::new_with_abort(1, abort.clone())]
         } else {
-            (0..mesh.data).map(|_| CollectiveGroup::new(mesh.model)).collect()
+            (0..mesh.data)
+                .map(|_| CollectiveGroup::new_with_abort(mesh.model, abort.clone()))
+                .collect()
         };
         Arc::new(MeshCollectives {
             mesh,
-            global: CollectiveGroup::new(mesh.num_hosts()),
+            global: CollectiveGroup::new_with_abort(mesh.num_hosts(), abort.clone()),
             data_groups,
             model_groups,
+            abort,
         })
+    }
+
+    /// The mesh-wide abort flag — seed for each host's [`CommLane`].
+    pub fn abort_handle(&self) -> Arc<AtomicBool> {
+        self.abort.clone()
     }
 
     pub fn global(&self) -> &CollectiveGroup {
@@ -467,10 +740,23 @@ impl MeshCollectives {
         (&self.data_groups[if self.mesh.data == 1 { 0 } else { m }], d)
     }
 
+    /// Like [`Self::data_group`], but handing out the owning `Arc` (the
+    /// form async submission needs).
+    pub fn data_group_arc(&self, host: usize) -> (Arc<CollectiveGroup>, usize) {
+        let (d, m) = self.mesh.coords(host);
+        (self.data_groups[if self.mesh.data == 1 { 0 } else { m }].clone(), d)
+    }
+
     /// Host's model-axis subgroup and its rank within it (= model coord).
     pub fn model_group(&self, host: usize) -> (&CollectiveGroup, usize) {
         let (d, m) = self.mesh.coords(host);
         (&self.model_groups[if self.mesh.model == 1 { 0 } else { d }], m)
+    }
+
+    /// Like [`Self::model_group`], but handing out the owning `Arc`.
+    pub fn model_group_arc(&self, host: usize) -> (Arc<CollectiveGroup>, usize) {
+        let (d, m) = self.mesh.coords(host);
+        (self.model_groups[if self.mesh.model == 1 { 0 } else { d }].clone(), m)
     }
 
     pub fn barrier(&self, _host: usize) {
@@ -739,6 +1025,112 @@ mod tests {
         let g2 = CollectiveGroup::new(n);
         let outs = run_ranks(n, |r| broadcast_batch(&g2, r, None, &template));
         assert!(outs.iter().all(|o| o.is_none()));
+    }
+
+    #[test]
+    fn async_collectives_match_sync_results() {
+        let n = 4;
+        let len = 103; // ragged
+        let g_sync = CollectiveGroup::new(n);
+        let g_async = CollectiveGroup::new(n);
+        let make = |r: usize| -> Vec<f32> {
+            (0..len).map(|i| ((i * 7 + r * 13) % 23) as f32 - 11.0).collect()
+        };
+        let sync = run_ranks(n, |r| {
+            (g_sync.all_reduce(r, make(r)), g_sync.reduce_scatter(r, make(r)))
+        });
+        let asn = run_ranks(n, |r| {
+            let lane = CommLane::new(g_async.abort_handle());
+            let ar = g_async.all_reduce_async(&lane, r, make(r));
+            let ar = ar.wait();
+            let rs = g_async.reduce_scatter_async(&lane, r, make(r));
+            (ar, rs.wait())
+        });
+        assert_eq!(sync, asn);
+    }
+
+    #[test]
+    fn lane_overlaps_with_host_compute() {
+        // Dispatch the reduce, do "compute" on the host thread, then wait:
+        // the result must be exact and the handle must report both exec and
+        // blocked time.
+        let n = 2;
+        let g = CollectiveGroup::new(n);
+        let outs = run_ranks(n, |r| {
+            let lane = CommLane::new(g.abort_handle());
+            let pending = g.all_reduce_async(&lane, r, vec![(r + 1) as f32; 64]);
+            let mut acc = 0.0f32; // host-side compute while the ring runs
+            for i in 0..10_000 {
+                acc += (i as f32).sin();
+            }
+            let (out, stats) = pending.wait_stats();
+            assert!(acc.is_finite());
+            (out, stats.exec_micros)
+        });
+        for (out, _exec) in outs {
+            assert!(out.iter().all(|&x| x == 3.0)); // 1 + 2
+        }
+    }
+
+    #[test]
+    fn lane_jobs_run_in_submission_order() {
+        // Two async ops on the same group submitted back-to-back by every
+        // rank must not interleave (FIFO lane = program order).
+        let n = 3;
+        let g = CollectiveGroup::new(n);
+        let outs = run_ranks(n, |r| {
+            let lane = CommLane::new(g.abort_handle());
+            let a = g.all_reduce_async(&lane, r, vec![r as f32; 8]);
+            let b = g.all_reduce_async(&lane, r, vec![10.0; 8]);
+            (a.wait()[0], b.wait()[0])
+        });
+        for (a, b) in outs {
+            assert_eq!(a, 3.0); // 0+1+2
+            assert_eq!(b, 30.0);
+        }
+    }
+
+    #[test]
+    fn panicking_lane_op_fails_loudly_not_deadlocks() {
+        // Rank 0's lane op panics before joining the ring; rank 1 is blocked
+        // in a sync all_reduce on the same group. The abort flag must turn
+        // both into panics (propagated by run_ranks) instead of a hang.
+        let g = CollectiveGroup::new(2);
+        let g2 = g.clone();
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            run_ranks(2, |r| {
+                if r == 0 {
+                    let lane = CommLane::new(g2.abort_handle());
+                    let pending =
+                        lane.submit("lane/boom", || -> Vec<f32> { panic!("injected failure") });
+                    pending.wait() // re-panics with the lane op's message
+                } else {
+                    g2.all_reduce(r, vec![1.0; 32]) // must abort, not hang
+                }
+            });
+        }));
+        assert!(res.is_err(), "both ranks must fail loudly");
+    }
+
+    #[test]
+    fn host_panic_with_inflight_lane_op_poisons_peers() {
+        // Rank 0 dispatches a real reduce and then panics on its host
+        // thread without waiting; dropping its CommLane during unwind must
+        // poison the group so rank 1's blocked sync op aborts.
+        let g = CollectiveGroup::new(2);
+        let g2 = g.clone();
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            run_ranks(2, |r| {
+                if r == 0 {
+                    let lane = CommLane::new(g2.abort_handle());
+                    let _pending = g2.all_reduce_async(&lane, r, vec![1.0; 32]);
+                    panic!("host-side failure");
+                }
+                g2.all_reduce(r, vec![1.0; 32]);
+                g2.all_reduce(r, vec![2.0; 32]); // rank 0 never joins this one
+            });
+        }));
+        assert!(res.is_err(), "peer must abort instead of hanging");
     }
 
     #[test]

@@ -76,6 +76,43 @@
 //!   `inspect-ckpt` reassemble full tensors through the same layout-aware
 //!   readers.
 //!
+//! ## Overlapping communication with compute
+//!
+//! The train step is not a monolithic function: [`trainer::schedule`]
+//! plans each step as an explicit `{Compute, Comm}` task list
+//! (`plan_step(microbatches, overlap)`) and a per-host `StepRunner`
+//! executes it, routing every comm-lane task onto a dedicated
+//! [`collectives::CommLane`] thread (one per host, FIFO, panic ⇒
+//! poisons the shared abort flag so no peer deadlocks mid-ring).
+//!
+//! * **Microbatched gradient accumulation** — `--microbatches k` (gin
+//!   `trainer.microbatches`) splits each optimizer step into `k`
+//!   forward/backward microbatches whose data-axis-reduced gradients are
+//!   accumulated in strict microbatch order, so the summed gradient is
+//!   *bit-identical* to the monolithic step and independent of
+//!   `--overlap` (asserted by `tests/integration_sharded.rs`).
+//! * **Async ring collectives** — with `--overlap` (gin
+//!   `trainer.overlap`), microbatch `j`'s gradient reduce is dispatched
+//!   async ([`collectives::reduce_scatter_axis_async`]) and settled
+//!   under microbatch `j+1`'s forward/backward; only the time the host
+//!   actually *blocks* on the lane counts as exposed. The split is
+//!   surfaced as `train/exposed_comm_ms` vs `train/overlapped_comm_ms`
+//!   (and `TrainSummary::{exposed,overlapped}_comm_micros`).
+//! * **Double-buffered infeed** — `--infeed-depth` (gin
+//!   `trainer.infeed_depth`) sizes the per-host prefetch pipe, scaled by
+//!   `k` so a microbatched step never starves mid-step.
+//!
+//! The [`partitioning::cost`] model mirrors the schedule: `estimate_exec`
+//! takes a `StepShape { microbatches, overlap }`, scales per-microbatch
+//! traffic by `k`, keeps per-step terms (gather-mode parameter
+//! materialization is hoisted once per step) at ×1, and moves
+//! `(k-1)/k` of the gradient-sync seconds into `comm_seconds_overlapped`
+//! without changing totals — validated against the measured per-axis
+//! byte counters by `tests/integration_sharded.rs` and benched
+//! serial-vs-overlap by `bench_train_step` (gated into
+//! `benchmarks/BENCH_9.json` by `tools/bench_gate.py`, which also
+//! cross-compares headline ratios across every committed snapshot).
+//!
 //! ## One data entry point: `seqio::get_dataset` (§3.1)
 //!
 //! Every data scenario resolves through
@@ -141,9 +178,11 @@
 //! monotonically increasing sequence numbers to upstream elements and
 //! re-sequences results, so the output order is byte-identical to serial
 //! `map` regardless of worker scheduling. `f` must be pure (it may run
-//! ahead of the consumer); `state()` quiesces in-flight work and
-//! serializes mapped-but-unemitted results so resume never recomputes or
-//! skips an element.
+//! ahead of the consumer); `state()` snapshots *incrementally* — without
+//! waiting for workers to drain — by serializing both mapped-but-unemitted
+//! results and the still-in-flight *inputs* keyed by sequence number;
+//! restore re-dispatches those inputs under their original sequence
+//! numbers, so resume never recomputes, reorders, or skips an element.
 //!
 //! ## Inference serving ([`infer`])
 //!

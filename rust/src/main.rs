@@ -186,6 +186,15 @@ fn trainer_config(args: &Args, gin: &Config) -> anyhow::Result<TrainerConfig> {
             Some(s) => Some(t5x::obs::parse_profile_steps(&s)?),
             None => None,
         },
+        microbatches: match args.get("microbatches") {
+            Some(_) => args.get_usize("microbatches", 1)?,
+            None => gin.usize_or("trainer", "microbatches", 1),
+        },
+        overlap: args.has_flag("overlap") || gin.bool_or("trainer", "overlap", false),
+        infeed_depth: match args.get("infeed-depth") {
+            Some(_) => args.get_usize("infeed-depth", 2)?,
+            None => gin.usize_or("trainer", "infeed_depth", 2),
+        },
     })
 }
 
@@ -398,6 +407,9 @@ fn train_source(
                 provider,
                 &split,
                 cfg.mesh.data,
+                // a step consumes k microbatches, so scale the per-row
+                // prefetch so `infeed_depth` still means "steps ahead"
+                cfg.infeed_depth.max(1) * cfg.microbatches.max(1),
                 trainer.start_step,
                 data_seed,
                 resume,
@@ -408,6 +420,7 @@ fn train_source(
             m,
             &dir,
             cfg.mesh.data,
+            cfg.infeed_depth.max(1) * cfg.microbatches.max(1),
             trainer.start_step,
             resume,
         )?),

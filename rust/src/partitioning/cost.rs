@@ -38,8 +38,36 @@ pub struct CostEstimate {
     pub comm_bytes_model_axis: u64,
     /// Per-step collective bytes *sent per host* (both axes).
     pub comm_bytes_per_host: u64,
-    /// Estimated per-step communication seconds on the link model.
+    /// Of [`Self::comm_bytes_per_host`], the bytes whose transfer rides
+    /// under the next microbatch's forward/backward when overlap is on
+    /// (the first `k-1` data-axis gradient reduces). Zero with overlap off
+    /// or a single microbatch.
+    pub comm_bytes_overlapped: u64,
+    /// Estimated per-step communication seconds on the link model
+    /// (exposed + overlapped).
     pub comm_seconds: f64,
+    /// Comm seconds the host actually blocks for. Measured counterpart:
+    /// the trainer's `train/exposed_comm_ms` counter.
+    pub comm_seconds_exposed: f64,
+    /// Comm seconds hidden under compute. Measured counterpart:
+    /// `train/overlapped_comm_ms`.
+    pub comm_seconds_overlapped: f64,
+}
+
+/// How the trainer shapes one step: `microbatches` gradient-accumulation
+/// microbatches, with the data-axis reduce of microbatch `j` optionally
+/// overlapped with the forward/backward of microbatch `j+1`. Mirrors
+/// `TrainerConfig::{microbatches, overlap}`.
+#[derive(Debug, Clone, Copy)]
+pub struct StepShape {
+    pub microbatches: usize,
+    pub overlap: bool,
+}
+
+impl Default for StepShape {
+    fn default() -> Self {
+        Self { microbatches: 1, overlap: false }
+    }
 }
 
 /// Simple α-β link model per host (latency + inverse bandwidth).
@@ -133,7 +161,7 @@ pub fn estimate(
     activations: ActivationStrategy,
     link: LinkModel,
 ) -> CostEstimate {
-    estimate_exec(m, mesh, params, activations, link, ExecMode::Gather)
+    estimate_exec(m, mesh, params, activations, link, ExecMode::Gather, StepShape::default())
 }
 
 /// Estimate costs for one model/strategy/mesh point.
@@ -147,6 +175,16 @@ pub fn estimate(
 /// drops those entirely and pays the activation-sized collective schedule
 /// instead (`Auto` resolves like the trainer: block iff the manifest
 /// carries a contract at `mesh.model`).
+///
+/// `step` scales the estimate to microbatched steps, mirroring the
+/// trainer's execution exactly: the data-axis gradient reduce, the batch
+/// broadcast, block mode's shard gathers, and the activation collectives
+/// run once *per microbatch*, while gather mode's parameter
+/// materialization is hoisted and paid once *per step*. With
+/// `step.overlap`, the first `k-1` gradient reduces ride under the next
+/// microbatch's compute — their cost moves from
+/// [`CostEstimate::comm_seconds_exposed`] to
+/// [`CostEstimate::comm_seconds_overlapped`] without changing the total.
 pub fn estimate_exec(
     m: &ModelManifest,
     mesh: Mesh,
@@ -154,6 +192,7 @@ pub fn estimate_exec(
     activations: ActivationStrategy,
     link: LinkModel,
     exec: ExecMode,
+    step: StepShape,
 ) -> CostEstimate {
     let block = match exec {
         ExecMode::Gather => false,
@@ -203,9 +242,18 @@ pub fn estimate_exec(
     // size, then model-axis all-gather to full size), and gradient sync
     // runs over the data axis at the model-shard size (reduce-scatter for
     // data-sharded blocks, all-reduce for data-replicated ones).
-    let mut comm_data: u64 = 0;
-    let mut comm_model: u64 = 0;
-    let mut n_collectives: u64 = 0;
+    //
+    // The terms are accumulated in per-step vs per-microbatch buckets:
+    // gather mode hoists parameter materialization out of the microbatch
+    // loop (once per step), everything else repeats `k` times.
+    let k = step.microbatches.max(1) as u64;
+    let mut gather_data: u64 = 0; // param materialization, data axis
+    let mut gather_model: u64 = 0; // param materialization, model axis
+    let mut sync_data: u64 = 0; // one microbatch's gradient reduce
+    let mut mb_model: u64 = 0; // one microbatch's model-axis traffic
+    let mut n_gather: u64 = 0;
+    let mut n_sync: u64 = 0;
+    let mut n_mb_model: u64 = 0;
     for p in &m.params {
         let spec = partitioner.spec_for(p);
         let full_bytes = p.elements() as u64 * 4;
@@ -217,51 +265,73 @@ pub fn estimate_exec(
             full_bytes
         };
         if data_sharded {
-            comm_data += ring_all_gather_bytes(model_shard_bytes, mesh.data as u64); // gather
-            comm_data += ring_reduce_scatter_bytes(model_shard_bytes, mesh.data as u64); // sync
-            n_collectives += 2;
+            gather_data += ring_all_gather_bytes(model_shard_bytes, mesh.data as u64);
+            sync_data += ring_reduce_scatter_bytes(model_shard_bytes, mesh.data as u64);
+            n_gather += 1;
+            n_sync += 1;
         } else {
-            comm_data += ring_all_reduce_bytes(model_shard_bytes, mesh.data as u64); // sync
-            n_collectives += 1;
+            sync_data += ring_all_reduce_bytes(model_shard_bytes, mesh.data as u64);
+            n_sync += 1;
         }
         if model_sharded && !block {
-            comm_model += ring_all_gather_bytes(full_bytes, mesh.model as u64); // gather
-            n_collectives += 1;
+            gather_model += ring_all_gather_bytes(full_bytes, mesh.model as u64);
+            n_gather += 1;
         }
     }
     // batch broadcast from each data row's leader to its model peers
-    // (ring forward: ~full payload per non-terminal host).
+    // (ring forward: ~full payload per non-terminal host), per microbatch.
     if mesh.model > 1 {
         let batch_bytes: u64 = m
             .batch_features
             .iter()
             .map(|f| f.shape.iter().product::<usize>() as u64 * 4)
             .sum();
-        comm_model += batch_bytes * (mesh.model as u64 - 1) / mesh.model as u64;
-        n_collectives += 1;
+        mb_model += batch_bytes * (mesh.model as u64 - 1) / mesh.model as u64;
+        n_mb_model += 1;
     }
-    // model-parallel activation collectives. Block mode executes the full
-    // ordered schedule (contract payloads when exported, the exact
-    // analytic formula otherwise); gather mode models the hypothetical
-    // GSPMD 2-per-layer all-reduces (the testbed's gather path does not
-    // execute these — bench_partitioning only checks direction there).
+    // model-parallel activation collectives, per microbatch. Block mode
+    // executes the full ordered schedule (contract payloads when exported,
+    // the exact analytic formula otherwise); gather mode models the
+    // hypothetical GSPMD 2-per-layer all-reduces (the testbed's gather
+    // path does not execute these — bench_partitioning only checks
+    // direction there).
     if mesh.model > 1 {
         if block {
-            comm_model += block_schedule_bytes_per_host(m, mesh)
+            mb_model += block_schedule_bytes_per_host(m, mesh)
                 .unwrap_or_else(|| block_schedule_bytes_analytic(m, mesh));
-            n_collectives += m
+            n_mb_model += m
                 .block_exec(mesh.model)
                 .map(|s| s.collectives.len() as u64)
                 .unwrap_or(4 * layers + 7);
         } else {
-            comm_model += 2
+            mb_model += 2
                 * layers
                 * ring_all_reduce_bytes(b * l * d * 4 / mesh.data as u64, mesh.model as u64);
-            n_collectives += 2 * layers;
+            n_mb_model += 2 * layers;
         }
     }
+    // Block mode has no hoisted materialization: its data-axis shard
+    // gathers run inside every microbatch's block walk.
+    let (gather_data_per_step, n_gather_data_per_step) = if block {
+        (gather_data * k, n_gather * k)
+    } else {
+        (gather_data, n_gather)
+    };
+    let comm_data = gather_data_per_step + sync_data * k;
+    let comm_model = gather_model + mb_model * k;
     let comm_total = comm_data + comm_model;
+    let n_collectives = n_gather_data_per_step + (n_sync + n_mb_model) * k;
     let comm_seconds = n_collectives as f64 * link.alpha + comm_total as f64 * link.beta;
+    // With overlap, the first k-1 gradient reduces ride under the next
+    // microbatch's forward/backward; the final reduce (and everything
+    // else) stays exposed.
+    let sync_seconds =
+        (n_sync * k) as f64 * link.alpha + (sync_data * k) as f64 * link.beta;
+    let (bytes_overlapped, comm_seconds_overlapped) = if step.overlap && k > 1 {
+        (sync_data * (k - 1), sync_seconds * (k - 1) as f64 / k as f64)
+    } else {
+        (0, 0.0)
+    };
 
     CostEstimate {
         mesh,
@@ -273,7 +343,10 @@ pub fn estimate_exec(
         comm_bytes_data_axis: comm_data,
         comm_bytes_model_axis: comm_model,
         comm_bytes_per_host: comm_total,
+        comm_bytes_overlapped: bytes_overlapped,
         comm_seconds,
+        comm_seconds_exposed: comm_seconds - comm_seconds_overlapped,
+        comm_seconds_overlapped,
     }
 }
 
@@ -384,6 +457,7 @@ mod tests {
             ActivationStrategy::OneD,
             link,
             ExecMode::Block,
+            StepShape::default(),
         );
         // identical memory; only the model-axis traffic pattern changes
         assert_eq!(b.param_bytes_per_host, g.param_bytes_per_host);
@@ -408,6 +482,7 @@ mod tests {
             ActivationStrategy::OneD,
             link,
             ExecMode::Auto,
+            StepShape::default(),
         );
         assert_eq!(a.comm_bytes_model_axis, b.comm_bytes_model_axis);
     }
@@ -426,6 +501,100 @@ mod tests {
         }
         assert_eq!(block_schedule_bytes_per_host(m, Mesh::new(4, 1)), Some(0));
         assert!(block_schedule_bytes_per_host(m, Mesh::new(1, 3)).is_none());
+    }
+
+    #[test]
+    fn microbatches_scale_per_microbatch_terms_only() {
+        let arts = Artifacts::load_default().unwrap();
+        let m = arts.model("t5-micro-dec").unwrap();
+        let link = LinkModel::default();
+        let mesh = Mesh::new(2, 2);
+        let mb = |k, overlap| {
+            estimate_exec(
+                m,
+                mesh,
+                ParamStrategy::TwoD,
+                ActivationStrategy::OneD,
+                link,
+                ExecMode::Gather,
+                StepShape { microbatches: k, overlap },
+            )
+        };
+        let one = mb(1, false);
+        let four = mb(4, false);
+        // gradient sync repeats 4x but the hoisted param gathers do not:
+        // data-axis traffic grows, but by strictly less than 4x...
+        assert!(four.comm_bytes_data_axis > one.comm_bytes_data_axis);
+        assert!(four.comm_bytes_data_axis < 4 * one.comm_bytes_data_axis);
+        // ...and the model-axis param all-gather is paid once per step, so
+        // the growth there is only the per-microbatch broadcast +
+        // activation terms.
+        assert!(four.comm_bytes_model_axis < 4 * one.comm_bytes_model_axis);
+        // k=1 is exactly the legacy estimate
+        let legacy =
+            estimate(m, mesh, ParamStrategy::TwoD, ActivationStrategy::OneD, link);
+        assert_eq!(one.comm_bytes_per_host, legacy.comm_bytes_per_host);
+        // block mode repeats its shard gathers every microbatch: exact 4x
+        // on both axes (no hoisted term on a 1xN mesh's model schedule;
+        // use a pure-data mesh so the data axis is everything).
+        let dmesh = Mesh::new(4, 1);
+        let blk = |k| {
+            estimate_exec(
+                m,
+                dmesh,
+                ParamStrategy::TwoD,
+                ActivationStrategy::OneD,
+                link,
+                ExecMode::Block,
+                StepShape { microbatches: k, overlap: false },
+            )
+        };
+        assert_eq!(blk(4).comm_bytes_data_axis, 4 * blk(1).comm_bytes_data_axis);
+    }
+
+    #[test]
+    fn overlap_moves_grad_sync_cost_without_changing_total() {
+        let arts = Artifacts::load_default().unwrap();
+        let m = arts.model("t5-micro-dec").unwrap();
+        let link = LinkModel::default();
+        let mesh = Mesh::new(4, 1);
+        let e = |k, overlap| {
+            estimate_exec(
+                m,
+                mesh,
+                ParamStrategy::TwoD,
+                ActivationStrategy::OneD,
+                link,
+                ExecMode::Gather,
+                StepShape { microbatches: k, overlap },
+            )
+        };
+        let serial = e(4, false);
+        let over = e(4, true);
+        // same bytes and same total seconds either way — overlap only
+        // reclassifies where the time goes
+        assert_eq!(serial.comm_bytes_per_host, over.comm_bytes_per_host);
+        assert!((serial.comm_seconds - over.comm_seconds).abs() < 1e-12);
+        assert_eq!(serial.comm_bytes_overlapped, 0);
+        assert!(serial.comm_seconds_overlapped == 0.0);
+        assert!(over.comm_seconds_overlapped > 0.0);
+        assert!(over.comm_seconds_exposed < serial.comm_seconds_exposed);
+        assert!(
+            (over.comm_seconds_exposed + over.comm_seconds_overlapped
+                - over.comm_seconds)
+                .abs()
+                < 1e-12
+        );
+        // k=1 has no prior microbatch to hide behind
+        let k1 = e(1, true);
+        assert_eq!(k1.comm_bytes_overlapped, 0);
+        assert!(k1.comm_seconds_overlapped == 0.0);
+        // 3 of 4 reduces hide: overlapped bytes are exactly 3x one
+        // microbatch's reduce traffic
+        let sync_per_mb = (serial.comm_bytes_data_axis
+            - e(1, false).comm_bytes_data_axis)
+            / 3;
+        assert_eq!(over.comm_bytes_overlapped, 3 * sync_per_mb);
     }
 
     #[test]

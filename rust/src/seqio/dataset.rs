@@ -22,8 +22,10 @@
 //! Ops with positional state (sources, `take`, `skip`, `enumerate_map`,
 //! the deterministic cache reader) restore in O(1); buffering ops
 //! (`shuffle_window`, `flat_map`, `parallel_map`) serialize their buffered
-//! examples; `Dataset::new` over an arbitrary iterator records the number
-//! of consumed elements and restores by replaying (deterministic streams
+//! examples — `parallel_map` snapshots *incrementally*, serializing its
+//! still-in-flight inputs instead of waiting for workers to drain;
+//! `Dataset::new` over an arbitrary iterator records the number of
+//! consumed elements and restores by replaying (deterministic streams
 //! make replay exact).
 
 use std::collections::{BTreeMap, VecDeque};
@@ -200,7 +202,8 @@ impl Dataset {
         Dataset::from_op(VecSource { items: v, pos: 0 })
     }
 
-    /// Capture the full pipeline position (quiesces parallel stages).
+    /// Capture the full pipeline position. Parallel stages snapshot
+    /// incrementally (in-flight inputs are serialized, not drained).
     pub fn state(&mut self) -> PipelineState {
         PipelineState(self.op.state())
     }
@@ -267,6 +270,8 @@ impl Dataset {
             next_dispatch: 0,
             next_emit: 0,
             reorder: BTreeMap::new(),
+            pending_inputs: BTreeMap::new(),
+            replay: VecDeque::new(),
             inner_done: false,
         })
     }
@@ -862,8 +867,13 @@ impl PipelineOp for PrefetchOp {
 /// Order-preserving parallel map. A single coordinator (the op itself)
 /// pulls from the upstream, fans work out to `workers` threads, and
 /// re-sequences results by input index, so output order never depends on
-/// worker scheduling. `state()` quiesces in-flight work and serializes
-/// the already-mapped-but-unemitted results.
+/// worker scheduling. `state()` is **incremental**: it serializes the
+/// already-mapped-but-unemitted results plus the *inputs* still in
+/// flight (tracked in `pending_inputs`), without waiting for workers to
+/// finish — restore re-dispatches those inputs with their original
+/// sequence numbers. `f` must be pure (already required for the
+/// order-preservation contract), so re-mapping a replayed input yields
+/// the same element the interrupted run would have produced.
 struct ParallelMapOp {
     inner: Box<dyn PipelineOp>,
     f: Arc<dyn Fn(Example) -> Example + Send + Sync>,
@@ -879,6 +889,13 @@ struct ParallelMapOp {
     /// Sequence number of the next element to emit.
     next_emit: u64,
     reorder: BTreeMap<u64, Example>,
+    /// Inputs dispatched to workers whose results have not yet come back,
+    /// keyed by sequence number (bounded by `capacity`). These are what a
+    /// snapshot serializes instead of quiescing the workers.
+    pending_inputs: BTreeMap<u64, Example>,
+    /// Restored in-flight inputs awaiting re-dispatch under their
+    /// original sequence numbers (drained ahead of fresh upstream pulls).
+    replay: VecDeque<(u64, Example)>,
     inner_done: bool,
 }
 
@@ -932,15 +949,32 @@ impl ParallelMapOp {
 
     /// Keep the workers fed up to `capacity` outstanding items.
     fn dispatch(&mut self) {
+        // Restored in-flight inputs bypass the capacity gate: they are
+        // already counted by `outstanding()` (they were dispatched before
+        // the snapshot), so the gated loop below may never admit them —
+        // send them all first, under their original sequence numbers.
+        while let Some((seq, ex)) = self.replay.pop_front() {
+            let sent = self
+                .work_tx
+                .as_ref()
+                .map(|tx| tx.send((seq, ex)))
+                .unwrap_or(false);
+            if !sent {
+                self.inner_done = true; // workers gone
+                return;
+            }
+        }
         while !self.inner_done && self.outstanding() < self.capacity {
             match self.inner.next() {
                 Some(ex) => {
+                    self.pending_inputs.insert(self.next_dispatch, ex.clone());
                     let sent = self
                         .work_tx
                         .as_ref()
                         .map(|tx| tx.send((self.next_dispatch, ex)))
                         .unwrap_or(false);
                     if !sent {
+                        self.pending_inputs.remove(&self.next_dispatch);
                         self.inner_done = true; // workers gone
                         break;
                     }
@@ -961,6 +995,7 @@ impl ParallelMapOp {
     fn collect_one(&mut self) {
         match self.result_rx.as_ref().and_then(|rx| rx.recv()) {
             Some((seq, Ok(e))) => {
+                self.pending_inputs.remove(&seq);
                 self.reorder.insert(seq, e);
             }
             Some((_, Err(msg))) => {
@@ -1004,20 +1039,18 @@ impl PipelineOp for ParallelMapOp {
     }
 
     fn state(&mut self) -> Json {
-        if self.started {
-            // Quiesce: wait for all dispatched work so the reorder buffer
-            // holds the full contiguous run [next_emit, next_dispatch).
-            while self.in_flight() > 0 {
-                self.collect_one();
-            }
-        }
+        // Incremental snapshot: no quiescing. Results already collected
+        // are serialized with their sequence numbers (the reorder buffer
+        // may have holes behind a straggler), and inputs still in flight
+        // are serialized as `pending` — restore re-dispatches them, so
+        // the workers never have to be drained to take state. Replayed
+        // inputs not yet re-sent count as pending too (`self.replay` is a
+        // subset of `pending_inputs` until `dispatch` drains it).
         Json::obj(vec![
             ("op", Json::str("parallel_map")),
             ("emitted", Json::num(self.next_emit as f64)),
-            (
-                "buffered",
-                examples_to_json(self.reorder.values()),
-            ),
+            ("done", seq_examples_to_json(self.reorder.iter())),
+            ("pending", seq_examples_to_json(self.pending_inputs.iter())),
             ("inner", self.inner.state()),
         ])
     }
@@ -1026,15 +1059,57 @@ impl PipelineOp for ParallelMapOp {
         check_tag(s, "parallel_map")?;
         anyhow::ensure!(!self.started, "cannot restore a running parallel_map");
         let emitted = field_usize(s, "emitted")? as u64;
-        let buffered = examples_from_json(field_arr(s, "buffered")?)?;
         self.next_emit = emitted;
         self.reorder.clear();
-        for (i, e) in buffered.into_iter().enumerate() {
-            self.reorder.insert(emitted + i as u64, e);
+        self.pending_inputs.clear();
+        self.replay.clear();
+        if s.get("pending").is_some() {
+            for (seq, e) in seq_examples_from_json(field_arr(s, "done")?)? {
+                self.reorder.insert(seq, e);
+            }
+            for (seq, e) in seq_examples_from_json(field_arr(s, "pending")?)? {
+                self.pending_inputs.insert(seq, e.clone());
+                self.replay.push_back((seq, e));
+            }
+        } else {
+            // Legacy quiescing snapshot: a contiguous run of mapped
+            // outputs starting at `emitted`, nothing in flight.
+            let buffered = examples_from_json(field_arr(s, "buffered")?)?;
+            for (i, e) in buffered.into_iter().enumerate() {
+                self.reorder.insert(emitted + i as u64, e);
+            }
         }
-        self.next_dispatch = emitted + self.reorder.len() as u64;
+        // Every seq in [next_emit, next_dispatch) is in exactly one of
+        // reorder / pending_inputs, so the union's size positions the
+        // dispatch cursor.
+        self.next_dispatch =
+            emitted + (self.reorder.len() + self.pending_inputs.len()) as u64;
         self.inner.restore(field(s, "inner")?)
     }
+}
+
+/// `[seq, example]` pairs for the parallel_map snapshot (seqs as hex
+/// strings, like every u64 in pipeline state).
+fn seq_examples_to_json<'a>(
+    it: impl Iterator<Item = (&'a u64, &'a Example)>,
+) -> Json {
+    Json::Arr(
+        it.map(|(seq, e)| Json::Arr(vec![u64_to_json(*seq), example_to_json(e)]))
+            .collect(),
+    )
+}
+
+fn seq_examples_from_json(v: &[Json]) -> anyhow::Result<Vec<(u64, Example)>> {
+    v.iter()
+        .map(|pair| {
+            let arr = pair.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "parallel_map state entry is not a [seq, example] pair"
+                )
+            })?;
+            Ok((u64_from_json(&arr[0])?, example_from_json(&arr[1])?))
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -1335,6 +1410,109 @@ mod tests {
         let mut joined = head;
         joined.extend(tail);
         assert_eq!(joined, all);
+    }
+
+    #[test]
+    fn parallel_map_snapshot_is_exact_at_every_cut_point() {
+        // Incremental snapshot contract: wherever state is taken —
+        // including with work still in flight on the workers — restore +
+        // drain yields exactly the not-yet-emitted suffix, and the
+        // snapshotted stream itself is undisturbed.
+        let f = |mut e: Example| {
+            if let Feature::Ints(v) = e.get_mut("x").unwrap() {
+                v[0] = v[0] * 3 + 1;
+            }
+            e
+        };
+        let n = 30usize;
+        let build = || Dataset::from_vec(nums(n)).parallel_map(f, 3);
+        let all = xs(build());
+        for cut in 0..=n {
+            let mut first = build();
+            let head: Vec<i32> = (&mut first)
+                .take(cut)
+                .map(|e| e["x"].as_ints().unwrap()[0])
+                .collect();
+            let snap = first.state();
+            let mut resumed = build();
+            resumed.restore(&snap).unwrap();
+            let tail: Vec<i32> =
+                (&mut resumed).map(|e| e["x"].as_ints().unwrap()[0]).collect();
+            let mut joined = head;
+            joined.extend(tail);
+            assert_eq!(joined, all, "cut={cut}");
+            // the original stream is not disturbed by the snapshot
+            let rest: Vec<i32> =
+                (&mut first).map(|e| e["x"].as_ints().unwrap()[0]).collect();
+            assert_eq!(rest, &all[cut..], "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn parallel_map_repeated_snapshots_and_pending_carryover() {
+        let f = |mut e: Example| {
+            if let Feature::Ints(v) = e.get_mut("x").unwrap() {
+                v[0] += 500;
+            }
+            e
+        };
+        let build = || Dataset::from_vec(nums(40)).parallel_map(f, 4);
+        let expect = xs(build());
+        let mut d = build();
+        let _ = (&mut d).take(13).count();
+        // two snapshots with no consumption in between must agree
+        let s1 = d.state();
+        let s2 = d.state();
+        for s in [&s1, &s2] {
+            let mut r = build();
+            r.restore(s).unwrap();
+            let tail: Vec<i32> =
+                (&mut r).map(|e| e["x"].as_ints().unwrap()[0]).collect();
+            assert_eq!(tail, &expect[13..]);
+        }
+        // snapshot-of-a-restore (replayed inputs still pending, nothing
+        // re-dispatched yet) must carry the in-flight inputs forward
+        let mut r = build();
+        r.restore(&s1).unwrap();
+        let s3 = r.state();
+        let mut r2 = build();
+        r2.restore(&s3).unwrap();
+        let tail: Vec<i32> =
+            (&mut r2).map(|e| e["x"].as_ints().unwrap()[0]).collect();
+        assert_eq!(tail, &expect[13..]);
+    }
+
+    #[test]
+    fn parallel_map_restores_legacy_quiesced_state() {
+        // Pre-PR9 snapshots quiesced the workers and carried a contiguous
+        // 'buffered' run of mapped outputs (no 'pending' field); they
+        // must still restore.
+        let f = |mut e: Example| {
+            if let Feature::Ints(v) = e.get_mut("x").unwrap() {
+                v[0] += 500;
+            }
+            e
+        };
+        let n = 10usize;
+        let build = || Dataset::from_vec(nums(n)).parallel_map(f, 2);
+        let expect = xs(build());
+        // emitted 4, mapped outputs for seqs 4..6 buffered, upstream at 6
+        let buffered: Vec<Example> =
+            nums(n).into_iter().skip(4).take(2).map(f).collect();
+        let legacy = PipelineState(Json::obj(vec![
+            ("op", Json::str("parallel_map")),
+            ("emitted", Json::num(4.0)),
+            ("buffered", examples_to_json(buffered.iter())),
+            (
+                "inner",
+                Json::obj(vec![("op", Json::str("vec")), ("pos", Json::num(6.0))]),
+            ),
+        ]));
+        let mut r = build();
+        r.restore(&legacy).unwrap();
+        let tail: Vec<i32> =
+            (&mut r).map(|e| e["x"].as_ints().unwrap()[0]).collect();
+        assert_eq!(tail, &expect[4..]);
     }
 
     #[test]

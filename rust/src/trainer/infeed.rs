@@ -10,13 +10,14 @@
 //! the prefetch buffer — the property that makes kill-and-resume runs
 //! consume the exact same global example sequence.
 //!
-//! Cost note: a snapshot serializes each buffering op's buffer (and
-//! quiesces `parallel_map` in-flight work), so its per-batch price scales
-//! with `shuffle_window`/packer buffer sizes. The trainer-facing streams
-//! (deterministic cache reader + converters) are pure positional ops
-//! where a snapshot is a handful of counters; pipelines with very large
-//! in-memory buffers should keep them upstream of the offline cache job
-//! (see the ROADMAP item on incremental snapshots).
+//! Cost note: a snapshot serializes each buffering op's buffer
+//! (`parallel_map` snapshots incrementally — its in-flight *inputs* are
+//! serialized without draining the workers), so its per-batch price
+//! scales with `shuffle_window`/packer buffer sizes. The trainer-facing
+//! streams (deterministic cache reader + converters) are pure positional
+//! ops where a snapshot is a handful of counters; pipelines with very
+//! large in-memory buffers should keep them upstream of the offline
+//! cache job.
 
 use std::sync::Mutex;
 

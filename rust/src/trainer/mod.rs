@@ -58,6 +58,27 @@
 //! by `tests/integration_sharded.rs`; wider data axes agree to summation
 //! order).
 //!
+//! ## Overlapping communication with compute
+//!
+//! Every step executes an explicit `{Compute, Comm}` task schedule (see
+//! [`schedule`]): the global batch is `k = microbatches`
+//! gradient-accumulation microbatches, and each microbatch's data-axis
+//! gradient reduce is dispatched to a per-host communication lane
+//! ([`crate::collectives::CommLane`]). With `overlap` enabled the join is
+//! deferred until the *next* microbatch's forward/backward has been
+//! issued, so the ring runs under compute and only the join's blocked
+//! time is exposed; with it disabled the same ops run in the same order
+//! but are joined immediately. Gather-mode parameter materialization is
+//! hoisted to once per step (parameters do not change between
+//! microbatches), and block execution's resident-block data-axis gathers
+//! are lane-routed so they serialize FIFO behind any in-flight reduce on
+//! the same subgroup instead of corrupting the ring. Reduced gradients
+//! accumulate strictly in microbatch order, so overlap on/off is
+//! bit-identical (the [`schedule`] docs state the full numerics
+//! contract), and a step either consumes all `k` microbatches or — on
+//! stream exhaustion — applies nothing. `train/exposed_comm_ms` vs
+//! `train/overlapped_comm_ms` quantify what actually got hidden.
+//!
 //! ## Distributed checkpoints
 //!
 //! Each owning host writes its disjoint block directly to the shared
@@ -70,6 +91,7 @@
 pub mod eval;
 pub mod infeed;
 pub mod recipes;
+pub mod schedule;
 
 use std::cell::Cell;
 use std::collections::BTreeMap;
@@ -80,8 +102,9 @@ use std::time::Instant;
 
 use crate::checkpoint::{block_coords, CheckpointManager};
 use crate::collectives::{
-    all_gather_axis, all_reduce_tensor, all_reduce_tensor_op, broadcast_batch,
-    reduce_scatter_axis, run_ranks, MeshCollectives, ReduceOp,
+    all_gather_axis, all_reduce_tensor_async, all_reduce_tensor_op, broadcast_batch,
+    reduce_scatter_axis_async, run_ranks, CollectiveGroup, CommLane, MeshCollectives,
+    PendingCollective, ReduceOp,
 };
 use crate::metrics::{CounterSet, MetricsLogger};
 use crate::model::Params;
@@ -92,6 +115,7 @@ use crate::partitioning::{
 use crate::runtime::artifacts::ModelManifest;
 use crate::runtime::{Artifacts, BlockExecDegree, DeviceHandle, Executable, HostTensor};
 use crate::seqio::dataset::PipelineState;
+use schedule::{plan_step, StepRunner, TaskKind};
 
 /// Flat parameter layout: manifest order, contiguous f32. Retained as a
 /// utility for tests/tools that want whole-model views; the trainer's
@@ -201,6 +225,23 @@ pub struct TrainerConfig {
     /// None = trace every step. Ignored unless `trace_out` is set (or a
     /// tracer was attached via [`Trainer::with_tracer`]).
     pub profile_steps: Option<(u64, u64)>,
+    /// Gradient-accumulation microbatches per step (`--microbatches`, gin
+    /// `trainer.microbatches`). Each step consumes `k` manifest-shaped
+    /// batches (microbatch `j` of step `t` is global batch `t·k + j`) and
+    /// applies the in-order sum of their per-microbatch reduced gradients
+    /// — numerically identical to a monolithic step over the same
+    /// examples. Must be ≥ 1.
+    pub microbatches: usize,
+    /// Overlap each microbatch's data-axis gradient reduce with the next
+    /// microbatch's forward/backward (`--overlap`, gin `trainer.overlap`).
+    /// Same op sequence either way, so results are bit-identical; off =
+    /// every reduce is joined immediately (fully exposed reference).
+    pub overlap: bool,
+    /// Infeed prefetch depth per data row (`--infeed-depth`, gin
+    /// `trainer.infeed_depth`): how many batches the stream thread keeps
+    /// decoded ahead of the consumer. 2 = double-buffering (batch t+1
+    /// prepared while step t computes).
+    pub infeed_depth: usize,
 }
 
 impl TrainerConfig {
@@ -221,6 +262,9 @@ impl TrainerConfig {
             exec_mode: ExecMode::Gather,
             trace_out: None,
             profile_steps: None,
+            microbatches: 1,
+            overlap: false,
+            infeed_depth: 2,
         }
     }
 
@@ -249,6 +293,12 @@ pub struct TrainSummary {
     /// Bytes moved over model-axis subgroups (parameter gathers, batch
     /// broadcast).
     pub model_axis_bytes: u64,
+    /// Comm time host threads actually blocked on, µs summed over hosts
+    /// (both collective phase timers, including async-join blocked time).
+    pub exposed_comm_micros: u64,
+    /// Comm-lane execution time hidden under compute, µs summed over
+    /// hosts — the overlap win (0 for fully serial runs).
+    pub overlapped_comm_micros: u64,
     pub wall_seconds: f64,
 }
 
@@ -278,6 +328,12 @@ pub struct PhaseTimer(AtomicU64);
 impl PhaseTimer {
     fn add_since(&self, t0: Instant) {
         self.0.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Credit an externally measured duration (async-collective blocked
+    /// time reported by [`crate::collectives::LaneStats`]).
+    fn add_micros(&self, micros: u64) {
+        self.0.fetch_add(micros, Ordering::Relaxed);
     }
 
     pub fn seconds(&self) -> f64 {
@@ -384,6 +440,16 @@ fn clip_scale_from_norm(clip: Option<f64>, norm: f64) -> f32 {
     }
 }
 
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// The compiled step: one monolithic HLO (Gather) or the block-segment
 /// programs plus the manifest contract they replay (Block).
 enum StepProgram {
@@ -433,6 +499,10 @@ pub struct Trainer {
     /// Largest parameter/gradient tensor (elements) any host materialized
     /// inside a train step — the measured O(total) vs O(block) claim.
     peak_param_floats: AtomicU64,
+    /// Comm-lane execution micros the host threads did not block on
+    /// (hidden under compute; summed over hosts). Exposed comm is the
+    /// collective phase timers. Reset per `train()`.
+    overlapped_comm_micros: AtomicU64,
     hosts: Vec<Mutex<HostState>>,
     pub start_step: u64,
     /// Per-row data pipeline states recovered by [`Trainer::restore_latest`]
@@ -461,6 +531,10 @@ impl Trainer {
         device: &DeviceHandle,
         config: TrainerConfig,
     ) -> anyhow::Result<Trainer> {
+        anyhow::ensure!(
+            config.microbatches >= 1,
+            "trainer.microbatches must be >= 1 (got 0)"
+        );
         let manifest = arts.model(&config.model)?.clone();
         let layout = FlatLayout::from_manifest(&manifest);
         let partitioner = Partitioner::new(config.mesh, config.strategy);
@@ -558,6 +632,7 @@ impl Trainer {
             program,
             colls,
             peak_param_floats: AtomicU64::new(0),
+            overlapped_comm_micros: AtomicU64::new(0),
             hosts,
             start_step: 0,
             restored_pipeline: None,
@@ -668,6 +743,7 @@ impl Trainer {
         let t0 = Instant::now();
         self.colls.reset_stats();
         self.timing.reset();
+        self.overlapped_comm_micros.store(0, Ordering::Relaxed);
         if self.tracer.is_armed() {
             // Default-enabled unless a profile window narrows it per step.
             self.tracer.set_enabled(self.config.profile_steps.is_none());
@@ -677,13 +753,30 @@ impl Trainer {
         }
 
         let errors: Vec<Option<String>> = run_ranks(n, |rank| {
-            match self.host_loop(rank, source, &history, &stop_step) {
-                Ok(()) => None,
-                Err(e) => Some(format!("host {rank}: {e}")),
+            // A failed or panicked host can no longer serve its ring
+            // position: poison the shared abort flag so peers blocked in a
+            // collective (or on the comm lane) fail loudly instead of
+            // waiting forever on a vanished neighbor, and collect every
+            // host's message so the root cause is reported, not just the
+            // induced aborts.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.host_loop(rank, source, &history, &stop_step)
+            }));
+            match result {
+                Ok(Ok(())) => None,
+                Ok(Err(e)) => {
+                    self.colls.abort_handle().store(true, Ordering::SeqCst);
+                    Some(format!("host {rank}: {e}"))
+                }
+                Err(p) => {
+                    self.colls.abort_handle().store(true, Ordering::SeqCst);
+                    Some(format!("host {rank} panicked: {}", panic_message(p)))
+                }
             }
         });
-        for e in errors.into_iter().flatten() {
-            anyhow::bail!("{e}");
+        let errors: Vec<String> = errors.into_iter().flatten().collect();
+        if !errors.is_empty() {
+            anyhow::bail!("{}", errors.join("; "));
         }
         // A dead producer drains like exhaustion (so no rank strands a
         // peer mid-collective), then surfaces here as a hard error.
@@ -700,10 +793,18 @@ impl Trainer {
         let final_step = history.last().map(|h| h.step + 1).unwrap_or(self.start_step);
         let data_axis_bytes = self.colls.axis_bytes(MeshAxis::Data);
         let model_axis_bytes = self.colls.axis_bytes(MeshAxis::Model);
+        // Exposed = host-thread blocked time on comm (sync ops + async-join
+        // waits, both phase-timed); overlapped = lane exec time hidden
+        // under compute. Both reset at the top of train().
+        let exposed_comm_micros = self.timing.collectives_data.micros()
+            + self.timing.collectives_model.micros();
+        let overlapped_comm_micros = self.overlapped_comm_micros.load(Ordering::Relaxed);
         self.counters.add("train/data_axis_bytes", data_axis_bytes);
         self.counters.add("train/model_axis_bytes", model_axis_bytes);
         self.counters.add("train/data_axis_ops", self.colls.axis_ops(MeshAxis::Data));
         self.counters.add("train/model_axis_ops", self.colls.axis_ops(MeshAxis::Model));
+        self.counters.add("train/exposed_comm_ms", exposed_comm_micros / 1000);
+        self.counters.add("train/overlapped_comm_ms", overlapped_comm_micros / 1000);
         self.counters
             .set_max("train/peak_param_floats", self.peak_param_floats.load(Ordering::Relaxed));
         self.counters.log_to(&self.logger, final_step);
@@ -727,6 +828,8 @@ impl Trainer {
             comm_bytes: self.colls.bytes_sent(),
             data_axis_bytes,
             model_axis_bytes,
+            exposed_comm_micros,
+            overlapped_comm_micros,
             wall_seconds: t0.elapsed().as_secs_f64(),
         })
     }
@@ -751,6 +854,22 @@ impl Trainer {
         if self.tracer.is_armed() {
             self.tracer.name_track(&format!("host{rank} (d{d_coord},m{m_coord})"));
         }
+        // ---- the step schedule + its executor: one comm lane per host,
+        // alive across steps (drained at every step boundary) ----
+        let k = self.config.microbatches;
+        let plan_tasks = plan_step(k, self.config.overlap);
+        let (dg_arc, _) = self.colls.data_group_arc(rank);
+        let runner = StepRunner::new(
+            CommLane::new(self.colls.abort_handle()),
+            &self.timing.collectives_data,
+            &self.overlapped_comm_micros,
+        );
+        if self.tracer.is_armed() {
+            runner.lane().set_tracer(self.tracer.clone());
+            let t = self.tracer.clone();
+            let label = format!("host{rank} comm-lane");
+            runner.dispatch("lane/name_track", move || t.name_track(label)).wait();
+        }
         let end = self.start_step + self.config.steps;
         for step in self.start_step..end {
             if step >= stop_step.load(Ordering::Acquire) {
@@ -765,70 +884,139 @@ impl Trainer {
             let _step_span = self.tracer.span("train/step").arg("step", step);
             let phase0 =
                 if rank == 0 { Some(self.timing.snapshot_micros()) } else { None };
-            // ---- infeed: the data row's batch, shared across the row.
-            // The pull/wait counts as infeed; the row broadcast counts as
-            // model-axis collective time (no overlap between phases). ----
-            let batch = match source {
-                BatchSource::Synthetic { seed } => {
-                    let b = Some(infeed::synthetic_batch(m, *seed, d_coord, step));
-                    self.timing.infeed.add_since(t_step);
-                    b
-                }
-                BatchSource::Infeed(inf) => {
-                    let leader = if m_coord == 0 {
-                        let _sp = self.tracer.span("train/infeed");
-                        inf.next_counted(d_coord, &self.counters)
-                    } else {
-                        None
-                    };
-                    self.timing.infeed.add_since(t_step);
-                    if mesh.model == 1 {
-                        leader
-                    } else {
-                        let t_b = Instant::now();
-                        let _sp = self.tracer.span("train/broadcast_batch");
-                        let out = broadcast_batch(mg, mr, leader, &template);
-                        self.timing.collectives_model.add_since(t_b);
-                        out
-                    }
-                }
-            };
-            let Some(batch) = batch else {
-                // data exhausted: all rows exhaust simultaneously because
-                // shards are balanced; signal and stop.
-                stop_step.fetch_min(step, Ordering::AcqRel);
-                break;
-            };
-
-            // ---- step program: forward/backward → loss scalars + grads
-            // shaped as the host's model-axis block ----
+            // ---- per-step prepared state: resident shards (O(1) Arc
+            // bumps) and, in gather mode, the full parameters materialized
+            // ONCE — they do not change across microbatches, so the
+            // microbatch loop is pure infeed + execute and the comm lane
+            // has a real window to hide the grad reduces in. ----
             let shards: Vec<HostTensor> = {
                 let host = self.hosts[rank].lock().unwrap();
                 host.shards.clone() // O(1) Arc bumps
             };
-            let (loss_sum, weight_sum, correct_sum, block_grads) = match &self.program {
-                StepProgram::Gather(exe) => self.gather_step(exe, rank, &shards, batch)?,
-                StepProgram::Block(bp) => self.block_step(bp, rank, &shards, batch)?,
+            let full_params: Option<Vec<HostTensor>> = match &self.program {
+                StepProgram::Gather(_) => Some(self.gather_params(rank, &shards)),
+                StepProgram::Block(_) => None,
             };
-            anyhow::ensure!(loss_sum.is_finite(), "non-finite loss at step {step}");
 
-            // ---- gradient sync over the data-axis subgroup (the
-            // model-axis part already happened inside the step program) ----
+            // ---- execute the step plan over k microbatches ----
+            let mut acc_loss = 0f32;
+            let mut acc_weight = 0f32;
+            let mut acc_correct = 0f32;
+            let mut acc_grads: Vec<Option<HostTensor>> =
+                vec![None; self.plan.entries.len()];
+            let mut inflight: Vec<Option<Vec<PendingCollective<HostTensor>>>> =
+                (0..k).map(|_| None).collect();
+            let mut batch_slot: Option<Vec<HostTensor>> = None;
+            let mut grads_slot: Option<Vec<HostTensor>> = None;
+            let mut exhausted = false;
+            for task in &plan_tasks {
+                match task.kind {
+                    TaskKind::Infeed => {
+                        let index = step * k as u64 + task.microbatch as u64;
+                        match self.fetch_batch(source, index, d_coord, m_coord, mg, mr, &template)
+                        {
+                            Some(b) => batch_slot = Some(b),
+                            None => {
+                                exhausted = true;
+                                break;
+                            }
+                        }
+                    }
+                    TaskKind::ForwardBackward => {
+                        let batch =
+                            batch_slot.take().expect("plan runs Infeed before ForwardBackward");
+                        let (ls, ws, cs, grads) = match &self.program {
+                            StepProgram::Gather(exe) => self.gather_compute(
+                                exe,
+                                rank,
+                                full_params.as_ref().expect("materialized for gather mode"),
+                                batch,
+                            )?,
+                            StepProgram::Block(bp) => {
+                                self.block_step(bp, rank, &shards, batch, &runner)?
+                            }
+                        };
+                        anyhow::ensure!(
+                            ls.is_finite(),
+                            "non-finite loss at step {step} (microbatch {})",
+                            task.microbatch
+                        );
+                        acc_loss += ls;
+                        acc_weight += ws;
+                        acc_correct += cs;
+                        grads_slot = Some(grads);
+                    }
+                    TaskKind::DispatchGradReduce => {
+                        let grads = grads_slot
+                            .take()
+                            .expect("plan runs ForwardBackward before DispatchGradReduce");
+                        let mut handles = Vec::with_capacity(grads.len());
+                        for (e, g) in self.plan.entries.iter().zip(grads) {
+                            handles.push(match e.spec.dim_for(MeshAxis::Data) {
+                                Some((dim, _)) => reduce_scatter_axis_async(
+                                    &dg_arc,
+                                    runner.lane(),
+                                    dr,
+                                    g,
+                                    dim,
+                                ),
+                                None => {
+                                    all_reduce_tensor_async(&dg_arc, runner.lane(), dr, g)
+                                }
+                            });
+                        }
+                        inflight[task.microbatch] = Some(handles);
+                    }
+                    TaskKind::WaitGradReduce => {
+                        let handles = inflight[task.microbatch]
+                            .take()
+                            .expect("plan dispatches before waiting");
+                        let _sp = self
+                            .tracer
+                            .span("train/settle_grads")
+                            .arg("microbatch", task.microbatch);
+                        // strict microbatch-order accumulation: the f32
+                        // summation tree is independent of overlap mode
+                        for (slot, p) in acc_grads.iter_mut().zip(handles) {
+                            let g = runner.settle(p);
+                            *slot = Some(match slot.take() {
+                                Some(prev) => prev.add(&g),
+                                None => g,
+                            });
+                        }
+                    }
+                    TaskKind::Finalize => {}
+                }
+            }
+            if exhausted {
+                // Data exhausted mid-step (all rows cut at the same
+                // microbatch — shards are balanced and the row broadcast
+                // propagates the flag): drain any in-flight reduces so the
+                // lanes quiesce symmetrically, discard the partial
+                // accumulation, and stop. A step either consumes all k
+                // microbatches or applies nothing.
+                for handles in inflight.iter_mut().filter_map(|h| h.take()) {
+                    for p in handles {
+                        let _ = runner.settle(p);
+                    }
+                }
+                stop_step.fetch_min(step, Ordering::AcqRel);
+                break;
+            }
+
+            // ---- finalize: one scalar sync over the full effective
+            // batch, then clip + update on the accumulated gradient —
+            // identical to the monolithic step's epilogue. The lane is
+            // drained here, so host-thread collectives are safe again. ----
             let grad_sync_span = self.tracer.span("train/grad_sync");
             let t_sc = Instant::now();
-            let scalars = dg.all_reduce(dr, vec![loss_sum, weight_sum, correct_sum]);
+            let scalars = dg.all_reduce(dr, vec![acc_loss, acc_weight, acc_correct]);
             self.timing.collectives_data.add_since(t_sc);
             let w_total = scalars[1].max(1e-9);
-            let mut grad_shards: Vec<HostTensor> = Vec::with_capacity(self.plan.entries.len());
-            for (e, g) in self.plan.entries.iter().zip(block_grads) {
-                let t0 = Instant::now();
-                let g = match e.spec.dim_for(MeshAxis::Data) {
-                    Some((dim, _)) => reduce_scatter_axis(dg, dr, &g, dim),
-                    None => all_reduce_tensor(dg, dr, &g),
-                };
-                self.timing.collectives_data.add_since(t0);
-                grad_shards.push(g);
-            }
+            let grad_shards: Vec<HostTensor> = acc_grads
+                .into_iter()
+                .map(|g| g.expect("every microbatch accumulated into every grad slot"))
+                .collect();
 
             // ---- global-norm clip scale (norm over owned blocks only, so
             // replicas are not double counted) ----
@@ -904,8 +1092,9 @@ impl Trainer {
                     self.phase_hist.step_ms.record_ms(rec.step_seconds * 1e3);
                 }
                 if step % self.config.log_every == 0 || step + 1 == end {
+                    // k microbatches = k manifest-shaped batches per step
                     let tokens =
-                        (m.tokens_per_step() * mesh.data) as f64 / rec.step_seconds;
+                        (m.tokens_per_step() * mesh.data * k) as f64 / rec.step_seconds;
                     let mut vals = vec![
                         ("loss", loss),
                         ("accuracy", acc),
@@ -937,23 +1126,68 @@ impl Trainer {
         Ok(())
     }
 
-    /// `ExecMode::Gather` step: transiently reconstruct full parameters
-    /// (data-axis then model-axis all-gather), run the monolithic
-    /// `train_step` HLO, slice each gradient back to this host's
-    /// model-axis block. With `mesh.model == 1` the model-axis machinery
-    /// is skipped entirely (no degenerate 1-rank calls, no timing probes).
-    fn gather_step(
+    /// One microbatch from the data row's source: leaders (`m == 0`) pull
+    /// — or synthesize, keyed by the global batch index `step·k + j` — and
+    /// model-axis peers receive the row broadcast. `None` = exhausted.
+    /// The pull/wait counts as infeed; the broadcast as model-axis
+    /// collective time (no overlap between phases).
+    #[allow(clippy::too_many_arguments)]
+    fn fetch_batch(
         &self,
-        exe: &Executable,
-        rank: usize,
-        shards: &[HostTensor],
-        batch: Vec<HostTensor>,
-    ) -> anyhow::Result<(f32, f32, f32, Vec<HostTensor>)> {
+        source: &BatchSource,
+        batch_index: u64,
+        d_coord: usize,
+        m_coord: usize,
+        mg: &CollectiveGroup,
+        mr: usize,
+        template: &[(Vec<usize>, bool)],
+    ) -> Option<Vec<HostTensor>> {
         let mesh = self.config.mesh;
-        let (_, m_coord) = mesh.coords(rank);
+        let t_inf = Instant::now();
+        match source {
+            BatchSource::Synthetic { seed } => {
+                let b = Some(infeed::synthetic_batch(
+                    &self.manifest,
+                    *seed,
+                    d_coord,
+                    batch_index,
+                ));
+                self.timing.infeed.add_since(t_inf);
+                b
+            }
+            BatchSource::Infeed(inf) => {
+                let leader = if m_coord == 0 {
+                    let _sp = self.tracer.span("train/infeed");
+                    inf.next_counted(d_coord, &self.counters)
+                } else {
+                    None
+                };
+                self.timing.infeed.add_since(t_inf);
+                if mesh.model == 1 {
+                    leader
+                } else {
+                    let t_b = Instant::now();
+                    let _sp = self.tracer.span("train/broadcast_batch");
+                    let out = broadcast_batch(mg, mr, leader, template);
+                    self.timing.collectives_model.add_since(t_b);
+                    out
+                }
+            }
+        }
+    }
+
+    /// `ExecMode::Gather`, phase 1: transiently reconstruct the full
+    /// parameter set (data-axis then model-axis all-gather per sharded
+    /// dim). Runs once per step — parameters do not change between
+    /// microbatches, so one materialization serves all k executions and
+    /// the gathers never land inside the overlap window. With
+    /// `mesh.model == 1` the model-axis machinery is skipped entirely (no
+    /// degenerate 1-rank calls, no timing probes).
+    fn gather_params(&self, rank: usize, shards: &[HostTensor]) -> Vec<HostTensor> {
+        let mesh = self.config.mesh;
         let (dg, dr) = self.colls.data_group(rank);
         let (mg, mr) = self.colls.model_group(rank);
-        let mut inputs = Vec::with_capacity(self.plan.entries.len() + batch.len());
+        let mut full = Vec::with_capacity(self.plan.entries.len());
         for (e, shard) in self.plan.entries.iter().zip(shards) {
             let mut t = shard.clone();
             if let Some((dim, _)) = e.spec.dim_for(MeshAxis::Data) {
@@ -969,8 +1203,25 @@ impl Trainer {
                 }
             }
             self.note_param_peak(t.elements());
-            inputs.push(t);
+            full.push(t);
         }
+        full
+    }
+
+    /// `ExecMode::Gather`, phase 2: run the monolithic `train_step` HLO on
+    /// the pre-materialized full parameters and one microbatch, slicing
+    /// each gradient back to this host's model-axis block.
+    fn gather_compute(
+        &self,
+        exe: &Executable,
+        rank: usize,
+        full_params: &[HostTensor],
+        batch: Vec<HostTensor>,
+    ) -> anyhow::Result<(f32, f32, f32, Vec<HostTensor>)> {
+        let mesh = self.config.mesh;
+        let (_, m_coord) = mesh.coords(rank);
+        let mut inputs = Vec::with_capacity(full_params.len() + batch.len());
+        inputs.extend(full_params.iter().cloned()); // O(1) Arc bumps
         inputs.extend(batch);
         let _exec_span = self.tracer.span("train/execute");
         let t_exec = Instant::now();
@@ -1006,10 +1257,11 @@ impl Trainer {
         rank: usize,
         shards: &[HostTensor],
         batch: Vec<HostTensor>,
+        runner: &StepRunner<'_>,
     ) -> anyhow::Result<(f32, f32, f32, Vec<HostTensor>)> {
         let mesh = self.config.mesh;
         let (_, m_coord) = mesh.coords(rank);
-        let (dg, dr) = self.colls.data_group(rank);
+        let (dg_arc, dr) = self.colls.data_group_arc(rank);
         let (mg, mr) = self.colls.model_group(rank);
         let nl = self.manifest.cfg_usize("num_layers");
         let feature = |name: &str| -> anyhow::Result<HostTensor> {
@@ -1029,14 +1281,19 @@ impl Trainer {
         // Resident model-axis block of a param: for TwoD sharding the
         // resident shard is additionally data-sliced, so a data-axis
         // all-gather reconstructs the *block* (never the full param).
+        // Lane-routed: under microbatched overlap the previous microbatch's
+        // grad reduces may still be in flight on this data subgroup, and a
+        // host-thread ring op concurrent with them would corrupt the ring —
+        // the lane's FIFO serializes this gather behind them instead.
         let blk = |name: &str| -> anyhow::Result<HostTensor> {
             let i = bp.index(name)?;
             let e = &self.plan.entries[i];
             let mut t = shards[i].clone();
             if let Some((dim, _)) = e.spec.dim_for(MeshAxis::Data) {
-                let t0 = Instant::now();
-                t = all_gather_axis(dg, dr, &t, dim);
-                self.timing.collectives_data.add_since(t0);
+                let g = dg_arc.clone();
+                let shard = t;
+                t = runner
+                    .sync("lane/block_gather", move || all_gather_axis(&g, dr, &shard, dim));
             }
             self.note_param_peak(t.elements());
             Ok(t)

@@ -287,6 +287,7 @@ pub fn provider_infeed(
     provider: Arc<dyn DatasetProvider>,
     split: &str,
     num_hosts: usize,
+    prefetch: usize,
     start_step: u64,
     seed: u64,
     resume: Option<&[PipelineState]>,
@@ -322,7 +323,7 @@ pub fn provider_infeed(
     Infeed::spawn_resumable(
         m,
         num_hosts,
-        4,
+        prefetch.max(1),
         move |host| {
             get_dataset(
                 provider.clone(),
@@ -354,11 +355,12 @@ pub fn cached_infeed(
     m: &ModelManifest,
     cache_dir: &Path,
     num_hosts: usize,
+    prefetch: usize,
     start_step: u64,
     resume: Option<&[PipelineState]>,
 ) -> anyhow::Result<Infeed> {
     let cached: Arc<dyn DatasetProvider> = Arc::new(CachedTask::open(cache_dir, None)?);
-    provider_infeed(m, cached, "train", num_hosts, start_step, 0, resume)
+    provider_infeed(m, cached, "train", num_hosts, prefetch, start_step, 0, resume)
 }
 
 /// Converted eval batches for `m` from any provider, through the same

@@ -1,0 +1,242 @@
+//! The explicit step schedule: one train step is a plan of `{Compute,
+//! Comm}` tasks over `k` gradient-accumulation microbatches, executed by a
+//! per-host [`StepRunner`] whose [`CommLane`] runs ring collectives off the
+//! host thread.
+//!
+//! ```text
+//! serial (overlap = false), k = 3 — every reduce is exposed:
+//!
+//!   host:  I0 C0 ····· I1 C1 ····· I2 C2 ····· F
+//!   lane:        R0          R1          R2
+//!                └─ host blocked ─┘ (wait immediately after dispatch)
+//!
+//! overlapped (overlap = true), k = 3 — reduce j rides under compute j+1:
+//!
+//!   host:  I0 C0 I1 C1 w0 I2 C2 w1 w2 F
+//!   lane:        R0───┘ R1────┘ R2─┘
+//! ```
+//!
+//! `I` = infeed, `C` = forward/backward, `R` = the microbatch's data-axis
+//! gradient reduce executing on the lane, `w` = the (short) join of an
+//! already-finished reduce, `F` = finalize (scalar sync, clip, optimizer).
+//!
+//! **Numerics contract.** Gradients are reduced *per microbatch* and
+//! accumulated strictly in microbatch order (`acc = ((r0 + r1) + r2)…`),
+//! whether or not overlap is enabled — the serial and overlapped plans
+//! reorder only wall-clock execution, never the f32 summation tree, so
+//! `overlap on/off` are bit-identical. On a 1-host data axis the reduce is
+//! the identity and the accumulation equals the monolithic left-fold over
+//! the same `k` batches (asserted by `microbatched_k_is_bit_identical_…`
+//! in `tests/integration_sharded.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::collectives::{CommLane, PendingCollective};
+
+/// Which engine executes a planned task: the host thread (`Compute`) or
+/// the host's dedicated communication lane (`Comm`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    Compute,
+    Comm,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Obtain microbatch `j`'s batch (pull + row broadcast).
+    Infeed,
+    /// Forward/backward of microbatch `j` (param gathers + HLO execution).
+    ForwardBackward,
+    /// Enqueue microbatch `j`'s data-axis gradient reduce on the comm lane.
+    DispatchGradReduce,
+    /// Join microbatch `j`'s gradient reduce and accumulate its result.
+    WaitGradReduce,
+    /// Step-final work: scalar all-reduce, clip norm, optimizer update.
+    Finalize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlannedTask {
+    pub lane: Lane,
+    pub kind: TaskKind,
+    pub microbatch: usize,
+}
+
+/// Build the task schedule of one train step. With `overlap`, the wait for
+/// microbatch `j`'s reduce is placed *after* microbatch `j+1`'s dispatch,
+/// so the ring runs under the next forward/backward; without it, each
+/// dispatch is joined immediately (same op sequence, fully exposed).
+pub fn plan_step(microbatches: usize, overlap: bool) -> Vec<PlannedTask> {
+    let k = microbatches.max(1);
+    let t = |lane, kind, j| PlannedTask { lane, kind, microbatch: j };
+    let mut plan = Vec::with_capacity(4 * k + 1);
+    for j in 0..k {
+        plan.push(t(Lane::Compute, TaskKind::Infeed, j));
+        plan.push(t(Lane::Compute, TaskKind::ForwardBackward, j));
+        plan.push(t(Lane::Comm, TaskKind::DispatchGradReduce, j));
+        if overlap {
+            if j > 0 {
+                plan.push(t(Lane::Comm, TaskKind::WaitGradReduce, j - 1));
+            }
+        } else {
+            plan.push(t(Lane::Comm, TaskKind::WaitGradReduce, j));
+        }
+    }
+    if overlap {
+        plan.push(t(Lane::Comm, TaskKind::WaitGradReduce, k - 1));
+    }
+    plan.push(t(Lane::Compute, TaskKind::Finalize, 0));
+    plan
+}
+
+/// Per-host executor of a step plan: owns the communication lane and the
+/// exposed-vs-overlapped accounting. Host-thread time blocked on a comm op
+/// lands in the shared data-axis collective phase (it *is* exposed comm
+/// time); lane execution the host did not block for accumulates into the
+/// trainer's `overlapped_comm_micros`.
+pub struct StepRunner<'a> {
+    lane: CommLane,
+    coll_data: &'a super::PhaseTimer,
+    overlapped: &'a AtomicU64,
+}
+
+impl<'a> StepRunner<'a> {
+    pub fn new(
+        lane: CommLane,
+        coll_data: &'a super::PhaseTimer,
+        overlapped: &'a AtomicU64,
+    ) -> StepRunner<'a> {
+        StepRunner { lane, coll_data, overlapped }
+    }
+
+    pub fn lane(&self) -> &CommLane {
+        &self.lane
+    }
+
+    /// Enqueue a comm op; returns immediately (the `DispatchGradReduce`
+    /// primitive).
+    pub fn dispatch<T: Send + 'static>(
+        &self,
+        label: &'static str,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> PendingCollective<T> {
+        self.lane.submit(label, f)
+    }
+
+    /// Join a dispatched op (the `WaitGradReduce` primitive): blocked time
+    /// is exposed comm, the rest of the op's lane time was overlapped.
+    pub fn settle<T>(&self, pending: PendingCollective<T>) -> T {
+        let (v, stats) = pending.wait_stats();
+        self.coll_data.add_micros(stats.blocked_micros);
+        self.overlapped.fetch_add(
+            stats.exec_micros.saturating_sub(stats.blocked_micros),
+            Ordering::Relaxed,
+        );
+        v
+    }
+
+    /// Run a comm op on the lane and wait for it — lane-routed so it keeps
+    /// FIFO order with in-flight dispatches on the same group (block
+    /// execution's data-axis shard gathers), fully exposed.
+    pub fn sync<T: Send + 'static>(
+        &self,
+        label: &'static str,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> T {
+        let (v, stats) = self.lane.run(label, f);
+        self.coll_data.add_micros(stats.blocked_micros);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pos(plan: &[PlannedTask], kind: TaskKind, j: usize) -> usize {
+        plan.iter()
+            .position(|t| t.kind == kind && t.microbatch == j)
+            .unwrap_or_else(|| panic!("plan misses {kind:?} for microbatch {j}"))
+    }
+
+    #[test]
+    fn plan_has_every_task_exactly_once_per_microbatch() {
+        for k in [1, 2, 4] {
+            for overlap in [false, true] {
+                let plan = plan_step(k, overlap);
+                assert_eq!(plan.len(), 4 * k + 1, "k={k} overlap={overlap}");
+                for j in 0..k {
+                    for kind in [
+                        TaskKind::Infeed,
+                        TaskKind::ForwardBackward,
+                        TaskKind::DispatchGradReduce,
+                        TaskKind::WaitGradReduce,
+                    ] {
+                        let n = plan
+                            .iter()
+                            .filter(|t| t.kind == kind && t.microbatch == j)
+                            .count();
+                        assert_eq!(n, 1, "k={k} overlap={overlap} {kind:?} mb={j}");
+                    }
+                }
+                assert_eq!(plan.last().unwrap().kind, TaskKind::Finalize);
+            }
+        }
+    }
+
+    #[test]
+    fn waits_follow_dispatches_and_accumulate_in_order() {
+        for k in [1, 2, 4] {
+            for overlap in [false, true] {
+                let plan = plan_step(k, overlap);
+                let mut last_wait = 0;
+                for j in 0..k {
+                    let d = pos(&plan, TaskKind::DispatchGradReduce, j);
+                    let w = pos(&plan, TaskKind::WaitGradReduce, j);
+                    assert!(w > d, "wait {j} must follow its dispatch");
+                    assert!(w >= last_wait, "waits must run in microbatch order");
+                    last_wait = w;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_places_wait_under_next_compute() {
+        let k = 4;
+        let plan = plan_step(k, true);
+        for j in 0..k - 1 {
+            let w = pos(&plan, TaskKind::WaitGradReduce, j);
+            let c_next = pos(&plan, TaskKind::ForwardBackward, j + 1);
+            let d_next = pos(&plan, TaskKind::DispatchGradReduce, j + 1);
+            assert!(
+                w > c_next && w > d_next,
+                "overlapped wait {j} must come after microbatch {}'s compute + dispatch",
+                j + 1
+            );
+        }
+        // serial: every wait precedes the next microbatch's compute
+        let serial = plan_step(k, false);
+        for j in 0..k - 1 {
+            let w = pos(&serial, TaskKind::WaitGradReduce, j);
+            let c_next = pos(&serial, TaskKind::ForwardBackward, j + 1);
+            assert!(w < c_next, "serial wait {j} must precede compute {}", j + 1);
+        }
+    }
+
+    #[test]
+    fn k1_overlap_plan_equals_serial_plan() {
+        assert_eq!(plan_step(1, true), plan_step(1, false));
+    }
+
+    #[test]
+    fn comm_tasks_are_marked_comm_lane() {
+        for t in plan_step(3, true) {
+            let expect = matches!(
+                t.kind,
+                TaskKind::DispatchGradReduce | TaskKind::WaitGradReduce
+            );
+            assert_eq!(t.lane == Lane::Comm, expect, "{t:?}");
+        }
+    }
+}

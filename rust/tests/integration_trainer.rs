@@ -86,6 +86,9 @@ fn figure1_full_stack_loss_decreases() {
         exec_mode: ExecMode::Gather,
         trace_out: None,
         profile_steps: None,
+        microbatches: 1,
+        overlap: false,
+        infeed_depth: 2,
     };
     let trainer = Trainer::new(&arts, &device, cfg).unwrap();
     let source = BatchSource::Infeed(build_infeed(&arts, &dir, 2, 0, None));
@@ -302,6 +305,9 @@ trainer.lr = 1e-3
             .get("trainer", "trace_out")
             .and_then(|v| v.as_str().map(std::path::PathBuf::from)),
         profile_steps: None,
+        microbatches: cfg.usize_or("trainer", "microbatches", 1),
+        overlap: cfg.bool_or("trainer", "overlap", false),
+        infeed_depth: cfg.usize_or("trainer", "infeed_depth", 2),
     };
     assert_eq!(tc.steps, 2);
     assert_eq!(tc.strategy, ParamStrategy::TwoD);

@@ -19,6 +19,20 @@ writes a compact ``BENCH_<pr>.json`` snapshot for the committed
   tok/s must hold the 1-replica line within ``--gateway-tolerance``.
   (One device thread serializes HLO executions, so the gate is
   "replicas are free", not "replicas are 2x".)
+* **PR 9** — overlapping communication with compute must not lose
+  throughput: for every ``train overlap (serial vs overlapped)`` row on
+  a data-parallel mesh (data degree >= 2), overlapped tok/s must hold
+  the serial line within ``--overlap-tolerance``.
+
+Beyond the single-run gates, the script cross-compares the *committed*
+``benchmarks/BENCH_<n>.json`` trajectory PR-over-PR: the headline
+*ratios* (block/gather, traced/untraced, gateway 2/1, overlap/serial)
+of each snapshot are compared against the previous snapshot that
+carries the same headline, and a drop beyond ``--history-tolerance``
+fails loud. Ratios — not absolute tok/s — are compared because
+absolute numbers move with the CI machine; missing snapshots and
+snapshots that predate a gate are tolerated (empty intersection is a
+skip, not a failure).
 
 The snapshot also distills the PR-7 observability rows: the per-phase
 step-time breakdown (``train phase breakdown (obs)``) and the serve
@@ -27,15 +41,18 @@ latency percentiles (``serve latency (obs)``).
 Usage (CI smoke job):
 
     python tools/bench_gate.py --input rust/bench_results.jsonl \
-        --output benchmarks/BENCH_8.json [--tolerance 0.10] \
-        [--trace-tolerance 0.10] [--gateway-tolerance 0.10]
+        --output benchmarks/BENCH_9.json [--tolerance 0.10] \
+        [--trace-tolerance 0.10] [--gateway-tolerance 0.10] \
+        [--overlap-tolerance 0.10] [--history-tolerance 0.25]
 
 Exit status is non-zero if a gate fails or if the input contains no pair
 to compare (so a silently-skipped comparison cannot read as a pass).
 """
 
 import argparse
+import glob
 import json
+import os
 import re
 import sys
 
@@ -53,6 +70,12 @@ TRAIN_GROUP = "train step (E16)"
 PHASE_GROUP = "train phase breakdown (obs)"
 SERVE_GROUP = "serve latency (obs)"
 GATEWAY_GROUP = "serve gateway (poisson)"
+OVERLAP_GROUP = "train overlap (serial vs overlapped)"
+# "t5-nano-dec mesh=2x1 mb=4" — see the §Overlap block in bench_train_step.rs
+OVERLAP_NAME = re.compile(
+    r"^(?P<model>\S+) mesh=(?P<data>\d+)x(?P<mdeg>\d+) mb=(?P<mb>\d+)$"
+)
+BENCH_SNAPSHOT = re.compile(r"^BENCH_(?P<pr>\d+)\.json$")
 
 
 def load_rows(path):
@@ -164,6 +187,129 @@ def gate_gateway(rows, tolerance):
     return gateway_rows, ratio, failures
 
 
+def gate_overlap(rows, tolerance):
+    """Return (pairs, failures) for the overlap-vs-serial comparison.
+
+    Each ``train overlap (serial vs overlapped)`` row already carries both
+    sides of the pair (bench_train_step.rs measures serial and overlapped
+    back-to-back); the gate only applies where the data axis actually has
+    peers to overlap against (data degree >= 2).
+    """
+    pairs, failures = [], []
+    for r in rows:
+        if r.get("group") != OVERLAP_GROUP:
+            continue
+        name = r.get("name", "")
+        m = OVERLAP_NAME.match(name)
+        s, o = r.get("serial_tok_s"), r.get("overlap_tok_s")
+        pair = {
+            "name": name,
+            "microbatches": r.get("microbatches"),
+            "serial_tok_s": s,
+            "overlap_tok_s": o,
+            "overlap_over_serial": (o / s) if s and o is not None else None,
+            "serial_step_ms": r.get("serial_step_ms"),
+            "overlap_step_ms": r.get("overlap_step_ms"),
+            "serial_exposed_comm_ms": r.get("serial_exposed_comm_ms"),
+            "overlap_exposed_comm_ms": r.get("overlap_exposed_comm_ms"),
+            "overlapped_comm_ms": r.get("overlapped_comm_ms"),
+        }
+        pairs.append(pair)
+        if m and int(m.group("data")) < 2:
+            continue  # no data-axis peers: nothing to overlap, don't gate
+        if s and o is not None and o < s * (1.0 - tolerance):
+            failures.append(
+                f"{name}: overlapped {o:.1f} tok/s < serial {s:.1f} tok/s "
+                f"(ratio {o / s:.3f}, tolerance {tolerance:.2f})"
+            )
+    return pairs, failures
+
+
+def headline_ratios(snapshot):
+    """Distil one snapshot dict into its {label: ratio} headline map.
+
+    Labels are stable across PRs so adjacent snapshots can be joined on
+    them; snapshots that predate a gate simply contribute fewer keys.
+    """
+    out = {}
+    for p in (snapshot.get("gate") or {}).get("pairs") or []:
+        r = p.get("block_over_gather")
+        if r is not None:
+            out[f"block/gather {p.get('model')} mesh={p.get('mesh')} "
+                f"{p.get('strategy')}"] = r
+    for p in (snapshot.get("trace_gate") or {}).get("pairs") or []:
+        r = p.get("traced_over_untraced")
+        if r is not None:
+            out[f"traced/untraced {p.get('model')} mesh={p.get('mesh')} "
+                f"{p.get('strategy')} {p.get('exec')}"] = r
+    r = (snapshot.get("gateway") or {}).get("two_over_one")
+    if r is not None:
+        out["gateway 2-replica/1-replica"] = r
+    for p in (snapshot.get("overlap_gate") or {}).get("pairs") or []:
+        r = p.get("overlap_over_serial")
+        if r is not None:
+            out[f"overlap/serial {p.get('name')}"] = r
+    return out
+
+
+def cross_compare(bench_dir, current_name, current_snapshot, tolerance):
+    """PR-over-PR compare of the committed BENCH_<n>.json trajectory.
+
+    Returns (comparisons, failures). Every adjacent pair in PR order is
+    joined on shared headline labels; a ratio drop beyond ``tolerance``
+    is a failure. Gaps in PR numbers and headlines absent from older
+    snapshots are tolerated — an empty join is recorded as a skip.
+    """
+    trajectory = []
+    for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        base = os.path.basename(path)
+        m = BENCH_SNAPSHOT.match(base)
+        if not m or base == current_name:
+            continue
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                snap = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"history: skipping unreadable {base}: {e}",
+                  file=sys.stderr)
+            continue
+        trajectory.append((int(m.group("pr")), base, headline_ratios(snap)))
+    m = BENCH_SNAPSHOT.match(current_name)
+    cur_pr = int(m.group("pr")) if m else None
+    trajectory.append(
+        (cur_pr if cur_pr is not None else 1 << 30, current_name,
+         headline_ratios(current_snapshot)))
+    trajectory.sort(key=lambda t: t[0])
+
+    comparisons, failures = [], []
+    for (_, prev_name, prev), (_, cur_name, cur) in zip(
+            trajectory, trajectory[1:]):
+        shared = sorted(set(prev) & set(cur))
+        deltas = []
+        for label in shared:
+            before, after = prev[label], cur[label]
+            regressed = bool(before) and after < before * (1.0 - tolerance)
+            deltas.append({
+                "headline": label,
+                "before": before,
+                "after": after,
+                "regressed": regressed,
+            })
+            if regressed:
+                failures.append(
+                    f"{prev_name} -> {cur_name}: {label} fell "
+                    f"{before:.3f} -> {after:.3f} "
+                    f"(tolerance {tolerance:.2f})"
+                )
+        comparisons.append({
+            "from": prev_name,
+            "to": cur_name,
+            "shared_headlines": len(shared),
+            "deltas": deltas,
+        })
+    return comparisons, failures
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--input", required=True, help="bench_results.jsonl path")
@@ -176,6 +322,16 @@ def main():
     ap.add_argument("--gateway-tolerance", type=float, default=0.10,
                     help="allowed fractional 2-replica-vs-1-replica "
                          "gateway throughput shortfall")
+    ap.add_argument("--overlap-tolerance", type=float, default=0.05,
+                    help="allowed fractional overlapped-vs-serial train "
+                         "throughput shortfall on data-parallel meshes")
+    ap.add_argument("--history-tolerance", type=float, default=0.25,
+                    help="allowed PR-over-PR drop in committed headline "
+                         "ratios (block/gather, traced/untraced, "
+                         "gateway, overlap/serial)")
+    ap.add_argument("--history-dir", default=None,
+                    help="directory of committed BENCH_<n>.json snapshots "
+                         "(default: the --output directory)")
     args = ap.parse_args()
 
     rows = load_rows(args.input)
@@ -183,6 +339,8 @@ def main():
     trace_pairs, trace_failures = gate_tracing(rows, args.trace_tolerance)
     gateway_rows, gateway_ratio, gateway_failures = gate_gateway(
         rows, args.gateway_tolerance)
+    overlap_pairs, overlap_failures = gate_overlap(
+        rows, args.overlap_tolerance)
 
     snapshot = {
         "schema": "t5x-bench-trajectory-v1",
@@ -206,6 +364,12 @@ def main():
             "rows": gateway_rows,
             "failures": gateway_failures,
         },
+        "overlap_gate": {
+            "rule": "overlapped tok/s >= serial tok/s at data degree >= 2",
+            "tolerance": args.overlap_tolerance,
+            "pairs": overlap_pairs,
+            "failures": overlap_failures,
+        },
         "phase_breakdown": [
             {k: v for k, v in r.items() if k != "group"}
             for r in rows if r.get("group") == PHASE_GROUP
@@ -225,13 +389,26 @@ def main():
             for r in rows if "median_s" in r
         ],
     }
+    history_dir = args.history_dir or os.path.dirname(args.output) or "."
+    comparisons, history_failures = cross_compare(
+        history_dir, os.path.basename(args.output), snapshot,
+        args.history_tolerance)
+    snapshot["history"] = {
+        "rule": "committed headline ratios must not regress PR-over-PR",
+        "tolerance": args.history_tolerance,
+        "comparisons": comparisons,
+        "failures": history_failures,
+    }
+
     with open(args.output, "w", encoding="utf-8") as f:
         json.dump(snapshot, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"wrote {args.output}: {len(rows)} rows, "
           f"{len(block_pairs)} gather-vs-block pair(s), "
           f"{len(trace_pairs)} traced-vs-untraced pair(s), "
-          f"{len(gateway_rows)} gateway row(s)")
+          f"{len(gateway_rows)} gateway row(s), "
+          f"{len(overlap_pairs)} overlap pair(s), "
+          f"{len(comparisons)} history comparison(s)")
 
     status = 0
     if not block_pairs:
@@ -258,6 +435,17 @@ def main():
     for f_ in gateway_failures:
         print(f"gateway gate: FAIL — {f_}", file=sys.stderr)
         status = 1
+    if not overlap_pairs:
+        print("overlap gate: FAIL — no serial-vs-overlapped row found in "
+              f"group '{OVERLAP_GROUP}' (bench_train_step did not run?)",
+              file=sys.stderr)
+        status = 1
+    for f_ in overlap_failures:
+        print(f"overlap gate: FAIL — {f_}", file=sys.stderr)
+        status = 1
+    for f_ in history_failures:
+        print(f"history gate: FAIL — {f_}", file=sys.stderr)
+        status = 1
     if status:
         return status
     for p in block_pairs:
@@ -269,6 +457,13 @@ def main():
               f"{p['traced_over_untraced']:.3f}")
     print(f"gateway gate: ok — 2-replica/1-replica tok/s = "
           f"{gateway_ratio:.3f}")
+    for p in overlap_pairs:
+        ratio = p["overlap_over_serial"]
+        print(f"overlap gate: ok — {p['name']} overlap/serial = "
+              + (f"{ratio:.3f}" if ratio is not None else "n/a"))
+    for c in comparisons:
+        print(f"history gate: ok — {c['from']} -> {c['to']}: "
+              f"{c['shared_headlines']} shared headline(s), no regression")
     return 0
 
 
