@@ -228,6 +228,93 @@ fn main() {
         }
     }
 
+    // §Supervisor: plain vs fault-free supervised run (ISSUE 10). A
+    // supervised run carries the restart loop, the recovery counters,
+    // the disarmed fault hooks on every step, and an armed 60 s ring
+    // deadline — all of which must be free when nothing fails. The CI
+    // gate holds supervised tok/s on the plain trainer's line.
+    {
+        use t5x::trainer::supervisor::{Supervisor, SupervisorConfig};
+        for model in models {
+            let m = arts.model(model).unwrap();
+            for (mesh, strategy) in [
+                (Mesh::new(1, 1), ParamStrategy::OneD),
+                (Mesh::new(2, 1), ParamStrategy::OneD),
+            ] {
+                let cfg = TrainerConfig {
+                    model: model.to_string(),
+                    mesh,
+                    strategy,
+                    optimizer: OptimizerKind::adam(),
+                    schedule: Schedule::Constant(1e-4),
+                    steps,
+                    seed: 0,
+                    log_every: 1000,
+                    checkpoint_every: None,
+                    checkpoint_dir: None,
+                    grad_clip_norm: None,
+                    weight_decay: None,
+                    exec_mode: ExecMode::Gather,
+                    trace_out: None,
+                    profile_steps: None,
+                    microbatches: 1,
+                    overlap: false,
+                    infeed_depth: 2,
+                };
+                let tokens = (m.tokens_per_step() * mesh.data * steps as usize) as f64;
+                let plain = Trainer::new(&arts, &device, cfg.clone()).unwrap();
+                let plain_meas = bench.measure_with_throughput(
+                    &format!("{model} mesh={mesh} {strategy:?} plain ({steps} steps)"),
+                    Some((tokens, "tok")),
+                    || {
+                        let s = plain.train(&BatchSource::Synthetic { seed: 1 }).unwrap();
+                        assert!(s.final_loss().is_finite());
+                    },
+                );
+                let sup = Supervisor::new(
+                    &arts,
+                    &device,
+                    cfg,
+                    SupervisorConfig {
+                        max_restarts: 3,
+                        backoff_ms: 1,
+                        comm_deadline_ms: Some(60_000),
+                        resume: false,
+                    },
+                );
+                let sup_meas = bench.measure_with_throughput(
+                    &format!("{model} mesh={mesh} {strategy:?} supervised ({steps} steps)"),
+                    Some((tokens, "tok")),
+                    || {
+                        let run = sup
+                            .run(
+                                |_trainer| Ok(BatchSource::Synthetic { seed: 1 }),
+                                |t, _attempt| t,
+                            )
+                            .unwrap();
+                        assert_eq!(run.restarts, 0);
+                        assert!(run.summary.final_loss().is_finite());
+                    },
+                );
+                append_row(
+                    "bench_results.jsonl",
+                    &Json::obj(vec![
+                        ("group", Json::str("train supervisor (fault-free)")),
+                        ("name", Json::str(format!("{model} mesh={mesh} {strategy:?}"))),
+                        (
+                            "plain_tok_s",
+                            Json::num(plain_meas.throughput_per_sec().unwrap_or(0.0)),
+                        ),
+                        (
+                            "supervised_tok_s",
+                            Json::num(sup_meas.throughput_per_sec().unwrap_or(0.0)),
+                        ),
+                    ]),
+                );
+            }
+        }
+    }
+
     // the 100M config: a few steps to prove the path + measure step time
     if !bench.is_quick() {
         let model = "t5-100m-dec";

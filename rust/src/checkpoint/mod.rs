@@ -85,6 +85,48 @@ impl CheckpointManager {
         self.steps().last().copied()
     }
 
+    /// Quarantine a damaged checkpoint: rename `ckpt-<n>` to
+    /// `ckpt-<n>.corrupt`, which [`Self::steps`] no longer parses — so
+    /// [`Self::latest`] falls back to the previous retained step while the
+    /// bad bytes stay on disk for a post-mortem. Returns the new path.
+    pub fn quarantine(&self, step: u64) -> std::io::Result<PathBuf> {
+        let dir = self.step_dir(step);
+        let dst = dir.with_extension("corrupt");
+        if dst.exists() {
+            std::fs::remove_dir_all(&dst)?;
+        }
+        std::fs::rename(&dir, &dst)?;
+        Ok(dst)
+    }
+
+    /// Sweep stale `ckpt-*.tmp` leftovers (a save that died between
+    /// `begin_sharded` and the atomic rename). Returns how many were
+    /// removed. Deliberately NOT called from the constructor: every rank
+    /// builds a manager at the top of the checkpoint barrier while the
+    /// coordinator's *live* tmp dir may already exist, so sweeping only
+    /// happens at explicit recovery points (`Trainer::restore_latest`,
+    /// the supervisor) where no save can be in flight.
+    pub fn sweep_tmp(&self) -> usize {
+        let mut removed = 0;
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.flatten() {
+                let name = e.file_name();
+                let Some(name) = name.to_str() else { continue };
+                if name.starts_with("ckpt-")
+                    && name.ends_with(".tmp")
+                    && std::fs::remove_dir_all(e.path()).is_ok()
+                {
+                    eprintln!(
+                        "warning: swept partial checkpoint {} (interrupted save)",
+                        e.path().display()
+                    );
+                    removed += 1;
+                }
+            }
+        }
+        removed
+    }
+
     /// Save synchronously: params + extra state + metadata, atomic rename.
     pub fn save(&self, step: u64, params: &Params, extra: &ExtraState) -> anyhow::Result<()> {
         self.save_with_pipeline(step, params, extra, None)

@@ -54,6 +54,24 @@ use std::time::{Duration, Instant};
 use crate::partitioning::{Mesh, MeshAxis};
 use crate::runtime::HostTensor;
 
+/// Overall deadline, in ms, for any single ring receive (S10). `0`
+/// disables it — the default, so unit tests and ad-hoc runs never race a
+/// timer. The training supervisor arms it (`--comm-deadline-ms`, gin
+/// `supervisor.comm_deadline_ms`) so a wedged peer becomes a *recoverable
+/// failed step*: the stalled receive trips the group's shared abort flag
+/// (unsticking every other blocked rank) and panics with the stalled
+/// point / axis / rank, which `Trainer::train` surfaces as an `Err`.
+static COMM_DEADLINE_MS: AtomicU64 = AtomicU64::new(0);
+
+/// Arm (ms > 0) or disarm (0) the process-wide ring-receive deadline.
+pub fn set_comm_deadline_ms(ms: u64) {
+    COMM_DEADLINE_MS.store(ms, Ordering::SeqCst);
+}
+
+pub fn comm_deadline_ms() -> u64 {
+    COMM_DEADLINE_MS.load(Ordering::Relaxed)
+}
+
 /// Reduction operator for [`CollectiveGroup::all_reduce_op`]. The block
 /// execution schedule (§2.2) needs `Max` (global logit max) and `Min`
 /// (argmax claim) besides `Sum`; both are order-independent, so they are
@@ -89,6 +107,9 @@ pub struct CollectiveGroup {
     /// Shared abort flag (see [`CommLane`]): set when any participant's
     /// comm-lane op panics, checked by every blocked ring `recv`.
     abort: Arc<AtomicBool>,
+    /// Axis label for deadline diagnostics ("data"/"model"/"global",
+    /// set by [`MeshCollectives::new`]; standalone groups report "ring").
+    label: std::sync::OnceLock<&'static str>,
     /// Optional span tracer; when attached (and enabled), every multi-rank
     /// ring op records a `coll/*` span with elems/bytes attributes.
     tracer: std::sync::OnceLock<Arc<crate::obs::Tracer>>,
@@ -124,8 +145,19 @@ impl CollectiveGroup {
             bytes_sent: AtomicU64::new(0),
             ops: AtomicU64::new(0),
             abort,
+            label: std::sync::OnceLock::new(),
             tracer: std::sync::OnceLock::new(),
         })
+    }
+
+    /// Name the group's mesh axis for deadline diagnostics (first writer
+    /// wins).
+    pub fn set_label(&self, label: &'static str) {
+        let _ = self.label.set(label);
+    }
+
+    fn label(&self) -> &'static str {
+        self.label.get().copied().unwrap_or("ring")
     }
 
     /// The group's shared abort flag — hand this to the [`CommLane`]s of
@@ -177,11 +209,23 @@ impl CollectiveGroup {
         self.senders[rank].send(data).expect("ring send");
     }
 
-    fn recv_prev(&self, rank: usize) -> Vec<f32> {
+    fn recv_prev(&self, rank: usize, point: &'static str) -> Vec<f32> {
         let rx = self.receivers[rank].lock().unwrap();
+        let deadline_ms = comm_deadline_ms();
+        let t0 = Instant::now();
         loop {
             if self.abort.load(Ordering::SeqCst) {
                 panic!("collective aborted: a peer's comm op failed");
+            }
+            if deadline_ms > 0 && t0.elapsed().as_millis() as u64 >= deadline_ms {
+                // A wedged peer: poison the mesh (unsticking every other
+                // blocked rank) and report exactly where the ring stalled.
+                self.abort.store(true, Ordering::SeqCst);
+                panic!(
+                    "collective deadline: {point} on {} axis rank {rank} \
+                     stalled > {deadline_ms} ms",
+                    self.label()
+                );
             }
             match rx.recv_timeout(Duration::from_millis(20)) {
                 Ok(v) => return v,
@@ -214,7 +258,7 @@ impl CollectiveGroup {
             let (lo, hi) = bounds[send_c];
             self.send_next(rank, data[lo..hi].to_vec());
             let recv_c = (rank + n - s - 1) % n;
-            let incoming = self.recv_prev(rank);
+            let incoming = self.recv_prev(rank, "coll/all_reduce");
             let (lo, hi) = bounds[recv_c];
             for (d, x) in data[lo..hi].iter_mut().zip(incoming) {
                 op.apply(d, x);
@@ -226,7 +270,7 @@ impl CollectiveGroup {
             let (lo, hi) = bounds[send_c];
             self.send_next(rank, data[lo..hi].to_vec());
             let recv_c = (rank + n - s) % n;
-            let incoming = self.recv_prev(rank);
+            let incoming = self.recv_prev(rank, "coll/all_reduce");
             let (lo, hi) = bounds[recv_c];
             data[lo..hi].copy_from_slice(&incoming);
         }
@@ -250,7 +294,7 @@ impl CollectiveGroup {
             let (lo, hi) = bounds[send_c];
             self.send_next(rank, data[lo..hi].to_vec());
             let recv_c = (rank + 2 * n - 2 - s) % n;
-            let incoming = self.recv_prev(rank);
+            let incoming = self.recv_prev(rank, "coll/reduce_scatter");
             let (lo, hi) = bounds[recv_c];
             for (d, x) in data[lo..hi].iter_mut().zip(incoming) {
                 *d += x;
@@ -279,7 +323,7 @@ impl CollectiveGroup {
             let (lo, hi) = bounds[send_c];
             self.send_next(rank, full[lo..hi].to_vec());
             let recv_c = (rank + n - 1 - s) % n;
-            let incoming = self.recv_prev(rank);
+            let incoming = self.recv_prev(rank, "coll/all_gather");
             let (lo, hi) = bounds[recv_c];
             full[lo..hi].copy_from_slice(&incoming);
         }
@@ -299,7 +343,7 @@ impl CollectiveGroup {
             self.send_next(rank, d.clone());
             d
         } else {
-            let d = self.recv_prev(rank);
+            let d = self.recv_prev(rank, "coll/broadcast");
             if rank != self.n - 1 {
                 self.send_next(rank, d.clone());
             }
@@ -716,13 +760,15 @@ impl MeshCollectives {
                 .map(|_| CollectiveGroup::new_with_abort(mesh.model, abort.clone()))
                 .collect()
         };
-        Arc::new(MeshCollectives {
-            mesh,
-            global: CollectiveGroup::new_with_abort(mesh.num_hosts(), abort.clone()),
-            data_groups,
-            model_groups,
-            abort,
-        })
+        for g in &data_groups {
+            g.set_label("data");
+        }
+        for g in &model_groups {
+            g.set_label("model");
+        }
+        let global = CollectiveGroup::new_with_abort(mesh.num_hosts(), abort.clone());
+        global.set_label("global");
+        Arc::new(MeshCollectives { mesh, global, data_groups, model_groups, abort })
     }
 
     /// The mesh-wide abort flag — seed for each host's [`CommLane`].

@@ -1,0 +1,501 @@
+//! Deterministic fault injection (S10).
+//!
+//! Large runs die in boring, reproducible ways: a host preempted
+//! mid-step, a checkpoint shard flipped on disk, a data source that
+//! hiccups once, a collective peer that wedges, a serving replica that
+//! panics. The recovery machinery in [`crate::trainer::supervisor`] and
+//! [`crate::serve::router`] is only trustworthy if those failures can be
+//! *reproduced on demand* — so this module injects them deterministically,
+//! keyed by the same coordinates that make the rest of the system
+//! deterministic (host rank, step number, batch index, request id).
+//!
+//! ## Plan format
+//!
+//! A [`FaultPlan`] is a JSON document (CLI `--fault-plan plan.json`, gin
+//! `faults.plan = 'plan.json'`):
+//!
+//! ```json
+//! {"faults": [
+//!   {"kind": "host_panic",          "host": 0, "step": 3},
+//!   {"kind": "slow_host",           "host": 1, "step": 2, "ms": 50},
+//!   {"kind": "corrupt_checkpoint",  "step": 4, "array": "wte"},
+//!   {"kind": "infeed_source_error", "host": 0, "batch": 2},
+//!   {"kind": "comm_stall",          "host": 1, "step": 3, "ms": 200},
+//!   {"kind": "replica_panic",       "replica": 1, "request": 2}
+//! ]}
+//! ```
+//!
+//! Every fault fires **exactly once**: after the supervisor restarts a
+//! run and re-reaches step `N`, a `host_panic{step: N}` does not fire
+//! again — that is what makes "inject a panic, prove bit-identical
+//! recovery" a terminating test rather than a crash loop.
+//!
+//! ## Hook points
+//!
+//! Injection sites are named like trace spans and consulted explicitly:
+//!
+//! | point               | faults consulted                    |
+//! |---------------------|-------------------------------------|
+//! | `trainer/step`      | `host_panic`, `slow_host`           |
+//! | `trainer/grad_sync` | `comm_stall` (host sleeps *before*  |
+//! |                     | entering the collective, so peers'  |
+//! |                     | recv deadline is what trips)        |
+//! | infeed producer     | `infeed_source_error` (keyed by the |
+//! |                     | per-host batch index)               |
+//! | checkpoint commit   | `corrupt_checkpoint` (flips a byte  |
+//! |                     | in a committed tstore chunk)        |
+//! | gateway replica     | `replica_panic` (keyed by client id)|
+//!
+//! ## Overhead contract
+//!
+//! Same deal as the [`crate::obs`] tracer: with no plan armed, every
+//! hook is a single relaxed atomic load and an immediate return — the
+//! slow path (plan lookup under a mutex) is only ever reached while a
+//! plan is armed, i.e. in chaos tests and chaos CI, never in production
+//! training or serving. `tests/integration_faults.rs` pins this with a
+//! timing test.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// One deterministic injection point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic host `host`'s train loop when it reaches `step`.
+    HostPanic { host: usize, step: u64 },
+    /// Delay host `host` by `ms` at the top of `step` (straggler).
+    SlowHost { host: usize, step: u64, ms: u64 },
+    /// After the checkpoint for `step` commits, flip a byte in one of its
+    /// tstore chunks (under `array`'s subtree; any array when empty).
+    CorruptCheckpoint { step: u64, array: String },
+    /// Panic host `host`'s infeed producer while pulling `batch`.
+    InfeedSourceError { host: usize, batch: u64 },
+    /// Stall host `host` for `ms` before it enters the step's gradient
+    /// sync, so its ring peers hit the collective deadline.
+    CommStall { host: usize, step: u64, ms: u64 },
+    /// Panic serving replica `replica` when it dispatches the request
+    /// whose client id is `request`.
+    ReplicaPanic { replica: usize, request: u64 },
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Fault::HostPanic { host, step } => {
+                write!(f, "host_panic(host={host}, step={step})")
+            }
+            Fault::SlowHost { host, step, ms } => {
+                write!(f, "slow_host(host={host}, step={step}, ms={ms})")
+            }
+            Fault::CorruptCheckpoint { step, array } => {
+                write!(f, "corrupt_checkpoint(step={step}, array={array:?})")
+            }
+            Fault::InfeedSourceError { host, batch } => {
+                write!(f, "infeed_source_error(host={host}, batch={batch})")
+            }
+            Fault::CommStall { host, step, ms } => {
+                write!(f, "comm_stall(host={host}, step={step}, ms={ms})")
+            }
+            Fault::ReplicaPanic { replica, request } => {
+                write!(f, "replica_panic(replica={replica}, request={request})")
+            }
+        }
+    }
+}
+
+struct ArmedFault {
+    fault: Fault,
+    fired: AtomicBool,
+}
+
+/// A parsed set of one-shot faults. Arm it globally with [`arm`].
+pub struct FaultPlan {
+    faults: Vec<ArmedFault>,
+}
+
+impl FaultPlan {
+    pub fn new(faults: Vec<Fault>) -> FaultPlan {
+        FaultPlan {
+            faults: faults
+                .into_iter()
+                .map(|fault| ArmedFault { fault, fired: AtomicBool::new(false) })
+                .collect(),
+        }
+    }
+
+    /// Parse the `{"faults": [...]}` document.
+    pub fn parse(text: &str) -> anyhow::Result<FaultPlan> {
+        let json = Json::parse(text).map_err(|e| anyhow::anyhow!("fault plan: {e:?}"))?;
+        Self::from_json(&json)
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> anyhow::Result<FaultPlan> {
+        let json = Json::parse_file(&path)?;
+        Self::from_json(&json)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))
+    }
+
+    pub fn from_json(json: &Json) -> anyhow::Result<FaultPlan> {
+        let arr = json
+            .get("faults")
+            .and_then(|f| f.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("fault plan: missing \"faults\" array"))?;
+        let mut faults = Vec::with_capacity(arr.len());
+        for (i, entry) in arr.iter().enumerate() {
+            faults.push(parse_fault(entry).map_err(|e| anyhow::anyhow!("fault #{i}: {e}"))?);
+        }
+        Ok(FaultPlan::new(faults))
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// How many faults have fired so far.
+    pub fn fired(&self) -> usize {
+        self.faults.iter().filter(|f| f.fired.load(Ordering::Relaxed)).count()
+    }
+
+    pub fn faults(&self) -> Vec<Fault> {
+        self.faults.iter().map(|f| f.fault.clone()).collect()
+    }
+
+    /// Claim the first unfired fault matching `pred` (one-shot).
+    fn claim(&self, pred: impl Fn(&Fault) -> bool) -> Option<Fault> {
+        for f in &self.faults {
+            if pred(&f.fault)
+                && f.fired
+                    .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                return Some(f.fault.clone());
+            }
+        }
+        None
+    }
+}
+
+fn field_u64(entry: &Json, key: &str) -> anyhow::Result<u64> {
+    entry
+        .get(key)
+        .and_then(|v| v.as_i64())
+        .filter(|&v| v >= 0)
+        .map(|v| v as u64)
+        .ok_or_else(|| anyhow::anyhow!("missing or invalid \"{key}\""))
+}
+
+fn field_usize(entry: &Json, key: &str) -> anyhow::Result<usize> {
+    entry
+        .get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow::anyhow!("missing or invalid \"{key}\""))
+}
+
+fn parse_fault(entry: &Json) -> anyhow::Result<ArmedFault> {
+    let kind = entry
+        .get("kind")
+        .and_then(|k| k.as_str())
+        .ok_or_else(|| anyhow::anyhow!("missing \"kind\""))?;
+    let fault = match kind {
+        "host_panic" => Fault::HostPanic {
+            host: field_usize(entry, "host")?,
+            step: field_u64(entry, "step")?,
+        },
+        "slow_host" => Fault::SlowHost {
+            host: field_usize(entry, "host")?,
+            step: field_u64(entry, "step")?,
+            ms: field_u64(entry, "ms")?,
+        },
+        "corrupt_checkpoint" => Fault::CorruptCheckpoint {
+            step: field_u64(entry, "step")?,
+            array: entry
+                .get("array")
+                .and_then(|a| a.as_str())
+                .unwrap_or("")
+                .to_string(),
+        },
+        "infeed_source_error" => Fault::InfeedSourceError {
+            host: field_usize(entry, "host")?,
+            batch: field_u64(entry, "batch")?,
+        },
+        "comm_stall" => Fault::CommStall {
+            host: field_usize(entry, "host")?,
+            step: field_u64(entry, "step")?,
+            ms: field_u64(entry, "ms")?,
+        },
+        "replica_panic" => Fault::ReplicaPanic {
+            replica: field_usize(entry, "replica")?,
+            request: field_u64(entry, "request")?,
+        },
+        other => anyhow::bail!("unknown fault kind {other:?}"),
+    };
+    Ok(ArmedFault { fault, fired: AtomicBool::new(false) })
+}
+
+// ---------------------------------------------------------------------------
+// Global arming. ARMED is the only thing the hot path ever touches.
+// ---------------------------------------------------------------------------
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+
+/// Arm a plan process-wide. Returns a handle so callers (tests, the CLI
+/// summary line) can inspect fire counts after the run.
+pub fn arm(plan: FaultPlan) -> Arc<FaultPlan> {
+    let plan = Arc::new(plan);
+    *PLAN.lock().unwrap() = Some(plan.clone());
+    ARMED.store(true, Ordering::SeqCst);
+    plan
+}
+
+/// Disarm: hooks return to the single-relaxed-load fast path.
+pub fn disarm() {
+    ARMED.store(false, Ordering::SeqCst);
+    *PLAN.lock().unwrap() = None;
+}
+
+#[inline]
+pub fn is_armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+fn plan() -> Option<Arc<FaultPlan>> {
+    PLAN.lock().unwrap().clone()
+}
+
+// ---------------------------------------------------------------------------
+// Hook points.
+// ---------------------------------------------------------------------------
+
+/// Trainer hook: consulted at named points in the host loop. With no plan
+/// armed this is one relaxed load. Panics (on purpose) for `host_panic`;
+/// sleeps for `slow_host` / `comm_stall`.
+#[inline]
+pub fn maybe_inject(point: &'static str, host: usize, step: u64) {
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    inject_slow(point, host, step);
+}
+
+#[cold]
+fn inject_slow(point: &'static str, host: usize, step: u64) {
+    let Some(plan) = plan() else { return };
+    match point {
+        "trainer/step" => {
+            if let Some(f) = plan.claim(|f| {
+                matches!(f, Fault::SlowHost { host: h, step: s, .. } if *h == host && *s == step)
+            }) {
+                if let Fault::SlowHost { ms, .. } = f {
+                    eprintln!("[faults] injecting {f} at {point}");
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
+            }
+            if let Some(f) = plan.claim(|f| {
+                matches!(f, Fault::HostPanic { host: h, step: s } if *h == host && *s == step)
+            }) {
+                eprintln!("[faults] injecting {f} at {point}");
+                panic!("fault injected: {f} at {point}");
+            }
+        }
+        "trainer/grad_sync" => {
+            if let Some(f) = plan.claim(|f| {
+                matches!(f, Fault::CommStall { host: h, step: s, .. } if *h == host && *s == step)
+            }) {
+                if let Fault::CommStall { ms, .. } = f {
+                    eprintln!("[faults] injecting {f} at {point}");
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Infeed hook: `true` means the producer should fail this pull (the
+/// caller panics so the retry/`Infeed::failed` path is exercised).
+#[inline]
+pub fn infeed_error(host: usize, batch: u64) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    let Some(plan) = plan() else { return false };
+    plan.claim(|f| {
+        matches!(f, Fault::InfeedSourceError { host: h, batch: b } if *h == host && *b == batch)
+    })
+    .inspect(|f| eprintln!("[faults] injecting {f}"))
+    .is_some()
+}
+
+/// Checkpoint hook: when a `corrupt_checkpoint` fault targets `step`,
+/// returns the array prefix to corrupt (empty = any array).
+#[inline]
+pub fn checkpoint_corrupt_target(step: u64) -> Option<String> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let plan = plan()?;
+    let f = plan
+        .claim(|f| matches!(f, Fault::CorruptCheckpoint { step: s, .. } if *s == step))?;
+    eprintln!("[faults] injecting {f}");
+    match f {
+        Fault::CorruptCheckpoint { array, .. } => Some(array),
+        _ => None,
+    }
+}
+
+/// Serving hook: `true` means replica `replica` should panic while
+/// dispatching the request with client id `request`.
+#[inline]
+pub fn replica_panic(replica: usize, request: u64) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    let Some(plan) = plan() else { return false };
+    plan.claim(|f| {
+        matches!(f, Fault::ReplicaPanic { replica: r, request: q } if *r == replica && *q == request)
+    })
+    .inspect(|f| eprintln!("[faults] injecting {f}"))
+    .is_some()
+}
+
+/// Flip the last byte of one CRC-protected tstore chunk under
+/// `ckpt_dir` (restricted to `array`'s subtree when non-empty). Used by
+/// the `corrupt_checkpoint` injection and directly by tests; returns the
+/// corrupted file.
+pub fn corrupt_checkpoint_chunk(ckpt_dir: &Path, array: &str) -> anyhow::Result<PathBuf> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            for e in rd.flatten() {
+                let p = e.path();
+                if p.is_dir() {
+                    walk(&p, out);
+                } else {
+                    out.push(p);
+                }
+            }
+        }
+    }
+    let root = if array.is_empty() {
+        ckpt_dir.join("params")
+    } else {
+        ckpt_dir.join("params").join(array)
+    };
+    let search = if root.exists() { root } else { ckpt_dir.to_path_buf() };
+    let mut files = Vec::new();
+    walk(&search, &mut files);
+    files.sort();
+    let chunk = files
+        .into_iter()
+        .find(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("chunk-"))
+        })
+        .ok_or_else(|| {
+            anyhow::anyhow!("no tstore chunk under {} (array {array:?})", ckpt_dir.display())
+        })?;
+    let mut bytes = std::fs::read(&chunk)?;
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xff;
+    std::fs::write(&chunk, &bytes)?;
+    Ok(chunk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Lib unit tests share one process with every other module's tests;
+    // plans here use coordinates (host 7, step 999999, replica 42) that
+    // no real test mesh ever reaches, and this lock serializes the tests
+    // that arm/disarm the global plan.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn plan_parses_every_kind() {
+        let plan = FaultPlan::parse(
+            r#"{"faults": [
+                {"kind": "host_panic", "host": 7, "step": 999999},
+                {"kind": "slow_host", "host": 7, "step": 999999, "ms": 5},
+                {"kind": "corrupt_checkpoint", "step": 999999, "array": "wte"},
+                {"kind": "infeed_source_error", "host": 7, "batch": 999999},
+                {"kind": "comm_stall", "host": 7, "step": 999999, "ms": 5},
+                {"kind": "replica_panic", "replica": 42, "request": 999999}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(plan.len(), 6);
+        assert_eq!(plan.fired(), 0);
+        assert_eq!(
+            plan.faults()[0],
+            Fault::HostPanic { host: 7, step: 999999 }
+        );
+        assert_eq!(
+            plan.faults()[2],
+            Fault::CorruptCheckpoint { step: 999999, array: "wte".into() }
+        );
+    }
+
+    #[test]
+    fn plan_rejects_unknown_kind_and_missing_fields() {
+        let e = FaultPlan::parse(r#"{"faults": [{"kind": "meteor_strike"}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("meteor_strike"), "{e}");
+        let e = FaultPlan::parse(r#"{"faults": [{"kind": "host_panic", "host": 7}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("step"), "{e}");
+        assert!(FaultPlan::parse(r#"{"nope": 1}"#).is_err());
+    }
+
+    #[test]
+    fn faults_fire_exactly_once() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let plan = arm(FaultPlan::new(vec![
+            Fault::InfeedSourceError { host: 7, batch: 999999 },
+            Fault::ReplicaPanic { replica: 42, request: 999999 },
+        ]));
+        assert!(infeed_error(7, 999999));
+        assert!(!infeed_error(7, 999999), "one-shot: second query must not fire");
+        assert!(!infeed_error(7, 999998), "wrong batch never fires");
+        assert!(replica_panic(42, 999999));
+        assert!(!replica_panic(42, 999999));
+        assert_eq!(plan.fired(), 2);
+        disarm();
+    }
+
+    #[test]
+    fn disarmed_hooks_are_inert() {
+        let _g = TEST_LOCK.lock().unwrap();
+        disarm();
+        // No plan armed: every hook is a relaxed load + return.
+        maybe_inject("trainer/step", 7, 999999);
+        maybe_inject("trainer/grad_sync", 7, 999999);
+        assert!(!infeed_error(7, 999999));
+        assert!(checkpoint_corrupt_target(999999).is_none());
+        assert!(!replica_panic(42, 999999));
+        assert!(!is_armed());
+    }
+
+    #[test]
+    fn corrupt_target_returns_array_prefix() {
+        let _g = TEST_LOCK.lock().unwrap();
+        arm(FaultPlan::new(vec![Fault::CorruptCheckpoint {
+            step: 999999,
+            array: "wte".into(),
+        }]));
+        assert_eq!(checkpoint_corrupt_target(999998), None);
+        assert_eq!(checkpoint_corrupt_target(999999).as_deref(), Some("wte"));
+        assert_eq!(checkpoint_corrupt_target(999999), None, "one-shot");
+        disarm();
+    }
+}

@@ -279,6 +279,53 @@
 //! curl -s -X POST localhost:8077/admin/drain
 //! ```
 //!
+//! ## Fault tolerance ([`faults`], [`trainer::supervisor`])
+//!
+//! The paper's operational pitch is that big runs are *survivable*:
+//! frequent checkpoints plus a deterministic, resumable data pipeline
+//! mean a preempted job restarts bit-identically (§2, §3). This crate
+//! closes the loop with a recovery layer that is itself testable, via
+//! deterministic fault injection ([`faults`]: a JSON `FaultPlan` armed
+//! with `--fault-plan`, keyed by host/step/batch/request, every fault
+//! one-shot, every hook a single relaxed atomic load when disarmed).
+//!
+//! **Failure taxonomy → recovery path:**
+//!
+//! | failure                        | detected by                       | recovery                                            |
+//! |--------------------------------|-----------------------------------|-----------------------------------------------------|
+//! | host panic mid-step            | `catch_unwind` in `Trainer::train`| supervisor restores latest checkpoint, relaunches   |
+//! | wedged collective peer         | ring-op deadline (`collectives::set_comm_deadline_ms`) trips the shared abort flag, naming point/axis/rank | failed step → supervisor restart |
+//! | corrupt checkpoint shard (CRC) | `restore_latest` CRC mismatch     | quarantine dir as `ckpt-<n>.corrupt`, walk back to the previous retained step |
+//! | partial checkpoint (`*.tmp`)   | invisible to `steps()`; swept by `sweep_tmp` on restore | previous committed step restores |
+//! | transient infeed source error  | producer `catch_unwind`           | bounded in-place retries (`train/infeed_retries`) before tripping `Infeed::failed` |
+//! | serving replica panic          | `catch_unwind` around the replica loop | in-flight requests fail with `ServeOutcome::Failed` (HTTP 500), queued work reroutes to survivors, `/healthz` reports `degraded` |
+//!
+//! **Supervisor state machine** ([`trainer::supervisor::Supervisor`]):
+//!
+//! ```text
+//!           ┌────────────────────────────────────────────────┐
+//!           ▼                                                │ attempt < max_restarts:
+//!   RUN (Trainer::train) ──ok──▶ DONE                        │ backoff · 2^(attempt-1)
+//!           │failed (panic / abort / deadline)               │
+//!           ▼                                                │
+//!   RESTORE (restore_latest: sweep *.tmp, walk back past     │
+//!            corrupt steps, quarantining each) ──────────────┘
+//!           │no valid checkpoint, or restarts exhausted
+//!           ▼
+//!          FAIL (error propagates with restart history)
+//! ```
+//!
+//! Every attempt rebuilds the `Trainer` from the artifacts (the shared
+//! abort flag is poisoned by design after a failure) and re-targets the
+//! *original* end step, so the supervised run consumes exactly the
+//! fault-free step sequence; `tests/integration_faults.rs` proves final
+//! params and the consumed `_index` sequence are bit-identical to an
+//! unfaulted run. Counters: `train/restarts`, `train/quarantined_ckpts`,
+//! `train/recovery_ms`. The serving side mirrors it per replica
+//! ([`serve::router::Gateway`] marks dead replicas unhealthy and keeps
+//! serving at N−1). Fault-free supervised throughput is gated against
+//! the unsupervised line by `tools/bench_gate.py` (`supervisor` gate).
+//!
 //! ## Observability ([`obs`], re-exported through [`metrics`])
 //!
 //! The paper's operational claims ("prevent bottlenecks when infeeding
@@ -332,6 +379,7 @@
 pub mod bench;
 pub mod checkpoint;
 pub mod collectives;
+pub mod faults;
 pub mod gin;
 pub mod infer;
 pub mod metrics;

@@ -12,7 +12,16 @@
 //!            [--exec-mode auto|gather|block] \
 //!            [--task c4_span] [--split train] [--use-cached] [--cache DIR] \
 //!            [--trace-out trace.json] [--profile-steps 2..8] \
+//!            [--supervise] [--max-restarts N] [--backoff-ms MS] \
+//!            [--comm-deadline-ms MS] [--fault-plan plan.json] \
 //!            [--config run.gin] [--gin.trainer.lr=1e-3]
+//!            # --supervise (gin supervisor.enabled) wraps training in the
+//!            # self-healing supervisor: failed attempts restore the
+//!            # latest valid checkpoint (quarantining corrupt ones) and
+//!            # relaunch with bounded backoff; the collective ring
+//!            # deadline defaults ON (60 s; --comm-deadline-ms 0 turns it
+//!            # off). --fault-plan (gin faults.plan) arms a deterministic
+//!            # fault-injection plan — see rust/src/faults/mod.rs.
 //! t5x eval   --model t5-micro-dec [--task <registry-name>] [--ckpt DIR]
 //! t5x infer  --model t5-nano-dec --prompt "5 9 11" --len 8 \
 //!            [--decode greedy|sample|beam] [--temperature 0.8] [--top-k 20] \
@@ -21,7 +30,8 @@
 //! t5x serve  --model t5-nano-dec [--len 16] [--decode-mode auto|kv|rescore]
 //!            [--replicas N] [--queue-depth D] [--shed-watermark W]
 //!            [--http-port P] [--http-addr A] [--http-threads T]
-//!            [--trace-out trace.json]
+//!            [--http-max-body BYTES] [--http-read-deadline-ms MS]
+//!            [--fault-plan plan.json] [--trace-out trace.json]
 //!            # default: JSONL requests on stdin; --http-port (or gin
 //!            # serve.http_port) switches to the HTTP front end
 //!            # (POST /v1/generate, GET /healthz, GET /metrics,
@@ -429,8 +439,48 @@ fn train_source(
     Ok(source)
 }
 
+/// `--fault-plan PATH` (gin `faults.plan`): arm the deterministic fault
+/// injection plan process-wide. No plan → hooks stay on the one-relaxed-
+/// load fast path.
+fn arm_fault_plan(args: &Args, gin: &Config) -> anyhow::Result<()> {
+    let path = args.get("fault-plan").map(|s| s.to_string()).or_else(|| {
+        gin.get("faults", "plan").and_then(|v| v.as_str()).map(|s| s.to_string())
+    });
+    if let Some(path) = path {
+        let plan = t5x::faults::FaultPlan::from_file(&path)?;
+        eprintln!("fault plan armed: {} fault(s) from {path}", plan.len());
+        t5x::faults::arm(plan);
+    }
+    Ok(())
+}
+
+/// Resolve the supervisor restart policy (CLI flag > gin `supervisor.*` >
+/// default). The collective ring deadline defaults ON under supervision
+/// (60 s); `--comm-deadline-ms 0` disables it.
+fn supervisor_config(args: &Args, gin: &Config) -> anyhow::Result<t5x::trainer::supervisor::SupervisorConfig> {
+    let max_restarts = match args.get("max-restarts") {
+        Some(_) => args.get_usize("max-restarts", 3)? as u32,
+        None => gin.usize_or("supervisor", "max_restarts", 3) as u32,
+    };
+    let backoff_ms = match args.get("backoff-ms") {
+        Some(_) => args.get_usize("backoff-ms", 100)? as u64,
+        None => gin.usize_or("supervisor", "backoff_ms", 100) as u64,
+    };
+    let deadline = match args.get("comm-deadline-ms") {
+        Some(_) => args.get_usize("comm-deadline-ms", 60_000)? as u64,
+        None => gin.usize_or("supervisor", "comm_deadline_ms", 60_000) as u64,
+    };
+    Ok(t5x::trainer::supervisor::SupervisorConfig {
+        max_restarts,
+        backoff_ms,
+        comm_deadline_ms: if deadline == 0 { None } else { Some(deadline) },
+        resume: args.has_flag("resume"),
+    })
+}
+
 fn cmd_train(args: &Args, gin: &Config) -> anyhow::Result<()> {
     let cfg = trainer_config(args, gin)?;
+    arm_fault_plan(args, gin)?;
     let arts = Artifacts::load_default()?;
     let device = DeviceHandle::spawn()?;
     let m = arts.model(&cfg.model)?;
@@ -442,24 +492,65 @@ fn cmd_train(args: &Args, gin: &Config) -> anyhow::Result<()> {
         cfg.mesh,
         cfg.strategy
     );
-    let logger = t5x::metrics::MetricsLogger::new()
-        .with_terminal()
-        .with_jsonl(args.get_or("log", "train_log.jsonl"));
-    let mut trainer = Trainer::new(&arts, &device, cfg.clone())?.with_logger(logger);
-    if cfg.mesh.model > 1 {
+    let log_path = args.get_or("log", "train_log.jsonl");
+    let supervise =
+        args.has_flag("supervise") || gin.bool_or("supervisor", "enabled", false);
+    let summary = if supervise {
+        use t5x::trainer::supervisor::Supervisor;
+        let sup_cfg = supervisor_config(args, gin)?;
         println!(
-            "execution mode: {} (requested '{}')",
-            trainer.exec_mode, cfg.exec_mode
+            "supervised: max {} restart(s), backoff {} ms, comm deadline {}",
+            sup_cfg.max_restarts,
+            sup_cfg.backoff_ms,
+            match sup_cfg.comm_deadline_ms {
+                Some(ms) => format!("{ms} ms"),
+                None => "off".to_string(),
+            }
         );
-    }
-    if args.has_flag("resume") {
-        if let Some(dir) = &cfg.checkpoint_dir {
-            let step = trainer.restore_latest(dir)?;
-            println!("resumed from checkpoint at step {step}");
+        let sup = Supervisor::new(&arts, &device, cfg.clone(), sup_cfg);
+        let run = sup.run(
+            |trainer| train_source(args, gin, m, &cfg, trainer),
+            |t, attempt| {
+                // The JSONL sink truncates on open, so only attempt 0 gets
+                // it; retries log to the terminal and rely on counters.
+                let logger = if attempt == 0 {
+                    t5x::metrics::MetricsLogger::new()
+                        .with_terminal()
+                        .with_jsonl(&log_path)
+                } else {
+                    t5x::metrics::MetricsLogger::new().with_terminal()
+                };
+                t.with_logger(logger)
+            },
+        )?;
+        if run.restarts > 0 {
+            println!(
+                "supervisor: recovered from {} failure(s) in {} ms \
+                 ({} checkpoint(s) quarantined)",
+                run.restarts, run.recovery_ms, run.quarantined_ckpts
+            );
         }
-    }
-    let source = train_source(args, gin, m, &cfg, &trainer)?;
-    let summary = trainer.train(&source)?;
+        run.summary
+    } else {
+        let logger = t5x::metrics::MetricsLogger::new()
+            .with_terminal()
+            .with_jsonl(&log_path);
+        let mut trainer = Trainer::new(&arts, &device, cfg.clone())?.with_logger(logger);
+        if cfg.mesh.model > 1 {
+            println!(
+                "execution mode: {} (requested '{}')",
+                trainer.exec_mode, cfg.exec_mode
+            );
+        }
+        if args.has_flag("resume") {
+            if let Some(dir) = &cfg.checkpoint_dir {
+                let step = trainer.restore_latest(dir)?;
+                println!("resumed from checkpoint at step {step}");
+            }
+        }
+        let source = train_source(args, gin, m, &cfg, &trainer)?;
+        trainer.train(&source)?
+    };
     println!(
         "done: loss {:.4} -> {:.4}, {:.1}s, comm {:.1} MiB",
         summary.first_loss(),
@@ -659,6 +750,7 @@ fn cmd_serve(args: &Args, gin: &Config) -> anyhow::Result<()> {
     use t5x::serve::{Gateway, GatewayConfig, HttpConfig, HttpServer};
 
     let model = args.get_or("model", "t5-nano-dec");
+    arm_fault_plan(args, gin)?;
     let arts = Artifacts::load_default()?;
     let device = DeviceHandle::spawn()?;
     let m = arts.model(&model)?;
@@ -688,6 +780,11 @@ fn cmd_serve(args: &Args, gin: &Config) -> anyhow::Result<()> {
         .map(|s| s.to_string())
         .unwrap_or_else(|| gin.str_or("serve", "http_addr", "127.0.0.1"));
     let http_threads = serve_opt_usize(args, gin, "http-threads", "http_threads")?.unwrap_or(8);
+    let http_max_body = serve_opt_usize(args, gin, "http-max-body", "http_max_body_bytes")?
+        .unwrap_or(1 << 20);
+    let http_read_deadline_ms =
+        serve_opt_usize(args, gin, "http-read-deadline-ms", "http_read_deadline_ms")?
+            .unwrap_or(10_000) as u64;
 
     let batch = m.batch();
     let mode_name = engine.mode().name();
@@ -733,6 +830,8 @@ fn cmd_serve(args: &Args, gin: &Config) -> anyhow::Result<()> {
                 port,
                 threads: http_threads,
                 default_max_tokens: default_max,
+                max_body_bytes: http_max_body,
+                read_deadline_ms: http_read_deadline_ms,
             },
             stop.clone(),
         )?;

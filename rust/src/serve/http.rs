@@ -22,13 +22,21 @@
 //! on its connection and blocks on the gateway outcome channel while its
 //! request decodes. Concurrency is bounded by the pool size — a slow
 //! client can hold one worker, never the engine.
+//!
+//! Hardening: a request body larger than
+//! [`HttpConfig::max_body_bytes`] is rejected with `413` *before* the
+//! buffer is allocated (the declared `Content-Length` is checked, so a
+//! hostile header cannot trigger a huge allocation), and the whole
+//! header+body read is bounded by [`HttpConfig::read_deadline_ms`] —
+//! a slowloris client trickling one byte per second loses its worker
+//! after the deadline, not never.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::admission::AdmitError;
 use super::router::Gateway;
@@ -52,6 +60,14 @@ pub struct HttpConfig {
     pub threads: usize,
     /// `max_tokens` when the body doesn't set one.
     pub default_max_tokens: usize,
+    /// Largest accepted request body; a bigger declared `Content-Length`
+    /// gets `413 Payload Too Large` without allocating the buffer.
+    pub max_body_bytes: usize,
+    /// Wall-clock budget for reading one request (headers + body). A
+    /// client that trickles bytes slower than this loses the connection
+    /// (slowloris defense); the per-read socket timeout alone does not
+    /// bound the total, only each gap.
+    pub read_deadline_ms: u64,
 }
 
 impl Default for HttpConfig {
@@ -61,6 +77,8 @@ impl Default for HttpConfig {
             port: 0,
             threads: 8,
             default_max_tokens: 16,
+            max_body_bytes: 1 << 20,
+            read_deadline_ms: 10_000,
         }
     }
 }
@@ -94,6 +112,10 @@ impl HttpServer {
             let gw = gateway.clone();
             let stopc = stop.clone();
             let max_tokens = cfg.default_max_tokens;
+            let limits = ReadLimits {
+                max_body_bytes: cfg.max_body_bytes,
+                deadline: Duration::from_millis(cfg.read_deadline_ms.max(1)),
+            };
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("http-worker{w}"))
@@ -102,9 +124,9 @@ impl HttpServer {
                         // other workers runnable.
                         let conn = rx.lock().unwrap().recv();
                         match conn {
-                            Ok(stream) => {
-                                handle_connection(&gw, stream, max_tokens, &stopc)
-                            }
+                            Ok(stream) => handle_connection(
+                                &gw, stream, max_tokens, limits, &stopc,
+                            ),
                             Err(_) => break, // accept loop gone
                         }
                     })?,
@@ -153,9 +175,42 @@ struct Request {
     body: Vec<u8>,
 }
 
+/// Per-request read budgets (see [`HttpConfig::max_body_bytes`] /
+/// [`HttpConfig::read_deadline_ms`]).
+#[derive(Debug, Clone, Copy)]
+struct ReadLimits {
+    max_body_bytes: usize,
+    deadline: Duration,
+}
+
+/// What [`read_request`] produced: a complete request, or a request whose
+/// declared body exceeds the cap (headers consumed, body deliberately
+/// unread — the caller answers `413` and closes).
+enum ReadRequest {
+    Complete(Request),
+    TooLarge { content_length: usize },
+}
+
 /// Read one HTTP/1.1 request; `Ok(None)` on clean EOF (client closed a
 /// keep-alive connection between requests).
-fn read_request(reader: &mut BufReader<TcpStream>) -> std::io::Result<Option<Request>> {
+///
+/// The whole read — request line, headers, body — must finish before
+/// `limits.deadline` elapses; the body is pulled in socket-sized chunks
+/// with the deadline rechecked between reads, so a slow-trickle client
+/// cannot pin a worker past the budget. An oversized declared
+/// `Content-Length` returns [`ReadRequest::TooLarge`] *before* any body
+/// buffer is allocated.
+fn read_request(
+    reader: &mut BufReader<TcpStream>,
+    limits: ReadLimits,
+) -> std::io::Result<Option<ReadRequest>> {
+    let deadline = Instant::now() + limits.deadline;
+    let timed_out = || {
+        std::io::Error::new(
+            std::io::ErrorKind::TimedOut,
+            "request read exceeded deadline",
+        )
+    };
     let mut line = String::new();
     if reader.read_line(&mut line)? == 0 {
         return Ok(None);
@@ -166,6 +221,9 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> std::io::Result<Option<Req
     let mut content_length = 0usize;
     let mut keep_alive = true; // HTTP/1.1 default
     loop {
+        if Instant::now() >= deadline {
+            return Err(timed_out());
+        }
         let mut h = String::new();
         if reader.read_line(&mut h)? == 0 {
             return Ok(None);
@@ -183,9 +241,26 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> std::io::Result<Option<Req
             }
         }
     }
-    let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body)?;
-    Ok(Some(Request { method, path, keep_alive, body }))
+    if content_length > limits.max_body_bytes {
+        return Ok(Some(ReadRequest::TooLarge { content_length }));
+    }
+    let mut body = Vec::with_capacity(content_length);
+    let mut chunk = [0u8; 8192];
+    while body.len() < content_length {
+        if Instant::now() >= deadline {
+            return Err(timed_out());
+        }
+        let want = (content_length - body.len()).min(chunk.len());
+        let n = reader.read(&mut chunk[..want])?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-body",
+            ));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    Ok(Some(ReadRequest::Complete(Request { method, path, keep_alive, body })))
 }
 
 fn write_response(
@@ -221,17 +296,35 @@ fn handle_connection(
     gw: &Arc<Gateway>,
     stream: TcpStream,
     default_max_tokens: usize,
+    limits: ReadLimits,
     stop: &Arc<AtomicBool>,
 ) {
-    // Bound header/body reads so an idle keep-alive connection frees its
-    // worker; blocking on a decode outcome is not affected.
+    // Bound each individual read so an idle keep-alive connection frees
+    // its worker; read_request additionally bounds the *total* per-request
+    // read time. Blocking on a decode outcome is not affected.
     let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut stream = stream;
     loop {
-        let req = match read_request(&mut reader) {
-            Ok(Some(r)) => r,
+        let req = match read_request(&mut reader, limits) {
+            Ok(Some(ReadRequest::Complete(r))) => r,
+            Ok(Some(ReadRequest::TooLarge { content_length })) => {
+                // The body was never read, so the connection cannot be
+                // reused for a next request: answer and close.
+                let _ = write_response(
+                    &mut stream,
+                    413,
+                    "Payload Too Large",
+                    &[],
+                    &err_body(format!(
+                        "body of {content_length} bytes exceeds limit of {} bytes",
+                        limits.max_body_bytes
+                    )),
+                    false,
+                );
+                return;
+            }
             Ok(None) | Err(_) => return, // EOF / timeout / bad peer
         };
         let mut keep = req.keep_alive && !stop.load(Ordering::Relaxed);
@@ -330,22 +423,33 @@ fn handle_generate(gw: &Arc<Gateway>, body: &[u8], default_max_tokens: usize) ->
 mod tests {
     use super::*;
 
+    fn test_limits() -> ReadLimits {
+        ReadLimits { max_body_bytes: 1 << 20, deadline: Duration::from_secs(5) }
+    }
+
+    fn loopback() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
     #[test]
     fn http_config_defaults() {
         let c = HttpConfig::default();
         assert_eq!(c.addr, "127.0.0.1");
         assert_eq!(c.port, 0);
         assert!(c.threads >= 1);
+        assert!(c.max_body_bytes >= 1 << 16);
+        assert!(c.read_deadline_ms >= 1000);
     }
 
     #[test]
     fn request_parsing_reads_headers_and_body() {
         // Loopback socket pair: write a raw request, read it back through
         // read_request.
-        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
-        let addr = listener.local_addr().unwrap();
-        let mut client = TcpStream::connect(addr).unwrap();
-        let (server, _) = listener.accept().unwrap();
+        let (mut client, server) = loopback();
         client
             .write_all(
                 b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 15\r\n\
@@ -354,11 +458,73 @@ mod tests {
             .unwrap();
         client.flush().unwrap();
         let mut reader = BufReader::new(server);
-        let req = read_request(&mut reader).unwrap().unwrap();
+        let req = match read_request(&mut reader, test_limits()).unwrap().unwrap() {
+            ReadRequest::Complete(r) => r,
+            ReadRequest::TooLarge { .. } => panic!("unexpected TooLarge"),
+        };
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/v1/generate");
         assert!(!req.keep_alive);
         assert_eq!(req.body, b"{\"prompt\": [5]}");
+    }
+
+    #[test]
+    fn oversized_content_length_is_rejected_without_allocation() {
+        let (mut client, server) = loopback();
+        // Declares a 100 TB body; if read_request allocated it up front
+        // this test would OOM instead of returning TooLarge.
+        client
+            .write_all(
+                b"POST /v1/generate HTTP/1.1\r\nHost: x\r\n\
+                  Content-Length: 109951162777600\r\n\r\n",
+            )
+            .unwrap();
+        client.flush().unwrap();
+        let mut reader = BufReader::new(server);
+        match read_request(&mut reader, test_limits()).unwrap().unwrap() {
+            ReadRequest::TooLarge { content_length } => {
+                assert_eq!(content_length, 109_951_162_777_600);
+            }
+            ReadRequest::Complete(_) => panic!("expected TooLarge"),
+        }
+    }
+
+    #[test]
+    fn slow_trickle_body_trips_the_read_deadline() {
+        let (mut client, server) = loopback();
+        // Keep each gap under the 100 ms socket timeout so only the
+        // overall deadline can end the read.
+        server.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        client
+            .write_all(
+                b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 1000\r\n\r\n",
+            )
+            .unwrap();
+        client.flush().unwrap();
+        let writer = std::thread::spawn(move || {
+            // Trickle one byte every 40 ms: at this rate the full body
+            // would take 40 s — the 300 ms deadline must cut it off.
+            for _ in 0..50 {
+                if client.write_all(b"x").is_err() {
+                    return;
+                }
+                let _ = client.flush();
+                std::thread::sleep(Duration::from_millis(40));
+            }
+        });
+        let mut reader = BufReader::new(server);
+        let limits =
+            ReadLimits { max_body_bytes: 1 << 20, deadline: Duration::from_millis(300) };
+        let started = Instant::now();
+        let err = read_request(&mut reader, limits).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "{err}");
+        assert!(
+            started.elapsed() < Duration::from_secs(5),
+            "deadline did not bound the read: {:?}",
+            started.elapsed()
+        );
+        drop(reader); // close server half so the writer unblocks
+        writer.join().unwrap();
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! timeline side by side.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -60,6 +61,10 @@ struct ReplicaStats {
     ttft: Histogram,
     latency: Histogram,
     queue: Histogram,
+    /// Cleared when the replica thread dies (step error or panic); the
+    /// shared admission queue then routes around the corpse and
+    /// `/healthz` reports `degraded`.
+    alive: Arc<AtomicBool>,
 }
 
 /// Final shutdown report: per-replica engine summaries plus the
@@ -124,6 +129,7 @@ impl Gateway {
                 ttft: e.ttft_histogram().clone(),
                 latency: e.latency_histogram().clone(),
                 queue: e.queue_histogram().clone(),
+                alive: Arc::new(AtomicBool::new(true)),
             })
             .collect();
         let gw = Arc::new(Gateway {
@@ -152,6 +158,26 @@ impl Gateway {
 
     pub fn replicas(&self) -> usize {
         self.stats.len()
+    }
+
+    /// Replicas whose stepping threads are still running.
+    pub fn alive_replicas(&self) -> usize {
+        self.stats.iter().filter(|s| s.alive.load(Ordering::SeqCst)).count()
+    }
+
+    /// Mark a replica dead, account for work that must find a new home,
+    /// and — when it was the last one — close admission so clients get a
+    /// fast rejection instead of queueing into the void.
+    fn mark_replica_dead(&self, idx: usize) {
+        self.stats[idx].alive.store(false, Ordering::SeqCst);
+        self.counters.inc("serve/replica_failures");
+        // Everything still queued at the instant of death will be pulled
+        // by a surviving replica (the queue *is* the router).
+        self.counters.add("serve/rerouted_queued", self.queue.depth() as u64);
+        if self.alive_replicas() == 0 {
+            eprintln!("serve: last replica died; closing admission");
+            self.queue.close();
+        }
     }
 
     /// True once [`Gateway::drain`]/[`Gateway::shutdown`] stopped
@@ -283,6 +309,10 @@ impl Gateway {
                 };
                 Json::obj(vec![
                     ("replica", Json::num(i as f64)),
+                    (
+                        "state",
+                        Json::str(if s.alive.load(Ordering::SeqCst) { "up" } else { "down" }),
+                    ),
                     ("completed", Json::num(s.counters.get("infer/requests_completed") as f64)),
                     ("tokens", Json::num(s.counters.get("infer/tokens") as f64)),
                     ("steps", Json::num(steps as f64)),
@@ -318,29 +348,110 @@ impl Gateway {
         ])
     }
 
-    /// The `GET /healthz` document.
+    /// The `GET /healthz` document. A gateway that has lost replicas but
+    /// still has survivors reports `degraded`; one that has lost *all* of
+    /// them reports `down`. `per_replica` names each replica `up`/`down`
+    /// so an operator can see which host to recycle.
     pub fn healthz_json(&self) -> Json {
+        let total = self.replicas();
+        let alive = self.alive_replicas();
+        let status = if total > 0 && alive == 0 {
+            "down"
+        } else if total > 0 && alive < total {
+            "degraded"
+        } else if self.draining() {
+            "draining"
+        } else {
+            "ok"
+        };
+        let per_replica: Vec<Json> = self
+            .stats
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                Json::obj(vec![
+                    ("replica", Json::num(i as f64)),
+                    (
+                        "state",
+                        Json::str(if s.alive.load(Ordering::SeqCst) { "up" } else { "down" }),
+                    ),
+                ])
+            })
+            .collect();
         Json::obj(vec![
-            ("status", Json::str(if self.draining() { "draining" } else { "ok" })),
-            ("replicas", Json::num(self.replicas() as f64)),
+            ("status", Json::str(status)),
+            ("replicas", Json::num(total as f64)),
+            ("replicas_alive", Json::num(alive as f64)),
             ("queue_depth", Json::num(self.queue.depth() as f64)),
+            ("per_replica", Json::Arr(per_replica)),
         ])
     }
 }
 
-/// One replica's stepping loop: pull up to `free_slots` requests, step
-/// the engine, route completions back. Exits when the queue closes and
-/// all local work is done.
+/// One replica's supervised stepping loop: runs [`replica_work`] under
+/// `catch_unwind` so a panicking replica (a poisoned engine, an injected
+/// `replica_panic` fault) dies *cleanly* — every in-flight request is
+/// answered with [`ServeOutcome::Failed`], the replica is marked dead for
+/// `/healthz`, and the shared admission queue keeps feeding the
+/// survivors.
+///
+/// The in-flight map lives in a [`Mutex`] owned by this frame (not by
+/// `replica_work`) precisely so it survives the unwind and can be
+/// flushed.
 fn replica_loop(
     gw: Arc<Gateway>,
+    engine: InferEngine,
+    idx: usize,
+) -> anyhow::Result<EngineSummary> {
+    let inflight: Mutex<HashMap<u64, InFlight>> = Mutex::new(HashMap::new());
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        replica_work(&gw, engine, idx, &inflight)
+    }));
+    let err = match result {
+        Ok(Ok(summary)) => return Ok(summary),
+        Ok(Err(e)) => e,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "replica panicked".to_string());
+            anyhow::anyhow!("replica {idx} panicked: {msg}")
+        }
+    };
+    gw.mark_replica_dead(idx);
+    // Clients blocked on recv must hear about the failure or they hang
+    // forever; flush every request this replica had accepted.
+    let msg = format!("replica {idx} died: {err:#}");
+    eprintln!("serve: {msg}");
+    let drained = std::mem::take(
+        &mut *inflight.lock().unwrap_or_else(|poison| poison.into_inner()),
+    );
+    for (_, m) in drained {
+        gw.counters.inc("serve/failed");
+        gw.counters.inc("serve/failed_inflight");
+        let _ = m.reply.send(ServeOutcome::Failed {
+            client_id: m.client_id,
+            error: msg.clone(),
+        });
+    }
+    Err(err)
+}
+
+/// The actual pull/step/route loop: pull up to `free_slots` requests,
+/// step the engine, route completions back. Exits when the queue closes
+/// and all local work is done. Errors and panics are handled by
+/// [`replica_loop`].
+fn replica_work(
+    gw: &Gateway,
     mut engine: InferEngine,
     idx: usize,
+    inflight: &Mutex<HashMap<u64, InFlight>>,
 ) -> anyhow::Result<EngineSummary> {
     let tracer = engine.tracer().clone();
     tracer.name_track(format!("serve/replica{idx}"));
     let step_span = format!("serve/replica{idx}/step");
     let batch = engine.manifest.batch();
-    let mut inflight: HashMap<u64, InFlight> = HashMap::new();
     loop {
         let free = batch.saturating_sub(engine.active() + engine.queued());
         let mut closed = false;
@@ -348,25 +459,31 @@ fn replica_loop(
             Popped::Closed => closed = true,
             Popped::Batch(batch_in) => {
                 for p in batch_in {
-                    let internal_id = p.req.id;
-                    match engine.submit(p.req.clone()) {
-                        Ok(()) => {
-                            inflight.insert(
-                                internal_id,
-                                InFlight {
-                                    client_id: p.client_id,
-                                    submitted: p.submitted,
-                                    reply: p.reply,
-                                },
-                            );
-                        }
-                        Err(e) => {
-                            // validate_request should have caught this at
-                            // submit; engines can still reject (e.g. a
-                            // manifest-less test gateway).
+                    let Pending { req, client_id, submitted, reply, .. } = p;
+                    let internal_id = req.id;
+                    // Record the request *before* anything can fail so a
+                    // panic between here and engine acceptance still
+                    // answers the client (via the flush in
+                    // `replica_loop`).
+                    inflight.lock().unwrap().insert(
+                        internal_id,
+                        InFlight { client_id, submitted, reply },
+                    );
+                    if crate::faults::replica_panic(idx, client_id) {
+                        panic!(
+                            "fault injected: replica_panic(replica={idx}, \
+                             request={client_id})"
+                        );
+                    }
+                    if let Err(e) = engine.submit(req) {
+                        // validate_request should have caught this at
+                        // submit; engines can still reject (e.g. a
+                        // manifest-less test gateway).
+                        if let Some(m) = inflight.lock().unwrap().remove(&internal_id)
+                        {
                             gw.counters.inc("serve/failed");
-                            let _ = p.reply.send(ServeOutcome::Failed {
-                                client_id: p.client_id,
+                            let _ = m.reply.send(ServeOutcome::Failed {
+                                client_id: m.client_id,
                                 error: format!("{e:#}"),
                             });
                         }
@@ -375,25 +492,12 @@ fn replica_loop(
             }
         }
         if engine.has_work() {
-            let step_res = {
+            {
                 let _sp = tracer.span(&step_span);
-                engine.step()
-            };
-            if let Err(e) = step_res {
-                // Clients blocked on recv must hear about the failure or
-                // they hang forever; flush every in-flight request.
-                let msg = format!("replica {idx} step failed: {e:#}");
-                for (_, m) in inflight.drain() {
-                    gw.counters.inc("serve/failed");
-                    let _ = m.reply.send(ServeOutcome::Failed {
-                        client_id: m.client_id,
-                        error: msg.clone(),
-                    });
-                }
-                return Err(e);
+                engine.step()?;
             }
             for r in engine.drain_finished() {
-                let Some(m) = inflight.remove(&r.id) else {
+                let Some(m) = inflight.lock().unwrap().remove(&r.id) else {
                     continue; // unreachable: every submit records an entry
                 };
                 let latency_s = m.submitted.elapsed().as_secs_f64();

@@ -22,6 +22,15 @@
 use std::sync::Mutex;
 
 use crate::runtime::artifacts::ModelManifest;
+
+/// Transient-source resilience (S10): a panicking stream pull is retried
+/// in place this many times (exponential backoff from
+/// [`PULL_RETRY_BACKOFF_MS`]) before the failure propagates and trips
+/// [`Infeed::failed`] — one flaky read no longer kills a run. Retries are
+/// counted into the `train/infeed_retries` counter via
+/// [`Infeed::retries`].
+const MAX_PULL_RETRIES: u32 = 3;
+const PULL_RETRY_BACKOFF_MS: u64 = 10;
 use crate::runtime::HostTensor;
 use crate::seqio::dataset::{Dataset, PipelineState};
 use crate::seqio::{Example, Feature};
@@ -97,6 +106,9 @@ pub struct Infeed {
     /// (producer increments after send, consumer decrements on recv) —
     /// the `train/infeed_queue_depth` gauge.
     depths: Vec<std::sync::Arc<std::sync::atomic::AtomicI64>>,
+    /// Total transient-pull retries across all producers (the
+    /// `train/infeed_retries` counter).
+    retries: std::sync::Arc<std::sync::atomic::AtomicU64>,
 }
 
 impl Infeed {
@@ -138,6 +150,7 @@ impl Infeed {
         let failed = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
         let tracer: std::sync::Arc<std::sync::OnceLock<std::sync::Arc<crate::obs::Tracer>>> =
             std::sync::Arc::new(std::sync::OnceLock::new());
+        let retries = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
         let mut depths = Vec::with_capacity(num_hosts);
         for host in 0..num_hosts {
             let (tx, rx) = Pipe::bounded(prefetch.max(1));
@@ -153,6 +166,7 @@ impl Infeed {
             let manifest = m.clone();
             let failed_flag = failed.clone();
             let tracer_slot = tracer.clone();
+            let retry_ctr = retries.clone();
             let depth = std::sync::Arc::new(std::sync::atomic::AtomicI64::new(0));
             depths.push(depth.clone());
             std::thread::Builder::new()
@@ -165,11 +179,14 @@ impl Infeed {
                     let produce = std::panic::AssertUnwindSafe(move || {
                         let track = format!("infeed-{host}");
                         let mut buf = Vec::with_capacity(batch);
+                        let mut batches_done: u64 = 0;
                         // Per-batch span window: stream pulls + assembly +
                         // state snapshot (send-side backpressure excluded,
                         // so span time is real producer work).
                         let mut batch_t0 = std::time::Instant::now();
-                        while let Some(ex) = stream.next() {
+                        while let Some(ex) =
+                            pull_with_retry(&mut stream, host, batches_done, &retry_ctr)
+                        {
                             buf.push(ex);
                             if buf.len() == batch {
                                 let assembled = assemble_batch(&manifest, &buf);
@@ -190,6 +207,7 @@ impl Infeed {
                                     return; // trainer hung up
                                 }
                                 depth.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                                batches_done += 1;
                                 batch_t0 = std::time::Instant::now();
                             }
                         }
@@ -203,7 +221,7 @@ impl Infeed {
                 .expect("spawn infeed thread");
             receivers.push(Mutex::new(rx));
         }
-        Ok(Infeed { receivers, states: states_out, failed, tracer, depths })
+        Ok(Infeed { receivers, states: states_out, failed, tracer, depths, retries })
     }
 
     /// Arm per-batch producer spans. Callable after the producer threads
@@ -279,10 +297,58 @@ impl Infeed {
         self.failed.load(std::sync::atomic::Ordering::SeqCst)
     }
 
+    /// Total transient stream-pull retries across all producer threads
+    /// (exported by the trainer as `train/infeed_retries`).
+    pub fn retries(&self) -> u64 {
+        self.retries.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
     /// Pipeline state of host `h` as of its last consumed batch. Saved in
     /// checkpoints so a restarted run resumes the exact example sequence.
     pub fn pipeline_state(&self, host: usize) -> PipelineState {
         PipelineState(self.states[host].lock().unwrap().clone())
+    }
+}
+
+/// One stream pull with bounded in-place retries: a panic inside the
+/// source (or an injected `infeed_source_error` keyed by this host's
+/// produced-batch index) is caught and the pull retried up to
+/// [`MAX_PULL_RETRIES`] times with exponential backoff before the final
+/// panic is allowed to propagate (tripping `Infeed::failed` as before).
+/// Retry is best-effort for real sources — the stream must tolerate a
+/// re-issued `next` after an internal panic, which positional
+/// cache/synthetic readers do.
+fn pull_with_retry(
+    stream: &mut Dataset,
+    host: usize,
+    batch_index: u64,
+    retry_ctr: &std::sync::atomic::AtomicU64,
+) -> Option<Example> {
+    let mut attempt: u32 = 0;
+    loop {
+        let pull = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if crate::faults::infeed_error(host, batch_index) {
+                panic!("fault injected: infeed_source_error(host={host}, batch={batch_index})");
+            }
+            stream.next()
+        }));
+        match pull {
+            Ok(ex) => return ex,
+            Err(p) => {
+                attempt += 1;
+                if attempt > MAX_PULL_RETRIES {
+                    std::panic::resume_unwind(p);
+                }
+                retry_ctr.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                eprintln!(
+                    "warning: infeed host {host} batch {batch_index}: source pull \
+                     failed (attempt {attempt}/{MAX_PULL_RETRIES}), retrying"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(
+                    PULL_RETRY_BACKOFF_MS << (attempt - 1),
+                ));
+            }
+        }
     }
 }
 
@@ -391,6 +457,46 @@ mod tests {
             c.get("train/infeed_starved_steps")
         );
         assert_eq!(infeed.queue_depth(0), 0);
+    }
+
+    #[test]
+    fn transient_pull_panic_retries_and_recovers() {
+        let arts = Artifacts::load_default().unwrap();
+        let m = arts.model("t5-nano-dec").unwrap();
+        let b = m.batch();
+        let tripped = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        // One panic on the first pull; the panicking element is consumed
+        // by the underlying iterator, so provision one spare example.
+        let infeed = Infeed::spawn(m, 1, 1, |_| {
+            let m2 = m.clone();
+            let tripped = tripped.clone();
+            Dataset::new((0..(b * 2 + 1) as i32).map(move |i| {
+                if i == 0 && !tripped.swap(true, std::sync::atomic::Ordering::SeqCst) {
+                    panic!("transient source hiccup");
+                }
+                converted_example(&m2, i)
+            }))
+        });
+        assert!(infeed.next(0).is_some());
+        assert!(infeed.next(0).is_some());
+        assert!(infeed.next(0).is_none());
+        assert!(!infeed.failed(), "a retried transient error must not fail the infeed");
+        assert!(infeed.retries() >= 1, "retry counter must record the recovery");
+    }
+
+    #[test]
+    fn persistent_pull_panic_exhausts_retries_and_fails() {
+        let arts = Artifacts::load_default().unwrap();
+        let m = arts.model("t5-nano-dec").unwrap();
+        let b = m.batch();
+        let infeed = Infeed::spawn(m, 1, 1, |_| {
+            Dataset::new((0..(b * 2) as i32).map(move |i| -> Example {
+                panic!("permanent source failure at {i}");
+            }))
+        });
+        assert!(infeed.next(0).is_none(), "a dead producer ends the stream");
+        assert!(infeed.failed(), "exhausted retries must trip the failure flag");
+        assert_eq!(infeed.retries(), MAX_PULL_RETRIES as u64);
     }
 
     #[test]

@@ -92,6 +92,7 @@ pub mod eval;
 pub mod infeed;
 pub mod recipes;
 pub mod schedule;
+pub mod supervisor;
 
 use std::cell::Cell;
 use std::collections::BTreeMap;
@@ -661,6 +662,19 @@ impl Trainer {
         self
     }
 
+    /// Adjust how many steps the next [`Self::train`] call runs. The
+    /// supervisor uses this to re-target a restarted attempt at the
+    /// *original* end step (`restored_step + steps == target_end`), so a
+    /// supervised run never over- or under-trains.
+    pub fn set_steps(&mut self, steps: u64) {
+        self.config.steps = steps;
+    }
+
+    /// The configured checkpoint directory, if any.
+    pub fn checkpoint_dir(&self) -> Option<&PathBuf> {
+        self.config.checkpoint_dir.as_ref()
+    }
+
     /// Attach an externally owned tracer (benches/tests that want spans
     /// without a `trace_out` file); also wires it into the collective
     /// groups.
@@ -805,6 +819,9 @@ impl Trainer {
         self.counters.add("train/model_axis_ops", self.colls.axis_ops(MeshAxis::Model));
         self.counters.add("train/exposed_comm_ms", exposed_comm_micros / 1000);
         self.counters.add("train/overlapped_comm_ms", overlapped_comm_micros / 1000);
+        if let BatchSource::Infeed(inf) = source {
+            self.counters.set_max("train/infeed_retries", inf.retries());
+        }
         self.counters
             .set_max("train/peak_param_floats", self.peak_param_floats.load(Ordering::Relaxed));
         self.counters.log_to(&self.logger, final_step);
@@ -882,6 +899,8 @@ impl Trainer {
             }
             let t_step = Instant::now();
             let _step_span = self.tracer.span("train/step").arg("step", step);
+            // S10 injection point: host_panic / slow_host keyed (host, step).
+            crate::faults::maybe_inject("trainer/step", rank, step);
             let phase0 =
                 if rank == 0 { Some(self.timing.snapshot_micros()) } else { None };
             // ---- per-step prepared state: resident shards (O(1) Arc
@@ -1008,6 +1027,10 @@ impl Trainer {
             // batch, then clip + update on the accumulated gradient —
             // identical to the monolithic step's epilogue. The lane is
             // drained here, so host-thread collectives are safe again. ----
+            // S10 injection point: comm_stall delays this host *before* it
+            // enters the sync collective, so its ring peers are the ones
+            // that hit the receive deadline (naming the stalled point).
+            crate::faults::maybe_inject("trainer/grad_sync", rank, step);
             let grad_sync_span = self.tracer.span("train/grad_sync");
             let t_sc = Instant::now();
             let scalars = dg.all_reduce(dr, vec![acc_loss, acc_weight, acc_correct]);
@@ -1610,20 +1633,67 @@ impl Trainer {
         if rank == 0 {
             let pipeline = source.pipeline_states(mesh.data);
             mgr.commit_sharded(step, self.plan.entries.len(), mesh, pipeline.as_deref())?;
+            // S10 injection point: flip a byte in a committed chunk, so the
+            // CRC walk-back path in `restore_latest` is exercised against a
+            // real (renamed, metadata-complete) checkpoint dir.
+            if let Some(array) = crate::faults::checkpoint_corrupt_target(step) {
+                let ckpt = dir.join(format!("ckpt-{step:08}"));
+                if let Err(e) = crate::faults::corrupt_checkpoint_chunk(&ckpt, &array) {
+                    eprintln!("warning: corrupt_checkpoint injection failed: {e:#}");
+                }
+            }
         }
         self.colls.barrier(rank);
         Ok(())
     }
 
     /// Restore params + optimizer state + step + data-pipeline position
-    /// from the latest checkpoint — with resharding: every host range-reads
-    /// exactly its own blocks, whatever mesh the checkpoint was saved on.
+    /// from the latest *valid* checkpoint — with resharding: every host
+    /// range-reads exactly its own blocks, whatever mesh the checkpoint
+    /// was saved on.
+    ///
+    /// Resilience (S10): stale `ckpt-*.tmp` leftovers are swept first,
+    /// and a checkpoint that fails to restore (CRC-corrupt chunk,
+    /// truncated array, unreadable pipeline state) is *quarantined* —
+    /// renamed to `ckpt-<n>.corrupt`, loudly, with the cause — and the
+    /// walk-back retries the previous retained step. The error surfaces
+    /// only when no retained step restores. Each quarantine increments
+    /// the `train/quarantined_ckpts` counter.
     pub fn restore_latest(&mut self, dir: &PathBuf) -> anyhow::Result<u64> {
         let _sp = self.tracer.span("checkpoint/restore");
         let mgr = CheckpointManager::new(dir.clone());
-        let step = mgr
-            .latest()
-            .ok_or_else(|| anyhow::anyhow!("no checkpoint in {}", dir.display()))?;
+        mgr.sweep_tmp();
+        loop {
+            let step = mgr.latest().ok_or_else(|| {
+                anyhow::anyhow!("no valid checkpoint in {}", dir.display())
+            })?;
+            match self.restore_step(&mgr, step) {
+                Ok(()) => {
+                    self.start_step = step;
+                    return Ok(step);
+                }
+                Err(e) => {
+                    let dst = mgr.quarantine(step).map_err(|qe| {
+                        anyhow::anyhow!(
+                            "checkpoint step {step} is damaged ({e:#}) and could \
+                             not be quarantined: {qe}"
+                        )
+                    })?;
+                    self.counters.inc("train/quarantined_ckpts");
+                    eprintln!(
+                        "warning: checkpoint step {step} failed to restore ({e:#}); \
+                         quarantined to {} and falling back to the previous \
+                         retained step",
+                        dst.display()
+                    );
+                }
+            }
+        }
+    }
+
+    /// One restore attempt at a specific step (the body of
+    /// [`Self::restore_latest`]; does not touch `start_step`).
+    fn restore_step(&mut self, mgr: &CheckpointManager, step: u64) -> anyhow::Result<()> {
         let mesh = self.config.mesh;
         // Pre-refactor TwoD checkpoints stored optimizer moments as one
         // flat chunked vector ('optstate/flat/<slot>'), which does not map
@@ -1716,8 +1786,7 @@ impl Trainer {
             }
             None => None,
         };
-        self.start_step = step;
-        Ok(step)
+        Ok(())
     }
 }
 

@@ -1,0 +1,310 @@
+//! Integration: deterministic fault injection + self-healing recovery
+//! (ISSUE 10) — a mid-run host panic recovers bit-identically under the
+//! supervisor, corrupt checkpoints are quarantined and walked back, a
+//! wedged collective trips the deadline with a named stall point, and a
+//! panicked serving replica leaves N-1 survivors serving with a degraded
+//! /healthz.
+//!
+//! The fault-plan registry and the collective deadline are process-global,
+//! so every test that arms either serializes on [`FAULT_LOCK`] and resets
+//! through [`FaultGuard`].
+
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
+
+use t5x::faults::{self, Fault, FaultPlan};
+use t5x::infer::{DecodeMethod, InferEngine, InferRequest};
+use t5x::optim::Schedule;
+use t5x::partitioning::{Mesh, ParamStrategy};
+use t5x::runtime::{Artifacts, DeviceHandle};
+use t5x::serve::{Gateway, GatewayConfig, ServeOutcome, SubmitOpts};
+use t5x::trainer::supervisor::{Supervisor, SupervisorConfig};
+use t5x::trainer::{BatchSource, Trainer, TrainerConfig};
+
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serializes fault-armed tests and guarantees the process-global fault
+/// plan and collective deadline are reset even when an assertion panics.
+struct FaultGuard<'a> {
+    _lock: std::sync::MutexGuard<'a, ()>,
+}
+
+impl FaultGuard<'_> {
+    fn acquire() -> Self {
+        let lock = FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        faults::disarm();
+        t5x::collectives::set_comm_deadline_ms(0);
+        FaultGuard { _lock: lock }
+    }
+}
+
+impl Drop for FaultGuard<'_> {
+    fn drop(&mut self) {
+        faults::disarm();
+        t5x::collectives::set_comm_deadline_ms(0);
+    }
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("faults_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn assert_params_identical(a: &t5x::model::Params, b: &t5x::model::Params) {
+    assert_eq!(a.len(), b.len(), "param sets differ in size");
+    for (name, ta) in a {
+        let tb = b.get(name).unwrap_or_else(|| panic!("missing param {name}"));
+        assert_eq!(ta.shape, tb.shape, "{name}: shape mismatch");
+        assert_eq!(
+            ta.as_f32(),
+            tb.as_f32(),
+            "{name}: recovered parameters are not bit-identical"
+        );
+    }
+}
+
+/// The headline acceptance test: a host panic injected mid-run on a 2x2
+/// mesh is healed by the supervisor — restore from the last checkpoint,
+/// relaunch, and finish with final parameters bit-identical to a
+/// fault-free run of the same config.
+#[test]
+fn host_panic_recovery_is_bit_identical_on_2x2_mesh() {
+    let _guard = FaultGuard::acquire();
+    let arts = Artifacts::load_default().unwrap();
+    let dev = DeviceHandle::spawn().unwrap();
+    let ckpt = temp_dir("panic2x2");
+
+    let mut cfg = TrainerConfig::quick("t5-nano-dec", 6);
+    cfg.mesh = Mesh::new(2, 2);
+    cfg.strategy = ParamStrategy::TwoD;
+    cfg.seed = 3;
+    cfg.schedule = Schedule::Constant(1e-3);
+    cfg.checkpoint_every = Some(2);
+
+    // Fault-free reference (no checkpoint dir: nothing to restore from).
+    let t_ref = Trainer::new(&arts, &dev, cfg.clone()).unwrap();
+    let full = t_ref.train(&BatchSource::Synthetic { seed: 9 }).unwrap();
+    let full_params = t_ref.params();
+
+    // Supervised run with host 1 panicking at the top of step 4. The
+    // checkpoint hook saved step 4 at the end of step 3, so the restart
+    // restores step 4 and replays exactly steps 4..6.
+    let mut cfg_f = cfg;
+    cfg_f.checkpoint_dir = Some(ckpt.clone());
+    faults::arm(FaultPlan::new(vec![Fault::HostPanic { host: 1, step: 4 }]));
+    let sup = Supervisor::new(
+        &arts,
+        &dev,
+        cfg_f,
+        SupervisorConfig { max_restarts: 2, backoff_ms: 1, comm_deadline_ms: None, resume: false },
+    );
+    let run = sup
+        .run(|_| Ok(BatchSource::Synthetic { seed: 9 }), |t, _| t)
+        .unwrap();
+
+    assert_eq!(run.restarts, 1, "exactly one restart expected");
+    assert_eq!(run.quarantined_ckpts, 0);
+    assert_eq!(run.summary.final_step, full.final_step);
+    // The relaunched attempt covers steps 4..6; its losses must match the
+    // uninterrupted run's exactly.
+    for h in &run.summary.history {
+        let r = full
+            .history
+            .iter()
+            .find(|f| f.step == h.step)
+            .unwrap_or_else(|| panic!("reference missing step {}", h.step));
+        assert!(
+            (h.loss - r.loss).abs() < 1e-7,
+            "step {}: recovered {} vs fault-free {}",
+            h.step,
+            h.loss,
+            r.loss
+        );
+    }
+    assert_params_identical(&full_params, &run.trainer.params());
+    assert_eq!(run.trainer.counters.get("train/restarts"), 1);
+
+    std::fs::remove_dir_all(&ckpt).ok();
+    dev.shutdown();
+}
+
+/// A checkpoint corrupted on disk (single bit flipped in a tstore chunk,
+/// via the `corrupt_checkpoint` fault at save time) fails its CRC on
+/// restore, gets quarantined as `ckpt-<n>.corrupt`, and `restore_latest`
+/// falls back to the previous retained step instead of dying.
+#[test]
+fn corrupt_checkpoint_is_quarantined_and_walked_back() {
+    let _guard = FaultGuard::acquire();
+    let arts = Artifacts::load_default().unwrap();
+    let dev = DeviceHandle::spawn().unwrap();
+    let ckpt = temp_dir("corrupt");
+
+    let mut cfg = TrainerConfig::quick("t5-nano-dec", 4);
+    cfg.checkpoint_every = Some(2);
+    cfg.checkpoint_dir = Some(ckpt.clone());
+
+    // Corrupt the step-4 save as it is committed; step 2 stays valid.
+    faults::arm(FaultPlan::new(vec![Fault::CorruptCheckpoint {
+        step: 4,
+        array: String::new(),
+    }]));
+    let t = Trainer::new(&arts, &dev, cfg.clone()).unwrap();
+    t.train(&BatchSource::Synthetic { seed: 5 }).unwrap();
+    assert!(ckpt.join("ckpt-00000004").exists(), "latest checkpoint missing");
+
+    let mut t2 = Trainer::new(&arts, &dev, cfg).unwrap();
+    let restored = t2.restore_latest(&ckpt).unwrap();
+    assert_eq!(restored, 2, "must fall back past the corrupt step-4 save");
+    assert!(
+        ckpt.join("ckpt-00000004.corrupt").exists(),
+        "corrupt checkpoint must be quarantined, not deleted"
+    );
+    assert!(!ckpt.join("ckpt-00000004").exists());
+    assert_eq!(t2.counters.get("train/quarantined_ckpts"), 1);
+
+    std::fs::remove_dir_all(&ckpt).ok();
+    dev.shutdown();
+}
+
+/// A host wedged inside a ring collective (the `comm_stall` fault delays
+/// it past the armed deadline) must not hang the run: its peers trip the
+/// deadline, poison the abort flag, and the error names the stalled
+/// collective point so the operator knows *where* the mesh wedged.
+#[test]
+fn comm_stall_trips_deadline_and_names_the_stalled_point() {
+    let _guard = FaultGuard::acquire();
+    let arts = Artifacts::load_default().unwrap();
+    let dev = DeviceHandle::spawn().unwrap();
+
+    let mut cfg = TrainerConfig::quick("t5-nano-dec", 3);
+    cfg.mesh = Mesh::new(2, 1);
+    // Host 0 sleeps 2 s just before the step-1 gradient sync; the 150 ms
+    // deadline fires on host 1 long before the sleeper shows up.
+    faults::arm(FaultPlan::new(vec![Fault::CommStall { host: 0, step: 1, ms: 2_000 }]));
+    t5x::collectives::set_comm_deadline_ms(150);
+
+    let t = Trainer::new(&arts, &dev, cfg).unwrap();
+    let err = t
+        .train(&BatchSource::Synthetic { seed: 1 })
+        .expect_err("stalled collective must fail, not hang");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("collective deadline"), "no deadline report in: {msg}");
+    assert!(msg.contains("coll/"), "stalled point not named in: {msg}");
+    assert!(msg.contains("stalled"), "{msg}");
+
+    dev.shutdown();
+}
+
+/// Replica death under load: whichever of the two replicas pulls the
+/// poisoned request panics; that request fails with an explicit
+/// [`ServeOutcome::Failed`], /healthz drops to `degraded` with the dead
+/// replica named, and the survivor keeps completing new work.
+#[test]
+fn replica_death_leaves_survivors_serving_and_healthz_degraded() {
+    let _guard = FaultGuard::acquire();
+    let arts = Artifacts::load_default().unwrap();
+    let dev = DeviceHandle::spawn().unwrap();
+    let params = t5x::model::init_params(arts.model("t5-nano-dec").unwrap(), 3);
+    let engine0 = InferEngine::new(&arts, &dev, "t5-nano-dec", &params, -1).unwrap();
+    let engine1 = engine0.replica();
+
+    // Poison request 42 on *both* replicas: whichever pulls it dies.
+    faults::arm(FaultPlan::new(vec![
+        Fault::ReplicaPanic { replica: 0, request: 42 },
+        Fault::ReplicaPanic { replica: 1, request: 42 },
+    ]));
+    let gw = Gateway::launch(vec![engine0, engine1], GatewayConfig::default());
+    assert_eq!(gw.alive_replicas(), 2);
+
+    let (tx, rx) = mpsc::channel();
+    gw.submit(
+        InferRequest { id: 42, prompt: vec![5, 9], max_tokens: 4, method: DecodeMethod::Greedy },
+        SubmitOpts::default(),
+        tx.clone(),
+    )
+    .unwrap();
+    match rx.recv_timeout(Duration::from_secs(60)).unwrap() {
+        ServeOutcome::Failed { client_id: 42, error } => {
+            assert!(error.contains("replica"), "{error}");
+        }
+        other => panic!("poisoned request must fail explicitly, got {other:?}"),
+    }
+
+    // The dead replica is reflected in health the moment the flush runs.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while gw.alive_replicas() != 1 {
+        assert!(std::time::Instant::now() < deadline, "replica never marked dead");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let h = gw.healthz_json();
+    assert_eq!(h.get("status").unwrap().as_str(), Some("degraded"));
+    assert_eq!(h.get("replicas_alive").unwrap().as_f64(), Some(1.0));
+    let states: Vec<&str> = h
+        .get("per_replica")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.get("state").unwrap().as_str().unwrap())
+        .collect();
+    assert!(states.contains(&"down") && states.contains(&"up"), "{states:?}");
+    assert_eq!(gw.counters().get("serve/replica_failures"), 1);
+
+    // N-1 serving: the survivor still completes fresh work.
+    for id in 1..=3u64 {
+        gw.submit(
+            InferRequest { id, prompt: vec![5, 9], max_tokens: 3, method: DecodeMethod::Greedy },
+            SubmitOpts::default(),
+            tx.clone(),
+        )
+        .unwrap();
+        match rx.recv_timeout(Duration::from_secs(60)).unwrap() {
+            ServeOutcome::Done { client_id, result, .. } => {
+                assert_eq!(client_id, id);
+                assert_eq!(result.tokens.len(), 3);
+            }
+            other => panic!("survivor must serve request {id}, got {other:?}"),
+        }
+    }
+    let report = gw.shutdown();
+    assert_eq!(report.completed, 3);
+    dev.shutdown();
+}
+
+/// FaultPlan round-trip through the JSON the CLI consumes (`--fault-plan`).
+#[test]
+fn fault_plan_parses_cli_json() {
+    let plan = FaultPlan::parse(
+        r#"{"faults": [
+            {"kind": "host_panic", "host": 1, "step": 4},
+            {"kind": "slow_host", "host": 0, "step": 2, "ms": 50},
+            {"kind": "corrupt_checkpoint", "step": 4},
+            {"kind": "infeed_source_error", "host": 0, "batch": 3},
+            {"kind": "comm_stall", "host": 1, "step": 5, "ms": 100},
+            {"kind": "replica_panic", "replica": 0, "request": 42}
+        ]}"#,
+    )
+    .unwrap();
+    assert_eq!(plan.len(), 6);
+    assert_eq!(plan.fired(), 0);
+    assert!(FaultPlan::parse(r#"{"faults": [{"kind": "meteor_strike"}]}"#).is_err());
+}
+
+/// The overhead contract: with no plan armed, a hook is one relaxed
+/// atomic load. 10M disarmed calls must complete in well under a second —
+/// generous enough to never flake, tight enough to catch an accidental
+/// mutex or map lookup on the fast path.
+#[test]
+fn disarmed_hooks_cost_one_atomic_load() {
+    let _guard = FaultGuard::acquire();
+    let start = std::time::Instant::now();
+    for i in 0..10_000_000u64 {
+        faults::maybe_inject("trainer/step", 0, i);
+    }
+    let elapsed = start.elapsed();
+    assert!(
+        elapsed < Duration::from_millis(900),
+        "10M disarmed hook calls took {elapsed:?} — off path is not zero-cost"
+    );
+}

@@ -23,11 +23,16 @@ writes a compact ``BENCH_<pr>.json`` snapshot for the committed
   throughput: for every ``train overlap (serial vs overlapped)`` row on
   a data-parallel mesh (data degree >= 2), overlapped tok/s must hold
   the serial line within ``--overlap-tolerance``.
+* **PR 10** — the self-healing supervisor must be free when nothing
+  fails: for every ``train supervisor (fault-free)`` row, the
+  supervised run (restart loop + disarmed fault hooks + armed ring
+  deadline) must hold the plain trainer's tok/s line within
+  ``--supervisor-tolerance``.
 
 Beyond the single-run gates, the script cross-compares the *committed*
 ``benchmarks/BENCH_<n>.json`` trajectory PR-over-PR: the headline
-*ratios* (block/gather, traced/untraced, gateway 2/1, overlap/serial)
-of each snapshot are compared against the previous snapshot that
+*ratios* (block/gather, traced/untraced, gateway 2/1, overlap/serial,
+supervised/plain) of each snapshot are compared against the previous snapshot that
 carries the same headline, and a drop beyond ``--history-tolerance``
 fails loud. Ratios — not absolute tok/s — are compared because
 absolute numbers move with the CI machine; missing snapshots and
@@ -41,9 +46,10 @@ latency percentiles (``serve latency (obs)``).
 Usage (CI smoke job):
 
     python tools/bench_gate.py --input rust/bench_results.jsonl \
-        --output benchmarks/BENCH_9.json [--tolerance 0.10] \
+        --output benchmarks/BENCH_10.json [--tolerance 0.10] \
         [--trace-tolerance 0.10] [--gateway-tolerance 0.10] \
-        [--overlap-tolerance 0.10] [--history-tolerance 0.25]
+        [--overlap-tolerance 0.10] [--supervisor-tolerance 0.10] \
+        [--history-tolerance 0.25]
 
 Exit status is non-zero if a gate fails or if the input contains no pair
 to compare (so a silently-skipped comparison cannot read as a pass).
@@ -71,6 +77,7 @@ PHASE_GROUP = "train phase breakdown (obs)"
 SERVE_GROUP = "serve latency (obs)"
 GATEWAY_GROUP = "serve gateway (poisson)"
 OVERLAP_GROUP = "train overlap (serial vs overlapped)"
+SUPERVISOR_GROUP = "train supervisor (fault-free)"
 # "t5-nano-dec mesh=2x1 mb=4" — see the §Overlap block in bench_train_step.rs
 OVERLAP_NAME = re.compile(
     r"^(?P<model>\S+) mesh=(?P<data>\d+)x(?P<mdeg>\d+) mb=(?P<mb>\d+)$"
@@ -225,6 +232,34 @@ def gate_overlap(rows, tolerance):
     return pairs, failures
 
 
+def gate_supervisor(rows, tolerance):
+    """Return (pairs, failures) for the supervised-vs-plain comparison.
+
+    Each ``train supervisor (fault-free)`` row carries both sides of the
+    pair (bench_train_step.rs measures the plain trainer and a fault-free
+    supervised run of the same config back-to-back).
+    """
+    pairs, failures = [], []
+    for r in rows:
+        if r.get("group") != SUPERVISOR_GROUP:
+            continue
+        name = r.get("name", "")
+        p, s = r.get("plain_tok_s"), r.get("supervised_tok_s")
+        pair = {
+            "name": name,
+            "plain_tok_s": p,
+            "supervised_tok_s": s,
+            "supervised_over_plain": (s / p) if p and s is not None else None,
+        }
+        pairs.append(pair)
+        if p and s is not None and s < p * (1.0 - tolerance):
+            failures.append(
+                f"{name}: supervised {s:.1f} tok/s < plain {p:.1f} tok/s "
+                f"(ratio {s / p:.3f}, tolerance {tolerance:.2f})"
+            )
+    return pairs, failures
+
+
 def headline_ratios(snapshot):
     """Distil one snapshot dict into its {label: ratio} headline map.
 
@@ -249,6 +284,10 @@ def headline_ratios(snapshot):
         r = p.get("overlap_over_serial")
         if r is not None:
             out[f"overlap/serial {p.get('name')}"] = r
+    for p in (snapshot.get("supervisor_gate") or {}).get("pairs") or []:
+        r = p.get("supervised_over_plain")
+        if r is not None:
+            out[f"supervised/plain {p.get('name')}"] = r
     return out
 
 
@@ -325,6 +364,9 @@ def main():
     ap.add_argument("--overlap-tolerance", type=float, default=0.05,
                     help="allowed fractional overlapped-vs-serial train "
                          "throughput shortfall on data-parallel meshes")
+    ap.add_argument("--supervisor-tolerance", type=float, default=0.05,
+                    help="allowed fractional supervised-vs-plain train "
+                         "throughput shortfall on fault-free runs")
     ap.add_argument("--history-tolerance", type=float, default=0.25,
                     help="allowed PR-over-PR drop in committed headline "
                          "ratios (block/gather, traced/untraced, "
@@ -341,6 +383,8 @@ def main():
         rows, args.gateway_tolerance)
     overlap_pairs, overlap_failures = gate_overlap(
         rows, args.overlap_tolerance)
+    supervisor_pairs, supervisor_failures = gate_supervisor(
+        rows, args.supervisor_tolerance)
 
     snapshot = {
         "schema": "t5x-bench-trajectory-v1",
@@ -369,6 +413,12 @@ def main():
             "tolerance": args.overlap_tolerance,
             "pairs": overlap_pairs,
             "failures": overlap_failures,
+        },
+        "supervisor_gate": {
+            "rule": "fault-free supervised tok/s >= plain trainer tok/s",
+            "tolerance": args.supervisor_tolerance,
+            "pairs": supervisor_pairs,
+            "failures": supervisor_failures,
         },
         "phase_breakdown": [
             {k: v for k, v in r.items() if k != "group"}
@@ -408,6 +458,7 @@ def main():
           f"{len(trace_pairs)} traced-vs-untraced pair(s), "
           f"{len(gateway_rows)} gateway row(s), "
           f"{len(overlap_pairs)} overlap pair(s), "
+          f"{len(supervisor_pairs)} supervisor pair(s), "
           f"{len(comparisons)} history comparison(s)")
 
     status = 0
@@ -443,6 +494,14 @@ def main():
     for f_ in overlap_failures:
         print(f"overlap gate: FAIL — {f_}", file=sys.stderr)
         status = 1
+    if not supervisor_pairs:
+        print("supervisor gate: FAIL — no plain-vs-supervised row found in "
+              f"group '{SUPERVISOR_GROUP}' (bench_train_step did not run?)",
+              file=sys.stderr)
+        status = 1
+    for f_ in supervisor_failures:
+        print(f"supervisor gate: FAIL — {f_}", file=sys.stderr)
+        status = 1
     for f_ in history_failures:
         print(f"history gate: FAIL — {f_}", file=sys.stderr)
         status = 1
@@ -460,6 +519,10 @@ def main():
     for p in overlap_pairs:
         ratio = p["overlap_over_serial"]
         print(f"overlap gate: ok — {p['name']} overlap/serial = "
+              + (f"{ratio:.3f}" if ratio is not None else "n/a"))
+    for p in supervisor_pairs:
+        ratio = p["supervised_over_plain"]
+        print(f"supervisor gate: ok — {p['name']} supervised/plain = "
               + (f"{ratio:.3f}" if ratio is not None else "n/a"))
     for c in comparisons:
         print(f"history gate: ok — {c['from']} -> {c['to']}: "

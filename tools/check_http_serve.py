@@ -14,6 +14,12 @@ Drives a live server through its whole surface:
 * with ``--expect-429``, sends the burst without staggering against a
   tiny admission queue and requires at least one 429 carrying a
   ``Retry-After`` header (backpressure must be explicit, never a hang);
+* with ``--chaos-request ID``, first sends a request whose id matches a
+  server-side armed ``replica_panic`` fault and requires an *explicit*
+  500 + JSON error (never a hang or dropped connection), then with
+  ``--expect-degraded`` polls ``/healthz`` until it reports
+  ``degraded`` with a per-replica ``down`` entry — the surviving
+  replicas must still answer the ``--requests`` phase afterwards;
 * with ``--drain``, finishes by POSTing ``/admin/drain`` and expects
   the server to answer 200 ``{"status": "draining"}``.
 
@@ -22,6 +28,8 @@ Usage (CI):
     python tools/check_http_serve.py --port 8077 --requests 8 --drain
     python tools/check_http_serve.py --port 8078 --burst 16 --gen 24 \
         --expect-429 --drain
+    python tools/check_http_serve.py --port 8079 --requests 4 \
+        --chaos-request 999 --expect-degraded --drain
 
 Exit status is non-zero on any violation, one line per problem on
 stderr.
@@ -185,6 +193,58 @@ def run_burst(host, port, n, gen, errors):
     return seen
 
 
+def run_chaos(host, port, chaos_id, gen, errors):
+    """One request armed (server-side, via --fault-plan) to kill the
+    replica that dispatches it. The dying replica flushes its in-flight
+    table before unwinding, so the reply must be an explicit 500 with a
+    JSON error body — never a hang or a dropped connection."""
+    try:
+        body = {"id": chaos_id, "prompt": [5, 9, 11], "max_tokens": gen}
+        status, _, doc = request(host, port, "POST", "/v1/generate", body)
+        if status != 500:
+            errors.append(
+                f"chaos request {chaos_id}: expected 500, got {status} ({doc})")
+        elif not isinstance(doc, dict) or "error" not in doc:
+            errors.append(
+                f"chaos request {chaos_id}: 500 without JSON error body ({doc})")
+        else:
+            print(f"chaos request {chaos_id}: failed explicitly "
+                  f"({doc['error']!r})")
+    except OSError as e:
+        errors.append(f"chaos request {chaos_id}: transport error {e}")
+
+
+def wait_degraded(host, port, timeout_s, errors):
+    """Poll /healthz until it reports the replica death: status
+    'degraded', replicas_alive < replicas, and per_replica carrying both
+    a 'down' and an 'up' entry."""
+    deadline = time.monotonic() + timeout_s
+    last = None
+    while time.monotonic() < deadline:
+        try:
+            status, _, doc = request(host, port, "GET", "/healthz",
+                                     timeout=2.0)
+            if status == 200 and isinstance(doc, dict) \
+                    and doc.get("status") == "degraded":
+                alive = doc.get("replicas_alive")
+                total = doc.get("replicas")
+                states = [r.get("state")
+                          for r in doc.get("per_replica", [])]
+                if not (isinstance(alive, (int, float))
+                        and isinstance(total, (int, float))
+                        and alive < total):
+                    errors.append(f"degraded healthz with bad counts: {doc}")
+                if "down" not in states or "up" not in states:
+                    errors.append(f"degraded healthz per_replica: {states}")
+                print(f"healthz degraded: {alive}/{total} replicas alive")
+                return
+            last = doc if status == 200 else f"status {status}"
+        except OSError as e:
+            last = str(e)
+        time.sleep(0.2)
+    errors.append(f"healthz never reported 'degraded' (last: {last})")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--host", default="127.0.0.1")
@@ -196,6 +256,13 @@ def main():
     ap.add_argument("--gen", type=int, default=8, help="max_tokens per request")
     ap.add_argument("--expect-429", action="store_true",
                     help="require at least one 429 (+Retry-After) in the burst")
+    ap.add_argument("--chaos-request", type=int, default=0,
+                    help="send this request id first and require an "
+                         "explicit 500 (pairs with a server-side "
+                         "replica_panic fault plan)")
+    ap.add_argument("--expect-degraded", action="store_true",
+                    help="after the chaos request, poll /healthz until "
+                         "it reports 'degraded'")
     ap.add_argument("--drain", action="store_true",
                     help="POST /admin/drain at the end")
     ap.add_argument("--startup-timeout", type=float, default=60.0)
@@ -208,6 +275,11 @@ def main():
         print(f"check_http_serve: FAIL — {e}", file=sys.stderr)
         return 1
     print(f"healthy: {health}")
+
+    if args.chaos_request:
+        run_chaos(args.host, args.port, args.chaos_request, args.gen, errors)
+        if args.expect_degraded:
+            wait_degraded(args.host, args.port, 15.0, errors)
 
     if args.requests > 0:
         run_concurrent(args.host, args.port, args.requests, args.gen, errors)
